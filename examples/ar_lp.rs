@@ -1,0 +1,52 @@
+//! Link prediction on the Amazon-Review-like graph: compares negative
+//! samplers and losses on one run and prints the traffic counters —
+//! a minimal interactive version of the Table 6 bench.
+//!
+//! Run: `cargo run --release --example ar_lp`
+
+use graphstorm::datagen::{self, amazon};
+use graphstorm::partition::random_partition;
+use graphstorm::runtime::Runtime;
+use graphstorm::sampling::NegSampler;
+use graphstorm::trainer::lp::{LpLoss, LpTrainer};
+use graphstorm::trainer::TrainOptions;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::from_default_dir()?;
+    let world = amazon::generate_world(&amazon::ArConfig { n_items: 2000, ..Default::default() });
+
+    println!("LP on (item, also_buy, item); batch 32, contrastive vs CE, 3 epochs\n");
+    println!("{:<14} {:<12} {:>8} {:>8} {:>12}", "loss", "sampler", "MRR", "s/epoch", "remote MB");
+    for (loss, sampler) in [
+        (LpLoss::Contrastive, NegSampler::InBatch { k: 32 }),
+        (LpLoss::Contrastive, NegSampler::Joint { k: 32 }),
+        (LpLoss::Contrastive, NegSampler::Uniform { k: 32 }),
+        (LpLoss::CrossEntropy, NegSampler::Joint { k: 4 }),
+        (LpLoss::CrossEntropy, NegSampler::Joint { k: 32 }),
+    ] {
+        let raw = amazon::build_variant(&world, amazon::ArVariant::HeteroV2);
+        let book = random_partition(&raw.graph, 2, 7);
+        let mut ds = datagen::build_dataset(raw, book, 64, 7);
+        ds.ensure_text_features(64);
+        let artifact = match sampler {
+            NegSampler::Uniform { k } => format!("rgcn_lp_uniform_k{k}_train"),
+            s => format!("rgcn_lp_joint_k{}_train", s.k()),
+        };
+        let mut tr = LpTrainer::new(&artifact, "rgcn_lp_emb", loss, sampler);
+        tr.max_train_edges = Some(1600);
+        ds.engine.counters.reset();
+        let opts = TrainOptions { epochs: 3, n_workers: 2, verbose: false, ..Default::default() };
+        let (rep, _) = tr.fit(&rt, &mut ds, &opts)?;
+        let traffic = ds.engine.counters.snapshot();
+        println!(
+            "{:<14} {:<12} {:>8.4} {:>8.2} {:>12.1}",
+            loss.label(),
+            sampler.label(),
+            rep.val_mrr,
+            rep.epoch_times.iter().sum::<f64>() / rep.epoch_times.len() as f64,
+            traffic.remote_bytes as f64 / 1e6
+        );
+    }
+    println!("\nar_lp OK");
+    Ok(())
+}

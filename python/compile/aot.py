@@ -1,0 +1,390 @@
+"""AOT pipeline: lower every model variant to HLO text + manifest.
+
+HLO *text* (not ``.serialize()``) is the interchange format — the
+``xla`` crate's xla_extension 0.5.1 rejects jax≥0.5 protos with 64-bit
+instruction ids, while the text parser reassigns ids cleanly (see
+/opt/xla-example/README.md).
+
+Run once via ``make artifacts``:
+
+    python -m compile.aot --out-dir ../artifacts [--only PREFIX] [--list]
+
+Outputs, per variant: ``<name>.hlo.txt`` (the step function),
+``<name>.init.gstf`` (initial parameters), and a shared
+``manifest.json`` describing the flat input/output layout that drives
+the Rust runtime.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import gstf, model as M
+from .models import lm as lm_mod
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# --------------------------------------------------------------- block sizes
+# Canonical shapes (DESIGN.md §4).  NC: 2 hops, 64 targets, fanout 5.
+# LP: 1 hop, 32 positives; seed slots = 2B + K (joint/in-batch) or
+# 2B + B*K (uniform) — the uniform blow-up *is* the paper's Table 6
+# data-movement argument.
+
+NC_BATCH, NC_FANOUT, NC_LAYERS = 64, 5, 2
+LP_BATCH, LP_FANOUT, LP_LAYERS = 16, 4, 2
+
+NC_BLOCK = M.block_for(NC_BATCH, NC_FANOUT, NC_LAYERS)
+
+
+def lp_block(k, uniform):
+    seeds = 2 * LP_BATCH + (LP_BATCH * k if uniform else k)
+    return M.block_for(seeds, LP_FANOUT, LP_LAYERS)
+
+
+def gnn_cfg(arch, impl="pallas", **kw):
+    return M.GnnConfig(arch=arch, impl=impl, block=NC_BLOCK, **kw)
+
+
+def lp_cfg(arch, k, uniform=False, impl="xla"):
+    # LP sweep variants use impl='xla' (native scatter) so the Table 6
+    # epoch-time comparison isn't dominated by the interpreter; the
+    # canonical Pallas path is exercised by the NC artifacts + pytest.
+    return M.GnnConfig(
+        arch=arch,
+        impl=impl,
+        num_layers=LP_LAYERS,
+        block=lp_block(k, uniform),
+        num_neg=k,
+        lp_batch=LP_BATCH,
+    )
+
+
+LM_CFG = M.LmConfig()
+STUDENT_CFG = M.LmConfig(num_lm_layers=1)  # the "DistilBERT" student
+PROBE_B, PROBE_H = 256, 64
+
+
+# ----------------------------------------------------------------- variants
+
+
+def build_variants():
+    """Returns {name: callable() -> (flat_fn, init_flat, meta, config)}."""
+    v = {}
+
+    def gnn_nc_train(arch, impl):
+        cfg = gnn_cfg(arch, impl)
+        params = M.build_gnn_params(cfg, "nc")
+        spec = M.nc_batch_spec(cfg)
+        fn, state0, meta = M.make_train_step(
+            params, M.gnn_nc_loss(cfg), spec, grad_lemb=cfg.use_lemb
+        )
+        return fn, state0, meta, {"task": "nc", "arch": arch, "impl": impl,
+                                  "block": {"ns": cfg.block.ns, "es": cfg.block.es},
+                                  "batch": NC_BATCH, "fanout": NC_FANOUT}
+
+    def gnn_nc_infer(arch, impl, emb=False):
+        cfg = gnn_cfg(arch, impl)
+        # Embedding extractors must not carry the (unused) decoder head:
+        # XLA prunes unused parameters at lowering, which would desync
+        # the artifact from the manifest (params matched by name, so the
+        # smaller set restores fine from NC-trained checkpoints).
+        params = M.build_gnn_params(cfg, "emb" if emb else "nc")
+        spec = M.gnn_block_spec(cfg)
+        nt = cfg.block.ns[-1]
+        if emb:
+            out = [("emb", (nt, cfg.hidden), M.F32)]
+            fn, p0, meta = M.make_infer_step(params, M.gnn_emb_infer(cfg), spec, out)
+        else:
+            out = [("logits", (nt, cfg.num_classes), M.F32)]
+            fn, p0, meta = M.make_infer_step(
+                params, M.gnn_nc_logits_infer(cfg), spec, out
+            )
+        return fn, p0, meta, {"task": "nc_infer", "arch": arch, "impl": impl,
+                              "block": {"ns": cfg.block.ns, "es": cfg.block.es},
+                              "batch": NC_BATCH, "fanout": NC_FANOUT}
+
+    def gnn_lp_train(arch, k, uniform):
+        cfg = lp_cfg(arch, k, uniform)
+        params = M.build_gnn_params(cfg, "lp")
+        spec = M.lp_batch_spec(cfg)
+        fn, state0, meta = M.make_train_step(
+            params, M.gnn_lp_loss(cfg), spec, grad_lemb=True,
+            extra_scalars=("loss_sel",),
+        )
+        return fn, state0, meta, {
+            "task": "lp", "arch": arch, "impl": cfg.impl, "k": k,
+            "uniform": uniform, "lp_batch": LP_BATCH, "fanout": LP_FANOUT,
+            "block": {"ns": cfg.block.ns, "es": cfg.block.es},
+        }
+
+    def gnn_lp_emb(arch, k):
+        cfg = lp_cfg(arch, k)
+        params = M.build_gnn_params(cfg, "lp")
+        spec = M.gnn_block_spec(cfg)
+        nt = cfg.block.ns[-1]
+        out = [("emb", (nt, cfg.hidden), M.F32),
+               ("rel", (cfg.num_etypes, cfg.hidden), M.F32)]
+        fn, p0, meta = M.make_infer_step(
+            params, M.gnn_emb_infer(cfg, with_rel=True), spec, out
+        )
+        return fn, p0, meta, {"task": "lp_infer", "arch": arch, "impl": cfg.impl,
+                              "k": k, "lp_batch": LP_BATCH, "fanout": LP_FANOUT,
+                              "block": {"ns": cfg.block.ns, "es": cfg.block.es}}
+
+    # GNN zoo: train + logits for every architecture (Pallas path), plus
+    # 'fast' XLA-scatter twins of the two canonical models for the big
+    # parameter sweeps (Table 3 trains thousands of steps).
+    for arch in ("gcn", "sage", "gat", "rgcn", "rgat", "hgt"):
+        v[f"{arch}_nc_train"] = lambda a=arch: gnn_nc_train(a, "pallas")
+        v[f"{arch}_nc_logits"] = lambda a=arch: gnn_nc_infer(a, "pallas")
+    for arch in ("gcn", "rgcn"):
+        v[f"{arch}_nc_train_fast"] = lambda a=arch: gnn_nc_train(a, "xla")
+        v[f"{arch}_nc_logits_fast"] = lambda a=arch: gnn_nc_infer(a, "xla")
+    v["rgcn_nc_emb"] = lambda: gnn_nc_infer("rgcn", "pallas", emb=True)
+    v["rgcn_nc_emb_fast"] = lambda: gnn_nc_infer("rgcn", "xla", emb=True)
+
+    for k in (4, 32, 256):
+        v[f"rgcn_lp_joint_k{k}_train"] = lambda kk=k: gnn_lp_train("rgcn", kk, False)
+    v["rgcn_lp_uniform_k32_train"] = lambda: gnn_lp_train("rgcn", 32, True)
+    v["rgcn_lp_emb"] = lambda: gnn_lp_emb("rgcn", 32)
+
+    # ------------------------------------------------------------- LM tasks
+    def lm_mlm_train():
+        cfg = LM_CFG
+        params = M.build_lm_params(cfg, heads=("mlm",))
+        spec = [
+            ("tokens", (cfg.batch, cfg.seq_len), M.I32),
+            ("positions", (cfg.batch,), M.I32),
+            ("labels", (cfg.batch,), M.I32),
+            ("lmask", (cfg.batch,), M.F32),
+        ]
+        fn, s0, meta = M.make_train_step(params, M.lm_mlm_loss(cfg), spec)
+        return fn, s0, meta, {"task": "lm_mlm", "batch": cfg.batch,
+                              "seq_len": cfg.seq_len, "vocab": cfg.vocab}
+
+    def lm_nc_train():
+        cfg = LM_CFG
+        params = M.build_lm_params(cfg, heads=("nc",))
+        spec = [
+            ("tokens", (cfg.batch, cfg.seq_len), M.I32),
+            ("labels", (cfg.batch,), M.I32),
+            ("lmask", (cfg.batch,), M.F32),
+        ]
+        fn, s0, meta = M.make_train_step(params, M.lm_nc_loss(cfg), spec)
+        return fn, s0, meta, {"task": "lm_nc", "batch": cfg.batch,
+                              "seq_len": cfg.seq_len}
+
+    def lm_lp_train():
+        cfg = M.LmConfig(batch=32)
+        params = M.build_lm_params(cfg, heads=())
+        spec = [
+            ("src_tokens", (cfg.batch, cfg.seq_len), M.I32),
+            ("dst_tokens", (cfg.batch, cfg.seq_len), M.I32),
+            ("neg_tokens", (cfg.num_neg, cfg.seq_len), M.I32),
+            ("pmask", (cfg.batch,), M.F32),
+        ]
+        fn, s0, meta = M.make_train_step(params, M.lm_lp_loss(cfg), spec)
+        return fn, s0, meta, {"task": "lm_lp", "batch": cfg.batch,
+                              "k": cfg.num_neg, "seq_len": cfg.seq_len}
+
+    def lm_embed(cfg, heads, name):
+        params = M.build_lm_params(cfg, heads=heads)
+        spec = [("tokens", (cfg.batch, cfg.seq_len), M.I32)]
+
+        def infer(p, b):
+            emb = lm_mod.lm_embed(p, b["tokens"], cfg)
+            if "distill" in heads:
+                emb = emb @ p["lm.proj.w"] + p["lm.proj.b"]
+            return emb
+
+        out = [("emb", (cfg.batch, cfg.hidden if "distill" in heads
+                        else cfg.lm_hidden), M.F32)]
+        fn, p0, meta = M.make_infer_step(params, infer, spec, out)
+        return fn, p0, meta, {"task": name, "batch": cfg.batch,
+                              "seq_len": cfg.seq_len}
+
+    def lm_nc_logits():
+        cfg = LM_CFG
+        params = M.build_lm_params(cfg, heads=("nc",))
+        spec = [("tokens", (cfg.batch, cfg.seq_len), M.I32)]
+
+        def infer(p, b):
+            emb = lm_mod.lm_embed(p, b["tokens"], cfg)
+            return emb @ p["lm.cls.w"] + p["lm.cls.b"]
+
+        out = [("logits", (cfg.batch, cfg.num_classes), M.F32)]
+        fn, p0, meta = M.make_infer_step(params, infer, spec, out)
+        return fn, p0, meta, {"task": "lm_nc_logits", "batch": cfg.batch,
+                              "seq_len": cfg.seq_len}
+
+    def distill_train():
+        cfg = STUDENT_CFG
+        params = M.build_lm_params(cfg, heads=("distill",))
+        spec = [
+            ("tokens", (cfg.batch, cfg.seq_len), M.I32),
+            ("teacher", (cfg.batch, cfg.hidden), M.F32),
+            ("lmask", (cfg.batch,), M.F32),
+        ]
+        fn, s0, meta = M.make_train_step(params, M.lm_distill_loss(cfg), spec)
+        return fn, s0, meta, {"task": "distill", "batch": cfg.batch,
+                              "seq_len": cfg.seq_len}
+
+    def student_nc_train():
+        cfg = STUDENT_CFG
+        params = M.build_lm_params(cfg, heads=("nc",))
+        spec = [
+            ("tokens", (cfg.batch, cfg.seq_len), M.I32),
+            ("labels", (cfg.batch,), M.I32),
+            ("lmask", (cfg.batch,), M.F32),
+        ]
+        fn, s0, meta = M.make_train_step(params, M.lm_nc_loss(cfg), spec)
+        return fn, s0, meta, {"task": "student_nc", "batch": cfg.batch,
+                              "seq_len": cfg.seq_len}
+
+    v["lm_mlm_train"] = lm_mlm_train
+    v["lm_nc_train"] = lm_nc_train
+    v["lm_lp_train"] = lm_lp_train
+    v["lm_embed"] = lambda: lm_embed(LM_CFG, (), "lm_embed")
+    v["lm_nc_logits"] = lm_nc_logits
+    v["student_nc_train"] = student_nc_train
+    v["student_embed"] = lambda: lm_embed(STUDENT_CFG, (), "student_embed")
+    v["distill_train"] = distill_train
+    v["distill_embed"] = lambda: lm_embed(STUDENT_CFG, ("distill",), "distill_embed")
+
+    # ------------------------------------------------------------ MLP probe
+    def mlp_train():
+        params = M.build_probe_params(PROBE_H, PROBE_H, 16)
+        spec = [
+            ("emb", (PROBE_B, PROBE_H), M.F32),
+            ("labels", (PROBE_B,), M.I32),
+            ("lmask", (PROBE_B,), M.F32),
+        ]
+        fn, s0, meta = M.make_train_step(params, M.probe_loss(), spec)
+        return fn, s0, meta, {"task": "mlp_probe", "batch": PROBE_B}
+
+    def mlp_logits():
+        params = M.build_probe_params(PROBE_H, PROBE_H, 16)
+        spec = [("emb", (PROBE_B, PROBE_H), M.F32)]
+
+        def infer(p, b):
+            from .models import decoders
+
+            return decoders.mlp_logits(p, b["emb"])
+
+        out = [("logits", (PROBE_B, 16), M.F32)]
+        fn, p0, meta = M.make_infer_step(params, infer, spec, out)
+        return fn, p0, meta, {"task": "mlp_logits", "batch": PROBE_B}
+
+    v["mlp_train"] = mlp_train
+    v["mlp_logits"] = mlp_logits
+
+    # Runtime smoke test: fn(x, y) = (x@y + 2,)
+    def smoke():
+        def fn(x, y):
+            return (x @ y + 2.0,)
+
+        meta = {
+            "n_params": 0,
+            "param_names": [],
+            "state": [],
+            "scalars": [],
+            "batch": [("x", (2, 2), M.F32), ("y", (2, 2), M.F32)],
+            "outputs": [("z", (2, 2), M.F32)],
+        }
+        return fn, [], meta, {"task": "smoke"}
+
+    v["smoke"] = smoke
+    return v
+
+
+def emit(name, builder, out_dir):
+    fn, init_flat, meta, config = builder()
+    in_specs = M.spec_to_args(meta["state"] + meta["scalars"] + meta["batch"])
+    lowered = jax.jit(fn).lower(*in_specs)
+    hlo = to_hlo_text(lowered)
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(hlo)
+
+    kind = "train" if any(n == "lr" for n, _, _ in meta["scalars"]) else "infer"
+    init_file = None
+    if meta["n_params"]:
+        # Params only — Rust builds the zero Adam moments from the spec.
+        names = meta["param_names"]
+        init_file = f"{name}.init.gstf"
+        gstf.write(
+            os.path.join(out_dir, init_file),
+            [(f"p:{n}", np.asarray(init_flat[i])) for i, n in enumerate(names)],
+        )
+
+    def specs(lst):
+        return [{"name": n, "shape": list(s), "dtype": d} for n, s, d in lst]
+
+    entry = {
+        "file": f"{name}.hlo.txt",
+        "init_file": init_file,
+        "kind": kind,
+        "n_params": meta["n_params"],
+        "state": specs(meta["state"]),
+        "scalars": specs(meta["scalars"]),
+        "batch": specs(meta["batch"]),
+        "outputs": specs(meta["outputs"]),
+        "config": config,
+    }
+    return entry, len(hlo)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="prefix filter")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    variants = build_variants()
+    if args.list:
+        for n in variants:
+            print(n)
+        return
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    manifest = {"artifacts": {}}
+    if args.only and os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+
+    for name, builder in variants.items():
+        if args.only and not name.startswith(args.only):
+            continue
+        import time
+
+        t0 = time.time()
+        entry, hlo_len = emit(name, builder, args.out_dir)
+        manifest["artifacts"][name] = entry
+        print(
+            f"[aot] {name}: {hlo_len/1e6:.2f} MB HLO, "
+            f"{entry['n_params']} params, {time.time()-t0:.1f}s",
+            file=sys.stderr,
+        )
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {manifest_path}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""GSTF — the tiny tensor-file format shared between Python and Rust.
+
+Used for initial parameter values (written at AOT time) and model
+checkpoints (written by the Rust trainer).  Layout, little-endian:
+
+    magic   b"GSTF"
+    version u32 (=1)
+    count   u32
+    per tensor:
+        name_len u32, name utf-8,
+        dtype    u8  (0=f32, 1=i32),
+        ndim     u32, dims u64[ndim],
+        data     raw LE bytes (prod(dims) * itemsize)
+
+Mirrored by ``rust/src/runtime/gstf.rs``.
+"""
+
+import struct
+
+import numpy as np
+
+MAGIC = b"GSTF"
+DTYPES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+DTYPES_REV = {0: np.float32, 1: np.int32}
+
+
+def write(path, tensors):
+    """tensors: list of (name, np.ndarray)."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", 1, len(tensors)))
+        for name, arr in tensors:
+            arr = np.ascontiguousarray(arr)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", DTYPES[arr.dtype]))
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(arr.tobytes())
+
+
+def read(path):
+    """Returns list of (name, np.ndarray)."""
+    out = []
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, "bad GSTF magic"
+        version, count = struct.unpack("<II", f.read(8))
+        assert version == 1
+        for _ in range(count):
+            (name_len,) = struct.unpack("<I", f.read(4))
+            name = f.read(name_len).decode("utf-8")
+            (dt,) = struct.unpack("<B", f.read(1))
+            (ndim,) = struct.unpack("<I", f.read(4))
+            dims = [struct.unpack("<Q", f.read(8))[0] for _ in range(ndim)]
+            dtype = np.dtype(DTYPES_REV[dt])
+            n = int(np.prod(dims)) if dims else 1
+            data = np.frombuffer(f.read(n * dtype.itemsize), dtype=dtype)
+            out.append((name, data.reshape(dims)))
+    return out

@@ -1,0 +1,30 @@
+"""L1 Pallas kernels: the GNN message-passing hot spot.
+
+Two kernels cover every model in the zoo:
+
+* :func:`segment_sum.segment_sum` — masked scatter-add of per-edge
+  messages into per-destination accumulators (GCN / GraphSage / RGCN
+  sum & mean aggregation).
+* :func:`softmax_agg.segment_softmax_agg` — masked per-destination
+  softmax over edge logits followed by the weighted aggregate
+  (GAT / RGAT / HGT attention).
+
+Both are authored as Pallas kernels (``interpret=True`` — the CPU PJRT
+plugin cannot execute Mosaic custom-calls) and validated against the
+pure-jnp oracles in :mod:`ref`.  ``impl='xla'`` selects the oracle path
+instead so large parameter sweeps can use XLA's native scatter on CPU;
+the canonical artifacts use the Pallas path.
+"""
+
+from .segment_sum import segment_sum, segment_mean
+from .softmax_agg import segment_softmax_agg, segment_softmax_agg_diff, segment_max
+from . import ref
+
+__all__ = [
+    "segment_sum",
+    "segment_mean",
+    "segment_softmax_agg",
+    "segment_softmax_agg_diff",
+    "segment_max",
+    "ref",
+]

@@ -1,0 +1,203 @@
+"""Masked per-destination softmax-aggregate as Pallas kernels.
+
+Attention models (GAT / RGAT / HGT-lite) need, per destination node,
+a numerically-stable softmax over the logits of its incoming edges
+followed by the attention-weighted aggregate of the edge values.
+
+On GPU this is done with segment-sorted scans or atomics; on TPU we use
+the same one-hot-matmul trick as :mod:`segment_sum`, in two grid passes:
+
+  pass 1  — per-segment max of the edge logits (running ``max`` into an
+            ``[N]`` VMEM accumulator);
+  pass 2  — ``w_e = exp(logit_e - m[dst_e]) * mask_e`` (the gather
+            ``m[dst]`` is itself the one-hot matmul ``onehot @ m``),
+            then one fused contraction accumulates both the weighted
+            value sum ``[N, D]`` and the denominator ``[N]`` by
+            augmenting the value tile with a ones column.
+
+The final divide happens outside the kernels (it is a trivially fused
+elementwise op).  Oracle: :func:`ref.segment_softmax_agg_ref`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .ref import NEG_INF
+from .segment_sum import DEFAULT_BLOCK_E, _pad_edges
+
+
+def _segment_max_kernel(dst_ref, mask_ref, logit_ref, out_ref):
+    """Running per-segment max over E-tiles; out_ref is f32[N]."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, NEG_INF)
+
+    n = out_ref.shape[0]
+    dst = dst_ref[...]
+    mask = mask_ref[...]
+    logit = logit_ref[...]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (dst.shape[0], n), 1)
+    hit = (cols == dst[:, None]) & (mask[:, None] > 0)
+    contrib = jnp.where(hit, logit[:, None], NEG_INF).max(axis=0)
+    out_ref[...] = jnp.maximum(out_ref[...], contrib)
+
+
+def _weighted_agg_kernel(dst_ref, mask_ref, logit_ref, val_ref, m_ref, out_ref):
+    """Accumulate exp-weighted values + denominator into f32[N, D+1]."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    n = out_ref.shape[0]
+    dst = dst_ref[...]
+    mask = mask_ref[...]
+    logit = logit_ref[...]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (dst.shape[0], n), 1)
+    onehot = jnp.where(cols == dst[:, None], mask[:, None], 0.0)
+    # Gather of the per-segment max, expressed as a matmul.
+    m_dst = jnp.dot(onehot, m_ref[...], preferred_element_type=jnp.float32)
+    w = jnp.exp(logit - m_dst) * mask
+    # Augment values with a ones column: one contraction produces both
+    # the weighted sum (cols 0..D) and the softmax denominator (col D).
+    vals = val_ref[...]
+    aug = jnp.concatenate([vals, jnp.ones((vals.shape[0], 1), vals.dtype)], axis=1)
+    out_ref[...] += jnp.dot(
+        onehot.T, aug * w[:, None], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_segments", "impl", "block_e")
+)
+def segment_max(logits, dst, mask, num_segments, *, impl="pallas", block_e=DEFAULT_BLOCK_E):
+    """Masked per-segment max of edge logits; empty segments get 0.
+
+    Used under ``stop_gradient`` for numerically-stable softmax (the
+    standard max-shift trick), so no VJP is needed.
+    """
+    if impl == "xla":
+        return ref.segment_max_ref(logits, dst, mask, num_segments)
+    e = logits.shape[0]
+    pe = (e + block_e - 1) // block_e * block_e
+    if pe != e:
+        logits = jnp.pad(logits, (0, pe - e))
+        dst = jnp.pad(dst, (0, pe - e))
+        mask = jnp.pad(mask, (0, pe - e))
+    grid = (pe // block_e,)
+    m = pl.pallas_call(
+        _segment_max_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_e,), lambda i: (i,)),
+            pl.BlockSpec((block_e,), lambda i: (i,)),
+            pl.BlockSpec((block_e,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((num_segments,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((num_segments,), jnp.float32),
+        interpret=True,
+    )(dst.astype(jnp.int32), mask.astype(jnp.float32), logits.astype(jnp.float32))
+    return jnp.where(m <= NEG_INF / 2, 0.0, m)
+
+
+def segment_softmax_agg_diff(
+    logits, msg, dst, mask, num_segments, *, impl="pallas", block_e=DEFAULT_BLOCK_E
+):
+    """Differentiable softmax-aggregate used on the training path.
+
+    Composed from the differentiable :func:`segment_sum` kernel plus the
+    (stop-gradient) Pallas :func:`segment_max`, so autodiff flows through
+    standard jnp ops while the scatter contractions still run on the
+    one-hot-matmul kernel.  The fused two-pass kernel below
+    (:func:`segment_softmax_agg`) is the inference-path variant.
+    """
+    from .segment_sum import segment_sum
+
+    # stop_gradient on the *input*: the max-shift is gradient-free by the
+    # standard softmax identity, and zero tangents keep JAX from trying
+    # to JVP-trace the (rule-less) Pallas call.
+    m = segment_max(
+        jax.lax.stop_gradient(logits), dst, mask, num_segments,
+        impl=impl, block_e=block_e,
+    )
+    w = jnp.exp(logits - m[dst]) * mask
+    ones = jnp.ones_like(mask)
+    aug = jnp.concatenate([msg * w[:, None], w[:, None]], axis=1)
+    s = segment_sum(aug, dst, ones, num_segments, impl=impl, block_e=block_e)
+    total, denom = s[:, :-1], s[:, -1]
+    denom = jnp.where(denom == 0.0, 1.0, denom)
+    return total / denom[:, None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_segments", "impl", "block_e")
+)
+def segment_softmax_agg(
+    logits, msg, dst, mask, num_segments, *, impl="pallas", block_e=DEFAULT_BLOCK_E
+):
+    """Per-destination masked softmax over edge logits, then aggregate.
+
+    Args:
+      logits: f32[E] attention logits.
+      msg:    f32[E, D] edge values.
+      dst:    i32[E] destination slots.
+      mask:   f32[E] edge validity.
+      num_segments: static N.
+      impl: 'pallas' or 'xla' (oracle path).
+
+    Returns:
+      f32[num_segments, D]; empty segments are all-zero.
+    """
+    if impl == "xla":
+        return ref.segment_softmax_agg_ref(logits, msg, dst, mask, num_segments)
+    if impl != "pallas":
+        raise ValueError(f"unknown impl {impl!r}")
+
+    msg, dst, mask = _pad_edges(
+        msg.astype(jnp.float32), dst.astype(jnp.int32), mask.astype(jnp.float32), block_e
+    )
+    e, d = msg.shape
+    pe = e - logits.shape[0]
+    if pe:
+        logits = jnp.pad(logits, (0, pe))
+    logits = logits.astype(jnp.float32)
+    grid = (e // block_e,)
+
+    m = pl.pallas_call(
+        _segment_max_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_e,), lambda i: (i,)),
+            pl.BlockSpec((block_e,), lambda i: (i,)),
+            pl.BlockSpec((block_e,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((num_segments,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((num_segments,), jnp.float32),
+        interpret=True,
+    )(dst, mask, logits)
+    # Empty segments: clamp to 0 so exp() stays finite in pass 2.
+    m = jnp.where(m <= NEG_INF / 2, 0.0, m)
+
+    agg = pl.pallas_call(
+        _weighted_agg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_e,), lambda i: (i,)),
+            pl.BlockSpec((block_e,), lambda i: (i,)),
+            pl.BlockSpec((block_e,), lambda i: (i,)),
+            pl.BlockSpec((block_e, d), lambda i: (i, 0)),
+            pl.BlockSpec((num_segments,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((num_segments, d + 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_segments, d + 1), jnp.float32),
+        interpret=True,
+    )(dst, mask, logits, msg, m)
+
+    total, denom = agg[:, :d], agg[:, d]
+    denom = jnp.where(denom == 0.0, 1.0, denom)
+    return total / denom[:, None]

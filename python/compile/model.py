@@ -1,0 +1,393 @@
+"""Step-function assembly: configs, batch specs, train/infer steps.
+
+Every artifact the Rust runtime loads is one function lowered here:
+
+* ``*_train``  — ``(state…, lr, [loss_sel], batch…) → (state…, loss,
+  metric, [grad_lemb])`` with Adam folded in.  ``state`` is the flat
+  ``[params, m, v, t]`` list in manifest order.
+* ``*_infer`` — ``(params…, batch…) → outputs``.
+
+Flat ordering is ``sorted(param_names)``; the manifest
+(`artifacts/manifest.json`) records every name/shape/dtype so the Rust
+side is entirely manifest-driven.
+"""
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .models import decoders, gnn, lm, losses, optim
+from .models.common import ParamBuilder
+
+# ------------------------------------------------------------------ configs
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockShape:
+    """Padded block sizes: ns[0] ≥ ns[1] ≥ … ≥ ns[L] (targets)."""
+
+    ns: Tuple[int, ...]
+    es: Tuple[int, ...]
+
+    @property
+    def num_layers(self):
+        return len(self.es)
+
+
+def block_for(batch, fanout, num_layers, extra_seeds=0, round_to=8):
+    """Worst-case block shape for `batch` targets (+`extra_seeds` slots)."""
+    def rnd(x):
+        return (x + round_to - 1) // round_to * round_to
+
+    ns = [rnd(batch + extra_seeds)]
+    es = []
+    for _ in range(num_layers):
+        es.append(ns[-1] * fanout)
+        ns.append(rnd(ns[-1] * (fanout + 1)))
+    return BlockShape(ns=tuple(reversed(ns)), es=tuple(reversed(es)))
+
+
+@dataclasses.dataclass(frozen=True)
+class GnnConfig:
+    arch: str = "rgcn"
+    num_layers: int = 2
+    hidden: int = 64
+    feat_dim: int = 64
+    text_dim: int = 64
+    lemb_dim: int = 64
+    num_ntypes: int = 4
+    num_etypes: int = 8
+    num_classes: int = 16
+    impl: str = "pallas"
+    block: BlockShape = None
+    use_lemb: bool = True
+    num_neg: int = 0  # LP only: K negative slots per positive
+    lp_batch: int = 0  # LP only: positive edges per batch
+
+
+@dataclasses.dataclass(frozen=True)
+class LmConfig:
+    vocab: int = 1024
+    seq_len: int = 32
+    lm_hidden: int = 64
+    lm_heads: int = 2
+    num_lm_layers: int = 2
+    num_classes: int = 16
+    batch: int = 64
+    num_neg: int = 8  # LP fine-tuning negatives
+    hidden: int = 64  # pooled-embedding dim (matches GNN hidden)
+
+
+# --------------------------------------------------------------- batch specs
+
+F32, I32 = "f32", "i32"
+
+
+def gnn_block_spec(cfg: GnnConfig) -> List[Tuple[str, tuple, str]]:
+    b = cfg.block
+    spec = [
+        ("feat", (b.ns[0], cfg.feat_dim), F32),
+        ("text", (b.ns[0], cfg.text_dim), F32),
+        ("lemb", (b.ns[0], cfg.lemb_dim), F32),
+        ("src_sel", (b.ns[0], 3), F32),
+        ("ntype", (b.ns[0],), I32),
+    ]
+    for l in range(b.num_layers):
+        spec += [
+            (f"src{l}", (b.es[l],), I32),
+            (f"dst{l}", (b.es[l],), I32),
+            (f"etype{l}", (b.es[l],), I32),
+            (f"emask{l}", (b.es[l],), F32),
+        ]
+    return spec
+
+
+def nc_batch_spec(cfg: GnnConfig):
+    nt = cfg.block.ns[-1]
+    return gnn_block_spec(cfg) + [
+        ("labels", (nt,), I32),
+        ("lmask", (nt,), F32),
+    ]
+
+
+def lp_batch_spec(cfg: GnnConfig):
+    b, k = cfg.lp_batch, cfg.num_neg
+    return gnn_block_spec(cfg) + [
+        ("pos_src", (b,), I32),
+        ("pos_dst", (b,), I32),
+        ("neg_dst", (b, k), I32),
+        ("rel", (b,), I32),
+        ("pmask", (b,), F32),
+        ("eweight", (b,), F32),
+    ]
+
+
+def spec_to_args(spec):
+    """ShapeDtypeStructs for jit.lower."""
+    dt = {F32: jnp.float32, I32: jnp.int32}
+    return [jax.ShapeDtypeStruct(shape, dt[d]) for _, shape, d in spec]
+
+
+def batch_dict(spec, args):
+    return {name: a for (name, _, _), a in zip(spec, args)}
+
+
+# ----------------------------------------------------------- param builders
+
+
+def build_gnn_params(cfg: GnnConfig, task: str, seed: int = 0):
+    pb = ParamBuilder(jax.random.PRNGKey(seed))
+    gnn.build_gnn(pb, cfg)
+    if task == "nc":
+        decoders.build_nc_decoder(pb, cfg)
+    elif task == "lp":
+        decoders.build_lp_decoder(pb, cfg)
+    elif task == "emb":
+        pass
+    else:
+        raise ValueError(task)
+    return pb.params
+
+
+def build_lm_params(cfg: LmConfig, heads=("mlm", "nc"), seed: int = 1):
+    pb = ParamBuilder(jax.random.PRNGKey(seed))
+    lm.build_lm(pb, cfg)
+    if "mlm" in heads:
+        lm.build_mlm_head(pb, cfg)
+    if "nc" in heads:
+        pb.dense("lm.cls", cfg.lm_hidden, cfg.num_classes)
+    if "distill" in heads:
+        pb.dense("lm.proj", cfg.lm_hidden, cfg.hidden)
+    return pb.params
+
+
+# ------------------------------------------------------------ step assembly
+
+
+def flat_names(params: Dict):
+    return sorted(params.keys())
+
+
+def make_train_step(params0, loss_fn, batch_spec, *, grad_lemb=False, extra_scalars=()):
+    """Build the flat train-step callable plus its manifest metadata.
+
+    loss_fn(params, batch, scalars) -> (loss, metric)
+    Returns (flat_fn, in_specs, meta) where meta describes state inputs,
+    scalar inputs, batch inputs and outputs.
+    """
+    names = flat_names(params0)
+    P = len(names)
+
+    def flat_fn(*args):
+        i = 0
+        params = {n: a for n, a in zip(names, args[i : i + P])}
+        i += P
+        m = {n: a for n, a in zip(names, args[i : i + P])}
+        i += P
+        v = {n: a for n, a in zip(names, args[i : i + P])}
+        i += P
+        t = args[i]
+        i += 1
+        lr = args[i]
+        i += 1
+        scalars = args[i : i + len(extra_scalars)]
+        i += len(extra_scalars)
+        batch = batch_dict(batch_spec, args[i:])
+
+        if grad_lemb:
+
+            def L(p, lemb_in):
+                b2 = dict(batch)
+                b2["lemb"] = lemb_in
+                loss, metric = loss_fn(p, b2, scalars)
+                return loss, metric
+
+            (loss, metric), (gp, glemb) = jax.value_and_grad(
+                L, argnums=(0, 1), has_aux=True
+            )(params, batch["lemb"])
+        else:
+
+            def L(p):
+                return loss_fn(p, batch, scalars)
+
+            (loss, metric), gp = jax.value_and_grad(L, has_aux=True)(params)
+            glemb = None
+
+        params, m, v, t = optim.adam_update(params, gp, m, v, t, lr)
+        out = (
+            [params[n] for n in names]
+            + [m[n] for n in names]
+            + [v[n] for n in names]
+            + [t, loss, metric]
+        )
+        if grad_lemb:
+            out.append(glemb)
+        return tuple(out)
+
+    m0, v0, t0 = optim.adam_init(params0)
+    state0 = (
+        [params0[n] for n in names]
+        + [m0[n] for n in names]
+        + [v0[n] for n in names]
+        + [t0]
+    )
+    state_spec = (
+        [(f"p:{n}", tuple(params0[n].shape), F32) for n in names]
+        + [(f"m:{n}", tuple(params0[n].shape), F32) for n in names]
+        + [(f"v:{n}", tuple(params0[n].shape), F32) for n in names]
+        + [("t", (), F32)]
+    )
+    scalar_spec = [("lr", (), F32)] + [(s, (), F32) for s in extra_scalars]
+    out_spec = state_spec + [("loss", (), F32), ("metric", (), F32)]
+    if grad_lemb:
+        lemb_shape = next(s for n, s, _ in batch_spec if n == "lemb")
+        out_spec = out_spec + [("grad_lemb", lemb_shape, F32)]
+    meta = {
+        "n_params": P,
+        "param_names": names,
+        "state": state_spec,
+        "scalars": scalar_spec,
+        "batch": batch_spec,
+        "outputs": out_spec,
+    }
+    return flat_fn, state0, meta
+
+
+def make_infer_step(params0, infer_fn, batch_spec, out_spec):
+    names = flat_names(params0)
+    P = len(names)
+
+    def flat_fn(*args):
+        params = {n: a for n, a in zip(names, args[:P])}
+        batch = batch_dict(batch_spec, args[P:])
+        out = infer_fn(params, batch)
+        return out if isinstance(out, tuple) else (out,)
+
+    meta = {
+        "n_params": P,
+        "param_names": names,
+        "state": [(f"p:{n}", tuple(params0[n].shape), F32) for n in names],
+        "scalars": [],
+        "batch": batch_spec,
+        "outputs": out_spec,
+    }
+    return flat_fn, [params0[n] for n in names], meta
+
+
+# ----------------------------------------------------------------- GNN tasks
+
+
+def gnn_nc_loss(cfg):
+    def loss_fn(params, batch, scalars):
+        h = gnn.gnn_forward(params, batch, cfg)
+        logits = decoders.nc_logits(params, h)
+        return losses.masked_softmax_xent(logits, batch["labels"], batch["lmask"])
+
+    return loss_fn
+
+
+def gnn_lp_loss(cfg):
+    def loss_fn(params, batch, scalars):
+        (loss_sel,) = scalars
+        h = gnn.gnn_forward(params, batch, cfg)
+        hs, hd = h[batch["pos_src"]], h[batch["pos_dst"]]
+        pos = decoders.distmult_score(params, hs, hd, batch["rel"])
+        hneg = h[batch["neg_dst"]]  # [B, K, H]
+        r = params["lp.rel"][batch["rel"]][:, None, :]
+        neg = (hs[:, None, :] * r * hneg).sum(axis=-1)
+        loss = losses.lp_select_loss(
+            loss_sel, pos, neg, batch["pmask"], batch["eweight"]
+        )
+        metric = losses.lp_mrr_sum(pos, neg, batch["pmask"])
+        return loss, metric
+
+    return loss_fn
+
+
+def gnn_nc_logits_infer(cfg):
+    def infer_fn(params, batch):
+        h = gnn.gnn_forward(params, batch, cfg)
+        return decoders.nc_logits(params, h)
+
+    return infer_fn
+
+
+def gnn_emb_infer(cfg, with_rel=False):
+    def infer_fn(params, batch):
+        h = gnn.gnn_forward(params, batch, cfg)
+        if with_rel:
+            return h, params["lp.rel"]
+        return h
+
+    return infer_fn
+
+
+# ------------------------------------------------------------------ LM tasks
+
+
+def lm_token_spec(cfg: LmConfig, name="tokens", batch=None):
+    return (name, (batch or cfg.batch, cfg.seq_len), I32)
+
+
+def lm_mlm_loss(cfg):
+    def loss_fn(params, batch, scalars):
+        logits = lm.mlm_logits(params, batch["tokens"], batch["positions"], cfg)
+        return losses.masked_softmax_xent(logits, batch["labels"], batch["lmask"])
+
+    return loss_fn
+
+
+def lm_nc_loss(cfg):
+    def loss_fn(params, batch, scalars):
+        emb = lm.lm_embed(params, batch["tokens"], cfg)
+        logits = emb @ params["lm.cls.w"] + params["lm.cls.b"]
+        return losses.masked_softmax_xent(logits, batch["labels"], batch["lmask"])
+
+    return loss_fn
+
+
+def lm_lp_loss(cfg):
+    """Contrastive LP fine-tuning over (src, dst, joint negatives) text."""
+
+    def loss_fn(params, batch, scalars):
+        es = lm.lm_embed(params, batch["src_tokens"], cfg)
+        ed = lm.lm_embed(params, batch["dst_tokens"], cfg)
+        en = lm.lm_embed(params, batch["neg_tokens"], cfg)  # [K, H]
+        pos = (es * ed).sum(axis=1)
+        neg = es @ en.T  # [B, K]
+        loss = losses.lp_contrastive_loss(pos, neg, batch["pmask"])
+        metric = losses.lp_mrr_sum(pos, neg, batch["pmask"])
+        return loss, metric
+
+    return loss_fn
+
+
+def lm_distill_loss(cfg):
+    """MSE between projected student embeddings and teacher GNN embeddings."""
+
+    def loss_fn(params, batch, scalars):
+        emb = lm.lm_embed(params, batch["tokens"], cfg)
+        proj = emb @ params["lm.proj.w"] + params["lm.proj.b"]
+        loss = losses.mse_loss(proj, batch["teacher"], batch["lmask"])
+        return loss, loss  # metric = loss for distillation
+
+    return loss_fn
+
+
+# ----------------------------------------------------------------- MLP probe
+
+
+def build_probe_params(in_dim, hidden, num_classes, seed=2):
+    pb = ParamBuilder(jax.random.PRNGKey(seed))
+    decoders.build_mlp_decoder(pb, in_dim, hidden, num_classes)
+    return pb.params
+
+
+def probe_loss():
+    def loss_fn(params, batch, scalars):
+        logits = decoders.mlp_logits(params, batch["emb"])
+        return losses.masked_softmax_xent(logits, batch["labels"], batch["lmask"])
+
+    return loss_fn

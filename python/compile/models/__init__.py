@@ -1,0 +1,9 @@
+"""L2 model zoo: JAX implementations of every GraphStorm model.
+
+GNNs for homogeneous graphs (GCN, GraphSage, GAT), relational GNNs for
+heterogeneous graphs (RGCN, RGAT, HGT-lite), a mini-BERT language model
+for text-rich graphs, task decoders (node classification, DistMult /
+dot-product link prediction) and the three link-prediction losses from
+the paper's Appendix A.  Everything consumes padded fixed-shape
+mini-batch blocks (DESIGN.md §4) so the whole step AOT-lowers to HLO.
+"""

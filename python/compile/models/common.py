@@ -1,0 +1,79 @@
+"""Shared parameter containers and dense building blocks."""
+
+import jax
+import jax.numpy as jnp
+
+
+class ParamBuilder:
+    """Collects named parameters with deterministic PRNG splitting.
+
+    Parameters live in a flat dict keyed by dotted names; the AOT
+    manifest sorts keys lexicographically, which fixes the flat argument
+    order shared with the Rust runtime.
+    """
+
+    def __init__(self, key):
+        self.key = key
+        self.params = {}
+
+    def _next(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def glorot(self, name, shape):
+        fan_in, fan_out = shape[-2], shape[-1]
+        scale = jnp.sqrt(2.0 / (fan_in + fan_out))
+        self.params[name] = jax.random.normal(self._next(), shape, jnp.float32) * scale
+        return self.params[name]
+
+    def normal(self, name, shape, stddev=0.02):
+        self.params[name] = jax.random.normal(self._next(), shape, jnp.float32) * stddev
+        return self.params[name]
+
+    def zeros(self, name, shape):
+        self.params[name] = jnp.zeros(shape, jnp.float32)
+        return self.params[name]
+
+    def ones(self, name, shape):
+        self.params[name] = jnp.ones(shape, jnp.float32)
+        return self.params[name]
+
+    def dense(self, name, fan_in, fan_out):
+        self.glorot(f"{name}.w", (fan_in, fan_out))
+        self.zeros(f"{name}.b", (fan_out,))
+
+    def per_type_dense(self, name, num_types, fan_in, fan_out):
+        self.glorot(f"{name}.w", (num_types, fan_in, fan_out))
+        self.zeros(f"{name}.b", (num_types, fan_out))
+
+    def layer_norm(self, name, dim):
+        self.ones(f"{name}.g", (dim,))
+        self.zeros(f"{name}.o", (dim,))
+
+
+def dense(params, name, x):
+    """Affine map with parameters ``{name}.w`` / ``{name}.b``."""
+    return x @ params[f"{name}.w"] + params[f"{name}.b"]
+
+
+def per_type_dense(params, name, x, type_ids):
+    """Type-conditioned affine map: row i uses weight block type_ids[i].
+
+    Implemented as a stacked einsum followed by a take-along-axis select
+    — T is small (≤8) so the extra FLOPs stay cheap and everything is a
+    dense MXU-shaped contraction (no gather of weight matrices).
+    """
+    w = params[f"{name}.w"]  # [T, F, H]
+    b = params[f"{name}.b"]  # [T, H]
+    proj = jnp.einsum("nf,tfh->nth", x, w) + b[None, :, :]
+    return jnp.take_along_axis(proj, type_ids[:, None, None], axis=1)[:, 0]
+
+
+def layer_norm(params, name, x, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * params[f"{name}.g"] + params[f"{name}.o"]
+
+
+def leaky_relu(x, slope=0.2):
+    return jnp.where(x >= 0, x, slope * x)

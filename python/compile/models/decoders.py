@@ -1,0 +1,35 @@
+"""Task decoders: classification heads and link-prediction scorers."""
+
+import jax.numpy as jnp
+
+from .common import ParamBuilder, dense
+
+
+def build_nc_decoder(pb: ParamBuilder, cfg, prefix="dec"):
+    pb.dense(f"{prefix}.cls", cfg.hidden, cfg.num_classes)
+
+
+def nc_logits(params, h, prefix="dec"):
+    return dense(params, f"{prefix}.cls", h)
+
+
+def build_mlp_decoder(pb: ParamBuilder, in_dim, hidden, num_classes, prefix="mlp"):
+    pb.dense(f"{prefix}.h", in_dim, hidden)
+    pb.dense(f"{prefix}.out", hidden, num_classes)
+
+
+def mlp_logits(params, x, prefix="mlp"):
+    return dense(params, f"{prefix}.out", jnp.tanh(dense(params, f"{prefix}.h", x)))
+
+
+def build_lp_decoder(pb: ParamBuilder, cfg, prefix="lp"):
+    # DistMult relation embeddings (paper eq. 3).  Initialised at 1 so an
+    # untrained scorer degrades to the dot product (paper eq. 2) — the
+    # single-edge-type case.
+    pb.ones(f"{prefix}.rel", (cfg.num_etypes, cfg.hidden))
+
+
+def distmult_score(params, h_src, h_dst, rel_ids, prefix="lp"):
+    """score(u, r, v) = sum_i emb_u[i] * emb_r[i] * emb_v[i] (eq. 3)."""
+    r = params[f"{prefix}.rel"][rel_ids]
+    return (h_src * r * h_dst).sum(axis=-1)

@@ -1,0 +1,205 @@
+"""GNN model zoo over padded mini-batch blocks.
+
+Block layout (DESIGN.md §4): one node-slot array shared by all layers
+with the subset property — the first ``ns[l+1]`` slots of layer *l* are
+exactly the nodes of layer *l+1*; targets are the first ``ns[L]`` slots.
+Edges at hop *l* connect src slots (< ns[l]) to dst slots (< ns[l+1]).
+Padding edges carry ``emask=0`` and point at slot 0.
+
+Every aggregation goes through the L1 Pallas kernels
+(:func:`kernels.segment_sum` / :func:`kernels.segment_softmax_agg_diff`),
+so the paper's compute hot spot lowers into the same HLO as the rest of
+the model.
+"""
+
+import jax.numpy as jnp
+
+from ..kernels import segment_sum, segment_softmax_agg_diff
+from .common import ParamBuilder, dense, per_type_dense, layer_norm, leaky_relu
+
+
+def _segment_mean_diff(msg, dst, mask, n, impl):
+    """Differentiable masked scatter-mean via the segment_sum kernel."""
+    aug = jnp.concatenate([msg, jnp.ones((msg.shape[0], 1), msg.dtype)], axis=1)
+    s = segment_sum(aug, dst, mask, n, impl=impl)
+    total, count = s[:, :-1], s[:, -1]
+    count = jnp.where(count == 0.0, 1.0, count)
+    return total / count[:, None]
+
+
+# --------------------------------------------------------------- input layer
+
+
+def build_input_encoder(pb: ParamBuilder, cfg):
+    """Per-source input projections (GraphStorm's node input encoder).
+
+    Three feature sources share the hidden space: dense numeric features
+    (type-conditioned projection), cached LM text embeddings, and
+    gathered learnable-embedding rows for featureless node types.
+    """
+    pb.per_type_dense("in.feat", cfg.num_ntypes, cfg.feat_dim, cfg.hidden)
+    pb.dense("in.text", cfg.text_dim, cfg.hidden)
+    pb.dense("in.lemb", cfg.lemb_dim, cfg.hidden)
+    pb.layer_norm("in.ln", cfg.hidden)
+
+
+def input_encoder(params, batch, cfg):
+    h = (
+        per_type_dense(params, "in.feat", batch["feat"], batch["ntype"])
+        * batch["src_sel"][:, 0:1]
+        + dense(params, "in.text", batch["text"]) * batch["src_sel"][:, 1:2]
+        + dense(params, "in.lemb", batch["lemb"]) * batch["src_sel"][:, 2:3]
+    )
+    return jnp.tanh(layer_norm(params, "in.ln", h))
+
+
+# ---------------------------------------------------------------- GNN layers
+#
+# Every layer fn has signature (params, prefix, h, src, dst, etype, emask,
+# n_dst, ntype, cfg) -> f32[n_dst, H] where h is f32[n_src, H].
+#
+# NOTE: non-relational layers must still *consume* `etype`: XLA prunes
+# entirely-unused parameters when converting StableHLO → XlaComputation,
+# which would desynchronize the artifact from the manifest's input list.
+# `_touch` adds a zero-valued dependence.
+
+
+def _touch(emask, etype):
+    return emask + 0.0 * etype.astype(jnp.float32)
+
+
+def build_gcn_layer(pb, prefix, cfg):
+    pb.dense(f"{prefix}.w", cfg.hidden, cfg.hidden)
+    pb.dense(f"{prefix}.self", cfg.hidden, cfg.hidden)
+    pb.layer_norm(f"{prefix}.ln", cfg.hidden)
+
+
+def gcn_layer(params, prefix, h, src, dst, etype, emask, n_dst, ntype, cfg):
+    # Sampled-graph GCN: mean aggregation stands in for the symmetric
+    # 1/sqrt(d_u d_v) norm (degrees are capped by the fanout anyway).
+    agg = _segment_mean_diff(h[src], dst, _touch(emask, etype), n_dst, cfg.impl)
+    out = dense(params, f"{prefix}.w", agg) + dense(params, f"{prefix}.self", h[:n_dst])
+    return jnp.tanh(layer_norm(params, f"{prefix}.ln", out))
+
+
+def build_sage_layer(pb, prefix, cfg):
+    pb.dense(f"{prefix}.w", 2 * cfg.hidden, cfg.hidden)
+    pb.layer_norm(f"{prefix}.ln", cfg.hidden)
+
+
+def sage_layer(params, prefix, h, src, dst, etype, emask, n_dst, ntype, cfg):
+    agg = _segment_mean_diff(h[src], dst, _touch(emask, etype), n_dst, cfg.impl)
+    out = dense(params, f"{prefix}.w", jnp.concatenate([h[:n_dst], agg], axis=1))
+    return jnp.tanh(layer_norm(params, f"{prefix}.ln", out))
+
+
+def build_gat_layer(pb, prefix, cfg):
+    pb.dense(f"{prefix}.w", cfg.hidden, cfg.hidden)
+    pb.normal(f"{prefix}.asrc", (cfg.hidden,), 0.1)
+    pb.normal(f"{prefix}.adst", (cfg.hidden,), 0.1)
+    pb.layer_norm(f"{prefix}.ln", cfg.hidden)
+
+
+def gat_layer(params, prefix, h, src, dst, etype, emask, n_dst, ntype, cfg):
+    z = dense(params, f"{prefix}.w", h)
+    logit = leaky_relu(
+        z[src] @ params[f"{prefix}.asrc"] + z[:n_dst][dst] @ params[f"{prefix}.adst"]
+    )
+    agg = segment_softmax_agg_diff(
+        logit, z[src], dst, _touch(emask, etype), n_dst, impl=cfg.impl
+    )
+    return jnp.tanh(layer_norm(params, f"{prefix}.ln", agg + z[:n_dst]))
+
+
+def build_rgcn_layer(pb, prefix, cfg):
+    pb.per_type_dense(f"{prefix}.rel", cfg.num_etypes, cfg.hidden, cfg.hidden)
+    pb.dense(f"{prefix}.self", cfg.hidden, cfg.hidden)
+    pb.layer_norm(f"{prefix}.ln", cfg.hidden)
+
+
+def rgcn_layer(params, prefix, h, src, dst, etype, emask, n_dst, ntype, cfg):
+    msg = per_type_dense(params, f"{prefix}.rel", h[src], etype)
+    agg = _segment_mean_diff(msg, dst, emask, n_dst, cfg.impl)
+    out = agg + dense(params, f"{prefix}.self", h[:n_dst])
+    return jnp.tanh(layer_norm(params, f"{prefix}.ln", out))
+
+
+def build_rgat_layer(pb, prefix, cfg):
+    pb.dense(f"{prefix}.w", cfg.hidden, cfg.hidden)
+    pb.per_type_dense(f"{prefix}.rel", cfg.num_etypes, cfg.hidden, cfg.hidden)
+    pb.normal(f"{prefix}.asrc", (cfg.hidden,), 0.1)
+    pb.normal(f"{prefix}.adst", (cfg.hidden,), 0.1)
+    pb.normal(f"{prefix}.arel", (cfg.num_etypes,), 0.1)
+    pb.layer_norm(f"{prefix}.ln", cfg.hidden)
+
+
+def rgat_layer(params, prefix, h, src, dst, etype, emask, n_dst, ntype, cfg):
+    z = dense(params, f"{prefix}.w", h)
+    msg = per_type_dense(params, f"{prefix}.rel", z[src], etype)
+    logit = leaky_relu(
+        z[src] @ params[f"{prefix}.asrc"]
+        + z[:n_dst][dst] @ params[f"{prefix}.adst"]
+        + params[f"{prefix}.arel"][etype]
+    )
+    agg = segment_softmax_agg_diff(logit, msg, dst, emask, n_dst, impl=cfg.impl)
+    return jnp.tanh(layer_norm(params, f"{prefix}.ln", agg + z[:n_dst]))
+
+
+def build_hgt_layer(pb, prefix, cfg):
+    for nm in ("q", "k", "v", "out"):
+        pb.per_type_dense(f"{prefix}.{nm}", cfg.num_ntypes, cfg.hidden, cfg.hidden)
+    pb.normal(f"{prefix}.prior", (cfg.num_etypes,), 0.1)
+    pb.layer_norm(f"{prefix}.ln", cfg.hidden)
+
+
+def hgt_layer(params, prefix, h, src, dst, etype, emask, n_dst, ntype, cfg):
+    # Single-head HGT-lite: type-conditioned Q/K/V, per-etype scalar
+    # prior in the logit, type-conditioned output projection + residual.
+    q = per_type_dense(params, f"{prefix}.q", h[:n_dst], ntype[:n_dst])
+    k = per_type_dense(params, f"{prefix}.k", h, ntype)
+    v = per_type_dense(params, f"{prefix}.v", h, ntype)
+    scale = 1.0 / jnp.sqrt(jnp.float32(cfg.hidden))
+    logit = (k[src] * q[dst]).sum(axis=1) * scale + params[f"{prefix}.prior"][etype]
+    agg = segment_softmax_agg_diff(logit, v[src], dst, emask, n_dst, impl=cfg.impl)
+    out = per_type_dense(params, f"{prefix}.out", agg, ntype[:n_dst])
+    return jnp.tanh(layer_norm(params, f"{prefix}.ln", out + h[:n_dst]))
+
+
+LAYERS = {
+    "gcn": (build_gcn_layer, gcn_layer),
+    "sage": (build_sage_layer, sage_layer),
+    "gat": (build_gat_layer, gat_layer),
+    "rgcn": (build_rgcn_layer, rgcn_layer),
+    "rgat": (build_rgat_layer, rgat_layer),
+    "hgt": (build_hgt_layer, hgt_layer),
+}
+
+
+def build_gnn(pb: ParamBuilder, cfg):
+    build_input_encoder(pb, cfg)
+    build_layer, _ = LAYERS[cfg.arch]
+    for l in range(cfg.num_layers):
+        build_layer(pb, f"l{l}", cfg)
+
+
+def gnn_forward(params, batch, cfg):
+    """Run the message-passing stack; returns target embeddings [ns[L], H]."""
+    _, layer = LAYERS[cfg.arch]
+    h = input_encoder(params, batch, cfg)
+    ntype = batch["ntype"]
+    for l in range(cfg.num_layers):
+        n_dst = cfg.block.ns[l + 1]
+        h = layer(
+            params,
+            f"l{l}",
+            h[: cfg.block.ns[l]],
+            batch[f"src{l}"],
+            batch[f"dst{l}"],
+            batch[f"etype{l}"],
+            batch[f"emask{l}"],
+            n_dst,
+            ntype,
+            cfg,
+        )
+        ntype = ntype[:n_dst]
+    return h

@@ -1,0 +1,91 @@
+"""Mini-BERT: the language-model half of the LM+GNN experiments.
+
+Stands in for HuggingFace BERT / DistilBERT (DESIGN.md §1): a token +
+position embedding, ``num_lm_layers`` post-LN transformer blocks, and a
+mean-pool + tanh pooler.  The *pre-training* task is single-position
+masked-token prediction (the Rust trainer masks one position per
+sequence); fine-tuning heads cover node classification and contrastive
+link prediction, matching the paper's Table 2 / Figure 5 pipelines.
+
+Token id 0 is PAD (attention-masked), id 1 is [MASK].
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamBuilder, dense, layer_norm
+
+PAD_ID = 0
+MASK_ID = 1
+
+
+def build_lm(pb: ParamBuilder, cfg, prefix="lm"):
+    pb.normal(f"{prefix}.tok", (cfg.vocab, cfg.lm_hidden), 0.02)
+    pb.normal(f"{prefix}.pos", (cfg.seq_len, cfg.lm_hidden), 0.02)
+    for l in range(cfg.num_lm_layers):
+        p = f"{prefix}.t{l}"
+        for nm in ("q", "k", "v", "o"):
+            pb.dense(f"{p}.{nm}", cfg.lm_hidden, cfg.lm_hidden)
+        pb.dense(f"{p}.ff1", cfg.lm_hidden, 4 * cfg.lm_hidden)
+        pb.dense(f"{p}.ff2", 4 * cfg.lm_hidden, cfg.lm_hidden)
+        pb.layer_norm(f"{p}.ln1", cfg.lm_hidden)
+        pb.layer_norm(f"{p}.ln2", cfg.lm_hidden)
+    pb.dense(f"{prefix}.pool", cfg.lm_hidden, cfg.lm_hidden)
+
+
+def _attention(params, p, h, attn_mask, cfg):
+    """Multi-head self-attention; attn_mask is f32[B, S] (1 = real)."""
+    b, s, d = h.shape
+    nh = cfg.lm_heads
+    hd = d // nh
+
+    def split(x):
+        return x.reshape(b, s, nh, hd).transpose(0, 2, 1, 3)  # [B, nh, S, hd]
+
+    q = split(dense(params, f"{p}.q", h))
+    k = split(dense(params, f"{p}.k", h))
+    v = split(dense(params, f"{p}.v", h))
+    logits = jnp.einsum("bhid,bhjd->bhij", q, k) / jnp.sqrt(jnp.float32(hd))
+    bias = (1.0 - attn_mask)[:, None, None, :] * -1e9
+    w = jax.nn.softmax(logits + bias, axis=-1)
+    ctx = jnp.einsum("bhij,bhjd->bhid", w, v).transpose(0, 2, 1, 3).reshape(b, s, d)
+    return dense(params, f"{p}.o", ctx)
+
+
+def lm_encode(params, tokens, cfg, prefix="lm"):
+    """tokens i32[B, S] -> hidden f32[B, S, H], attn_mask f32[B, S]."""
+    attn_mask = (tokens != PAD_ID).astype(jnp.float32)
+    pos = jnp.arange(cfg.seq_len)
+    h = params[f"{prefix}.tok"][tokens] + params[f"{prefix}.pos"][pos][None]
+    for l in range(cfg.num_lm_layers):
+        p = f"{prefix}.t{l}"
+        h = layer_norm(params, f"{p}.ln1", h + _attention(params, p, h, attn_mask, cfg))
+        ff = dense(params, f"{p}.ff2", jax.nn.gelu(dense(params, f"{p}.ff1", h)))
+        h = layer_norm(params, f"{p}.ln2", h + ff)
+    return h, attn_mask
+
+
+def lm_pool(params, hidden, attn_mask, cfg, prefix="lm"):
+    """Masked mean-pool + tanh pooler -> f32[B, H] sequence embedding."""
+    denom = jnp.maximum(attn_mask.sum(axis=1, keepdims=True), 1.0)
+    pooled = (hidden * attn_mask[:, :, None]).sum(axis=1) / denom
+    return jnp.tanh(dense(params, f"{prefix}.pool", pooled))
+
+
+def lm_embed(params, tokens, cfg, prefix="lm"):
+    hidden, attn_mask = lm_encode(params, tokens, cfg, prefix)
+    return lm_pool(params, hidden, attn_mask, cfg, prefix)
+
+
+def build_mlm_head(pb: ParamBuilder, cfg, prefix="lm"):
+    pb.dense(f"{prefix}.mlm", cfg.lm_hidden, cfg.vocab)
+
+
+def mlm_logits(params, tokens, positions, cfg, prefix="lm"):
+    """Vocabulary logits at one masked position per sequence.
+
+    positions: i32[B] — the masked index in each sequence.
+    """
+    hidden, _ = lm_encode(params, tokens, cfg, prefix)
+    at = jnp.take_along_axis(hidden, positions[:, None, None], axis=1)[:, 0]
+    return dense(params, f"{prefix}.mlm", at)

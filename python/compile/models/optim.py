@@ -1,0 +1,34 @@
+"""Adam, folded into the AOT train step.
+
+The optimizer state (first/second moments + step counter) travels with
+the parameters through the HLO boundary: the Rust runtime holds the
+whole `[params, m, v, t]` state as device-resident PJRT buffers and the
+train step returns the updated state, so a training step never copies
+parameters across the host boundary.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    m = dict(zeros)
+    v = jax.tree.map(jnp.zeros_like, params)
+    t = jnp.zeros((), jnp.float32)
+    return m, v, t
+
+
+def adam_update(params, grads, m, v, t, lr, b1=0.9, b2=0.999, eps=1e-8):
+    """One Adam step over parameter pytrees. Returns (params', m', v', t')."""
+    t = t + 1.0
+    m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g, m, grads)
+    v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * g * g, v, grads)
+    mhat_scale = 1.0 / (1.0 - b1**t)
+    vhat_scale = 1.0 / (1.0 - b2**t)
+
+    def upd(p, mm, vv):
+        return p - lr * (mm * mhat_scale) / (jnp.sqrt(vv * vhat_scale) + eps)
+
+    params = jax.tree.map(upd, params, m, v)
+    return params, m, v, t

@@ -1,0 +1,213 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes, segment counts, mask densities and value
+ranges; every property asserts allclose between the interpret-mode
+Pallas kernel and the ref oracle, plus hand-checked fixtures.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import segment_sum, segment_mean, segment_softmax_agg
+from compile.kernels import ref
+
+
+def _rand_case(rng, e, n, d, mask_density):
+    msg = rng.standard_normal((e, d), dtype=np.float32)
+    dst = rng.integers(0, n, size=e).astype(np.int32)
+    mask = (rng.random(e) < mask_density).astype(np.float32)
+    return msg, dst, mask
+
+
+# ---------------------------------------------------------------- fixtures
+
+
+def test_segment_sum_tiny_fixture():
+    msg = jnp.array([[1.0, 2.0], [3.0, 4.0], [5.0, 6.0], [7.0, 8.0]])
+    dst = jnp.array([0, 2, 0, 1], dtype=jnp.int32)
+    mask = jnp.array([1.0, 1.0, 1.0, 0.0])
+    out = segment_sum(msg, dst, mask, 3)
+    expect = np.array([[6.0, 8.0], [0.0, 0.0], [3.0, 4.0]])
+    np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-6)
+
+
+def test_segment_sum_all_masked():
+    msg = jnp.ones((8, 4))
+    dst = jnp.zeros(8, dtype=jnp.int32)
+    mask = jnp.zeros(8)
+    out = segment_sum(msg, dst, mask, 5)
+    np.testing.assert_array_equal(np.asarray(out), np.zeros((5, 4)))
+
+
+def test_segment_sum_single_segment():
+    rng = np.random.default_rng(0)
+    msg, dst, mask = _rand_case(rng, 300, 1, 16, 1.0)
+    out = segment_sum(jnp.asarray(msg), jnp.asarray(dst), jnp.asarray(mask), 1)
+    np.testing.assert_allclose(
+        np.asarray(out)[0], msg.sum(axis=0), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_segment_mean_fixture():
+    msg = jnp.array([[2.0], [4.0], [10.0]])
+    dst = jnp.array([0, 0, 1], dtype=jnp.int32)
+    mask = jnp.ones(3)
+    out = segment_mean(msg, dst, mask, 3)
+    expect = np.array([[3.0], [10.0], [0.0]])  # empty segment -> 0
+    np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-6)
+
+
+def test_softmax_agg_uniform_logits_is_mean():
+    """Equal logits must reduce softmax-agg to a masked mean."""
+    rng = np.random.default_rng(1)
+    msg, dst, mask = _rand_case(rng, 100, 7, 8, 0.8)
+    logits = np.zeros(100, dtype=np.float32)
+    out = segment_softmax_agg(
+        jnp.asarray(logits), jnp.asarray(msg), jnp.asarray(dst), jnp.asarray(mask), 7
+    )
+    expect = ref.segment_mean_ref(jnp.asarray(msg), jnp.asarray(dst), jnp.asarray(mask), 7)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-4, atol=1e-5)
+
+
+def test_softmax_agg_one_dominant_logit():
+    """A huge logit must select exactly that edge's value."""
+    msg = jnp.array([[1.0, 0.0], [5.0, 5.0], [9.0, 9.0]])
+    dst = jnp.array([0, 0, 0], dtype=jnp.int32)
+    mask = jnp.ones(3)
+    logits = jnp.array([0.0, 50.0, 0.0])
+    out = segment_softmax_agg(logits, msg, dst, mask, 2)
+    np.testing.assert_allclose(np.asarray(out)[0], [5.0, 5.0], rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(out)[1], [0.0, 0.0])
+
+
+def test_softmax_agg_large_logits_stable():
+    """Stability: logits near 1e4 must not produce inf/nan."""
+    rng = np.random.default_rng(2)
+    msg, dst, mask = _rand_case(rng, 64, 4, 4, 1.0)
+    logits = rng.uniform(9000, 10000, 64).astype(np.float32)
+    out = segment_softmax_agg(
+        jnp.asarray(logits), jnp.asarray(msg), jnp.asarray(dst), jnp.asarray(mask), 4
+    )
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_impl_xla_matches_pallas():
+    rng = np.random.default_rng(3)
+    msg, dst, mask = _rand_case(rng, 500, 33, 24, 0.7)
+    a = segment_sum(jnp.asarray(msg), jnp.asarray(dst), jnp.asarray(mask), 33, impl="pallas")
+    b = segment_sum(jnp.asarray(msg), jnp.asarray(dst), jnp.asarray(mask), 33, impl="xla")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+def test_bad_impl_raises():
+    with pytest.raises(ValueError):
+        segment_sum(jnp.ones((4, 2)), jnp.zeros(4, jnp.int32), jnp.ones(4), 2, impl="cuda")
+
+
+# ---------------------------------------------------------- hypothesis sweeps
+
+shape_strategy = st.tuples(
+    st.integers(min_value=1, max_value=700),    # E
+    st.integers(min_value=1, max_value=50),     # N
+    st.sampled_from([1, 3, 8, 17, 64]),         # D
+    st.sampled_from([0.0, 0.3, 0.9, 1.0]),      # mask density
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape_strategy)
+def test_segment_sum_matches_ref(case):
+    e, n, d, density, seed = case
+    rng = np.random.default_rng(seed)
+    msg, dst, mask = _rand_case(rng, e, n, d, density)
+    got = segment_sum(jnp.asarray(msg), jnp.asarray(dst), jnp.asarray(mask), n)
+    want = ref.segment_sum_ref(jnp.asarray(msg), jnp.asarray(dst), jnp.asarray(mask), n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape_strategy)
+def test_segment_mean_matches_ref(case):
+    e, n, d, density, seed = case
+    rng = np.random.default_rng(seed)
+    msg, dst, mask = _rand_case(rng, e, n, d, density)
+    got = segment_mean(jnp.asarray(msg), jnp.asarray(dst), jnp.asarray(mask), n)
+    want = ref.segment_mean_ref(jnp.asarray(msg), jnp.asarray(dst), jnp.asarray(mask), n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape_strategy)
+def test_softmax_agg_matches_ref(case):
+    e, n, d, density, seed = case
+    rng = np.random.default_rng(seed)
+    msg, dst, mask = _rand_case(rng, e, n, d, density)
+    logits = rng.standard_normal(e).astype(np.float32) * 3.0
+    got = segment_softmax_agg(
+        jnp.asarray(logits), jnp.asarray(msg), jnp.asarray(dst), jnp.asarray(mask), n
+    )
+    want = ref.segment_softmax_agg_ref(
+        jnp.asarray(logits), jnp.asarray(msg), jnp.asarray(dst), jnp.asarray(mask), n
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=300),
+    st.integers(min_value=1, max_value=20),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_segment_sum_block_size_invariant(e, n, seed):
+    """Result must not depend on the E-tile size."""
+    rng = np.random.default_rng(seed)
+    msg, dst, mask = _rand_case(rng, e, n, 8, 0.9)
+    a = segment_sum(jnp.asarray(msg), jnp.asarray(dst), jnp.asarray(mask), n, block_e=64)
+    b = segment_sum(jnp.asarray(msg), jnp.asarray(dst), jnp.asarray(mask), n, block_e=512)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------- gradients
+
+
+def test_segment_sum_grad_matches_ref():
+    import jax
+
+    rng = np.random.default_rng(7)
+    msg, dst, mask = _rand_case(rng, 120, 9, 6, 0.8)
+    msg, dst, mask = jnp.asarray(msg), jnp.asarray(dst), jnp.asarray(mask)
+    cotangent = jnp.asarray(rng.standard_normal((9, 6)).astype(np.float32))
+    g1 = jax.grad(lambda m: (segment_sum(m, dst, mask, 9) * cotangent).sum())(msg)
+    g2 = jax.grad(lambda m: (ref.segment_sum_ref(m, dst, mask, 9) * cotangent).sum())(msg)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-4, atol=1e-5)
+
+
+def test_softmax_agg_diff_grad_matches_ref():
+    import jax
+    from compile.kernels import segment_softmax_agg_diff
+
+    rng = np.random.default_rng(8)
+    msg, dst, mask = _rand_case(rng, 80, 6, 5, 0.9)
+    logits = rng.standard_normal(80).astype(np.float32)
+    args = (jnp.asarray(logits), jnp.asarray(msg), jnp.asarray(dst), jnp.asarray(mask))
+    f1 = lambda l, m: segment_softmax_agg_diff(l, m, args[2], args[3], 6).sum()
+    f2 = lambda l, m: ref.segment_softmax_agg_ref(l, m, args[2], args[3], 6).sum()
+    ga = jax.grad(f1, argnums=(0, 1))(args[0], args[1])
+    gb = jax.grad(f2, argnums=(0, 1))(args[0], args[1])
+    for a, b in zip(ga, gb):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+def test_softmax_agg_diff_forward_matches_fused():
+    from compile.kernels import segment_softmax_agg_diff
+
+    rng = np.random.default_rng(9)
+    msg, dst, mask = _rand_case(rng, 90, 8, 4, 0.7)
+    logits = rng.standard_normal(90).astype(np.float32) * 2
+    args = (jnp.asarray(logits), jnp.asarray(msg), jnp.asarray(dst), jnp.asarray(mask))
+    a = segment_softmax_agg_diff(*args, 8)
+    b = segment_softmax_agg(*args, 8)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)

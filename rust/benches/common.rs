@@ -1,0 +1,75 @@
+//! Shared helpers for the paper-table bench harnesses.
+//!
+//! Each bench binary regenerates one table/figure of the paper at the
+//! scaled-down workload (DESIGN.md §3) and prints rows in the paper's
+//! format.  `GS_BENCH_FAST=1` shrinks workloads further for smoke runs.
+
+#![allow(dead_code)]
+
+use graphstorm::datagen::{self, amazon, mag, scale_free};
+use graphstorm::dataloader::GsDataset;
+use graphstorm::partition::{random_partition, PartitionBook};
+use graphstorm::runtime::Runtime;
+use graphstorm::trainer::TrainOptions;
+
+pub fn fast() -> bool {
+    std::env::var("GS_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+pub fn scale(n: usize) -> usize {
+    if fast() {
+        (n / 4).max(200)
+    } else {
+        n
+    }
+}
+
+pub fn mag_dataset(n_papers: usize, n_parts: usize) -> GsDataset {
+    let raw = mag::generate(&mag::MagConfig { n_papers, ..Default::default() });
+    let book = if n_parts <= 1 {
+        PartitionBook::single(&raw.graph.num_nodes)
+    } else {
+        random_partition(&raw.graph, n_parts, 7)
+    };
+    datagen::build_dataset(raw, book, 64, 7)
+}
+
+pub fn ar_dataset(n_items: usize, variant: amazon::ArVariant, n_parts: usize) -> GsDataset {
+    let world = amazon::generate_world(&amazon::ArConfig { n_items, ..Default::default() });
+    let raw = amazon::build_variant(&world, variant);
+    let book = if n_parts <= 1 {
+        PartitionBook::single(&raw.graph.num_nodes)
+    } else {
+        random_partition(&raw.graph, n_parts, 7)
+    };
+    datagen::build_dataset(raw, book, 64, 7)
+}
+
+pub fn sf_dataset(n_edges: usize, n_parts: usize) -> (GsDataset, f64, f64) {
+    let t0 = std::time::Instant::now();
+    let raw = scale_free::generate(&scale_free::ScaleFreeConfig { n_edges, ..Default::default() });
+    let gen_s = t0.elapsed().as_secs_f64();
+    let t1 = std::time::Instant::now();
+    let book = random_partition(&raw.graph, n_parts, 7);
+    let part_s = t1.elapsed().as_secs_f64();
+    (datagen::build_dataset(raw, book, 64, 7), gen_s, part_s)
+}
+
+pub fn opts(epochs: usize, n_workers: usize) -> TrainOptions {
+    TrainOptions { lr: 3e-3, epochs, seed: 7, n_workers, log_every: 0, verbose: false }
+}
+
+pub fn runtime() -> Runtime {
+    Runtime::from_default_dir().expect("run `make artifacts` first")
+}
+
+/// Print a separator + table title in the paper's style.
+pub fn table_header(title: &str, cols: &[&str]) {
+    println!("\n=== {title} ===");
+    println!("{}", cols.join(" | "));
+    println!("{}", cols.iter().map(|c| "-".repeat(c.len())).collect::<Vec<_>>().join("-|-"));
+}
+
+pub fn hms(secs: f64) -> String {
+    graphstorm::util::fmt_hms(secs)
+}

@@ -1,0 +1,103 @@
+//! Micro-benchmarks for the perf pass (EXPERIMENTS.md §Perf):
+//! neighbor sampling, batch assembly, partitioning, feature gather and
+//! the full AOT train-step latency.  Hand-rolled harness (criterion is
+//! unavailable offline): N warmup + M timed iterations, prints
+//! mean/min per op.
+
+#[path = "common.rs"]
+mod common;
+
+use graphstorm::dataloader::{assemble_block_inputs, NodeDataLoader, Split};
+use graphstorm::partition::{metis_like_partition, random_partition};
+use graphstorm::sampling::{BlockShape, EdgeExclusion, NeighborSampler};
+use graphstorm::trainer::NodeTrainer;
+use graphstorm::util::Rng;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    for _ in 0..3 {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let min = times.iter().cloned().fold(f64::MAX, f64::min);
+    println!("{name:<40} mean {:>9.3} ms   min {:>9.3} ms", mean * 1e3, min * 1e3);
+}
+
+fn main() {
+    println!("=== micro benches (perf pass) ===");
+    let rt = common::runtime();
+    let mut ds = common::mag_dataset(common::scale(4000), 2);
+    ds.ensure_text_features(64);
+    let spec = rt.manifest.get("rgcn_nc_train").unwrap().clone();
+    let shape = BlockShape::from_spec(&spec).unwrap();
+    let sampler = NeighborSampler::new(&ds.graph);
+    let train_ids = ds.node_labels().ids_in(Split::Train);
+    let mut rng = Rng::seed_from(1);
+    let seeds: Vec<(u32, u32)> = train_ids.iter().take(64).map(|&i| (0u32, i)).collect();
+
+    bench("neighbor_sample (64 seeds, 2 hops)", 50, || {
+        let b = sampler.sample_block(&seeds, &shape, &mut rng, &EdgeExclusion::new());
+        std::hint::black_box(b.nodes.len());
+    });
+
+    let block = sampler.sample_block(&seeds, &shape, &mut rng, &EdgeExclusion::new());
+    bench("assemble_block_inputs", 50, || {
+        let (b, _) = assemble_block_inputs(&ds, &block, &spec, 0).unwrap();
+        std::hint::black_box(b.len());
+    });
+
+    let loader = NodeDataLoader::new(&spec).unwrap();
+    let chunk: Vec<u32> = train_ids.iter().take(64).copied().collect();
+    bench("full NC batch build", 30, || {
+        let (b, _, _) = loader.batch(&ds, &chunk, &mut rng, 0).unwrap();
+        std::hint::black_box(b.len());
+    });
+
+    // AOT step latency (sample once, step many).
+    let mut st = graphstorm::runtime::TrainState::new(&rt, "rgcn_nc_train").unwrap();
+    let (batch, _, _) = loader.batch(&ds, &chunk, &mut rng, 0).unwrap();
+    bench("rgcn_nc_train step (pallas)", 20, || {
+        let o = st.step(&rt, &[3e-3], &batch).unwrap();
+        std::hint::black_box(o.loss);
+    });
+    let spec_fast = rt.manifest.get("rgcn_nc_train_fast").unwrap().clone();
+    let loader_fast = NodeDataLoader::new(&spec_fast).unwrap();
+    let mut st2 = graphstorm::runtime::TrainState::new(&rt, "rgcn_nc_train_fast").unwrap();
+    let (batch2, _, _) = loader_fast.batch(&ds, &chunk, &mut rng, 0).unwrap();
+    bench("rgcn_nc_train step (xla scatter)", 20, || {
+        let o = st2.step(&rt, &[3e-3], &batch2).unwrap();
+        std::hint::black_box(o.loss);
+    });
+
+    // End-to-end epoch throughput.
+    bench("NC epoch (train split)", 3, || {
+        let trainer = NodeTrainer::new("rgcn_nc_train", "rgcn_nc_logits");
+        let mut ds2 = common::mag_dataset(1000, 1);
+        ds2.ensure_text_features(64);
+        let (r, _) = trainer.fit(&rt, &mut ds2, &common::opts(1, 1)).unwrap();
+        std::hint::black_box(r.steps);
+    });
+
+    // Partitioners.
+    let (dsf, _, _) = common::sf_dataset(200_000, 1);
+    bench("random_partition (200K edges)", 10, || {
+        let b = random_partition(&dsf.graph, 8, 3);
+        std::hint::black_box(b.n_parts);
+    });
+    bench("metis_like_partition (200K edges)", 3, || {
+        let b = metis_like_partition(&dsf.graph, 8, 3);
+        std::hint::black_box(b.n_parts);
+    });
+
+    // Feature gather.
+    let ids: Vec<u32> = (0..2304u32).map(|i| i % ds.graph.num_nodes[3] as u32).collect();
+    bench("DistTensor gather 2304 x 64", 100, || {
+        let v = ds.engine.features[3].gather(0, &ids);
+        std::hint::black_box(v.len());
+    });
+}

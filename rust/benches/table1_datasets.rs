@@ -1,0 +1,37 @@
+//! Table 1 — statistics of the benchmark datasets.
+//!
+//! Paper: MAG (484.5M nodes / 7.52B edges, 4/4 types) and Amazon Review
+//! (286.5M / 1.05B, 3/4 types) with NC/LP train-set sizes and
+//! text-feature node counts.  Here: the synthetic MAG-like and AR-like
+//! datasets at the scaled-down sizes every other bench uses.
+
+#[path = "common.rs"]
+mod common;
+
+use graphstorm::datagen::amazon::ArVariant;
+use graphstorm::dataloader::Split;
+
+fn main() {
+    let mag = common::mag_dataset(common::scale(4000), 1);
+    let ar = common::ar_dataset(common::scale(3000), ArVariant::HeteroV2, 1);
+
+    common::table_header(
+        "Table 1: benchmark dataset statistics (scaled ~10^5x from the paper)",
+        &["Dataset", "#nodes", "#edges", "#node/edge types", "NC train", "LP train", "text nodes"],
+    );
+    for (name, ds) in [("MAG-like", &mag), ("Amazon-Review-like", &ar)] {
+        let s = ds.graph.stats();
+        let nc_train = ds.node_labels().ids_in(Split::Train).len();
+        let lp_train = ds.lp.as_ref().map(|l| l.edge_ids_in(Split::Train).len()).unwrap_or(0);
+        let text_nodes: usize = ds
+            .tokens
+            .iter()
+            .filter_map(|t| t.as_ref().map(|t| t.num_rows()))
+            .sum();
+        println!(
+            "{name} | {} | {} | {}/{} | {} | {} | {}",
+            s.num_nodes, s.num_edges, s.num_ntypes, s.num_etypes, nc_train, lp_train, text_nodes
+        );
+    }
+    println!("\n(paper: MAG 484,511,504 nodes / 7,520,311,838 edges; AR 286,462,374 / 1,053,940,310)");
+}

@@ -1,0 +1,176 @@
+//! Table 2 — overall performance and computation time of GraphStorm:
+//! pre-trained vs fine-tuned BERT+GNN on MAG/AR for NC and LP.
+//!
+//! Pipeline per row (as in the paper): data processing → LM stage
+//! (pre-trained = MLM only; fine-tuned = MLM + task fine-tune) →
+//! compute LM embeddings for all text nodes ("LM Time Cost") → train
+//! RGCN (epoch duration + final metric).  Expected *shape*: fine-tuned
+//! beats pre-trained on every task; LP fine-tuning is the most
+//! expensive stage (the paper's 2–3-day cell).
+
+#[path = "common.rs"]
+mod common;
+
+use graphstorm::datagen::amazon::ArVariant;
+use graphstorm::runtime::Tensor;
+use graphstorm::sampling::NegSampler;
+use graphstorm::trainer::lp::LpLoss;
+use graphstorm::trainer::{LmTrainer, LpTrainer, NodeTrainer};
+
+struct Row {
+    dataset: &'static str,
+    task: &'static str,
+    data_s: f64,
+    lm_s: f64,
+    epoch_s: f64,
+    metric: f64,
+    mode: &'static str,
+}
+
+fn lm_params(
+    rt: &graphstorm::runtime::Runtime,
+    ds: &graphstorm::dataloader::GsDataset,
+    finetune: Option<&str>,
+    epochs: usize,
+) -> (f64, Vec<(String, Tensor)>) {
+    let lm = LmTrainer::default();
+    let t0 = std::time::Instant::now();
+    let (_, st) = lm
+        .pretrain_mlm(rt, ds, ds.target_ntype, &common::opts(1, 1))
+        .unwrap();
+    let params = match finetune {
+        Some("nc") => {
+            let (_, st2) = lm
+                .finetune_nc(rt, ds, &st.params_host().unwrap(), &common::opts(epochs, 1))
+                .unwrap();
+            st2.params_host().unwrap()
+        }
+        Some("lp") => {
+            let (_, st2) = lm
+                .finetune_lp(rt, ds, &st.params_host().unwrap(), &common::opts(epochs, 1))
+                .unwrap();
+            st2.params_host().unwrap()
+        }
+        _ => st.params_host().unwrap(),
+    };
+    (t0.elapsed().as_secs_f64(), params)
+}
+
+fn main() {
+    let rt = common::runtime();
+    let lm = LmTrainer::default();
+    let mut rows: Vec<Row> = vec![];
+    let nc_epochs = if common::fast() { 2 } else { 3 };
+
+    for (dataset, is_mag) in [("MAG-like", true), ("AR-like", false)] {
+        // Data processing stage (generate + partition + engine build).
+        let t0 = std::time::Instant::now();
+        let _base = if is_mag {
+            common::mag_dataset(common::scale(2500), 2)
+        } else {
+            common::ar_dataset(common::scale(2000), ArVariant::HeteroV2, 2)
+        };
+        let data_s = t0.elapsed().as_secs_f64();
+
+        for mode in ["pre-trained", "fine-tuned"] {
+            // --- NC row ---
+            let mut ds = if is_mag {
+                common::mag_dataset(common::scale(2500), 2)
+            } else {
+                common::ar_dataset(common::scale(2000), ArVariant::HeteroV2, 2)
+            };
+            let (mut lm_s, params) = lm_params(
+                &rt,
+                &ds,
+                (mode == "fine-tuned").then_some("nc"),
+                if common::fast() { 1 } else { 2 },
+            );
+            lm_s += {
+                let t = std::time::Instant::now();
+                lm.embed_all(&rt, &mut ds, &params).unwrap();
+                t.elapsed().as_secs_f64()
+            };
+            let trainer = NodeTrainer::new("rgcn_nc_train", "rgcn_nc_logits");
+            let (rep, _) = trainer.fit(&rt, &mut ds, &common::opts(nc_epochs, 2)).unwrap();
+            rows.push(Row {
+                dataset,
+                task: "NC",
+                data_s,
+                lm_s,
+                epoch_s: rep.epoch_times.iter().sum::<f64>() / rep.epoch_times.len() as f64,
+                metric: rep.test_acc,
+                mode,
+            });
+
+            // --- LP row ---
+            let mut ds = if is_mag {
+                common::mag_dataset(common::scale(2500), 2)
+            } else {
+                common::ar_dataset(common::scale(2000), ArVariant::HeteroV2, 2)
+            };
+            let (mut lm_s, params) = lm_params(
+                &rt,
+                &ds,
+                (mode == "fine-tuned").then_some("lp"),
+                if common::fast() { 1 } else { 2 },
+            );
+            lm_s += {
+                let t = std::time::Instant::now();
+                lm.embed_all(&rt, &mut ds, &params).unwrap();
+                t.elapsed().as_secs_f64()
+            };
+            let mut trainer = LpTrainer::new(
+                "rgcn_lp_joint_k32_train",
+                "rgcn_lp_emb",
+                LpLoss::Contrastive,
+                NegSampler::Joint { k: 32 },
+            );
+            trainer.max_train_edges = Some(if common::fast() { 800 } else { 1600 });
+            let (rep, _) = trainer
+                .fit(&rt, &mut ds, &common::opts(if common::fast() { 2 } else { 3 }, 2))
+                .unwrap();
+            rows.push(Row {
+                dataset,
+                task: "LP",
+                data_s,
+                lm_s,
+                epoch_s: rep.epoch_times.iter().sum::<f64>() / rep.epoch_times.len() as f64,
+                metric: rep.test_mrr,
+                mode,
+            });
+        }
+    }
+
+    common::table_header(
+        "Table 2: overall performance + computation time (pre-trained vs fine-tuned LM + GNN)",
+        &["Dataset", "Task", "DataProc", "Mode", "LM time", "Epoch", "Metric"],
+    );
+    for r in &rows {
+        println!(
+            "{} | {} | {} | {} | {} | {} | {:.4}",
+            r.dataset,
+            r.task,
+            common::hms(r.data_s),
+            r.mode,
+            common::hms(r.lm_s),
+            common::hms(r.epoch_s),
+            r.metric
+        );
+    }
+    // Shape checks mirrored in EXPERIMENTS.md.
+    for dataset in ["MAG-like", "AR-like"] {
+        for task in ["NC", "LP"] {
+            let get = |mode: &str| {
+                rows.iter()
+                    .find(|r| r.dataset == dataset && r.task == task && r.mode == mode)
+                    .map(|r| r.metric)
+                    .unwrap_or(0.0)
+            };
+            let (p, f) = (get("pre-trained"), get("fine-tuned"));
+            println!(
+                "[shape] {dataset}/{task}: fine-tuned {f:.4} vs pre-trained {p:.4} -> {}",
+                if f >= p { "OK (fine-tuned >= pre-trained)" } else { "MISS" }
+            );
+        }
+    }
+}

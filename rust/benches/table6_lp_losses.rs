@@ -1,0 +1,104 @@
+//! Table 6 — link prediction on Amazon Review: loss functions ×
+//! negative-sampling methods.
+//!
+//! Paper rows: {contrastive, cross-entropy} × {in-batch, joint-1024,
+//! joint-32, joint-4, uniform-32, uniform-1024(OOM)}; columns
+//! epoch time / #epochs(to best) / MRR.  Expected shape:
+//!   * contrastive ≫ CE at every K;
+//!   * CE improves as K shrinks (joint-4 best CE row);
+//!   * uniform sampling has the largest epoch time & remote traffic;
+//!   * uniform with large K OOMs (the block's seed slots explode).
+//! K values scale 1024→256 (the artifact ladder), batch 1024→32.
+
+#[path = "common.rs"]
+mod common;
+
+use graphstorm::datagen::amazon::ArVariant;
+use graphstorm::sampling::NegSampler;
+use graphstorm::trainer::lp::{LpLoss, LpTrainer};
+
+fn artifact_for(s: &NegSampler) -> Option<String> {
+    match s {
+        NegSampler::Uniform { k: 32 } => Some("rgcn_lp_uniform_k32_train".into()),
+        NegSampler::Uniform { .. } => None, // OOM rows (paper: uniform-1024)
+        s => Some(format!("rgcn_lp_joint_k{}_train", s.k())),
+    }
+}
+
+fn main() {
+    let rt = common::runtime();
+    let n_items = common::scale(2500);
+    let epochs = if common::fast() { 2 } else { 3 };
+
+    let samplers = [
+        NegSampler::InBatch { k: 32 },
+        NegSampler::Joint { k: 256 },
+        NegSampler::Joint { k: 32 },
+        NegSampler::Joint { k: 4 },
+        NegSampler::Uniform { k: 32 },
+        NegSampler::Uniform { k: 256 },
+    ];
+
+    common::table_header(
+        "Table 6: LP on AR-like — loss x negative sampling (batch 32; paper batch 1024)",
+        &["Loss", "Neg-Sample", "epoch time", "#epochs", "MRR", "remote MB/epoch"],
+    );
+    let mut results: Vec<(String, String, f64, usize, f64, f64)> = vec![];
+    for loss in [LpLoss::Contrastive, LpLoss::CrossEntropy] {
+        for sampler in samplers {
+            let Some(artifact) = artifact_for(&sampler) else {
+                println!("{} | {} | - | OOM | - | -", loss.label(), sampler.label());
+                results.push((loss.label().into(), sampler.label(), f64::NAN, 0, f64::NAN, f64::NAN));
+                continue;
+            };
+            let mut ds = common::ar_dataset(n_items, ArVariant::HeteroV2, 2);
+            ds.ensure_text_features(64);
+            let mut tr = LpTrainer::new(&artifact, "rgcn_lp_emb", loss, sampler);
+            tr.max_train_edges = Some(if common::fast() { 480 } else { 960 });
+            ds.engine.counters.reset();
+            let (rep, _) = tr.fit(&rt, &mut ds, &common::opts(epochs, 2)).unwrap();
+            let traffic = ds.engine.counters.snapshot();
+            let epoch_s = rep.epoch_times.iter().sum::<f64>() / rep.epoch_times.len() as f64;
+            let mb = traffic.remote_bytes as f64 / 1e6 / epochs as f64;
+            println!(
+                "{} | {} | {:.2}s | {} | {:.4} | {:.1}",
+                loss.label(),
+                sampler.label(),
+                epoch_s,
+                rep.best_epoch,
+                rep.val_mrr,
+                mb
+            );
+            results.push((loss.label().into(), sampler.label(), epoch_s, rep.best_epoch, rep.val_mrr, mb));
+        }
+    }
+
+    // Shape checks.
+    let get = |l: &str, s: &str| results.iter().find(|r| r.0 == l && r.1 == s).cloned();
+    if let (Some(cj), Some(xj)) = (get("contrastive", "joint-32"), get("cross-entropy", "joint-32")) {
+        println!(
+            "\n[shape] contrastive > CE at joint-32: {} ({:.3} vs {:.3})",
+            if cj.4 > xj.4 { "OK" } else { "MISS" },
+            cj.4,
+            xj.4
+        );
+    }
+    if let (Some(x4), Some(x256)) = (get("cross-entropy", "joint-4"), get("cross-entropy", "joint-256")) {
+        println!(
+            "[shape] CE better with fewer negatives: {} (joint-4 {:.3} vs joint-256 {:.3})",
+            if x4.4 > x256.4 { "OK" } else { "MISS" },
+            x4.4,
+            x256.4
+        );
+    }
+    if let (Some(u), Some(j)) = (get("contrastive", "uniform-32"), get("contrastive", "joint-32")) {
+        println!(
+            "[shape] uniform slower + more traffic than joint: {} (epoch {:.2}s vs {:.2}s; {:.1}MB vs {:.1}MB)",
+            if u.2 > j.2 && u.5 > j.5 { "OK" } else { "MISS" },
+            u.2,
+            j.2,
+            u.5,
+            j.5
+        );
+    }
+}

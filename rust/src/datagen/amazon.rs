@@ -1,0 +1,336 @@
+//! Amazon-Review-like generator + the Table-4 schema ablation variants.
+//!
+//! Mechanisms planted (DESIGN.md §5):
+//! * brand (the NC label) shows weakly in item text and **strongly** in
+//!   review text → adding review nodes helps NC (Table 4 v1);
+//! * co-purchase (`also_buy`, the LP target) is generated *through*
+//!   customer baskets: a customer samples items from a preference
+//!   cluster and co-purchase edges connect basket-mates → adding
+//!   featureless customer nodes helps LP but not NC (Table 4 v2);
+//! * preference clusters are *not* brand-aligned, so customers carry no
+//!   brand signal.
+
+use std::collections::HashMap;
+
+use crate::datagen::{make_splits, RawData};
+use crate::dataloader::{NodeLabels, TokenStore};
+use crate::graph::{EdgeTypeDef, FeatureSource, HeteroGraph, Schema};
+use crate::util::Rng;
+
+#[derive(Debug, Clone)]
+pub struct ArConfig {
+    pub n_items: usize,
+    pub n_customers: usize,
+    pub reviews_per_item: usize,
+    pub baskets_per_customer: usize,
+    pub basket_size: usize,
+    pub n_clusters: usize,
+    pub num_classes: usize, // brands
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub item_text_signal: f64,
+    pub review_text_signal: f64,
+    pub seed: u64,
+}
+
+impl Default for ArConfig {
+    fn default() -> Self {
+        ArConfig {
+            n_items: 3000,
+            n_customers: 1200,
+            reviews_per_item: 3,
+            baskets_per_customer: 1,
+            basket_size: 3,
+            n_clusters: 150,
+            num_classes: 8,
+            vocab: 1024,
+            seq_len: 32,
+            item_text_signal: 0.25,
+            review_text_signal: 0.6,
+            seed: 23,
+        }
+    }
+}
+
+/// The three Table-4 schemas.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArVariant {
+    /// Items + also_buy only.
+    Homogeneous,
+    /// + review nodes and (item, receives, review).
+    HeteroV1,
+    /// + featureless customer nodes and (customer, writes, review).
+    HeteroV2,
+}
+
+pub const NT_ITEM: usize = 0;
+pub const NT_REVIEW: usize = 1;
+pub const NT_CUSTOMER: usize = 2;
+
+/// Intermediate raw material shared by all three schema variants.
+pub struct ArWorld {
+    pub cfg: ArConfig,
+    pub brands: Vec<usize>,
+    pub also_buy: (Vec<u32>, Vec<u32>),
+    /// review -> (item, customer)
+    pub reviews: Vec<(u32, u32)>,
+    pub item_tokens: Vec<i32>,
+    pub review_tokens: Vec<i32>,
+}
+
+pub fn generate_world(cfg: &ArConfig) -> ArWorld {
+    let mut rng = Rng::seed_from(cfg.seed);
+    let n = cfg.n_items;
+    let brands: Vec<usize> = (0..n).map(|_| rng.gen_range(cfg.num_classes)).collect();
+
+    // Preference clusters orthogonal to brands.
+    let clusters: Vec<usize> = (0..n).map(|_| rng.gen_range(cfg.n_clusters)).collect();
+    let mut cluster_pool: Vec<Vec<u32>> = vec![vec![]; cfg.n_clusters];
+    for (i, &c) in clusters.iter().enumerate() {
+        cluster_pool[c].push(i as u32);
+    }
+
+    // Customers shop in 1-2 clusters; baskets produce co-purchases.
+    let (mut absrc, mut abdst) = (vec![], vec![]);
+    let mut customer_clusters = Vec::with_capacity(cfg.n_customers);
+    for _ in 0..cfg.n_customers {
+        let c1 = rng.gen_range(cfg.n_clusters);
+        customer_clusters.push(c1);
+        for _ in 0..cfg.baskets_per_customer {
+            let pool = &cluster_pool[c1];
+            if pool.len() < 2 {
+                continue;
+            }
+            let basket: Vec<u32> = (0..cfg.basket_size)
+                .map(|_| pool[rng.gen_range(pool.len())])
+                .collect();
+            for i in 0..basket.len() {
+                for j in 0..basket.len() {
+                    if i != j && basket[i] != basket[j] {
+                        absrc.push(basket[i]);
+                        abdst.push(basket[j]);
+                    }
+                }
+            }
+        }
+    }
+
+    // Reviews: written by customers who shop the item's cluster, so
+    // co-purchased items share reviewers — the 2-hop LP signal that
+    // featureless customer nodes add in Table 4's v2 schema.
+    let mut customers_by_cluster: Vec<Vec<u32>> = vec![vec![]; cfg.n_clusters];
+    for (c, &cl) in customer_clusters.iter().enumerate() {
+        customers_by_cluster[cl].push(c as u32);
+    }
+    let mut reviews = vec![];
+    for i in 0..n {
+        let pool = &customers_by_cluster[clusters[i]];
+        for _ in 0..cfg.reviews_per_item {
+            let cust = if !pool.is_empty() && rng.gen_f64() < 0.9 {
+                pool[rng.gen_range(pool.len())]
+            } else {
+                rng.gen_range(cfg.n_customers) as u32
+            };
+            reviews.push((i as u32, cust));
+        }
+    }
+
+    // Text vocabulary layout: brand bands live in [2, vocab/2) (the NC
+    // signal), cluster bands in [vocab/2, vocab) (the LP signal carried
+    // by reviews — "product line" words).  Item text is weakly branded;
+    // review text is strongly branded AND cluster-flavoured, which is
+    // why +review helps both tasks in Table 4.
+    let half = (cfg.vocab - 2) / 2;
+    let bband = half / cfg.num_classes;
+    let cband = (half / cfg.n_clusters).max(1);
+    let brand_tok = |class: usize, rng: &mut Rng| (2 + class * bband + rng.gen_range(bband)) as i32;
+    let cluster_tok = |cl: usize, rng: &mut Rng| {
+        (2 + half + (cl * cband + rng.gen_range(cband)) % half) as i32
+    };
+    let noise_tok = |rng: &mut Rng| (2 + rng.gen_range(cfg.vocab - 2)) as i32;
+    let mut item_tokens = Vec::with_capacity(n * cfg.seq_len);
+    for i in 0..n {
+        for _ in 0..cfg.seq_len {
+            let u = rng.gen_f64();
+            item_tokens.push(if u < cfg.item_text_signal {
+                brand_tok(brands[i], &mut rng)
+            } else {
+                noise_tok(&mut rng)
+            });
+        }
+    }
+    let mut review_tokens = Vec::with_capacity(reviews.len() * cfg.seq_len);
+    for &(item, _) in &reviews {
+        for _ in 0..cfg.seq_len {
+            let u = rng.gen_f64();
+            review_tokens.push(if u < cfg.review_text_signal {
+                brand_tok(brands[item as usize], &mut rng)
+            } else if u < cfg.review_text_signal + 0.25 {
+                cluster_tok(clusters[item as usize], &mut rng)
+            } else {
+                noise_tok(&mut rng)
+            });
+        }
+    }
+
+    ArWorld { cfg: cfg.clone(), brands, also_buy: (absrc, abdst), reviews, item_tokens, review_tokens }
+}
+
+/// Render one schema variant of the world as a dataset (Table 4 rows).
+pub fn build_variant(world: &ArWorld, variant: ArVariant) -> RawData {
+    let cfg = &world.cfg;
+    let mut rng = Rng::seed_from(cfg.seed ^ 0xA5);
+    let use_reviews = variant != ArVariant::Homogeneous;
+    let use_customers = variant == ArVariant::HeteroV2;
+
+    let mut ntypes = vec!["item".to_string()];
+    let mut sources = vec![FeatureSource::Text];
+    let mut etypes = vec![EdgeTypeDef { name: "also_buy".into(), src_ntype: NT_ITEM, dst_ntype: NT_ITEM }];
+    if use_reviews {
+        ntypes.push("review".into());
+        sources.push(FeatureSource::Text);
+        etypes.push(EdgeTypeDef { name: "receives".into(), src_ntype: NT_ITEM, dst_ntype: NT_REVIEW });
+    }
+    if use_customers {
+        ntypes.push("customer".into());
+        sources.push(FeatureSource::Learnable);
+        etypes.push(EdgeTypeDef {
+            name: "writes".into(),
+            src_ntype: NT_CUSTOMER,
+            dst_ntype: NT_REVIEW,
+        });
+    }
+    let mut schema = Schema::new(ntypes, etypes).with_sources(sources);
+    let rev_pairs = schema.add_reverse_etypes();
+    let rev_map: HashMap<usize, usize> = rev_pairs.into_iter().collect();
+
+    let mut num_nodes = vec![cfg.n_items];
+    if use_reviews {
+        num_nodes.push(world.reviews.len());
+    }
+    if use_customers {
+        num_nodes.push(cfg.n_customers);
+    }
+    let mut g = HeteroGraph::new(schema, num_nodes);
+    let ab = g.schema.etype_id("also_buy").unwrap();
+    g.set_edges(ab, world.also_buy.0.clone(), world.also_buy.1.clone());
+    if use_reviews {
+        let rc = g.schema.etype_id("receives").unwrap();
+        let src: Vec<u32> = world.reviews.iter().map(|&(i, _)| i).collect();
+        let dst: Vec<u32> = (0..world.reviews.len() as u32).collect();
+        g.set_edges(rc, src, dst);
+    }
+    if use_customers {
+        let wr = g.schema.etype_id("writes").unwrap();
+        let src: Vec<u32> = world.reviews.iter().map(|&(_, c)| c).collect();
+        let dst: Vec<u32> = (0..world.reviews.len() as u32).collect();
+        g.set_edges(wr, src, dst);
+    }
+    // Reverses.
+    let fwd_names: Vec<String> = g
+        .schema
+        .etypes
+        .iter()
+        .map(|e| e.name.clone())
+        .filter(|n| !n.starts_with("rev-"))
+        .collect();
+    for name in fwd_names {
+        let fwd = g.schema.etype_id(&name).unwrap();
+        if let Some(rid) = g.schema.etype_id(&format!("rev-{name}")) {
+            let (s, d) = (g.edges[fwd].dst.clone(), g.edges[fwd].src.clone());
+            g.set_edges(rid, s, d);
+        }
+    }
+
+    let labels = NodeLabels {
+        labels: world.brands.iter().map(|&b| b as i32).collect(),
+        split: make_splits(cfg.n_items, &mut rng, 0.6, 0.2),
+    };
+    let mut tokens: Vec<Option<TokenStore>> = vec![Some(TokenStore {
+        seq_len: cfg.seq_len,
+        tokens: world.item_tokens.clone(),
+    })];
+    let mut features = vec![(0, vec![])];
+    let mut labels_v = vec![Some(labels)];
+    if use_reviews {
+        tokens.push(Some(TokenStore { seq_len: cfg.seq_len, tokens: world.review_tokens.clone() }));
+        features.push((0, vec![]));
+        labels_v.push(None);
+    }
+    if use_customers {
+        tokens.push(None);
+        features.push((0, vec![]));
+        labels_v.push(None);
+    }
+
+    RawData {
+        graph: g,
+        features,
+        labels: labels_v,
+        tokens,
+        target_ntype: NT_ITEM,
+        num_classes: cfg.num_classes,
+        lp_etype: Some(ab),
+        rev_map,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variants_nest() {
+        let world = generate_world(&ArConfig { n_items: 400, n_customers: 150, ..Default::default() });
+        let homo = build_variant(&world, ArVariant::Homogeneous);
+        let v1 = build_variant(&world, ArVariant::HeteroV1);
+        let v2 = build_variant(&world, ArVariant::HeteroV2);
+        assert_eq!(homo.graph.schema.ntypes.len(), 1);
+        assert_eq!(v1.graph.schema.ntypes.len(), 2);
+        assert_eq!(v2.graph.schema.ntypes.len(), 3);
+        // also_buy identical across variants.
+        let ab = |r: &RawData| r.graph.num_edges(r.graph.schema.etype_id("also_buy").unwrap());
+        assert_eq!(ab(&homo), ab(&v1));
+        assert_eq!(ab(&v1), ab(&v2));
+        // Customers are featureless in v2.
+        assert_eq!(v2.graph.schema.feature_sources[NT_CUSTOMER], FeatureSource::Learnable);
+    }
+
+    #[test]
+    fn copurchases_share_cluster_not_brand() {
+        let world = generate_world(&ArConfig { n_items: 1000, ..Default::default() });
+        let (src, dst) = &world.also_buy;
+        let same_brand = src
+            .iter()
+            .zip(dst)
+            .filter(|(&a, &b)| world.brands[a as usize] == world.brands[b as usize])
+            .count() as f64
+            / src.len().max(1) as f64;
+        // Brands are orthogonal to baskets → near-chance same-brand rate.
+        assert!(same_brand < 0.3, "brand leak into co-purchase: {same_brand}");
+    }
+
+    #[test]
+    fn review_text_is_brand_informative() {
+        let world = generate_world(&ArConfig { n_items: 500, ..Default::default() });
+        let cfg = &world.cfg;
+        // Brand bands occupy the lower half of the vocabulary (see the
+        // generate_world layout comment).
+        let half = (cfg.vocab - 2) / 2;
+        let bband = half / cfg.num_classes;
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        for (r, &(item, _)) in world.reviews.iter().enumerate() {
+            let brand = world.brands[item as usize];
+            for &t in &world.review_tokens[r * cfg.seq_len..(r + 1) * cfg.seq_len] {
+                let t = t as usize - 2;
+                if t < half && t / bband == brand {
+                    hits += 1;
+                }
+                total += 1;
+            }
+        }
+        let frac = hits as f64 / total as f64;
+        assert!(frac > 0.5, "review text too weak: {frac}");
+    }
+}

@@ -1,0 +1,145 @@
+//! Synthetic dataset generators (the proprietary-data substitute,
+//! DESIGN.md §1/§5).  Each generator plants the causal mechanism the
+//! paper's corresponding experiment measures:
+//!
+//! * `mag`    — MAG-like citation graph: venue labels recoverable from
+//!   text+structure but under-determined by text alone (Table 2 / Fig 5);
+//!   featureless authors exercise the embedding table.
+//! * `amazon` — Amazon-Review-like: brand from item+review text,
+//!   co-purchase generated *through* customer baskets (Table 4 / 6).
+//! * `scale_free` — Chung-Lu power-law homogeneous graphs (Table 3).
+
+pub mod amazon;
+pub mod mag;
+pub mod scale_free;
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::dataloader::{GsDataset, LpTask, NodeLabels, Split, TokenStore};
+use crate::dist::{DistEngine, DistTensor};
+use crate::graph::HeteroGraph;
+use crate::partition::PartitionBook;
+use crate::util::Rng;
+
+/// Raw generator output, engine-agnostic.
+pub struct RawData {
+    pub graph: HeteroGraph,
+    /// Per-ntype dense features (empty if none), row-major [n, dim].
+    pub features: Vec<(usize, Vec<f32>)>,
+    pub labels: Vec<Option<NodeLabels>>,
+    pub tokens: Vec<Option<TokenStore>>,
+    pub target_ntype: usize,
+    pub num_classes: usize,
+    pub lp_etype: Option<usize>,
+    pub rev_map: HashMap<usize, usize>,
+}
+
+/// Split assignment: deterministic 80/10/10 by hash.
+pub fn make_splits(n: usize, rng: &mut Rng, train: f64, val: f64) -> Vec<Split> {
+    (0..n)
+        .map(|_| {
+            let u = rng.gen_f64();
+            if u < train {
+                Split::Train
+            } else if u < train + val {
+                Split::Val
+            } else {
+                Split::Test
+            }
+        })
+        .collect()
+}
+
+/// Bind raw data to a partition book, producing the runnable dataset.
+pub fn build_dataset(raw: RawData, book: PartitionBook, lemb_dim: usize, seed: u64) -> GsDataset {
+    let book = Arc::new(book);
+    let mut engine = DistEngine::new(book.clone(), &raw.graph.num_nodes);
+    for (nt, (dim, data)) in raw.features.into_iter().enumerate() {
+        if dim > 0 {
+            engine.features[nt] = DistTensor::from_data(
+                nt,
+                dim,
+                data,
+                book.clone(),
+                engine.counters.clone(),
+            );
+        }
+    }
+    for (nt, src) in raw.graph.schema.feature_sources.iter().enumerate() {
+        if *src == crate::graph::FeatureSource::Learnable {
+            engine.add_embed(nt, raw.graph.num_nodes[nt], lemb_dim, seed ^ nt as u64);
+        }
+    }
+    let lp = raw.lp_etype.map(|et| {
+        let n = raw.graph.num_edges(et);
+        let mut rng = Rng::seed_from(seed ^ 0x1b);
+        LpTask { etype: et, split: make_splits(n, &mut rng, 0.9, 0.05) }
+    });
+    GsDataset {
+        graph: raw.graph,
+        engine,
+        labels: raw.labels,
+        tokens: raw.tokens,
+        target_ntype: raw.target_ntype,
+        num_classes: raw.num_classes,
+        lp,
+        rev_map: raw.rev_map,
+    }
+}
+
+/// Class-conditional token text: `seq_len` tokens, each drawn from the
+/// owner class's vocabulary band w.p. `signal`, else uniform noise.
+/// Token 0 = PAD, 1 = MASK; class bands start at 2.
+pub fn class_tokens(
+    class: usize,
+    num_classes: usize,
+    vocab: usize,
+    seq_len: usize,
+    signal: f64,
+    rng: &mut Rng,
+) -> Vec<i32> {
+    let band = (vocab - 2) / num_classes;
+    (0..seq_len)
+        .map(|_| {
+            if rng.gen_f64() < signal {
+                (2 + class * band + rng.gen_range(band)) as i32
+            } else {
+                (2 + rng.gen_range(vocab - 2)) as i32
+            }
+        })
+        .collect()
+}
+
+/// Class-correlated dense features: one-hot-ish bump plus noise.
+pub fn class_features(class: usize, dim: usize, strength: f32, rng: &mut Rng) -> Vec<f32> {
+    let mut f: Vec<f32> = (0..dim).map(|_| rng.gen_normal() * 0.3).collect();
+    f[class % dim] += strength;
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splits_cover_and_ratio() {
+        let mut rng = Rng::seed_from(0);
+        let s = make_splits(10_000, &mut rng, 0.8, 0.1);
+        let train = s.iter().filter(|&&x| x == Split::Train).count();
+        let val = s.iter().filter(|&&x| x == Split::Val).count();
+        assert!((train as f64 / 10_000.0 - 0.8).abs() < 0.02);
+        assert!((val as f64 / 10_000.0 - 0.1).abs() < 0.01);
+    }
+
+    #[test]
+    fn class_tokens_land_in_band() {
+        let mut rng = Rng::seed_from(1);
+        let toks = class_tokens(3, 16, 1024, 32, 1.0, &mut rng);
+        let band = (1024 - 2) / 16;
+        for &t in &toks {
+            let t = t as usize;
+            assert!(t >= 2 + 3 * band && t < 2 + 4 * band);
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! Chung-Lu style power-law homogeneous graphs — the Table 3 workload
+//! (paper: synthetic graphs of 1B/10B/100B edges, degree ≈ 100,
+//! 64-dim features; here scaled by 10⁴ per DESIGN.md §1).
+
+use std::collections::HashMap;
+
+use crate::datagen::{make_splits, RawData};
+use crate::dataloader::NodeLabels;
+use crate::graph::{EdgeTypeDef, FeatureSource, HeteroGraph, Schema};
+use crate::util::Rng;
+
+#[derive(Debug, Clone)]
+pub struct ScaleFreeConfig {
+    pub n_edges: usize,
+    pub avg_degree: usize,
+    pub feat_dim: usize,
+    pub num_classes: usize,
+    /// Zipf exponent for endpoint popularity.
+    pub alpha: f64,
+    pub train_frac: f64,
+    pub seed: u64,
+}
+
+impl Default for ScaleFreeConfig {
+    fn default() -> Self {
+        ScaleFreeConfig {
+            n_edges: 100_000,
+            avg_degree: 20,
+            feat_dim: 64,
+            num_classes: 16,
+            alpha: 0.8,
+            train_frac: 0.8,
+            seed: 31,
+        }
+    }
+}
+
+/// Zipf-ish endpoint sampler via inverse-transform on u^(1/(1-alpha)).
+#[inline]
+fn zipf(n: usize, alpha: f64, rng: &mut Rng) -> u32 {
+    let u = rng.gen_f64().max(1e-12);
+    let x = u.powf(1.0 / (1.0 - alpha)); // heavy head at small x... invert
+    let id = ((1.0 - x.min(1.0)) * n as f64) as usize;
+    (n - 1 - id.min(n - 1)) as u32
+}
+
+pub fn generate(cfg: &ScaleFreeConfig) -> RawData {
+    let mut rng = Rng::seed_from(cfg.seed);
+    let n_nodes = (cfg.n_edges / cfg.avg_degree).max(2);
+    let mut schema = Schema::new(
+        vec!["node".into()],
+        vec![EdgeTypeDef { name: "link".into(), src_ntype: 0, dst_ntype: 0 }],
+    )
+    .with_sources(vec![FeatureSource::Dense]);
+    let rev_pairs = schema.add_reverse_etypes();
+    let rev_map: HashMap<usize, usize> = rev_pairs.into_iter().collect();
+
+    let mut src = Vec::with_capacity(cfg.n_edges);
+    let mut dst = Vec::with_capacity(cfg.n_edges);
+    for _ in 0..cfg.n_edges {
+        src.push(zipf(n_nodes, cfg.alpha, &mut rng));
+        dst.push(zipf(n_nodes, cfg.alpha, &mut rng));
+    }
+    let mut g = HeteroGraph::new(schema, vec![n_nodes]);
+    g.set_edges(0, src.clone(), dst.clone());
+    g.set_edges(1, dst, src);
+
+    // Labels carried by a feature bump so GCN training converges.
+    let mut labels = Vec::with_capacity(n_nodes);
+    let mut feat = Vec::with_capacity(n_nodes * cfg.feat_dim);
+    for _ in 0..n_nodes {
+        let c = rng.gen_range(cfg.num_classes);
+        labels.push(c as i32);
+        feat.extend(crate::datagen::class_features(c, cfg.feat_dim, 2.0, &mut rng));
+    }
+    let mut split_rng = rng.fork(0x7e);
+    let split = make_splits(n_nodes, &mut split_rng, cfg.train_frac, 0.1);
+
+    RawData {
+        graph: g,
+        features: vec![(cfg.feat_dim, feat)],
+        labels: vec![Some(NodeLabels { labels, split })],
+        tokens: vec![None],
+        target_ntype: 0,
+        num_classes: cfg.num_classes,
+        lp_etype: Some(0),
+        rev_map,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edge_count_and_degree_skew() {
+        let cfg = ScaleFreeConfig { n_edges: 50_000, avg_degree: 20, ..Default::default() };
+        let raw = generate(&cfg);
+        assert_eq!(raw.graph.num_edges(0), 50_000);
+        let n = raw.graph.num_nodes[0];
+        assert_eq!(n, 2500);
+        // Power law: the top 1% of nodes should hold well above 1% of
+        // the edges.
+        let mut degs: Vec<usize> = (0..n).map(|i| raw.graph.edges[0].out_csr.degree(i)).collect();
+        degs.sort_unstable_by(|a, b| b.cmp(a));
+        let top: usize = degs[..n / 100].iter().sum();
+        assert!(
+            top as f64 > 0.05 * 50_000.0,
+            "degree distribution not skewed: top1%={top}"
+        );
+    }
+
+    #[test]
+    fn scales_linearly_in_memory() {
+        for edges in [10_000, 40_000] {
+            let raw = generate(&ScaleFreeConfig { n_edges: edges, ..Default::default() });
+            assert_eq!(raw.graph.num_edges(0), edges);
+        }
+    }
+}

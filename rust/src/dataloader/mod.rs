@@ -1,0 +1,630 @@
+//! Datasets and task data loaders.
+//!
+//! `GsDataset` bundles everything a task needs: the graph, the
+//! distributed engine (features / text embeddings / learnable tables),
+//! labels, token stores and split masks.  The loaders turn sampled
+//! blocks into the exact manifest-ordered tensor lists the AOT
+//! artifacts consume:
+//!
+//! * `NodeDataLoader` — node classification batches,
+//! * `LinkPredictionDataLoader` — LP batches with negative sampling
+//!   (a separate loader from edge-feature prediction, as in the paper
+//!   §3: LP must construct negatives, so it gets its own path).
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+use crate::dist::{DistEngine, DistTensor};
+use crate::graph::{FeatureSource, HeteroGraph};
+use crate::runtime::{ArtifactSpec, Tensor};
+use crate::sampling::{
+    negative::sample_negatives, Block, BlockShape, EdgeExclusion, NegSampler, NeighborSampler,
+};
+use crate::util::Rng;
+
+/// Train/val/test membership.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Val,
+    Test,
+    None,
+}
+
+/// Node-classification labels over one node type.
+#[derive(Debug, Clone)]
+pub struct NodeLabels {
+    pub labels: Vec<i32>,
+    pub split: Vec<Split>,
+}
+
+impl NodeLabels {
+    pub fn ids_in(&self, s: Split) -> Vec<u32> {
+        self.split
+            .iter()
+            .enumerate()
+            .filter(|(_, &x)| x == s)
+            .map(|(i, _)| i as u32)
+            .collect()
+    }
+}
+
+/// Token sequences over one node type ([n, seq_len], PAD=0).
+#[derive(Debug, Clone)]
+pub struct TokenStore {
+    pub seq_len: usize,
+    pub tokens: Vec<i32>,
+}
+
+impl TokenStore {
+    pub fn row(&self, id: u32) -> &[i32] {
+        &self.tokens[id as usize * self.seq_len..(id as usize + 1) * self.seq_len]
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.tokens.len() / self.seq_len
+    }
+}
+
+/// Link-prediction task: target edge type + per-edge split.
+#[derive(Debug, Clone)]
+pub struct LpTask {
+    pub etype: usize,
+    pub split: Vec<Split>,
+}
+
+impl LpTask {
+    pub fn edge_ids_in(&self, s: Split) -> Vec<u32> {
+        self.split
+            .iter()
+            .enumerate()
+            .filter(|(_, &x)| x == s)
+            .map(|(i, _)| i as u32)
+            .collect()
+    }
+}
+
+/// Everything one application dataset carries.
+pub struct GsDataset {
+    pub graph: HeteroGraph,
+    pub engine: DistEngine,
+    /// Per-ntype classification labels (at most one labelled type used).
+    pub labels: Vec<Option<NodeLabels>>,
+    /// Per-ntype token stores for text node types.
+    pub tokens: Vec<Option<TokenStore>>,
+    pub target_ntype: usize,
+    pub num_classes: usize,
+    pub lp: Option<LpTask>,
+    /// etype -> reverse etype (for target-edge exclusion).
+    pub rev_map: HashMap<usize, usize>,
+}
+
+impl GsDataset {
+    pub fn node_labels(&self) -> &NodeLabels {
+        self.labels[self.target_ntype].as_ref().expect("dataset has no labels")
+    }
+
+    /// Paper §3.3.2, option 1: construct features for a featureless
+    /// node type from its neighbors that *have* features
+    /// (`F'_v = f(F_u, u ∈ N(v))`, eq. 1, with f = mean).  The node
+    /// type is switched to `Dense` afterwards, so the input encoder
+    /// consumes the constructed features instead of the embedding
+    /// table — the alternative to learnable embeddings the paper
+    /// offers for massive featureless types.
+    pub fn construct_neighbor_features(&mut self, ntype: usize, dim: usize) {
+        let n = self.graph.num_nodes[ntype];
+        let mut feat = vec![0.0f32; n * dim];
+        let mut count = vec![0.0f32; n];
+        for et in self.graph.etypes_into(ntype) {
+            let src_nt = self.graph.schema.etypes[et].src_ntype;
+            // Source rows come from dense features or text embeddings.
+            let (rows, rdim): (&DistTensor, usize) =
+                match self.graph.schema.feature_sources[src_nt] {
+                    FeatureSource::Dense => {
+                        let t = &self.engine.features[src_nt];
+                        (t, t.dim)
+                    }
+                    FeatureSource::Text => {
+                        let t = &self.engine.text_emb[src_nt];
+                        (t, t.dim)
+                    }
+                    FeatureSource::Learnable => continue,
+                };
+            if rdim == 0 {
+                continue;
+            }
+            let d = rdim.min(dim);
+            let es = &self.graph.edges[et];
+            for (&s, &dst) in es.src.iter().zip(&es.dst) {
+                let row = rows.row(s);
+                let base = dst as usize * dim;
+                for j in 0..d {
+                    feat[base + j] += row[j];
+                }
+                count[dst as usize] += 1.0;
+            }
+        }
+        for i in 0..n {
+            if count[i] > 0.0 {
+                for j in 0..dim {
+                    feat[i * dim + j] /= count[i];
+                }
+            }
+        }
+        self.engine.features[ntype] = DistTensor::from_data(
+            ntype,
+            dim,
+            feat,
+            self.engine.book.clone(),
+            self.engine.counters.clone(),
+        );
+        self.graph.schema.feature_sources[ntype] = FeatureSource::Dense;
+        self.engine.embeds[ntype] = None;
+    }
+
+    /// Populate text embeddings for any text node type that does not
+    /// have LM embeddings yet, using a deterministic hashed
+    /// bag-of-tokens projection.  This is the zero-cost stand-in used
+    /// when no LM stage runs (the LM trainer's `embed_all` overwrites
+    /// these with real encoder outputs).
+    pub fn ensure_text_features(&mut self, dim: usize) {
+        for nt in 0..self.graph.schema.ntypes.len() {
+            if self.graph.schema.feature_sources[nt] != FeatureSource::Text {
+                continue;
+            }
+            if self.engine.text_emb[nt].dim != 0 {
+                continue;
+            }
+            let Some(store) = &self.tokens[nt] else { continue };
+            let n = store.num_rows();
+            let mut emb = vec![0.0f32; n * dim];
+            for i in 0..n {
+                let row = store.row(i as u32);
+                let mut cnt = 0f32;
+                for &t in row {
+                    if t == 0 {
+                        continue;
+                    }
+                    // Two hashed buckets per token with ± sign: a cheap
+                    // random projection of the bag-of-tokens vector.
+                    let mut h = t as u64;
+                    let h1 = crate::util::splitmix64(&mut h);
+                    let h2 = crate::util::splitmix64(&mut h);
+                    emb[i * dim + (h1 as usize % dim)] += if h1 >> 63 == 0 { 1.0 } else { -1.0 };
+                    emb[i * dim + (h2 as usize % dim)] += if h2 >> 63 == 0 { 1.0 } else { -1.0 };
+                    cnt += 1.0;
+                }
+                if cnt > 0.0 {
+                    for j in 0..dim {
+                        emb[i * dim + j] /= cnt.sqrt();
+                    }
+                }
+            }
+            self.engine.text_emb[nt] = DistTensor::from_data(
+                nt,
+                dim,
+                emb,
+                self.engine.book.clone(),
+                self.engine.counters.clone(),
+            );
+        }
+    }
+}
+
+/// Which learnable-embedding rows a batch gathered: (slot, ntype, id).
+pub type LembTouch = Vec<(usize, usize, u32)>;
+
+/// Helper: BlockShape::from_spec with a useful error.
+struct BlockSpecErr;
+
+impl BlockSpecErr {
+    fn from_spec(spec: &ArtifactSpec) -> Result<BlockShape> {
+        BlockShape::from_spec(spec)
+            .ok_or_else(|| anyhow::anyhow!("artifact '{}' has no block config", spec.file))
+    }
+}
+
+/// Assemble the shared GNN block inputs (feat/text/lemb/src_sel/ntype +
+/// per-layer edge arrays), in manifest order.
+pub fn assemble_block_inputs(
+    ds: &GsDataset,
+    block: &Block,
+    spec: &ArtifactSpec,
+    worker: u32,
+) -> Result<(Vec<Tensor>, LembTouch)> {
+    let n0 = block.shape.ns[0];
+    let fdim = spec.batch_spec("feat").map(|t| t.shape[1]).unwrap_or(0);
+    let tdim = spec.batch_spec("text").map(|t| t.shape[1]).unwrap_or(0);
+    let ldim = spec.batch_spec("lemb").map(|t| t.shape[1]).unwrap_or(0);
+
+    let mut feat = vec![0.0f32; n0 * fdim];
+    let mut text = vec![0.0f32; n0 * tdim];
+    let mut lemb = vec![0.0f32; n0 * ldim];
+    let mut src_sel = vec![0.0f32; n0 * 3];
+    let mut ntype = vec![0i32; n0];
+    let mut touch: LembTouch = Vec::new();
+
+    // Group slots per node type for batched gathers.
+    let mut per_nt: Vec<(Vec<usize>, Vec<u32>)> =
+        vec![(vec![], vec![]); ds.graph.schema.ntypes.len()];
+    for (i, &(nt, id)) in block.nodes.iter().enumerate() {
+        if block.nmask[i] == 0.0 {
+            continue;
+        }
+        ntype[i] = nt as i32;
+        per_nt[nt as usize].0.push(i);
+        per_nt[nt as usize].1.push(id);
+    }
+
+    for (nt, (slots, ids)) in per_nt.iter().enumerate() {
+        if slots.is_empty() {
+            continue;
+        }
+        match ds.graph.schema.feature_sources[nt] {
+            FeatureSource::Dense => {
+                let t = &ds.engine.features[nt];
+                if t.dim == 0 {
+                    bail!("ntype {nt} marked Dense but has no features");
+                }
+                let rows = t.gather(worker, ids);
+                let d = t.dim.min(fdim);
+                for (j, &slot) in slots.iter().enumerate() {
+                    feat[slot * fdim..slot * fdim + d].copy_from_slice(&rows[j * t.dim..j * t.dim + d]);
+                    src_sel[slot * 3] = 1.0;
+                }
+            }
+            FeatureSource::Text => {
+                let t = &ds.engine.text_emb[nt];
+                if t.dim == 0 {
+                    // Text embeddings not computed yet (LM stage pending):
+                    // treat as zero-input but still select the text slot so
+                    // the model shape stays consistent.
+                    for &slot in slots {
+                        src_sel[slot * 3 + 1] = 1.0;
+                    }
+                } else {
+                    let rows = t.gather(worker, ids);
+                    let d = t.dim.min(tdim);
+                    for (j, &slot) in slots.iter().enumerate() {
+                        text[slot * tdim..slot * tdim + d]
+                            .copy_from_slice(&rows[j * t.dim..j * t.dim + d]);
+                        src_sel[slot * 3 + 1] = 1.0;
+                    }
+                }
+            }
+            FeatureSource::Learnable => {
+                let e = ds.engine.embeds[nt]
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("ntype {nt} has no embedding table"))?;
+                let mut rows = vec![0.0f32; ids.len() * e.dim];
+                e.gather_into(worker, ids, &mut rows);
+                let d = e.dim.min(ldim);
+                for (j, &slot) in slots.iter().enumerate() {
+                    lemb[slot * ldim..slot * ldim + d]
+                        .copy_from_slice(&rows[j * e.dim..j * e.dim + d]);
+                    src_sel[slot * 3 + 2] = 1.0;
+                    touch.push((slot, nt, ids[j]));
+                }
+            }
+        }
+    }
+
+    let mut out = vec![
+        Tensor::F32 { shape: vec![n0, fdim], data: feat },
+        Tensor::F32 { shape: vec![n0, tdim], data: text },
+        Tensor::F32 { shape: vec![n0, ldim], data: lemb },
+        Tensor::F32 { shape: vec![n0, 3], data: src_sel },
+        Tensor::I32 { shape: vec![n0], data: ntype },
+    ];
+    for (l, le) in block.layers.iter().enumerate() {
+        let e = block.shape.es[l];
+        out.push(Tensor::I32 { shape: vec![e], data: le.src.clone() });
+        out.push(Tensor::I32 { shape: vec![e], data: le.dst.clone() });
+        out.push(Tensor::I32 { shape: vec![e], data: le.etype.clone() });
+        out.push(Tensor::F32 { shape: vec![e], data: le.emask.clone() });
+    }
+    Ok((out, touch))
+}
+
+/// Apply the train step's `grad_lemb` back onto the embedding tables.
+pub fn apply_lemb_grads(
+    engine: &mut DistEngine,
+    touch: &LembTouch,
+    grad: &[f32],
+    ldim: usize,
+    lr: f32,
+) {
+    if touch.is_empty() {
+        return;
+    }
+    // Group by ntype, then one sparse-Adam call per table.
+    let mut per_nt: HashMap<usize, (Vec<u32>, Vec<f32>)> = HashMap::new();
+    for &(slot, nt, id) in touch {
+        let entry = per_nt.entry(nt).or_default();
+        entry.0.push(id);
+        entry.1.extend_from_slice(&grad[slot * ldim..(slot + 1) * ldim]);
+    }
+    for (nt, (ids, grads)) in per_nt {
+        if let Some(e) = engine.embeds[nt].as_mut() {
+            // Table dim == ldim by construction (engine.add_embed uses the
+            // manifest's lemb dim).
+            e.sparse_adam(&ids, &grads, lr);
+        }
+    }
+}
+
+/// Node-classification loader: seeds → block → manifest-ordered batch.
+pub struct NodeDataLoader {
+    pub spec: ArtifactSpec,
+    pub shape: BlockShape,
+}
+
+impl NodeDataLoader {
+    pub fn new(spec: &ArtifactSpec) -> Result<NodeDataLoader> {
+        let shape = BlockSpecErr::from_spec(spec)?;
+        Ok(NodeDataLoader { spec: spec.clone(), shape })
+    }
+
+    /// Max real seeds per batch (the artifact's padded target count).
+    pub fn batch_size(&self) -> usize {
+        self.spec.cfg_usize("batch").unwrap_or(self.shape.num_targets())
+    }
+
+    /// Build one batch for `seeds` (node ids of the target ntype).
+    pub fn batch(
+        &self,
+        ds: &GsDataset,
+        seeds: &[u32],
+        rng: &mut Rng,
+        worker: u32,
+    ) -> Result<(Vec<Tensor>, LembTouch, Block)> {
+        let nt = ds.target_ntype as u32;
+        let seed_pairs: Vec<(u32, u32)> = seeds.iter().map(|&s| (nt, s)).collect();
+        let sampler = NeighborSampler::new(&ds.graph);
+        let block = sampler.sample_block(&seed_pairs, &self.shape, rng, &EdgeExclusion::new());
+        let (mut batch, touch) = assemble_block_inputs(ds, &block, &self.spec, worker)?;
+
+        let ntargets = self.shape.num_targets();
+        let labels_store = ds.node_labels();
+        let mut labels = vec![0i32; ntargets];
+        let mut lmask = vec![0.0f32; ntargets];
+        for (i, &(_, id)) in block.targets().iter().enumerate() {
+            labels[i] = labels_store.labels[id as usize];
+            lmask[i] = 1.0;
+        }
+        batch.push(Tensor::I32 { shape: vec![ntargets], data: labels });
+        batch.push(Tensor::F32 { shape: vec![ntargets], data: lmask });
+        Ok((batch, touch, block))
+    }
+}
+
+/// Link-prediction loader: positive edges + negatives → batch.
+pub struct LinkPredictionDataLoader {
+    pub spec: ArtifactSpec,
+    pub shape: BlockShape,
+    pub sampler: NegSampler,
+    /// Exclude validation/test edges from message passing (leak guard)
+    /// and the batch's own positives (overfit guard) — paper §3.3.4.
+    pub exclude_targets: bool,
+}
+
+impl LinkPredictionDataLoader {
+    pub fn new(spec: &ArtifactSpec, sampler: NegSampler) -> Result<LinkPredictionDataLoader> {
+        let shape = BlockSpecErr::from_spec(spec)?;
+        Ok(LinkPredictionDataLoader {
+            spec: spec.clone(),
+            shape,
+            sampler,
+            exclude_targets: true,
+        })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.spec.cfg_usize("lp_batch").unwrap_or(32)
+    }
+
+    /// Build a batch for positive edge ids of the LP task's etype.
+    pub fn batch(
+        &self,
+        ds: &GsDataset,
+        edge_ids: &[u32],
+        rng: &mut Rng,
+        worker: u32,
+    ) -> Result<(Vec<Tensor>, LembTouch)> {
+        let lp = ds.lp.as_ref().expect("dataset has no LP task");
+        let et = lp.etype;
+        let def = &ds.graph.schema.etypes[et];
+        let es = &ds.graph.edges[et];
+        let b = self.batch_size();
+        let k = self.spec.cfg_usize("k").unwrap_or(self.sampler.k());
+        assert!(edge_ids.len() <= b);
+        assert_eq!(self.sampler.k(), k, "sampler K must match the artifact");
+
+        let n_dst = ds.graph.num_nodes[def.dst_ntype];
+        let negs = sample_negatives(
+            self.sampler,
+            b,
+            n_dst,
+            def.dst_ntype,
+            &ds.engine.book,
+            worker,
+            rng,
+        );
+
+        // Seed slots: [srcs | dsts | negs], padded with node 0.
+        let mut seeds: Vec<(u32, u32)> = Vec::with_capacity(2 * b + negs.neg_nodes.len());
+        let (snt, dnt) = (def.src_ntype as u32, def.dst_ntype as u32);
+        for i in 0..b {
+            let eid = edge_ids.get(i).copied().unwrap_or(edge_ids[0]);
+            seeds.push((snt, es.src[eid as usize]));
+        }
+        for i in 0..b {
+            let eid = edge_ids.get(i).copied().unwrap_or(edge_ids[0]);
+            seeds.push((dnt, es.dst[eid as usize]));
+        }
+        for &n in &negs.neg_nodes {
+            seeds.push((dnt, n));
+        }
+
+        // CAREFUL: seeds may contain duplicates; the block dedups, so we
+        // must map each logical seed position to its slot.
+        let exclusion = self.build_exclusion(ds, edge_ids, et);
+        let nsampler = NeighborSampler::new(&ds.graph);
+        let dedup: Vec<(u32, u32)> = {
+            let mut seen = std::collections::HashMap::new();
+            let mut out = vec![];
+            for &s in &seeds {
+                seen.entry(s).or_insert_with(|| {
+                    out.push(s);
+                    out.len() - 1
+                });
+            }
+            out
+        };
+        let block = nsampler.sample_block(&dedup, &self.shape, rng, &exclusion);
+        let slot_of: HashMap<(u32, u32), i32> = block
+            .targets()
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| (p, i as i32))
+            .collect();
+        let slot = |p: (u32, u32)| slot_of[&p];
+
+        let (mut batch, touch) = assemble_block_inputs(ds, &block, &self.spec, worker)?;
+
+        let mut pos_src = vec![0i32; b];
+        let mut pos_dst = vec![0i32; b];
+        let mut rel = vec![0i32; b];
+        let mut pmask = vec![0.0f32; b];
+        let mut eweight = vec![1.0f32; b];
+        for i in 0..b {
+            pos_src[i] = slot(seeds[i]);
+            pos_dst[i] = slot(seeds[b + i]);
+            rel[i] = et as i32;
+            if i < edge_ids.len() {
+                pmask[i] = 1.0;
+            } else {
+                eweight[i] = 0.0;
+            }
+        }
+        let mut neg_dst = vec![0i32; b * k];
+        for i in 0..b {
+            for (j, &pos) in negs.neg_dst[i].iter().enumerate() {
+                // pos indexes the logical seed array; map through dedup.
+                neg_dst[i * k + j] = slot(seeds[pos as usize]);
+            }
+        }
+        batch.push(Tensor::I32 { shape: vec![b], data: pos_src });
+        batch.push(Tensor::I32 { shape: vec![b], data: pos_dst });
+        batch.push(Tensor::I32 { shape: vec![b, k], data: neg_dst });
+        batch.push(Tensor::I32 { shape: vec![b], data: rel });
+        batch.push(Tensor::F32 { shape: vec![b], data: pmask });
+        batch.push(Tensor::F32 { shape: vec![b], data: eweight });
+        Ok((batch, touch))
+    }
+
+    fn build_exclusion(&self, ds: &GsDataset, edge_ids: &[u32], et: usize) -> EdgeExclusion {
+        let mut ex = EdgeExclusion::new();
+        if !self.exclude_targets {
+            return ex;
+        }
+        let es = &ds.graph.edges[et];
+        let rev = ds.rev_map.get(&et).map(|&r| r as u32);
+        // The batch's own positives...
+        for &eid in edge_ids {
+            ex.insert_with_reverse(et as u32, rev, es.src[eid as usize], es.dst[eid as usize]);
+        }
+        // ...and every val/test edge (information-leak guard).
+        if let Some(lp) = &ds.lp {
+            for (eid, &s) in lp.split.iter().enumerate() {
+                if s == Split::Val || s == Split::Test {
+                    ex.insert_with_reverse(et as u32, rev, es.src[eid], es.dst[eid]);
+                }
+            }
+        }
+        ex
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{self, mag};
+    use crate::partition::PartitionBook;
+
+    fn mag_ds(n: usize) -> GsDataset {
+        let raw = mag::generate(&mag::MagConfig { n_papers: n, ..Default::default() });
+        let book = PartitionBook::single(&raw.graph.num_nodes);
+        datagen::build_dataset(raw, book, 64, 3)
+    }
+
+    #[test]
+    fn text_fallback_fills_only_text_types() {
+        let mut ds = mag_ds(300);
+        assert_eq!(ds.engine.text_emb[0].dim, 0);
+        ds.ensure_text_features(32);
+        assert_eq!(ds.engine.text_emb[0].dim, 32); // papers
+        assert_eq!(ds.engine.text_emb[1].dim, 0); // authors featureless
+        // Rows are unit-ish normalized and non-zero for real text.
+        let row = ds.engine.text_emb[0].row(0);
+        assert!(row.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn neighbor_feature_construction_switches_source() {
+        let mut ds = mag_ds(300);
+        ds.ensure_text_features(64);
+        let nt_author = 1;
+        assert_eq!(ds.graph.schema.feature_sources[nt_author], FeatureSource::Learnable);
+        ds.construct_neighbor_features(nt_author, 64);
+        assert_eq!(ds.graph.schema.feature_sources[nt_author], FeatureSource::Dense);
+        assert!(ds.engine.embeds[nt_author].is_none());
+        let t = &ds.engine.features[nt_author];
+        assert_eq!(t.dim, 64);
+        // Authors with papers must have non-zero constructed features.
+        let nonzero = (0..t.num_rows())
+            .filter(|&i| t.row(i as u32).iter().any(|&x| x != 0.0))
+            .count();
+        assert!(nonzero > t.num_rows() / 2, "{nonzero}/{}", t.num_rows());
+    }
+
+    #[test]
+    fn neighbor_features_are_neighbor_means() {
+        // Hand-built: one featureless type fed by one dense type.
+        use crate::graph::{EdgeTypeDef, HeteroGraph, Schema};
+        let schema = Schema::new(
+            vec!["a".into(), "b".into()],
+            vec![EdgeTypeDef { name: "ab".into(), src_ntype: 0, dst_ntype: 1 }],
+        )
+        .with_sources(vec![FeatureSource::Dense, FeatureSource::Learnable]);
+        let mut g = HeteroGraph::new(schema, vec![2, 1]);
+        g.set_edges(0, vec![0, 1], vec![0, 0]);
+        let raw = crate::datagen::RawData {
+            graph: g,
+            features: vec![(2, vec![1.0, 2.0, 3.0, 4.0]), (0, vec![])],
+            labels: vec![None, None],
+            tokens: vec![None, None],
+            target_ntype: 0,
+            num_classes: 2,
+            lp_etype: None,
+            rev_map: Default::default(),
+        };
+        let book = PartitionBook::single(&raw.graph.num_nodes);
+        let mut ds = datagen::build_dataset(raw, book, 8, 0);
+        ds.construct_neighbor_features(1, 2);
+        assert_eq!(ds.engine.features[1].row(0), &[2.0, 3.0]); // mean of rows
+    }
+
+    #[test]
+    fn splits_partition_ids() {
+        let ds = mag_ds(500);
+        let l = ds.node_labels();
+        let (tr, va, te) = (
+            l.ids_in(Split::Train).len(),
+            l.ids_in(Split::Val).len(),
+            l.ids_in(Split::Test).len(),
+        );
+        assert_eq!(tr + va + te, 500);
+        assert!(tr > va && tr > te);
+    }
+}

@@ -1,0 +1,97 @@
+//! Evaluators: accuracy for classification, MRR for link prediction.
+
+/// Argmax accuracy over row-major logits [n, c].
+pub fn accuracy(logits: &[f32], c: usize, labels: &[i32], mask: &[f32]) -> (usize, usize) {
+    let mut correct = 0;
+    let mut total = 0;
+    for (i, &l) in labels.iter().enumerate() {
+        if mask[i] == 0.0 {
+            continue;
+        }
+        let row = &logits[i * c..(i + 1) * c];
+        let am = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(j, _)| j)
+            .unwrap_or(0);
+        if am as i32 == l {
+            correct += 1;
+        }
+        total += 1;
+    }
+    (correct, total)
+}
+
+/// DistMult score: sum_i u[i] * r[i] * v[i] (paper eq. 3).
+#[inline]
+pub fn distmult(u: &[f32], r: &[f32], v: &[f32]) -> f32 {
+    u.iter().zip(r).zip(v).map(|((a, b), c)| a * b * c).sum()
+}
+
+/// Reciprocal rank of `pos` among `negs` (rank 1 = best).
+/// Ties count against the positive (pessimistic), so an untrained
+/// all-equal scorer reports ~1/(K+1), not a fake 1.0.
+pub fn reciprocal_rank(pos: f32, negs: &[f32]) -> f64 {
+    let rank = 1 + negs.iter().filter(|&&n| n >= pos).count();
+    1.0 / rank as f64
+}
+
+/// Running mean.
+#[derive(Default, Debug, Clone)]
+pub struct Mean {
+    pub sum: f64,
+    pub n: u64,
+}
+
+impl Mean {
+    pub fn add(&mut self, x: f64) {
+        self.sum += x;
+        self.n += 1;
+    }
+
+    pub fn add_weighted(&mut self, sum: f64, n: u64) {
+        self.sum += sum;
+        self.n += n;
+    }
+
+    pub fn get(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_counts() {
+        let logits = vec![1.0, 0.0, 0.0, 2.0, 0.5, 0.1];
+        let (c, t) = accuracy(&logits, 2, &[0, 1, 0], &[1.0, 1.0, 1.0]);
+        assert_eq!((c, t), (3, 3));
+        // rows argmax to [0, 1, 0]; with labels [1,1,1] and row 1 masked
+        // out, nothing matches.
+        let (c, t) = accuracy(&logits, 2, &[1, 1, 1], &[1.0, 0.0, 1.0]);
+        assert_eq!((c, t), (0, 2));
+    }
+
+    #[test]
+    fn rr_ranks() {
+        assert_eq!(reciprocal_rank(5.0, &[1.0, 2.0]), 1.0);
+        assert_eq!(reciprocal_rank(1.5, &[1.0, 2.0]), 0.5);
+        assert!((reciprocal_rank(0.0, &[1.0, 2.0]) - 1.0 / 3.0).abs() < 1e-12);
+        // Ties are pessimistic.
+        assert!((reciprocal_rank(1.0, &[1.0, 1.0]) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn distmult_matches_dot_with_unit_rel() {
+        let u = [1.0, 2.0];
+        let v = [3.0, 4.0];
+        assert_eq!(distmult(&u, &[1.0, 1.0], &v), 11.0);
+    }
+}

@@ -1,0 +1,226 @@
+//! The gconstruct JSON schema — the paper's Fig. 6 dialect.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub enum FeatTransform {
+    /// Pass numeric columns through, optionally standardized.
+    Numeric { normalize: bool },
+    /// Map categories to one-hot vectors.
+    Categorical,
+    /// Whitespace tokenizer + hash vocabulary (PAD=0, MASK=1).
+    Tokenize { vocab: usize, seq_len: usize },
+}
+
+#[derive(Debug, Clone)]
+pub struct LabelConfig {
+    pub label_col: String,
+    pub task_type: String,
+    pub split_pct: [f64; 3],
+}
+
+#[derive(Debug, Clone)]
+pub struct NodeConfig {
+    pub node_type: String,
+    pub file: String,
+    pub node_id_col: String,
+    pub feature_col: Option<String>,
+    pub feature_transform: Option<FeatTransform>,
+    pub label: Option<LabelConfig>,
+}
+
+#[derive(Debug, Clone)]
+pub struct EdgeConfig {
+    /// (src type, relation name, dst type) — the paper's triple.
+    pub relation: (String, String, String),
+    pub file: String,
+    pub source_id_col: String,
+    pub dest_id_col: String,
+    pub link_prediction: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct GConstructConfig {
+    pub nodes: Vec<NodeConfig>,
+    pub edges: Vec<EdgeConfig>,
+    pub seed: u64,
+    pub lp_split: Option<[f64; 2]>,
+}
+
+impl GConstructConfig {
+    pub fn load(path: &Path) -> Result<GConstructConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<GConstructConfig> {
+        let j = Json::parse(text)?;
+        let mut nodes = vec![];
+        for n in j.get("nodes").and_then(Json::as_arr).context("missing 'nodes'")? {
+            let transform = match n.get("features").and_then(Json::as_arr).and_then(|f| f.first()) {
+                Some(f) => {
+                    let name = f
+                        .get("transform")
+                        .and_then(|t| t.get("name"))
+                        .and_then(Json::as_str)
+                        .unwrap_or("numeric");
+                    let tr = match name {
+                        "numeric" => FeatTransform::Numeric {
+                            normalize: f
+                                .get("transform")
+                                .and_then(|t| t.get("normalize"))
+                                .and_then(Json::as_bool)
+                                .unwrap_or(true),
+                        },
+                        "categorical" | "to_categorical" => FeatTransform::Categorical,
+                        "tokenize" | "tokenize_hf" => FeatTransform::Tokenize {
+                            vocab: f
+                                .get("transform")
+                                .and_then(|t| t.get("vocab"))
+                                .and_then(Json::as_usize)
+                                .unwrap_or(1024),
+                            seq_len: f
+                                .get("transform")
+                                .and_then(|t| t.get("max_seq_length"))
+                                .and_then(Json::as_usize)
+                                .unwrap_or(32),
+                        },
+                        other => bail!("unknown transform '{other}'"),
+                    };
+                    Some((f.str_of("feature_col")?.to_string(), tr))
+                }
+                None => None,
+            };
+            let label = match n.get("labels").and_then(Json::as_arr).and_then(|l| l.first()) {
+                Some(l) => {
+                    let pct = l
+                        .get("split_pct")
+                        .and_then(Json::as_arr)
+                        .map(|a| {
+                            let v: Vec<f64> = a.iter().filter_map(Json::as_f64).collect();
+                            [v[0], v[1], *v.get(2).unwrap_or(&0.0)]
+                        })
+                        .unwrap_or([0.8, 0.1, 0.1]);
+                    Some(LabelConfig {
+                        label_col: l.str_of("label_col")?.to_string(),
+                        task_type: l.str_of("task_type")?.to_string(),
+                        split_pct: pct,
+                    })
+                }
+                None => None,
+            };
+            let files = n.get("files").and_then(Json::as_arr).context("node needs 'files'")?;
+            nodes.push(NodeConfig {
+                node_type: n.str_of("node_type")?.to_string(),
+                file: files[0].as_str().context("bad file entry")?.to_string(),
+                node_id_col: n.str_of("node_id_col")?.to_string(),
+                feature_col: transform.as_ref().map(|(c, _)| c.clone()),
+                feature_transform: transform.map(|(_, t)| t),
+                label,
+            });
+        }
+        let mut edges = vec![];
+        for e in j.get("edges").and_then(Json::as_arr).context("missing 'edges'")? {
+            let rel = e.get("relation").and_then(Json::as_arr).context("edge needs relation")?;
+            if rel.len() != 3 {
+                bail!("relation must be [src, name, dst]");
+            }
+            let lp = e
+                .get("labels")
+                .and_then(Json::as_arr)
+                .map(|ls| {
+                    ls.iter().any(|l| {
+                        l.get("task_type").and_then(Json::as_str) == Some("link_prediction")
+                    })
+                })
+                .unwrap_or(false);
+            let files = e.get("files").and_then(Json::as_arr).context("edge needs 'files'")?;
+            edges.push(EdgeConfig {
+                relation: (
+                    rel[0].as_str().unwrap().to_string(),
+                    rel[1].as_str().unwrap().to_string(),
+                    rel[2].as_str().unwrap().to_string(),
+                ),
+                file: files[0].as_str().context("bad file entry")?.to_string(),
+                source_id_col: e.str_of("source_id_col")?.to_string(),
+                dest_id_col: e.str_of("dest_id_col")?.to_string(),
+                link_prediction: lp,
+            });
+        }
+        Ok(GConstructConfig {
+            nodes,
+            edges,
+            seed: j.get("seed").and_then(Json::as_usize).unwrap_or(7) as u64,
+            lp_split: None,
+        })
+    }
+}
+
+/// Example schema used by the tests and the quickstart docs — the same
+/// shape as the paper's Fig. 6.
+pub const EXAMPLE_SCHEMA: &str = r#"{
+ "version": "gconstruct-v0.1",
+ "nodes": [
+  {
+   "node_type": "paper",
+   "format": {"name": "csv"},
+   "files": ["papers.csv"],
+   "node_id_col": "node_id",
+   "features": [
+    {"feature_col": "text",
+     "transform": {"name": "tokenize", "vocab": 256, "max_seq_length": 8}}
+   ],
+   "labels": [
+    {"label_col": "venue", "task_type": "classification",
+     "split_pct": [0.5, 0.25, 0.25]}
+   ]
+  },
+  {
+   "node_type": "author",
+   "format": {"name": "csv"},
+   "files": ["authors.csv"],
+   "node_id_col": "node_id"
+  }
+ ],
+ "edges": [
+  {
+   "relation": ["paper", "cites", "paper"],
+   "format": {"name": "csv"},
+   "files": ["cites.csv"],
+   "source_id_col": "src",
+   "dest_id_col": "dst",
+   "labels": [{"task_type": "link_prediction", "split_pct": [0.8, 0.1, 0.1]}]
+  },
+  {
+   "relation": ["author", "writes", "paper"],
+   "format": {"name": "csv"},
+   "files": ["writes.csv"],
+   "source_id_col": "src",
+   "dest_id_col": "dst"
+  }
+ ]
+}"#;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_example_schema() {
+        let cfg = GConstructConfig::parse(EXAMPLE_SCHEMA).unwrap();
+        assert_eq!(cfg.nodes.len(), 2);
+        assert_eq!(cfg.edges.len(), 2);
+        assert!(matches!(
+            cfg.nodes[0].feature_transform,
+            Some(FeatTransform::Tokenize { vocab: 256, seq_len: 8 })
+        ));
+        assert!(cfg.nodes[1].feature_transform.is_none());
+        assert!(cfg.edges[0].link_prediction);
+        assert!(!cfg.edges[1].link_prediction);
+        assert_eq!(cfg.nodes[0].label.as_ref().unwrap().split_pct[0], 0.5);
+    }
+}

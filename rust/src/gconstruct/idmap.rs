@@ -1,0 +1,72 @@
+//! Distributed ID mapping: string node ids → dense integers.
+//!
+//! The paper's pipeline builds massive string→int tables; here the map
+//! is hash-based with insertion-order assignment so ids are dense and
+//! deterministic given row order.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct IdMap {
+    map: HashMap<String, u32>,
+    rev: Vec<String>,
+}
+
+impl IdMap {
+    pub fn new() -> IdMap {
+        IdMap::default()
+    }
+
+    pub fn get_or_insert(&mut self, key: &str) -> u32 {
+        if let Some(&id) = self.map.get(key) {
+            return id;
+        }
+        let id = self.rev.len() as u32;
+        self.map.insert(key.to_string(), id);
+        self.rev.push(key.to_string());
+        id
+    }
+
+    pub fn get(&self, key: &str) -> Option<u32> {
+        self.map.get(key).copied()
+    }
+
+    pub fn name_of(&self, id: u32) -> Option<&str> {
+        self.rev.get(id as usize).map(String::as_str)
+    }
+
+    pub fn len(&self) -> usize {
+        self.rev.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rev.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bijection() {
+        let mut m = IdMap::new();
+        let ids: Vec<u32> = ["a", "b", "a", "c", "b"].iter().map(|s| m.get_or_insert(s)).collect();
+        assert_eq!(ids, vec![0, 1, 0, 2, 1]);
+        assert_eq!(m.len(), 3);
+        for i in 0..3u32 {
+            let name = m.name_of(i).unwrap().to_string();
+            assert_eq!(m.get(&name), Some(i));
+        }
+    }
+
+    #[test]
+    fn dense_ids() {
+        let mut m = IdMap::new();
+        for i in 0..1000 {
+            m.get_or_insert(&format!("node-{i}"));
+        }
+        assert_eq!(m.len(), 1000);
+        assert_eq!(m.get("node-999"), Some(999));
+    }
+}

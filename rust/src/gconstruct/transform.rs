@@ -1,0 +1,188 @@
+//! Feature transforms (paper §3.1.2): numeric standardization,
+//! categorical one-hot, and a hash tokenizer for text columns.
+//! The multi-worker path splits rows across threads (the Spark /
+//! GSProcessing stand-in) and concatenates shards in order.
+
+use anyhow::{Context, Result};
+
+use super::config::FeatTransform;
+
+pub enum Transformed {
+    Dense { dim: usize, data: Vec<f32> },
+    Tokens { seq_len: usize, data: Vec<i32> },
+}
+
+/// FNV-1a hash for the token vocabulary (stable across runs/platforms).
+#[inline]
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+pub fn apply(t: &FeatTransform, vals: &[&str]) -> Result<Transformed> {
+    match t {
+        FeatTransform::Numeric { normalize } => {
+            // Columns separated by spaces or ';' within the field.
+            let rows: Vec<Vec<f32>> = vals
+                .iter()
+                .map(|v| {
+                    v.split(|c| c == ' ' || c == ';')
+                        .filter(|s| !s.is_empty())
+                        .map(|s| s.parse::<f32>().with_context(|| format!("bad number '{s}'")))
+                        .collect()
+                })
+                .collect::<Result<_>>()?;
+            let dim = rows.iter().map(Vec::len).max().unwrap_or(0);
+            let mut data = vec![0.0f32; rows.len() * dim];
+            for (i, r) in rows.iter().enumerate() {
+                data[i * dim..i * dim + r.len()].copy_from_slice(r);
+            }
+            if *normalize && dim > 0 {
+                for j in 0..dim {
+                    let col: Vec<f32> = (0..rows.len()).map(|i| data[i * dim + j]).collect();
+                    let mean = col.iter().sum::<f32>() / col.len().max(1) as f32;
+                    let var =
+                        col.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / col.len().max(1) as f32;
+                    let sd = var.sqrt().max(1e-6);
+                    for i in 0..rows.len() {
+                        data[i * dim + j] = (data[i * dim + j] - mean) / sd;
+                    }
+                }
+            }
+            Ok(Transformed::Dense { dim, data })
+        }
+        FeatTransform::Categorical => {
+            let mut cats = std::collections::HashMap::new();
+            let idx: Vec<usize> = vals
+                .iter()
+                .map(|v| {
+                    let n = cats.len();
+                    *cats.entry(v.to_string()).or_insert(n)
+                })
+                .collect();
+            let dim = cats.len().max(1);
+            let mut data = vec![0.0f32; vals.len() * dim];
+            for (i, &c) in idx.iter().enumerate() {
+                data[i * dim + c] = 1.0;
+            }
+            Ok(Transformed::Dense { dim, data })
+        }
+        FeatTransform::Tokenize { vocab, seq_len } => {
+            let mut data = vec![0i32; vals.len() * seq_len];
+            for (i, v) in vals.iter().enumerate() {
+                for (j, tok) in v.split_whitespace().take(*seq_len).enumerate() {
+                    // Reserve 0 (PAD) and 1 (MASK).
+                    data[i * seq_len + j] = (2 + (fnv1a(tok) as usize % (vocab - 2))) as i32;
+                }
+            }
+            Ok(Transformed::Tokens { seq_len: *seq_len, data })
+        }
+    }
+}
+
+/// Multi-worker transform: shard rows, run `apply` per shard on a
+/// thread, stitch results back in order.  Deterministic regardless of
+/// worker count (the tests assert this).
+pub fn apply_parallel(t: &FeatTransform, vals: &[&str], workers: usize) -> Result<Transformed> {
+    if workers <= 1 || vals.len() < 2 * workers {
+        return apply(t, vals);
+    }
+    // Categorical needs a global vocabulary — single-threaded by design.
+    if matches!(t, FeatTransform::Categorical) {
+        return apply(t, vals);
+    }
+    let chunk = vals.len().div_ceil(workers);
+    let shards: Vec<Result<Transformed>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = vals
+            .chunks(chunk)
+            .map(|shard| scope.spawn(move || apply(t, shard)))
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    // Stitch.
+    let mut out: Option<Transformed> = None;
+    for s in shards {
+        let s = s?;
+        out = Some(match (out, s) {
+            (None, s) => s,
+            (Some(Transformed::Dense { dim, mut data }), Transformed::Dense { dim: d2, data: x }) => {
+                assert_eq!(dim, d2, "shard dim mismatch");
+                data.extend(x);
+                Transformed::Dense { dim, data }
+            }
+            (
+                Some(Transformed::Tokens { seq_len, mut data }),
+                Transformed::Tokens { seq_len: s2, data: x },
+            ) => {
+                assert_eq!(seq_len, s2);
+                data.extend(x);
+                Transformed::Tokens { seq_len, data }
+            }
+            _ => anyhow::bail!("mixed shard kinds"),
+        });
+    }
+    Ok(out.unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numeric_normalizes() {
+        let t = FeatTransform::Numeric { normalize: true };
+        let out = apply(&t, &["1 2", "3 4", "5 6"]).unwrap();
+        if let Transformed::Dense { dim, data } = out {
+            assert_eq!(dim, 2);
+            // Each column ~zero mean.
+            let m0: f32 = (0..3).map(|i| data[i * 2]).sum::<f32>() / 3.0;
+            assert!(m0.abs() < 1e-5);
+        } else {
+            panic!("wrong kind");
+        }
+    }
+
+    #[test]
+    fn categorical_one_hot() {
+        let out = apply(&FeatTransform::Categorical, &["a", "b", "a"]).unwrap();
+        if let Transformed::Dense { dim, data } = out {
+            assert_eq!(dim, 2);
+            assert_eq!(data, vec![1.0, 0.0, 0.0, 1.0, 1.0, 0.0]);
+        } else {
+            panic!("wrong kind");
+        }
+    }
+
+    #[test]
+    fn tokenize_deterministic_and_padded() {
+        let t = FeatTransform::Tokenize { vocab: 64, seq_len: 4 };
+        let a = apply(&t, &["hello world", "x"]).unwrap();
+        let b = apply(&t, &["hello world", "x"]).unwrap();
+        if let (Transformed::Tokens { data: da, .. }, Transformed::Tokens { data: db, .. }) = (a, b) {
+            assert_eq!(da, db);
+            assert_eq!(da.len(), 8);
+            assert_eq!(da[2], 0, "padding must be PAD=0");
+            assert!(da.iter().all(|&t| t == 0 || (2..64).contains(&t)));
+        } else {
+            panic!("wrong kind");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let t = FeatTransform::Tokenize { vocab: 128, seq_len: 6 };
+        let vals: Vec<String> = (0..200).map(|i| format!("tok{} common word{}", i, i % 7)).collect();
+        let refs: Vec<&str> = vals.iter().map(String::as_str).collect();
+        let a = apply(&t, &refs).unwrap();
+        let b = apply_parallel(&t, &refs, 4).unwrap();
+        if let (Transformed::Tokens { data: da, .. }, Transformed::Tokens { data: db, .. }) = (a, b) {
+            assert_eq!(da, db);
+        } else {
+            panic!("wrong kind");
+        }
+    }
+}

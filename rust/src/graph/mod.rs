@@ -1,0 +1,179 @@
+//! Heterogeneous graph store: schema, per-edge-type CSR/CSC adjacency.
+//!
+//! The in-memory analogue of DistDGL's graph structure: nodes are
+//! `(ntype, local_id)` pairs, edges live in per-edge-type lists with
+//! CSC (in-edge) indexes for on-the-fly inbound neighbor sampling.
+
+pub mod schema;
+
+pub use schema::{EdgeTypeDef, FeatureSource, Schema};
+
+/// Compressed sparse rows over one edge type.
+#[derive(Debug, Clone, Default)]
+pub struct Csr {
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+}
+
+impl Csr {
+    /// Build from (key, value) pairs where key < n_keys.
+    pub fn from_pairs(n_keys: usize, pairs: impl Iterator<Item = (u32, u32)> + Clone) -> Csr {
+        let mut counts = vec![0usize; n_keys + 1];
+        for (k, _) in pairs.clone() {
+            counts[k as usize + 1] += 1;
+        }
+        for i in 1..counts.len() {
+            counts[i] += counts[i - 1];
+        }
+        let mut indices = vec![0u32; counts[n_keys]];
+        let mut cursor = counts.clone();
+        for (k, v) in pairs {
+            indices[cursor[k as usize]] = v;
+            cursor[k as usize] += 1;
+        }
+        Csr { indptr: counts, indices }
+    }
+
+    #[inline]
+    pub fn neighbors(&self, key: usize) -> &[u32] {
+        &self.indices[self.indptr[key]..self.indptr[key + 1]]
+    }
+
+    #[inline]
+    pub fn degree(&self, key: usize) -> usize {
+        self.indptr[key + 1] - self.indptr[key]
+    }
+}
+
+/// One edge type's storage: raw edge list + in/out CSR indexes.
+#[derive(Debug, Clone, Default)]
+pub struct EdgeStore {
+    pub src: Vec<u32>,
+    pub dst: Vec<u32>,
+    /// in-CSC: for each dst node, incoming src neighbors (sampling path).
+    pub in_csr: Csr,
+    /// out-CSR: for each src node, outgoing dst neighbors.
+    pub out_csr: Csr,
+}
+
+/// Heterogeneous graph: schema + per-ntype node counts + per-etype edges.
+#[derive(Debug, Clone)]
+pub struct HeteroGraph {
+    pub schema: Schema,
+    pub num_nodes: Vec<usize>,
+    pub edges: Vec<EdgeStore>,
+}
+
+impl HeteroGraph {
+    pub fn new(schema: Schema, num_nodes: Vec<usize>) -> HeteroGraph {
+        assert_eq!(schema.ntypes.len(), num_nodes.len());
+        let n_et = schema.etypes.len();
+        HeteroGraph { schema, num_nodes, edges: vec![EdgeStore::default(); n_et] }
+    }
+
+    /// Set one edge type's edge list and build its indexes.
+    /// Panics on out-of-range endpoints (construction-time invariant).
+    pub fn set_edges(&mut self, etype: usize, src: Vec<u32>, dst: Vec<u32>) {
+        assert_eq!(src.len(), dst.len());
+        let def = &self.schema.etypes[etype];
+        let n_src = self.num_nodes[def.src_ntype];
+        let n_dst = self.num_nodes[def.dst_ntype];
+        debug_assert!(src.iter().all(|&s| (s as usize) < n_src), "src id out of range");
+        debug_assert!(dst.iter().all(|&d| (d as usize) < n_dst), "dst id out of range");
+        let in_csr = Csr::from_pairs(n_dst, dst.iter().copied().zip(src.iter().copied()));
+        let out_csr = Csr::from_pairs(n_src, src.iter().copied().zip(dst.iter().copied()));
+        self.edges[etype] = EdgeStore { src, dst, in_csr, out_csr };
+    }
+
+    pub fn num_edges(&self, etype: usize) -> usize {
+        self.edges[etype].src.len()
+    }
+
+    pub fn total_nodes(&self) -> usize {
+        self.num_nodes.iter().sum()
+    }
+
+    pub fn total_edges(&self) -> usize {
+        self.edges.iter().map(|e| e.src.len()).sum()
+    }
+
+    /// Edge types whose destination is `ntype` (inbound message sources).
+    pub fn etypes_into(&self, ntype: usize) -> Vec<usize> {
+        (0..self.schema.etypes.len())
+            .filter(|&e| self.schema.etypes[e].dst_ntype == ntype)
+            .collect()
+    }
+
+    /// Paper-Table-1-style statistics row.
+    pub fn stats(&self) -> GraphStats {
+        GraphStats {
+            num_nodes: self.total_nodes(),
+            num_edges: self.total_edges(),
+            num_ntypes: self.schema.ntypes.len(),
+            num_etypes: self.schema.etypes.len(),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GraphStats {
+    pub num_nodes: usize,
+    pub num_edges: usize,
+    pub num_ntypes: usize,
+    pub num_etypes: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> HeteroGraph {
+        let schema = Schema::new(
+            vec!["a".into(), "b".into()],
+            vec![EdgeTypeDef { name: "ab".into(), src_ntype: 0, dst_ntype: 1 }],
+        );
+        let mut g = HeteroGraph::new(schema, vec![3, 2]);
+        g.set_edges(0, vec![0, 1, 2, 0], vec![0, 0, 1, 1]);
+        g
+    }
+
+    #[test]
+    fn csr_inverts_edge_list() {
+        let g = toy();
+        let es = &g.edges[0];
+        assert_eq!(es.in_csr.neighbors(0), &[0, 1]);
+        assert_eq!(es.in_csr.neighbors(1), &[2, 0]);
+        assert_eq!(es.out_csr.neighbors(0), &[0, 1]);
+        assert_eq!(es.out_csr.degree(1), 1);
+    }
+
+    #[test]
+    fn csr_csc_transpose_involution() {
+        // Rebuilding the edge list from in_csr must reproduce out_csr.
+        let g = toy();
+        let es = &g.edges[0];
+        let mut pairs = vec![];
+        for d in 0..g.num_nodes[1] {
+            for &s in es.in_csr.neighbors(d) {
+                pairs.push((s, d as u32));
+            }
+        }
+        let rebuilt = Csr::from_pairs(g.num_nodes[0], pairs.iter().copied());
+        let mut a: Vec<Vec<u32>> = (0..3).map(|s| rebuilt.neighbors(s).to_vec()).collect();
+        let mut b: Vec<Vec<u32>> = (0..3).map(|s| es.out_csr.neighbors(s).to_vec()).collect();
+        for (x, y) in a.iter_mut().zip(b.iter_mut()) {
+            x.sort();
+            y.sort();
+        }
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn stats_counts() {
+        let g = toy();
+        let s = g.stats();
+        assert_eq!(s.num_nodes, 5);
+        assert_eq!(s.num_edges, 4);
+        assert_eq!((s.num_ntypes, s.num_etypes), (2, 1));
+    }
+}

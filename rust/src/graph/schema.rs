@@ -1,0 +1,102 @@
+//! Graph schema: node types, edge types, feature sources.
+
+/// One edge type: `(src_ntype, name, dst_ntype)` triple, by type index.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EdgeTypeDef {
+    pub name: String,
+    pub src_ntype: usize,
+    pub dst_ntype: usize,
+}
+
+/// The feature source a node type feeds into the model's input encoder
+/// (DESIGN.md §4: dense features, LM text embeddings, or the learnable
+/// embedding table for featureless types).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FeatureSource {
+    #[default]
+    Dense,
+    Text,
+    /// Featureless: rows come from the distributed embedding table.
+    Learnable,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Schema {
+    pub ntypes: Vec<String>,
+    pub etypes: Vec<EdgeTypeDef>,
+    /// Per-ntype feature source (defaults to Dense).
+    pub feature_sources: Vec<FeatureSource>,
+}
+
+impl Schema {
+    pub fn new(ntypes: Vec<String>, etypes: Vec<EdgeTypeDef>) -> Schema {
+        let n = ntypes.len();
+        for e in &etypes {
+            assert!(e.src_ntype < n && e.dst_ntype < n, "etype references unknown ntype");
+        }
+        Schema { ntypes, etypes, feature_sources: vec![FeatureSource::Dense; n] }
+    }
+
+    pub fn with_sources(mut self, sources: Vec<FeatureSource>) -> Schema {
+        assert_eq!(sources.len(), self.ntypes.len());
+        self.feature_sources = sources;
+        self
+    }
+
+    pub fn ntype_id(&self, name: &str) -> Option<usize> {
+        self.ntypes.iter().position(|n| n == name)
+    }
+
+    pub fn etype_id(&self, name: &str) -> Option<usize> {
+        self.etypes.iter().position(|e| e.name == name)
+    }
+
+    /// Add the reverse of every edge type (GraphStorm's `rev-` edges) so
+    /// messages flow both directions during sampling.  Skips self-symmetric
+    /// types that already have a reverse.
+    pub fn add_reverse_etypes(&mut self) -> Vec<(usize, usize)> {
+        let orig = self.etypes.clone();
+        let mut mapping = vec![];
+        for (i, e) in orig.iter().enumerate() {
+            let rev_name = format!("rev-{}", e.name);
+            if self.etype_id(&rev_name).is_some() {
+                continue;
+            }
+            self.etypes.push(EdgeTypeDef {
+                name: rev_name,
+                src_ntype: e.dst_ntype,
+                dst_ntype: e.src_ntype,
+            });
+            mapping.push((i, self.etypes.len() - 1));
+        }
+        mapping
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reverse_etypes() {
+        let mut s = Schema::new(
+            vec!["paper".into(), "author".into()],
+            vec![
+                EdgeTypeDef { name: "writes".into(), src_ntype: 1, dst_ntype: 0 },
+                EdgeTypeDef { name: "cites".into(), src_ntype: 0, dst_ntype: 0 },
+            ],
+        );
+        let map = s.add_reverse_etypes();
+        assert_eq!(map.len(), 2);
+        let rev = s.etype_id("rev-writes").unwrap();
+        assert_eq!(s.etypes[rev].src_ntype, 0);
+        assert_eq!(s.etypes[rev].dst_ntype, 1);
+    }
+
+    #[test]
+    fn lookup() {
+        let s = Schema::new(vec!["item".into()], vec![]);
+        assert_eq!(s.ntype_id("item"), Some(0));
+        assert_eq!(s.ntype_id("nope"), None);
+    }
+}

@@ -1,0 +1,44 @@
+//! graphstorm-rs — a reproduction of *GraphStorm: All-in-one Graph
+//! Machine Learning Framework for Industry Applications* (KDD 2024) as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! Layer 3 (this crate) owns everything on the hot path: graph
+//! construction, partitioning, the simulated distributed engine,
+//! on-the-fly mini-batch sampling, negative sampling, training loops and
+//! the CLI.  Layers 2/1 (JAX models + Pallas kernels) are AOT-lowered at
+//! build time to `artifacts/*.hlo.txt` and executed through the PJRT C
+//! API (`runtime`); Python never runs at training/inference time.
+//!
+//! See DESIGN.md for the full system inventory and experiment index.
+
+pub mod datagen;
+pub mod dataloader;
+pub mod dist;
+pub mod eval;
+pub mod gconstruct;
+pub mod graph;
+pub mod partition;
+pub mod runtime;
+pub mod sampling;
+pub mod trainer;
+pub mod util;
+
+/// Default artifacts directory, overridable via `GS_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("GS_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| {
+            // Walk up from CWD until we find artifacts/manifest.json so
+            // examples, tests and benches work from any subdirectory.
+            let mut dir = std::env::current_dir().unwrap();
+            loop {
+                let cand = dir.join("artifacts");
+                if cand.join("manifest.json").exists() {
+                    return cand;
+                }
+                if !dir.pop() {
+                    return std::path::PathBuf::from("artifacts");
+                }
+            }
+        })
+}

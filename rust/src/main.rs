@@ -1,0 +1,224 @@
+//! `gs` — the GraphStorm-rs command line (paper Appendix B).
+//!
+//!   gs gconstruct --conf schema.json --dir DATA [--num-parts N] [--metis]
+//!   gs gen-data   --dataset mag|amazon|scale-free [--size N]
+//!   gs train-nc   --dataset mag|amazon [--arch rgcn] [--epochs E] [--num-parts N]
+//!   gs train-lp   --dataset amazon [--loss contrastive|ce] [--neg joint-32|...]
+//!   gs smoke      # runtime sanity check
+//!
+//! Argument parsing is hand-rolled (offline build — DESIGN.md §1).
+
+use anyhow::{bail, Context, Result};
+use graphstorm::datagen::{amazon, mag, scale_free};
+use graphstorm::dataloader::GsDataset;
+use graphstorm::partition::{metis_like_partition, random_partition, PartitionBook};
+use graphstorm::runtime::Runtime;
+use graphstorm::sampling::NegSampler;
+use graphstorm::trainer::lp::LpLoss;
+use graphstorm::trainer::{LmTrainer, LpTrainer, NodeTrainer, TrainOptions};
+
+struct Args {
+    cmd: String,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Result<Args> {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = std::collections::HashMap::new();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let val = it.next().unwrap_or_else(|| "true".to_string());
+                flags.insert(name.to_string(), val);
+            } else {
+                bail!("unexpected argument '{a}'");
+            }
+        }
+        Ok(Args { cmd, flags })
+    }
+
+    fn get(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.flags.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn parse_neg(s: &str) -> Result<NegSampler> {
+    if s == "in-batch" {
+        return Ok(NegSampler::InBatch { k: 32 });
+    }
+    let (kind, k) = s.rsplit_once('-').context("neg sampler like joint-32")?;
+    let k: usize = k.parse()?;
+    Ok(match kind {
+        "joint" => NegSampler::Joint { k },
+        "local-joint" => NegSampler::LocalJoint { k },
+        "uniform" => NegSampler::Uniform { k },
+        _ => bail!("unknown sampler '{kind}'"),
+    })
+}
+
+fn make_dataset(args: &Args) -> Result<GsDataset> {
+    let n_parts = args.get_usize("num-parts", 1);
+    let seed = args.get_usize("seed", 7) as u64;
+    let raw = match args.get("dataset", "mag").as_str() {
+        "mag" => mag::generate(&mag::MagConfig {
+            n_papers: args.get_usize("size", 4000),
+            ..Default::default()
+        }),
+        "amazon" => {
+            let world = amazon::generate_world(&amazon::ArConfig {
+                n_items: args.get_usize("size", 3000),
+                ..Default::default()
+            });
+            amazon::build_variant(&world, amazon::ArVariant::HeteroV2)
+        }
+        "scale-free" => scale_free::generate(&scale_free::ScaleFreeConfig {
+            n_edges: args.get_usize("size", 100_000),
+            ..Default::default()
+        }),
+        other => bail!("unknown dataset '{other}'"),
+    };
+    let book = if n_parts <= 1 {
+        PartitionBook::single(&raw.graph.num_nodes)
+    } else if args.flags.contains_key("metis") {
+        metis_like_partition(&raw.graph, n_parts, seed)
+    } else {
+        random_partition(&raw.graph, n_parts, seed)
+    };
+    let mut ds = graphstorm::datagen::build_dataset(raw, book, 64, seed);
+    // Without an LM stage, text nodes get hashed bag-of-tokens features.
+    ds.ensure_text_features(64);
+    Ok(ds)
+}
+
+fn opts(args: &Args) -> TrainOptions {
+    TrainOptions {
+        lr: args.get("lr", "3e-3").parse().unwrap_or(3e-3),
+        epochs: args.get_usize("epochs", 3),
+        seed: args.get_usize("seed", 7) as u64,
+        n_workers: args.get_usize("num-parts", 1).max(1),
+        log_every: 0,
+        verbose: true,
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse()?;
+    match args.cmd.as_str() {
+        "smoke" => {
+            let rt = Runtime::from_default_dir()?;
+            let exe = rt.load("smoke")?;
+            println!(
+                "platform={} artifacts ok ({} outputs)",
+                rt.client.platform_name(),
+                exe.spec.outputs.len()
+            );
+        }
+        "gen-data" => {
+            let ds = make_dataset(&args)?;
+            let s = ds.graph.stats();
+            println!(
+                "dataset={} nodes={} edges={} ntypes={} etypes={}",
+                args.get("dataset", "mag"),
+                s.num_nodes,
+                s.num_edges,
+                s.num_ntypes,
+                s.num_etypes
+            );
+        }
+        "gconstruct" => {
+            let conf = args.get("conf", "schema.json");
+            let dir = args.get("dir", ".");
+            let cfg = graphstorm::gconstruct::GConstructConfig::load(std::path::Path::new(&conf))?;
+            let ds = graphstorm::gconstruct::construct_dataset(
+                &cfg,
+                std::path::Path::new(&dir),
+                args.get_usize("num-parts", 1),
+                args.flags.contains_key("metis"),
+            )?;
+            let s = ds.graph.stats();
+            println!(
+                "constructed: nodes={} edges={} ntypes={} etypes={} parts={}",
+                s.num_nodes, s.num_edges, s.num_ntypes, s.num_etypes, ds.engine.book.n_parts
+            );
+        }
+        "train-nc" => {
+            let rt = Runtime::from_default_dir()?;
+            let mut ds = make_dataset(&args)?;
+            let arch = args.get("arch", "rgcn");
+            // Optional LM stage: --lm pretrained|finetuned|none
+            let lm_mode = args.get("lm", "none");
+            if lm_mode != "none" {
+                let lm = LmTrainer::default();
+                let o = opts(&args);
+                let (_, st) = lm.pretrain_mlm(
+                    &rt,
+                    &ds,
+                    ds.target_ntype,
+                    &TrainOptions { epochs: 1, ..o.clone() },
+                )?;
+                let params = if lm_mode == "finetuned" {
+                    let (_, st2) = lm.finetune_nc(
+                        &rt,
+                        &ds,
+                        &st.params_host()?,
+                        &TrainOptions { epochs: 2, ..o.clone() },
+                    )?;
+                    st2.params_host()?
+                } else {
+                    st.params_host()?
+                };
+                let secs = lm.embed_all(&rt, &mut ds, &params)?;
+                println!("lm embed stage: {secs:.1}s");
+            }
+            let trainer =
+                NodeTrainer::new(&format!("{arch}_nc_train"), &format!("{arch}_nc_logits"));
+            let (report, st) = trainer.fit(&rt, &mut ds, &opts(&args))?;
+            println!(
+                "val_acc={:.4} test_acc={:.4} losses={:?}",
+                report.val_acc, report.test_acc, report.epoch_losses
+            );
+            if let Some(path) = args.flags.get("save-model-path") {
+                st.save(std::path::Path::new(path))?;
+                println!("saved model to {path}");
+            }
+        }
+        "train-lp" => {
+            let rt = Runtime::from_default_dir()?;
+            let mut ds = make_dataset(&args)?;
+            let loss = match args.get("loss", "contrastive").as_str() {
+                "contrastive" => LpLoss::Contrastive,
+                "ce" | "cross-entropy" => LpLoss::CrossEntropy,
+                other => bail!("unknown loss '{other}'"),
+            };
+            let neg = parse_neg(&args.get("neg", "joint-32"))?;
+            let artifact = match neg {
+                NegSampler::Uniform { k } => format!("rgcn_lp_uniform_k{k}_train"),
+                s => format!("rgcn_lp_joint_k{}_train", s.k()),
+            };
+            let mut trainer = LpTrainer::new(&artifact, "rgcn_lp_emb", loss, neg);
+            trainer.max_train_edges = Some(args.get_usize("max-edges-per-epoch", 3200));
+            let (report, _) = trainer.fit(&rt, &mut ds, &opts(&args))?;
+            println!(
+                "val_mrr={:.4} test_mrr={:.4} best_epoch={} epoch_time={:.1}s",
+                report.val_mrr,
+                report.test_mrr,
+                report.best_epoch,
+                report.epoch_times.iter().sum::<f64>() / report.epoch_times.len().max(1) as f64
+            );
+        }
+        _ => {
+            println!("gs — GraphStorm-rs (see README.md)\n");
+            println!("  gs smoke");
+            println!("  gs gen-data --dataset mag|amazon|scale-free [--size N]");
+            println!("  gs gconstruct --conf schema.json --dir DATA [--num-parts N] [--metis]");
+            println!("  gs train-nc --dataset mag [--arch rgcn|gcn|sage|gat|rgat|hgt] [--lm none|pretrained|finetuned]");
+            println!("  gs train-lp --dataset amazon [--loss contrastive|ce] [--neg in-batch|joint-K|uniform-K]");
+        }
+    }
+    Ok(())
+}

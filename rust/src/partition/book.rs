@@ -1,0 +1,68 @@
+//! The partition book: node → partition mapping, per node type.
+
+/// Maps every node to its owning partition (DistDGL's partition book).
+#[derive(Debug, Clone)]
+pub struct PartitionBook {
+    pub n_parts: usize,
+    /// assignments[ntype][local_id] = partition id.
+    pub assignments: Vec<Vec<u32>>,
+}
+
+impl PartitionBook {
+    pub fn new(n_parts: usize, assignments: Vec<Vec<u32>>) -> PartitionBook {
+        debug_assert!(assignments.iter().flatten().all(|&p| (p as usize) < n_parts));
+        PartitionBook { n_parts, assignments }
+    }
+
+    /// Single-partition book (single-machine mode).
+    pub fn single(num_nodes: &[usize]) -> PartitionBook {
+        PartitionBook::new(1, num_nodes.iter().map(|&n| vec![0u32; n]).collect())
+    }
+
+    #[inline]
+    pub fn part_of(&self, ntype: usize, id: u32) -> u32 {
+        self.assignments[ntype][id as usize]
+    }
+
+    /// Total nodes per partition (across node types).
+    pub fn part_sizes(&self) -> Vec<usize> {
+        let mut sizes = vec![0usize; self.n_parts];
+        for a in &self.assignments {
+            for &p in a {
+                sizes[p as usize] += 1;
+            }
+        }
+        sizes
+    }
+
+    /// Nodes of `ntype` owned by `part`.
+    pub fn nodes_of(&self, ntype: usize, part: u32) -> Vec<u32> {
+        self.assignments[ntype]
+            .iter()
+            .enumerate()
+            .filter(|(_, &p)| p == part)
+            .map(|(i, _)| i as u32)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_every_node_exactly_once() {
+        let book = PartitionBook::new(3, vec![vec![0, 1, 2, 0], vec![2, 2]]);
+        let sizes = book.part_sizes();
+        assert_eq!(sizes.iter().sum::<usize>(), 6);
+        assert_eq!(book.nodes_of(0, 0), vec![0, 3]);
+        assert_eq!(book.nodes_of(1, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn single_book() {
+        let book = PartitionBook::single(&[5, 3]);
+        assert_eq!(book.n_parts, 1);
+        assert_eq!(book.part_sizes(), vec![8]);
+    }
+}

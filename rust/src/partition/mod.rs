@@ -1,0 +1,92 @@
+//! Graph partitioning: the partition book, random edge-cut, and a
+//! multilevel METIS-like partitioner (DESIGN.md §1: METIS/ParMETIS
+//! substitute).  Partition assignment is per node; edges live with
+//! their destination (DistDGL's owner-computes rule for aggregation).
+
+pub mod book;
+pub mod metis_like;
+
+pub use book::PartitionBook;
+pub use metis_like::metis_like_partition;
+
+use crate::graph::HeteroGraph;
+use crate::util::Rng;
+
+/// Random node partitioning (the paper's Table 3 setting).
+pub fn random_partition(g: &HeteroGraph, n_parts: usize, seed: u64) -> PartitionBook {
+    let mut rng = Rng::seed_from(seed);
+    let assign = g
+        .num_nodes
+        .iter()
+        .map(|&n| (0..n).map(|_| rng.gen_range(n_parts) as u32).collect())
+        .collect();
+    PartitionBook::new(n_parts, assign)
+}
+
+/// Edge-cut fraction: edges whose endpoints live in different parts.
+pub fn edge_cut(g: &HeteroGraph, book: &PartitionBook) -> f64 {
+    let mut cut = 0usize;
+    let mut total = 0usize;
+    for (et, es) in g.edges.iter().enumerate() {
+        let def = &g.schema.etypes[et];
+        for (&s, &d) in es.src.iter().zip(&es.dst) {
+            total += 1;
+            if book.part_of(def.src_ntype, s) != book.part_of(def.dst_ntype, d) {
+                cut += 1;
+            }
+        }
+    }
+    if total == 0 {
+        0.0
+    } else {
+        cut as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{EdgeTypeDef, Schema};
+
+    fn ring(n: usize) -> HeteroGraph {
+        let schema = Schema::new(
+            vec!["v".into()],
+            vec![EdgeTypeDef { name: "e".into(), src_ntype: 0, dst_ntype: 0 }],
+        );
+        let mut g = HeteroGraph::new(schema, vec![n]);
+        let src: Vec<u32> = (0..n as u32).collect();
+        let dst: Vec<u32> = (0..n as u32).map(|i| (i + 1) % n as u32).collect();
+        g.set_edges(0, src, dst);
+        g
+    }
+
+    #[test]
+    fn random_partition_covers_all_nodes() {
+        let g = ring(100);
+        let book = random_partition(&g, 4, 1);
+        assert_eq!(book.assignments[0].len(), 100);
+        assert!(book.assignments[0].iter().all(|&p| p < 4));
+        // All parts non-empty at this size (probabilistic but safe at n=100).
+        let mut seen = vec![false; 4];
+        for &p in &book.assignments[0] {
+            seen[p as usize] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn metis_like_beats_random_on_ring() {
+        let g = ring(256);
+        let rand_book = random_partition(&g, 4, 1);
+        let metis_book = metis_like_partition(&g, 4, 1);
+        let rc = edge_cut(&g, &rand_book);
+        let mc = edge_cut(&g, &metis_book);
+        // A ring cuts only ~k edges under a contiguous partition.
+        assert!(mc < rc * 0.5, "metis-like cut {mc} vs random {rc}");
+        // Balance within 25%.
+        let sizes = metis_book.part_sizes();
+        let max = *sizes.iter().max().unwrap() as f64;
+        let min = *sizes.iter().min().unwrap() as f64;
+        assert!(max / min.max(1.0) < 1.6, "imbalanced: {sizes:?}");
+    }
+}

@@ -1,0 +1,156 @@
+//! PJRT execution: load HLO text, compile once, run many times.
+//!
+//! Train state (params + Adam moments) stays **device-resident**: the
+//! train step runs via `execute_b` over `PjRtBuffer`s, so each step
+//! copies only the mini-batch host→device and two scalars back.  This
+//! is the L3 half of the perf story (EXPERIMENTS.md §Perf).
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use super::gstf::Tensor;
+use super::manifest::{ArtifactSpec, Manifest, TensorSpec};
+
+/// Convert a host tensor to an XLA literal, checking the spec's shape.
+pub fn tensor_to_literal(t: &Tensor, spec: &TensorSpec) -> Result<xla::Literal> {
+    if t.shape() != spec.shape.as_slice() {
+        bail!(
+            "shape mismatch for '{}': got {:?}, manifest wants {:?}",
+            spec.name,
+            t.shape(),
+            spec.shape
+        );
+    }
+    let dims: Vec<usize> = t.shape().to_vec();
+    let lit = match (t, spec.dtype.as_str()) {
+        (Tensor::F32 { data, .. }, "f32") => {
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+            };
+            xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, &dims, bytes)?
+        }
+        (Tensor::I32 { data, .. }, "i32") => {
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+            };
+            xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, &dims, bytes)?
+        }
+        _ => bail!("dtype mismatch for '{}' (manifest {})", spec.name, spec.dtype),
+    };
+    Ok(lit)
+}
+
+pub fn literal_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// One compiled artifact.
+pub struct Executable {
+    pub name: String,
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with literals; returns the flat output literals.
+    ///
+    /// The AOT step returns a tuple root; the result comes back as one
+    /// tuple literal which we decompose (`to_tuple`).  On the CPU PJRT
+    /// plugin literals are already host/device-unified memory, so this
+    /// path has no extra copies; note `execute_b` on tuple-rooted
+    /// computations CHECK-fails inside xla_extension 0.5.1, hence the
+    /// literal path (see DESIGN.md §8 L3 notes).
+    pub fn run(&self, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let expected = self.spec.state.len() + self.spec.scalars.len() + self.spec.batch.len();
+        if args.len() != expected {
+            bail!("{}: got {} args, manifest wants {expected}", self.name, args.len());
+        }
+        let result = self.exe.execute::<&xla::Literal>(args)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        self.exe.client()
+    }
+}
+
+/// The runtime: one PJRT CPU client + a compiled-executable cache.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &std::path::Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn from_default_dir() -> Result<Runtime> {
+        Runtime::new(&crate::artifacts_dir())
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.get(name)?.clone();
+        let path = self.manifest.hlo_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parse HLO {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let e = Arc::new(Executable { name: name.to_string(), spec, exe });
+        self.cache.lock().unwrap().insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Read the artifact's initial parameters (GSTF written at AOT time).
+    pub fn init_params(&self, name: &str) -> Result<Vec<(String, Tensor)>> {
+        let spec = self.manifest.get(name)?;
+        let init = spec
+            .init_file
+            .as_ref()
+            .with_context(|| format!("{name} has no init file"))?;
+        super::gstf::read_gstf(&self.manifest.dir.join(init))
+    }
+
+    pub fn upload(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_literal(None, lit)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_artifact_round_trips() {
+        let rt = Runtime::from_default_dir().unwrap();
+        let exe = rt.load("smoke").unwrap();
+        let x = Tensor::F32 { shape: vec![2, 2], data: vec![1.0, 2.0, 3.0, 4.0] };
+        let y = Tensor::F32 { shape: vec![2, 2], data: vec![1.0, 1.0, 1.0, 1.0] };
+        let args = vec![
+            tensor_to_literal(&x, &exe.spec.batch[0]).unwrap(),
+            tensor_to_literal(&y, &exe.spec.batch[1]).unwrap(),
+        ];
+        let refs: Vec<&xla::Literal> = args.iter().collect();
+        let out = exe.run(&refs).unwrap();
+        assert_eq!(out.len(), 1);
+        let z = literal_to_f32(&out[0]).unwrap();
+        assert_eq!(z, vec![5.0, 5.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let rt = Runtime::from_default_dir().unwrap();
+        let exe = rt.load("smoke").unwrap();
+        let bad = Tensor::F32 { shape: vec![3], data: vec![0.0; 3] };
+        assert!(tensor_to_literal(&bad, &exe.spec.batch[0]).is_err());
+    }
+}

@@ -1,0 +1,180 @@
+//! GSTF tensor files — the Python↔Rust tensor interchange.
+//!
+//! Mirrors `python/compile/gstf.py`: initial parameters are written at
+//! AOT time and read here; checkpoints are written here and readable
+//! from Python.  Little-endian throughout.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Host tensor: f32 or i32 payload plus shape.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn zeros_f32(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::F32 { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+}
+
+pub fn write_gstf(path: &Path, tensors: &[(String, Tensor)]) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(b"GSTF")?;
+    f.write_all(&1u32.to_le_bytes())?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        f.write_all(&(nb.len() as u32).to_le_bytes())?;
+        f.write_all(nb)?;
+        match t {
+            Tensor::F32 { shape, data } => {
+                f.write_all(&[0u8])?;
+                f.write_all(&(shape.len() as u32).to_le_bytes())?;
+                for d in shape {
+                    f.write_all(&(*d as u64).to_le_bytes())?;
+                }
+                for x in data {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+            Tensor::I32 { shape, data } => {
+                f.write_all(&[1u8])?;
+                f.write_all(&(shape.len() as u32).to_le_bytes())?;
+                for d in shape {
+                    f.write_all(&(*d as u64).to_le_bytes())?;
+                }
+                for x in data {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+pub fn read_gstf(path: &Path) -> Result<Vec<(String, Tensor)>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+    );
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != b"GSTF" {
+        bail!("bad GSTF magic in {}", path.display());
+    }
+    let version = read_u32(&mut f)?;
+    if version != 1 {
+        bail!("unsupported GSTF version {version}");
+    }
+    let count = read_u32(&mut f)? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = read_u32(&mut f)? as usize;
+        let mut nb = vec![0u8; name_len];
+        f.read_exact(&mut nb)?;
+        let name = String::from_utf8(nb)?;
+        let mut dt = [0u8; 1];
+        f.read_exact(&mut dt)?;
+        let ndim = read_u32(&mut f)? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            let mut b = [0u8; 8];
+            f.read_exact(&mut b)?;
+            shape.push(u64::from_le_bytes(b) as usize);
+        }
+        let n: usize = shape.iter().product();
+        let t = match dt[0] {
+            0 => {
+                let mut raw = vec![0u8; n * 4];
+                f.read_exact(&mut raw)?;
+                let data = raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                Tensor::F32 { shape, data }
+            }
+            1 => {
+                let mut raw = vec![0u8; n * 4];
+                f.read_exact(&mut raw)?;
+                let data = raw
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                Tensor::I32 { shape, data }
+            }
+            d => bail!("unknown GSTF dtype {d}"),
+        };
+        out.push((name, t));
+    }
+    Ok(out)
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("gstf_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.gstf");
+        let tensors = vec![
+            (
+                "a".to_string(),
+                Tensor::F32 { shape: vec![2, 3], data: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0] },
+            ),
+            ("b".to_string(), Tensor::I32 { shape: vec![4], data: vec![7, -8, 9, 0] }),
+            ("scalar".to_string(), Tensor::F32 { shape: vec![], data: vec![3.25] }),
+        ];
+        write_gstf(&path, &tensors).unwrap();
+        let back = read_gstf(&path).unwrap();
+        assert_eq!(tensors, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reads_python_written_init() {
+        // The AOT pipeline writes init files; verify one parses if present.
+        let dir = crate::artifacts_dir();
+        let p = dir.join("mlp_train.init.gstf");
+        if p.exists() {
+            let ts = read_gstf(&p).unwrap();
+            assert!(!ts.is_empty());
+            assert!(ts.iter().all(|(n, _)| n.starts_with("p:")));
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! The AOT manifest: shapes/dtypes/ordering of every artifact's
+//! inputs and outputs.  Written by `python/compile/aot.py`; the Rust
+//! runtime is entirely manifest-driven (no hard-coded shapes).
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .context("tensor spec missing shape")?
+            .iter()
+            .map(|v| v.as_usize().context("bad dim"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec {
+            name: j.str_of("name")?.to_string(),
+            shape,
+            dtype: j.str_of("dtype")?.to_string(),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub init_file: Option<String>,
+    pub kind: String, // "train" | "infer"
+    pub n_params: usize,
+    pub state: Vec<TensorSpec>,
+    pub scalars: Vec<TensorSpec>,
+    pub batch: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub config: Json,
+}
+
+impl ArtifactSpec {
+    fn from_json(j: &Json) -> Result<ArtifactSpec> {
+        let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            j.get(key)
+                .and_then(Json::as_arr)
+                .with_context(|| format!("missing '{key}'"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        Ok(ArtifactSpec {
+            file: j.str_of("file")?.to_string(),
+            init_file: j.get("init_file").and_then(Json::as_str).map(str::to_string),
+            kind: j.str_of("kind")?.to_string(),
+            n_params: j.usize_of("n_params")?,
+            state: specs("state")?,
+            scalars: specs("scalars")?,
+            batch: specs("batch")?,
+            outputs: specs("outputs")?,
+            config: j.get("config").cloned().unwrap_or(Json::Null),
+        })
+    }
+
+    /// Block shape (ns, es) for GNN artifacts.
+    pub fn block(&self) -> Option<(Vec<usize>, Vec<usize>)> {
+        let b = self.config.get("block")?;
+        let take = |key: &str| -> Option<Vec<usize>> {
+            b.get(key)?.as_arr()?.iter().map(Json::as_usize).collect()
+        };
+        Some((take("ns")?, take("es")?))
+    }
+
+    pub fn cfg_usize(&self, key: &str) -> Option<usize> {
+        self.config.get(key)?.as_usize()
+    }
+
+    /// Find a batch input's spec by name.
+    pub fn batch_spec(&self, name: &str) -> Option<&TensorSpec> {
+        self.batch.iter().find(|t| t.name == name)
+    }
+
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|t| t.name == name)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: HashMap<String, ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} — run `make artifacts` first", path.display()))?;
+        let j = Json::parse(&text)?;
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .context("manifest missing 'artifacts'")?;
+        let mut artifacts = HashMap::new();
+        for (name, spec) in arts {
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec::from_json(spec).with_context(|| format!("artifact {name}"))?,
+            );
+        }
+        Ok(Manifest { artifacts, dir: dir.to_path_buf() })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.get(name)?.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_and_has_core_artifacts() {
+        let m = Manifest::load(&crate::artifacts_dir()).unwrap();
+        for name in ["smoke", "rgcn_nc_train", "rgcn_lp_joint_k32_train", "lm_embed"] {
+            let a = m.get(name).unwrap();
+            assert!(!a.outputs.is_empty(), "{name} has outputs");
+        }
+        let t = m.get("rgcn_nc_train").unwrap();
+        assert_eq!(t.kind, "train");
+        assert_eq!(t.state.len(), 3 * t.n_params + 1);
+        // grad_lemb must be the last output for embedding-table updates.
+        assert_eq!(t.outputs.last().unwrap().name, "grad_lemb");
+        let (ns, es) = t.block().unwrap();
+        assert_eq!(ns.len(), es.len() + 1);
+    }
+}

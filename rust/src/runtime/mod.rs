@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and
+//! executes train/infer steps with device-resident state.
+//!
+//! Pipeline: `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute_b`.  HLO *text* is the interchange
+//! format (xla_extension 0.5.1 rejects jax≥0.5 binary protos).
+
+pub mod exec;
+pub mod gstf;
+pub mod manifest;
+pub mod state;
+
+pub use exec::{Executable, Runtime};
+pub use gstf::Tensor;
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+pub use state::{InferSession, StepOut, TrainState};

@@ -1,0 +1,101 @@
+//! Padded fixed-shape mini-batch blocks (the AOT contract).
+//!
+//! One shared node-slot array with the subset property: the first
+//! `ns[l+1]` slots of layer *l* are exactly the nodes of layer *l+1*;
+//! the first `ns[L]` slots are the batch targets.  Every array is
+//! padded to the manifest's static shape; padding nodes carry
+//! `nmask = 0`, padding edges `emask = 0` and point at slot 0.
+
+use crate::runtime::ArtifactSpec;
+
+/// Static block shape pulled from an artifact's manifest entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlockShape {
+    pub ns: Vec<usize>,
+    pub es: Vec<usize>,
+    pub fanout: usize,
+}
+
+impl BlockShape {
+    pub fn from_spec(spec: &ArtifactSpec) -> Option<BlockShape> {
+        let (ns, es) = spec.block()?;
+        let fanout = spec.cfg_usize("fanout").unwrap_or(5);
+        Some(BlockShape { ns, es, fanout })
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.es.len()
+    }
+
+    /// Target-slot count (ns[L]).
+    pub fn num_targets(&self) -> usize {
+        *self.ns.last().unwrap()
+    }
+}
+
+/// One hop's padded edge arrays.
+#[derive(Debug, Clone, Default)]
+pub struct LayerEdges {
+    pub src: Vec<i32>,
+    pub dst: Vec<i32>,
+    pub etype: Vec<i32>,
+    pub emask: Vec<f32>,
+}
+
+/// A sampled, padded message-flow block.
+#[derive(Debug, Clone)]
+pub struct Block {
+    pub shape: BlockShape,
+    /// (ntype, local id) per slot; padding slots repeat (0, 0) with mask 0.
+    pub nodes: Vec<(u32, u32)>,
+    pub nmask: Vec<f32>,
+    /// layers[l] connects src slots (< ns[l]) to dst slots (< ns[l+1]).
+    pub layers: Vec<LayerEdges>,
+    /// Number of real (unpadded) target nodes.
+    pub n_real_targets: usize,
+}
+
+impl Block {
+    /// Real target nodes (first `n_real_targets` slots).
+    pub fn targets(&self) -> &[(u32, u32)] {
+        &self.nodes[..self.n_real_targets]
+    }
+
+    /// Consistency checks used by tests and debug builds.
+    pub fn validate(&self) -> Result<(), String> {
+        let s = &self.shape;
+        if self.nodes.len() != s.ns[0] || self.nmask.len() != s.ns[0] {
+            return Err("node arrays must have ns[0] slots".into());
+        }
+        if self.layers.len() != s.es.len() {
+            return Err("layer count mismatch".into());
+        }
+        for (l, le) in self.layers.iter().enumerate() {
+            if le.src.len() != s.es[l] {
+                return Err(format!("layer {l}: edge arrays must have es[{l}] slots"));
+            }
+            for i in 0..le.src.len() {
+                if le.emask[i] > 0.0 {
+                    if le.src[i] as usize >= s.ns[l] {
+                        return Err(format!("layer {l}: src slot out of range"));
+                    }
+                    if le.dst[i] as usize >= s.ns[l + 1] {
+                        return Err(format!("layer {l}: dst slot out of range"));
+                    }
+                    if self.nmask[le.src[i] as usize] == 0.0 {
+                        return Err(format!("layer {l}: edge from padding slot"));
+                    }
+                } else if le.src[i] != 0 || le.dst[i] != 0 {
+                    return Err(format!("layer {l}: padding edge must point at slot 0"));
+                }
+            }
+        }
+        // Subset property: real targets are masked-in.
+        for i in 0..self.n_real_targets {
+            if self.nmask[i] == 0.0 {
+                return Err("real target has zero mask".into());
+            }
+        }
+        Ok(())
+    }
+}

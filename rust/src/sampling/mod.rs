@@ -1,0 +1,10 @@
+//! On-the-fly mini-batch sampling (DistDGL-style MFG blocks) plus the
+//! paper's four negative samplers (Appendix A.2.1).
+
+pub mod block;
+pub mod negative;
+pub mod neighbor;
+
+pub use block::{Block, BlockShape, LayerEdges};
+pub use negative::{NegSampler, NegativeBatch};
+pub use neighbor::{EdgeExclusion, NeighborSampler};

@@ -1,0 +1,194 @@
+//! Negative sampling for link prediction — the paper's Appendix A.2.1:
+//! uniform, joint, local-joint and in-batch samplers.
+//!
+//! The samplers differ in *how many distinct negative nodes* enter the
+//! mini-batch, which drives both the block size (seed slots) and the
+//! cross-partition traffic — the mechanism behind Table 6's epoch-time
+//! column.  Seed layout produced here:
+//!
+//!   [src_0 .. src_{B-1}, dst_0 .. dst_{B-1}, neg nodes ...]
+//!
+//! `neg_dst[b][k]` indexes into those seed slots.
+
+use crate::partition::PartitionBook;
+use crate::util::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NegSampler {
+    /// K fresh uniform nodes per positive: B*K negative seeds.
+    Uniform { k: usize },
+    /// K nodes shared across the whole batch (DGL's joint sampling).
+    Joint { k: usize },
+    /// Joint, but drawn from the coordinator's own partition.
+    LocalJoint { k: usize },
+    /// Destinations of other positives in the batch; no extra seeds.
+    InBatch { k: usize },
+}
+
+impl NegSampler {
+    pub fn k(&self) -> usize {
+        match *self {
+            NegSampler::Uniform { k }
+            | NegSampler::Joint { k }
+            | NegSampler::LocalJoint { k }
+            | NegSampler::InBatch { k } => k,
+        }
+    }
+
+    /// Distinct negative seed nodes this sampler adds to a batch of B.
+    pub fn extra_seeds(&self, batch: usize) -> usize {
+        match *self {
+            NegSampler::Uniform { k } => batch * k,
+            NegSampler::Joint { k } | NegSampler::LocalJoint { k } => k,
+            NegSampler::InBatch { .. } => 0,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            NegSampler::Uniform { k } => format!("uniform-{k}"),
+            NegSampler::Joint { k } => format!("joint-{k}"),
+            NegSampler::LocalJoint { k } => format!("local-joint-{k}"),
+            NegSampler::InBatch { .. } => "in-batch".to_string(),
+        }
+    }
+}
+
+/// The sampled negatives for one batch of B positive edges.
+#[derive(Debug, Clone)]
+pub struct NegativeBatch {
+    /// Extra seed nodes (dst-ntype local ids) appended after 2B slots.
+    pub neg_nodes: Vec<u32>,
+    /// [B][K] indices into the seed slot array.
+    pub neg_dst: Vec<Vec<i32>>,
+}
+
+/// Sample negatives for B positives with destination type `dst_ntype`
+/// of `n_dst` nodes.  `worker` matters for `LocalJoint` (its partition's
+/// nodes) and is the partition counted against for traffic elsewhere.
+pub fn sample_negatives(
+    sampler: NegSampler,
+    batch: usize,
+    n_dst: usize,
+    dst_ntype: usize,
+    book: &PartitionBook,
+    worker: u32,
+    rng: &mut Rng,
+) -> NegativeBatch {
+    let k = sampler.k();
+    match sampler {
+        NegSampler::Uniform { .. } => {
+            let mut neg_nodes = Vec::with_capacity(batch * k);
+            let mut neg_dst = Vec::with_capacity(batch);
+            for b in 0..batch {
+                let mut row = Vec::with_capacity(k);
+                for j in 0..k {
+                    neg_nodes.push(rng.gen_range(n_dst) as u32);
+                    row.push((2 * batch + b * k + j) as i32);
+                }
+                neg_dst.push(row);
+            }
+            NegativeBatch { neg_nodes, neg_dst }
+        }
+        NegSampler::Joint { .. } => {
+            let neg_nodes: Vec<u32> = (0..k).map(|_| rng.gen_range(n_dst) as u32).collect();
+            let row: Vec<i32> = (0..k).map(|j| (2 * batch + j) as i32).collect();
+            NegativeBatch { neg_nodes, neg_dst: vec![row; batch] }
+        }
+        NegSampler::LocalJoint { .. } => {
+            let local = book.nodes_of(dst_ntype, worker);
+            let pool = if local.is_empty() {
+                (0..n_dst as u32).collect::<Vec<_>>()
+            } else {
+                local
+            };
+            let neg_nodes: Vec<u32> =
+                (0..k).map(|_| pool[rng.gen_range(pool.len())]).collect();
+            let row: Vec<i32> = (0..k).map(|j| (2 * batch + j) as i32).collect();
+            NegativeBatch { neg_nodes, neg_dst: vec![row; batch] }
+        }
+        NegSampler::InBatch { .. } => {
+            // Exchange destinations between positives (Appendix A.2.1).
+            let mut neg_dst = Vec::with_capacity(batch);
+            for b in 0..batch {
+                let mut row = Vec::with_capacity(k);
+                if batch > 1 {
+                    for _ in 0..k {
+                        let mut other = rng.gen_range(batch - 1);
+                        if other >= b {
+                            other += 1;
+                        }
+                        row.push((batch + other) as i32); // other's dst slot
+                    }
+                } else {
+                    row.resize(k, batch as i32);
+                }
+                neg_dst.push(row);
+            }
+            NegativeBatch { neg_nodes: vec![], neg_dst }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn book(n: usize, parts: usize) -> PartitionBook {
+        PartitionBook::new(parts, vec![(0..n).map(|i| (i % parts) as u32).collect()])
+    }
+
+    #[test]
+    fn seed_counts_match_sampler() {
+        let bk = book(100, 4);
+        let mut rng = Rng::seed_from(0);
+        for (s, want) in [
+            (NegSampler::Uniform { k: 8 }, 16 * 8),
+            (NegSampler::Joint { k: 8 }, 8),
+            (NegSampler::LocalJoint { k: 8 }, 8),
+            (NegSampler::InBatch { k: 8 }, 0),
+        ] {
+            let nb = sample_negatives(s, 16, 100, 0, &bk, 0, &mut rng);
+            assert_eq!(nb.neg_nodes.len(), want, "{}", s.label());
+            assert_eq!(nb.neg_dst.len(), 16);
+            assert!(nb.neg_dst.iter().all(|r| r.len() == 8));
+        }
+    }
+
+    #[test]
+    fn in_batch_never_uses_own_dst() {
+        let bk = book(50, 1);
+        let mut rng = Rng::seed_from(1);
+        let nb = sample_negatives(NegSampler::InBatch { k: 4 }, 8, 50, 0, &bk, 0, &mut rng);
+        for (b, row) in nb.neg_dst.iter().enumerate() {
+            for &slot in row {
+                assert!(slot >= 8 && slot < 16, "must point at a dst slot");
+                assert_ne!(slot as usize, 8 + b, "positive {b} used its own dst");
+            }
+        }
+    }
+
+    #[test]
+    fn local_joint_stays_on_partition() {
+        let bk = book(100, 4);
+        let mut rng = Rng::seed_from(2);
+        let nb = sample_negatives(NegSampler::LocalJoint { k: 16 }, 4, 100, 0, &bk, 2, &mut rng);
+        for &id in &nb.neg_nodes {
+            assert_eq!(bk.part_of(0, id), 2);
+        }
+    }
+
+    #[test]
+    fn uniform_rows_are_private() {
+        let bk = book(100, 1);
+        let mut rng = Rng::seed_from(3);
+        let nb = sample_negatives(NegSampler::Uniform { k: 3 }, 4, 100, 0, &bk, 0, &mut rng);
+        // Each positive's slots are disjoint from the others'.
+        let mut seen = std::collections::HashSet::new();
+        for row in &nb.neg_dst {
+            for &s in row {
+                assert!(seen.insert(s));
+            }
+        }
+    }
+}

@@ -1,0 +1,327 @@
+//! On-the-fly inbound neighbor sampling over the partitioned graph.
+//!
+//! Degree-proportional across edge types: for each destination node the
+//! per-hop budget is `fanout` edges *total*; if the combined in-degree
+//! fits the budget all edges are taken, otherwise `fanout` distinct
+//! positions are drawn from the concatenated neighbor ranges.  This
+//! bounds every hop at `ns[l+1] * fanout` edges — exactly the padded
+//! shape the AOT artifacts were lowered with.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::graph::HeteroGraph;
+use crate::sampling::block::{Block, BlockShape, LayerEdges};
+use crate::util::Rng;
+
+/// Edges excluded from message passing: the batch's own target edges
+/// (anti-overfitting) and validation/test edges (anti-leakage), per the
+/// paper §3.3.4 / SpotTarget.
+#[derive(Default, Clone)]
+pub struct EdgeExclusion {
+    /// (etype, src, dst) triples to skip while sampling.
+    set: HashSet<(u32, u32, u32)>,
+}
+
+impl EdgeExclusion {
+    pub fn new() -> EdgeExclusion {
+        EdgeExclusion::default()
+    }
+
+    pub fn insert(&mut self, etype: u32, src: u32, dst: u32) {
+        self.set.insert((etype, src, dst));
+    }
+
+    /// Also exclude the reverse orientation under `rev_etype`.
+    pub fn insert_with_reverse(&mut self, etype: u32, rev_etype: Option<u32>, src: u32, dst: u32) {
+        self.insert(etype, src, dst);
+        if let Some(re) = rev_etype {
+            self.insert(re, dst, src);
+        }
+    }
+
+    #[inline]
+    pub fn contains(&self, etype: u32, src: u32, dst: u32) -> bool {
+        !self.set.is_empty() && self.set.contains(&(etype, src, dst))
+    }
+
+    pub fn len(&self) -> usize {
+        self.set.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.set.is_empty()
+    }
+}
+
+pub struct NeighborSampler<'g> {
+    pub graph: &'g HeteroGraph,
+    /// Per-ntype list of inbound edge types (cached).
+    etypes_into: Vec<Vec<usize>>,
+}
+
+impl<'g> NeighborSampler<'g> {
+    pub fn new(graph: &'g HeteroGraph) -> NeighborSampler<'g> {
+        let etypes_into = (0..graph.schema.ntypes.len())
+            .map(|nt| graph.etypes_into(nt))
+            .collect();
+        NeighborSampler { graph, etypes_into }
+    }
+
+    /// Sample a padded block for `seeds` (at most `shape.num_targets()`).
+    pub fn sample_block(
+        &self,
+        seeds: &[(u32, u32)],
+        shape: &BlockShape,
+        rng: &mut Rng,
+        exclude: &EdgeExclusion,
+    ) -> Block {
+        let l_count = shape.num_layers();
+        assert!(
+            seeds.len() <= shape.num_targets(),
+            "{} seeds exceed {} target slots",
+            seeds.len(),
+            shape.num_targets()
+        );
+        // Node slot table, seeded with targets; grows outward per hop.
+        let mut nodes: Vec<(u32, u32)> = Vec::with_capacity(shape.ns[0]);
+        let mut slot_of: HashMap<(u32, u32), i32> = HashMap::with_capacity(shape.ns[0]);
+        for &s in seeds {
+            if !slot_of.contains_key(&s) {
+                slot_of.insert(s, nodes.len() as i32);
+                nodes.push(s);
+            }
+        }
+        let n_real_targets = nodes.len();
+        let mut real_upto = vec![0usize; l_count + 1]; // real nodes per layer prefix
+        real_upto[l_count] = n_real_targets;
+        // Pad targets to ns[L].
+        nodes.resize(shape.ns[l_count], (0, 0));
+
+        // Hops from targets (layer L) outward to layer 0.
+        let mut layers_rev: Vec<LayerEdges> = Vec::with_capacity(l_count);
+        for l in (0..l_count).rev() {
+            let n_dst_real = real_upto[l + 1];
+            let mut le = LayerEdges {
+                src: vec![0; shape.es[l]],
+                dst: vec![0; shape.es[l]],
+                etype: vec![0; shape.es[l]],
+                emask: vec![0.0; shape.es[l]],
+            };
+            let mut cursor = 0usize;
+            // New frontier nodes append after the current prefix.
+            nodes.truncate(shape.ns[l + 1]); // drop padding before extending
+            debug_assert_eq!(nodes.len(), shape.ns[l + 1]);
+            for dslot in 0..n_dst_real {
+                let (dnt, did) = nodes[dslot];
+                let mut picks = self.pick_neighbors(dnt, did, shape.fanout, rng, exclude);
+                for (et, snt, sid) in picks.drain(..) {
+                    let key = (snt, sid);
+                    let sslot = *slot_of.entry(key).or_insert_with(|| {
+                        nodes.push(key);
+                        (nodes.len() - 1) as i32
+                    });
+                    le.src[cursor] = sslot;
+                    le.dst[cursor] = dslot as i32;
+                    le.etype[cursor] = et as i32;
+                    le.emask[cursor] = 1.0;
+                    cursor += 1;
+                }
+            }
+            real_upto[l] = nodes.len();
+            assert!(
+                nodes.len() <= shape.ns[l],
+                "hop {l} overflowed node slots: {} > {}",
+                nodes.len(),
+                shape.ns[l]
+            );
+            nodes.resize(shape.ns[l], (0, 0));
+            layers_rev.push(le);
+        }
+        layers_rev.reverse();
+
+        // Node mask: real slots per the deepest layer they belong to.
+        let mut nmask = vec![0.0f32; shape.ns[0]];
+        // All slots < real_upto[0] that were ever real.  Because layers
+        // share the prefix, a slot is real iff its index < real count of
+        // the layer that introduced it; the union is simply [0, real_upto[0])
+        // minus padded gaps — padded gaps only exist past each layer's
+        // real count but before ns[l+1]... so mark from the slot table:
+        for (i, &(nt, id)) in nodes.iter().enumerate() {
+            // Padding slots are (0,0) duplicates; the genuine slot for
+            // (0,0) is the one registered in slot_of.
+            if slot_of.get(&(nt, id)) == Some(&(i as i32)) {
+                nmask[i] = 1.0;
+            }
+        }
+
+        let block = Block {
+            shape: shape.clone(),
+            nodes,
+            nmask,
+            layers: layers_rev,
+            n_real_targets,
+        };
+        debug_assert_eq!(block.validate(), Ok(()));
+        block
+    }
+
+    /// Pick up to `fanout` inbound neighbors of (dnt, did), degree-
+    /// proportional across inbound edge types; all edges if they fit.
+    fn pick_neighbors(
+        &self,
+        dnt: u32,
+        did: u32,
+        fanout: usize,
+        rng: &mut Rng,
+        exclude: &EdgeExclusion,
+    ) -> Vec<(usize, u32, u32)> {
+        let mut out = Vec::with_capacity(fanout);
+        let ets = &self.etypes_into[dnt as usize];
+        let mut total = 0usize;
+        for &et in ets {
+            total += self.graph.edges[et].in_csr.degree(did as usize);
+        }
+        if total == 0 {
+            return out;
+        }
+        let push = |et: usize, sid: u32, out: &mut Vec<(usize, u32, u32)>| {
+            if !exclude.contains(et as u32, sid, did) {
+                let snt = self.graph.schema.etypes[et].src_ntype as u32;
+                out.push((et, snt, sid));
+            }
+        };
+        if total <= fanout {
+            for &et in ets {
+                for &sid in self.graph.edges[et].in_csr.neighbors(did as usize) {
+                    push(et, sid, &mut out);
+                }
+            }
+        } else {
+            // Sample distinct positions in the concatenated ranges.
+            for pos in rng.sample_distinct(total, fanout) {
+                let mut p = pos;
+                for &et in ets {
+                    let deg = self.graph.edges[et].in_csr.degree(did as usize);
+                    if p < deg {
+                        push(et, self.graph.edges[et].in_csr.neighbors(did as usize)[p], &mut out);
+                        break;
+                    }
+                    p -= deg;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{EdgeTypeDef, Schema};
+
+    fn star_graph(leaves: usize) -> HeteroGraph {
+        // node 0 is the hub; leaves point at it.
+        let schema = Schema::new(
+            vec!["v".into()],
+            vec![EdgeTypeDef { name: "e".into(), src_ntype: 0, dst_ntype: 0 }],
+        );
+        let mut g = HeteroGraph::new(schema, vec![leaves + 1]);
+        let src: Vec<u32> = (1..=leaves as u32).collect();
+        let dst = vec![0u32; leaves];
+        g.set_edges(0, src, dst);
+        g
+    }
+
+    fn shape(batch: usize, fanout: usize, layers: usize) -> BlockShape {
+        let rnd = |x: usize| x.div_ceil(8) * 8;
+        let mut ns = vec![rnd(batch)];
+        let mut es = vec![];
+        for _ in 0..layers {
+            es.push(ns.last().unwrap() * fanout);
+            ns.push(rnd(ns.last().unwrap() * (fanout + 1)));
+        }
+        ns.reverse();
+        es.reverse();
+        BlockShape { ns, es, fanout }
+    }
+
+    #[test]
+    fn respects_fanout_budget() {
+        let g = star_graph(100);
+        let s = NeighborSampler::new(&g);
+        let sh = shape(8, 5, 1);
+        let mut rng = Rng::seed_from(0);
+        let block = s.sample_block(&[(0, 0)], &sh, &mut rng, &EdgeExclusion::new());
+        block.validate().unwrap();
+        let real: usize = block.layers[0].emask.iter().map(|&m| m as usize).sum();
+        assert_eq!(real, 5, "hub with 100 in-neighbors must sample exactly fanout");
+        // Sampled neighbors are distinct.
+        let set: HashSet<i32> = block.layers[0]
+            .src
+            .iter()
+            .zip(&block.layers[0].emask)
+            .filter(|(_, &m)| m > 0.0)
+            .map(|(&s, _)| s)
+            .collect();
+        assert_eq!(set.len(), 5);
+    }
+
+    #[test]
+    fn takes_all_edges_when_degree_small() {
+        let g = star_graph(3);
+        let s = NeighborSampler::new(&g);
+        let sh = shape(8, 5, 1);
+        let mut rng = Rng::seed_from(1);
+        let block = s.sample_block(&[(0, 0)], &sh, &mut rng, &EdgeExclusion::new());
+        let real: usize = block.layers[0].emask.iter().map(|&m| m as usize).sum();
+        assert_eq!(real, 3);
+    }
+
+    #[test]
+    fn excluded_edges_never_sampled() {
+        let g = star_graph(4);
+        let s = NeighborSampler::new(&g);
+        let sh = shape(8, 5, 1);
+        let mut ex = EdgeExclusion::new();
+        ex.insert(0, 2, 0); // leaf 2 -> hub excluded
+        for seed in 0..20 {
+            let mut rng = Rng::seed_from(seed);
+            let block = s.sample_block(&[(0, 0)], &sh, &mut rng, &ex);
+            for (i, &m) in block.layers[0].emask.iter().enumerate() {
+                if m > 0.0 {
+                    let slot = block.layers[0].src[i] as usize;
+                    assert_ne!(block.nodes[slot], (0, 2), "excluded edge sampled");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn two_hop_subset_property() {
+        let g = star_graph(50);
+        let s = NeighborSampler::new(&g);
+        let sh = shape(4, 3, 2);
+        let mut rng = Rng::seed_from(2);
+        let seeds = [(0u32, 0u32), (0, 1), (0, 2)];
+        let block = s.sample_block(&seeds, &sh, &mut rng, &EdgeExclusion::new());
+        block.validate().unwrap();
+        assert_eq!(block.n_real_targets, 3);
+        assert_eq!(&block.nodes[..3], &seeds);
+        // Layer-1 dst slots must reference target prefix.
+        for (i, &m) in block.layers[1].emask.iter().enumerate() {
+            if m > 0.0 {
+                assert!(block.layers[1].dst[i] < 3);
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_seeds_dedup() {
+        let g = star_graph(10);
+        let s = NeighborSampler::new(&g);
+        let sh = shape(8, 3, 1);
+        let mut rng = Rng::seed_from(3);
+        let block = s.sample_block(&[(0, 0), (0, 0), (0, 1)], &sh, &mut rng, &EdgeExclusion::new());
+        assert_eq!(block.n_real_targets, 2);
+    }
+}

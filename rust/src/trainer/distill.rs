@@ -1,0 +1,225 @@
+//! GNN → LM distillation (paper §3.3.3, Table 5).
+//!
+//! A trained GNN teacher produces node embeddings; a graph-free student
+//! LM ("DistilBERT": 1 transformer layer) is trained with MSE to match
+//! them.  Evaluation follows the paper: freeze each student, train an
+//! MLP probe on its embeddings, compare probe accuracy.
+
+use anyhow::Result;
+
+use crate::dataloader::{assemble_block_inputs, GsDataset, Split};
+use crate::runtime::{InferSession, Runtime, Tensor, TrainState};
+use crate::sampling::{BlockShape, EdgeExclusion, NeighborSampler};
+use crate::trainer::TrainOptions;
+use crate::util::Rng;
+
+pub struct DistillTrainer {
+    pub teacher_emb_artifact: String, // e.g. rgcn_nc_emb
+    pub distill_artifact: String,     // student MSE train step
+    pub student_embed_artifact: String,
+}
+
+impl Default for DistillTrainer {
+    fn default() -> Self {
+        DistillTrainer {
+            teacher_emb_artifact: "rgcn_nc_emb".into(),
+            distill_artifact: "distill_train".into(),
+            student_embed_artifact: "distill_embed".into(),
+        }
+    }
+}
+
+impl DistillTrainer {
+    /// Teacher embeddings for the given node ids (target ntype).
+    pub fn teacher_embeddings(
+        &self,
+        rt: &Runtime,
+        ds: &GsDataset,
+        teacher_params: &[(String, Tensor)],
+        ids: &[u32],
+        seed: u64,
+    ) -> Result<Vec<f32>> {
+        let sess = InferSession::new(rt, &self.teacher_emb_artifact, teacher_params)?;
+        let spec = sess.exe.spec.clone();
+        let shape = BlockShape::from_spec(&spec).unwrap();
+        let b = spec.cfg_usize("batch").unwrap_or(shape.num_targets());
+        let h = spec.outputs[0].shape[1];
+        let sampler = NeighborSampler::new(&ds.graph);
+        let mut rng = Rng::seed_from(seed);
+        let mut out = vec![0.0f32; ids.len() * h];
+        for (ci, chunk) in ids.chunks(b).enumerate() {
+            let seeds: Vec<(u32, u32)> =
+                chunk.iter().map(|&i| (ds.target_ntype as u32, i)).collect();
+            let block = sampler.sample_block(&seeds, &shape, &mut rng, &EdgeExclusion::new());
+            let (batch, _) = assemble_block_inputs(ds, &block, &spec, 0)?;
+            let res = sess.infer(rt, &batch)?;
+            let emb = res[0].as_f32()?;
+            // Block targets are dedup'd in seed order == chunk order.
+            for i in 0..chunk.len() {
+                let dst = (ci * b + i) * h;
+                out[dst..dst + h].copy_from_slice(&emb[i * h..(i + 1) * h]);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Distill: train the student to match teacher embeddings via MSE.
+    /// Returns (final loss, student state).
+    pub fn distill(
+        &self,
+        rt: &Runtime,
+        ds: &GsDataset,
+        teacher_params: &[(String, Tensor)],
+        opts: &TrainOptions,
+    ) -> Result<(f32, TrainState)> {
+        let spec = rt.manifest.get(&self.distill_artifact)?.clone();
+        let b = spec.batch_spec("tokens").unwrap().shape[0];
+        let s = spec.batch_spec("tokens").unwrap().shape[1];
+        let h = spec.batch_spec("teacher").unwrap().shape[1];
+        let nt = ds.target_ntype;
+        let store = ds.tokens[nt].as_ref().expect("target ntype needs text");
+        let n = store.num_rows();
+        let mut st = TrainState::new(rt, &self.distill_artifact)?;
+        let mut rng = Rng::seed_from(opts.seed ^ 0xd157);
+        let mut last = 0.0f32;
+        for _epoch in 0..opts.epochs {
+            let mut ids: Vec<u32> = (0..n as u32).collect();
+            rng.shuffle(&mut ids);
+            ids.truncate(2048); // distillation subsample per epoch
+            let mut loss_sum = 0.0;
+            let mut steps = 0;
+            for chunk in ids.chunks(b) {
+                let teacher = self.teacher_embeddings(rt, ds, teacher_params, chunk, rng.next_u64())?;
+                let mut teacher_pad = vec![0.0f32; b * h];
+                teacher_pad[..teacher.len()].copy_from_slice(&teacher);
+                let mut tokens = vec![0i32; b * s];
+                let mut lmask = vec![0.0f32; b];
+                for (i, &id) in chunk.iter().enumerate() {
+                    tokens[i * s..(i + 1) * s].copy_from_slice(store.row(id));
+                    lmask[i] = 1.0;
+                }
+                let batch = vec![
+                    Tensor::I32 { shape: vec![b, s], data: tokens },
+                    Tensor::F32 { shape: vec![b, h], data: teacher_pad },
+                    Tensor::F32 { shape: vec![b], data: lmask },
+                ];
+                let out = st.step(rt, &[opts.lr], &batch)?;
+                loss_sum += out.loss;
+                steps += 1;
+            }
+            last = loss_sum / steps.max(1) as f32;
+            if opts.verbose {
+                eprintln!("[distill] epoch {_epoch}: mse {last:.5}");
+            }
+        }
+        Ok((last, st))
+    }
+
+    /// Student embeddings for node ids via its embed artifact.
+    pub fn student_embeddings(
+        &self,
+        rt: &Runtime,
+        ds: &GsDataset,
+        artifact: &str,
+        student_params: &[(String, Tensor)],
+        ids: &[u32],
+    ) -> Result<(Vec<f32>, usize)> {
+        let sess = InferSession::new(rt, artifact, student_params)?;
+        let spec = sess.exe.spec.clone();
+        let b = spec.batch_spec("tokens").unwrap().shape[0];
+        let s = spec.batch_spec("tokens").unwrap().shape[1];
+        let h = spec.outputs[0].shape[1];
+        let store = ds.tokens[ds.target_ntype].as_ref().unwrap();
+        let mut out = vec![0.0f32; ids.len() * h];
+        for (ci, chunk) in ids.chunks(b).enumerate() {
+            let mut tokens = vec![0i32; b * s];
+            for (i, &id) in chunk.iter().enumerate() {
+                tokens[i * s..(i + 1) * s].copy_from_slice(store.row(id));
+            }
+            let res = sess.infer(rt, &[Tensor::I32 { shape: vec![b, s], data: tokens }])?;
+            let emb = res[0].as_f32()?;
+            for i in 0..chunk.len() {
+                let dst = (ci * b + i) * h;
+                out[dst..dst + h].copy_from_slice(&emb[i * h..(i + 1) * h]);
+            }
+        }
+        Ok((out, h))
+    }
+
+    /// Paper Table-5 evaluation: train an MLP probe on embeddings of the
+    /// train split, report probe accuracy on the test split.
+    pub fn probe_accuracy(
+        &self,
+        rt: &Runtime,
+        ds: &GsDataset,
+        emb: &[f32],
+        h: usize,
+        ids: &[u32],
+        opts: &TrainOptions,
+    ) -> Result<f64> {
+        let labels_store = ds.node_labels();
+        let spec = rt.manifest.get("mlp_train")?.clone();
+        let b = spec.batch_spec("emb").unwrap().shape[0];
+        let hd = spec.batch_spec("emb").unwrap().shape[1];
+        assert!(h <= hd);
+        let mut st = TrainState::new(rt, "mlp_train")?;
+        let id_index: std::collections::HashMap<u32, usize> =
+            ids.iter().enumerate().map(|(i, &x)| (x, i)).collect();
+        let mut rng = Rng::seed_from(opts.seed ^ 0x9206e);
+        let train: Vec<u32> = ids
+            .iter()
+            .copied()
+            .filter(|&i| labels_store.split[i as usize] == Split::Train)
+            .collect();
+        let test: Vec<u32> = ids
+            .iter()
+            .copied()
+            .filter(|&i| labels_store.split[i as usize] == Split::Test)
+            .collect();
+        let fill = |chunk: &[u32]| {
+            let mut e = vec![0.0f32; b * hd];
+            let mut labels = vec![0i32; b];
+            let mut lmask = vec![0.0f32; b];
+            for (i, &id) in chunk.iter().enumerate() {
+                let row = id_index[&id];
+                e[i * hd..i * hd + h].copy_from_slice(&emb[row * h..(row + 1) * h]);
+                labels[i] = labels_store.labels[id as usize];
+                lmask[i] = 1.0;
+            }
+            (e, labels, lmask)
+        };
+        for _epoch in 0..opts.epochs.max(20) {
+            let mut tids = train.clone();
+            rng.shuffle(&mut tids);
+            for chunk in tids.chunks(b) {
+                let (e, labels, lmask) = fill(chunk);
+                let batch = vec![
+                    Tensor::F32 { shape: vec![b, hd], data: e },
+                    Tensor::I32 { shape: vec![b], data: labels },
+                    Tensor::F32 { shape: vec![b], data: lmask },
+                ];
+                st.step(rt, &[1e-2], &batch)?;
+            }
+        }
+        // Probe accuracy on test ids.
+        let params = st.params_host()?;
+        let sess = InferSession::new(rt, "mlp_logits", &params)?;
+        let c = sess.exe.spec.outputs[0].shape[1];
+        let mut correct = 0;
+        let mut total = 0;
+        for chunk in test.chunks(b) {
+            let (e, labels, _lmask) = fill(chunk);
+            let out = sess.infer(rt, &[Tensor::F32 { shape: vec![b, hd], data: e }])?;
+            let logits = out[0].as_f32()?;
+            let (cc, tt) = crate::eval::accuracy(
+                &logits[..chunk.len() * c],
+                c,
+                &labels[..chunk.len()],
+                &vec![1.0; chunk.len()],
+            );
+            correct += cc;
+            total += tt;
+        }
+        Ok(correct as f64 / total.max(1) as f64)
+    }
+}

@@ -1,0 +1,285 @@
+//! Language-model stages (paper §3.3.1, Table 2, Figure 5).
+//!
+//! * `pretrain_mlm` — masked-token "pre-training" on the node corpus
+//!   (the stand-in for off-the-shelf BERT weights);
+//! * `finetune_nc` — task fine-tuning on node labels;
+//! * `finetune_lp` — graph-aware fine-tuning with contrastive LP over
+//!   the LP target edges (the paper's FTLP);
+//! * `embed_all` — run the (fine-tuned) encoder over every text node
+//!   and install the embeddings into the engine's text store — the
+//!   "compute BERT embeddings" stage whose wall-clock Table 2 reports.
+
+use anyhow::{bail, Result};
+
+use crate::dataloader::{GsDataset, Split};
+use crate::dist::DistTensor;
+use crate::runtime::{InferSession, Runtime, Tensor, TrainState};
+use crate::trainer::TrainOptions;
+use crate::util::Rng;
+
+pub struct LmTrainer {
+    pub mlm_artifact: String,
+    pub nc_artifact: String,
+    pub lp_artifact: String,
+    pub embed_artifact: String,
+}
+
+impl Default for LmTrainer {
+    fn default() -> Self {
+        LmTrainer {
+            mlm_artifact: "lm_mlm_train".into(),
+            nc_artifact: "lm_nc_train".into(),
+            lp_artifact: "lm_lp_train".into(),
+            embed_artifact: "lm_embed".into(),
+        }
+    }
+}
+
+/// Collect token rows for node ids, padding the batch by repetition.
+fn token_batch(ds: &GsDataset, ntype: usize, ids: &[u32], b: usize, s: usize) -> Vec<i32> {
+    let store = ds.tokens[ntype].as_ref().expect("ntype has no tokens");
+    let mut out = vec![0i32; b * s];
+    for i in 0..b {
+        let id = ids[i.min(ids.len() - 1)];
+        out[i * s..(i + 1) * s].copy_from_slice(store.row(id));
+    }
+    out
+}
+
+impl LmTrainer {
+    /// Masked-token pretraining over all text nodes of `ntype`.
+    /// Returns (mean last-epoch loss, trained state).
+    pub fn pretrain_mlm(
+        &self,
+        rt: &Runtime,
+        ds: &GsDataset,
+        ntype: usize,
+        opts: &TrainOptions,
+    ) -> Result<(f32, TrainState)> {
+        let spec = rt.manifest.get(&self.mlm_artifact)?.clone();
+        let b = spec.batch_spec("tokens").unwrap().shape[0];
+        let s = spec.batch_spec("tokens").unwrap().shape[1];
+        let mut st = TrainState::new(rt, &self.mlm_artifact)?;
+        let n = ds.tokens[ntype].as_ref().unwrap().num_rows();
+        let mut rng = Rng::seed_from(opts.seed ^ 0x1717);
+        let mut last = 0.0;
+        for _epoch in 0..opts.epochs {
+            let mut ids: Vec<u32> = (0..n as u32).collect();
+            rng.shuffle(&mut ids);
+            let mut loss_sum = 0.0f32;
+            let mut steps = 0;
+            for chunk in ids.chunks(b) {
+                let mut tokens = token_batch(ds, ntype, chunk, b, s);
+                let mut positions = vec![0i32; b];
+                let mut labels = vec![0i32; b];
+                let mut lmask = vec![0.0f32; b];
+                for i in 0..chunk.len() {
+                    // Mask one random non-pad position.
+                    let p = rng.gen_range(s);
+                    positions[i] = p as i32;
+                    labels[i] = tokens[i * s + p];
+                    tokens[i * s + p] = 1; // [MASK]
+                    lmask[i] = 1.0;
+                }
+                let batch = vec![
+                    Tensor::I32 { shape: vec![b, s], data: tokens },
+                    Tensor::I32 { shape: vec![b], data: positions },
+                    Tensor::I32 { shape: vec![b], data: labels },
+                    Tensor::F32 { shape: vec![b], data: lmask },
+                ];
+                let out = st.step(rt, &[opts.lr], &batch)?;
+                loss_sum += out.loss;
+                steps += 1;
+            }
+            last = loss_sum / steps.max(1) as f32;
+            if opts.verbose {
+                eprintln!("[lm mlm] epoch {_epoch}: loss {last:.4}");
+            }
+        }
+        Ok((last, st))
+    }
+
+    /// Fine-tune with node-classification labels (FTNC).  `base` params
+    /// (e.g. from pretraining) seed the encoder.
+    pub fn finetune_nc(
+        &self,
+        rt: &Runtime,
+        ds: &GsDataset,
+        base: &[(String, Tensor)],
+        opts: &TrainOptions,
+    ) -> Result<(f32, TrainState)> {
+        let spec = rt.manifest.get(&self.nc_artifact)?.clone();
+        let b = spec.batch_spec("tokens").unwrap().shape[0];
+        let s = spec.batch_spec("tokens").unwrap().shape[1];
+        let nt = ds.target_ntype;
+        if ds.tokens[nt].is_none() {
+            bail!("target ntype has no text");
+        }
+        let mut st = TrainState::with_params(rt, &self.nc_artifact, base)?;
+        let labels_store = ds.node_labels();
+        let train_ids = labels_store.ids_in(Split::Train);
+        let mut rng = Rng::seed_from(opts.seed ^ 0xf17c);
+        let mut last = 0.0;
+        for _epoch in 0..opts.epochs {
+            let mut ids = train_ids.clone();
+            rng.shuffle(&mut ids);
+            let mut loss_sum = 0.0f32;
+            let mut steps = 0;
+            for chunk in ids.chunks(b) {
+                let tokens = token_batch(ds, nt, chunk, b, s);
+                let mut labels = vec![0i32; b];
+                let mut lmask = vec![0.0f32; b];
+                for (i, &id) in chunk.iter().enumerate() {
+                    labels[i] = labels_store.labels[id as usize];
+                    lmask[i] = 1.0;
+                }
+                let batch = vec![
+                    Tensor::I32 { shape: vec![b, s], data: tokens },
+                    Tensor::I32 { shape: vec![b], data: labels },
+                    Tensor::F32 { shape: vec![b], data: lmask },
+                ];
+                let out = st.step(rt, &[opts.lr], &batch)?;
+                loss_sum += out.loss;
+                steps += 1;
+            }
+            last = loss_sum / steps.max(1) as f32;
+            if opts.verbose {
+                eprintln!("[lm ftnc] epoch {_epoch}: loss {last:.4}");
+            }
+        }
+        Ok((last, st))
+    }
+
+    /// Graph-aware fine-tuning with contrastive link prediction (FTLP)
+    /// over the dataset's LP edges (both endpoints must carry text).
+    pub fn finetune_lp(
+        &self,
+        rt: &Runtime,
+        ds: &GsDataset,
+        base: &[(String, Tensor)],
+        opts: &TrainOptions,
+    ) -> Result<(f32, TrainState)> {
+        let spec = rt.manifest.get(&self.lp_artifact)?.clone();
+        let b = spec.batch_spec("src_tokens").unwrap().shape[0];
+        let s = spec.batch_spec("src_tokens").unwrap().shape[1];
+        let k = spec.batch_spec("neg_tokens").unwrap().shape[0];
+        let lp = ds.lp.as_ref().expect("no LP task");
+        let def = &ds.graph.schema.etypes[lp.etype];
+        let es = &ds.graph.edges[lp.etype];
+        if ds.tokens[def.src_ntype].is_none() || ds.tokens[def.dst_ntype].is_none() {
+            bail!("LP endpoints lack text for FTLP");
+        }
+        let n_dst = ds.graph.num_nodes[def.dst_ntype];
+        let mut st = TrainState::with_params(rt, &self.lp_artifact, base)?;
+        let train_ids = lp.edge_ids_in(Split::Train);
+        let mut rng = Rng::seed_from(opts.seed ^ 0xf17b);
+        let mut last = 0.0;
+        for _epoch in 0..opts.epochs {
+            let mut ids = train_ids.clone();
+            rng.shuffle(&mut ids);
+            ids.truncate(4096); // scaled-down FTLP epoch
+            let mut loss_sum = 0.0f32;
+            let mut steps = 0;
+            for chunk in ids.chunks(b) {
+                let srcs: Vec<u32> = chunk.iter().map(|&e| es.src[e as usize]).collect();
+                let dsts: Vec<u32> = chunk.iter().map(|&e| es.dst[e as usize]).collect();
+                let negs: Vec<u32> = (0..k).map(|_| rng.gen_range(n_dst) as u32).collect();
+                let mut pmask = vec![0.0f32; b];
+                for i in 0..chunk.len() {
+                    pmask[i] = 1.0;
+                }
+                let batch = vec![
+                    Tensor::I32 { shape: vec![b, s], data: token_batch(ds, def.src_ntype, &srcs, b, s) },
+                    Tensor::I32 { shape: vec![b, s], data: token_batch(ds, def.dst_ntype, &dsts, b, s) },
+                    Tensor::I32 { shape: vec![k, s], data: token_batch(ds, def.dst_ntype, &negs, k, s) },
+                    Tensor::F32 { shape: vec![b], data: pmask },
+                ];
+                let out = st.step(rt, &[opts.lr], &batch)?;
+                loss_sum += out.loss;
+                steps += 1;
+            }
+            last = loss_sum / steps.max(1) as f32;
+            if opts.verbose {
+                eprintln!("[lm ftlp] epoch {_epoch}: loss {last:.4}");
+            }
+        }
+        Ok((last, st))
+    }
+
+    /// Compute LM embeddings for every text node of each ntype and
+    /// install them into `engine.text_emb` (the Table-2 "LM Time Cost"
+    /// stage).  Returns elapsed seconds.
+    pub fn embed_all(
+        &self,
+        rt: &Runtime,
+        ds: &mut GsDataset,
+        lm_params: &[(String, Tensor)],
+    ) -> Result<f64> {
+        let t0 = std::time::Instant::now();
+        let sess = InferSession::new(rt, &self.embed_artifact, lm_params)?;
+        let spec = sess.exe.spec.clone();
+        let b = spec.batch_spec("tokens").unwrap().shape[0];
+        let s = spec.batch_spec("tokens").unwrap().shape[1];
+        let h = spec.outputs[0].shape[1];
+        for nt in 0..ds.graph.schema.ntypes.len() {
+            if ds.tokens[nt].is_none() {
+                continue;
+            }
+            let n = ds.tokens[nt].as_ref().unwrap().num_rows();
+            let mut emb = vec![0.0f32; n * h];
+            let ids: Vec<u32> = (0..n as u32).collect();
+            for chunk in ids.chunks(b) {
+                let tokens = token_batch(ds, nt, chunk, b, s);
+                let out = sess.infer(rt, &[Tensor::I32 { shape: vec![b, s], data: tokens }])?;
+                let rows = out[0].as_f32()?;
+                for (i, &id) in chunk.iter().enumerate() {
+                    emb[id as usize * h..(id as usize + 1) * h]
+                        .copy_from_slice(&rows[i * h..(i + 1) * h]);
+                }
+            }
+            ds.engine.text_emb[nt] = DistTensor::from_data(
+                nt,
+                h,
+                emb,
+                ds.engine.book.clone(),
+                ds.engine.counters.clone(),
+            );
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    /// Accuracy of "LM alone" on the NC task via `lm_nc_logits`.
+    pub fn evaluate_nc(
+        &self,
+        rt: &Runtime,
+        ds: &GsDataset,
+        st: &TrainState,
+        split: Split,
+    ) -> Result<f64> {
+        let params = st.params_host()?;
+        let sess = InferSession::new(rt, "lm_nc_logits", &params)?;
+        let spec = sess.exe.spec.clone();
+        let b = spec.batch_spec("tokens").unwrap().shape[0];
+        let s = spec.batch_spec("tokens").unwrap().shape[1];
+        let c = spec.outputs[0].shape[1];
+        let nt = ds.target_ntype;
+        let labels_store = ds.node_labels();
+        let ids = labels_store.ids_in(split);
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for chunk in ids.chunks(b) {
+            let tokens = token_batch(ds, nt, chunk, b, s);
+            let out = sess.infer(rt, &[Tensor::I32 { shape: vec![b, s], data: tokens }])?;
+            let logits = out[0].as_f32()?;
+            let (cc, tt) = crate::eval::accuracy(
+                &logits[..chunk.len() * c],
+                c,
+                &chunk.iter().map(|&i| labels_store.labels[i as usize]).collect::<Vec<_>>(),
+                &vec![1.0; chunk.len()],
+            );
+            correct += cc;
+            total += tt;
+        }
+        Ok(correct as f64 / total.max(1) as f64)
+    }
+}

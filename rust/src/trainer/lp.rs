@@ -1,0 +1,226 @@
+//! Link-prediction trainer (paper §3.3.4 + Appendix A).
+//!
+//! Supports both losses via the artifact's `loss_sel` scalar
+//! (1 = contrastive, 0 = cross entropy) and all four negative
+//! samplers.  Evaluation computes MRR against K sampled negatives from
+//! GNN embeddings + the DistMult relation table — scoring happens in
+//! Rust, embeddings come from the `*_lp_emb` infer artifact.
+
+use anyhow::Result;
+
+use crate::dataloader::{
+    apply_lemb_grads, assemble_block_inputs, GsDataset, LinkPredictionDataLoader, Split,
+};
+use crate::eval::{distmult, reciprocal_rank, Mean};
+use crate::runtime::{InferSession, Runtime, TrainState};
+use crate::sampling::{EdgeExclusion, NegSampler, NeighborSampler};
+use crate::trainer::TrainOptions;
+use crate::util::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LpLoss {
+    Contrastive,
+    CrossEntropy,
+}
+
+impl LpLoss {
+    pub fn sel(&self) -> f32 {
+        match self {
+            LpLoss::Contrastive => 1.0,
+            LpLoss::CrossEntropy => 0.0,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            LpLoss::Contrastive => "contrastive",
+            LpLoss::CrossEntropy => "cross-entropy",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct LpReport {
+    pub epoch_losses: Vec<f32>,
+    pub epoch_times: Vec<f64>,
+    pub epoch_val_mrr: Vec<f64>,
+    pub val_mrr: f64,
+    pub test_mrr: f64,
+    /// Epochs until best val MRR (the paper's #epochs column).
+    pub best_epoch: usize,
+    pub steps: usize,
+}
+
+pub struct LpTrainer {
+    pub train_artifact: String,
+    pub emb_artifact: String,
+    pub loss: LpLoss,
+    pub sampler: NegSampler,
+    /// Cap on train edges per epoch (scaled-down epochs).
+    pub max_train_edges: Option<usize>,
+    pub eval_every_epoch: bool,
+}
+
+impl LpTrainer {
+    pub fn new(
+        train_artifact: &str,
+        emb_artifact: &str,
+        loss: LpLoss,
+        sampler: NegSampler,
+    ) -> LpTrainer {
+        LpTrainer {
+            train_artifact: train_artifact.to_string(),
+            emb_artifact: emb_artifact.to_string(),
+            loss,
+            sampler,
+            max_train_edges: None,
+            eval_every_epoch: true,
+        }
+    }
+
+    pub fn fit(
+        &self,
+        rt: &Runtime,
+        ds: &mut GsDataset,
+        opts: &TrainOptions,
+    ) -> Result<(LpReport, TrainState)> {
+        let spec = rt.manifest.get(&self.train_artifact)?.clone();
+        let mut st = TrainState::new(rt, &self.train_artifact)?;
+        let ldim = spec.batch_spec("lemb").map(|t| t.shape[1]).unwrap_or(0);
+        let mut rng = Rng::seed_from(opts.seed ^ 0x1b9);
+        let mut report = LpReport::default();
+        let mut best = (0usize, 0.0f64);
+
+        let all_train = ds.lp.as_ref().expect("no LP task").edge_ids_in(Split::Train);
+        for epoch in 0..opts.epochs {
+            let t0 = std::time::Instant::now();
+            let mut ids = all_train.clone();
+            rng.shuffle(&mut ids);
+            if let Some(cap) = self.max_train_edges {
+                ids.truncate(cap);
+            }
+            let loader = LinkPredictionDataLoader::new(&spec, self.sampler)?;
+            let b = loader.batch_size();
+            let mut epoch_loss = 0.0f32;
+            let mut steps = 0usize;
+            for (bi, chunk) in ids.chunks(b).enumerate() {
+                let worker = (bi % opts.n_workers) as u32;
+                let (batch, touch) = loader.batch(ds, chunk, &mut rng, worker)?;
+                let out = st.step(rt, &[opts.lr, self.loss.sel()], &batch)?;
+                if let (Some(g), true) = (&out.grad_lemb, ldim > 0) {
+                    apply_lemb_grads(&mut ds.engine, &touch, g, ldim, opts.lr);
+                }
+                epoch_loss += out.loss;
+                steps += 1;
+            }
+            report.epoch_losses.push(epoch_loss / steps.max(1) as f32);
+            report.epoch_times.push(t0.elapsed().as_secs_f64());
+            report.steps += steps;
+            if self.eval_every_epoch {
+                let mrr = self.evaluate(rt, ds, &st, Split::Val, opts)?;
+                report.epoch_val_mrr.push(mrr);
+                if mrr > best.1 {
+                    best = (epoch + 1, mrr);
+                }
+                if opts.verbose {
+                    eprintln!(
+                        "[lp {} {}] epoch {epoch}: loss {:.4} val mrr {:.4} ({:.2}s)",
+                        self.loss.label(),
+                        self.sampler.label(),
+                        report.epoch_losses.last().unwrap(),
+                        mrr,
+                        report.epoch_times.last().unwrap()
+                    );
+                }
+            }
+        }
+        report.val_mrr = if self.eval_every_epoch {
+            best.1
+        } else {
+            self.evaluate(rt, ds, &st, Split::Val, opts)?
+        };
+        report.best_epoch = best.0.max(1);
+        report.test_mrr = self.evaluate(rt, ds, &st, Split::Test, opts)?;
+        Ok((report, st))
+    }
+
+    /// MRR over a split: embed (src, dst, K joint negatives) with the
+    /// emb artifact, score with DistMult in Rust.
+    pub fn evaluate(
+        &self,
+        rt: &Runtime,
+        ds: &GsDataset,
+        st: &TrainState,
+        split: Split,
+        opts: &TrainOptions,
+    ) -> Result<f64> {
+        let params = st.params_host()?;
+        let sess = InferSession::new(rt, &self.emb_artifact, &params)?;
+        let spec = sess.exe.spec.clone();
+        let shape = crate::sampling::BlockShape::from_spec(&spec).unwrap();
+        let lp = ds.lp.as_ref().unwrap();
+        let def = &ds.graph.schema.etypes[lp.etype];
+        let es = &ds.graph.edges[lp.etype];
+        let n_dst = ds.graph.num_nodes[def.dst_ntype];
+        let k = 32usize;
+        let b = (shape.num_targets() - k) / 2; // eval batch of positives
+        let mut ids = lp.edge_ids_in(split);
+        let mut rng = Rng::seed_from(opts.seed ^ 0xe7a1);
+        rng.shuffle(&mut ids);
+        ids.truncate(256); // eval subsample, fixed for comparability
+        let sampler = NeighborSampler::new(&ds.graph);
+        let mut mrr = Mean::default();
+
+        for chunk in ids.chunks(b) {
+            // Seeds: [srcs, dsts, negs(joint k)] — dedup for the block.
+            let mut seeds: Vec<(u32, u32)> = vec![];
+            let mut order: Vec<(u32, u32)> = vec![];
+            let push = |p: (u32, u32), seeds: &mut Vec<(u32, u32)>| {
+                if !seeds.contains(&p) {
+                    seeds.push(p);
+                }
+            };
+            for &eid in chunk {
+                let p = (def.src_ntype as u32, es.src[eid as usize]);
+                order.push(p);
+                push(p, &mut seeds);
+            }
+            for &eid in chunk {
+                let p = (def.dst_ntype as u32, es.dst[eid as usize]);
+                order.push(p);
+                push(p, &mut seeds);
+            }
+            let negs: Vec<u32> = (0..k).map(|_| rng.gen_range(n_dst) as u32).collect();
+            for &nid in &negs {
+                let p = (def.dst_ntype as u32, nid);
+                order.push(p);
+                push(p, &mut seeds);
+            }
+            let block = sampler.sample_block(&seeds, &shape, &mut rng, &EdgeExclusion::new());
+            let (batch, _) = assemble_block_inputs(ds, &block, &spec, 0)?;
+            let out = sess.infer(rt, &batch)?;
+            let emb = out[0].as_f32()?;
+            let rel = out[1].as_f32()?;
+            let h = spec.outputs[0].shape[1];
+            let slot_of = |p: (u32, u32)| block.targets().iter().position(|&q| q == p).unwrap();
+            let r = &rel[lp.etype * h..(lp.etype + 1) * h];
+            let embrow = |p: (u32, u32)| {
+                let s = slot_of(p);
+                &emb[s * h..(s + 1) * h]
+            };
+            let nb = chunk.len();
+            for (i, &eid) in chunk.iter().enumerate() {
+                let _ = eid;
+                let eu = embrow(order[i]);
+                let ev = embrow(order[nb + i]);
+                let pos = distmult(eu, r, ev);
+                let neg_scores: Vec<f32> = negs
+                    .iter()
+                    .map(|&nid| distmult(eu, r, embrow((def.dst_ntype as u32, nid))))
+                    .collect();
+                mrr.add(reciprocal_rank(pos, &neg_scores));
+            }
+        }
+        Ok(mrr.get())
+    }
+}

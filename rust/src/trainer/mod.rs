@@ -1,0 +1,35 @@
+//! Trainers: the end-to-end pipelines (paper §3.1.3).
+//!
+//! Each trainer drives one AOT train artifact over on-the-fly sampled
+//! batches, applies embedding-table gradients, evaluates with the
+//! matching infer artifact, and reports per-epoch history.  Multi-part
+//! runs rotate the acting worker per batch so the traffic counters see
+//! the same local/remote mix a real cluster would.
+
+pub mod distill;
+pub mod lm;
+pub mod lp;
+pub mod nc;
+
+pub use distill::DistillTrainer;
+pub use lm::LmTrainer;
+pub use lp::{LpReport, LpTrainer};
+pub use nc::{NcReport, NodeTrainer};
+
+/// Shared training knobs.
+#[derive(Debug, Clone)]
+pub struct TrainOptions {
+    pub lr: f32,
+    pub epochs: usize,
+    pub seed: u64,
+    /// Logical workers (= partitions) to rotate batches across.
+    pub n_workers: usize,
+    pub log_every: usize,
+    pub verbose: bool,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions { lr: 3e-3, epochs: 5, seed: 0, n_workers: 1, log_every: 0, verbose: false }
+    }
+}

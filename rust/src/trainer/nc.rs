@@ -1,0 +1,128 @@
+//! Node-classification trainer + evaluator.
+
+use anyhow::Result;
+
+use crate::dataloader::{apply_lemb_grads, assemble_block_inputs, GsDataset, NodeDataLoader, Split};
+use crate::runtime::{InferSession, Runtime, TrainState};
+use crate::sampling::{EdgeExclusion, NeighborSampler};
+use crate::trainer::TrainOptions;
+use crate::util::Rng;
+
+#[derive(Debug, Clone, Default)]
+pub struct NcReport {
+    pub epoch_losses: Vec<f32>,
+    pub epoch_times: Vec<f64>,
+    pub val_acc: f64,
+    pub test_acc: f64,
+    pub steps: usize,
+}
+
+pub struct NodeTrainer {
+    pub train_artifact: String,
+    pub infer_artifact: String,
+}
+
+impl NodeTrainer {
+    pub fn new(train_artifact: &str, infer_artifact: &str) -> NodeTrainer {
+        NodeTrainer {
+            train_artifact: train_artifact.to_string(),
+            infer_artifact: infer_artifact.to_string(),
+        }
+    }
+
+    /// Train; returns the report and the trained state.
+    pub fn fit(
+        &self,
+        rt: &Runtime,
+        ds: &mut GsDataset,
+        opts: &TrainOptions,
+    ) -> Result<(NcReport, TrainState)> {
+        let spec = rt.manifest.get(&self.train_artifact)?.clone();
+        let mut st = TrainState::new(rt, &self.train_artifact)?;
+        let loader = NodeDataLoader::new(&spec)?;
+        let b = loader.batch_size();
+        let ldim = spec.batch_spec("lemb").map(|t| t.shape[1]).unwrap_or(0);
+        let mut rng = Rng::seed_from(opts.seed ^ 0x6e63); // "nc"
+        let train_ids = ds.node_labels().ids_in(Split::Train);
+        let mut report = NcReport::default();
+
+        for epoch in 0..opts.epochs {
+            let t0 = std::time::Instant::now();
+            let mut ids = train_ids.clone();
+            rng.shuffle(&mut ids);
+            let mut epoch_loss = 0.0f32;
+            let mut steps = 0usize;
+            for (bi, chunk) in ids.chunks(b).enumerate() {
+                let worker = (bi % opts.n_workers) as u32;
+                let (batch, touch, _) = loader.batch(ds, chunk, &mut rng, worker)?;
+                let out = st.step(rt, &[opts.lr], &batch)?;
+                if let (Some(g), true) = (&out.grad_lemb, ldim > 0) {
+                    apply_lemb_grads(&mut ds.engine, &touch, g, ldim, opts.lr);
+                }
+                epoch_loss += out.loss;
+                steps += 1;
+                if opts.log_every > 0 && bi % opts.log_every == 0 && opts.verbose {
+                    eprintln!("[nc] epoch {epoch} step {bi} loss {:.4}", out.loss);
+                }
+            }
+            report.epoch_losses.push(epoch_loss / steps.max(1) as f32);
+            report.epoch_times.push(t0.elapsed().as_secs_f64());
+            report.steps += steps;
+            if opts.verbose {
+                eprintln!(
+                    "[nc] epoch {epoch}: mean loss {:.4} ({:.2}s)",
+                    report.epoch_losses.last().unwrap(),
+                    report.epoch_times.last().unwrap()
+                );
+            }
+        }
+        report.val_acc = self.evaluate(rt, ds, &st, Split::Val, opts)?;
+        report.test_acc = self.evaluate(rt, ds, &st, Split::Test, opts)?;
+        Ok((report, st))
+    }
+
+    /// Accuracy over a split via the logits infer artifact.
+    pub fn evaluate(
+        &self,
+        rt: &Runtime,
+        ds: &GsDataset,
+        st: &TrainState,
+        split: Split,
+        opts: &TrainOptions,
+    ) -> Result<f64> {
+        let params = st.params_host()?;
+        let sess = InferSession::new(rt, &self.infer_artifact, &params)?;
+        let spec = sess.exe.spec.clone();
+        let shape = crate::sampling::BlockShape::from_spec(&spec).unwrap();
+        let b = spec.cfg_usize("batch").unwrap_or(shape.num_targets());
+        let c = *spec.outputs[0].shape.last().unwrap();
+        let ids = ds.node_labels().ids_in(split);
+        let sampler = NeighborSampler::new(&ds.graph);
+        let mut rng = Rng::seed_from(opts.seed ^ 0xe7a1);
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for chunk in ids.chunks(b) {
+            let seeds: Vec<(u32, u32)> =
+                chunk.iter().map(|&i| (ds.target_ntype as u32, i)).collect();
+            let block = sampler.sample_block(&seeds, &shape, &mut rng, &EdgeExclusion::new());
+            let (batch, _) = assemble_block_inputs(ds, &block, &spec, 0)?;
+            let out = sess.infer(rt, &batch)?;
+            let logits = out[0].as_f32()?;
+            let labels_store = ds.node_labels();
+            for (i, &(_, id)) in block.targets().iter().enumerate() {
+                let row = &logits[i * c..(i + 1) * c];
+                let am = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(j, _)| j)
+                    .unwrap();
+                if am as i32 == labels_store.labels[id as usize] {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        Ok(correct as f64 / total.max(1) as f64)
+    }
+}

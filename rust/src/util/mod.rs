@@ -1,0 +1,211 @@
+//! Small shared utilities: deterministic RNG, JSON, timers, padding helpers.
+
+pub mod json;
+
+/// SplitMix64 — seeds the main generator and hashes ids deterministically.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256** — the deterministic RNG used by every stochastic
+/// component (generators, samplers, initializers).  No external crate:
+/// determinism across the whole stack is an invariant the tests rely on.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    pub fn seed_from(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut s = [0u64; 4];
+        for slot in s.iter_mut() {
+            *slot = splitmix64(&mut sm);
+        }
+        Rng { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, n). Unbiased enough for sampling (n ≪ 2^64).
+    #[inline]
+    pub fn gen_range(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn gen_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn gen_f32(&mut self) -> f32 {
+        self.gen_f64() as f32
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn gen_normal(&mut self) -> f32 {
+        let u1 = self.gen_f64().max(1e-12);
+        let u2 = self.gen_f64();
+        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+    }
+
+    /// Sample from an unnormalized discrete distribution.
+    pub fn gen_categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut x = self.gen_f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            x -= w;
+            if x <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fork a child RNG (stable: depends only on parent state + tag).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::seed_from(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample k distinct indices from [0, n) (k ≤ n), Floyd's algorithm.
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut chosen = std::collections::HashSet::with_capacity(k);
+        let mut out = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.gen_range(j + 1);
+            let pick = if chosen.contains(&t) { j } else { t };
+            chosen.insert(pick);
+            out.push(pick);
+        }
+        out
+    }
+}
+
+/// Wall-clock stopwatch that accumulates named stage timings.
+#[derive(Default, Debug, Clone)]
+pub struct StageTimer {
+    pub stages: Vec<(String, f64)>,
+}
+
+impl StageTimer {
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = std::time::Instant::now();
+        let out = f();
+        self.stages.push((name.to_string(), t0.elapsed().as_secs_f64()));
+        out
+    }
+
+    pub fn get(&self, name: &str) -> f64 {
+        self.stages
+            .iter()
+            .filter(|(n, _)| n == name)
+            .map(|(_, t)| *t)
+            .sum()
+    }
+
+    pub fn total(&self) -> f64 {
+        self.stages.iter().map(|(_, t)| *t).sum()
+    }
+}
+
+/// Format seconds as the paper's H:MM:SS table entries.
+pub fn fmt_hms(secs: f64) -> String {
+    let s = secs.round() as u64;
+    format!("{}:{:02}:{:02}", s / 3600, (s % 3600) / 60, s % 60)
+}
+
+/// Round up to a multiple.
+#[inline]
+pub fn round_up(x: usize, to: usize) -> usize {
+    x.div_ceil(to) * to
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_deterministic() {
+        let mut a = Rng::seed_from(42);
+        let mut b = Rng::seed_from(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_range_bounds() {
+        let mut r = Rng::seed_from(7);
+        for _ in 0..1000 {
+            assert!(r.gen_range(10) < 10);
+            let f = r.gen_f64();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn sample_distinct_is_distinct() {
+        let mut r = Rng::seed_from(3);
+        for _ in 0..50 {
+            let v = r.sample_distinct(20, 10);
+            let s: std::collections::HashSet<_> = v.iter().collect();
+            assert_eq!(s.len(), 10);
+            assert!(v.iter().all(|&x| x < 20));
+        }
+    }
+
+    #[test]
+    fn categorical_respects_zero_weights() {
+        let mut r = Rng::seed_from(9);
+        for _ in 0..200 {
+            let i = r.gen_categorical(&[0.0, 1.0, 0.0]);
+            assert_eq!(i, 1);
+        }
+    }
+
+    #[test]
+    fn fmt_hms_matches_paper_style() {
+        assert_eq!(fmt_hms(3.5 * 3600.0), "3:30:00");
+        assert_eq!(fmt_hms(61.0), "0:01:01");
+    }
+
+    #[test]
+    fn normal_mean_near_zero() {
+        let mut r = Rng::seed_from(11);
+        let n = 20000;
+        let mean: f32 = (0..n).map(|_| r.gen_normal()).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.05, "mean={mean}");
+    }
+}

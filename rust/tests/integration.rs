@@ -1,0 +1,298 @@
+//! Integration tests across modules: gconstruct → partition → engine →
+//! sampling → AOT runtime → trainers, plus randomized property tests
+//! (a light in-tree stand-in for proptest — offline build, DESIGN.md §1:
+//! each property runs over many seeded random cases).
+
+use graphstorm::datagen::{self, amazon, mag, scale_free};
+use graphstorm::dataloader::{
+    assemble_block_inputs, LinkPredictionDataLoader, NodeDataLoader, Split,
+};
+use graphstorm::partition::{edge_cut, metis_like_partition, random_partition, PartitionBook};
+use graphstorm::runtime::{Runtime, TrainState};
+use graphstorm::sampling::{BlockShape, EdgeExclusion, NegSampler, NeighborSampler};
+use graphstorm::trainer::{NodeTrainer, TrainOptions};
+use graphstorm::util::Rng;
+
+fn mag_ds(n: usize, parts: usize) -> graphstorm::dataloader::GsDataset {
+    let raw = mag::generate(&mag::MagConfig { n_papers: n, ..Default::default() });
+    let book = if parts <= 1 {
+        PartitionBook::single(&raw.graph.num_nodes)
+    } else {
+        random_partition(&raw.graph, parts, 3)
+    };
+    datagen::build_dataset(raw, book, 64, 3)
+}
+
+// ---------------------------------------------------------- properties
+
+/// Property: every partitioner covers every node exactly once and
+/// respects the part-count bound, over random graphs.
+#[test]
+fn prop_partition_coverage() {
+    for seed in 0..8u64 {
+        let mut rng = Rng::seed_from(seed);
+        let raw = scale_free::generate(&scale_free::ScaleFreeConfig {
+            n_edges: 2000 + rng.gen_range(8000),
+            seed,
+            ..Default::default()
+        });
+        for k in [2, 3, 5] {
+            for book in [
+                random_partition(&raw.graph, k, seed),
+                metis_like_partition(&raw.graph, k, seed),
+            ] {
+                assert_eq!(book.n_parts, k);
+                let total: usize = book.part_sizes().iter().sum();
+                assert_eq!(total, raw.graph.total_nodes());
+                assert!(book.assignments.iter().flatten().all(|&p| (p as usize) < k));
+            }
+        }
+    }
+}
+
+/// Property: METIS-like cut ≤ random cut on clustered graphs.
+#[test]
+fn prop_metis_beats_random_on_clusters() {
+    use graphstorm::graph::{EdgeTypeDef, HeteroGraph, Schema};
+    for seed in 0..5u64 {
+        let mut rng = Rng::seed_from(seed ^ 0xc1);
+        let k = 4;
+        let per = 80;
+        let n = k * per;
+        let schema = Schema::new(
+            vec!["v".into()],
+            vec![EdgeTypeDef { name: "e".into(), src_ntype: 0, dst_ntype: 0 }],
+        );
+        let mut g = HeteroGraph::new(schema, vec![n]);
+        let (mut src, mut dst) = (vec![], vec![]);
+        for c in 0..k {
+            for _ in 0..per * 12 {
+                src.push((c * per + rng.gen_range(per)) as u32);
+                dst.push((c * per + rng.gen_range(per)) as u32);
+            }
+        }
+        for _ in 0..20 {
+            src.push(rng.gen_range(n) as u32);
+            dst.push(rng.gen_range(n) as u32);
+        }
+        g.set_edges(0, src, dst);
+        let mc = edge_cut(&g, &metis_like_partition(&g, k, seed));
+        let rc = edge_cut(&g, &random_partition(&g, k, seed));
+        assert!(mc < rc, "seed {seed}: metis {mc} !< random {rc}");
+    }
+}
+
+/// Property: sampled blocks always validate, respect fanout and the
+/// subset property, across random seeds / seed-set sizes.
+#[test]
+fn prop_blocks_always_valid() {
+    let ds = mag_ds(800, 2);
+    let sampler = NeighborSampler::new(&ds.graph);
+    let shape = BlockShape {
+        ns: vec![2304, 384, 64],
+        es: vec![1920, 320],
+        fanout: 5,
+    };
+    for seed in 0..12u64 {
+        let mut rng = Rng::seed_from(seed);
+        let n_seeds = 1 + rng.gen_range(64);
+        let seeds: Vec<(u32, u32)> =
+            (0..n_seeds).map(|_| (0u32, rng.gen_range(800) as u32)).collect();
+        let block = sampler.sample_block(&seeds, &shape, &mut rng, &EdgeExclusion::new());
+        block.validate().unwrap();
+        // Per-dst fanout bound on the innermost hop.
+        let mut per_dst = std::collections::HashMap::new();
+        let le = &block.layers[1];
+        for i in 0..le.dst.len() {
+            if le.emask[i] > 0.0 {
+                *per_dst.entry(le.dst[i]).or_insert(0usize) += 1;
+            }
+        }
+        assert!(per_dst.values().all(|&c| c <= 5));
+    }
+}
+
+/// Property: excluded edges never appear in sampled blocks, including
+/// through the reverse edge type.
+#[test]
+fn prop_exclusion_holds_with_reverse() {
+    let ds = mag_ds(400, 1);
+    let lp = ds.lp.as_ref().unwrap();
+    let et = lp.etype as u32;
+    let rev = ds.rev_map[&(et as usize)] as u32;
+    let es = &ds.graph.edges[et as usize];
+    let sampler = NeighborSampler::new(&ds.graph);
+    let shape = BlockShape { ns: vec![432, 72], es: vec![360], fanout: 5 };
+    for seed in 0..10u64 {
+        let mut rng = Rng::seed_from(seed);
+        let eid = rng.gen_range(es.src.len());
+        let (s, d) = (es.src[eid], es.dst[eid]);
+        let mut ex = EdgeExclusion::new();
+        ex.insert_with_reverse(et, Some(rev), s, d);
+        let block = sampler.sample_block(&[(0, s), (0, d)], &shape, &mut rng, &ex);
+        // The excluded pair must not be connected by etype et/rev in the block.
+        let le = &block.layers[0];
+        for i in 0..le.src.len() {
+            if le.emask[i] == 0.0 {
+                continue;
+            }
+            let sp = block.nodes[le.src[i] as usize];
+            let dp = block.nodes[le.dst[i] as usize];
+            let et_i = le.etype[i] as u32;
+            assert!(
+                !(et_i == et && sp == (0, s) && dp == (0, d))
+                    && !(et_i == rev && sp == (0, d) && dp == (0, s)),
+                "excluded edge sampled (seed {seed})"
+            );
+        }
+    }
+}
+
+/// Property: batch assembly is deterministic given the RNG seed and
+/// produces manifest-conforming shapes.
+#[test]
+fn prop_batch_assembly_deterministic() {
+    let rt = Runtime::from_default_dir().unwrap();
+    let spec = rt.manifest.get("rgcn_nc_train").unwrap().clone();
+    let mut ds = mag_ds(600, 2);
+    ds.ensure_text_features(64);
+    let loader = NodeDataLoader::new(&spec).unwrap();
+    let ids: Vec<u32> = (0..64).collect();
+    for seed in 0..4u64 {
+        let mut r1 = Rng::seed_from(seed);
+        let mut r2 = Rng::seed_from(seed);
+        let (b1, _, _) = loader.batch(&ds, &ids, &mut r1, 0).unwrap();
+        let (b2, _, _) = loader.batch(&ds, &ids, &mut r2, 0).unwrap();
+        assert_eq!(b1.len(), spec.batch.len());
+        for ((t1, t2), ts) in b1.iter().zip(&b2).zip(&spec.batch) {
+            assert_eq!(t1.shape(), ts.shape.as_slice(), "{}", ts.name);
+            assert_eq!(t1, t2, "nondeterministic batch for {}", ts.name);
+        }
+    }
+}
+
+/// Property: LP batches index only valid seed slots and in-batch
+/// negatives reference other positives' destinations.
+#[test]
+fn prop_lp_batch_slots_valid() {
+    let rt = Runtime::from_default_dir().unwrap();
+    let spec = rt.manifest.get("rgcn_lp_joint_k32_train").unwrap().clone();
+    let world = amazon::generate_world(&amazon::ArConfig { n_items: 500, ..Default::default() });
+    let raw = amazon::build_variant(&world, amazon::ArVariant::HeteroV2);
+    let book = PartitionBook::single(&raw.graph.num_nodes);
+    let mut ds = datagen::build_dataset(raw, book, 64, 3);
+    ds.ensure_text_features(64);
+    for (si, sampler) in [
+        NegSampler::Joint { k: 32 },
+        NegSampler::InBatch { k: 32 },
+        NegSampler::LocalJoint { k: 32 },
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let loader = LinkPredictionDataLoader::new(&spec, sampler).unwrap();
+        let train = ds.lp.as_ref().unwrap().edge_ids_in(Split::Train);
+        let mut rng = Rng::seed_from(si as u64);
+        let chunk: Vec<u32> = train.iter().take(loader.batch_size()).copied().collect();
+        let (batch, _) = loader.batch(&ds, &chunk, &mut rng, 0).unwrap();
+        let nt = spec.block().unwrap().0.last().copied().unwrap();
+        // pos_src/pos_dst/neg_dst are the last 6 tensors, indices into targets.
+        let n = batch.len();
+        for t in &batch[n - 6..n - 2] {
+            if let graphstorm::runtime::Tensor::I32 { data, .. } = t {
+                assert!(data.iter().all(|&x| (x as usize) < nt));
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------- end-to-end
+
+/// The whole pipeline: gconstruct fixture → partition → train → eval →
+/// checkpoint save/restore round-trip.
+#[test]
+fn end_to_end_gconstruct_train_checkpoint() {
+    let dir = std::env::temp_dir().join(format!("gs_it_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    // Small venue-separable fixture.
+    let mut rng = Rng::seed_from(5);
+    let venues: Vec<usize> = (0..120).map(|_| rng.gen_range(2)).collect();
+    let mut papers = String::from("node_id,text,venue\n");
+    for (i, &v) in venues.iter().enumerate() {
+        papers += &format!("p{i},w{v}a w{v}b w{v}c,venue{v}\n");
+    }
+    let mut cites = String::from("src,dst\n");
+    for i in 0..120usize {
+        for _ in 0..3 {
+            let j = (0..)
+                .map(|_| rng.gen_range(120))
+                .find(|&j| venues[j] == venues[i] && j != i)
+                .unwrap();
+            cites += &format!("p{i},p{j}\n");
+        }
+    }
+    std::fs::write(dir.join("papers.csv"), papers).unwrap();
+    std::fs::write(dir.join("cites.csv"), cites).unwrap();
+    std::fs::write(dir.join("authors.csv"), "node_id\na0\n").unwrap();
+    std::fs::write(dir.join("writes.csv"), "src,dst\na0,p0\n").unwrap();
+    std::fs::write(dir.join("schema.json"), graphstorm::gconstruct::config::EXAMPLE_SCHEMA).unwrap();
+
+    let cfg = graphstorm::gconstruct::GConstructConfig::load(&dir.join("schema.json")).unwrap();
+    let mut ds = graphstorm::gconstruct::construct_dataset(&cfg, &dir, 2, false).unwrap();
+    ds.ensure_text_features(64);
+
+    let rt = Runtime::from_default_dir().unwrap();
+    let trainer = NodeTrainer::new("rgcn_nc_train", "rgcn_nc_logits");
+    let opts = TrainOptions { epochs: 6, n_workers: 2, verbose: false, ..Default::default() };
+    let (rep, st) = trainer.fit(&rt, &mut ds, &opts).unwrap();
+    assert!(
+        rep.epoch_losses.last().unwrap() < &rep.epoch_losses[0],
+        "loss must drop: {:?}",
+        rep.epoch_losses
+    );
+    assert!(rep.test_acc > 0.55, "acc {}", rep.test_acc);
+
+    // Checkpoint round-trip: restore into a new state, same eval result.
+    let ckpt = dir.join("model.gstf");
+    st.save(&ckpt).unwrap();
+    let params = graphstorm::runtime::gstf::read_gstf(&ckpt).unwrap();
+    let st2 = TrainState::with_params(&rt, "rgcn_nc_train", &params).unwrap();
+    let acc1 = trainer.evaluate(&rt, &ds, &st, Split::Test, &opts).unwrap();
+    let acc2 = trainer.evaluate(&rt, &ds, &st2, Split::Test, &opts).unwrap();
+    assert!((acc1 - acc2).abs() < 1e-9, "restore changed eval: {acc1} vs {acc2}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Multi-worker traffic accounting: with 4 partitions a training run
+/// must record remote accesses; with 1 partition it must not.
+#[test]
+fn traffic_counters_reflect_partitioning() {
+    let rt = Runtime::from_default_dir().unwrap();
+    for (parts, expect_remote) in [(1usize, false), (4, true)] {
+        let mut ds = mag_ds(500, parts);
+        ds.ensure_text_features(64);
+        ds.engine.counters.reset();
+        let trainer = NodeTrainer::new("rgcn_nc_train", "rgcn_nc_logits");
+        let opts = TrainOptions { epochs: 1, n_workers: parts, verbose: false, ..Default::default() };
+        trainer.fit(&rt, &mut ds, &opts).unwrap();
+        let s = ds.engine.counters.snapshot();
+        assert_eq!(s.remote_elems > 0, expect_remote, "parts={parts}: {s:?}");
+        assert!(s.local_elems > 0);
+    }
+}
+
+/// Learnable-embedding path: author embeddings must move during training.
+#[test]
+fn embedding_table_learns() {
+    let rt = Runtime::from_default_dir().unwrap();
+    let mut ds = mag_ds(400, 1);
+    ds.ensure_text_features(64);
+    let nt_author = 1;
+    let before = ds.engine.embeds[nt_author].as_ref().unwrap().weights.clone();
+    let trainer = NodeTrainer::new("rgcn_nc_train", "rgcn_nc_logits");
+    let opts = TrainOptions { epochs: 2, verbose: false, ..Default::default() };
+    trainer.fit(&rt, &mut ds, &opts).unwrap();
+    let after = &ds.engine.embeds[nt_author].as_ref().unwrap().weights;
+    let changed = before.iter().zip(after).filter(|(a, b)| a != b).count();
+    assert!(changed > 0, "no embedding rows were updated");
+}
