@@ -40,7 +40,7 @@ fn main() -> anyhow::Result<()> {
     let t1 = std::time::Instant::now();
     let (mlm_loss, st) = lm.pretrain_mlm(&rt, &ds, 0, &TrainOptions { epochs: 1, ..Default::default() })?;
     let (ft_loss, st) = lm.finetune_nc(&rt, &ds, &st.params_host()?, &TrainOptions { epochs: 2, ..Default::default() })?;
-    let embed_s = lm.embed_all(&rt, &mut ds, &st.params_host()?)?;
+    let embed_s = lm.embed_all(&rt, &mut ds, &st.params_host()?, &TrainOptions::default())?;
     println!(
         "[lm] mlm loss {:.3}, ftnc loss {:.3}, embed 4000 papers in {:.1}s (stage {:.1}s)",
         mlm_loss, ft_loss, embed_s, t1.elapsed().as_secs_f64()

@@ -56,7 +56,7 @@ pub fn sf_dataset(n_edges: usize, n_parts: usize) -> (GsDataset, f64, f64) {
 }
 
 pub fn opts(epochs: usize, n_workers: usize) -> TrainOptions {
-    TrainOptions { lr: 3e-3, epochs, seed: 7, n_workers, log_every: 0, verbose: false }
+    TrainOptions { lr: 3e-3, epochs, seed: 7, n_workers, ..Default::default() }
 }
 
 pub fn runtime() -> Runtime {

@@ -56,7 +56,7 @@ fn main() {
             }
             _ => mlm_params.clone(),
         };
-        lm.embed_all(&rt, &mut ds, &params).unwrap();
+        lm.embed_all(&rt, &mut ds, &params, &common::opts(1, 1)).unwrap();
         let trainer = NodeTrainer::new("rgcn_nc_train", "rgcn_nc_logits");
         let (rep, _) = trainer.fit(&rt, &mut ds, &common::opts(nc_epochs, 1)).unwrap();
         bars.push((name, rep.test_acc));

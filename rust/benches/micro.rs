@@ -1,19 +1,33 @@
 //! Micro-benchmarks for the perf pass (EXPERIMENTS.md §Perf):
-//! neighbor sampling, batch assembly, partitioning, feature gather and
-//! the full AOT train-step latency.  Hand-rolled harness (criterion is
-//! unavailable offline): N warmup + M timed iterations, prints
-//! mean/min per op.
+//! neighbor sampling, batch assembly, the serial-vs-prefetch pipeline,
+//! partitioning, feature gather and the full AOT train-step latency.
+//! Hand-rolled harness (criterion is unavailable offline): warmup +
+//! timed iterations, prints mean/min per op and writes every entry to
+//! `BENCH_micro.json` (path override: `GS_BENCH_OUT`) so the perf
+//! trajectory is machine-readable across PRs.
+//!
+//! Runtime-dependent benches (PJRT steps) are skipped gracefully when
+//! artifacts or the PJRT plugin are missing; the sampling/pipeline
+//! benches always run — the pipeline consumer falls back to a
+//! simulated device step in that case.
 
 #[path = "common.rs"]
 mod common;
 
-use graphstorm::dataloader::{assemble_block_inputs, NodeDataLoader, Split};
+use graphstorm::dataloader::{
+    assemble_block_inputs, batch_seed, build_nc_batch, fill_lemb, run_pipeline, BatchFactory,
+    NodeDataLoader, PrefetchConfig, Split,
+};
 use graphstorm::partition::{metis_like_partition, random_partition};
-use graphstorm::sampling::{BlockShape, EdgeExclusion, NeighborSampler};
+use graphstorm::runtime::{runtime_if_available, ArtifactSpec, Runtime};
+use graphstorm::sampling::{Block, BlockShape, EdgeExclusion, NeighborSampler, SamplerScratch};
 use graphstorm::trainer::NodeTrainer;
 use graphstorm::util::Rng;
 
-fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+/// (name, mean ms, min ms) per benchmark, dumped as JSON at exit.
+type Results = Vec<(String, f64, f64)>;
+
+fn bench<F: FnMut()>(results: &mut Results, name: &str, iters: usize, mut f: F) {
     for _ in 0..3 {
         f();
     }
@@ -25,79 +39,194 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
     }
     let mean = times.iter().sum::<f64>() / times.len() as f64;
     let min = times.iter().cloned().fold(f64::MAX, f64::min);
-    println!("{name:<40} mean {:>9.3} ms   min {:>9.3} ms", mean * 1e3, min * 1e3);
+    println!("{name:<44} mean {:>9.3} ms   min {:>9.3} ms", mean * 1e3, min * 1e3);
+    results.push((name.to_string(), mean * 1e3, min * 1e3));
+}
+
+fn write_json(results: &Results) {
+    let path = std::env::var("GS_BENCH_OUT").unwrap_or_else(|_| "BENCH_micro.json".to_string());
+    let mut body = String::from("{\n");
+    for (i, (name, mean, min)) in results.iter().enumerate() {
+        let comma = if i + 1 == results.len() { "" } else { "," };
+        body.push_str(&format!(
+            "  \"{name}\": {{\"mean_ms\": {mean:.4}, \"min_ms\": {min:.4}}}{comma}\n"
+        ));
+    }
+    body.push_str("}\n");
+    match std::fs::write(&path, &body) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+/// The rgcn_nc_train spec from the manifest when present, else a
+/// synthetic twin with the same block shape — the sampling and
+/// pipeline benches never need artifacts.
+fn nc_spec(rt: Option<&Runtime>) -> ArtifactSpec {
+    if let Some(rt) = rt {
+        if let Ok(s) = rt.manifest.get("rgcn_nc_train") {
+            return s.clone();
+        }
+    }
+    ArtifactSpec::synthetic_block(&[2304, 384, 64], &[1920, 320], 5, r#","batch":64"#)
+}
+
+/// Stand-in for a device step when no PJRT backend is available:
+/// a fixed slab of FLOPs on the consumer thread (identical for the
+/// serial and prefetch arms, so the comparison stays fair).
+fn simulated_step() {
+    let mut acc = 0.0f64;
+    for i in 0..400_000u64 {
+        acc = acc.mul_add(1.000000119, (i & 1023) as f64 * 1e-9);
+    }
+    std::hint::black_box(acc);
 }
 
 fn main() {
     println!("=== micro benches (perf pass) ===");
-    let rt = common::runtime();
+    let mut results: Results = vec![];
+    let rt = runtime_if_available();
+    if rt.is_none() {
+        println!("(AOT artifacts / PJRT unavailable — step benches skipped, pipeline uses a simulated step)");
+    }
     let mut ds = common::mag_dataset(common::scale(4000), 2);
     ds.ensure_text_features(64);
-    let spec = rt.manifest.get("rgcn_nc_train").unwrap().clone();
+    let spec = nc_spec(rt.as_ref());
     let shape = BlockShape::from_spec(&spec).unwrap();
     let sampler = NeighborSampler::new(&ds.graph);
     let train_ids = ds.node_labels().ids_in(Split::Train);
     let mut rng = Rng::seed_from(1);
     let seeds: Vec<(u32, u32)> = train_ids.iter().take(64).map(|&i| (0u32, i)).collect();
 
-    bench("neighbor_sample (64 seeds, 2 hops)", 50, || {
+    // The hot path the trainers use: reusable scratch + block.
+    let mut scratch = SamplerScratch::new();
+    let mut block = Block::empty(&shape);
+    bench(&mut results, "neighbor_sample (64 seeds, 2 hops)", 50, || {
+        sampler.sample_block_with(
+            &seeds,
+            &shape,
+            &mut rng,
+            &EdgeExclusion::new(),
+            &mut scratch,
+            &mut block,
+        );
+        std::hint::black_box(block.nodes.len());
+    });
+
+    // The pre-refactor convenience path (fresh allocations per call),
+    // kept for the scratch-reuse delta.
+    bench(&mut results, "neighbor_sample (fresh alloc per call)", 50, || {
         let b = sampler.sample_block(&seeds, &shape, &mut rng, &EdgeExclusion::new());
         std::hint::black_box(b.nodes.len());
     });
 
-    let block = sampler.sample_block(&seeds, &shape, &mut rng, &EdgeExclusion::new());
-    bench("assemble_block_inputs", 50, || {
-        let (b, _) = assemble_block_inputs(&ds, &block, &spec, 0).unwrap();
+    let block_fixed = sampler.sample_block(&seeds, &shape, &mut rng, &EdgeExclusion::new());
+    bench(&mut results, "assemble_block_inputs", 50, || {
+        let (b, _) = assemble_block_inputs(&ds, &block_fixed, &spec, 0).unwrap();
         std::hint::black_box(b.len());
     });
 
     let loader = NodeDataLoader::new(&spec).unwrap();
     let chunk: Vec<u32> = train_ids.iter().take(64).copied().collect();
-    bench("full NC batch build", 30, || {
-        let (b, _, _) = loader.batch(&ds, &chunk, &mut rng, 0).unwrap();
+    let mut factory = BatchFactory::new(&ds, &shape);
+    bench(&mut results, "full NC batch build", 30, || {
+        let (b, _) = build_nc_batch(&mut factory, &loader, &chunk, &mut rng, 0, false).unwrap();
         std::hint::black_box(b.len());
     });
 
-    // AOT step latency (sample once, step many).
-    let mut st = graphstorm::runtime::TrainState::new(&rt, "rgcn_nc_train").unwrap();
-    let (batch, _, _) = loader.batch(&ds, &chunk, &mut rng, 0).unwrap();
-    bench("rgcn_nc_train step (pallas)", 20, || {
-        let o = st.step(&rt, &[3e-3], &batch).unwrap();
-        std::hint::black_box(o.loss);
-    });
-    let spec_fast = rt.manifest.get("rgcn_nc_train_fast").unwrap().clone();
-    let loader_fast = NodeDataLoader::new(&spec_fast).unwrap();
-    let mut st2 = graphstorm::runtime::TrainState::new(&rt, "rgcn_nc_train_fast").unwrap();
-    let (batch2, _, _) = loader_fast.batch(&ds, &chunk, &mut rng, 0).unwrap();
-    bench("rgcn_nc_train step (xla scatter)", 20, || {
-        let o = st2.step(&rt, &[3e-3], &batch2).unwrap();
-        std::hint::black_box(o.loss);
-    });
+    // ---- pipeline throughput: serial vs prefetch -------------------------
+    // One "epoch" of batch building + consuming; the consumer runs the
+    // real PJRT step when available, a fixed FLOP slab otherwise.
+    {
+        let n_batches = 24usize.min(train_ids.len() / 64);
+        let chunks: Vec<&[u32]> = train_ids.chunks(64).take(n_batches).collect();
+        let mut st = rt
+            .as_ref()
+            .and_then(|rt| graphstorm::runtime::TrainState::new(rt, "rgcn_nc_train").ok());
+        for workers in [1usize, 2, 4] {
+            let label = if workers == 1 {
+                "pipeline epoch (serial)".to_string()
+            } else {
+                format!("pipeline epoch (prefetch, {workers} workers)")
+            };
+            let cfg = PrefetchConfig { n_workers: workers, depth: 2 };
+            bench(&mut results, &label, 5, || {
+                run_pipeline(
+                    &chunks,
+                    &cfg,
+                    || BatchFactory::new(&ds, &shape),
+                    |f, bi, chunk| {
+                        let mut rng = Rng::seed_from(batch_seed(7, 0, bi as u64));
+                        build_nc_batch(f, &loader, chunk, &mut rng, 0, true)
+                    },
+                    |_bi, (mut batch, touch)| {
+                        fill_lemb(&ds, &mut batch, &touch, 0)?;
+                        match (&mut st, rt.as_ref()) {
+                            (Some(st), Some(rt)) => {
+                                let o = st.step(rt, &[3e-3], &batch)?;
+                                std::hint::black_box(o.loss);
+                            }
+                            _ => simulated_step(),
+                        }
+                        std::hint::black_box(batch.len());
+                        Ok(())
+                    },
+                )
+                .unwrap();
+            });
+        }
+    }
 
-    // End-to-end epoch throughput.
-    bench("NC epoch (train split)", 3, || {
-        let trainer = NodeTrainer::new("rgcn_nc_train", "rgcn_nc_logits");
-        let mut ds2 = common::mag_dataset(1000, 1);
-        ds2.ensure_text_features(64);
-        let (r, _) = trainer.fit(&rt, &mut ds2, &common::opts(1, 1)).unwrap();
-        std::hint::black_box(r.steps);
-    });
+    // ---- AOT step latency (sample once, step many) -----------------------
+    if let Some(rt) = rt.as_ref() {
+        let mut st = graphstorm::runtime::TrainState::new(rt, "rgcn_nc_train").unwrap();
+        let (batch, _, _) = loader.batch(&ds, &chunk, &mut rng, 0).unwrap();
+        bench(&mut results, "rgcn_nc_train step (pallas)", 20, || {
+            let o = st.step(rt, &[3e-3], &batch).unwrap();
+            std::hint::black_box(o.loss);
+        });
+        if let Ok(spec_fast) = rt.manifest.get("rgcn_nc_train_fast").map(Clone::clone) {
+            let loader_fast = NodeDataLoader::new(&spec_fast).unwrap();
+            let mut st2 = graphstorm::runtime::TrainState::new(rt, "rgcn_nc_train_fast").unwrap();
+            let (batch2, _, _) = loader_fast.batch(&ds, &chunk, &mut rng, 0).unwrap();
+            bench(&mut results, "rgcn_nc_train step (xla scatter)", 20, || {
+                let o = st2.step(rt, &[3e-3], &batch2).unwrap();
+                std::hint::black_box(o.loss);
+            });
+        }
 
-    // Partitioners.
+        // End-to-end epoch throughput through the trainer.
+        bench(&mut results, "NC epoch (train split)", 3, || {
+            let trainer = NodeTrainer::new("rgcn_nc_train", "rgcn_nc_logits");
+            let mut ds2 = common::mag_dataset(1000, 1);
+            ds2.ensure_text_features(64);
+            let (r, _) = trainer.fit(rt, &mut ds2, &common::opts(1, 1)).unwrap();
+            std::hint::black_box(r.steps);
+        });
+    }
+
+    // ---- partitioners ----------------------------------------------------
     let (dsf, _, _) = common::sf_dataset(200_000, 1);
-    bench("random_partition (200K edges)", 10, || {
+    bench(&mut results, "random_partition (200K edges)", 10, || {
         let b = random_partition(&dsf.graph, 8, 3);
         std::hint::black_box(b.n_parts);
     });
-    bench("metis_like_partition (200K edges)", 3, || {
+    bench(&mut results, "metis_like_partition (200K edges)", 3, || {
         let b = metis_like_partition(&dsf.graph, 8, 3);
         std::hint::black_box(b.n_parts);
     });
 
-    // Feature gather.
+    // ---- feature gather --------------------------------------------------
     let ids: Vec<u32> = (0..2304u32).map(|i| i % ds.graph.num_nodes[3] as u32).collect();
-    bench("DistTensor gather 2304 x 64", 100, || {
+    bench(&mut results, "DistTensor gather 2304 x 64", 100, || {
         let v = ds.engine.features[3].gather(0, &ids);
         std::hint::black_box(v.len());
     });
+    let mut buf = vec![0.0f32; ids.len() * ds.engine.features[3].dim];
+    bench(&mut results, "DistTensor gather_into 2304 x 64", 100, || {
+        ds.engine.features[3].gather_into(0, &ids, &mut buf);
+        std::hint::black_box(buf.len());
+    });
+
+    write_json(&results);
 }

@@ -87,7 +87,7 @@ fn main() {
             );
             lm_s += {
                 let t = std::time::Instant::now();
-                lm.embed_all(&rt, &mut ds, &params).unwrap();
+                lm.embed_all(&rt, &mut ds, &params, &common::opts(1, 1)).unwrap();
                 t.elapsed().as_secs_f64()
             };
             let trainer = NodeTrainer::new("rgcn_nc_train", "rgcn_nc_logits");
@@ -116,7 +116,7 @@ fn main() {
             );
             lm_s += {
                 let t = std::time::Instant::now();
-                lm.embed_all(&rt, &mut ds, &params).unwrap();
+                lm.embed_all(&rt, &mut ds, &params, &common::opts(1, 1)).unwrap();
                 t.elapsed().as_secs_f64()
             };
             let mut trainer = LpTrainer::new(

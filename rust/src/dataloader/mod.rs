@@ -11,16 +11,22 @@
 //!   (a separate loader from edge-feature prediction, as in the paper
 //!   §3: LP must construct negatives, so it gets its own path).
 
-use anyhow::{bail, Result};
+pub mod prefetch;
+
+pub use prefetch::{batch_seed, run_pipeline, PrefetchConfig};
+
+use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
+use std::sync::{Arc, OnceLock};
 
 use crate::dist::{DistEngine, DistTensor};
 use crate::graph::{FeatureSource, HeteroGraph};
 use crate::runtime::{ArtifactSpec, Tensor};
 use crate::sampling::{
     negative::sample_negatives, Block, BlockShape, EdgeExclusion, NegSampler, NeighborSampler,
+    SamplerScratch,
 };
-use crate::util::Rng;
+use crate::util::{FxHashMap, Rng};
 
 /// Train/val/test membership.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -232,6 +238,23 @@ pub fn assemble_block_inputs(
     spec: &ArtifactSpec,
     worker: u32,
 ) -> Result<(Vec<Tensor>, LembTouch)> {
+    assemble_block_inputs_ext(ds, block, spec, worker, false)
+}
+
+/// Like [`assemble_block_inputs`], but with `defer_lemb = true` the
+/// learnable-embedding rows are left zero and only recorded in the
+/// touch list, to be filled by [`fill_lemb`] on the training thread
+/// right before the step.  This is what lets prefetch workers build
+/// batches ahead without ever reading embedding rows that a
+/// not-yet-applied sparse update would change — output stays
+/// bit-identical to the serial loader for any worker count.
+pub fn assemble_block_inputs_ext(
+    ds: &GsDataset,
+    block: &Block,
+    spec: &ArtifactSpec,
+    worker: u32,
+    defer_lemb: bool,
+) -> Result<(Vec<Tensor>, LembTouch)> {
     let n0 = block.shape.ns[0];
     let fdim = spec.batch_spec("feat").map(|t| t.shape[1]).unwrap_or(0);
     let tdim = spec.batch_spec("text").map(|t| t.shape[1]).unwrap_or(0);
@@ -295,15 +318,19 @@ pub fn assemble_block_inputs(
             FeatureSource::Learnable => {
                 let e = ds.engine.embeds[nt]
                     .as_ref()
-                    .ok_or_else(|| anyhow::anyhow!("ntype {nt} has no embedding table"))?;
-                let mut rows = vec![0.0f32; ids.len() * e.dim];
-                e.gather_into(worker, ids, &mut rows);
-                let d = e.dim.min(ldim);
+                    .ok_or_else(|| anyhow!("ntype {nt} has no embedding table"))?;
                 for (j, &slot) in slots.iter().enumerate() {
-                    lemb[slot * ldim..slot * ldim + d]
-                        .copy_from_slice(&rows[j * e.dim..j * e.dim + d]);
                     src_sel[slot * 3 + 2] = 1.0;
                     touch.push((slot, nt, ids[j]));
+                }
+                if !defer_lemb {
+                    let mut rows = vec![0.0f32; ids.len() * e.dim];
+                    e.gather_into(worker, ids, &mut rows);
+                    let d = e.dim.min(ldim);
+                    for (j, &slot) in slots.iter().enumerate() {
+                        lemb[slot * ldim..slot * ldim + d]
+                            .copy_from_slice(&rows[j * e.dim..j * e.dim + d]);
+                    }
                 }
             }
         }
@@ -326,9 +353,53 @@ pub fn assemble_block_inputs(
     Ok((out, touch))
 }
 
+/// Fill the deferred learnable-embedding rows of an assembled batch
+/// (`batch[2]`, see [`assemble_block_inputs_ext`]) from the current
+/// tables, attributed to partition `worker` for traffic accounting.
+pub fn fill_lemb(
+    ds: &GsDataset,
+    batch: &mut [Tensor],
+    touch: &LembTouch,
+    worker: u32,
+) -> Result<()> {
+    if touch.is_empty() {
+        return Ok(());
+    }
+    let Tensor::F32 { shape, data } = &mut batch[2] else {
+        bail!("batch[2] must be the f32 lemb tensor");
+    };
+    let ldim = shape[1];
+    if ldim == 0 {
+        return Ok(());
+    }
+    // Group touched slots by ntype for batched gathers.
+    let mut per_nt: Vec<(Vec<usize>, Vec<u32>)> = vec![(vec![], vec![]); ds.engine.embeds.len()];
+    for &(slot, nt, id) in touch {
+        per_nt[nt].0.push(slot);
+        per_nt[nt].1.push(id);
+    }
+    for (nt, (slots, ids)) in per_nt.iter().enumerate() {
+        if slots.is_empty() {
+            continue;
+        }
+        let e = ds.engine.embeds[nt]
+            .as_ref()
+            .ok_or_else(|| anyhow!("ntype {nt} has no embedding table"))?;
+        let mut rows = vec![0.0f32; ids.len() * e.dim];
+        e.gather_into(worker, ids, &mut rows);
+        let d = e.dim.min(ldim);
+        for (j, &slot) in slots.iter().enumerate() {
+            data[slot * ldim..slot * ldim + d].copy_from_slice(&rows[j * e.dim..j * e.dim + d]);
+        }
+    }
+    Ok(())
+}
+
 /// Apply the train step's `grad_lemb` back onto the embedding tables.
+/// Takes `&DistEngine`: tables update through interior mutability, so
+/// the engine can stay shared with prefetch workers.
 pub fn apply_lemb_grads(
-    engine: &mut DistEngine,
+    engine: &DistEngine,
     touch: &LembTouch,
     grad: &[f32],
     ldim: usize,
@@ -337,19 +408,67 @@ pub fn apply_lemb_grads(
     if touch.is_empty() {
         return;
     }
-    // Group by ntype, then one sparse-Adam call per table.
-    let mut per_nt: HashMap<usize, (Vec<u32>, Vec<f32>)> = HashMap::new();
+    // Group by ntype (index-addressed: deterministic order), then one
+    // sparse-Adam call per table.
+    let mut per_nt: Vec<(Vec<u32>, Vec<f32>)> = vec![(vec![], vec![]); engine.embeds.len()];
     for &(slot, nt, id) in touch {
-        let entry = per_nt.entry(nt).or_default();
-        entry.0.push(id);
-        entry.1.extend_from_slice(&grad[slot * ldim..(slot + 1) * ldim]);
+        per_nt[nt].0.push(id);
+        per_nt[nt].1.extend_from_slice(&grad[slot * ldim..(slot + 1) * ldim]);
     }
-    for (nt, (ids, grads)) in per_nt {
-        if let Some(e) = engine.embeds[nt].as_mut() {
+    for (nt, (ids, grads)) in per_nt.iter().enumerate() {
+        if ids.is_empty() {
+            continue;
+        }
+        if let Some(e) = engine.embeds[nt].as_ref() {
             // Table dim == ldim by construction (engine.add_embed uses the
             // manifest's lemb dim).
-            e.sparse_adam(&ids, &grads, lr);
+            e.sparse_adam(ids, grads, lr);
         }
+    }
+}
+
+/// Reusable per-worker batch-building state: sampler (with its cached
+/// etype index), generation-stamped scratch, and a recycled block —
+/// steady-state sampling does zero heap allocation.
+pub struct BatchFactory<'a> {
+    pub ds: &'a GsDataset,
+    sampler: NeighborSampler<'a>,
+    scratch: SamplerScratch,
+    pub block: Block,
+    seed_buf: Vec<(u32, u32)>,
+}
+
+impl<'a> BatchFactory<'a> {
+    pub fn new(ds: &'a GsDataset, shape: &BlockShape) -> BatchFactory<'a> {
+        BatchFactory {
+            ds,
+            sampler: NeighborSampler::new(&ds.graph),
+            scratch: SamplerScratch::new(),
+            block: Block::empty(shape),
+            seed_buf: vec![],
+        }
+    }
+
+    /// Sample a block for `seeds` and assemble the shared GNN inputs.
+    /// The block stays in the factory (see [`Self::targets`]).
+    pub fn sample_assemble(
+        &mut self,
+        seeds: &[(u32, u32)],
+        shape: &BlockShape,
+        spec: &ArtifactSpec,
+        rng: &mut Rng,
+        worker: u32,
+        exclude: &EdgeExclusion,
+        defer_lemb: bool,
+    ) -> Result<(Vec<Tensor>, LembTouch)> {
+        self.sampler
+            .sample_block_with(seeds, shape, rng, exclude, &mut self.scratch, &mut self.block);
+        assemble_block_inputs_ext(self.ds, &self.block, spec, worker, defer_lemb)
+    }
+
+    /// Real targets of the most recently sampled block.
+    pub fn targets(&self) -> &[(u32, u32)] {
+        self.block.targets()
     }
 }
 
@@ -371,6 +490,8 @@ impl NodeDataLoader {
     }
 
     /// Build one batch for `seeds` (node ids of the target ntype).
+    /// Convenience wrapper allocating fresh factory state; hot loops
+    /// should reuse a [`BatchFactory`] via [`build_nc_batch`].
     pub fn batch(
         &self,
         ds: &GsDataset,
@@ -378,23 +499,107 @@ impl NodeDataLoader {
         rng: &mut Rng,
         worker: u32,
     ) -> Result<(Vec<Tensor>, LembTouch, Block)> {
-        let nt = ds.target_ntype as u32;
-        let seed_pairs: Vec<(u32, u32)> = seeds.iter().map(|&s| (nt, s)).collect();
-        let sampler = NeighborSampler::new(&ds.graph);
-        let block = sampler.sample_block(&seed_pairs, &self.shape, rng, &EdgeExclusion::new());
-        let (mut batch, touch) = assemble_block_inputs(ds, &block, &self.spec, worker)?;
+        let mut f = BatchFactory::new(ds, &self.shape);
+        let (batch, touch) = build_nc_batch(&mut f, self, seeds, rng, worker, false)?;
+        Ok((batch, touch, f.block))
+    }
+}
 
-        let ntargets = self.shape.num_targets();
-        let labels_store = ds.node_labels();
-        let mut labels = vec![0i32; ntargets];
-        let mut lmask = vec![0.0f32; ntargets];
-        for (i, &(_, id)) in block.targets().iter().enumerate() {
-            labels[i] = labels_store.labels[id as usize];
-            lmask[i] = 1.0;
-        }
-        batch.push(Tensor::I32 { shape: vec![ntargets], data: labels });
-        batch.push(Tensor::F32 { shape: vec![ntargets], data: lmask });
-        Ok((batch, touch, block))
+/// Node-classification batch through a reusable factory; with
+/// `defer_lemb` the embedding rows are filled later by [`fill_lemb`].
+pub fn build_nc_batch(
+    f: &mut BatchFactory,
+    loader: &NodeDataLoader,
+    seeds: &[u32],
+    rng: &mut Rng,
+    worker: u32,
+    defer_lemb: bool,
+) -> Result<(Vec<Tensor>, LembTouch)> {
+    let nt = f.ds.target_ntype as u32;
+    let mut seed_pairs = std::mem::take(&mut f.seed_buf);
+    seed_pairs.clear();
+    seed_pairs.extend(seeds.iter().map(|&s| (nt, s)));
+    let out = f.sample_assemble(
+        &seed_pairs,
+        &loader.shape,
+        &loader.spec,
+        rng,
+        worker,
+        &EdgeExclusion::new(),
+        defer_lemb,
+    );
+    f.seed_buf = seed_pairs;
+    let (mut batch, touch) = out?;
+
+    let ntargets = loader.shape.num_targets();
+    let labels_store = f.ds.node_labels();
+    let mut labels = vec![0i32; ntargets];
+    let mut lmask = vec![0.0f32; ntargets];
+    for (i, &(_, id)) in f.targets().iter().enumerate() {
+        labels[i] = labels_store.labels[id as usize];
+        lmask[i] = 1.0;
+    }
+    batch.push(Tensor::I32 { shape: vec![ntargets], data: labels });
+    batch.push(Tensor::F32 { shape: vec![ntargets], data: lmask });
+    Ok((batch, touch))
+}
+
+/// The pipelined NC loader: shards seed chunks across worker threads
+/// which sample + assemble ahead, while the calling thread consumes
+/// batches in order (typically running the PJRT step).
+pub struct PrefetchingLoader<'a> {
+    pub loader: &'a NodeDataLoader,
+    pub cfg: PrefetchConfig,
+}
+
+impl<'a> PrefetchingLoader<'a> {
+    pub fn new(loader: &'a NodeDataLoader, cfg: PrefetchConfig) -> PrefetchingLoader<'a> {
+        PrefetchingLoader { loader, cfg }
+    }
+
+    /// Build one batch per chunk; `consume(batch_idx, (tensors, touch))`
+    /// runs on the calling thread, in chunk order.  Per-batch RNG is
+    /// derived from `(seed, epoch, batch_idx)`, and lemb rows are
+    /// deferred, so results are bit-identical for any worker count.
+    /// `rotate_workers` picks the acting partition (`bi % rotate`) for
+    /// feature-gather traffic accounting, as the serial loop did.
+    pub fn for_each(
+        &self,
+        ds: &GsDataset,
+        chunks: &[&[u32]],
+        seed: u64,
+        epoch: u64,
+        rotate_workers: usize,
+        consume: impl FnMut(usize, (Vec<Tensor>, LembTouch)) -> Result<()>,
+    ) -> Result<()> {
+        run_pipeline(
+            chunks,
+            &self.cfg,
+            || BatchFactory::new(ds, &self.loader.shape),
+            |f, bi, chunk| {
+                let mut rng = Rng::seed_from(batch_seed(seed, epoch, bi as u64));
+                let worker = (bi % rotate_workers.max(1)) as u32;
+                build_nc_batch(f, self.loader, chunk, &mut rng, worker, true)
+            },
+            consume,
+        )
+    }
+
+    /// Collect every batch (tests: compare against the serial loader).
+    pub fn collect(
+        &self,
+        ds: &GsDataset,
+        chunks: &[&[u32]],
+        seed: u64,
+        epoch: u64,
+        rotate_workers: usize,
+    ) -> Result<Vec<(Vec<Tensor>, LembTouch)>> {
+        let mut out = Vec::with_capacity(chunks.len());
+        self.for_each(ds, chunks, seed, epoch, rotate_workers, |_, b| {
+            out.push(b);
+            Ok(())
+        })?;
+        Ok(out)
     }
 }
 
@@ -406,6 +611,9 @@ pub struct LinkPredictionDataLoader {
     /// Exclude validation/test edges from message passing (leak guard)
     /// and the batch's own positives (overfit guard) — paper §3.3.4.
     pub exclude_targets: bool,
+    /// The val/test-edge exclusion triples, sorted once and shared by
+    /// every batch (they never change within a run).
+    static_exclusion: OnceLock<Arc<Vec<(u32, u32, u32)>>>,
 }
 
 impl LinkPredictionDataLoader {
@@ -416,6 +624,7 @@ impl LinkPredictionDataLoader {
             shape,
             sampler,
             exclude_targets: true,
+            static_exclusion: OnceLock::new(),
         })
     }
 
@@ -424,6 +633,8 @@ impl LinkPredictionDataLoader {
     }
 
     /// Build a batch for positive edge ids of the LP task's etype.
+    /// Convenience wrapper; hot loops reuse a factory via
+    /// [`build_lp_batch`].
     pub fn batch(
         &self,
         ds: &GsDataset,
@@ -431,119 +642,144 @@ impl LinkPredictionDataLoader {
         rng: &mut Rng,
         worker: u32,
     ) -> Result<(Vec<Tensor>, LembTouch)> {
-        let lp = ds.lp.as_ref().expect("dataset has no LP task");
-        let et = lp.etype;
-        let def = &ds.graph.schema.etypes[et];
-        let es = &ds.graph.edges[et];
-        let b = self.batch_size();
-        let k = self.spec.cfg_usize("k").unwrap_or(self.sampler.k());
-        assert!(edge_ids.len() <= b);
-        assert_eq!(self.sampler.k(), k, "sampler K must match the artifact");
-
-        let n_dst = ds.graph.num_nodes[def.dst_ntype];
-        let negs = sample_negatives(
-            self.sampler,
-            b,
-            n_dst,
-            def.dst_ntype,
-            &ds.engine.book,
-            worker,
-            rng,
-        );
-
-        // Seed slots: [srcs | dsts | negs], padded with node 0.
-        let mut seeds: Vec<(u32, u32)> = Vec::with_capacity(2 * b + negs.neg_nodes.len());
-        let (snt, dnt) = (def.src_ntype as u32, def.dst_ntype as u32);
-        for i in 0..b {
-            let eid = edge_ids.get(i).copied().unwrap_or(edge_ids[0]);
-            seeds.push((snt, es.src[eid as usize]));
-        }
-        for i in 0..b {
-            let eid = edge_ids.get(i).copied().unwrap_or(edge_ids[0]);
-            seeds.push((dnt, es.dst[eid as usize]));
-        }
-        for &n in &negs.neg_nodes {
-            seeds.push((dnt, n));
-        }
-
-        // CAREFUL: seeds may contain duplicates; the block dedups, so we
-        // must map each logical seed position to its slot.
-        let exclusion = self.build_exclusion(ds, edge_ids, et);
-        let nsampler = NeighborSampler::new(&ds.graph);
-        let dedup: Vec<(u32, u32)> = {
-            let mut seen = std::collections::HashMap::new();
-            let mut out = vec![];
-            for &s in &seeds {
-                seen.entry(s).or_insert_with(|| {
-                    out.push(s);
-                    out.len() - 1
-                });
-            }
-            out
-        };
-        let block = nsampler.sample_block(&dedup, &self.shape, rng, &exclusion);
-        let slot_of: HashMap<(u32, u32), i32> = block
-            .targets()
-            .iter()
-            .enumerate()
-            .map(|(i, &p)| (p, i as i32))
-            .collect();
-        let slot = |p: (u32, u32)| slot_of[&p];
-
-        let (mut batch, touch) = assemble_block_inputs(ds, &block, &self.spec, worker)?;
-
-        let mut pos_src = vec![0i32; b];
-        let mut pos_dst = vec![0i32; b];
-        let mut rel = vec![0i32; b];
-        let mut pmask = vec![0.0f32; b];
-        let mut eweight = vec![1.0f32; b];
-        for i in 0..b {
-            pos_src[i] = slot(seeds[i]);
-            pos_dst[i] = slot(seeds[b + i]);
-            rel[i] = et as i32;
-            if i < edge_ids.len() {
-                pmask[i] = 1.0;
-            } else {
-                eweight[i] = 0.0;
-            }
-        }
-        let mut neg_dst = vec![0i32; b * k];
-        for i in 0..b {
-            for (j, &pos) in negs.neg_dst[i].iter().enumerate() {
-                // pos indexes the logical seed array; map through dedup.
-                neg_dst[i * k + j] = slot(seeds[pos as usize]);
-            }
-        }
-        batch.push(Tensor::I32 { shape: vec![b], data: pos_src });
-        batch.push(Tensor::I32 { shape: vec![b], data: pos_dst });
-        batch.push(Tensor::I32 { shape: vec![b, k], data: neg_dst });
-        batch.push(Tensor::I32 { shape: vec![b], data: rel });
-        batch.push(Tensor::F32 { shape: vec![b], data: pmask });
-        batch.push(Tensor::F32 { shape: vec![b], data: eweight });
-        Ok((batch, touch))
+        let mut f = BatchFactory::new(ds, &self.shape);
+        build_lp_batch(&mut f, self, edge_ids, rng, worker, false)
     }
 
     fn build_exclusion(&self, ds: &GsDataset, edge_ids: &[u32], et: usize) -> EdgeExclusion {
-        let mut ex = EdgeExclusion::new();
         if !self.exclude_targets {
-            return ex;
+            return EdgeExclusion::new();
         }
         let es = &ds.graph.edges[et];
         let rev = ds.rev_map.get(&et).map(|&r| r as u32);
-        // The batch's own positives...
+        // Every val/test edge (information-leak guard) — built once,
+        // sorted, shared across batches.
+        let base = self
+            .static_exclusion
+            .get_or_init(|| {
+                let mut triples = vec![];
+                if let Some(lp) = &ds.lp {
+                    for (eid, &s) in lp.split.iter().enumerate() {
+                        if s == Split::Val || s == Split::Test {
+                            triples.push((et as u32, es.src[eid], es.dst[eid]));
+                            if let Some(re) = rev {
+                                triples.push((re, es.dst[eid], es.src[eid]));
+                            }
+                        }
+                    }
+                }
+                EdgeExclusion::sorted_base(triples)
+            })
+            .clone();
+        let mut ex = EdgeExclusion::with_base(base);
+        // ...plus the batch's own positives (overfit guard).
         for &eid in edge_ids {
             ex.insert_with_reverse(et as u32, rev, es.src[eid as usize], es.dst[eid as usize]);
         }
-        // ...and every val/test edge (information-leak guard).
-        if let Some(lp) = &ds.lp {
-            for (eid, &s) in lp.split.iter().enumerate() {
-                if s == Split::Val || s == Split::Test {
-                    ex.insert_with_reverse(et as u32, rev, es.src[eid], es.dst[eid]);
-                }
-            }
-        }
+        ex.seal();
         ex
     }
+}
+
+/// Link-prediction batch through a reusable factory; with `defer_lemb`
+/// the embedding rows are filled later by [`fill_lemb`].
+pub fn build_lp_batch(
+    f: &mut BatchFactory,
+    loader: &LinkPredictionDataLoader,
+    edge_ids: &[u32],
+    rng: &mut Rng,
+    worker: u32,
+    defer_lemb: bool,
+) -> Result<(Vec<Tensor>, LembTouch)> {
+    let ds = f.ds;
+    let lp = ds.lp.as_ref().expect("dataset has no LP task");
+    let et = lp.etype;
+    let def = &ds.graph.schema.etypes[et];
+    let es = &ds.graph.edges[et];
+    let b = loader.batch_size();
+    let k = loader.spec.cfg_usize("k").unwrap_or(loader.sampler.k());
+    assert!(edge_ids.len() <= b);
+    assert_eq!(loader.sampler.k(), k, "sampler K must match the artifact");
+
+    let n_dst = ds.graph.num_nodes[def.dst_ntype];
+    let negs = sample_negatives(
+        loader.sampler,
+        b,
+        n_dst,
+        def.dst_ntype,
+        &ds.engine.book,
+        worker,
+        rng,
+    );
+
+    // Seed slots: [srcs | dsts | negs], padded with node 0.
+    let mut seeds: Vec<(u32, u32)> = Vec::with_capacity(2 * b + negs.neg_nodes.len());
+    let (snt, dnt) = (def.src_ntype as u32, def.dst_ntype as u32);
+    for i in 0..b {
+        let eid = edge_ids.get(i).copied().unwrap_or(edge_ids[0]);
+        seeds.push((snt, es.src[eid as usize]));
+    }
+    for i in 0..b {
+        let eid = edge_ids.get(i).copied().unwrap_or(edge_ids[0]);
+        seeds.push((dnt, es.dst[eid as usize]));
+    }
+    for &n in &negs.neg_nodes {
+        seeds.push((dnt, n));
+    }
+
+    // CAREFUL: seeds may contain duplicates; the block dedups, so we
+    // must map each logical seed position to its slot.
+    let exclusion = loader.build_exclusion(ds, edge_ids, et);
+    let dedup: Vec<(u32, u32)> = {
+        let mut seen: FxHashMap<(u32, u32), usize> = FxHashMap::default();
+        let mut out = vec![];
+        for &s in &seeds {
+            seen.entry(s).or_insert_with(|| {
+                out.push(s);
+                out.len() - 1
+            });
+        }
+        out
+    };
+    let (mut batch, touch) =
+        f.sample_assemble(&dedup, &loader.shape, &loader.spec, rng, worker, &exclusion, defer_lemb)?;
+    let slot_of: FxHashMap<(u32, u32), i32> = f
+        .targets()
+        .iter()
+        .enumerate()
+        .map(|(i, &p)| (p, i as i32))
+        .collect();
+    let slot = |p: (u32, u32)| slot_of[&p];
+
+    let mut pos_src = vec![0i32; b];
+    let mut pos_dst = vec![0i32; b];
+    let mut rel = vec![0i32; b];
+    let mut pmask = vec![0.0f32; b];
+    let mut eweight = vec![1.0f32; b];
+    for i in 0..b {
+        pos_src[i] = slot(seeds[i]);
+        pos_dst[i] = slot(seeds[b + i]);
+        rel[i] = et as i32;
+        if i < edge_ids.len() {
+            pmask[i] = 1.0;
+        } else {
+            eweight[i] = 0.0;
+        }
+    }
+    let mut neg_dst = vec![0i32; b * k];
+    for i in 0..b {
+        for (j, &pos) in negs.neg_dst[i].iter().enumerate() {
+            // pos indexes the logical seed array; map through dedup.
+            neg_dst[i * k + j] = slot(seeds[pos as usize]);
+        }
+    }
+    batch.push(Tensor::I32 { shape: vec![b], data: pos_src });
+    batch.push(Tensor::I32 { shape: vec![b], data: pos_dst });
+    batch.push(Tensor::I32 { shape: vec![b, k], data: neg_dst });
+    batch.push(Tensor::I32 { shape: vec![b], data: rel });
+    batch.push(Tensor::F32 { shape: vec![b], data: pmask });
+    batch.push(Tensor::F32 { shape: vec![b], data: eweight });
+    Ok((batch, touch))
 }
 
 #[cfg(test)]

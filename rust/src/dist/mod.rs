@@ -1,0 +1,388 @@
+//! The simulated distributed engine (DistDGL stand-in, paper §3.3):
+//! partition-aware feature/embedding storage with cross-partition
+//! traffic accounting, plus the cluster cost model that turns measured
+//! single-process stage times + counted traffic into Table-3-style
+//! instance estimates.
+//!
+//! Every gather is attributed to an acting `worker` (partition id); a
+//! row whose owner differs from the acting worker counts as remote
+//! traffic.  Counters are atomic and embedding tables use interior
+//! mutability, so the prefetching loader's worker threads can assemble
+//! batches from `&GsDataset` while the main thread applies sparse
+//! embedding updates between steps.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::partition::PartitionBook;
+use crate::util::Rng;
+
+/// Cross-partition traffic totals (elements are f32 rows * dim).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Traffic {
+    pub local_elems: u64,
+    pub remote_elems: u64,
+    pub remote_bytes: u64,
+}
+
+/// Shared atomic traffic counters; one instance per engine, cloned
+/// (via `Arc`) into every distributed tensor.
+#[derive(Debug, Default)]
+pub struct TrafficCounters {
+    local_elems: AtomicU64,
+    remote_elems: AtomicU64,
+    remote_bytes: AtomicU64,
+}
+
+impl TrafficCounters {
+    pub fn new() -> TrafficCounters {
+        TrafficCounters::default()
+    }
+
+    pub fn reset(&self) {
+        self.local_elems.store(0, Ordering::Relaxed);
+        self.remote_elems.store(0, Ordering::Relaxed);
+        self.remote_bytes.store(0, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn record(&self, is_local: bool, elems: u64) {
+        if is_local {
+            self.local_elems.fetch_add(elems, Ordering::Relaxed);
+        } else {
+            self.remote_elems.fetch_add(elems, Ordering::Relaxed);
+            self.remote_bytes.fetch_add(elems * 4, Ordering::Relaxed);
+        }
+    }
+
+    pub fn snapshot(&self) -> Traffic {
+        Traffic {
+            local_elems: self.local_elems.load(Ordering::Relaxed),
+            remote_elems: self.remote_elems.load(Ordering::Relaxed),
+            remote_bytes: self.remote_bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A read-mostly distributed dense tensor ([n, dim], row-major) over
+/// one node type; rows are owned by partitions per the book.
+pub struct DistTensor {
+    pub ntype: usize,
+    pub dim: usize,
+    data: Vec<f32>,
+    book: Arc<PartitionBook>,
+    counters: Arc<TrafficCounters>,
+}
+
+impl DistTensor {
+    pub fn from_data(
+        ntype: usize,
+        dim: usize,
+        data: Vec<f32>,
+        book: Arc<PartitionBook>,
+        counters: Arc<TrafficCounters>,
+    ) -> DistTensor {
+        if dim > 0 {
+            assert_eq!(data.len() % dim, 0, "data length not a multiple of dim");
+        }
+        DistTensor { ntype, dim, data, book, counters }
+    }
+
+    /// Placeholder tensor for a node type with no data yet (dim 0).
+    pub fn empty(ntype: usize, book: Arc<PartitionBook>, counters: Arc<TrafficCounters>) -> DistTensor {
+        DistTensor { ntype, dim: 0, data: vec![], book, counters }
+    }
+
+    pub fn num_rows(&self) -> usize {
+        if self.dim == 0 {
+            0
+        } else {
+            self.data.len() / self.dim
+        }
+    }
+
+    /// Direct row view (no traffic accounting — debugging / tests).
+    #[inline]
+    pub fn row(&self, id: u32) -> &[f32] {
+        &self.data[id as usize * self.dim..(id as usize + 1) * self.dim]
+    }
+
+    /// Gather rows on behalf of partition `worker`, counting traffic.
+    pub fn gather(&self, worker: u32, ids: &[u32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; ids.len() * self.dim];
+        self.gather_into(worker, ids, &mut out);
+        out
+    }
+
+    /// Allocation-free gather into a caller-owned buffer
+    /// (`out.len() == ids.len() * dim`).
+    pub fn gather_into(&self, worker: u32, ids: &[u32], out: &mut [f32]) {
+        let d = self.dim;
+        assert_eq!(out.len(), ids.len() * d);
+        let (mut local, mut remote) = (0u64, 0u64);
+        for (j, &id) in ids.iter().enumerate() {
+            out[j * d..(j + 1) * d].copy_from_slice(self.row(id));
+            if self.book.part_of(self.ntype, id) == worker {
+                local += d as u64;
+            } else {
+                remote += d as u64;
+            }
+        }
+        if local > 0 {
+            self.counters.record(true, local);
+        }
+        if remote > 0 {
+            self.counters.record(false, remote);
+        }
+    }
+}
+
+/// Rows + sparse-Adam moments of one learnable embedding table.
+struct EmbInner {
+    w: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    /// Per-row update count (bias correction is per row, as in
+    /// DGL's sparse Adam).
+    t: Vec<u32>,
+}
+
+/// Learnable embedding table for a featureless node type
+/// (paper §3.3.2, option 2).  Interior mutability: gathers take a read
+/// lock, the sparse-Adam update a write lock, so prefetch workers and
+/// the training thread can share the engine immutably.
+pub struct EmbTable {
+    pub ntype: usize,
+    pub dim: usize,
+    inner: RwLock<EmbInner>,
+    book: Arc<PartitionBook>,
+    counters: Arc<TrafficCounters>,
+}
+
+impl EmbTable {
+    pub fn new(
+        ntype: usize,
+        n: usize,
+        dim: usize,
+        seed: u64,
+        book: Arc<PartitionBook>,
+        counters: Arc<TrafficCounters>,
+    ) -> EmbTable {
+        let mut rng = Rng::seed_from(seed ^ 0xe8b);
+        let scale = 1.0 / (dim as f32).sqrt();
+        let w: Vec<f32> = (0..n * dim).map(|_| rng.gen_normal() * scale).collect();
+        let inner = EmbInner { w, m: vec![0.0; n * dim], v: vec![0.0; n * dim], t: vec![0; n] };
+        EmbTable { ntype, dim, inner: RwLock::new(inner), book, counters }
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.inner.read().unwrap().t.len()
+    }
+
+    /// Copy of the current weights (tests / checkpointing).
+    pub fn weights_snapshot(&self) -> Vec<f32> {
+        self.inner.read().unwrap().w.clone()
+    }
+
+    /// Gather rows into `out` (`out.len() == ids.len() * dim`) on
+    /// behalf of partition `worker`, counting traffic.
+    pub fn gather_into(&self, worker: u32, ids: &[u32], out: &mut [f32]) {
+        let d = self.dim;
+        assert_eq!(out.len(), ids.len() * d);
+        let inner = self.inner.read().unwrap();
+        let (mut local, mut remote) = (0u64, 0u64);
+        for (j, &id) in ids.iter().enumerate() {
+            let base = id as usize * d;
+            out[j * d..(j + 1) * d].copy_from_slice(&inner.w[base..base + d]);
+            if self.book.part_of(self.ntype, id) == worker {
+                local += d as u64;
+            } else {
+                remote += d as u64;
+            }
+        }
+        if local > 0 {
+            self.counters.record(true, local);
+        }
+        if remote > 0 {
+            self.counters.record(false, remote);
+        }
+    }
+
+    /// Sparse Adam over the touched rows (`grads.len() == ids.len() * dim`).
+    /// Duplicate ids apply sequentially in order — deterministic.
+    pub fn sparse_adam(&self, ids: &[u32], grads: &[f32], lr: f32) {
+        const B1: f32 = 0.9;
+        const B2: f32 = 0.999;
+        const EPS: f32 = 1e-8;
+        let d = self.dim;
+        assert_eq!(grads.len(), ids.len() * d);
+        let mut inner = self.inner.write().unwrap();
+        for (j, &id) in ids.iter().enumerate() {
+            let r = id as usize;
+            inner.t[r] += 1;
+            let t = inner.t[r] as f32;
+            let bc1 = 1.0 - B1.powf(t);
+            let bc2 = 1.0 - B2.powf(t);
+            for k in 0..d {
+                let i = r * d + k;
+                let g = grads[j * d + k];
+                inner.m[i] = B1 * inner.m[i] + (1.0 - B1) * g;
+                inner.v[i] = B2 * inner.v[i] + (1.0 - B2) * g * g;
+                let mhat = inner.m[i] / bc1;
+                let vhat = inner.v[i] / bc2;
+                inner.w[i] -= lr * mhat / (vhat.sqrt() + EPS);
+            }
+        }
+    }
+}
+
+/// The per-process engine: features, text embeddings and learnable
+/// tables for every node type, plus the shared traffic counters.
+pub struct DistEngine {
+    pub book: Arc<PartitionBook>,
+    pub counters: Arc<TrafficCounters>,
+    pub features: Vec<DistTensor>,
+    pub text_emb: Vec<DistTensor>,
+    pub embeds: Vec<Option<EmbTable>>,
+}
+
+impl DistEngine {
+    pub fn new(book: Arc<PartitionBook>, num_nodes: &[usize]) -> DistEngine {
+        let counters = Arc::new(TrafficCounters::new());
+        let features = (0..num_nodes.len())
+            .map(|nt| DistTensor::empty(nt, book.clone(), counters.clone()))
+            .collect();
+        let text_emb = (0..num_nodes.len())
+            .map(|nt| DistTensor::empty(nt, book.clone(), counters.clone()))
+            .collect();
+        let embeds = num_nodes.iter().map(|_| None).collect();
+        DistEngine { book, counters, features, text_emb, embeds }
+    }
+
+    /// Attach a learnable embedding table to a featureless node type.
+    pub fn add_embed(&mut self, ntype: usize, n: usize, dim: usize, seed: u64) {
+        self.embeds[ntype] = Some(EmbTable::new(
+            ntype,
+            n,
+            dim,
+            seed,
+            self.book.clone(),
+            self.counters.clone(),
+        ));
+    }
+}
+
+/// Cluster cost model (Table 3): turns a measured single-process stage
+/// time plus counted cross-partition traffic into an estimated
+/// wall-clock on `instances` machines.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// Fraction of compute that parallelizes across instances.
+    pub parallel_efficiency: f64,
+    /// Cross-instance NIC bandwidth, bytes/s (10 Gb/s default).
+    pub bandwidth_bps: f64,
+    /// Per-step synchronization latency, seconds.
+    pub step_latency_s: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> CostModel {
+        CostModel {
+            parallel_efficiency: 0.85,
+            bandwidth_bps: 1.25e9,
+            step_latency_s: 2e-3,
+        }
+    }
+}
+
+impl CostModel {
+    /// Estimated wall-clock seconds on `instances` machines for a stage
+    /// measured at `secs` single-process, moving `remote_bytes` across
+    /// the network in `steps` synchronized steps.
+    pub fn estimate(&self, secs: f64, remote_bytes: u64, steps: u64, instances: usize) -> f64 {
+        let n = instances.max(1) as f64;
+        let compute = secs * ((1.0 - self.parallel_efficiency) + self.parallel_efficiency / n);
+        let network = remote_bytes as f64 / self.bandwidth_bps;
+        let sync = steps as f64 * self.step_latency_s * n.log2().max(1.0);
+        compute + network + sync
+    }
+
+    /// The paper's instance-minutes metric.
+    pub fn instance_minutes(&self, secs: f64, instances: usize) -> f64 {
+        secs * instances.max(1) as f64 / 60.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup(n: usize, parts: usize) -> (Arc<PartitionBook>, Arc<TrafficCounters>) {
+        let book = Arc::new(PartitionBook::new(
+            parts,
+            vec![(0..n).map(|i| (i % parts) as u32).collect()],
+        ));
+        (book, Arc::new(TrafficCounters::new()))
+    }
+
+    #[test]
+    fn gather_counts_local_vs_remote() {
+        let (book, counters) = setup(10, 2);
+        let t = DistTensor::from_data(0, 4, vec![1.0; 40], book, counters.clone());
+        // Worker 0 owns even ids; gather two even + one odd.
+        let out = t.gather(0, &[0, 2, 3]);
+        assert_eq!(out.len(), 12);
+        let s = counters.snapshot();
+        assert_eq!(s.local_elems, 8);
+        assert_eq!(s.remote_elems, 4);
+        assert_eq!(s.remote_bytes, 16);
+        counters.reset();
+        assert_eq!(counters.snapshot(), Traffic::default());
+    }
+
+    #[test]
+    fn single_partition_never_remote() {
+        let (book, counters) = setup(6, 1);
+        let t = DistTensor::from_data(0, 2, vec![0.5; 12], book, counters.clone());
+        t.gather(0, &[0, 1, 2, 3, 4, 5]);
+        let s = counters.snapshot();
+        assert_eq!(s.remote_elems, 0);
+        assert_eq!(s.local_elems, 12);
+    }
+
+    #[test]
+    fn emb_table_adam_moves_touched_rows_only() {
+        let (book, counters) = setup(5, 1);
+        let e = EmbTable::new(0, 5, 4, 7, book, counters);
+        let before = e.weights_snapshot();
+        e.sparse_adam(&[1, 3], &[1.0; 8], 1e-2);
+        let after = e.weights_snapshot();
+        for r in 0..5 {
+            let changed = (0..4).any(|k| before[r * 4 + k] != after[r * 4 + k]);
+            assert_eq!(changed, r == 1 || r == 3, "row {r}");
+        }
+    }
+
+    #[test]
+    fn emb_gather_matches_snapshot() {
+        let (book, counters) = setup(4, 2);
+        let e = EmbTable::new(0, 4, 3, 9, book, counters);
+        let snap = e.weights_snapshot();
+        let mut out = vec![0.0; 6];
+        e.gather_into(0, &[2, 0], &mut out);
+        assert_eq!(&out[..3], &snap[6..9]);
+        assert_eq!(&out[3..], &snap[0..3]);
+    }
+
+    #[test]
+    fn cost_model_monotone() {
+        let cm = CostModel::default();
+        // More instances shrink compute-bound stages.
+        let e1 = cm.estimate(100.0, 0, 0, 1);
+        let e8 = cm.estimate(100.0, 0, 0, 8);
+        assert!(e8 < e1);
+        // Traffic adds time.
+        assert!(cm.estimate(10.0, 5_000_000_000, 100, 4) > cm.estimate(10.0, 0, 100, 4));
+        assert_eq!(cm.instance_minutes(120.0, 4), 8.0);
+    }
+}

@@ -16,10 +16,15 @@ pub struct Csr {
 }
 
 impl Csr {
-    /// Build from (key, value) pairs where key < n_keys.
-    pub fn from_pairs(n_keys: usize, pairs: impl Iterator<Item = (u32, u32)> + Clone) -> Csr {
+    /// Build from parallel (key, value) slices where every key < n_keys.
+    /// Slices instead of a `Clone` iterator: the counting and filling
+    /// passes index the same memory, so full edge lists are never
+    /// traversed twice through iterator re-evaluation during graph
+    /// build.
+    pub fn from_pairs(n_keys: usize, keys: &[u32], vals: &[u32]) -> Csr {
+        assert_eq!(keys.len(), vals.len());
         let mut counts = vec![0usize; n_keys + 1];
-        for (k, _) in pairs.clone() {
+        for &k in keys {
             counts[k as usize + 1] += 1;
         }
         for i in 1..counts.len() {
@@ -27,7 +32,7 @@ impl Csr {
         }
         let mut indices = vec![0u32; counts[n_keys]];
         let mut cursor = counts.clone();
-        for (k, v) in pairs {
+        for (&k, &v) in keys.iter().zip(vals) {
             indices[cursor[k as usize]] = v;
             cursor[k as usize] += 1;
         }
@@ -80,8 +85,8 @@ impl HeteroGraph {
         let n_dst = self.num_nodes[def.dst_ntype];
         debug_assert!(src.iter().all(|&s| (s as usize) < n_src), "src id out of range");
         debug_assert!(dst.iter().all(|&d| (d as usize) < n_dst), "dst id out of range");
-        let in_csr = Csr::from_pairs(n_dst, dst.iter().copied().zip(src.iter().copied()));
-        let out_csr = Csr::from_pairs(n_src, src.iter().copied().zip(dst.iter().copied()));
+        let in_csr = Csr::from_pairs(n_dst, &dst, &src);
+        let out_csr = Csr::from_pairs(n_src, &src, &dst);
         self.edges[etype] = EdgeStore { src, dst, in_csr, out_csr };
     }
 
@@ -152,13 +157,14 @@ mod tests {
         // Rebuilding the edge list from in_csr must reproduce out_csr.
         let g = toy();
         let es = &g.edges[0];
-        let mut pairs = vec![];
+        let (mut keys, mut vals) = (vec![], vec![]);
         for d in 0..g.num_nodes[1] {
             for &s in es.in_csr.neighbors(d) {
-                pairs.push((s, d as u32));
+                keys.push(s);
+                vals.push(d as u32);
             }
         }
-        let rebuilt = Csr::from_pairs(g.num_nodes[0], pairs.iter().copied());
+        let rebuilt = Csr::from_pairs(g.num_nodes[0], &keys, &vals);
         let mut a: Vec<Vec<u32>> = (0..3).map(|s| rebuilt.neighbors(s).to_vec()).collect();
         let mut b: Vec<Vec<u32>> = (0..3).map(|s| es.out_csr.neighbors(s).to_vec()).collect();
         for (x, y) in a.iter_mut().zip(b.iter_mut()) {

@@ -101,6 +101,8 @@ fn opts(args: &Args) -> TrainOptions {
         epochs: args.get_usize("epochs", 3),
         seed: args.get_usize("seed", 7) as u64,
         n_workers: args.get_usize("num-parts", 1).max(1),
+        loader_workers: args.get_usize("num-workers", 1).max(1),
+        prefetch: args.get_usize("prefetch", 2).max(1),
         log_every: 0,
         verbose: true,
     }
@@ -172,7 +174,7 @@ fn main() -> Result<()> {
                 } else {
                     st.params_host()?
                 };
-                let secs = lm.embed_all(&rt, &mut ds, &params)?;
+                let secs = lm.embed_all(&rt, &mut ds, &params, &o)?;
                 println!("lm embed stage: {secs:.1}s");
             }
             let trainer =
@@ -218,6 +220,9 @@ fn main() -> Result<()> {
             println!("  gs gconstruct --conf schema.json --dir DATA [--num-parts N] [--metis]");
             println!("  gs train-nc --dataset mag [--arch rgcn|gcn|sage|gat|rgat|hgt] [--lm none|pretrained|finetuned]");
             println!("  gs train-lp --dataset amazon [--loss contrastive|ce] [--neg in-batch|joint-K|uniform-K]");
+            println!("  common:     [--num-workers N] [--prefetch D]   pipelined batch building");
+            println!("              (N loader threads sample+assemble ahead of the device step;");
+            println!("               output is bit-identical for any N — default 1 = serial)");
         }
     }
     Ok(())

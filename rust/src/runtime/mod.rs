@@ -10,7 +10,7 @@ pub mod gstf;
 pub mod manifest;
 pub mod state;
 
-pub use exec::{Executable, Runtime};
+pub use exec::{runtime_if_available, Executable, Runtime};
 pub use gstf::Tensor;
 pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
 pub use state::{InferSession, StepOut, TrainState};

@@ -191,7 +191,10 @@ mod tests {
     /// problem through the full AOT train-step path.
     #[test]
     fn mlp_probe_learns() {
-        let rt = Runtime::from_default_dir().unwrap();
+        let Some(rt) = super::super::exec::runtime_if_available() else {
+            eprintln!("skipping: AOT artifacts / PJRT backend unavailable");
+            return;
+        };
         let mut st = TrainState::new(&rt, "mlp_train").unwrap();
         let spec = st.exe.spec.clone();
         let b = spec.batch_spec("emb").unwrap().shape[0];
@@ -229,7 +232,10 @@ mod tests {
     /// produce logits consistent with the training objective.
     #[test]
     fn train_params_flow_to_infer() {
-        let rt = Runtime::from_default_dir().unwrap();
+        let Some(rt) = super::super::exec::runtime_if_available() else {
+            eprintln!("skipping: AOT artifacts / PJRT backend unavailable");
+            return;
+        };
         let mut st = TrainState::new(&rt, "mlp_train").unwrap();
         let spec = st.exe.spec.clone();
         let b = spec.batch_spec("emb").unwrap().shape[0];

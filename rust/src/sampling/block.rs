@@ -56,6 +56,19 @@ pub struct Block {
 }
 
 impl Block {
+    /// An all-padding block with `shape`'s layer count; arrays are
+    /// filled in by `NeighborSampler::sample_block_with`, which reuses
+    /// the allocations on subsequent calls.
+    pub fn empty(shape: &BlockShape) -> Block {
+        Block {
+            shape: shape.clone(),
+            nodes: vec![],
+            nmask: vec![],
+            layers: vec![LayerEdges::default(); shape.es.len()],
+            n_real_targets: 0,
+        }
+    }
+
     /// Real target nodes (first `n_real_targets` slots).
     pub fn targets(&self) -> &[(u32, u32)] {
         &self.nodes[..self.n_real_targets]

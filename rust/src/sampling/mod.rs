@@ -7,4 +7,4 @@ pub mod neighbor;
 
 pub use block::{Block, BlockShape, LayerEdges};
 pub use negative::{NegSampler, NegativeBatch};
-pub use neighbor::{EdgeExclusion, NeighborSampler};
+pub use neighbor::{EdgeExclusion, NeighborSampler, SamplerScratch};

@@ -6,29 +6,55 @@
 //! positions are drawn from the concatenated neighbor ranges.  This
 //! bounds every hop at `ns[l+1] * fanout` edges — exactly the padded
 //! shape the AOT artifacts were lowered with.
+//!
+//! The hot path is allocation-free in steady state: callers thread a
+//! reusable [`SamplerScratch`] (generation-stamped open-addressing slot
+//! table + pick/position buffers) and a reusable [`Block`] through
+//! [`NeighborSampler::sample_block_with`].  Edge exclusion is a sorted
+//! slice lookup instead of a hash set, with the large val/test-edge
+//! portion shared across batches behind an `Arc`.
 
-use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
 
 use crate::graph::HeteroGraph;
-use crate::sampling::block::{Block, BlockShape, LayerEdges};
-use crate::util::Rng;
+use crate::sampling::block::{Block, BlockShape};
+use crate::util::{fxhash64, Rng};
 
 /// Edges excluded from message passing: the batch's own target edges
 /// (anti-overfitting) and validation/test edges (anti-leakage), per the
-/// paper §3.3.4 / SpotTarget.
+/// paper §3.3.4 / SpotTarget.  Stored as sorted `(etype, src, dst)`
+/// slices: a shared, pre-sorted `base` (the per-dataset val/test edges,
+/// built once) plus a small per-batch list.
 #[derive(Default, Clone)]
 pub struct EdgeExclusion {
-    /// (etype, src, dst) triples to skip while sampling.
-    set: HashSet<(u32, u32, u32)>,
+    /// Pre-sorted, deduplicated; shared across batches.
+    base: Option<Arc<Vec<(u32, u32, u32)>>>,
+    /// Per-batch triples; sorted once `seal` has run.
+    batch: Vec<(u32, u32, u32)>,
+    sorted: bool,
 }
 
 impl EdgeExclusion {
     pub fn new() -> EdgeExclusion {
-        EdgeExclusion::default()
+        EdgeExclusion { base: None, batch: vec![], sorted: true }
+    }
+
+    /// Sort + dedup a triple list into a shareable base exclusion.
+    pub fn sorted_base(mut triples: Vec<(u32, u32, u32)>) -> Arc<Vec<(u32, u32, u32)>> {
+        triples.sort_unstable();
+        triples.dedup();
+        Arc::new(triples)
+    }
+
+    /// Start from a shared pre-sorted base (e.g. all val/test edges).
+    pub fn with_base(base: Arc<Vec<(u32, u32, u32)>>) -> EdgeExclusion {
+        debug_assert!(base.windows(2).all(|w| w[0] < w[1]), "base must be sorted+deduped");
+        EdgeExclusion { base: Some(base), batch: vec![], sorted: true }
     }
 
     pub fn insert(&mut self, etype: u32, src: u32, dst: u32) {
-        self.set.insert((etype, src, dst));
+        self.batch.push((etype, src, dst));
+        self.sorted = false;
     }
 
     /// Also exclude the reverse orientation under `rev_etype`.
@@ -39,17 +65,124 @@ impl EdgeExclusion {
         }
     }
 
+    /// Sort the per-batch list so lookups binary-search.  Callers on
+    /// the hot path should seal after the last `insert`; an unsealed
+    /// list still works via linear scan (fine for a handful of edges).
+    pub fn seal(&mut self) {
+        if !self.sorted {
+            self.batch.sort_unstable();
+            self.batch.dedup();
+            self.sorted = true;
+        }
+    }
+
     #[inline]
     pub fn contains(&self, etype: u32, src: u32, dst: u32) -> bool {
-        !self.set.is_empty() && self.set.contains(&(etype, src, dst))
+        if self.is_empty() {
+            return false;
+        }
+        let key = (etype, src, dst);
+        if let Some(base) = &self.base {
+            if base.binary_search(&key).is_ok() {
+                return true;
+            }
+        }
+        if self.sorted {
+            self.batch.binary_search(&key).is_ok()
+        } else {
+            self.batch.contains(&key)
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.set.len()
+        self.base.as_ref().map_or(0, |b| b.len()) + self.batch.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.set.is_empty()
+        self.batch.is_empty() && self.base.as_ref().map_or(true, |b| b.is_empty())
+    }
+}
+
+/// Generation-stamped open-addressing map from packed `(ntype, id)`
+/// keys to node slots.  `begin` invalidates all entries in O(1), so
+/// steady-state sampling never clears or reallocates.
+struct SlotTable {
+    keys: Vec<u64>,
+    vals: Vec<i32>,
+    stamp: Vec<u32>,
+    gen: u32,
+    mask: usize,
+}
+
+impl SlotTable {
+    fn new() -> SlotTable {
+        SlotTable { keys: vec![], vals: vec![], stamp: vec![], gen: 0, mask: 0 }
+    }
+
+    /// Start a fresh mapping with room for `n` keys at ≤ 0.5 load.
+    fn begin(&mut self, n: usize) {
+        let want = (2 * n.max(8)).next_power_of_two();
+        if self.keys.len() < want {
+            self.keys = vec![0; want];
+            self.vals = vec![0; want];
+            self.stamp = vec![0; want];
+            self.mask = want - 1;
+            self.gen = 0;
+        }
+        self.gen = self.gen.wrapping_add(1);
+        if self.gen == 0 {
+            // Stamp wrap-around: clear once every 2^32 batches.
+            self.stamp.fill(0);
+            self.gen = 1;
+        }
+    }
+
+    /// Slot for `key`, inserting `make()`'s value on first sight.
+    #[inline]
+    fn get_or_insert_with(&mut self, key: u64, make: impl FnOnce() -> i32) -> i32 {
+        let mut i = (fxhash64(key) as usize) & self.mask;
+        loop {
+            if self.stamp[i] != self.gen {
+                let v = make();
+                self.stamp[i] = self.gen;
+                self.keys[i] = key;
+                self.vals[i] = v;
+                return v;
+            }
+            if self.keys[i] == key {
+                return self.vals[i];
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+}
+
+#[inline]
+fn pack(nt: u32, id: u32) -> u64 {
+    ((nt as u64) << 32) | id as u64
+}
+
+/// Reusable sampling buffers; one per worker thread.  After warm-up,
+/// `sample_block_with` performs zero heap allocation per batch.
+pub struct SamplerScratch {
+    slots: SlotTable,
+    /// Per-destination picks: (etype, src_ntype, src_id).
+    picks: Vec<(u32, u32, u32)>,
+    /// Distinct positions drawn for the current destination.
+    pos: Vec<usize>,
+    /// Real-node count per layer prefix.
+    real_upto: Vec<usize>,
+}
+
+impl SamplerScratch {
+    pub fn new() -> SamplerScratch {
+        SamplerScratch { slots: SlotTable::new(), picks: vec![], pos: vec![], real_upto: vec![] }
+    }
+}
+
+impl Default for SamplerScratch {
+    fn default() -> Self {
+        SamplerScratch::new()
     }
 }
 
@@ -68,6 +201,8 @@ impl<'g> NeighborSampler<'g> {
     }
 
     /// Sample a padded block for `seeds` (at most `shape.num_targets()`).
+    /// Convenience wrapper that allocates fresh scratch + block; hot
+    /// paths should use [`sample_block_with`](Self::sample_block_with).
     pub fn sample_block(
         &self,
         seeds: &[(u32, u32)],
@@ -75,6 +210,22 @@ impl<'g> NeighborSampler<'g> {
         rng: &mut Rng,
         exclude: &EdgeExclusion,
     ) -> Block {
+        let mut scratch = SamplerScratch::new();
+        let mut block = Block::empty(shape);
+        self.sample_block_with(seeds, shape, rng, exclude, &mut scratch, &mut block);
+        block
+    }
+
+    /// Allocation-free sampling into a reusable `block` using `scratch`.
+    pub fn sample_block_with(
+        &self,
+        seeds: &[(u32, u32)],
+        shape: &BlockShape,
+        rng: &mut Rng,
+        exclude: &EdgeExclusion,
+        scratch: &mut SamplerScratch,
+        block: &mut Block,
+    ) {
         let l_count = shape.num_layers();
         assert!(
             seeds.len() <= shape.num_targets(),
@@ -82,42 +233,55 @@ impl<'g> NeighborSampler<'g> {
             seeds.len(),
             shape.num_targets()
         );
+        if block.shape != *shape {
+            *block = Block::empty(shape);
+        }
+        let SamplerScratch { slots, picks, pos, real_upto } = scratch;
+        let Block { nodes, nmask, layers, .. } = &mut *block;
+
         // Node slot table, seeded with targets; grows outward per hop.
-        let mut nodes: Vec<(u32, u32)> = Vec::with_capacity(shape.ns[0]);
-        let mut slot_of: HashMap<(u32, u32), i32> = HashMap::with_capacity(shape.ns[0]);
-        for &s in seeds {
-            if !slot_of.contains_key(&s) {
-                slot_of.insert(s, nodes.len() as i32);
-                nodes.push(s);
-            }
+        slots.begin(shape.ns[0]);
+        nodes.clear();
+        nmask.clear();
+        nmask.resize(shape.ns[0], 0.0);
+        for &(nt, id) in seeds {
+            slots.get_or_insert_with(pack(nt, id), || {
+                nodes.push((nt, id));
+                nmask[nodes.len() - 1] = 1.0;
+                (nodes.len() - 1) as i32
+            });
         }
         let n_real_targets = nodes.len();
-        let mut real_upto = vec![0usize; l_count + 1]; // real nodes per layer prefix
+        real_upto.clear();
+        real_upto.resize(l_count + 1, 0);
         real_upto[l_count] = n_real_targets;
         // Pad targets to ns[L].
         nodes.resize(shape.ns[l_count], (0, 0));
 
         // Hops from targets (layer L) outward to layer 0.
-        let mut layers_rev: Vec<LayerEdges> = Vec::with_capacity(l_count);
         for l in (0..l_count).rev() {
             let n_dst_real = real_upto[l + 1];
-            let mut le = LayerEdges {
-                src: vec![0; shape.es[l]],
-                dst: vec![0; shape.es[l]],
-                etype: vec![0; shape.es[l]],
-                emask: vec![0.0; shape.es[l]],
-            };
+            let le = &mut layers[l];
+            le.src.clear();
+            le.src.resize(shape.es[l], 0);
+            le.dst.clear();
+            le.dst.resize(shape.es[l], 0);
+            le.etype.clear();
+            le.etype.resize(shape.es[l], 0);
+            le.emask.clear();
+            le.emask.resize(shape.es[l], 0.0);
             let mut cursor = 0usize;
             // New frontier nodes append after the current prefix.
             nodes.truncate(shape.ns[l + 1]); // drop padding before extending
             debug_assert_eq!(nodes.len(), shape.ns[l + 1]);
             for dslot in 0..n_dst_real {
                 let (dnt, did) = nodes[dslot];
-                let mut picks = self.pick_neighbors(dnt, did, shape.fanout, rng, exclude);
-                for (et, snt, sid) in picks.drain(..) {
-                    let key = (snt, sid);
-                    let sslot = *slot_of.entry(key).or_insert_with(|| {
-                        nodes.push(key);
+                self.pick_neighbors_into(dnt, did, shape.fanout, rng, exclude, picks, pos);
+                for pi in 0..picks.len() {
+                    let (et, snt, sid) = picks[pi];
+                    let sslot = slots.get_or_insert_with(pack(snt, sid), || {
+                        nodes.push((snt, sid));
+                        nmask[nodes.len() - 1] = 1.0;
                         (nodes.len() - 1) as i32
                     });
                     le.src[cursor] = sslot;
@@ -135,82 +299,102 @@ impl<'g> NeighborSampler<'g> {
                 shape.ns[l]
             );
             nodes.resize(shape.ns[l], (0, 0));
-            layers_rev.push(le);
         }
-        layers_rev.reverse();
-
-        // Node mask: real slots per the deepest layer they belong to.
-        let mut nmask = vec![0.0f32; shape.ns[0]];
-        // All slots < real_upto[0] that were ever real.  Because layers
-        // share the prefix, a slot is real iff its index < real count of
-        // the layer that introduced it; the union is simply [0, real_upto[0])
-        // minus padded gaps — padded gaps only exist past each layer's
-        // real count but before ns[l+1]... so mark from the slot table:
-        for (i, &(nt, id)) in nodes.iter().enumerate() {
-            // Padding slots are (0,0) duplicates; the genuine slot for
-            // (0,0) is the one registered in slot_of.
-            if slot_of.get(&(nt, id)) == Some(&(i as i32)) {
-                nmask[i] = 1.0;
-            }
-        }
-
-        let block = Block {
-            shape: shape.clone(),
-            nodes,
-            nmask,
-            layers: layers_rev,
-            n_real_targets,
-        };
+        block.n_real_targets = n_real_targets;
         debug_assert_eq!(block.validate(), Ok(()));
-        block
     }
 
-    /// Pick up to `fanout` inbound neighbors of (dnt, did), degree-
-    /// proportional across inbound edge types; all edges if they fit.
-    fn pick_neighbors(
+    /// Resolve position `p` in the concatenated inbound ranges of
+    /// `did` to (etype, src_id).
+    #[inline]
+    fn pick_at(&self, ets: &[usize], did: u32, p: usize) -> (usize, u32) {
+        let mut p = p;
+        for &et in ets {
+            let deg = self.graph.edges[et].in_csr.degree(did as usize);
+            if p < deg {
+                return (et, self.graph.edges[et].in_csr.neighbors(did as usize)[p]);
+            }
+            p -= deg;
+        }
+        unreachable!("position out of range");
+    }
+
+    /// Pick up to `fanout` non-excluded inbound neighbors of
+    /// (dnt, did) into `out`, degree-proportional across inbound edge
+    /// types; all edges if they fit.
+    ///
+    /// Excluded edges do NOT consume budget: positions that land on an
+    /// excluded edge are redrawn (bounded retries), with a
+    /// deterministic sweep fallback when exclusions are dense, so the
+    /// effective fanout stays at budget whenever enough non-excluded
+    /// neighbors exist.
+    fn pick_neighbors_into(
         &self,
         dnt: u32,
         did: u32,
         fanout: usize,
         rng: &mut Rng,
         exclude: &EdgeExclusion,
-    ) -> Vec<(usize, u32, u32)> {
-        let mut out = Vec::with_capacity(fanout);
+        out: &mut Vec<(u32, u32, u32)>,
+        pos: &mut Vec<usize>,
+    ) {
+        out.clear();
         let ets = &self.etypes_into[dnt as usize];
         let mut total = 0usize;
         for &et in ets {
             total += self.graph.edges[et].in_csr.degree(did as usize);
         }
         if total == 0 {
-            return out;
+            return;
         }
-        let push = |et: usize, sid: u32, out: &mut Vec<(usize, u32, u32)>| {
-            if !exclude.contains(et as u32, sid, did) {
-                let snt = self.graph.schema.etypes[et].src_ntype as u32;
-                out.push((et, snt, sid));
-            }
-        };
+        let snt_of = |et: usize| self.graph.schema.etypes[et].src_ntype as u32;
         if total <= fanout {
             for &et in ets {
                 for &sid in self.graph.edges[et].in_csr.neighbors(did as usize) {
-                    push(et, sid, &mut out);
+                    if !exclude.contains(et as u32, sid, did) {
+                        out.push((et as u32, snt_of(et), sid));
+                    }
                 }
             }
-        } else {
-            // Sample distinct positions in the concatenated ranges.
-            for pos in rng.sample_distinct(total, fanout) {
-                let mut p = pos;
-                for &et in ets {
-                    let deg = self.graph.edges[et].in_csr.degree(did as usize);
-                    if p < deg {
-                        push(et, self.graph.edges[et].in_csr.neighbors(did as usize)[p], &mut out);
-                        break;
-                    }
-                    p -= deg;
+            return;
+        }
+        // Rejection-sample distinct positions until the budget is full
+        // of non-excluded edges (or positions run out).
+        pos.clear();
+        let max_attempts = 16 * fanout + 32;
+        let mut attempts = 0usize;
+        while out.len() < fanout && pos.len() < total && attempts < max_attempts {
+            attempts += 1;
+            let p = rng.gen_range(total);
+            if pos.contains(&p) {
+                continue;
+            }
+            pos.push(p);
+            let (et, sid) = self.pick_at(ets, did, p);
+            if !exclude.contains(et as u32, sid, did) {
+                out.push((et as u32, snt_of(et), sid));
+            }
+        }
+        if out.len() < fanout && pos.len() < total {
+            // Dense exclusions: sweep every remaining position from a
+            // random offset.  Only positions drawn above need the
+            // membership check, so this stays O(total · drawn).
+            let drawn = pos.len();
+            let start = rng.gen_range(total);
+            for k in 0..total {
+                if out.len() >= fanout {
+                    break;
+                }
+                let p = (start + k) % total;
+                if pos[..drawn].contains(&p) {
+                    continue;
+                }
+                let (et, sid) = self.pick_at(ets, did, p);
+                if !exclude.contains(et as u32, sid, did) {
+                    out.push((et as u32, snt_of(et), sid));
                 }
             }
         }
-        out
     }
 }
 
@@ -218,6 +402,7 @@ impl<'g> NeighborSampler<'g> {
 mod tests {
     use super::*;
     use crate::graph::{EdgeTypeDef, Schema};
+    use std::collections::HashSet;
 
     fn star_graph(leaves: usize) -> HeteroGraph {
         // node 0 is the hub; leaves point at it.
@@ -284,6 +469,7 @@ mod tests {
         let sh = shape(8, 5, 1);
         let mut ex = EdgeExclusion::new();
         ex.insert(0, 2, 0); // leaf 2 -> hub excluded
+        ex.seal();
         for seed in 0..20 {
             let mut rng = Rng::seed_from(seed);
             let block = s.sample_block(&[(0, 0)], &sh, &mut rng, &ex);
@@ -294,6 +480,59 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Regression: excluded edges must not silently shrink the
+    /// effective fanout — the budget is refilled by redrawing.
+    #[test]
+    fn exclusion_refills_fanout_budget() {
+        let g = star_graph(100);
+        let s = NeighborSampler::new(&g);
+        let sh = shape(8, 5, 1);
+        // Exclude leaves 1..=80: only 20 valid neighbors remain, still
+        // well above the budget of 5.
+        let mut ex = EdgeExclusion::new();
+        for leaf in 1..=80u32 {
+            ex.insert(0, leaf, 0);
+        }
+        ex.seal();
+        for seed in 0..30 {
+            let mut rng = Rng::seed_from(seed);
+            let block = s.sample_block(&[(0, 0)], &sh, &mut rng, &ex);
+            let mut real = 0;
+            for (i, &m) in block.layers[0].emask.iter().enumerate() {
+                if m > 0.0 {
+                    real += 1;
+                    let (_, sid) = block.nodes[block.layers[0].src[i] as usize];
+                    assert!(sid > 80, "excluded leaf {sid} sampled (seed {seed})");
+                }
+            }
+            assert_eq!(real, 5, "under-sampled hub under exclusion (seed {seed})");
+        }
+    }
+
+    /// With exclusions so dense that fewer than `fanout` neighbors
+    /// remain, the sampler returns exactly the survivors.
+    #[test]
+    fn dense_exclusion_returns_all_survivors() {
+        let g = star_graph(50);
+        let s = NeighborSampler::new(&g);
+        let sh = shape(8, 5, 1);
+        let mut ex = EdgeExclusion::new();
+        for leaf in 1..=47u32 {
+            ex.insert(0, leaf, 0);
+        }
+        ex.seal();
+        let mut rng = Rng::seed_from(3);
+        let block = s.sample_block(&[(0, 0)], &sh, &mut rng, &ex);
+        let survivors: HashSet<u32> = block.layers[0]
+            .emask
+            .iter()
+            .enumerate()
+            .filter(|(_, &m)| m > 0.0)
+            .map(|(i, _)| block.nodes[block.layers[0].src[i] as usize].1)
+            .collect();
+        assert_eq!(survivors, HashSet::from([48, 49, 50]));
     }
 
     #[test]
@@ -323,5 +562,45 @@ mod tests {
         let mut rng = Rng::seed_from(3);
         let block = s.sample_block(&[(0, 0), (0, 0), (0, 1)], &sh, &mut rng, &EdgeExclusion::new());
         assert_eq!(block.n_real_targets, 2);
+    }
+
+    /// Scratch + block reuse must give byte-identical results to fresh
+    /// allocations, across many consecutive batches.
+    #[test]
+    fn scratch_reuse_is_identical_to_fresh() {
+        let g = star_graph(60);
+        let s = NeighborSampler::new(&g);
+        let sh = shape(8, 4, 2);
+        let mut scratch = SamplerScratch::new();
+        let mut reused = Block::empty(&sh);
+        for seed in 0..25u64 {
+            let seeds = [(0u32, (seed % 30) as u32), (0, 0)];
+            let mut r1 = Rng::seed_from(seed);
+            let mut r2 = Rng::seed_from(seed);
+            let fresh = s.sample_block(&seeds, &sh, &mut r1, &EdgeExclusion::new());
+            s.sample_block_with(&seeds, &sh, &mut r2, &EdgeExclusion::new(), &mut scratch, &mut reused);
+            assert_eq!(fresh.nodes, reused.nodes, "seed {seed}");
+            assert_eq!(fresh.nmask, reused.nmask, "seed {seed}");
+            assert_eq!(fresh.n_real_targets, reused.n_real_targets);
+            for l in 0..fresh.layers.len() {
+                assert_eq!(fresh.layers[l].src, reused.layers[l].src, "seed {seed} layer {l}");
+                assert_eq!(fresh.layers[l].dst, reused.layers[l].dst);
+                assert_eq!(fresh.layers[l].etype, reused.layers[l].etype);
+                assert_eq!(fresh.layers[l].emask, reused.layers[l].emask);
+            }
+        }
+    }
+
+    #[test]
+    fn exclusion_base_and_batch_compose() {
+        let base = EdgeExclusion::sorted_base(vec![(0, 5, 0), (0, 3, 0), (0, 5, 0)]);
+        let mut ex = EdgeExclusion::with_base(base);
+        assert!(ex.contains(0, 5, 0) && ex.contains(0, 3, 0));
+        assert!(!ex.contains(0, 4, 0));
+        ex.insert(0, 4, 0);
+        assert!(ex.contains(0, 4, 0), "unsealed lookup must still work");
+        ex.seal();
+        assert!(ex.contains(0, 4, 0) && ex.contains(0, 5, 0));
+        assert_eq!(ex.len(), 3);
     }
 }

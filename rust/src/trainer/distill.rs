@@ -7,9 +7,9 @@
 
 use anyhow::Result;
 
-use crate::dataloader::{assemble_block_inputs, GsDataset, Split};
+use crate::dataloader::{batch_seed, run_pipeline, BatchFactory, GsDataset, Split};
 use crate::runtime::{InferSession, Runtime, Tensor, TrainState};
-use crate::sampling::{BlockShape, EdgeExclusion, NeighborSampler};
+use crate::sampling::{BlockShape, EdgeExclusion};
 use crate::trainer::TrainOptions;
 use crate::util::Rng;
 
@@ -30,41 +30,13 @@ impl Default for DistillTrainer {
 }
 
 impl DistillTrainer {
-    /// Teacher embeddings for the given node ids (target ntype).
-    pub fn teacher_embeddings(
-        &self,
-        rt: &Runtime,
-        ds: &GsDataset,
-        teacher_params: &[(String, Tensor)],
-        ids: &[u32],
-        seed: u64,
-    ) -> Result<Vec<f32>> {
-        let sess = InferSession::new(rt, &self.teacher_emb_artifact, teacher_params)?;
-        let spec = sess.exe.spec.clone();
-        let shape = BlockShape::from_spec(&spec).unwrap();
-        let b = spec.cfg_usize("batch").unwrap_or(shape.num_targets());
-        let h = spec.outputs[0].shape[1];
-        let sampler = NeighborSampler::new(&ds.graph);
-        let mut rng = Rng::seed_from(seed);
-        let mut out = vec![0.0f32; ids.len() * h];
-        for (ci, chunk) in ids.chunks(b).enumerate() {
-            let seeds: Vec<(u32, u32)> =
-                chunk.iter().map(|&i| (ds.target_ntype as u32, i)).collect();
-            let block = sampler.sample_block(&seeds, &shape, &mut rng, &EdgeExclusion::new());
-            let (batch, _) = assemble_block_inputs(ds, &block, &spec, 0)?;
-            let res = sess.infer(rt, &batch)?;
-            let emb = res[0].as_f32()?;
-            // Block targets are dedup'd in seed order == chunk order.
-            for i in 0..chunk.len() {
-                let dst = (ci * b + i) * h;
-                out[dst..dst + h].copy_from_slice(&emb[i * h..(i + 1) * h]);
-            }
-        }
-        Ok(out)
-    }
-
     /// Distill: train the student to match teacher embeddings via MSE.
     /// Returns (final loss, student state).
+    ///
+    /// Pipelined: worker threads sample + assemble the teacher's GNN
+    /// blocks and the student's token batches ahead, while this thread
+    /// runs teacher inference and the student step.  The teacher
+    /// session is created once for the whole run.
     pub fn distill(
         &self,
         rt: &Runtime,
@@ -80,36 +52,79 @@ impl DistillTrainer {
         let store = ds.tokens[nt].as_ref().expect("target ntype needs text");
         let n = store.num_rows();
         let mut st = TrainState::new(rt, &self.distill_artifact)?;
-        let mut rng = Rng::seed_from(opts.seed ^ 0xd157);
+
+        let tsess = InferSession::new(rt, &self.teacher_emb_artifact, teacher_params)?;
+        let tspec = tsess.exe.spec.clone();
+        let tshape = BlockShape::from_spec(&tspec).unwrap();
+        let bt = tspec.cfg_usize("batch").unwrap_or(tshape.num_targets());
+        let th = tspec.outputs[0].shape[1];
+        assert_eq!(th, h, "teacher embedding dim must match the student target");
+
+        let seed = opts.seed ^ 0xd157;
+        let mut rng = Rng::seed_from(seed);
         let mut last = 0.0f32;
-        for _epoch in 0..opts.epochs {
+        for epoch in 0..opts.epochs {
             let mut ids: Vec<u32> = (0..n as u32).collect();
             rng.shuffle(&mut ids);
             ids.truncate(2048); // distillation subsample per epoch
+            let chunks: Vec<&[u32]> = ids.chunks(b).collect();
             let mut loss_sum = 0.0;
             let mut steps = 0;
-            for chunk in ids.chunks(b) {
-                let teacher = self.teacher_embeddings(rt, ds, teacher_params, chunk, rng.next_u64())?;
-                let mut teacher_pad = vec![0.0f32; b * h];
-                teacher_pad[..teacher.len()].copy_from_slice(&teacher);
-                let mut tokens = vec![0i32; b * s];
-                let mut lmask = vec![0.0f32; b];
-                for (i, &id) in chunk.iter().enumerate() {
-                    tokens[i * s..(i + 1) * s].copy_from_slice(store.row(id));
-                    lmask[i] = 1.0;
-                }
-                let batch = vec![
-                    Tensor::I32 { shape: vec![b, s], data: tokens },
-                    Tensor::F32 { shape: vec![b, h], data: teacher_pad },
-                    Tensor::F32 { shape: vec![b], data: lmask },
-                ];
-                let out = st.step(rt, &[opts.lr], &batch)?;
-                loss_sum += out.loss;
-                steps += 1;
-            }
+            run_pipeline(
+                &chunks,
+                &opts.prefetch_cfg(),
+                || BatchFactory::new(ds, &tshape),
+                |f, bi, chunk| {
+                    let mut rng = Rng::seed_from(batch_seed(seed, epoch as u64, bi as u64));
+                    // Teacher GNN input blocks for this chunk.
+                    let mut tbatches = vec![];
+                    for sub in chunk.chunks(bt) {
+                        let seeds: Vec<(u32, u32)> =
+                            sub.iter().map(|&i| (nt as u32, i)).collect();
+                        let (batch, _) = f.sample_assemble(
+                            &seeds,
+                            &tshape,
+                            &tspec,
+                            &mut rng,
+                            0,
+                            &EdgeExclusion::new(),
+                            false,
+                        )?;
+                        tbatches.push((batch, sub.len()));
+                    }
+                    // Student token batch.
+                    let mut tokens = vec![0i32; b * s];
+                    let mut lmask = vec![0.0f32; b];
+                    for (i, &id) in chunk.iter().enumerate() {
+                        tokens[i * s..(i + 1) * s].copy_from_slice(store.row(id));
+                        lmask[i] = 1.0;
+                    }
+                    Ok((tbatches, tokens, lmask))
+                },
+                |_, (tbatches, tokens, lmask)| {
+                    let mut teacher_pad = vec![0.0f32; b * h];
+                    let mut off = 0usize;
+                    for (tb, real) in &tbatches {
+                        let res = tsess.infer(rt, tb)?;
+                        let emb = res[0].as_f32()?;
+                        teacher_pad[off * h..(off + real) * h]
+                            .copy_from_slice(&emb[..real * h]);
+                        off += real;
+                    }
+                    let batch = vec![
+                        Tensor::I32 { shape: vec![b, s], data: tokens },
+                        Tensor::F32 { shape: vec![b, h], data: teacher_pad },
+                        Tensor::F32 { shape: vec![b], data: lmask },
+                    ];
+                    let out = st.step(rt, &[opts.lr], &batch)?;
+                    loss_sum += out.loss;
+                    steps += 1;
+                    Ok(())
+                },
+            )?;
             last = loss_sum / steps.max(1) as f32;
             if opts.verbose {
-                eprintln!("[distill] epoch {_epoch}: mse {last:.5}");
+                eprintln!("[distill] epoch {epoch}: mse {last:.5}");
             }
         }
         Ok((last, st))

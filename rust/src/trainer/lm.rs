@@ -8,10 +8,14 @@
 //! * `embed_all` — run the (fine-tuned) encoder over every text node
 //!   and install the embeddings into the engine's text store — the
 //!   "compute BERT embeddings" stage whose wall-clock Table 2 reports.
+//!
+//! All stages build token batches through the prefetch pipeline so
+//! batch construction overlaps the PJRT step; per-batch RNG derives
+//! from (seed, epoch, batch idx) for worker-count-independent output.
 
 use anyhow::{bail, Result};
 
-use crate::dataloader::{GsDataset, Split};
+use crate::dataloader::{batch_seed, run_pipeline, GsDataset, Split};
 use crate::dist::DistTensor;
 use crate::runtime::{InferSession, Runtime, Tensor, TrainState};
 use crate::trainer::TrainOptions;
@@ -61,39 +65,50 @@ impl LmTrainer {
         let s = spec.batch_spec("tokens").unwrap().shape[1];
         let mut st = TrainState::new(rt, &self.mlm_artifact)?;
         let n = ds.tokens[ntype].as_ref().unwrap().num_rows();
-        let mut rng = Rng::seed_from(opts.seed ^ 0x1717);
+        let seed = opts.seed ^ 0x1717;
+        let mut rng = Rng::seed_from(seed);
         let mut last = 0.0;
-        for _epoch in 0..opts.epochs {
+        for epoch in 0..opts.epochs {
             let mut ids: Vec<u32> = (0..n as u32).collect();
             rng.shuffle(&mut ids);
+            let chunks: Vec<&[u32]> = ids.chunks(b).collect();
             let mut loss_sum = 0.0f32;
             let mut steps = 0;
-            for chunk in ids.chunks(b) {
-                let mut tokens = token_batch(ds, ntype, chunk, b, s);
-                let mut positions = vec![0i32; b];
-                let mut labels = vec![0i32; b];
-                let mut lmask = vec![0.0f32; b];
-                for i in 0..chunk.len() {
-                    // Mask one random non-pad position.
-                    let p = rng.gen_range(s);
-                    positions[i] = p as i32;
-                    labels[i] = tokens[i * s + p];
-                    tokens[i * s + p] = 1; // [MASK]
-                    lmask[i] = 1.0;
-                }
-                let batch = vec![
-                    Tensor::I32 { shape: vec![b, s], data: tokens },
-                    Tensor::I32 { shape: vec![b], data: positions },
-                    Tensor::I32 { shape: vec![b], data: labels },
-                    Tensor::F32 { shape: vec![b], data: lmask },
-                ];
-                let out = st.step(rt, &[opts.lr], &batch)?;
-                loss_sum += out.loss;
-                steps += 1;
-            }
+            run_pipeline(
+                &chunks,
+                &opts.prefetch_cfg(),
+                || (),
+                |_, bi, chunk| {
+                    let mut rng = Rng::seed_from(batch_seed(seed, epoch as u64, bi as u64));
+                    let mut tokens = token_batch(ds, ntype, chunk, b, s);
+                    let mut positions = vec![0i32; b];
+                    let mut labels = vec![0i32; b];
+                    let mut lmask = vec![0.0f32; b];
+                    for i in 0..chunk.len() {
+                        // Mask one random non-pad position.
+                        let p = rng.gen_range(s);
+                        positions[i] = p as i32;
+                        labels[i] = tokens[i * s + p];
+                        tokens[i * s + p] = 1; // [MASK]
+                        lmask[i] = 1.0;
+                    }
+                    Ok(vec![
+                        Tensor::I32 { shape: vec![b, s], data: tokens },
+                        Tensor::I32 { shape: vec![b], data: positions },
+                        Tensor::I32 { shape: vec![b], data: labels },
+                        Tensor::F32 { shape: vec![b], data: lmask },
+                    ])
+                },
+                |_, batch| {
+                    let out = st.step(rt, &[opts.lr], &batch)?;
+                    loss_sum += out.loss;
+                    steps += 1;
+                    Ok(())
+                },
+            )?;
             last = loss_sum / steps.max(1) as f32;
             if opts.verbose {
-                eprintln!("[lm mlm] epoch {_epoch}: loss {last:.4}");
+                eprintln!("[lm mlm] epoch {epoch}: loss {last:.4}");
             }
         }
         Ok((last, st))
@@ -120,31 +135,40 @@ impl LmTrainer {
         let train_ids = labels_store.ids_in(Split::Train);
         let mut rng = Rng::seed_from(opts.seed ^ 0xf17c);
         let mut last = 0.0;
-        for _epoch in 0..opts.epochs {
+        for epoch in 0..opts.epochs {
             let mut ids = train_ids.clone();
             rng.shuffle(&mut ids);
+            let chunks: Vec<&[u32]> = ids.chunks(b).collect();
             let mut loss_sum = 0.0f32;
             let mut steps = 0;
-            for chunk in ids.chunks(b) {
-                let tokens = token_batch(ds, nt, chunk, b, s);
-                let mut labels = vec![0i32; b];
-                let mut lmask = vec![0.0f32; b];
-                for (i, &id) in chunk.iter().enumerate() {
-                    labels[i] = labels_store.labels[id as usize];
-                    lmask[i] = 1.0;
-                }
-                let batch = vec![
-                    Tensor::I32 { shape: vec![b, s], data: tokens },
-                    Tensor::I32 { shape: vec![b], data: labels },
-                    Tensor::F32 { shape: vec![b], data: lmask },
-                ];
-                let out = st.step(rt, &[opts.lr], &batch)?;
-                loss_sum += out.loss;
-                steps += 1;
-            }
+            run_pipeline(
+                &chunks,
+                &opts.prefetch_cfg(),
+                || (),
+                |_, _bi, chunk| {
+                    let tokens = token_batch(ds, nt, chunk, b, s);
+                    let mut labels = vec![0i32; b];
+                    let mut lmask = vec![0.0f32; b];
+                    for (i, &id) in chunk.iter().enumerate() {
+                        labels[i] = labels_store.labels[id as usize];
+                        lmask[i] = 1.0;
+                    }
+                    Ok(vec![
+                        Tensor::I32 { shape: vec![b, s], data: tokens },
+                        Tensor::I32 { shape: vec![b], data: labels },
+                        Tensor::F32 { shape: vec![b], data: lmask },
+                    ])
+                },
+                |_, batch| {
+                    let out = st.step(rt, &[opts.lr], &batch)?;
+                    loss_sum += out.loss;
+                    steps += 1;
+                    Ok(())
+                },
+            )?;
             last = loss_sum / steps.max(1) as f32;
             if opts.verbose {
-                eprintln!("[lm ftnc] epoch {_epoch}: loss {last:.4}");
+                eprintln!("[lm ftnc] epoch {epoch}: loss {last:.4}");
             }
         }
         Ok((last, st))
@@ -172,35 +196,55 @@ impl LmTrainer {
         let n_dst = ds.graph.num_nodes[def.dst_ntype];
         let mut st = TrainState::with_params(rt, &self.lp_artifact, base)?;
         let train_ids = lp.edge_ids_in(Split::Train);
-        let mut rng = Rng::seed_from(opts.seed ^ 0xf17b);
+        let seed = opts.seed ^ 0xf17b;
+        let mut rng = Rng::seed_from(seed);
         let mut last = 0.0;
-        for _epoch in 0..opts.epochs {
+        for epoch in 0..opts.epochs {
             let mut ids = train_ids.clone();
             rng.shuffle(&mut ids);
             ids.truncate(4096); // scaled-down FTLP epoch
+            let chunks: Vec<&[u32]> = ids.chunks(b).collect();
             let mut loss_sum = 0.0f32;
             let mut steps = 0;
-            for chunk in ids.chunks(b) {
-                let srcs: Vec<u32> = chunk.iter().map(|&e| es.src[e as usize]).collect();
-                let dsts: Vec<u32> = chunk.iter().map(|&e| es.dst[e as usize]).collect();
-                let negs: Vec<u32> = (0..k).map(|_| rng.gen_range(n_dst) as u32).collect();
-                let mut pmask = vec![0.0f32; b];
-                for i in 0..chunk.len() {
-                    pmask[i] = 1.0;
-                }
-                let batch = vec![
-                    Tensor::I32 { shape: vec![b, s], data: token_batch(ds, def.src_ntype, &srcs, b, s) },
-                    Tensor::I32 { shape: vec![b, s], data: token_batch(ds, def.dst_ntype, &dsts, b, s) },
-                    Tensor::I32 { shape: vec![k, s], data: token_batch(ds, def.dst_ntype, &negs, k, s) },
-                    Tensor::F32 { shape: vec![b], data: pmask },
-                ];
-                let out = st.step(rt, &[opts.lr], &batch)?;
-                loss_sum += out.loss;
-                steps += 1;
-            }
+            run_pipeline(
+                &chunks,
+                &opts.prefetch_cfg(),
+                || (),
+                |_, bi, chunk| {
+                    let mut rng = Rng::seed_from(batch_seed(seed, epoch as u64, bi as u64));
+                    let srcs: Vec<u32> = chunk.iter().map(|&e| es.src[e as usize]).collect();
+                    let dsts: Vec<u32> = chunk.iter().map(|&e| es.dst[e as usize]).collect();
+                    let negs: Vec<u32> = (0..k).map(|_| rng.gen_range(n_dst) as u32).collect();
+                    let mut pmask = vec![0.0f32; b];
+                    for i in 0..chunk.len() {
+                        pmask[i] = 1.0;
+                    }
+                    Ok(vec![
+                        Tensor::I32 {
+                            shape: vec![b, s],
+                            data: token_batch(ds, def.src_ntype, &srcs, b, s),
+                        },
+                        Tensor::I32 {
+                            shape: vec![b, s],
+                            data: token_batch(ds, def.dst_ntype, &dsts, b, s),
+                        },
+                        Tensor::I32 {
+                            shape: vec![k, s],
+                            data: token_batch(ds, def.dst_ntype, &negs, k, s),
+                        },
+                        Tensor::F32 { shape: vec![b], data: pmask },
+                    ])
+                },
+                |_, batch| {
+                    let out = st.step(rt, &[opts.lr], &batch)?;
+                    loss_sum += out.loss;
+                    steps += 1;
+                    Ok(())
+                },
+            )?;
             last = loss_sum / steps.max(1) as f32;
             if opts.verbose {
-                eprintln!("[lm ftlp] epoch {_epoch}: loss {last:.4}");
+                eprintln!("[lm ftlp] epoch {epoch}: loss {last:.4}");
             }
         }
         Ok((last, st))
@@ -214,6 +258,7 @@ impl LmTrainer {
         rt: &Runtime,
         ds: &mut GsDataset,
         lm_params: &[(String, Tensor)],
+        opts: &TrainOptions,
     ) -> Result<f64> {
         let t0 = std::time::Instant::now();
         let sess = InferSession::new(rt, &self.embed_artifact, lm_params)?;
@@ -221,6 +266,7 @@ impl LmTrainer {
         let b = spec.batch_spec("tokens").unwrap().shape[0];
         let s = spec.batch_spec("tokens").unwrap().shape[1];
         let h = spec.outputs[0].shape[1];
+        let cfg = opts.prefetch_cfg();
         for nt in 0..ds.graph.schema.ntypes.len() {
             if ds.tokens[nt].is_none() {
                 continue;
@@ -228,14 +274,25 @@ impl LmTrainer {
             let n = ds.tokens[nt].as_ref().unwrap().num_rows();
             let mut emb = vec![0.0f32; n * h];
             let ids: Vec<u32> = (0..n as u32).collect();
-            for chunk in ids.chunks(b) {
-                let tokens = token_batch(ds, nt, chunk, b, s);
-                let out = sess.infer(rt, &[Tensor::I32 { shape: vec![b, s], data: tokens }])?;
-                let rows = out[0].as_f32()?;
-                for (i, &id) in chunk.iter().enumerate() {
-                    emb[id as usize * h..(id as usize + 1) * h]
-                        .copy_from_slice(&rows[i * h..(i + 1) * h]);
-                }
+            let chunks: Vec<&[u32]> = ids.chunks(b).collect();
+            {
+                let dsr: &GsDataset = ds;
+                run_pipeline(
+                    &chunks,
+                    &cfg,
+                    || (),
+                    |_, _bi, chunk| Ok((token_batch(dsr, nt, chunk, b, s), chunk.to_vec())),
+                    |_, (tokens, chunk)| {
+                        let out =
+                            sess.infer(rt, &[Tensor::I32 { shape: vec![b, s], data: tokens }])?;
+                        let rows = out[0].as_f32()?;
+                        for (i, &id) in chunk.iter().enumerate() {
+                            emb[id as usize * h..(id as usize + 1) * h]
+                                .copy_from_slice(&rows[i * h..(i + 1) * h]);
+                        }
+                        Ok(())
+                    },
+                )?;
             }
             ds.engine.text_emb[nt] = DistTensor::from_data(
                 nt,

@@ -9,11 +9,12 @@
 use anyhow::Result;
 
 use crate::dataloader::{
-    apply_lemb_grads, assemble_block_inputs, GsDataset, LinkPredictionDataLoader, Split,
+    apply_lemb_grads, batch_seed, build_lp_batch, fill_lemb, run_pipeline, BatchFactory,
+    GsDataset, LinkPredictionDataLoader, Split,
 };
 use crate::eval::{distmult, reciprocal_rank, Mean};
 use crate::runtime::{InferSession, Runtime, TrainState};
-use crate::sampling::{EdgeExclusion, NegSampler, NeighborSampler};
+use crate::sampling::{EdgeExclusion, NegSampler};
 use crate::trainer::TrainOptions;
 use crate::util::Rng;
 
@@ -84,13 +85,20 @@ impl LpTrainer {
         ds: &mut GsDataset,
         opts: &TrainOptions,
     ) -> Result<(LpReport, TrainState)> {
+        let ds: &GsDataset = ds; // embedding updates go through interior mutability
         let spec = rt.manifest.get(&self.train_artifact)?.clone();
         let mut st = TrainState::new(rt, &self.train_artifact)?;
         let ldim = spec.batch_spec("lemb").map(|t| t.shape[1]).unwrap_or(0);
-        let mut rng = Rng::seed_from(opts.seed ^ 0x1b9);
+        let seed = opts.seed ^ 0x1b9;
+        let mut rng = Rng::seed_from(seed);
         let mut report = LpReport::default();
         let mut best = (0usize, 0.0f64);
 
+        // One loader for the whole run: its val/test edge exclusion is
+        // built and sorted once, then shared by every batch.
+        let loader = LinkPredictionDataLoader::new(&spec, self.sampler)?;
+        let b = loader.batch_size();
+        let pf = opts.prefetch_cfg();
         let all_train = ds.lp.as_ref().expect("no LP task").edge_ids_in(Split::Train);
         for epoch in 0..opts.epochs {
             let t0 = std::time::Instant::now();
@@ -99,20 +107,30 @@ impl LpTrainer {
             if let Some(cap) = self.max_train_edges {
                 ids.truncate(cap);
             }
-            let loader = LinkPredictionDataLoader::new(&spec, self.sampler)?;
-            let b = loader.batch_size();
+            let chunks: Vec<&[u32]> = ids.chunks(b).collect();
             let mut epoch_loss = 0.0f32;
             let mut steps = 0usize;
-            for (bi, chunk) in ids.chunks(b).enumerate() {
-                let worker = (bi % opts.n_workers) as u32;
-                let (batch, touch) = loader.batch(ds, chunk, &mut rng, worker)?;
-                let out = st.step(rt, &[opts.lr, self.loss.sel()], &batch)?;
-                if let (Some(g), true) = (&out.grad_lemb, ldim > 0) {
-                    apply_lemb_grads(&mut ds.engine, &touch, g, ldim, opts.lr);
-                }
-                epoch_loss += out.loss;
-                steps += 1;
-            }
+            run_pipeline(
+                &chunks,
+                &pf,
+                || BatchFactory::new(ds, &loader.shape),
+                |f, bi, chunk| {
+                    let mut rng = Rng::seed_from(batch_seed(seed, epoch as u64, bi as u64));
+                    let worker = (bi % opts.n_workers.max(1)) as u32;
+                    build_lp_batch(f, &loader, chunk, &mut rng, worker, true)
+                },
+                |bi, (mut batch, touch)| {
+                    let worker = (bi % opts.n_workers.max(1)) as u32;
+                    fill_lemb(ds, &mut batch, &touch, worker)?;
+                    let out = st.step(rt, &[opts.lr, self.loss.sel()], &batch)?;
+                    if let (Some(g), true) = (&out.grad_lemb, ldim > 0) {
+                        apply_lemb_grads(&ds.engine, &touch, g, ldim, opts.lr);
+                    }
+                    epoch_loss += out.loss;
+                    steps += 1;
+                    Ok(())
+                },
+            )?;
             report.epoch_losses.push(epoch_loss / steps.max(1) as f32);
             report.epoch_times.push(t0.elapsed().as_secs_f64());
             report.steps += steps;
@@ -145,7 +163,8 @@ impl LpTrainer {
     }
 
     /// MRR over a split: embed (src, dst, K joint negatives) with the
-    /// emb artifact, score with DistMult in Rust.
+    /// emb artifact, score with DistMult in Rust.  Block construction
+    /// is pipelined; inference + scoring stay on this thread.
     pub fn evaluate(
         &self,
         rt: &Runtime,
@@ -165,62 +184,78 @@ impl LpTrainer {
         let k = 32usize;
         let b = (shape.num_targets() - k) / 2; // eval batch of positives
         let mut ids = lp.edge_ids_in(split);
-        let mut rng = Rng::seed_from(opts.seed ^ 0xe7a1);
+        let seed = opts.seed ^ 0xe7a1;
+        let mut rng = Rng::seed_from(seed);
         rng.shuffle(&mut ids);
         ids.truncate(256); // eval subsample, fixed for comparability
-        let sampler = NeighborSampler::new(&ds.graph);
+        let chunks: Vec<&[u32]> = ids.chunks(b).collect();
+        let h = spec.outputs[0].shape[1];
         let mut mrr = Mean::default();
 
-        for chunk in ids.chunks(b) {
-            // Seeds: [srcs, dsts, negs(joint k)] — dedup for the block.
-            let mut seeds: Vec<(u32, u32)> = vec![];
-            let mut order: Vec<(u32, u32)> = vec![];
-            let push = |p: (u32, u32), seeds: &mut Vec<(u32, u32)>| {
-                if !seeds.contains(&p) {
-                    seeds.push(p);
+        run_pipeline(
+            &chunks,
+            &opts.prefetch_cfg(),
+            || BatchFactory::new(ds, &shape),
+            |f, bi, chunk| {
+                let mut rng = Rng::seed_from(batch_seed(seed, 1, bi as u64));
+                // Seeds: [srcs, dsts, negs(joint k)] — dedup for the block.
+                let mut seeds: Vec<(u32, u32)> = vec![];
+                let mut order: Vec<(u32, u32)> = vec![];
+                let push = |p: (u32, u32), seeds: &mut Vec<(u32, u32)>| {
+                    if !seeds.contains(&p) {
+                        seeds.push(p);
+                    }
+                };
+                for &eid in chunk.iter() {
+                    let p = (def.src_ntype as u32, es.src[eid as usize]);
+                    order.push(p);
+                    push(p, &mut seeds);
                 }
-            };
-            for &eid in chunk {
-                let p = (def.src_ntype as u32, es.src[eid as usize]);
-                order.push(p);
-                push(p, &mut seeds);
-            }
-            for &eid in chunk {
-                let p = (def.dst_ntype as u32, es.dst[eid as usize]);
-                order.push(p);
-                push(p, &mut seeds);
-            }
-            let negs: Vec<u32> = (0..k).map(|_| rng.gen_range(n_dst) as u32).collect();
-            for &nid in &negs {
-                let p = (def.dst_ntype as u32, nid);
-                order.push(p);
-                push(p, &mut seeds);
-            }
-            let block = sampler.sample_block(&seeds, &shape, &mut rng, &EdgeExclusion::new());
-            let (batch, _) = assemble_block_inputs(ds, &block, &spec, 0)?;
-            let out = sess.infer(rt, &batch)?;
-            let emb = out[0].as_f32()?;
-            let rel = out[1].as_f32()?;
-            let h = spec.outputs[0].shape[1];
-            let slot_of = |p: (u32, u32)| block.targets().iter().position(|&q| q == p).unwrap();
-            let r = &rel[lp.etype * h..(lp.etype + 1) * h];
-            let embrow = |p: (u32, u32)| {
-                let s = slot_of(p);
-                &emb[s * h..(s + 1) * h]
-            };
-            let nb = chunk.len();
-            for (i, &eid) in chunk.iter().enumerate() {
-                let _ = eid;
-                let eu = embrow(order[i]);
-                let ev = embrow(order[nb + i]);
-                let pos = distmult(eu, r, ev);
-                let neg_scores: Vec<f32> = negs
-                    .iter()
-                    .map(|&nid| distmult(eu, r, embrow((def.dst_ntype as u32, nid))))
-                    .collect();
-                mrr.add(reciprocal_rank(pos, &neg_scores));
-            }
-        }
+                for &eid in chunk.iter() {
+                    let p = (def.dst_ntype as u32, es.dst[eid as usize]);
+                    order.push(p);
+                    push(p, &mut seeds);
+                }
+                let negs: Vec<u32> = (0..k).map(|_| rng.gen_range(n_dst) as u32).collect();
+                for &nid in &negs {
+                    let p = (def.dst_ntype as u32, nid);
+                    order.push(p);
+                    push(p, &mut seeds);
+                }
+                let (batch, _) = f.sample_assemble(
+                    &seeds,
+                    &shape,
+                    &spec,
+                    &mut rng,
+                    0,
+                    &EdgeExclusion::new(),
+                    false,
+                )?;
+                Ok((batch, f.targets().to_vec(), order, negs, chunk.len()))
+            },
+            |_bi, (batch, targets, order, negs, nb)| {
+                let out = sess.infer(rt, &batch)?;
+                let emb = out[0].as_f32()?;
+                let rel = out[1].as_f32()?;
+                let slot_of = |p: (u32, u32)| targets.iter().position(|&q| q == p).unwrap();
+                let r = &rel[lp.etype * h..(lp.etype + 1) * h];
+                let embrow = |p: (u32, u32)| {
+                    let s = slot_of(p);
+                    &emb[s * h..(s + 1) * h]
+                };
+                for i in 0..nb {
+                    let eu = embrow(order[i]);
+                    let ev = embrow(order[nb + i]);
+                    let pos = distmult(eu, r, ev);
+                    let neg_scores: Vec<f32> = negs
+                        .iter()
+                        .map(|&nid| distmult(eu, r, embrow((def.dst_ntype as u32, nid))))
+                        .collect();
+                    mrr.add(reciprocal_rank(pos, &neg_scores));
+                }
+                Ok(())
+            },
+        )?;
         Ok(mrr.get())
     }
 }

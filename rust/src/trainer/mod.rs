@@ -24,12 +24,37 @@ pub struct TrainOptions {
     pub seed: u64,
     /// Logical workers (= partitions) to rotate batches across.
     pub n_workers: usize,
+    /// Batch-building threads for the prefetching loader
+    /// (CLI `--num-workers`); 1 = serial.  Output is bit-identical for
+    /// any value — per-batch RNG derives from (seed, epoch, batch idx).
+    pub loader_workers: usize,
+    /// Batches each loader worker builds ahead (CLI `--prefetch`).
+    pub prefetch: usize,
     pub log_every: usize,
     pub verbose: bool,
 }
 
 impl Default for TrainOptions {
     fn default() -> Self {
-        TrainOptions { lr: 3e-3, epochs: 5, seed: 0, n_workers: 1, log_every: 0, verbose: false }
+        TrainOptions {
+            lr: 3e-3,
+            epochs: 5,
+            seed: 0,
+            n_workers: 1,
+            loader_workers: 1,
+            prefetch: 2,
+            log_every: 0,
+            verbose: false,
+        }
+    }
+}
+
+impl TrainOptions {
+    /// The pipelining knobs as a loader config.
+    pub fn prefetch_cfg(&self) -> crate::dataloader::PrefetchConfig {
+        crate::dataloader::PrefetchConfig {
+            n_workers: self.loader_workers,
+            depth: self.prefetch,
+        }
     }
 }

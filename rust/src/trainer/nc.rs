@@ -1,10 +1,16 @@
-//! Node-classification trainer + evaluator.
+//! Node-classification trainer + evaluator, pipelined: worker threads
+//! sample + assemble batches ahead while this thread runs the PJRT
+//! step (learnable-embedding rows are deferred to the step thread, so
+//! results are bit-identical for any `loader_workers`).
 
 use anyhow::Result;
 
-use crate::dataloader::{apply_lemb_grads, assemble_block_inputs, GsDataset, NodeDataLoader, Split};
+use crate::dataloader::{
+    apply_lemb_grads, batch_seed, fill_lemb, run_pipeline, BatchFactory, GsDataset,
+    NodeDataLoader, PrefetchingLoader, Split,
+};
 use crate::runtime::{InferSession, Runtime, TrainState};
-use crate::sampling::{EdgeExclusion, NeighborSampler};
+use crate::sampling::EdgeExclusion;
 use crate::trainer::TrainOptions;
 use crate::util::Rng;
 
@@ -37,34 +43,46 @@ impl NodeTrainer {
         ds: &mut GsDataset,
         opts: &TrainOptions,
     ) -> Result<(NcReport, TrainState)> {
+        let ds: &GsDataset = ds; // embedding updates go through interior mutability
         let spec = rt.manifest.get(&self.train_artifact)?.clone();
         let mut st = TrainState::new(rt, &self.train_artifact)?;
         let loader = NodeDataLoader::new(&spec)?;
         let b = loader.batch_size();
         let ldim = spec.batch_spec("lemb").map(|t| t.shape[1]).unwrap_or(0);
-        let mut rng = Rng::seed_from(opts.seed ^ 0x6e63); // "nc"
+        let seed = opts.seed ^ 0x6e63; // "nc"
+        let mut rng = Rng::seed_from(seed);
         let train_ids = ds.node_labels().ids_in(Split::Train);
         let mut report = NcReport::default();
+        let pfl = PrefetchingLoader::new(&loader, opts.prefetch_cfg());
 
         for epoch in 0..opts.epochs {
             let t0 = std::time::Instant::now();
             let mut ids = train_ids.clone();
             rng.shuffle(&mut ids);
+            let chunks: Vec<&[u32]> = ids.chunks(b).collect();
             let mut epoch_loss = 0.0f32;
             let mut steps = 0usize;
-            for (bi, chunk) in ids.chunks(b).enumerate() {
-                let worker = (bi % opts.n_workers) as u32;
-                let (batch, touch, _) = loader.batch(ds, chunk, &mut rng, worker)?;
-                let out = st.step(rt, &[opts.lr], &batch)?;
-                if let (Some(g), true) = (&out.grad_lemb, ldim > 0) {
-                    apply_lemb_grads(&mut ds.engine, &touch, g, ldim, opts.lr);
-                }
-                epoch_loss += out.loss;
-                steps += 1;
-                if opts.log_every > 0 && bi % opts.log_every == 0 && opts.verbose {
-                    eprintln!("[nc] epoch {epoch} step {bi} loss {:.4}", out.loss);
-                }
-            }
+            pfl.for_each(
+                ds,
+                &chunks,
+                seed,
+                epoch as u64,
+                opts.n_workers,
+                |bi, (mut batch, touch)| {
+                    let worker = (bi % opts.n_workers.max(1)) as u32;
+                    fill_lemb(ds, &mut batch, &touch, worker)?;
+                    let out = st.step(rt, &[opts.lr], &batch)?;
+                    if let (Some(g), true) = (&out.grad_lemb, ldim > 0) {
+                        apply_lemb_grads(&ds.engine, &touch, g, ldim, opts.lr);
+                    }
+                    epoch_loss += out.loss;
+                    steps += 1;
+                    if opts.log_every > 0 && bi % opts.log_every == 0 && opts.verbose {
+                        eprintln!("[nc] epoch {epoch} step {bi} loss {:.4}", out.loss);
+                    }
+                    Ok(())
+                },
+            )?;
             report.epoch_losses.push(epoch_loss / steps.max(1) as f32);
             report.epoch_times.push(t0.elapsed().as_secs_f64());
             report.steps += steps;
@@ -81,7 +99,8 @@ impl NodeTrainer {
         Ok((report, st))
     }
 
-    /// Accuracy over a split via the logits infer artifact.
+    /// Accuracy over a split via the logits infer artifact; block
+    /// construction is pipelined, inference stays on this thread.
     pub fn evaluate(
         &self,
         rt: &Runtime,
@@ -97,32 +116,49 @@ impl NodeTrainer {
         let b = spec.cfg_usize("batch").unwrap_or(shape.num_targets());
         let c = *spec.outputs[0].shape.last().unwrap();
         let ids = ds.node_labels().ids_in(split);
-        let sampler = NeighborSampler::new(&ds.graph);
-        let mut rng = Rng::seed_from(opts.seed ^ 0xe7a1);
+        let seed = opts.seed ^ 0xe7a1;
+        let chunks: Vec<&[u32]> = ids.chunks(b).collect();
+        let labels_store = ds.node_labels();
         let mut correct = 0usize;
         let mut total = 0usize;
-        for chunk in ids.chunks(b) {
-            let seeds: Vec<(u32, u32)> =
-                chunk.iter().map(|&i| (ds.target_ntype as u32, i)).collect();
-            let block = sampler.sample_block(&seeds, &shape, &mut rng, &EdgeExclusion::new());
-            let (batch, _) = assemble_block_inputs(ds, &block, &spec, 0)?;
-            let out = sess.infer(rt, &batch)?;
-            let logits = out[0].as_f32()?;
-            let labels_store = ds.node_labels();
-            for (i, &(_, id)) in block.targets().iter().enumerate() {
-                let row = &logits[i * c..(i + 1) * c];
-                let am = row
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.total_cmp(b.1))
-                    .map(|(j, _)| j)
-                    .unwrap();
-                if am as i32 == labels_store.labels[id as usize] {
-                    correct += 1;
+        run_pipeline(
+            &chunks,
+            &opts.prefetch_cfg(),
+            || BatchFactory::new(ds, &shape),
+            |f, bi, chunk| {
+                let mut rng = Rng::seed_from(batch_seed(seed, 0, bi as u64));
+                let seeds: Vec<(u32, u32)> =
+                    chunk.iter().map(|&i| (ds.target_ntype as u32, i)).collect();
+                let (batch, _) = f.sample_assemble(
+                    &seeds,
+                    &shape,
+                    &spec,
+                    &mut rng,
+                    0,
+                    &EdgeExclusion::new(),
+                    false,
+                )?;
+                Ok((batch, f.targets().to_vec()))
+            },
+            |_bi, (batch, targets)| {
+                let out = sess.infer(rt, &batch)?;
+                let logits = out[0].as_f32()?;
+                for (i, &(_, id)) in targets.iter().enumerate() {
+                    let row = &logits[i * c..(i + 1) * c];
+                    let am = row
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.total_cmp(b.1))
+                        .map(|(j, _)| j)
+                        .unwrap();
+                    if am as i32 == labels_store.labels[id as usize] {
+                        correct += 1;
+                    }
+                    total += 1;
                 }
-                total += 1;
-            }
-        }
+                Ok(())
+            },
+        )?;
         Ok(correct as f64 / total.max(1) as f64)
     }
 }

@@ -1,6 +1,90 @@
-//! Small shared utilities: deterministic RNG, JSON, timers, padding helpers.
+//! Small shared utilities: deterministic RNG, FxHash-style hashing,
+//! JSON, timers, padding helpers.
 
 pub mod json;
+
+/// FxHash-style multiply-rotate hasher (the rustc / firefox hash),
+/// hand-rolled for the offline build.  Much cheaper than SipHash for
+/// the small integer keys on the sampling hot path; NOT DoS-resistant,
+/// which is fine for trusted in-process keys.
+#[derive(Default, Clone)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+const FX_SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(FX_SEED);
+    }
+}
+
+impl std::hash::Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            self.add(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rest = chunks.remainder();
+        if !rest.is_empty() {
+            let mut buf = [0u8; 8];
+            buf[..rest.len()].copy_from_slice(rest);
+            self.add(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, i: u8) {
+        self.add(i as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, i: u32) {
+        self.add(i as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, i: u64) {
+        self.add(i);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, i: usize) {
+        self.add(i as u64);
+    }
+}
+
+/// `BuildHasher` for [`FxHasher`]; plugs into std collections.
+#[derive(Default, Clone)]
+pub struct FxBuildHasher;
+
+impl std::hash::BuildHasher for FxBuildHasher {
+    type Hasher = FxHasher;
+
+    #[inline]
+    fn build_hasher(&self) -> FxHasher {
+        FxHasher::default()
+    }
+}
+
+/// HashMap/HashSet with the fast non-cryptographic hasher.
+pub type FxHashMap<K, V> = std::collections::HashMap<K, V, FxBuildHasher>;
+pub type FxHashSet<T> = std::collections::HashSet<T, FxBuildHasher>;
+
+/// Single-shot Fx hash of a u64 key (open-addressing tables).
+#[inline]
+pub fn fxhash64(key: u64) -> u64 {
+    let h = (key ^ (key >> 32)).wrapping_mul(FX_SEED);
+    h ^ (h >> 29)
+}
 
 /// SplitMix64 — seeds the main generator and hashes ids deterministically.
 #[inline]
@@ -98,19 +182,6 @@ impl Rng {
         }
     }
 
-    /// Sample k distinct indices from [0, n) (k ≤ n), Floyd's algorithm.
-    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
-        assert!(k <= n);
-        let mut chosen = std::collections::HashSet::with_capacity(k);
-        let mut out = Vec::with_capacity(k);
-        for j in (n - k)..n {
-            let t = self.gen_range(j + 1);
-            let pick = if chosen.contains(&t) { j } else { t };
-            chosen.insert(pick);
-            out.push(pick);
-        }
-        out
-    }
 }
 
 /// Wall-clock stopwatch that accumulates named stage timings.
@@ -157,6 +228,32 @@ mod tests {
     use super::*;
 
     #[test]
+    fn fx_map_and_set_work() {
+        let mut m: FxHashMap<(u32, u32), i32> = FxHashMap::default();
+        for i in 0..1000u32 {
+            m.insert((i % 7, i), i as i32);
+        }
+        assert_eq!(m.len(), 1000);
+        assert_eq!(m[&(3, 3)], 3);
+        let mut s: FxHashSet<u64> = FxHashSet::default();
+        for i in 0..100 {
+            s.insert(i * 31);
+        }
+        assert!(s.contains(&62) && !s.contains(&63));
+    }
+
+    #[test]
+    fn fxhash64_spreads_low_entropy_keys() {
+        // Packed (ntype, id) keys differ only in low bits; their hashes
+        // must still differ in the high bits used by the slot table.
+        let mut seen = std::collections::HashSet::new();
+        for id in 0..4096u64 {
+            seen.insert(fxhash64(id) >> 52);
+        }
+        assert!(seen.len() > 256, "only {} distinct high-12-bit buckets", seen.len());
+    }
+
+    #[test]
     fn rng_deterministic() {
         let mut a = Rng::seed_from(42);
         let mut b = Rng::seed_from(42);
@@ -172,17 +269,6 @@ mod tests {
             assert!(r.gen_range(10) < 10);
             let f = r.gen_f64();
             assert!((0.0..1.0).contains(&f));
-        }
-    }
-
-    #[test]
-    fn sample_distinct_is_distinct() {
-        let mut r = Rng::seed_from(3);
-        for _ in 0..50 {
-            let v = r.sample_distinct(20, 10);
-            let s: std::collections::HashSet<_> = v.iter().collect();
-            assert_eq!(s.len(), 10);
-            assert!(v.iter().all(|&x| x < 20));
         }
     }
 

@@ -13,6 +13,26 @@ use graphstorm::sampling::{BlockShape, EdgeExclusion, NegSampler, NeighborSample
 use graphstorm::trainer::{NodeTrainer, TrainOptions};
 use graphstorm::util::Rng;
 
+/// The runtime if the manifest loads (batch-shape tests don't execute).
+fn manifest_rt() -> Option<Runtime> {
+    match Runtime::from_default_dir() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping: AOT artifacts unavailable ({e})");
+            None
+        }
+    }
+}
+
+/// The runtime only if PJRT can actually execute artifacts.
+fn exec_rt() -> Option<Runtime> {
+    let rt = graphstorm::runtime::runtime_if_available();
+    if rt.is_none() {
+        eprintln!("skipping: AOT artifacts / PJRT backend unavailable");
+    }
+    rt
+}
+
 fn mag_ds(n: usize, parts: usize) -> graphstorm::dataloader::GsDataset {
     let raw = mag::generate(&mag::MagConfig { n_papers: n, ..Default::default() });
     let book = if parts <= 1 {
@@ -152,7 +172,7 @@ fn prop_exclusion_holds_with_reverse() {
 /// produces manifest-conforming shapes.
 #[test]
 fn prop_batch_assembly_deterministic() {
-    let rt = Runtime::from_default_dir().unwrap();
+    let Some(rt) = manifest_rt() else { return };
     let spec = rt.manifest.get("rgcn_nc_train").unwrap().clone();
     let mut ds = mag_ds(600, 2);
     ds.ensure_text_features(64);
@@ -175,7 +195,7 @@ fn prop_batch_assembly_deterministic() {
 /// negatives reference other positives' destinations.
 #[test]
 fn prop_lp_batch_slots_valid() {
-    let rt = Runtime::from_default_dir().unwrap();
+    let Some(rt) = manifest_rt() else { return };
     let spec = rt.manifest.get("rgcn_lp_joint_k32_train").unwrap().clone();
     let world = amazon::generate_world(&amazon::ArConfig { n_items: 500, ..Default::default() });
     let raw = amazon::build_variant(&world, amazon::ArVariant::HeteroV2);
@@ -241,7 +261,10 @@ fn end_to_end_gconstruct_train_checkpoint() {
     let mut ds = graphstorm::gconstruct::construct_dataset(&cfg, &dir, 2, false).unwrap();
     ds.ensure_text_features(64);
 
-    let rt = Runtime::from_default_dir().unwrap();
+    let Some(rt) = exec_rt() else {
+        std::fs::remove_dir_all(&dir).ok();
+        return;
+    };
     let trainer = NodeTrainer::new("rgcn_nc_train", "rgcn_nc_logits");
     let opts = TrainOptions { epochs: 6, n_workers: 2, verbose: false, ..Default::default() };
     let (rep, st) = trainer.fit(&rt, &mut ds, &opts).unwrap();
@@ -267,7 +290,7 @@ fn end_to_end_gconstruct_train_checkpoint() {
 /// must record remote accesses; with 1 partition it must not.
 #[test]
 fn traffic_counters_reflect_partitioning() {
-    let rt = Runtime::from_default_dir().unwrap();
+    let Some(rt) = exec_rt() else { return };
     for (parts, expect_remote) in [(1usize, false), (4, true)] {
         let mut ds = mag_ds(500, parts);
         ds.ensure_text_features(64);
@@ -284,15 +307,15 @@ fn traffic_counters_reflect_partitioning() {
 /// Learnable-embedding path: author embeddings must move during training.
 #[test]
 fn embedding_table_learns() {
-    let rt = Runtime::from_default_dir().unwrap();
+    let Some(rt) = exec_rt() else { return };
     let mut ds = mag_ds(400, 1);
     ds.ensure_text_features(64);
     let nt_author = 1;
-    let before = ds.engine.embeds[nt_author].as_ref().unwrap().weights.clone();
+    let before = ds.engine.embeds[nt_author].as_ref().unwrap().weights_snapshot();
     let trainer = NodeTrainer::new("rgcn_nc_train", "rgcn_nc_logits");
     let opts = TrainOptions { epochs: 2, verbose: false, ..Default::default() };
     trainer.fit(&rt, &mut ds, &opts).unwrap();
-    let after = &ds.engine.embeds[nt_author].as_ref().unwrap().weights;
-    let changed = before.iter().zip(after).filter(|(a, b)| a != b).count();
+    let after = ds.engine.embeds[nt_author].as_ref().unwrap().weights_snapshot();
+    let changed = before.iter().zip(&after).filter(|(a, b)| a != b).count();
     assert!(changed > 0, "no embedding rows were updated");
 }

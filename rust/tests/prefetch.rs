@@ -1,0 +1,188 @@
+//! Determinism tests for the pipelined mini-batch engine: the
+//! prefetching loader must yield byte-identical batches to the serial
+//! loader for any worker count, and training output must not depend on
+//! `loader_workers`.  Batch-shape specs are synthesized locally so
+//! these tests run without AOT artifacts.
+
+use graphstorm::datagen::{self, mag};
+use graphstorm::dataloader::{
+    batch_seed, build_lp_batch, fill_lemb, run_pipeline, BatchFactory, GsDataset,
+    LinkPredictionDataLoader, NodeDataLoader, PrefetchConfig, PrefetchingLoader, Split,
+};
+use graphstorm::partition::{random_partition, PartitionBook};
+use graphstorm::runtime::ArtifactSpec;
+use graphstorm::sampling::NegSampler;
+use graphstorm::trainer::{NodeTrainer, TrainOptions};
+use graphstorm::util::Rng;
+
+fn mag_ds(n: usize, parts: usize) -> GsDataset {
+    let raw = mag::generate(&mag::MagConfig { n_papers: n, ..Default::default() });
+    let book = if parts <= 1 {
+        PartitionBook::single(&raw.graph.num_nodes)
+    } else {
+        random_partition(&raw.graph, parts, 3)
+    };
+    let mut ds = datagen::build_dataset(raw, book, 64, 3);
+    ds.ensure_text_features(64);
+    ds
+}
+
+fn nc_spec() -> ArtifactSpec {
+    ArtifactSpec::synthetic_block(&[2304, 384, 64], &[1920, 320], 5, r#","batch":64"#)
+}
+
+fn lp_spec() -> ArtifactSpec {
+    ArtifactSpec::synthetic_block(&[1800, 300, 48], &[1500, 240], 5, r#","lp_batch":16,"k":8"#)
+}
+
+/// The prefetching loader must produce the same batch sequence for any
+/// worker count, and — after `fill_lemb` — exactly what the serial
+/// `NodeDataLoader::batch` path produces.
+#[test]
+fn prefetch_matches_serial_nc_loader() {
+    let ds = mag_ds(600, 2);
+    let spec = nc_spec();
+    let loader = NodeDataLoader::new(&spec).unwrap();
+    let ids = ds.node_labels().ids_in(Split::Train);
+    let ids: Vec<u32> = ids.into_iter().take(200).collect();
+    let chunks: Vec<&[u32]> = ids.chunks(64).collect();
+    let seed = 0xabcdu64;
+
+    let mut per_workers = vec![];
+    for workers in [1usize, 4] {
+        let pfl = PrefetchingLoader::new(
+            &loader,
+            PrefetchConfig { n_workers: workers, depth: 2 },
+        );
+        let mut batches = pfl.collect(&ds, &chunks, seed, 0, 2).unwrap();
+        // Fill the deferred embedding rows, as the trainer does.
+        for (bi, (batch, touch)) in batches.iter_mut().enumerate() {
+            fill_lemb(&ds, batch, touch, (bi % 2) as u32).unwrap();
+        }
+        per_workers.push(batches);
+    }
+    let [a, b] = &per_workers[..] else { unreachable!() };
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(x.1, y.1, "touch list differs at batch {i}");
+        assert_eq!(x.0, y.0, "tensors differ at batch {i}");
+    }
+
+    // And both equal the serial (non-deferred) loader path.
+    for (bi, chunk) in chunks.iter().enumerate() {
+        let mut rng = Rng::seed_from(batch_seed(seed, 0, bi as u64));
+        let (batch, touch, _) = loader.batch(&ds, chunk, &mut rng, (bi % 2) as u32).unwrap();
+        assert_eq!(batch, a[bi].0, "serial loader differs at batch {bi}");
+        assert_eq!(touch, a[bi].1);
+    }
+}
+
+/// Same property for link-prediction batches (negatives + exclusion).
+#[test]
+fn prefetch_matches_serial_lp_loader() {
+    let ds = mag_ds(500, 2);
+    assert!(ds.lp.is_some(), "mag dataset must carry an LP task");
+    let spec = lp_spec();
+    let seed = 0x11f9u64;
+    let train = ds.lp.as_ref().unwrap().edge_ids_in(Split::Train);
+    let ids: Vec<u32> = train.into_iter().take(96).collect();
+    let chunks: Vec<&[u32]> = ids.chunks(16).collect();
+
+    let mut per_workers = vec![];
+    for workers in [1usize, 4] {
+        // Fresh loader per run: the cached exclusion must not leak
+        // state across worker counts.
+        let loader = LinkPredictionDataLoader::new(&spec, NegSampler::Joint { k: 8 }).unwrap();
+        let cfg = PrefetchConfig { n_workers: workers, depth: 2 };
+        let mut collected = vec![];
+        run_pipeline(
+            &chunks,
+            &cfg,
+            || BatchFactory::new(&ds, &loader.shape),
+            |f, bi, chunk| {
+                let mut rng = Rng::seed_from(batch_seed(seed, 0, bi as u64));
+                build_lp_batch(f, &loader, chunk, &mut rng, (bi % 2) as u32, true)
+            },
+            |bi, (mut batch, touch)| {
+                fill_lemb(&ds, &mut batch, &touch, (bi % 2) as u32)?;
+                collected.push((batch, touch));
+                Ok(())
+            },
+        )
+        .unwrap();
+        per_workers.push(collected);
+    }
+    let [a, b] = &per_workers[..] else { unreachable!() };
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(x.0, y.0, "LP tensors differ at batch {i}");
+        assert_eq!(x.1, y.1, "LP touch differs at batch {i}");
+    }
+
+    // Serial loader equivalence.
+    let loader = LinkPredictionDataLoader::new(&spec, NegSampler::Joint { k: 8 }).unwrap();
+    for (bi, chunk) in chunks.iter().enumerate() {
+        let mut rng = Rng::seed_from(batch_seed(seed, 0, bi as u64));
+        let (batch, touch) = loader.batch(&ds, chunk, &mut rng, (bi % 2) as u32).unwrap();
+        assert_eq!(batch, a[bi].0, "serial LP loader differs at batch {bi}");
+        assert_eq!(touch, a[bi].1);
+    }
+}
+
+/// Full training runs must be bit-identical across loader worker
+/// counts: same epoch losses, same final evaluation.  Needs a real
+/// PJRT backend + artifacts; skipped otherwise.
+#[test]
+fn epoch_losses_identical_across_worker_counts() {
+    let Some(rt) = graphstorm::runtime::runtime_if_available() else {
+        eprintln!("skipping: AOT artifacts / PJRT backend unavailable");
+        return;
+    };
+    let mut runs = vec![];
+    for workers in [1usize, 4] {
+        let mut ds = mag_ds(400, 2);
+        let trainer = NodeTrainer::new("rgcn_nc_train", "rgcn_nc_logits");
+        let opts = TrainOptions {
+            epochs: 2,
+            n_workers: 2,
+            loader_workers: workers,
+            prefetch: 2,
+            verbose: false,
+            ..Default::default()
+        };
+        let (rep, _) = trainer.fit(&rt, &mut ds, &opts).unwrap();
+        runs.push((rep.epoch_losses.clone(), rep.val_acc, rep.test_acc));
+    }
+    assert_eq!(
+        runs[0].0, runs[1].0,
+        "epoch losses must be bit-identical for loader_workers 1 vs 4"
+    );
+    assert_eq!(runs[0].1, runs[1].1);
+    assert_eq!(runs[0].2, runs[1].2);
+}
+
+/// The pipeline primitive keeps item order under adversarial build
+/// latencies (fast/slow alternation across workers).
+#[test]
+fn pipeline_orders_under_skew() {
+    let items: Vec<usize> = (0..64).collect();
+    let mut seen = vec![];
+    run_pipeline(
+        &items,
+        &PrefetchConfig { n_workers: 3, depth: 1 },
+        || (),
+        |_, i, &x| {
+            if x % 3 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            Ok(i)
+        },
+        |i, v| {
+            assert_eq!(i, v);
+            seen.push(i);
+            Ok(())
+        },
+    )
+    .unwrap();
+    assert_eq!(seen, (0..64).collect::<Vec<_>>());
+}

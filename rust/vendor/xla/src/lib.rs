@@ -1,0 +1,237 @@
+//! In-tree facade of the `xla` (xla_extension 0.5.1) API surface the
+//! runtime uses.  Literal plumbing (create / to_vec / tuples / host
+//! buffers) is fully functional, so everything up to and including
+//! argument marshalling works offline; `PjRtLoadedExecutable::execute`
+//! is the one seam that needs the real PJRT plugin and returns a clear
+//! error here.  Swap this path dependency in `rust/Cargo.toml` for the
+//! real bindings to run the AOT artifacts.
+
+use std::fmt;
+use std::path::Path;
+
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    Pred,
+}
+
+impl ElementType {
+    fn byte_size(self) -> usize {
+        match self {
+            ElementType::F32 | ElementType::S32 => 4,
+            ElementType::Pred => 1,
+        }
+    }
+}
+
+/// Marker trait tying native types to XLA element types.
+pub trait ArrayElement: Sized + Copy {
+    const TY: ElementType;
+    fn from_le_bytes(b: &[u8]) -> Self;
+}
+
+impl ArrayElement for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn from_le_bytes(b: &[u8]) -> f32 {
+        f32::from_le_bytes(b.try_into().unwrap())
+    }
+}
+
+impl ArrayElement for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn from_le_bytes(b: &[u8]) -> i32 {
+        i32::from_le_bytes(b.try_into().unwrap())
+    }
+}
+
+/// A host literal: element type + dims + little-endian payload, or a
+/// tuple of literals (the AOT train step returns a tuple root).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    bytes: Vec<u8>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let n: usize = dims.iter().product();
+        if n * ty.byte_size() != data.len() {
+            return Err(Error::new(format!(
+                "literal payload {} bytes, shape {dims:?} wants {}",
+                data.len(),
+                n * ty.byte_size()
+            )));
+        }
+        Ok(Literal { ty, dims: dims.to_vec(), bytes: data.to_vec(), tuple: None })
+    }
+
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { ty: ElementType::Pred, dims: vec![], bytes: vec![], tuple: Some(parts) }
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        if self.tuple.is_some() {
+            return Err(Error::new("to_vec on a tuple literal"));
+        }
+        if self.ty != T::TY {
+            return Err(Error::new(format!("to_vec type mismatch ({:?})", self.ty)));
+        }
+        let sz = self.ty.byte_size();
+        Ok(self.bytes.chunks_exact(sz).map(T::from_le_bytes).collect())
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.tuple {
+            Some(parts) => Ok(parts),
+            None => Ok(vec![self]),
+        }
+    }
+}
+
+/// Parsed-enough HLO module: we retain the text for a real backend.
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| Error::new(format!("read {}: {e}", path.as_ref().display())))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+pub struct XlaComputation {
+    _text: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _text: proto.text.clone() }
+    }
+}
+
+#[derive(Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub (no PJRT plugin in this build)".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable { client: self.clone() })
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        lit: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Ok(PjRtBuffer { lit: lit.clone() })
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    client: PjRtClient,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(
+            "PJRT execution is unavailable in the offline stub; link the real \
+             xla_extension bindings (see rust/vendor/xla) to run AOT artifacts",
+        ))
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+}
+
+pub struct PjRtBuffer {
+    lit: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.lit.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip() {
+        let data: Vec<u8> = [1.0f32, 2.0, 3.0].iter().flat_map(|x| x.to_le_bytes()).collect();
+        let lit = Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &data).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0]);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn shape_payload_mismatch_rejected() {
+        let e = Literal::create_from_shape_and_untyped_data(ElementType::S32, &[2], &[0u8; 4]);
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn tuple_decomposes() {
+        let a = Literal::create_from_shape_and_untyped_data(ElementType::F32, &[1], &[0u8; 4]).unwrap();
+        let t = Literal::tuple(vec![a.clone(), a]);
+        assert_eq!(t.to_tuple().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn execute_reports_missing_backend() {
+        let c = PjRtClient::cpu().unwrap();
+        let exe = c.compile(&XlaComputation::from_proto(&HloModuleProto { text: String::new() })).unwrap();
+        let args: Vec<&Literal> = vec![];
+        assert!(exe.execute(&args).is_err());
+    }
+}

@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Run the micro benchmarks and record the machine-readable results at
+# the repo root (BENCH_micro.json) so future PRs can track the perf
+# trajectory.  Usage: scripts/bench.sh [extra cargo args...]
+#
+#   GS_BENCH_FAST=1 scripts/bench.sh    # shrunken workloads (smoke)
+#
+# The harness runs without AOT artifacts (PJRT step benches are
+# skipped and the pipeline bench uses a simulated device step); build
+# artifacts first for the full set.
+set -euo pipefail
+
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+export GS_BENCH_OUT="${GS_BENCH_OUT:-$ROOT/BENCH_micro.json}"
+
+cd "$ROOT/rust"
+cargo bench --bench micro "$@"
+
+echo
+echo "results: $GS_BENCH_OUT"
