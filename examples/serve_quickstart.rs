@@ -1,0 +1,77 @@
+//! Serving quickstart: the end-to-end online-inference path.
+//!
+//! 1. Build a small MAG-style dataset.
+//! 2. Create an `InferenceEngine` (real `rgcn_nc_logits` artifact when
+//!    PJRT is available, deterministic surrogate otherwise — same
+//!    gating as the rest of the repo).
+//! 3. Precompute every node's prediction offline (`OfflineInference`)
+//!    into GSTF shards, GiGL-style.
+//! 4. Warm an `EmbeddingCache` from the shards and serve Zipf request
+//!    traffic through the `MicroBatcher` with four concurrent clients.
+//! 5. Print latency percentiles, hit rate and throughput.
+//!
+//! Run: `cargo run --release --example serve_quickstart`
+
+use graphstorm::datagen::{self, mag};
+use graphstorm::partition::PartitionBook;
+use graphstorm::serve::{
+    closed_loop, EmbeddingCache, InferenceEngine, MicroBatcherCfg, OfflineInference, Zipf,
+};
+use graphstorm::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Dataset.
+    let raw = mag::generate(&mag::MagConfig { n_papers: 1500, ..Default::default() });
+    let book = PartitionBook::single(&raw.graph.num_nodes);
+    let mut ds = datagen::build_dataset(raw, book, 64, 7);
+    ds.ensure_text_features(64);
+    let nt = ds.target_ntype as u32;
+    let n_nodes = ds.graph.num_nodes[nt as usize];
+
+    // 2. Engine (artifact-gated backend: real `rgcn_nc_logits` when
+    // PJRT can execute it, deterministic surrogate otherwise).
+    let (engine, backend) = InferenceEngine::auto(&ds, "rgcn", 8, 7)?;
+    println!("engine backend: {backend} (out_dim {})", engine.out_dim());
+
+    // 3. Offline precompute: every node's canonical prediction.
+    let dir = std::env::temp_dir().join(format!("gs_serve_quickstart_{}", std::process::id()));
+    let off = OfflineInference::default();
+    let rep = off.run(&engine, nt, &dir)?;
+    println!(
+        "offline: {} rows x {} dims in {:.2}s -> {} shards",
+        rep.rows,
+        rep.dim,
+        rep.secs,
+        rep.shards.len()
+    );
+
+    // 4. Warm the cache and serve Zipf traffic.  Capacity covers the
+    // whole node set here; a smaller LRU would need hottest-last warm
+    // order to keep the Zipf head resident (see `EmbeddingCache::
+    // warm_from_dir`).
+    let mut cache = EmbeddingCache::new(n_nodes);
+    let warmed = cache.warm_from_dir(&dir, nt, engine.generation())?;
+    println!("cache warmed with {warmed} rows (capacity {n_nodes})");
+
+    let zipf = Zipf::new(n_nodes, 1.1);
+    let mut rng = Rng::seed_from(11);
+    let trace: Vec<(u32, u32)> = (0..2000).map(|_| (nt, zipf.sample(&mut rng) as u32)).collect();
+    let cfg = MicroBatcherCfg {
+        max_batch: 32,
+        deadline: std::time::Duration::from_micros(200),
+    };
+    let (stats, replies) = closed_loop(&engine, cfg, &mut cache, &trace, 4)?;
+
+    // 5. Report.
+    println!(
+        "served {} requests from 4 clients in {:.2}s:",
+        stats.requests, stats.wall_s
+    );
+    println!("  p50 {:.0}us  p99 {:.0}us", stats.p50_us, stats.p99_us);
+    println!("  {:.0} req/s, cache hit rate {:.1}%", stats.rps, 100.0 * stats.hit_rate);
+    let (seed, row) = &replies[0];
+    println!("  e.g. node {:?} -> {:?}", seed, &row[..row.len().min(4)]);
+
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}

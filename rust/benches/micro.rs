@@ -15,8 +15,8 @@
 mod common;
 
 use graphstorm::dataloader::{
-    assemble_block_inputs, batch_seed, build_nc_batch, fill_lemb, run_pipeline, BatchFactory,
-    NodeDataLoader, PrefetchConfig, Split,
+    assemble_block_inputs, assemble_block_inputs_into, batch_seed, build_nc_batch, fill_lemb,
+    run_pipeline, AssembleScratch, BatchFactory, LembTouch, NodeDataLoader, PrefetchConfig, Split,
 };
 use graphstorm::partition::{metis_like_partition, random_partition};
 use graphstorm::runtime::{runtime_if_available, ArtifactSpec, Runtime};
@@ -124,6 +124,20 @@ fn main() {
     bench(&mut results, "assemble_block_inputs", 50, || {
         let (b, _) = assemble_block_inputs(&ds, &block_fixed, &spec, 0).unwrap();
         std::hint::black_box(b.len());
+    });
+
+    // Buffer-recycling assembly (the serving ring): same values as the
+    // row above, zero steady-state allocation.
+    let mut asm = AssembleScratch::default();
+    let mut ring: [(Vec<graphstorm::runtime::Tensor>, LembTouch); 2] =
+        [(vec![], vec![]), (vec![], vec![])];
+    let mut flip = 0usize;
+    bench(&mut results, "assemble_block_inputs_into (ring)", 50, || {
+        flip ^= 1;
+        let (out, touch) = &mut ring[flip];
+        assemble_block_inputs_into(&ds, &block_fixed, &spec, 0, false, &mut asm, out, touch)
+            .unwrap();
+        std::hint::black_box(out.len());
     });
 
     let loader = NodeDataLoader::new(&spec).unwrap();

@@ -1,0 +1,253 @@
+//! Serving benches (`scripts/bench.sh` → `BENCH_serve.json`): engine
+//! forward latency, steady-state allocation audit, offline-inference
+//! throughput, cached-vs-uncached hot-seed throughput, and closed-loop
+//! Zipf traffic through the micro-batcher with latency percentiles.
+//!
+//! Runs end-to-end without AOT artifacts: execution falls back to the
+//! deterministic surrogate backend (gated like everywhere else), so
+//! sampling + assembly + caching are always measured.  Three
+//! assertions encode the serving acceptance criteria:
+//!   1. sample+assemble through the recycled-buffer ring performs ZERO
+//!      steady-state heap allocations (counting global allocator);
+//!   2. a warmed cache serves hot seeds with ≥ 2x the uncached
+//!      steady-state throughput;
+//!   3. warmed-cache predictions are bit-identical to uncached
+//!      recompute.
+
+#[path = "common.rs"]
+mod common;
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use graphstorm::dataloader::{BatchFactory, LembTouch};
+use graphstorm::runtime::Tensor;
+use graphstorm::serve::{
+    cache_key, closed_loop, EmbeddingCache, InferenceEngine, MicroBatcherCfg, OfflineInference,
+    Zipf,
+};
+use graphstorm::util::Rng;
+
+/// Counting allocator: every alloc/realloc bumps a global counter so
+/// the steady-state loops below can assert "no allocation".
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, n: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, n)
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn write_json(results: &[(String, f64)]) {
+    let path =
+        std::env::var("GS_SERVE_BENCH_OUT").unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    let mut body = String::from("{\n");
+    for (i, (name, v)) in results.iter().enumerate() {
+        let comma = if i + 1 == results.len() { "" } else { "," };
+        body.push_str(&format!("  \"{name}\": {v:.4}{comma}\n"));
+    }
+    body.push_str("}\n");
+    match std::fs::write(&path, &body) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+fn main() {
+    println!("=== serve benches ===");
+    let mut results: Vec<(String, f64)> = vec![];
+    let mut ds = common::mag_dataset(common::scale(2000), 1);
+    ds.ensure_text_features(64);
+    let nt = ds.target_ntype as u32;
+    let n_nodes = ds.graph.num_nodes[nt as usize];
+
+    // Engine: real artifact when PJRT executes, surrogate otherwise.
+    let (engine, backend) = InferenceEngine::auto(&ds, "rgcn", 8, 7).unwrap();
+    println!("backend: {backend}");
+    let c = engine.out_dim();
+
+    // ---- engine forward latency -----------------------------------------
+    let mut sc = engine.make_scratch();
+    let seeds32: Vec<(u32, u32)> = (0..32u32).map(|i| (nt, i % n_nodes as u32)).collect();
+    for _ in 0..3 {
+        engine.forward(&mut sc, &seeds32).unwrap();
+    }
+    let iters = 50;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let rows = engine.forward(&mut sc, &seeds32).unwrap();
+        std::hint::black_box(rows.len());
+    }
+    let fwd_ms = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
+    println!("forward (32 seeds)                mean {fwd_ms:>9.3} ms");
+    results.push(("forward32_mean_ms".into(), fwd_ms));
+
+    // ---- steady-state allocation audit ----------------------------------
+    // Canonical sample + assembly through the double-buffer ring must
+    // not allocate once warm (satellite: buffer reuse in
+    // assemble_block_inputs).
+    {
+        let spec = engine.spec.clone();
+        let shape = engine.shape.clone();
+        let mut f = BatchFactory::new(&ds, &shape);
+        let mut ring: [(Vec<Tensor>, LembTouch); 2] = [(vec![], vec![]), (vec![], vec![])];
+        let mut flip = 0usize;
+        let seeds: Vec<(u32, u32)> = (0..64u32).map(|i| (nt, i % n_nodes as u32)).collect();
+        for _ in 0..6 {
+            flip ^= 1;
+            let (out, touch) = &mut ring[flip];
+            f.sample_assemble_canonical_into(&seeds, &shape, &spec, 7, 0, out, touch).unwrap();
+        }
+        let before = ALLOCS.load(Ordering::Relaxed);
+        let loops = 100;
+        let t0 = Instant::now();
+        for _ in 0..loops {
+            flip ^= 1;
+            let (out, touch) = &mut ring[flip];
+            f.sample_assemble_canonical_into(&seeds, &shape, &spec, 7, 0, out, touch).unwrap();
+            std::hint::black_box(out.len());
+        }
+        let asm_ms = t0.elapsed().as_secs_f64() * 1e3 / loops as f64;
+        let delta = ALLOCS.load(Ordering::Relaxed) - before;
+        println!("sample+assemble ring (64 seeds)   mean {asm_ms:>9.3} ms   allocs/iter {}", delta as f64 / loops as f64);
+        results.push(("assemble_ring_mean_ms".into(), asm_ms));
+        results.push(("assemble_steady_allocs".into(), delta as f64));
+        assert_eq!(delta, 0, "steady-state sample+assemble must not allocate");
+    }
+
+    // ---- offline inference + shard round-trip ---------------------------
+    let tmp = std::env::temp_dir().join(format!("gs_serve_bench_{}", std::process::id()));
+    let off = OfflineInference { shard_size: 1024, ..Default::default() };
+    let rep = off.run(&engine, nt, &tmp).unwrap();
+    let rows_per_s = rep.rows as f64 / rep.secs.max(1e-9);
+    println!(
+        "offline inference                 {} rows in {:.2}s ({rows_per_s:.0} rows/s, {} shards)",
+        rep.rows,
+        rep.secs,
+        rep.shards.len()
+    );
+    results.push(("offline_rows_per_s".into(), rows_per_s));
+
+    // ---- hot-seed throughput: uncached vs warmed cache ------------------
+    // The acceptance bar: a warmed cache must serve hot seeds with
+    // >= 2x uncached steady-state throughput, bit-identically.
+    {
+        let hot: Vec<(u32, u32)> = (0..16u32).map(|i| (nt, i)).collect();
+        let n_req = 4000usize;
+        let mut rng = Rng::seed_from(9);
+        let trace: Vec<(u32, u32)> = (0..n_req).map(|_| hot[rng.gen_range(hot.len())]).collect();
+
+        // Uncached arm: every request recomputes through the engine.
+        for &(nt, id) in &hot {
+            engine.predict_one(&mut sc, nt, id).unwrap(); // warm scratch
+        }
+        let t0 = Instant::now();
+        for &(nt, id) in &trace {
+            let row = engine.forward(&mut sc, &[(nt, id)]).unwrap();
+            std::hint::black_box(row[0]);
+        }
+        let uncached_rps = n_req as f64 / t0.elapsed().as_secs_f64();
+
+        // Warmed arm: cache preloaded from the offline shards.
+        let mut cache = EmbeddingCache::new(4096);
+        let warmed = cache.warm_from_dir(&tmp, nt, engine.generation()).unwrap();
+        assert!(warmed > 0 && !cache.is_empty());
+        let t0 = Instant::now();
+        let mut misses = 0usize;
+        for &(nt, id) in &trace {
+            match cache.get(cache_key(nt, id)) {
+                Some(row) => std::hint::black_box(row[0]),
+                None => {
+                    misses += 1;
+                    let row = engine.forward(&mut sc, &[(nt, id)]).unwrap();
+                    std::hint::black_box(row[0])
+                }
+            };
+        }
+        let cached_rps = n_req as f64 / t0.elapsed().as_secs_f64();
+
+        // Bit-identity: shard-warmed rows == fresh recompute.
+        for &(nt, id) in &hot {
+            let cached = cache.get(cache_key(nt, id)).expect("hot row warmed").to_vec();
+            let fresh = engine.predict_one(&mut sc, nt, id).unwrap();
+            assert_eq!(cached, fresh, "cached row for ({nt},{id}) diverged");
+            assert_eq!(cached.len(), c);
+        }
+        let speedup = cached_rps / uncached_rps;
+        println!(
+            "hot seeds (16 nodes, {n_req} reqs)    uncached {uncached_rps:>9.0} req/s   warmed {cached_rps:>9.0} req/s   speedup {speedup:.1}x   (misses {misses})"
+        );
+        results.push(("hot_uncached_rps".into(), uncached_rps));
+        results.push(("hot_cached_rps".into(), cached_rps));
+        results.push(("hot_speedup".into(), speedup));
+        assert!(
+            speedup >= 2.0,
+            "warmed cache must serve hot seeds >= 2x faster (got {speedup:.2}x)"
+        );
+    }
+
+    // ---- closed-loop Zipf traffic through the micro-batcher -------------
+    {
+        let n_req = if common::fast() { 1000 } else { 4000 };
+        let zipf = Zipf::new(n_nodes, 1.1);
+        let mut rng = Rng::seed_from(11);
+        let trace: Vec<(u32, u32)> =
+            (0..n_req).map(|_| (nt, zipf.sample(&mut rng) as u32)).collect();
+        let cfg = MicroBatcherCfg {
+            max_batch: 32,
+            deadline: std::time::Duration::from_micros(200),
+        };
+
+        let mut nocache = EmbeddingCache::new(0);
+        let (s0, replies0) = closed_loop(&engine, cfg.clone(), &mut nocache, &trace, 4).unwrap();
+        let mut cache = EmbeddingCache::new(4096);
+        cache.warm_from_dir(&tmp, nt, engine.generation()).unwrap();
+        let (s1, replies1) = closed_loop(&engine, cfg, &mut cache, &trace, 4).unwrap();
+        println!(
+            "zipf closed-loop uncached         p50 {:>6.0}us p99 {:>6.0}us {:>8.0} req/s hit {:>5.1}%",
+            s0.p50_us, s0.p99_us, s0.rps, 100.0 * s0.hit_rate
+        );
+        println!(
+            "zipf closed-loop warmed           p50 {:>6.0}us p99 {:>6.0}us {:>8.0} req/s hit {:>5.1}%",
+            s1.p50_us, s1.p99_us, s1.rps, 100.0 * s1.hit_rate
+        );
+        results.push(("zipf_uncached_p50_us".into(), s0.p50_us));
+        results.push(("zipf_uncached_p99_us".into(), s0.p99_us));
+        results.push(("zipf_uncached_rps".into(), s0.rps));
+        results.push(("zipf_warmed_p50_us".into(), s1.p50_us));
+        results.push(("zipf_warmed_p99_us".into(), s1.p99_us));
+        results.push(("zipf_warmed_rps".into(), s1.rps));
+        results.push(("zipf_warmed_hit_rate".into(), s1.hit_rate));
+
+        // Determinism across arms, repeats and concurrency.
+        let mut expected: std::collections::HashMap<(u32, u32), Vec<f32>> = Default::default();
+        for (k, v) in replies0.into_iter().chain(replies1) {
+            let e = expected.entry(k).or_insert_with(|| v.clone());
+            assert_eq!(e, &v, "prediction for {k:?} diverged across arms/repeats");
+        }
+    }
+
+    std::fs::remove_dir_all(&tmp).ok();
+    write_json(&results);
+}

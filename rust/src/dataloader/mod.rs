@@ -24,9 +24,9 @@ use crate::graph::{FeatureSource, HeteroGraph};
 use crate::runtime::{ArtifactSpec, Tensor};
 use crate::sampling::{
     negative::sample_negatives, Block, BlockShape, EdgeExclusion, NegSampler, NeighborSampler,
-    SamplerScratch,
+    SamplerScratch, SeedIndex,
 };
-use crate::util::{FxHashMap, Rng};
+use crate::util::Rng;
 
 /// Train/val/test membership.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -248,6 +248,10 @@ pub fn assemble_block_inputs(
 /// batches ahead without ever reading embedding rows that a
 /// not-yet-applied sparse update would change — output stays
 /// bit-identical to the serial loader for any worker count.
+///
+/// Convenience wrapper over [`assemble_block_inputs_into`] that
+/// allocates fresh output tensors (pipelined loaders need owned
+/// batches to send across the channel).
 pub fn assemble_block_inputs_ext(
     ds: &GsDataset,
     block: &Block,
@@ -255,21 +259,125 @@ pub fn assemble_block_inputs_ext(
     worker: u32,
     defer_lemb: bool,
 ) -> Result<(Vec<Tensor>, LembTouch)> {
+    let mut out = Vec::new();
+    let mut touch = LembTouch::new();
+    let mut scratch = AssembleScratch::default();
+    assemble_block_inputs_into(ds, block, spec, worker, defer_lemb, &mut scratch, &mut out, &mut touch)?;
+    Ok((out, touch))
+}
+
+/// Reusable per-worker assembly buffers: per-ntype slot/id grouping and
+/// the row-gather staging area.  Together with recycled output tensors
+/// (see [`assemble_block_inputs_into`]) assembly performs zero heap
+/// allocation in steady state — the serving engine's double-buffer
+/// ring and `benches/serve.rs` assert this.
+#[derive(Default)]
+pub struct AssembleScratch {
+    per_nt: Vec<(Vec<usize>, Vec<u32>)>,
+    rows: Vec<f32>,
+}
+
+/// Recycle `t` as an f32 tensor of `shape`, zero-filled; reuses the
+/// existing data allocation when the capacity suffices.
+fn reuse_f32<'t>(t: &'t mut Tensor, shape: &[usize]) -> &'t mut Vec<f32> {
+    let n: usize = shape.iter().product();
+    if !matches!(t, Tensor::F32 { .. }) {
+        *t = Tensor::F32 { shape: shape.to_vec(), data: Vec::new() };
+    }
+    let Tensor::F32 { shape: s, data } = t else { unreachable!() };
+    if s.as_slice() != shape {
+        s.clear();
+        s.extend_from_slice(shape);
+    }
+    data.clear();
+    data.resize(n, 0.0);
+    data
+}
+
+/// Recycle `t` as an i32 tensor of `shape` filled from `src`.
+fn copy_i32(t: &mut Tensor, shape: &[usize], src: &[i32]) {
+    if !matches!(t, Tensor::I32 { .. }) {
+        *t = Tensor::I32 { shape: shape.to_vec(), data: Vec::new() };
+    }
+    let Tensor::I32 { shape: s, data } = t else { unreachable!() };
+    if s.as_slice() != shape {
+        s.clear();
+        s.extend_from_slice(shape);
+    }
+    data.clear();
+    data.extend_from_slice(src);
+}
+
+/// Recycle `t` as an f32 tensor of `shape` filled from `src`.
+fn copy_f32(t: &mut Tensor, shape: &[usize], src: &[f32]) {
+    if !matches!(t, Tensor::F32 { .. }) {
+        *t = Tensor::F32 { shape: shape.to_vec(), data: Vec::new() };
+    }
+    let Tensor::F32 { shape: s, data } = t else { unreachable!() };
+    if s.as_slice() != shape {
+        s.clear();
+        s.extend_from_slice(shape);
+    }
+    data.clear();
+    data.extend_from_slice(src);
+}
+
+/// Assemble the shared GNN block inputs into recycled buffers: `out`
+/// and `touch` keep their allocations across batches (double-buffer
+/// callers alternate two `out` vectors so the previous batch's
+/// tensors stay intact while the next one assembles).  Produces
+/// exactly the same tensor values as [`assemble_block_inputs_ext`].
+#[allow(clippy::too_many_arguments)]
+pub fn assemble_block_inputs_into(
+    ds: &GsDataset,
+    block: &Block,
+    spec: &ArtifactSpec,
+    worker: u32,
+    defer_lemb: bool,
+    scratch: &mut AssembleScratch,
+    out: &mut Vec<Tensor>,
+    touch: &mut LembTouch,
+) -> Result<()> {
     let n0 = block.shape.ns[0];
     let fdim = spec.batch_spec("feat").map(|t| t.shape[1]).unwrap_or(0);
     let tdim = spec.batch_spec("text").map(|t| t.shape[1]).unwrap_or(0);
     let ldim = spec.batch_spec("lemb").map(|t| t.shape[1]).unwrap_or(0);
+    touch.clear();
 
-    let mut feat = vec![0.0f32; n0 * fdim];
-    let mut text = vec![0.0f32; n0 * tdim];
-    let mut lemb = vec![0.0f32; n0 * ldim];
-    let mut src_sel = vec![0.0f32; n0 * 3];
-    let mut ntype = vec![0i32; n0];
-    let mut touch: LembTouch = Vec::new();
+    let total = 5 + 4 * block.layers.len();
+    if out.len() != total {
+        out.clear();
+        out.resize(total, Tensor::F32 { shape: vec![], data: vec![] });
+    }
+    let [t_feat, t_text, t_lemb, t_sel, t_nty, layer_slots @ ..] = out.as_mut_slice() else {
+        unreachable!("out was just sized to >= 5 tensors");
+    };
+    let feat = reuse_f32(t_feat, &[n0, fdim]);
+    let text = reuse_f32(t_text, &[n0, tdim]);
+    let lemb = reuse_f32(t_lemb, &[n0, ldim]);
+    let src_sel = reuse_f32(t_sel, &[n0, 3]);
+    // ntype is filled during grouping, so recycle it by hand.
+    if !matches!(t_nty, Tensor::I32 { .. }) {
+        *t_nty = Tensor::I32 { shape: vec![n0], data: Vec::new() };
+    }
+    let Tensor::I32 { shape: nty_shape, data: ntype } = t_nty else { unreachable!() };
+    if nty_shape.len() != 1 || nty_shape[0] != n0 {
+        nty_shape.clear();
+        nty_shape.push(n0);
+    }
+    ntype.clear();
+    ntype.resize(n0, 0);
 
     // Group slots per node type for batched gathers.
-    let mut per_nt: Vec<(Vec<usize>, Vec<u32>)> =
-        vec![(vec![], vec![]); ds.graph.schema.ntypes.len()];
+    let n_ntypes = ds.graph.schema.ntypes.len();
+    let per_nt = &mut scratch.per_nt;
+    if per_nt.len() < n_ntypes {
+        per_nt.resize_with(n_ntypes, Default::default);
+    }
+    for (slots, ids) in per_nt.iter_mut() {
+        slots.clear();
+        ids.clear();
+    }
     for (i, &(nt, id)) in block.nodes.iter().enumerate() {
         if block.nmask[i] == 0.0 {
             continue;
@@ -279,7 +387,8 @@ pub fn assemble_block_inputs_ext(
         per_nt[nt as usize].1.push(id);
     }
 
-    for (nt, (slots, ids)) in per_nt.iter().enumerate() {
+    let rows = &mut scratch.rows;
+    for (nt, (slots, ids)) in per_nt.iter().enumerate().take(n_ntypes) {
         if slots.is_empty() {
             continue;
         }
@@ -289,7 +398,9 @@ pub fn assemble_block_inputs_ext(
                 if t.dim == 0 {
                     bail!("ntype {nt} marked Dense but has no features");
                 }
-                let rows = t.gather(worker, ids);
+                rows.clear();
+                rows.resize(ids.len() * t.dim, 0.0);
+                t.gather_into(worker, ids, rows);
                 let d = t.dim.min(fdim);
                 for (j, &slot) in slots.iter().enumerate() {
                     feat[slot * fdim..slot * fdim + d].copy_from_slice(&rows[j * t.dim..j * t.dim + d]);
@@ -306,7 +417,9 @@ pub fn assemble_block_inputs_ext(
                         src_sel[slot * 3 + 1] = 1.0;
                     }
                 } else {
-                    let rows = t.gather(worker, ids);
+                    rows.clear();
+                    rows.resize(ids.len() * t.dim, 0.0);
+                    t.gather_into(worker, ids, rows);
                     let d = t.dim.min(tdim);
                     for (j, &slot) in slots.iter().enumerate() {
                         text[slot * tdim..slot * tdim + d]
@@ -324,8 +437,9 @@ pub fn assemble_block_inputs_ext(
                     touch.push((slot, nt, ids[j]));
                 }
                 if !defer_lemb {
-                    let mut rows = vec![0.0f32; ids.len() * e.dim];
-                    e.gather_into(worker, ids, &mut rows);
+                    rows.clear();
+                    rows.resize(ids.len() * e.dim, 0.0);
+                    e.gather_into(worker, ids, rows);
                     let d = e.dim.min(ldim);
                     for (j, &slot) in slots.iter().enumerate() {
                         lemb[slot * ldim..slot * ldim + d]
@@ -336,21 +450,14 @@ pub fn assemble_block_inputs_ext(
         }
     }
 
-    let mut out = vec![
-        Tensor::F32 { shape: vec![n0, fdim], data: feat },
-        Tensor::F32 { shape: vec![n0, tdim], data: text },
-        Tensor::F32 { shape: vec![n0, ldim], data: lemb },
-        Tensor::F32 { shape: vec![n0, 3], data: src_sel },
-        Tensor::I32 { shape: vec![n0], data: ntype },
-    ];
     for (l, le) in block.layers.iter().enumerate() {
         let e = block.shape.es[l];
-        out.push(Tensor::I32 { shape: vec![e], data: le.src.clone() });
-        out.push(Tensor::I32 { shape: vec![e], data: le.dst.clone() });
-        out.push(Tensor::I32 { shape: vec![e], data: le.etype.clone() });
-        out.push(Tensor::F32 { shape: vec![e], data: le.emask.clone() });
+        copy_i32(&mut layer_slots[4 * l], &[e], &le.src);
+        copy_i32(&mut layer_slots[4 * l + 1], &[e], &le.dst);
+        copy_i32(&mut layer_slots[4 * l + 2], &[e], &le.etype);
+        copy_f32(&mut layer_slots[4 * l + 3], &[e], &le.emask);
     }
-    Ok((out, touch))
+    Ok(())
 }
 
 /// Fill the deferred learnable-embedding rows of an assembled batch
@@ -436,6 +543,9 @@ pub struct BatchFactory<'a> {
     scratch: SamplerScratch,
     pub block: Block,
     seed_buf: Vec<(u32, u32)>,
+    asm: AssembleScratch,
+    /// Reusable first-seen seed index (LP dedup + slot lookup).
+    pub seed_index: SeedIndex,
 }
 
 impl<'a> BatchFactory<'a> {
@@ -446,6 +556,8 @@ impl<'a> BatchFactory<'a> {
             scratch: SamplerScratch::new(),
             block: Block::empty(shape),
             seed_buf: vec![],
+            asm: AssembleScratch::default(),
+            seed_index: SeedIndex::new(),
         }
     }
 
@@ -463,7 +575,47 @@ impl<'a> BatchFactory<'a> {
     ) -> Result<(Vec<Tensor>, LembTouch)> {
         self.sampler
             .sample_block_with(seeds, shape, rng, exclude, &mut self.scratch, &mut self.block);
-        assemble_block_inputs_ext(self.ds, &self.block, spec, worker, defer_lemb)
+        let mut out = Vec::new();
+        let mut touch = LembTouch::new();
+        assemble_block_inputs_into(
+            self.ds, &self.block, spec, worker, defer_lemb, &mut self.asm, &mut out, &mut touch,
+        )?;
+        Ok((out, touch))
+    }
+
+    /// Canonical-per-node sampling + assembly into recycled buffers
+    /// (`out`/`touch` keep their allocations — the serving engine's
+    /// double-buffer ring alternates two of them).  Seeds must be
+    /// distinct; no edge exclusion (serving never leaks labels).
+    #[allow(clippy::too_many_arguments)]
+    pub fn sample_assemble_canonical_into(
+        &mut self,
+        seeds: &[(u32, u32)],
+        shape: &BlockShape,
+        spec: &ArtifactSpec,
+        base_seed: u64,
+        worker: u32,
+        out: &mut Vec<Tensor>,
+        touch: &mut LembTouch,
+    ) -> Result<()> {
+        self.sampler.sample_block_canonical(
+            seeds,
+            shape,
+            base_seed,
+            &EdgeExclusion::new(),
+            &mut self.scratch,
+            &mut self.block,
+        );
+        if self.block.n_real_targets != seeds.len() {
+            bail!(
+                "serving seeds must be distinct: {} seeds deduped to {} targets",
+                seeds.len(),
+                self.block.n_real_targets
+            );
+        }
+        assemble_block_inputs_into(
+            self.ds, &self.block, spec, worker, false, &mut self.asm, out, touch,
+        )
     }
 
     /// Real targets of the most recently sampled block.
@@ -728,28 +880,25 @@ pub fn build_lp_batch(
     }
 
     // CAREFUL: seeds may contain duplicates; the block dedups, so we
-    // must map each logical seed position to its slot.
+    // must map each logical seed position to its slot.  The reusable
+    // Fx seed index does first-seen dedup and O(1) slot lookup in one
+    // pass (the block preserves seed insertion order, so dedup index
+    // == target slot).
     let exclusion = loader.build_exclusion(ds, edge_ids, et);
-    let dedup: Vec<(u32, u32)> = {
-        let mut seen: FxHashMap<(u32, u32), usize> = FxHashMap::default();
-        let mut out = vec![];
-        for &s in &seeds {
-            seen.entry(s).or_insert_with(|| {
-                out.push(s);
-                out.len() - 1
-            });
+    let mut si = std::mem::take(&mut f.seed_index);
+    si.begin(seeds.len());
+    let mut dedup: Vec<(u32, u32)> = Vec::with_capacity(seeds.len());
+    for &s in &seeds {
+        let (_, fresh) = si.get_or_insert(s.0, s.1, dedup.len());
+        if fresh {
+            dedup.push(s);
         }
-        out
-    };
-    let (mut batch, touch) =
-        f.sample_assemble(&dedup, &loader.shape, &loader.spec, rng, worker, &exclusion, defer_lemb)?;
-    let slot_of: FxHashMap<(u32, u32), i32> = f
-        .targets()
-        .iter()
-        .enumerate()
-        .map(|(i, &p)| (p, i as i32))
-        .collect();
-    let slot = |p: (u32, u32)| slot_of[&p];
+    }
+    let out =
+        f.sample_assemble(&dedup, &loader.shape, &loader.spec, rng, worker, &exclusion, defer_lemb);
+    let (mut batch, touch) = out?;
+    debug_assert_eq!(f.targets(), &dedup[..]);
+    let slot = |p: (u32, u32)| si.get(p.0, p.1).expect("seed indexed during dedup") as i32;
 
     let mut pos_src = vec![0i32; b];
     let mut pos_dst = vec![0i32; b];
@@ -773,6 +922,7 @@ pub fn build_lp_batch(
             neg_dst[i * k + j] = slot(seeds[pos as usize]);
         }
     }
+    f.seed_index = si; // return the index (and its table) to the factory
     batch.push(Tensor::I32 { shape: vec![b], data: pos_src });
     batch.push(Tensor::I32 { shape: vec![b], data: pos_dst });
     batch.push(Tensor::I32 { shape: vec![b, k], data: neg_dst });

@@ -157,6 +157,10 @@ pub struct EmbTable {
     inner: RwLock<EmbInner>,
     book: Arc<PartitionBook>,
     counters: Arc<TrafficCounters>,
+    /// Bumped by every sparse-Adam update; generation-stamped caches
+    /// (`serve::EmbeddingCache`) compare against this to invalidate
+    /// all cached rows in O(1) when the table moves.
+    generation: AtomicU64,
 }
 
 impl EmbTable {
@@ -172,11 +176,30 @@ impl EmbTable {
         let scale = 1.0 / (dim as f32).sqrt();
         let w: Vec<f32> = (0..n * dim).map(|_| rng.gen_normal() * scale).collect();
         let inner = EmbInner { w, m: vec![0.0; n * dim], v: vec![0.0; n * dim], t: vec![0; n] };
-        EmbTable { ntype, dim, inner: RwLock::new(inner), book, counters }
+        EmbTable {
+            ntype,
+            dim,
+            inner: RwLock::new(inner),
+            book,
+            counters,
+            generation: AtomicU64::new(0),
+        }
     }
 
     pub fn num_rows(&self) -> usize {
         self.inner.read().unwrap().t.len()
+    }
+
+    /// Update generation: changes whenever any row is written.
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Acquire)
+    }
+
+    /// Read one row on behalf of partition `worker`
+    /// (`out.len() == dim`), counting traffic — the serving-side
+    /// lookup the read-through cache wraps.
+    pub fn row_into(&self, worker: u32, id: u32, out: &mut [f32]) {
+        self.gather_into(worker, std::slice::from_ref(&id), out);
     }
 
     /// Copy of the current weights (tests / checkpointing).
@@ -233,6 +256,12 @@ impl EmbTable {
                 inner.w[i] -= lr * mhat / (vhat.sqrt() + EPS);
             }
         }
+        // Bump the generation while still holding the write lock: a
+        // reader that stamps rows with the new generation can only
+        // have gathered them *after* this update landed.  (Bumping
+        // before the lock would let a concurrent read-through cache
+        // stamp pre-update rows as current.)
+        self.generation.fetch_add(1, Ordering::AcqRel);
     }
 }
 
@@ -355,8 +384,13 @@ mod tests {
         let (book, counters) = setup(5, 1);
         let e = EmbTable::new(0, 5, 4, 7, book, counters);
         let before = e.weights_snapshot();
+        assert_eq!(e.generation(), 0);
         e.sparse_adam(&[1, 3], &[1.0; 8], 1e-2);
+        assert_eq!(e.generation(), 1, "updates must bump the cache generation");
+        let mut row = vec![0.0f32; 4];
+        e.row_into(0, 1, &mut row);
         let after = e.weights_snapshot();
+        assert_eq!(row, &after[4..8]);
         for r in 0..5 {
             let changed = (0..4).any(|k| before[r * 4 + k] != after[r * 4 + k]);
             assert_eq!(changed, r == 1 || r == 3, "row {r}");

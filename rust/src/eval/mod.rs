@@ -23,6 +23,18 @@ pub fn accuracy(logits: &[f32], c: usize, labels: &[i32], mask: &[f32]) -> (usiz
     (correct, total)
 }
 
+/// Index of the row's max element (ties → last, matching
+/// `Iterator::max_by`), the logits decode shared by the NC evaluator
+/// and the serving layer.
+#[inline]
+pub fn argmax(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(j, _)| j)
+        .unwrap_or(0)
+}
+
 /// DistMult score: sum_i u[i] * r[i] * v[i] (paper eq. 3).
 #[inline]
 pub fn distmult(u: &[f32], r: &[f32], v: &[f32]) -> f32 {

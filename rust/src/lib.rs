@@ -4,8 +4,8 @@
 //!
 //! Layer 3 (this crate) owns everything on the hot path: graph
 //! construction, partitioning, the simulated distributed engine,
-//! on-the-fly mini-batch sampling, negative sampling, training loops and
-//! the CLI.  Layers 2/1 (JAX models + Pallas kernels) are AOT-lowered at
+//! on-the-fly mini-batch sampling, negative sampling, training loops,
+//! the online inference-serving layer (`serve`) and the CLI.  Layers 2/1 (JAX models + Pallas kernels) are AOT-lowered at
 //! build time to `artifacts/*.hlo.txt` and executed through the PJRT C
 //! API (`runtime`); Python never runs at training/inference time.
 //!
@@ -20,6 +20,7 @@ pub mod graph;
 pub mod partition;
 pub mod runtime;
 pub mod sampling;
+pub mod serve;
 pub mod trainer;
 pub mod util;
 

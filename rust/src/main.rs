@@ -10,12 +10,17 @@
 
 use anyhow::{bail, Context, Result};
 use graphstorm::datagen::{amazon, mag, scale_free};
-use graphstorm::dataloader::GsDataset;
+use graphstorm::dataloader::{GsDataset, PrefetchConfig};
 use graphstorm::partition::{metis_like_partition, random_partition, PartitionBook};
 use graphstorm::runtime::Runtime;
 use graphstorm::sampling::NegSampler;
+use graphstorm::serve::{
+    cache_key, closed_loop, EmbeddingCache, InferenceEngine, MicroBatcherCfg, OfflineInference,
+    Zipf,
+};
 use graphstorm::trainer::lp::LpLoss;
 use graphstorm::trainer::{LmTrainer, LpTrainer, NodeTrainer, TrainOptions};
+use graphstorm::util::Rng;
 
 struct Args {
     cmd: String,
@@ -93,6 +98,19 @@ fn make_dataset(args: &Args) -> Result<GsDataset> {
     // Without an LM stage, text nodes get hashed bag-of-tokens features.
     ds.ensure_text_features(64);
     Ok(ds)
+}
+
+/// The serving engine for a dataset: the real `{arch}_nc_logits`
+/// artifact when PJRT can execute it, else the deterministic surrogate
+/// over a synthetic spec — so `infer` / `serve-bench` run end-to-end
+/// on machines without artifacts (execution gated as everywhere else).
+fn serve_engine<'a>(args: &Args, ds: &'a GsDataset) -> Result<(InferenceEngine<'a>, &'static str)> {
+    InferenceEngine::auto(
+        ds,
+        &args.get("arch", "rgcn"),
+        args.get_usize("out-dim", 8),
+        args.get_usize("seed", 7) as u64,
+    )
 }
 
 fn opts(args: &Args) -> TrainOptions {
@@ -213,6 +231,106 @@ fn main() -> Result<()> {
                 report.epoch_times.iter().sum::<f64>() / report.epoch_times.len().max(1) as f64
             );
         }
+        "infer" => {
+            // Offline full-graph inference: stream every node of the
+            // target type through the engine and write GSTF shards
+            // (the precompute the serving cache warms from).
+            let ds = make_dataset(&args)?;
+            let (engine, backend) = serve_engine(&args, &ds)?;
+            let out = args.get("out", "offline_emb");
+            let off = OfflineInference {
+                shard_size: args.get_usize("shard-size", 4096),
+                prefetch: PrefetchConfig {
+                    n_workers: args.get_usize("num-workers", 1).max(1),
+                    depth: args.get_usize("prefetch", 2).max(1),
+                },
+            };
+            let ntype = args.get_usize("ntype", ds.target_ntype) as u32;
+            let rep = off.run(&engine, ntype, std::path::Path::new(&out))?;
+            println!(
+                "offline inference [{backend}]: {} rows x {} dims in {:.2}s ({:.0} rows/s) -> {} shards under {out}",
+                rep.rows,
+                rep.dim,
+                rep.secs,
+                rep.rows as f64 / rep.secs.max(1e-9),
+                rep.shards.len(),
+            );
+        }
+        "serve-bench" => {
+            // Closed-loop synthetic serving traffic (Zipf-distributed
+            // seeds) through the micro-batcher: an uncached arm, then
+            // a warmed-cache arm over the same trace; predictions must
+            // be bit-identical across arms.
+            let ds = make_dataset(&args)?;
+            let (engine, backend) = serve_engine(&args, &ds)?;
+            let seed = args.get_usize("seed", 7) as u64;
+            let n_req = args.get_usize("requests", 4000);
+            let alpha: f64 = args.get("alpha", "1.1").parse().unwrap_or(1.1);
+            let clients = args.get_usize("clients", 4);
+            let cap = args.get_usize("cache", 4096);
+            let cfg = MicroBatcherCfg {
+                max_batch: args.get_usize("max-batch", 32),
+                deadline: std::time::Duration::from_micros(
+                    args.get_usize("deadline-us", 200) as u64
+                ),
+            };
+            let nt = ds.target_ntype as u32;
+            let n_nodes = ds.graph.num_nodes[nt as usize];
+            let zipf = Zipf::new(n_nodes, alpha);
+            let mut rng = Rng::seed_from(seed ^ 0x5e12);
+            let trace: Vec<(u32, u32)> =
+                (0..n_req).map(|_| (nt, zipf.sample(&mut rng) as u32)).collect();
+            println!(
+                "serve-bench [{backend}]: {n_req} requests, zipf(a={alpha}) over {n_nodes} nodes, {clients} clients, max_batch={}, deadline={}us",
+                cfg.max_batch,
+                cfg.deadline.as_micros()
+            );
+
+            let mut nocache = EmbeddingCache::new(0);
+            let (s0, replies0) = closed_loop(&engine, cfg.clone(), &mut nocache, &trace, clients)?;
+            println!(
+                "  uncached: p50 {:>7.0}us  p99 {:>7.0}us  {:>8.0} req/s  hit {:>5.1}%",
+                s0.p50_us, s0.p99_us, s0.rps, 100.0 * s0.hit_rate
+            );
+
+            // Warm the cache with the canonical prediction of every
+            // distinct node in the trace (what `gs infer` shards
+            // hold), batching distinct seeds to engine capacity —
+            // canonical sampling makes the batched rows bit-identical
+            // to per-node recompute.
+            let mut cache = EmbeddingCache::new(cap);
+            cache.set_generation(engine.generation());
+            let mut sc = engine.make_scratch();
+            let mut seen = std::collections::HashSet::new();
+            let distinct: Vec<(u32, u32)> =
+                trace.iter().filter(|&&p| seen.insert(p)).copied().collect();
+            let c = engine.out_dim();
+            for chunk in distinct.chunks(engine.capacity()) {
+                let rows = engine.forward(&mut sc, chunk)?;
+                for (i, &(nt, id)) in chunk.iter().enumerate() {
+                    cache.put(cache_key(nt, id), &rows[i * c..(i + 1) * c]);
+                }
+            }
+            let (s1, replies1) = closed_loop(&engine, cfg, &mut cache, &trace, clients)?;
+            println!(
+                "  warmed:   p50 {:>7.0}us  p99 {:>7.0}us  {:>8.0} req/s  hit {:>5.1}%  (cache cap {cap}, {} distinct)",
+                s1.p50_us, s1.p99_us, s1.rps, 100.0 * s1.hit_rate, seen.len()
+            );
+
+            let mut expected: std::collections::HashMap<(u32, u32), Vec<f32>> =
+                std::collections::HashMap::new();
+            let mut identical = true;
+            for (k, v) in replies0.into_iter().chain(replies1) {
+                identical &= expected.entry(k).or_insert_with(|| v.clone()) == &v;
+            }
+            println!(
+                "  bit-identical across arms + repeats: {identical}; warmed speedup {:.2}x",
+                s1.rps / s0.rps.max(1e-9)
+            );
+            if !identical {
+                bail!("cached serving diverged from uncached recompute");
+            }
+        }
         _ => {
             println!("gs — GraphStorm-rs (see README.md)\n");
             println!("  gs smoke");
@@ -220,6 +338,10 @@ fn main() -> Result<()> {
             println!("  gs gconstruct --conf schema.json --dir DATA [--num-parts N] [--metis]");
             println!("  gs train-nc --dataset mag [--arch rgcn|gcn|sage|gat|rgat|hgt] [--lm none|pretrained|finetuned]");
             println!("  gs train-lp --dataset amazon [--loss contrastive|ce] [--neg in-batch|joint-K|uniform-K]");
+            println!("  gs infer --dataset mag [--out DIR] [--shard-size N]   offline full-graph inference shards");
+            println!("  gs serve-bench --dataset mag [--requests N] [--alpha A] [--clients C]");
+            println!("              [--cache CAP] [--max-batch B] [--deadline-us US]");
+            println!("              closed-loop Zipf traffic through the micro-batcher + embedding cache");
             println!("  common:     [--num-workers N] [--prefetch D]   pipelined batch building");
             println!("              (N loader threads sample+assemble ahead of the device step;");
             println!("               output is bit-identical for any N — default 1 = serial)");

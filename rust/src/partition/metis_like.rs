@@ -5,10 +5,19 @@
 //! Operates on the *homogenized* graph (all node types merged, edges
 //! made undirected) exactly like GraphStorm's gconstruct does before
 //! calling (Par)METIS.
+//!
+//! The coarse-edge accumulation pass — the O(E) hot loop of every
+//! coarsening level — is sharded across `run_pipeline` workers.
+//! Output is deterministic for any worker count: per-range partial
+//! sums merge additively in range order and the merged edge list is
+//! sorted before adjacency construction (the pre-parallel code
+//! iterated a std `HashMap`, whose random per-instance seed made the
+//! adjacency order — and thus the partition — vary run to run).
 
+use crate::dataloader::{run_pipeline, PrefetchConfig};
 use crate::graph::HeteroGraph;
 use crate::partition::PartitionBook;
-use crate::util::Rng;
+use crate::util::{FxHashMap, Rng};
 
 /// Homogenized weighted graph used across the multilevel hierarchy.
 struct Level {
@@ -43,9 +52,18 @@ fn homogenize(g: &HeteroGraph) -> (Vec<Vec<(u32, u32)>>, Vec<usize>) {
     (adj, offsets)
 }
 
+/// Batch-building threads for the coarse-edge accumulation pass.
+/// Small graphs stay serial (thread setup would dominate).
+fn coarsen_workers(n_nodes: usize) -> usize {
+    if n_nodes < 20_000 {
+        return 1;
+    }
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(8)
+}
+
 /// Heavy-edge matching: visit nodes in random order, match each
 /// unmatched node with its heaviest unmatched neighbor.
-fn coarsen(level: &Level, rng: &mut Rng) -> Option<Level> {
+fn coarsen(level: &Level, rng: &mut Rng, workers: usize) -> Option<Level> {
     let n = level.adj.len();
     let mut order: Vec<u32> = (0..n as u32).collect();
     rng.shuffle(&mut order);
@@ -82,26 +100,46 @@ fn coarsen(level: &Level, rng: &mut Rng) -> Option<Level> {
     for u in 0..n {
         vwgt[matched[u] as usize] += level.vwgt[u];
     }
-    let mut adj: Vec<Vec<(u32, u32)>> = vec![Vec::new(); cn];
-    let mut acc: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
-    for cu in 0..cn as u32 {
-        acc.clear();
-        // Collect fine members lazily: invert matched on the fly is
-        // O(n^2); instead accumulate below.
-        adj[cu as usize] = Vec::new();
-    }
-    // Accumulate coarse edges in one pass over fine edges.
-    let mut edge_acc: std::collections::HashMap<(u32, u32), u32> = std::collections::HashMap::new();
-    for u in 0..n {
-        let cu = matched[u];
-        for &(v, w) in &level.adj[u] {
-            let cv = matched[v as usize];
-            if cu != cv {
-                *edge_acc.entry((cu.min(cv), cu.max(cv))).or_insert(0) += w;
+    // Accumulate coarse edges sharded over fine-node ranges: workers
+    // build per-range partial weight maps, the consumer merges them in
+    // range order.  Addition is commutative, so the merged totals are
+    // identical for any worker count.
+    let chunk = n.div_ceil(workers.max(1) * 4).max(1);
+    let ranges: Vec<(usize, usize)> = (0..n)
+        .step_by(chunk)
+        .map(|lo| (lo, (lo + chunk).min(n)))
+        .collect();
+    let mut edge_acc: FxHashMap<(u32, u32), u32> = FxHashMap::default();
+    run_pipeline(
+        &ranges,
+        &PrefetchConfig { n_workers: workers, depth: 2 },
+        || (),
+        |_, _, &(lo, hi)| {
+            let mut local: FxHashMap<(u32, u32), u32> = FxHashMap::default();
+            for u in lo..hi {
+                let cu = matched[u];
+                for &(v, w) in &level.adj[u] {
+                    let cv = matched[v as usize];
+                    if cu != cv {
+                        *local.entry((cu.min(cv), cu.max(cv))).or_insert(0) += w;
+                    }
+                }
             }
-        }
-    }
-    for (&(a, b), &w) in &edge_acc {
+            Ok(local)
+        },
+        |_, local| {
+            for (key, w) in local {
+                *edge_acc.entry(key).or_insert(0) += w;
+            }
+            Ok(())
+        },
+    )
+    .expect("coarse-edge accumulation cannot fail");
+    // Sorted edge list → deterministic adjacency order for matching.
+    let mut edges: Vec<((u32, u32), u32)> = edge_acc.into_iter().collect();
+    edges.sort_unstable();
+    let mut adj: Vec<Vec<(u32, u32)>> = vec![Vec::new(); cn];
+    for ((a, b), w) in edges {
         // Each undirected fine edge was stored twice; weights double-count
         // consistently so relative magnitudes (all HEM needs) are intact.
         adj[a as usize].push((b, w));
@@ -202,14 +240,39 @@ fn refine(level: &Level, part: &mut [u32], k: usize) {
 }
 
 /// Multilevel k-way edge-cut partition of a heterogeneous graph.
+/// Coarsening parallelism is auto-sized per level from available
+/// cores (tiny coarse levels stay serial — thread setup would
+/// dominate); output is identical for any worker count.
 pub fn metis_like_partition(g: &HeteroGraph, n_parts: usize, seed: u64) -> PartitionBook {
+    metis_like_partition_impl(g, n_parts, seed, &coarsen_workers)
+}
+
+/// [`metis_like_partition`] with an explicit coarsening worker count,
+/// applied at every level (tests pin it to prove worker-count
+/// independence).
+pub fn metis_like_partition_with_workers(
+    g: &HeteroGraph,
+    n_parts: usize,
+    seed: u64,
+    workers: usize,
+) -> PartitionBook {
+    metis_like_partition_impl(g, n_parts, seed, &move |_| workers)
+}
+
+fn metis_like_partition_impl(
+    g: &HeteroGraph,
+    n_parts: usize,
+    seed: u64,
+    workers_for: &dyn Fn(usize) -> usize,
+) -> PartitionBook {
     let mut rng = Rng::seed_from(seed ^ 0x4d45544953); // "METIS"
     let (adj, offsets) = homogenize(g);
     let n = adj.len();
     let mut levels = vec![Level { vwgt: vec![1; n], adj, fine_to_coarse: vec![] }];
     // Coarsen until small enough for a quality initial partition.
     while levels.last().unwrap().adj.len() > (n_parts * 128).max(256) {
-        match coarsen(levels.last().unwrap(), &mut rng) {
+        let workers = workers_for(levels.last().unwrap().adj.len());
+        match coarsen(levels.last().unwrap(), &mut rng, workers) {
             Some(next) => {
                 let f2c = next.fine_to_coarse.clone();
                 levels.last_mut().unwrap().fine_to_coarse = f2c;
@@ -278,6 +341,37 @@ mod tests {
         let rand_cut = edge_cut(&g, &random_partition(&g, 2, 0));
         assert!(cut < 0.15, "cut={cut}");
         assert!(cut < rand_cut / 3.0, "cut={cut} rand={rand_cut}");
+    }
+
+    /// Parallel coarsening must be deterministic: identical output
+    /// across repeated runs and for any worker count (the partial
+    /// weight maps merge additively and the edge list is sorted).
+    #[test]
+    fn partition_is_deterministic_and_worker_independent() {
+        let n = 2000;
+        let schema = Schema::new(
+            vec!["v".into()],
+            vec![EdgeTypeDef { name: "e".into(), src_ntype: 0, dst_ntype: 0 }],
+        );
+        let mut g = HeteroGraph::new(schema, vec![n]);
+        let mut rng = Rng::seed_from(8);
+        let (mut src, mut dst) = (vec![], vec![]);
+        for _ in 0..12_000 {
+            src.push(rng.gen_range(n) as u32);
+            dst.push(rng.gen_range(n) as u32);
+        }
+        g.set_edges(0, src, dst);
+        let base = metis_like_partition_with_workers(&g, 4, 5, 1);
+        for workers in [1usize, 2, 4, 7] {
+            let book = metis_like_partition_with_workers(&g, 4, 5, workers);
+            assert_eq!(
+                book.assignments, base.assignments,
+                "workers={workers} changed the partition"
+            );
+        }
+        // And the auto-sized entry point agrees with the pinned one.
+        let auto = metis_like_partition(&g, 4, 5);
+        assert_eq!(auto.assignments, base.assignments);
     }
 
     #[test]

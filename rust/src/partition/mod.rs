@@ -7,7 +7,7 @@ pub mod book;
 pub mod metis_like;
 
 pub use book::PartitionBook;
-pub use metis_like::metis_like_partition;
+pub use metis_like::{metis_like_partition, metis_like_partition_with_workers};
 
 use crate::graph::HeteroGraph;
 use crate::util::Rng;

@@ -130,6 +130,19 @@ impl ArtifactSpec {
     pub fn output_index(&self, name: &str) -> Option<usize> {
         self.outputs.iter().position(|t| t.name == name)
     }
+
+    /// Builder: append an f32 output spec.  Synthetic specs have no
+    /// outputs by default; the serving engine reads its decode width
+    /// from `outputs[0]`, so tests and benches that run without AOT
+    /// artifacts attach one with this.
+    pub fn with_output(mut self, name: &str, shape: &[usize]) -> ArtifactSpec {
+        self.outputs.push(TensorSpec {
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            dtype: "f32".to_string(),
+        });
+        self
+    }
 }
 
 #[derive(Debug, Clone)]

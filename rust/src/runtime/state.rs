@@ -165,6 +165,13 @@ impl InferSession {
     }
 
     pub fn infer(&self, _rt: &Runtime, batch: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.infer_batch(batch)
+    }
+
+    /// Run inference on one batch.  The executable holds its own
+    /// client handle, so no `Runtime` is needed — this is the entry
+    /// the serving engine uses.
+    pub fn infer_batch(&self, batch: &[Tensor]) -> Result<Vec<Tensor>> {
         let spec = &self.exe.spec;
         if batch.len() != spec.batch.len() {
             bail!("{}: got {} batch tensors, want {}", self.exe.name, batch.len(), spec.batch.len());

@@ -7,4 +7,6 @@ pub mod neighbor;
 
 pub use block::{Block, BlockShape, LayerEdges};
 pub use negative::{NegSampler, NegativeBatch};
-pub use neighbor::{EdgeExclusion, NeighborSampler, SamplerScratch};
+pub use neighbor::{
+    hop_base, node_sample_seed, EdgeExclusion, NeighborSampler, SamplerScratch, SeedIndex,
+};

@@ -106,6 +106,7 @@ impl EdgeExclusion {
 /// Generation-stamped open-addressing map from packed `(ntype, id)`
 /// keys to node slots.  `begin` invalidates all entries in O(1), so
 /// steady-state sampling never clears or reallocates.
+#[derive(Default)]
 struct SlotTable {
     keys: Vec<u64>,
     vals: Vec<i32>,
@@ -155,11 +156,99 @@ impl SlotTable {
             i = (i + 1) & self.mask;
         }
     }
+
+    /// Value for `key` if present in the current generation.
+    #[inline]
+    fn get(&self, key: u64) -> Option<i32> {
+        if self.keys.is_empty() {
+            return None;
+        }
+        let mut i = (fxhash64(key) as usize) & self.mask;
+        loop {
+            if self.stamp[i] != self.gen {
+                return None;
+            }
+            if self.keys[i] == key {
+                return Some(self.vals[i]);
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
 }
 
 #[inline]
 fn pack(nt: u32, id: u32) -> u64 {
     ((nt as u64) << 32) | id as u64
+}
+
+/// Deterministic per-node sampling seed: depends only on the engine
+/// seed and the node identity, never on batch composition.  The serving
+/// layer samples every destination's neighbors from this seed (with
+/// the hop index mixed into `base`, see [`hop_base`]), so a node's
+/// K-hop tree — and therefore its prediction — is identical whether it
+/// is served alone, micro-batched with other nodes, or precomputed by
+/// the offline inference writer.
+#[inline]
+pub fn node_sample_seed(base: u64, nt: u32, id: u32) -> u64 {
+    let mut s = base ^ pack(nt, id).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    crate::util::splitmix64(&mut s)
+}
+
+/// Mix the hop index into the canonical base seed: a node expanded at
+/// several hops (targets are destinations at every hop) draws an
+/// independent neighbor subset per hop, matching the training
+/// sampler's per-hop redraws, while each (hop, node) subset stays a
+/// pure function of the base seed.
+#[inline]
+pub fn hop_base(base: u64, layer: usize) -> u64 {
+    base ^ (layer as u64 + 1).wrapping_mul(0xD1B5_4A32_D192_ED03)
+}
+
+/// Where each destination's sampling randomness comes from.
+enum HopRng<'r> {
+    /// One shared stream advanced across destinations (training: the
+    /// per-batch RNG derived from `batch_seed`).
+    Shared(&'r mut Rng),
+    /// A fresh stream per destination derived from
+    /// [`node_sample_seed`] (serving: batch-independent trees).
+    PerNode(u64),
+}
+
+/// Reusable first-seen index over `(ntype, id)` seed pairs, backed by
+/// the same generation-stamped Fx slot table the sampler uses — dedup
+/// and slot lookup are O(1) per key with zero steady-state allocation
+/// (the ROADMAP's replacement for `Vec::contains` / `position()` in LP
+/// evaluation).
+#[derive(Default)]
+pub struct SeedIndex {
+    slots: SlotTable,
+}
+
+impl SeedIndex {
+    pub fn new() -> SeedIndex {
+        SeedIndex { slots: SlotTable::new() }
+    }
+
+    /// Invalidate all entries in O(1) and reserve room for `n` keys.
+    pub fn begin(&mut self, n: usize) {
+        self.slots.begin(n);
+    }
+
+    /// Slot of `(nt, id)`, assigning `next` on first sight; returns
+    /// `(slot, inserted)`.
+    pub fn get_or_insert(&mut self, nt: u32, id: u32, next: usize) -> (usize, bool) {
+        let mut fresh = false;
+        let s = self.slots.get_or_insert_with(pack(nt, id), || {
+            fresh = true;
+            next as i32
+        });
+        (s as usize, fresh)
+    }
+
+    /// Slot of `(nt, id)` if it was inserted this generation.
+    pub fn get(&self, nt: u32, id: u32) -> Option<usize> {
+        self.slots.get(pack(nt, id)).map(|s| s as usize)
+    }
 }
 
 /// Reusable sampling buffers; one per worker thread.  After warm-up,
@@ -226,6 +315,36 @@ impl<'g> NeighborSampler<'g> {
         scratch: &mut SamplerScratch,
         block: &mut Block,
     ) {
+        self.sample_block_impl(seeds, shape, HopRng::Shared(rng), exclude, scratch, block)
+    }
+
+    /// Like [`sample_block_with`](Self::sample_block_with), but every
+    /// destination draws its neighbors from its own
+    /// [`node_sample_seed`]-derived stream: each node's sampled tree is
+    /// a pure function of `(base_seed, node)`, independent of which
+    /// other seeds share the block.  This is the serving contract — a
+    /// cached prediction stays bit-identical to any later recompute.
+    pub fn sample_block_canonical(
+        &self,
+        seeds: &[(u32, u32)],
+        shape: &BlockShape,
+        base_seed: u64,
+        exclude: &EdgeExclusion,
+        scratch: &mut SamplerScratch,
+        block: &mut Block,
+    ) {
+        self.sample_block_impl(seeds, shape, HopRng::PerNode(base_seed), exclude, scratch, block)
+    }
+
+    fn sample_block_impl(
+        &self,
+        seeds: &[(u32, u32)],
+        shape: &BlockShape,
+        mut hop_rng: HopRng,
+        exclude: &EdgeExclusion,
+        scratch: &mut SamplerScratch,
+        block: &mut Block,
+    ) {
         let l_count = shape.num_layers();
         assert!(
             seeds.len() <= shape.num_targets(),
@@ -276,6 +395,15 @@ impl<'g> NeighborSampler<'g> {
             debug_assert_eq!(nodes.len(), shape.ns[l + 1]);
             for dslot in 0..n_dst_real {
                 let (dnt, did) = nodes[dslot];
+                let mut node_rng;
+                let rng: &mut Rng = match &mut hop_rng {
+                    HopRng::Shared(r) => &mut **r,
+                    HopRng::PerNode(base) => {
+                        node_rng =
+                            Rng::seed_from(node_sample_seed(hop_base(*base, l), dnt, did));
+                        &mut node_rng
+                    }
+                };
                 self.pick_neighbors_into(dnt, did, shape.fanout, rng, exclude, picks, pos);
                 for pi in 0..picks.len() {
                     let (et, snt, sid) = picks[pi];
@@ -589,6 +717,103 @@ mod tests {
                 assert_eq!(fresh.layers[l].emask, reused.layers[l].emask);
             }
         }
+    }
+
+    /// Canonical sampling: a node's sampled tree must not depend on
+    /// which other seeds share the block — the edges below each target
+    /// are identical whether it is sampled alone or co-batched.
+    #[test]
+    fn canonical_sampling_is_batch_independent() {
+        let g = star_graph(80);
+        let s = NeighborSampler::new(&g);
+        let sh = shape(8, 4, 2);
+        let mut scratch = SamplerScratch::new();
+        let base = 0xbeef_u64;
+
+        // Sampled neighbor multiset of `target` at hop `l`, resolved to
+        // (etype, src node, dst node) so slot numbering drops out.
+        let tree_of = |block: &Block, dslot: usize, l: usize| -> Vec<(i32, (u32, u32))> {
+            let le = &block.layers[l];
+            let mut out = vec![];
+            for i in 0..le.src.len() {
+                if le.emask[i] > 0.0 && le.dst[i] as usize == dslot {
+                    out.push((le.etype[i], block.nodes[le.src[i] as usize]));
+                }
+            }
+            out
+        };
+
+        let mut solo = Block::empty(&sh);
+        s.sample_block_canonical(&[(0, 0)], &sh, base, &EdgeExclusion::new(), &mut scratch, &mut solo);
+        let solo_tree = tree_of(&solo, 0, 1);
+
+        for other in [1u32, 5, 17, 33] {
+            let mut both = Block::empty(&sh);
+            s.sample_block_canonical(
+                &[(0, other), (0, 0)],
+                &sh,
+                base,
+                &EdgeExclusion::new(),
+                &mut scratch,
+                &mut both,
+            );
+            // Node 0 is the second target → dslot 1.
+            assert_eq!(both.nodes[1], (0, 0));
+            assert_eq!(tree_of(&both, 1, 1), solo_tree, "co-batched with {other}");
+        }
+
+        // Per-hop independence: the target is a destination at both
+        // hops and must draw a *different* subset each hop (hop index
+        // is mixed into the seed), matching the training sampler's
+        // per-hop redraws.
+        assert_ne!(
+            tree_of(&solo, 0, 0),
+            tree_of(&solo, 0, 1),
+            "hub must not re-sample the identical subset at every hop"
+        );
+
+        // The shared-stream sampler, by contrast, is batch-dependent —
+        // guard that the two modes really differ on a high-degree hub.
+        let mut r = Rng::seed_from(base);
+        let mut shared = Block::empty(&sh);
+        s.sample_block_with(&[(0, 0)], &sh, &mut r, &EdgeExclusion::new(), &mut scratch, &mut shared);
+        assert_eq!(shared.nodes[0], (0, 0));
+    }
+
+    #[test]
+    fn seed_index_dedups_and_looks_up() {
+        let mut idx = SeedIndex::new();
+        idx.begin(8);
+        let mut order: Vec<(u32, u32)> = vec![];
+        for &(nt, id) in &[(0u32, 3u32), (1, 3), (0, 3), (0, 7), (1, 3)] {
+            let (slot, fresh) = idx.get_or_insert(nt, id, order.len());
+            if fresh {
+                order.push((nt, id));
+                assert_eq!(slot, order.len() - 1);
+            }
+        }
+        assert_eq!(order, vec![(0, 3), (1, 3), (0, 7)]);
+        assert_eq!(idx.get(1, 3), Some(1));
+        assert_eq!(idx.get(2, 2), None);
+        // begin() invalidates in O(1).
+        idx.begin(4);
+        assert_eq!(idx.get(0, 3), None);
+        let (slot, fresh) = idx.get_or_insert(9, 9, 0);
+        assert!(fresh);
+        assert_eq!(slot, 0);
+    }
+
+    #[test]
+    fn node_seed_spreads() {
+        let mut seen = HashSet::new();
+        for nt in 0..4u32 {
+            for id in 0..256u32 {
+                seen.insert(node_sample_seed(7, nt, id));
+            }
+        }
+        assert_eq!(seen.len(), 4 * 256);
+        assert_eq!(node_sample_seed(7, 1, 2), node_sample_seed(7, 1, 2));
+        assert_ne!(node_sample_seed(7, 1, 2), node_sample_seed(8, 1, 2));
     }
 
     #[test]

@@ -1,0 +1,255 @@
+//! Request coalescing: concurrent single-node prediction requests are
+//! gathered into size/deadline-bounded micro-batches.
+//!
+//! The batcher blocks on the request queue.  Cache hits are answered
+//! **on arrival** — a hot request never waits on the batch clock.  The
+//! first cache *miss* opens a batch and starts its deadline; further
+//! misses accumulate until either `max_batch` are pending or the
+//! deadline passes — whichever comes first — then the batch flushes:
+//! the distinct misses go through one engine forward pass (K-hop
+//! sample → assemble → execute), results land in the cache, and every
+//! reply is recorded in the latency histogram.  Because the engine
+//! samples canonically per node, coalescing never changes a
+//! prediction — only its latency.
+
+use anyhow::{anyhow, Result};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::time::{Duration, Instant};
+
+use super::cache::{cache_key, EmbeddingCache};
+use super::engine::{InferenceEngine, ServeScratch};
+use super::ServeMetrics;
+
+/// One in-flight prediction request.  `reply` receives the decoded
+/// row (or a rendered error); latency is measured from construction.
+pub struct ServeRequest {
+    pub nt: u32,
+    pub id: u32,
+    pub t_enq: Instant,
+    pub reply: Sender<Result<Vec<f32>, String>>,
+}
+
+impl ServeRequest {
+    pub fn new(nt: u32, id: u32, reply: Sender<Result<Vec<f32>, String>>) -> ServeRequest {
+        ServeRequest { nt, id, t_enq: Instant::now(), reply }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct MicroBatcherCfg {
+    /// Flush when this many requests are pending.
+    pub max_batch: usize,
+    /// ...or when the oldest pending request has waited this long.
+    pub deadline: Duration,
+}
+
+impl Default for MicroBatcherCfg {
+    fn default() -> Self {
+        MicroBatcherCfg { max_batch: 32, deadline: Duration::from_micros(500) }
+    }
+}
+
+pub struct MicroBatcher {
+    pub cfg: MicroBatcherCfg,
+}
+
+impl MicroBatcher {
+    pub fn new(cfg: MicroBatcherCfg) -> MicroBatcher {
+        MicroBatcher { cfg }
+    }
+
+    /// Blocking serve loop; returns once every request sender has been
+    /// dropped and the last batch has flushed.
+    pub fn run(
+        &self,
+        engine: &InferenceEngine,
+        cache: &mut EmbeddingCache,
+        rx: Receiver<ServeRequest>,
+        metrics: &ServeMetrics,
+    ) -> Result<()> {
+        let mut sc = engine.make_scratch();
+        let mut pend: Vec<ServeRequest> = Vec::new();
+        let cap = self.cfg.max_batch.min(engine.capacity()).max(1);
+        loop {
+            // Serve hits on arrival; the first miss opens a batch.
+            let first = loop {
+                let Ok(req) = rx.recv() else { return Ok(()) };
+                match Self::serve_hit(engine, cache, metrics, req) {
+                    Some(miss) => break miss,
+                    None => continue,
+                }
+            };
+            pend.push(first);
+            let deadline = Instant::now() + self.cfg.deadline;
+            while pend.len() < cap {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(req) => {
+                        if let Some(miss) = Self::serve_hit(engine, cache, metrics, req) {
+                            pend.push(miss);
+                        }
+                    }
+                    Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            self.flush(engine, cache, &mut sc, metrics, &mut pend)?;
+        }
+    }
+
+    /// Answer `req` from the cache if possible (recording the hit);
+    /// otherwise record the miss and hand the request back for
+    /// batching.
+    fn serve_hit(
+        engine: &InferenceEngine,
+        cache: &mut EmbeddingCache,
+        metrics: &ServeMetrics,
+        req: ServeRequest,
+    ) -> Option<ServeRequest> {
+        cache.set_generation(engine.generation());
+        if let Some(row) = cache.get(cache_key(req.nt, req.id)) {
+            let val = row.to_vec();
+            metrics.record_hit();
+            metrics.latency.record(req.t_enq.elapsed());
+            let _ = req.reply.send(Ok(val));
+            None
+        } else {
+            metrics.record_miss();
+            Some(req)
+        }
+    }
+
+    /// Flush one micro-batch of known misses: one forward over the
+    /// distinct seeds, cache insert, replies.
+    fn flush<'a>(
+        &self,
+        engine: &InferenceEngine<'a>,
+        cache: &mut EmbeddingCache,
+        sc: &mut ServeScratch<'a>,
+        metrics: &ServeMetrics,
+        pend: &mut Vec<ServeRequest>,
+    ) -> Result<()> {
+        cache.set_generation(engine.generation());
+        let mut seeds: Vec<(u32, u32)> = Vec::new();
+        let mut waiting: Vec<(usize, ServeRequest)> = Vec::new();
+        for req in pend.drain(..) {
+            // Micro-batches are tiny (≤ max_batch), so a linear dedup
+            // scan beats hashing here.
+            let slot = match seeds.iter().position(|&s| s == (req.nt, req.id)) {
+                Some(s) => s,
+                None => {
+                    seeds.push((req.nt, req.id));
+                    seeds.len() - 1
+                }
+            };
+            waiting.push((slot, req));
+        }
+        if seeds.is_empty() {
+            return Ok(());
+        }
+        let c = engine.out_dim();
+        let rows = match engine.forward(sc, &seeds) {
+            Ok(rows) => rows,
+            Err(e) => {
+                let msg = e.to_string();
+                for (_, req) in waiting.drain(..) {
+                    let _ = req.reply.send(Err(msg.clone()));
+                }
+                return Err(e);
+            }
+        };
+        for (i, &(nt, id)) in seeds.iter().enumerate() {
+            cache.put(cache_key(nt, id), &rows[i * c..(i + 1) * c]);
+        }
+        for (slot, req) in waiting.drain(..) {
+            let val = rows[slot * c..(slot + 1) * c].to_vec();
+            metrics.latency.record(req.t_enq.elapsed());
+            let _ = req.reply.send(Ok(val));
+        }
+        Ok(())
+    }
+}
+
+/// Closed-loop serving stats (one bench/CLI arm).
+#[derive(Debug, Clone, Default)]
+pub struct ClosedLoopStats {
+    pub requests: usize,
+    pub wall_s: f64,
+    pub rps: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub hit_rate: f64,
+}
+
+/// Drive `trace` through a micro-batcher from `clients` closed-loop
+/// client threads (each waits for its reply before sending the next
+/// request).  Returns the stats plus every `(seed, prediction)` reply
+/// in completion order, for determinism / bit-identity checks.
+pub fn closed_loop(
+    engine: &InferenceEngine,
+    cfg: MicroBatcherCfg,
+    cache: &mut EmbeddingCache,
+    trace: &[(u32, u32)],
+    clients: usize,
+) -> Result<(ClosedLoopStats, Vec<((u32, u32), Vec<f32>)>)> {
+    let metrics = ServeMetrics::new();
+    let batcher = MicroBatcher::new(cfg);
+    let (tx, rx) = std::sync::mpsc::sync_channel::<ServeRequest>(4096);
+    let clients = clients.max(1);
+    let t0 = Instant::now();
+    let mut replies: Vec<((u32, u32), Vec<f32>)> = Vec::new();
+    let mut first_err: Option<anyhow::Error> = None;
+    std::thread::scope(|scope| {
+        let batcher_handle = {
+            let metrics = &metrics;
+            let cache: &mut EmbeddingCache = cache;
+            scope.spawn(move || batcher.run(engine, cache, rx, metrics))
+        };
+        let mut client_handles = Vec::with_capacity(clients);
+        for w in 0..clients {
+            let tx: SyncSender<ServeRequest> = tx.clone();
+            let share: Vec<(u32, u32)> = trace.iter().skip(w).step_by(clients).copied().collect();
+            client_handles.push(scope.spawn(move || -> Result<Vec<((u32, u32), Vec<f32>)>> {
+                let mut out = Vec::with_capacity(share.len());
+                for (nt, id) in share {
+                    let (rtx, rrx) = channel();
+                    tx.send(ServeRequest::new(nt, id, rtx))
+                        .map_err(|_| anyhow!("batcher exited early"))?;
+                    let val = rrx
+                        .recv()
+                        .map_err(|_| anyhow!("reply channel dropped"))?
+                        .map_err(|e| anyhow!("serve error: {e}"))?;
+                    out.push(((nt, id), val));
+                }
+                Ok(out)
+            }));
+        }
+        drop(tx); // the batcher exits once the clients are done
+        for h in client_handles {
+            match h.join().expect("client thread panicked") {
+                Ok(r) => replies.extend(r),
+                Err(e) => {
+                    first_err.get_or_insert(e);
+                }
+            }
+        }
+        if let Err(e) = batcher_handle.join().expect("batcher thread panicked") {
+            first_err.get_or_insert(e);
+        }
+    });
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let stats = ClosedLoopStats {
+        requests: trace.len(),
+        wall_s,
+        rps: trace.len() as f64 / wall_s.max(1e-9),
+        p50_us: metrics.latency.p50_us(),
+        p99_us: metrics.latency.p99_us(),
+        hit_rate: metrics.hit_rate(),
+    };
+    Ok((stats, replies))
+}

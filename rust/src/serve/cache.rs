@@ -1,0 +1,308 @@
+//! Generation-stamped LRU embedding/prediction cache.
+//!
+//! Serving traffic is power-law: a small set of hot nodes dominates
+//! requests, so caching their decoded predictions (or embedding rows)
+//! lets them skip K-hop sampling entirely.  Entries are stamped with a
+//! generation; bumping the generation (model update, embedding-table
+//! write) invalidates the whole cache in O(1) without touching any
+//! entry.  Eviction reuses the evicted entry's row allocation, so a
+//! full cache performs no steady-state allocation on `put` of
+//! same-width rows.
+
+use anyhow::Result;
+
+use crate::dist::EmbTable;
+use crate::util::FxHashMap;
+
+/// Cache key for a `(ntype, node id)` pair.
+#[inline]
+pub fn cache_key(nt: u32, id: u32) -> u64 {
+    ((nt as u64) << 32) | id as u64
+}
+
+const NIL: u32 = u32::MAX;
+
+struct Entry {
+    key: u64,
+    gen: u64,
+    val: Vec<f32>,
+    prev: u32,
+    next: u32,
+}
+
+/// Bounded LRU over f32 rows, keyed by [`cache_key`].  Capacity 0
+/// disables the cache (every `get` misses, `put` is a no-op) — the
+/// "uncached arm" of serve-bench.
+pub struct EmbeddingCache {
+    cap: usize,
+    gen: u64,
+    map: FxHashMap<u64, u32>,
+    entries: Vec<Entry>,
+    free: Vec<u32>,
+    head: u32,
+    tail: u32,
+}
+
+impl EmbeddingCache {
+    pub fn new(cap: usize) -> EmbeddingCache {
+        EmbeddingCache {
+            cap,
+            gen: 0,
+            map: FxHashMap::default(),
+            entries: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.gen
+    }
+
+    /// Adopt an external generation (e.g. an `EmbTable`'s update
+    /// counter); entries stamped with any other generation become
+    /// misses.
+    pub fn set_generation(&mut self, gen: u64) {
+        self.gen = gen;
+    }
+
+    /// Invalidate every entry in O(1).
+    pub fn bump_generation(&mut self) {
+        self.gen = self.gen.wrapping_add(1);
+    }
+
+    fn detach(&mut self, i: u32) {
+        let (prev, next) = {
+            let e = &self.entries[i as usize];
+            (e.prev, e.next)
+        };
+        if prev != NIL {
+            self.entries[prev as usize].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.entries[next as usize].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+    }
+
+    fn push_front(&mut self, i: u32) {
+        let old = self.head;
+        {
+            let e = &mut self.entries[i as usize];
+            e.prev = NIL;
+            e.next = old;
+        }
+        if old != NIL {
+            self.entries[old as usize].prev = i;
+        }
+        self.head = i;
+        if self.tail == NIL {
+            self.tail = i;
+        }
+    }
+
+    /// Current-generation row for `key`, refreshing its recency.
+    /// Stale-generation entries are removed lazily and report a miss.
+    pub fn get(&mut self, key: u64) -> Option<&[f32]> {
+        let &i = self.map.get(&key)?;
+        if self.entries[i as usize].gen != self.gen {
+            self.map.remove(&key);
+            self.detach(i);
+            self.free.push(i);
+            return None;
+        }
+        self.detach(i);
+        self.push_front(i);
+        Some(&self.entries[i as usize].val)
+    }
+
+    /// Insert/overwrite `key` at the current generation, evicting the
+    /// least-recently-used entry when full.
+    pub fn put(&mut self, key: u64, val: &[f32]) {
+        if self.cap == 0 {
+            return;
+        }
+        if let Some(&i) = self.map.get(&key) {
+            let e = &mut self.entries[i as usize];
+            e.gen = self.gen;
+            e.val.clear();
+            e.val.extend_from_slice(val);
+            self.detach(i);
+            self.push_front(i);
+            return;
+        }
+        let i = if let Some(i) = self.free.pop() {
+            i
+        } else if self.map.len() >= self.cap {
+            let i = self.tail;
+            debug_assert_ne!(i, NIL, "full cache must have a tail");
+            self.detach(i);
+            let old_key = self.entries[i as usize].key;
+            self.map.remove(&old_key);
+            i
+        } else {
+            self.entries.push(Entry { key: 0, gen: 0, val: Vec::new(), prev: NIL, next: NIL });
+            (self.entries.len() - 1) as u32
+        };
+        {
+            let e = &mut self.entries[i as usize];
+            e.key = key;
+            e.gen = self.gen;
+            e.val.clear();
+            e.val.extend_from_slice(val);
+        }
+        self.map.insert(key, i);
+        self.push_front(i);
+    }
+}
+
+/// A row provider behind the cache: `dist::EmbTable`, the inference
+/// engine, or the offline shard store — anything that can produce the
+/// canonical row for a node and report an update generation.
+pub trait RowSource {
+    fn row_dim(&self) -> usize;
+    /// Update counter of the backing store; the cache adopts it so
+    /// stale rows invalidate automatically.
+    fn source_generation(&self) -> u64;
+    fn fetch_row(&mut self, nt: u32, id: u32, out: &mut Vec<f32>) -> Result<()>;
+}
+
+/// `dist::EmbTable` lookups routed through the cache trait, so
+/// learnable-embedding models serve hot rows without taking the
+/// table's read lock (GiGL-style embedding-table serving).  Gathers
+/// are attributed to partition `worker` for traffic accounting.
+pub struct EmbTableSource<'a> {
+    pub table: &'a EmbTable,
+    pub worker: u32,
+}
+
+impl RowSource for EmbTableSource<'_> {
+    fn row_dim(&self) -> usize {
+        self.table.dim
+    }
+
+    fn source_generation(&self) -> u64 {
+        self.table.generation()
+    }
+
+    fn fetch_row(&mut self, _nt: u32, id: u32, out: &mut Vec<f32>) -> Result<()> {
+        out.clear();
+        out.resize(self.table.dim, 0.0);
+        self.table.row_into(self.worker, id, out);
+        Ok(())
+    }
+}
+
+impl EmbeddingCache {
+    /// Read-through lookup: adopt the source's generation, then serve
+    /// from cache or fetch + insert.  Returns whether it was a hit.
+    pub fn get_through(
+        &mut self,
+        nt: u32,
+        id: u32,
+        src: &mut impl RowSource,
+        out: &mut Vec<f32>,
+    ) -> Result<bool> {
+        self.set_generation(src.source_generation());
+        let key = cache_key(nt, id);
+        if let Some(row) = self.get(key) {
+            out.clear();
+            out.extend_from_slice(row);
+            return Ok(true);
+        }
+        src.fetch_row(nt, id, out)?;
+        self.put(key, out);
+        Ok(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::PartitionBook;
+    use std::sync::Arc;
+
+    #[test]
+    fn lru_evicts_oldest_and_get_refreshes() {
+        let mut c = EmbeddingCache::new(2);
+        c.put(1, &[1.0]);
+        c.put(2, &[2.0]);
+        assert_eq!(c.get(1), Some(&[1.0f32][..])); // 1 is now MRU
+        c.put(3, &[3.0]); // evicts 2
+        assert_eq!(c.get(2), None);
+        assert_eq!(c.get(1), Some(&[1.0f32][..]));
+        assert_eq!(c.get(3), Some(&[3.0f32][..]));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn overwrite_updates_value() {
+        let mut c = EmbeddingCache::new(2);
+        c.put(7, &[1.0, 2.0]);
+        c.put(7, &[3.0]);
+        assert_eq!(c.get(7), Some(&[3.0f32][..]));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn generation_bump_invalidates_everything() {
+        let mut c = EmbeddingCache::new(4);
+        c.put(1, &[1.0]);
+        c.put(2, &[2.0]);
+        c.bump_generation();
+        assert_eq!(c.get(1), None);
+        assert_eq!(c.get(2), None);
+        // Slots are recycled after the lazy removal.
+        c.put(3, &[3.0]);
+        assert_eq!(c.get(3), Some(&[3.0f32][..]));
+    }
+
+    #[test]
+    fn capacity_zero_disables() {
+        let mut c = EmbeddingCache::new(0);
+        c.put(1, &[1.0]);
+        assert_eq!(c.get(1), None);
+    }
+
+    #[test]
+    fn emb_table_reads_through_and_invalidates_on_update() {
+        let book = Arc::new(PartitionBook::single(&[4]));
+        let counters = Arc::new(crate::dist::TrafficCounters::new());
+        let table = EmbTable::new(0, 4, 3, 7, book, counters);
+        let mut src = EmbTableSource { table: &table, worker: 0 };
+        let mut cache = EmbeddingCache::new(8);
+        let mut row = Vec::new();
+
+        let hit = cache.get_through(0, 2, &mut src, &mut row).unwrap();
+        assert!(!hit);
+        let snap = table.weights_snapshot();
+        assert_eq!(row, &snap[6..9]);
+        assert!(cache.get_through(0, 2, &mut src, &mut row).unwrap(), "second read must hit");
+        assert_eq!(row, &snap[6..9]);
+
+        // A sparse update bumps the table generation → cache misses
+        // and refetches the new row.
+        table.sparse_adam(&[2], &[1.0; 3], 1e-2);
+        let hit = cache.get_through(0, 2, &mut src, &mut row).unwrap();
+        assert!(!hit, "update must invalidate the cached row");
+        let snap2 = table.weights_snapshot();
+        assert_eq!(row, &snap2[6..9]);
+        assert_ne!(row, &snap[6..9]);
+    }
+}

@@ -1,0 +1,454 @@
+//! The inference engine: the forward-only path extracted from the
+//! NC/LP trainers.
+//!
+//! One request = sample a K-hop block around the requested seeds →
+//! assemble manifest-ordered inputs → execute the `*_infer` artifact →
+//! decode per-target rows.  Two properties make this servable:
+//!
+//! * **Canonical sampling** — every destination draws its neighbors
+//!   from `node_sample_seed(hop_base(engine seed, hop), node)`, so a
+//!   node's sampled tree (and, since message passing only flows along
+//!   block edges into a target's slot, its prediction) is independent
+//!   of which other requests share the micro-batch, while per-hop
+//!   redraws still match the training sampler's distribution.  Cached rows therefore stay
+//!   bit-identical to any later recompute, and the offline writer's
+//!   shards are valid warm-up data for the online cache.
+//! * **Recycled buffers** — assembly writes into a double-buffer ring
+//!   ([`ServeScratch`]), so steady-state sampling + assembly performs
+//!   zero heap allocation (`benches/serve.rs` asserts this).
+//!
+//! Execution is artifact-gated like everywhere else: with a PJRT
+//! session the real `*_infer` artifact runs; without one a
+//! deterministic Rust *surrogate* (mean-aggregation message passing
+//! over the sampled block + a fixed random projection) stands in, so
+//! the serving stack — batching, caching, offline shards, benches —
+//! runs end-to-end on any machine.
+
+use anyhow::{anyhow, bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::dataloader::{BatchFactory, GsDataset, LembTouch};
+use crate::runtime::{ArtifactSpec, InferSession, Runtime, Tensor};
+use crate::sampling::{Block, BlockShape};
+use crate::util::Rng;
+
+/// Decode width of the surrogate backend when the spec declares no
+/// outputs.
+pub const SURROGATE_OUT_DIM: usize = 8;
+
+enum Backend {
+    /// Real AOT artifact through PJRT.
+    Pjrt(InferSession),
+    /// Deterministic in-Rust stand-in (no artifacts needed).
+    Surrogate,
+}
+
+/// Reusable per-thread serving state: batch factory (sampler scratch +
+/// block), the assembled-tensor double-buffer ring, and the surrogate
+/// forward buffers.  One per serving thread; the engine itself is
+/// shared immutably.  The ring's job is buffer *reuse* (zero
+/// steady-state allocation); its two slots additionally keep the
+/// previous batch's tensors intact across one more `forward` call for
+/// callers that still hold them.
+pub struct ServeScratch<'a> {
+    pub factory: BatchFactory<'a>,
+    ring: [(Vec<Tensor>, LembTouch); 2],
+    cur: usize,
+    sur: SurrogateScratch,
+}
+
+#[derive(Default)]
+struct SurrogateScratch {
+    h: Vec<f32>,
+    h2: Vec<f32>,
+    acc: Vec<f32>,
+    deg: Vec<f32>,
+    out: Vec<f32>,
+}
+
+pub struct InferenceEngine<'a> {
+    pub ds: &'a GsDataset,
+    pub spec: ArtifactSpec,
+    pub shape: BlockShape,
+    backend: Backend,
+    /// Base seed for canonical per-node sampling.
+    pub sample_seed: u64,
+    /// Model/parameter generation; bump after refreshing params so
+    /// caches stamped with the old generation invalidate.
+    generation: AtomicU64,
+    out_dim: usize,
+    h_dim: usize,
+    /// Surrogate decode projection, `[out_dim, h_dim]` row-major.
+    proj: Vec<f32>,
+}
+
+impl<'a> InferenceEngine<'a> {
+    fn build(
+        ds: &'a GsDataset,
+        spec: ArtifactSpec,
+        backend: Backend,
+        sample_seed: u64,
+    ) -> Result<InferenceEngine<'a>> {
+        let shape = BlockShape::from_spec(&spec)
+            .ok_or_else(|| anyhow!("artifact '{}' has no block config", spec.file))?;
+        let dim_of = |n: &str| spec.batch_spec(n).map(|t| t.shape[1]).unwrap_or(0);
+        let h_dim = dim_of("feat").max(dim_of("text")).max(dim_of("lemb")).max(8);
+        let out_dim = spec
+            .outputs
+            .first()
+            .and_then(|t| t.shape.last().copied())
+            .unwrap_or(SURROGATE_OUT_DIM);
+        let mut rng = Rng::seed_from(sample_seed ^ 0x5e7e);
+        let scale = 1.0 / (h_dim as f32).sqrt();
+        let proj = (0..out_dim * h_dim).map(|_| rng.gen_normal() * scale).collect();
+        Ok(InferenceEngine {
+            ds,
+            spec,
+            shape,
+            backend,
+            sample_seed,
+            generation: AtomicU64::new(0),
+            out_dim,
+            h_dim,
+            proj,
+        })
+    }
+
+    /// Engine over the deterministic surrogate backend — serves
+    /// without AOT artifacts or PJRT.
+    pub fn surrogate(ds: &'a GsDataset, spec: &ArtifactSpec, seed: u64) -> Result<InferenceEngine<'a>> {
+        InferenceEngine::build(ds, spec.clone(), Backend::Surrogate, seed)
+    }
+
+    /// Engine over an existing PJRT inference session.
+    pub fn with_session(
+        ds: &'a GsDataset,
+        sess: InferSession,
+        seed: u64,
+    ) -> Result<InferenceEngine<'a>> {
+        let spec = sess.exe.spec.clone();
+        InferenceEngine::build(ds, spec, Backend::Pjrt(sess), seed)
+    }
+
+    /// Engine over a named infer artifact with explicit parameters
+    /// (e.g. `TrainState::params_host` after training).
+    pub fn from_trained(
+        rt: &Runtime,
+        ds: &'a GsDataset,
+        artifact: &str,
+        params: &[(String, Tensor)],
+        seed: u64,
+    ) -> Result<InferenceEngine<'a>> {
+        let sess = InferSession::new(rt, artifact, params)?;
+        InferenceEngine::with_session(ds, sess, seed)
+    }
+
+    /// Default engine for the CLI/benches/examples: the
+    /// `{arch}_nc_logits` artifact (from its init params) when PJRT
+    /// can execute it, else the surrogate over the standard synthetic
+    /// spec with an `out_dim`-wide logits output.  Returns the backend
+    /// label for display.
+    pub fn auto(
+        ds: &'a GsDataset,
+        arch: &str,
+        out_dim: usize,
+        seed: u64,
+    ) -> Result<(InferenceEngine<'a>, &'static str)> {
+        if let Some(rt) = crate::runtime::runtime_if_available() {
+            let name = format!("{arch}_nc_logits");
+            if rt.manifest.get(&name).is_ok() {
+                if let Ok(sess) = InferSession::from_init(&rt, &name) {
+                    return Ok((InferenceEngine::with_session(ds, sess, seed)?, "pjrt"));
+                }
+            }
+        }
+        let spec =
+            ArtifactSpec::synthetic_block(&[2304, 384, 64], &[1920, 320], 5, r#","batch":64"#)
+                .with_output("logits", &[64, out_dim]);
+        Ok((InferenceEngine::surrogate(ds, &spec, seed)?, "surrogate"))
+    }
+
+    /// Row width of decoded predictions.
+    pub fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    /// Max distinct seeds per forward call.
+    pub fn capacity(&self) -> usize {
+        self.spec
+            .cfg_usize("batch")
+            .unwrap_or(self.shape.num_targets())
+            .min(self.shape.num_targets())
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Acquire)
+    }
+
+    /// Mark the model as updated; caches adopt the new generation and
+    /// drop every stale prediction in O(1).
+    pub fn bump_generation(&self) {
+        self.generation.fetch_add(1, Ordering::AcqRel);
+    }
+
+    pub fn make_scratch(&self) -> ServeScratch<'a> {
+        ServeScratch {
+            factory: BatchFactory::new(self.ds, &self.shape),
+            ring: [(Vec::new(), Vec::new()), (Vec::new(), Vec::new())],
+            cur: 0,
+            sur: SurrogateScratch::default(),
+        }
+    }
+
+    /// Forward pass for **distinct** seeds; returns the row-major
+    /// `[seeds.len(), out_dim]` prediction matrix, backed by `sc`
+    /// (valid until the next call).
+    pub fn forward<'s>(
+        &self,
+        sc: &'s mut ServeScratch<'a>,
+        seeds: &[(u32, u32)],
+    ) -> Result<&'s [f32]> {
+        if seeds.len() > self.capacity() {
+            bail!("{} seeds exceed engine capacity {}", seeds.len(), self.capacity());
+        }
+        sc.cur ^= 1;
+        let cur = sc.cur;
+        let ServeScratch { factory, ring, sur, .. } = sc;
+        let (batch, touch) = &mut ring[cur];
+        factory.sample_assemble_canonical_into(
+            seeds,
+            &self.shape,
+            &self.spec,
+            self.sample_seed,
+            0,
+            batch,
+            touch,
+        )?;
+        let c = self.out_dim;
+        match &self.backend {
+            Backend::Pjrt(sess) => {
+                let outs = sess.infer_batch(batch)?;
+                let rows = outs[0].as_f32()?;
+                sur.out.clear();
+                sur.out.extend_from_slice(&rows[..seeds.len() * c]);
+            }
+            Backend::Surrogate => {
+                surrogate_forward(
+                    &factory.block,
+                    batch,
+                    seeds.len(),
+                    self.h_dim,
+                    c,
+                    &self.proj,
+                    sur,
+                );
+            }
+        }
+        Ok(&sur.out[..seeds.len() * c])
+    }
+
+    /// Canonical prediction for one node (what the cache stores).
+    pub fn predict_one(&self, sc: &mut ServeScratch<'a>, nt: u32, id: u32) -> Result<Vec<f32>> {
+        let row = self.forward(sc, &[(nt, id)])?;
+        Ok(row.to_vec())
+    }
+
+    /// Whether [`execute_block`](Self::execute_block) needs the
+    /// sampled block (only the surrogate reads it — callers shipping
+    /// batches across threads can skip the block clone for PJRT).
+    pub fn needs_block(&self) -> bool {
+        matches!(self.backend, Backend::Surrogate)
+    }
+
+    /// Execute the backend over an externally-assembled canonical
+    /// batch and decode the first `n_real` target rows.  This is the
+    /// consumer-thread half of the offline pipeline: workers sample +
+    /// assemble (no backend access), this thread executes — the same
+    /// split the trainers use, so a single PJRT session is never run
+    /// concurrently.
+    pub fn execute_block<'s>(
+        &self,
+        sc: &'s mut ServeScratch<'a>,
+        block: Option<&Block>,
+        batch: &[Tensor],
+        n_real: usize,
+    ) -> Result<&'s [f32]> {
+        let c = self.out_dim;
+        let sur = &mut sc.sur;
+        match &self.backend {
+            Backend::Pjrt(sess) => {
+                let outs = sess.infer_batch(batch)?;
+                let rows = outs[0].as_f32()?;
+                sur.out.clear();
+                sur.out.extend_from_slice(&rows[..n_real * c]);
+            }
+            Backend::Surrogate => {
+                let block = block
+                    .ok_or_else(|| anyhow!("surrogate execution needs the sampled block"))?;
+                surrogate_forward(block, batch, n_real, self.h_dim, c, &self.proj, sur);
+            }
+        }
+        Ok(&sur.out[..n_real * c])
+    }
+
+    /// Run the backend on an externally-assembled batch (the trainers'
+    /// evaluation loops build their own batches with the shared-stream
+    /// sampler, then execute through here).
+    pub fn infer_raw(&self, batch: &[Tensor]) -> Result<Vec<Tensor>> {
+        match &self.backend {
+            Backend::Pjrt(sess) => sess.infer_batch(batch),
+            Backend::Surrogate => bail!("surrogate backend decodes via forward(), not raw batches"),
+        }
+    }
+}
+
+/// Deterministic surrogate forward: sum the assembled feat/text/lemb
+/// rows (plus a signed identity hash so featureless nodes still
+/// separate), run one mean-aggregation pass per block layer, then
+/// project the target rows with a fixed random matrix.  Every
+/// target's output depends only on its own sampled tree, matching the
+/// batch-independence contract of a masked GNN artifact.
+fn surrogate_forward(
+    block: &Block,
+    batch: &[Tensor],
+    n_real: usize,
+    hd: usize,
+    c: usize,
+    proj: &[f32],
+    s: &mut SurrogateScratch,
+) {
+    let sh = &block.shape;
+    let n0 = sh.ns[0];
+    s.h.clear();
+    s.h.resize(n0 * hd, 0.0);
+    for t in batch.iter().take(3) {
+        if let Tensor::F32 { shape, data } = t {
+            let dd = shape[1];
+            let d = dd.min(hd);
+            if d == 0 {
+                continue;
+            }
+            for slot in 0..n0 {
+                for j in 0..d {
+                    s.h[slot * hd + j] += data[slot * dd + j];
+                }
+            }
+        }
+    }
+    for (slot, &(nt, id)) in block.nodes.iter().enumerate() {
+        if block.nmask[slot] == 0.0 {
+            continue;
+        }
+        let hsh = crate::util::fxhash64(super::cache::cache_key(nt, id));
+        let sign = if hsh >> 63 == 0 { 1.0 } else { -1.0 };
+        s.h[slot * hd + (hsh as usize % hd)] += sign;
+    }
+    for (l, le) in block.layers.iter().enumerate() {
+        let ndst = sh.ns[l + 1];
+        s.acc.clear();
+        s.acc.resize(ndst * hd, 0.0);
+        s.deg.clear();
+        s.deg.resize(ndst, 0.0);
+        for e in 0..le.src.len() {
+            if le.emask[e] > 0.0 {
+                let sp = le.src[e] as usize;
+                let dp = le.dst[e] as usize;
+                for j in 0..hd {
+                    s.acc[dp * hd + j] += s.h[sp * hd + j];
+                }
+                s.deg[dp] += 1.0;
+            }
+        }
+        s.h2.clear();
+        s.h2.resize(ndst * hd, 0.0);
+        for dp in 0..ndst {
+            let dg = s.deg[dp].max(1.0);
+            for j in 0..hd {
+                s.h2[dp * hd + j] = 0.5 * s.h[dp * hd + j] + 0.5 * s.acc[dp * hd + j] / dg;
+            }
+        }
+        std::mem::swap(&mut s.h, &mut s.h2);
+    }
+    s.out.clear();
+    s.out.resize(n_real * c, 0.0);
+    for t in 0..n_real {
+        for k in 0..c {
+            let mut a = 0.0f32;
+            for j in 0..hd {
+                a += proj[k * hd + j] * s.h[t * hd + j];
+            }
+            s.out[t * c + k] = a;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{self, mag};
+    use crate::partition::PartitionBook;
+
+    fn mag_ds(n: usize) -> GsDataset {
+        let raw = mag::generate(&mag::MagConfig { n_papers: n, ..Default::default() });
+        let book = PartitionBook::single(&raw.graph.num_nodes);
+        let mut ds = datagen::build_dataset(raw, book, 64, 3);
+        ds.ensure_text_features(64);
+        ds
+    }
+
+    fn spec() -> ArtifactSpec {
+        ArtifactSpec::synthetic_block(&[2304, 384, 64], &[1920, 320], 5, r#","batch":64"#)
+            .with_output("logits", &[64, 8])
+    }
+
+    /// The serving contract: a node's prediction is identical whether
+    /// served alone or micro-batched with arbitrary other nodes.
+    #[test]
+    fn predictions_are_batch_independent() {
+        let ds = mag_ds(400);
+        let engine = InferenceEngine::surrogate(&ds, &spec(), 11).unwrap();
+        let mut sc = engine.make_scratch();
+        let c = engine.out_dim();
+
+        let solo = engine.predict_one(&mut sc, 0, 5).unwrap();
+        assert_eq!(solo.len(), c);
+        assert!(solo.iter().any(|&x| x != 0.0), "surrogate must produce signal");
+
+        let seeds: Vec<(u32, u32)> = vec![(0, 17), (0, 5), (1, 3), (0, 200)];
+        let rows = engine.forward(&mut sc, &seeds).unwrap().to_vec();
+        assert_eq!(rows.len(), seeds.len() * c);
+        assert_eq!(&rows[c..2 * c], &solo[..], "co-batched prediction differs from solo");
+
+        // And stable across repeated calls (ring reuse must not leak
+        // state between batches).
+        let again = engine.forward(&mut sc, &seeds).unwrap().to_vec();
+        assert_eq!(rows, again);
+    }
+
+    #[test]
+    fn distinct_nodes_get_distinct_predictions() {
+        let ds = mag_ds(400);
+        let engine = InferenceEngine::surrogate(&ds, &spec(), 11).unwrap();
+        let mut sc = engine.make_scratch();
+        let a = engine.predict_one(&mut sc, 0, 1).unwrap();
+        let b = engine.predict_one(&mut sc, 0, 2).unwrap();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn duplicate_seeds_rejected() {
+        let ds = mag_ds(300);
+        let engine = InferenceEngine::surrogate(&ds, &spec(), 11).unwrap();
+        let mut sc = engine.make_scratch();
+        assert!(engine.forward(&mut sc, &[(0, 1), (0, 1)]).is_err());
+    }
+
+    #[test]
+    fn generation_bumps() {
+        let ds = mag_ds(300);
+        let engine = InferenceEngine::surrogate(&ds, &spec(), 11).unwrap();
+        assert_eq!(engine.generation(), 0);
+        engine.bump_generation();
+        assert_eq!(engine.generation(), 1);
+    }
+}

@@ -1,0 +1,212 @@
+//! Online inference serving (the paper's missing third pillar).
+//!
+//! GraphStorm pitches graph construction, training **and inference**;
+//! this module turns the pipelined mini-batch engine into a
+//! request-driven serving layer, following the two industrial designs
+//! in PAPERS.md: GiGL's decoupled offline embedding tables consumed by
+//! low-latency lookups, and AGL's K-hop neighborhood extraction as the
+//! unit of inference work.
+//!
+//! * [`engine::InferenceEngine`] — the forward-only path extracted
+//!   from the NC/LP trainers: sample a K-hop block around the
+//!   requested seeds (canonical per-node RNG, so predictions are
+//!   batch-independent), assemble inputs through the recycled-buffer
+//!   ring, execute the `*_infer` artifact (or the deterministic
+//!   surrogate when PJRT is unavailable) and decode per-target rows.
+//! * [`cache::EmbeddingCache`] — generation-stamped LRU so hot nodes
+//!   (power-law traffic) skip sampling entirely; the same
+//!   [`cache::RowSource`] read-through trait wraps `dist::EmbTable`
+//!   lookups so learnable-embedding models serve too.
+//! * [`batcher::MicroBatcher`] — coalesces concurrent single-node
+//!   requests into size/deadline-bounded micro-batches.
+//! * [`offline::OfflineInference`] — streams the full node set through
+//!   the prefetch pipeline and writes sharded GSTF embedding files,
+//!   the GiGL-style precompute the cache warms from.
+
+pub mod batcher;
+pub mod cache;
+pub mod engine;
+pub mod offline;
+
+pub use batcher::{closed_loop, ClosedLoopStats, MicroBatcher, MicroBatcherCfg, ServeRequest};
+pub use cache::{cache_key, EmbTableSource, EmbeddingCache, RowSource};
+pub use engine::{InferenceEngine, ServeScratch};
+pub use offline::{OfflineInference, OfflineReport};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::Rng;
+
+/// Lock-free log₂-bucketed latency histogram (microsecond buckets:
+/// bucket *i* holds durations in `[2^(i-1), 2^i) µs`).  Percentiles
+/// report the bucket's upper bound, so p50/p99 are conservative within
+/// a factor of two — plenty for serving dashboards.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; 64],
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram::default()
+    }
+
+    pub fn record(&self, d: std::time::Duration) {
+        let us = (d.as_micros() as u64).max(1);
+        let idx = (64 - us.leading_zeros() as usize).min(63);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Upper bound (µs) of the bucket containing the p-th percentile.
+    pub fn percentile(&self, p: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((p * total as f64).ceil() as u64).clamp(1, total);
+        let mut acc = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return (1u64 << i) as f64;
+            }
+        }
+        f64::INFINITY
+    }
+
+    pub fn p50_us(&self) -> f64 {
+        self.percentile(0.50)
+    }
+
+    pub fn p99_us(&self) -> f64 {
+        self.percentile(0.99)
+    }
+}
+
+/// Per-request serving counters: latency histogram + cache hit/miss.
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    pub latency: LatencyHistogram,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ServeMetrics {
+    pub fn new() -> ServeMetrics {
+        ServeMetrics::default()
+    }
+
+    pub fn record_hit(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_miss(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn served(&self) -> u64 {
+        self.hits() + self.misses()
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let s = self.served();
+        if s == 0 {
+            0.0
+        } else {
+            self.hits() as f64 / s as f64
+        }
+    }
+}
+
+/// Zipf-distributed rank sampler for synthetic serving traffic
+/// (`P(rank r) ∝ 1/r^alpha`) — the power-law request mix the
+/// embedding cache is designed for.
+pub struct Zipf {
+    cum: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, alpha: f64) -> Zipf {
+        assert!(n > 0);
+        let mut cum = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for r in 1..=n {
+            acc += 1.0 / (r as f64).powf(alpha);
+            cum.push(acc);
+        }
+        Zipf { cum }
+    }
+
+    /// Sample a rank in `[0, n)` (rank 0 is the hottest).
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let x = rng.gen_f64() * self.cum.last().unwrap();
+        self.cum.partition_point(|&c| c < x).min(self.cum.len() - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn histogram_percentiles_bracket() {
+        let h = LatencyHistogram::new();
+        for _ in 0..99 {
+            h.record(Duration::from_micros(100));
+        }
+        h.record(Duration::from_micros(100_000));
+        assert_eq!(h.count(), 100);
+        let p50 = h.p50_us();
+        assert!((64.0..=256.0).contains(&p50), "p50={p50}");
+        let p99 = h.percentile(0.99);
+        assert!(p99 <= 256.0, "p99 bucket must exclude the single outlier, got {p99}");
+        assert!(h.percentile(1.0) >= 100_000.0);
+        assert_eq!(LatencyHistogram::new().p99_us(), 0.0);
+    }
+
+    #[test]
+    fn zipf_is_head_heavy_and_in_range() {
+        let z = Zipf::new(1000, 1.1);
+        let mut rng = Rng::seed_from(3);
+        let mut head = 0usize;
+        let n = 20_000;
+        for _ in 0..n {
+            let r = z.sample(&mut rng);
+            assert!(r < 1000);
+            if r < 10 {
+                head += 1;
+            }
+        }
+        // With alpha=1.1, the top-10 ranks carry a large share.
+        assert!(head > n / 4, "head draws {head}/{n}");
+    }
+
+    #[test]
+    fn metrics_hit_rate() {
+        let m = ServeMetrics::new();
+        m.record_hit();
+        m.record_hit();
+        m.record_miss();
+        assert_eq!(m.served(), 3);
+        assert!((m.hit_rate() - 2.0 / 3.0).abs() < 1e-9);
+    }
+}

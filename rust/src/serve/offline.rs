@@ -1,0 +1,190 @@
+//! Offline full-graph inference: stream every node of a type through
+//! the prefetch pipeline and write sharded GSTF prediction/embedding
+//! files — the GiGL-style precompute the online cache warms from.
+//!
+//! Because the engine samples canonically per node, an offline shard
+//! row is bit-identical to what the online path would compute for the
+//! same node, so `EmbeddingCache::warm_from_dir` can preload hot nodes
+//! without ever serving a stale prediction (as long as the engine
+//! generation matches).
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+use crate::dataloader::PrefetchConfig;
+use crate::runtime::gstf::{read_gstf, write_gstf};
+use crate::runtime::Tensor;
+
+use super::cache::{cache_key, EmbeddingCache};
+use super::engine::InferenceEngine;
+
+/// Sharded full-node-set inference driver.
+pub struct OfflineInference {
+    /// Rows per output shard file.
+    pub shard_size: usize,
+    /// Pipelining knobs for block construction (`run_pipeline`).
+    pub prefetch: PrefetchConfig,
+}
+
+impl Default for OfflineInference {
+    fn default() -> Self {
+        OfflineInference { shard_size: 4096, prefetch: PrefetchConfig::default() }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct OfflineReport {
+    pub ntype: u32,
+    pub rows: usize,
+    pub dim: usize,
+    pub shards: Vec<PathBuf>,
+    pub secs: f64,
+}
+
+impl OfflineInference {
+    /// Run inference over every node of `ntype`, writing
+    /// `shard_NNNNN.gstf` files (`ids` i32 `[n]`, `emb` f32 `[n, dim]`)
+    /// into `out_dir`.
+    pub fn run(
+        &self,
+        engine: &InferenceEngine,
+        ntype: u32,
+        out_dir: &Path,
+    ) -> Result<OfflineReport> {
+        let t0 = std::time::Instant::now();
+        std::fs::create_dir_all(out_dir)
+            .with_context(|| format!("create {}", out_dir.display()))?;
+        let n = engine.ds.graph.num_nodes[ntype as usize];
+        let c = engine.out_dim();
+        let b = engine.capacity();
+        let ids: Vec<u32> = (0..n as u32).collect();
+        let chunks: Vec<&[u32]> = ids.chunks(b).collect();
+
+        let mut report = OfflineReport { ntype, dim: c, ..Default::default() };
+        let mut shard_ids: Vec<i32> = Vec::with_capacity(self.shard_size);
+        let mut shard_emb: Vec<f32> = Vec::with_capacity(self.shard_size * c);
+
+        // Sampling + assembly pipelines across workers; backend
+        // execution and shard writing stay on this thread, in node
+        // order — the same worker/consumer split the trainers use, so
+        // a single PJRT session never executes concurrently.
+        let mut exec_sc = engine.make_scratch();
+        crate::dataloader::run_pipeline(
+            &chunks,
+            &self.prefetch,
+            || crate::dataloader::BatchFactory::new(engine.ds, &engine.shape),
+            |f, _bi, chunk| {
+                let seeds: Vec<(u32, u32)> = chunk.iter().map(|&i| (ntype, i)).collect();
+                let mut batch = Vec::new();
+                let mut touch = crate::dataloader::LembTouch::new();
+                f.sample_assemble_canonical_into(
+                    &seeds,
+                    &engine.shape,
+                    &engine.spec,
+                    engine.sample_seed,
+                    0,
+                    &mut batch,
+                    &mut touch,
+                )?;
+                // Only the surrogate backend reads the block; skip the
+                // per-batch clone when PJRT executes.
+                let block = engine.needs_block().then(|| f.block.clone());
+                Ok((seeds, batch, block))
+            },
+            |_bi, (seeds, batch, block)| {
+                let rows =
+                    engine.execute_block(&mut exec_sc, block.as_ref(), &batch, seeds.len())?;
+                for (i, &(_, id)) in seeds.iter().enumerate() {
+                    shard_ids.push(id as i32);
+                    shard_emb.extend_from_slice(&rows[i * c..(i + 1) * c]);
+                    if shard_ids.len() >= self.shard_size {
+                        flush_shard(out_dir, &mut report, &mut shard_ids, &mut shard_emb, c)?;
+                    }
+                }
+                report.rows += seeds.len();
+                Ok(())
+            },
+        )?;
+        if !shard_ids.is_empty() {
+            flush_shard(out_dir, &mut report, &mut shard_ids, &mut shard_emb, c)?;
+        }
+        report.secs = t0.elapsed().as_secs_f64();
+        Ok(report)
+    }
+}
+
+fn flush_shard(
+    out_dir: &Path,
+    report: &mut OfflineReport,
+    ids: &mut Vec<i32>,
+    emb: &mut Vec<f32>,
+    dim: usize,
+) -> Result<()> {
+    let path = out_dir.join(format!("shard_{:05}.gstf", report.shards.len()));
+    let n = ids.len();
+    write_gstf(
+        &path,
+        &[
+            ("ids".to_string(), Tensor::I32 { shape: vec![n], data: std::mem::take(ids) }),
+            ("emb".to_string(), Tensor::F32 { shape: vec![n, dim], data: std::mem::take(emb) }),
+        ],
+    )?;
+    report.shards.push(path);
+    Ok(())
+}
+
+/// Read back every shard in `dir` (sorted by filename), returning
+/// `(id, row)` pairs — the round-trip reader tests and cache warming
+/// share.
+pub fn read_shards(dir: &Path, ntype: u32) -> Result<Vec<((u32, u32), Vec<f32>)>> {
+    let mut files: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("read {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .map(|n| n.starts_with("shard_") && n.ends_with(".gstf"))
+                .unwrap_or(false)
+        })
+        .collect();
+    files.sort();
+    let mut out = vec![];
+    for f in files {
+        let tensors = read_gstf(&f)?;
+        let ids = tensors
+            .iter()
+            .find(|(n, _)| n.as_str() == "ids")
+            .with_context(|| format!("{}: no ids tensor", f.display()))?;
+        let emb = tensors
+            .iter()
+            .find(|(n, _)| n.as_str() == "emb")
+            .with_context(|| format!("{}: no emb tensor", f.display()))?;
+        let Tensor::I32 { data: ids, .. } = &ids.1 else { bail!("ids must be i32") };
+        let Tensor::F32 { shape, data } = &emb.1 else { bail!("emb must be f32") };
+        let dim = shape[1];
+        if ids.len() * dim != data.len() {
+            bail!("{}: ids/emb length mismatch", f.display());
+        }
+        for (i, &id) in ids.iter().enumerate() {
+            out.push(((ntype, id as u32), data[i * dim..(i + 1) * dim].to_vec()));
+        }
+    }
+    Ok(out)
+}
+
+impl EmbeddingCache {
+    /// Warm the cache from offline shards written by
+    /// [`OfflineInference::run`].  `generation` must be the engine
+    /// generation the shards were computed at; rows are inserted in
+    /// file order, so with a bounded cache the *last* rows read stay
+    /// resident — pass a capacity ≥ the hot set you want pinned.
+    pub fn warm_from_dir(&mut self, dir: &Path, ntype: u32, generation: u64) -> Result<usize> {
+        self.set_generation(generation);
+        let rows = read_shards(dir, ntype)?;
+        let n = rows.len();
+        for ((nt, id), row) in rows {
+            self.put(cache_key(nt, id), &row);
+        }
+        Ok(n)
+    }
+}

@@ -13,8 +13,9 @@ use crate::dataloader::{
     GsDataset, LinkPredictionDataLoader, Split,
 };
 use crate::eval::{distmult, reciprocal_rank, Mean};
-use crate::runtime::{InferSession, Runtime, TrainState};
+use crate::runtime::{Runtime, TrainState};
 use crate::sampling::{EdgeExclusion, NegSampler};
+use crate::serve::InferenceEngine;
 use crate::trainer::TrainOptions;
 use crate::util::Rng;
 
@@ -164,7 +165,11 @@ impl LpTrainer {
 
     /// MRR over a split: embed (src, dst, K joint negatives) with the
     /// emb artifact, score with DistMult in Rust.  Block construction
-    /// is pipelined; inference + scoring stay on this thread.
+    /// is pipelined; inference runs through the shared forward path
+    /// (`serve::InferenceEngine`) + scoring stays on this thread.
+    /// Seed dedup and slot lookup go through the factory's reusable
+    /// Fx seed index — O(1) per seed instead of the old
+    /// `Vec::contains` / `position()` scans.
     pub fn evaluate(
         &self,
         rt: &Runtime,
@@ -174,9 +179,9 @@ impl LpTrainer {
         opts: &TrainOptions,
     ) -> Result<f64> {
         let params = st.params_host()?;
-        let sess = InferSession::new(rt, &self.emb_artifact, &params)?;
-        let spec = sess.exe.spec.clone();
-        let shape = crate::sampling::BlockShape::from_spec(&spec).unwrap();
+        let engine = InferenceEngine::from_trained(rt, ds, &self.emb_artifact, &params, opts.seed)?;
+        let spec = engine.spec.clone();
+        let shape = engine.shape.clone();
         let lp = ds.lp.as_ref().unwrap();
         let def = &ds.graph.schema.etypes[lp.etype];
         let es = &ds.graph.edges[lp.etype];
@@ -198,31 +203,33 @@ impl LpTrainer {
             || BatchFactory::new(ds, &shape),
             |f, bi, chunk| {
                 let mut rng = Rng::seed_from(batch_seed(seed, 1, bi as u64));
-                // Seeds: [srcs, dsts, negs(joint k)] — dedup for the block.
+                // Seeds: [srcs, dsts, negs(joint k)] — first-seen dedup
+                // through the reusable Fx seed index, which doubles as
+                // the slot map (the block preserves insertion order).
+                let mut si = std::mem::take(&mut f.seed_index);
+                si.begin(2 * chunk.len() + k);
                 let mut seeds: Vec<(u32, u32)> = vec![];
-                let mut order: Vec<(u32, u32)> = vec![];
-                let push = |p: (u32, u32), seeds: &mut Vec<(u32, u32)>| {
-                    if !seeds.contains(&p) {
-                        seeds.push(p);
+                let mut slots: Vec<usize> = Vec::with_capacity(2 * chunk.len() + k);
+                {
+                    let mut push = |p: (u32, u32), seeds: &mut Vec<(u32, u32)>| {
+                        let (slot, fresh) = si.get_or_insert(p.0, p.1, seeds.len());
+                        if fresh {
+                            seeds.push(p);
+                        }
+                        slots.push(slot);
+                    };
+                    for &eid in chunk.iter() {
+                        push((def.src_ntype as u32, es.src[eid as usize]), &mut seeds);
                     }
-                };
-                for &eid in chunk.iter() {
-                    let p = (def.src_ntype as u32, es.src[eid as usize]);
-                    order.push(p);
-                    push(p, &mut seeds);
+                    for &eid in chunk.iter() {
+                        push((def.dst_ntype as u32, es.dst[eid as usize]), &mut seeds);
+                    }
+                    for _ in 0..k {
+                        let nid = rng.gen_range(n_dst) as u32;
+                        push((def.dst_ntype as u32, nid), &mut seeds);
+                    }
                 }
-                for &eid in chunk.iter() {
-                    let p = (def.dst_ntype as u32, es.dst[eid as usize]);
-                    order.push(p);
-                    push(p, &mut seeds);
-                }
-                let negs: Vec<u32> = (0..k).map(|_| rng.gen_range(n_dst) as u32).collect();
-                for &nid in &negs {
-                    let p = (def.dst_ntype as u32, nid);
-                    order.push(p);
-                    push(p, &mut seeds);
-                }
-                let (batch, _) = f.sample_assemble(
+                let out = f.sample_assemble(
                     &seeds,
                     &shape,
                     &spec,
@@ -230,26 +237,24 @@ impl LpTrainer {
                     0,
                     &EdgeExclusion::new(),
                     false,
-                )?;
-                Ok((batch, f.targets().to_vec(), order, negs, chunk.len()))
+                );
+                f.seed_index = si;
+                let (batch, _) = out?;
+                Ok((batch, slots, chunk.len()))
             },
-            |_bi, (batch, targets, order, negs, nb)| {
-                let out = sess.infer(rt, &batch)?;
+            |_bi, (batch, slots, nb)| {
+                let out = engine.infer_raw(&batch)?;
                 let emb = out[0].as_f32()?;
                 let rel = out[1].as_f32()?;
-                let slot_of = |p: (u32, u32)| targets.iter().position(|&q| q == p).unwrap();
                 let r = &rel[lp.etype * h..(lp.etype + 1) * h];
-                let embrow = |p: (u32, u32)| {
-                    let s = slot_of(p);
-                    &emb[s * h..(s + 1) * h]
-                };
+                let row = |s: usize| &emb[s * h..(s + 1) * h];
                 for i in 0..nb {
-                    let eu = embrow(order[i]);
-                    let ev = embrow(order[nb + i]);
+                    let eu = row(slots[i]);
+                    let ev = row(slots[nb + i]);
                     let pos = distmult(eu, r, ev);
-                    let neg_scores: Vec<f32> = negs
+                    let neg_scores: Vec<f32> = slots[2 * nb..]
                         .iter()
-                        .map(|&nid| distmult(eu, r, embrow((def.dst_ntype as u32, nid))))
+                        .map(|&s| distmult(eu, r, row(s)))
                         .collect();
                     mrr.add(reciprocal_rank(pos, &neg_scores));
                 }

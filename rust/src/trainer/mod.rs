@@ -5,6 +5,11 @@
 //! matching infer artifact, and reports per-epoch history.  Multi-part
 //! runs rotate the acting worker per batch so the traffic counters see
 //! the same local/remote mix a real cluster would.
+//!
+//! The forward-only half (sample → assemble → execute infer artifact →
+//! decode) lives in [`crate::serve::InferenceEngine`]; the evaluators
+//! here run their batches through it, and the online serving layer
+//! reuses the exact same path for request traffic.
 
 pub mod distill;
 pub mod lm;

@@ -9,8 +9,9 @@ use crate::dataloader::{
     apply_lemb_grads, batch_seed, fill_lemb, run_pipeline, BatchFactory, GsDataset,
     NodeDataLoader, PrefetchingLoader, Split,
 };
-use crate::runtime::{InferSession, Runtime, TrainState};
+use crate::runtime::{Runtime, TrainState};
 use crate::sampling::EdgeExclusion;
+use crate::serve::InferenceEngine;
 use crate::trainer::TrainOptions;
 use crate::util::Rng;
 
@@ -100,7 +101,8 @@ impl NodeTrainer {
     }
 
     /// Accuracy over a split via the logits infer artifact; block
-    /// construction is pipelined, inference stays on this thread.
+    /// construction is pipelined, inference runs on this thread
+    /// through the shared forward path (`serve::InferenceEngine`).
     pub fn evaluate(
         &self,
         rt: &Runtime,
@@ -110,9 +112,9 @@ impl NodeTrainer {
         opts: &TrainOptions,
     ) -> Result<f64> {
         let params = st.params_host()?;
-        let sess = InferSession::new(rt, &self.infer_artifact, &params)?;
-        let spec = sess.exe.spec.clone();
-        let shape = crate::sampling::BlockShape::from_spec(&spec).unwrap();
+        let engine = InferenceEngine::from_trained(rt, ds, &self.infer_artifact, &params, opts.seed)?;
+        let spec = engine.spec.clone();
+        let shape = engine.shape.clone();
         let b = spec.cfg_usize("batch").unwrap_or(shape.num_targets());
         let c = *spec.outputs[0].shape.last().unwrap();
         let ids = ds.node_labels().ids_in(split);
@@ -141,16 +143,10 @@ impl NodeTrainer {
                 Ok((batch, f.targets().to_vec()))
             },
             |_bi, (batch, targets)| {
-                let out = sess.infer(rt, &batch)?;
+                let out = engine.infer_raw(&batch)?;
                 let logits = out[0].as_f32()?;
                 for (i, &(_, id)) in targets.iter().enumerate() {
-                    let row = &logits[i * c..(i + 1) * c];
-                    let am = row
-                        .iter()
-                        .enumerate()
-                        .max_by(|a, b| a.1.total_cmp(b.1))
-                        .map(|(j, _)| j)
-                        .unwrap();
+                    let am = crate::eval::argmax(&logits[i * c..(i + 1) * c]);
                     if am as i32 == labels_store.labels[id as usize] {
                         correct += 1;
                     }

@@ -1,0 +1,202 @@
+//! Serving-path tests: cache hit/miss correctness against uncached
+//! recompute (bit-identical), micro-batcher deadline flush, offline
+//! shard round-trip + cache warming, and determinism under concurrent
+//! requests.  The engine runs the deterministic surrogate backend, so
+//! everything here works without AOT artifacts or PJRT.
+
+use std::sync::mpsc::{channel, sync_channel};
+use std::time::Duration;
+
+use graphstorm::datagen::{self, mag};
+use graphstorm::dataloader::GsDataset;
+use graphstorm::partition::PartitionBook;
+use graphstorm::runtime::ArtifactSpec;
+use graphstorm::serve::{
+    cache_key, closed_loop, offline::read_shards, EmbeddingCache, InferenceEngine, MicroBatcher,
+    MicroBatcherCfg, OfflineInference, ServeMetrics, ServeRequest,
+};
+use graphstorm::util::Rng;
+
+fn mag_ds(n: usize) -> GsDataset {
+    let raw = mag::generate(&mag::MagConfig { n_papers: n, ..Default::default() });
+    let book = PartitionBook::single(&raw.graph.num_nodes);
+    let mut ds = datagen::build_dataset(raw, book, 64, 3);
+    ds.ensure_text_features(64);
+    ds
+}
+
+fn spec() -> ArtifactSpec {
+    ArtifactSpec::synthetic_block(&[2304, 384, 64], &[1920, 320], 5, r#","batch":64"#)
+        .with_output("logits", &[64, 8])
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("gs_serve_test_{tag}_{}", std::process::id()))
+}
+
+/// Cache hits must be bit-identical to uncached recompute, across
+/// micro-batch compositions and request order.
+#[test]
+fn cache_hits_match_uncached_recompute() {
+    let ds = mag_ds(500);
+    let engine = InferenceEngine::surrogate(&ds, &spec(), 42).unwrap();
+    let mut sc = engine.make_scratch();
+    let trace: Vec<(u32, u32)> = (0..40u32).map(|i| (0u32, i * 7 % 400)).collect();
+
+    // Uncached pass, one request per forward.
+    let mut fresh: Vec<Vec<f32>> = vec![];
+    for &(nt, id) in &trace {
+        fresh.push(engine.predict_one(&mut sc, nt, id).unwrap());
+    }
+
+    // Cached pass: first fill via a coalesced batch forward, then hit.
+    let mut cache = EmbeddingCache::new(64);
+    cache.set_generation(engine.generation());
+    let mut distinct: Vec<(u32, u32)> = vec![];
+    for &s in &trace {
+        if !distinct.contains(&s) {
+            distinct.push(s);
+        }
+    }
+    let c = engine.out_dim();
+    let rows = engine.forward(&mut sc, &distinct).unwrap().to_vec();
+    for (i, &(nt, id)) in distinct.iter().enumerate() {
+        cache.put(cache_key(nt, id), &rows[i * c..(i + 1) * c]);
+    }
+    for (i, &(nt, id)) in trace.iter().enumerate() {
+        let hit = cache.get(cache_key(nt, id)).expect("warmed").to_vec();
+        assert_eq!(hit, fresh[i], "cached row diverged for request {i} ({nt},{id})");
+    }
+}
+
+/// A partially-filled micro-batch must flush once the deadline
+/// passes — requests never wait for a full batch.
+#[test]
+fn micro_batcher_flushes_on_deadline() {
+    let ds = mag_ds(300);
+    let engine = InferenceEngine::surrogate(&ds, &spec(), 7).unwrap();
+    let metrics = ServeMetrics::new();
+    let cfg = MicroBatcherCfg { max_batch: 64, deadline: Duration::from_millis(5) };
+    let (tx, rx) = sync_channel::<ServeRequest>(16);
+    let mut cache = EmbeddingCache::new(16);
+
+    std::thread::scope(|scope| {
+        let metrics = &metrics;
+        let engine = &engine;
+        let cache = &mut cache;
+        let batcher = MicroBatcher::new(cfg);
+        let handle = scope.spawn(move || batcher.run(engine, cache, rx, metrics));
+
+        // Three requests — far fewer than max_batch.
+        let mut rxs = vec![];
+        for id in 0..3u32 {
+            let (rtx, rrx) = channel();
+            tx.send(ServeRequest::new(0, id, rtx)).unwrap();
+            rxs.push(rrx);
+        }
+        for (i, rrx) in rxs.into_iter().enumerate() {
+            let row = rrx
+                .recv_timeout(Duration::from_secs(5))
+                .unwrap_or_else(|_| panic!("request {i} not flushed by deadline"))
+                .unwrap();
+            assert_eq!(row.len(), engine.out_dim());
+        }
+        drop(tx);
+        handle.join().unwrap().unwrap();
+    });
+    assert_eq!(metrics.served(), 3);
+    assert_eq!(metrics.latency.count(), 3);
+}
+
+/// Offline shards round-trip exactly, cover every node once, and a
+/// cache warmed from them serves bit-identical predictions.
+#[test]
+fn offline_shards_round_trip_and_warm_cache() {
+    let ds = mag_ds(300);
+    let engine = InferenceEngine::surrogate(&ds, &spec(), 5).unwrap();
+    let nt = ds.target_ntype as u32;
+    let n = ds.graph.num_nodes[nt as usize];
+    let dir = tmp_dir("shards");
+    std::fs::remove_dir_all(&dir).ok();
+
+    let off = OfflineInference { shard_size: 70, ..Default::default() };
+    let rep = off.run(&engine, nt, &dir).unwrap();
+    assert_eq!(rep.rows, n);
+    assert_eq!(rep.dim, engine.out_dim());
+    assert_eq!(rep.shards.len(), n.div_ceil(70));
+
+    let rows = read_shards(&dir, nt).unwrap();
+    assert_eq!(rows.len(), n);
+    // Every id exactly once, in order.
+    for (i, ((rnt, id), _)) in rows.iter().enumerate() {
+        assert_eq!((*rnt, *id), (nt, i as u32));
+    }
+    // Shard rows == online recompute (canonical sampling).
+    let mut sc = engine.make_scratch();
+    for &((rnt, id), ref row) in rows.iter().step_by(37) {
+        let fresh = engine.predict_one(&mut sc, rnt, id).unwrap();
+        assert_eq!(row, &fresh, "shard row for node {id} diverged from online path");
+    }
+
+    // Warm a cache and serve through it.
+    let mut cache = EmbeddingCache::new(n);
+    let warmed = cache.warm_from_dir(&dir, nt, engine.generation()).unwrap();
+    assert_eq!(warmed, n);
+    let hit = cache.get(cache_key(nt, 123)).expect("warmed row").to_vec();
+    assert_eq!(hit, engine.predict_one(&mut sc, nt, 123).unwrap());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Concurrent clients hammering the micro-batcher get deterministic
+/// replies: whatever micro-batches requests land in, every reply
+/// equals the canonical single-request prediction.
+#[test]
+fn concurrent_requests_are_deterministic() {
+    let ds = mag_ds(400);
+    let engine = InferenceEngine::surrogate(&ds, &spec(), 13).unwrap();
+    let nt = ds.target_ntype as u32;
+    let n_nodes = ds.graph.num_nodes[nt as usize];
+    let mut rng = Rng::seed_from(77);
+    let trace: Vec<(u32, u32)> =
+        (0..600).map(|_| (nt, rng.gen_range(n_nodes) as u32)).collect();
+    let cfg = MicroBatcherCfg { max_batch: 16, deadline: Duration::from_micros(300) };
+
+    // Two runs with different cache settings + 4 concurrent clients.
+    let mut uncached = EmbeddingCache::new(0);
+    let (s0, replies0) = closed_loop(&engine, cfg.clone(), &mut uncached, &trace, 4).unwrap();
+    let mut cached = EmbeddingCache::new(512);
+    let (s1, replies1) = closed_loop(&engine, cfg, &mut cached, &trace, 4).unwrap();
+    assert_eq!(s0.requests, 600);
+    assert_eq!(replies0.len(), 600);
+    assert_eq!(replies1.len(), 600);
+    assert!(s1.hit_rate > 0.0, "repeated seeds must hit the warm cache");
+    assert!((0.0..=1.0).contains(&s1.hit_rate));
+
+    // Every reply — across runs, arms and batch compositions — equals
+    // the canonical prediction.
+    let mut sc = engine.make_scratch();
+    let mut canon: std::collections::HashMap<(u32, u32), Vec<f32>> = Default::default();
+    for (k, v) in replies0.into_iter().chain(replies1) {
+        let expect = canon
+            .entry(k)
+            .or_insert_with(|| engine.predict_one(&mut sc, k.0, k.1).unwrap());
+        assert_eq!(expect, &v, "reply for {k:?} not canonical");
+    }
+}
+
+/// Bumping the engine generation (model update) invalidates cached
+/// predictions at the batcher level.
+#[test]
+fn generation_bump_invalidates_serving_cache() {
+    let ds = mag_ds(300);
+    let engine = InferenceEngine::surrogate(&ds, &spec(), 3).unwrap();
+    let trace: Vec<(u32, u32)> = vec![(0, 1), (0, 1), (0, 1)];
+    let cfg = MicroBatcherCfg { max_batch: 4, deadline: Duration::from_micros(100) };
+    let mut cache = EmbeddingCache::new(8);
+    let (s0, _) = closed_loop(&engine, cfg.clone(), &mut cache, &trace, 1).unwrap();
+    assert!(s0.hit_rate > 0.0);
+    engine.bump_generation();
+    // The cached rows are stale now; the first request recomputes.
+    let (s1, _) = closed_loop(&engine, cfg, &mut cache, &trace, 1).unwrap();
+    assert!(s1.hit_rate < 1.0);
+}

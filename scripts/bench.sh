@@ -12,9 +12,17 @@ set -euo pipefail
 
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
 export GS_BENCH_OUT="${GS_BENCH_OUT:-$ROOT/BENCH_micro.json}"
+export GS_SERVE_BENCH_OUT="${GS_SERVE_BENCH_OUT:-$ROOT/BENCH_serve.json}"
 
 cd "$ROOT/rust"
 cargo bench --bench micro "$@"
 
 echo
+# Serving benches: run end-to-end without AOT artifacts/PJRT (the
+# engine falls back to the deterministic surrogate backend), so this
+# never needs to skip — it just reports which backend executed.
+cargo bench --bench serve "$@"
+
+echo
 echo "results: $GS_BENCH_OUT"
+echo "         $GS_SERVE_BENCH_OUT"
