@@ -16,6 +16,60 @@ pub fn fast() -> bool {
     std::env::var("GS_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
 }
 
+/// Bench workload parameters from a versioned JSON file
+/// (`GS_BENCH_CONF`, pointed at `scripts/bench_*.json` by
+/// `scripts/bench.sh`); built-in defaults when unset.  Unknown keys
+/// are hard errors with a nearest-key suggestion, like the run-config
+/// layer.
+pub struct BenchConf {
+    doc: Option<graphstorm::util::json::Json>,
+}
+
+impl BenchConf {
+    pub fn load(allowed: &[&str]) -> BenchConf {
+        use graphstorm::util::json::Json;
+        let Ok(path) = std::env::var("GS_BENCH_CONF") else {
+            return BenchConf { doc: None };
+        };
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("read bench conf {path}: {e}"));
+        let doc = Json::parse(&text).unwrap_or_else(|e| panic!("parse bench conf {path}: {e}"));
+        let Some(m) = doc.as_obj() else { panic!("bench conf {path} must be a JSON object") };
+        for k in m.keys() {
+            assert!(
+                allowed.contains(&k.as_str()),
+                "unknown bench-conf key '{k}' in {path}{}; valid: {}",
+                graphstorm::config::did_you_mean(k, allowed),
+                allowed.join(", ")
+            );
+        }
+        println!("bench conf: {path}");
+        BenchConf { doc: Some(doc) }
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        match self.doc.as_ref().and_then(|d| d.get(key)) {
+            None => default,
+            Some(v) => v
+                .as_f64()
+                .filter(|f| f.fract() == 0.0 && *f >= 0.0)
+                .map(|f| f as usize)
+                .unwrap_or_else(|| {
+                    panic!("bench-conf key '{key}' must be a non-negative integer")
+                }),
+        }
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        match self.doc.as_ref().and_then(|d| d.get(key)) {
+            None => default,
+            Some(v) => v
+                .as_f64()
+                .unwrap_or_else(|| panic!("bench-conf key '{key}' must be a number")),
+        }
+    }
+}
+
 pub fn scale(n: usize) -> usize {
     if fast() {
         (n / 4).max(200)

@@ -89,7 +89,11 @@ fn main() {
     if rt.is_none() {
         println!("(AOT artifacts / PJRT unavailable — step benches skipped, pipeline uses a simulated step)");
     }
-    let mut ds = common::mag_dataset(common::scale(4000), 2);
+    // Workload parameters live in scripts/bench_micro.json (versioned)
+    // rather than shell flags; GS_BENCH_CONF overrides the path.
+    let conf = common::BenchConf::load(&["mag_papers", "parts", "pipeline_batches", "sf_edges"]);
+    let mut ds =
+        common::mag_dataset(common::scale(conf.usize("mag_papers", 4000)), conf.usize("parts", 2));
     ds.ensure_text_features(64);
     let spec = nc_spec(rt.as_ref());
     let shape = BlockShape::from_spec(&spec).unwrap();
@@ -152,7 +156,7 @@ fn main() {
     // One "epoch" of batch building + consuming; the consumer runs the
     // real PJRT step when available, a fixed FLOP slab otherwise.
     {
-        let n_batches = 24usize.min(train_ids.len() / 64);
+        let n_batches = conf.usize("pipeline_batches", 24).min(train_ids.len() / 64);
         let chunks: Vec<&[u32]> = train_ids.chunks(64).take(n_batches).collect();
         let mut st = rt
             .as_ref()
@@ -220,12 +224,14 @@ fn main() {
     }
 
     // ---- partitioners ----------------------------------------------------
-    let (dsf, _, _) = common::sf_dataset(200_000, 1);
-    bench(&mut results, "random_partition (200K edges)", 10, || {
+    let sf_edges = conf.usize("sf_edges", 200_000);
+    let (dsf, _, _) = common::sf_dataset(sf_edges, 1);
+    let sf_label = format!("{}K edges", sf_edges / 1000);
+    bench(&mut results, &format!("random_partition ({sf_label})"), 10, || {
         let b = random_partition(&dsf.graph, 8, 3);
         std::hint::black_box(b.n_parts);
     });
-    bench(&mut results, "metis_like_partition (200K edges)", 3, || {
+    bench(&mut results, &format!("metis_like_partition ({sf_label})"), 3, || {
         let b = metis_like_partition(&dsf.graph, 8, 3);
         std::hint::black_box(b.n_parts);
     });

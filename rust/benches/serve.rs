@@ -77,7 +77,20 @@ fn write_json(results: &[(String, f64)]) {
 fn main() {
     println!("=== serve benches ===");
     let mut results: Vec<(String, f64)> = vec![];
-    let mut ds = common::mag_dataset(common::scale(2000), 1);
+    // Workload parameters live in scripts/bench_serve.json (versioned)
+    // rather than shell flags; GS_BENCH_CONF overrides the path.
+    let conf = common::BenchConf::load(&[
+        "mag_papers",
+        "shard_size",
+        "hot_requests",
+        "zipf_requests",
+        "alpha",
+        "clients",
+        "cache",
+        "max_batch",
+        "deadline_us",
+    ]);
+    let mut ds = common::mag_dataset(common::scale(conf.usize("mag_papers", 2000)), 1);
     ds.ensure_text_features(64);
     let nt = ds.target_ntype as u32;
     let n_nodes = ds.graph.num_nodes[nt as usize];
@@ -138,7 +151,7 @@ fn main() {
 
     // ---- offline inference + shard round-trip ---------------------------
     let tmp = std::env::temp_dir().join(format!("gs_serve_bench_{}", std::process::id()));
-    let off = OfflineInference { shard_size: 1024, ..Default::default() };
+    let off = OfflineInference { shard_size: conf.usize("shard_size", 1024), ..Default::default() };
     let rep = off.run(&engine, nt, &tmp).unwrap();
     let rows_per_s = rep.rows as f64 / rep.secs.max(1e-9);
     println!(
@@ -154,7 +167,7 @@ fn main() {
     // >= 2x uncached steady-state throughput, bit-identically.
     {
         let hot: Vec<(u32, u32)> = (0..16u32).map(|i| (nt, i)).collect();
-        let n_req = 4000usize;
+        let n_req = conf.usize("hot_requests", 4000);
         let mut rng = Rng::seed_from(9);
         let trace: Vec<(u32, u32)> = (0..n_req).map(|_| hot[rng.gen_range(hot.len())]).collect();
 
@@ -209,21 +222,24 @@ fn main() {
 
     // ---- closed-loop Zipf traffic through the micro-batcher -------------
     {
-        let n_req = if common::fast() { 1000 } else { 4000 };
-        let zipf = Zipf::new(n_nodes, 1.1);
+        let n_req =
+            if common::fast() { 1000 } else { conf.usize("zipf_requests", 4000) };
+        let zipf = Zipf::new(n_nodes, conf.f64("alpha", 1.1));
         let mut rng = Rng::seed_from(11);
         let trace: Vec<(u32, u32)> =
             (0..n_req).map(|_| (nt, zipf.sample(&mut rng) as u32)).collect();
         let cfg = MicroBatcherCfg {
-            max_batch: 32,
-            deadline: std::time::Duration::from_micros(200),
+            max_batch: conf.usize("max_batch", 32),
+            deadline: std::time::Duration::from_micros(conf.usize("deadline_us", 200) as u64),
         };
+        let clients = conf.usize("clients", 4);
 
         let mut nocache = EmbeddingCache::new(0);
-        let (s0, replies0) = closed_loop(&engine, cfg.clone(), &mut nocache, &trace, 4).unwrap();
-        let mut cache = EmbeddingCache::new(4096);
+        let (s0, replies0) =
+            closed_loop(&engine, cfg.clone(), &mut nocache, &trace, clients).unwrap();
+        let mut cache = EmbeddingCache::new(conf.usize("cache", 4096));
         cache.warm_from_dir(&tmp, nt, engine.generation()).unwrap();
-        let (s1, replies1) = closed_loop(&engine, cfg, &mut cache, &trace, 4).unwrap();
+        let (s1, replies1) = closed_loop(&engine, cfg, &mut cache, &trace, clients).unwrap();
         println!(
             "zipf closed-loop uncached         p50 {:>6.0}us p99 {:>6.0}us {:>8.0} req/s hit {:>5.1}%",
             s0.p50_us, s0.p99_us, s0.rps, 100.0 * s0.hit_rate

@@ -1,0 +1,466 @@
+//! `gs` subcommands as thin adapters over [`RunConfig`].
+//!
+//! Every subcommand is a row in [`COMMANDS`]: a base config document
+//! plus a table of flags, where each flag is nothing but an override
+//! path into the document (`--epochs 5` ≡ `--set task.epochs=5`).
+//! Parsing is strict: an unknown flag is a hard error with the nearest
+//! valid flag suggested, and a value-taking flag refuses to swallow a
+//! following `--flag` token — `gs train-nc --epcohs 10` can never
+//! silently train 3 epochs again.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{apply_set, did_you_mean, set_path, RunConfig};
+use crate::util::json::Json;
+
+/// One CLI flag: an override path into the config document.
+#[derive(Debug, Clone, Copy)]
+pub struct Flag {
+    pub name: &'static str,
+    pub takes_value: bool,
+    /// Dot path into the run-config document, or a `#special`:
+    /// `#conf` (load file as base), `#set` (generic override),
+    /// `#lm` (`none` drops the stage), `#metis` (boolean method).
+    pub path: &'static str,
+    pub help: &'static str,
+}
+
+/// One `gs` subcommand: base document + flag table.
+#[derive(Debug, Clone, Copy)]
+pub struct Cmd {
+    pub name: &'static str,
+    pub about: &'static str,
+    /// Base config document the flags override (ignored when `#conf`
+    /// loads a file instead).
+    pub base: &'static str,
+    pub flags: &'static [Flag],
+}
+
+const SET: Flag = Flag {
+    name: "set",
+    takes_value: true,
+    path: "#set",
+    help: "stage.key=value override (repeatable, applied in order)",
+};
+const DATASET: Flag =
+    Flag { name: "dataset", takes_value: true, path: "data.dataset", help: "mag|amazon|scale-free" };
+const SIZE: Flag =
+    Flag { name: "size", takes_value: true, path: "data.size", help: "generator size" };
+const NUM_PARTS: Flag =
+    Flag { name: "num-parts", takes_value: true, path: "partition.parts", help: "partitions" };
+const METIS: Flag = Flag {
+    name: "metis",
+    takes_value: false,
+    path: "#metis",
+    help: "METIS-like partitioning (default random)",
+};
+const SEED: Flag = Flag { name: "seed", takes_value: true, path: "seed", help: "run seed" };
+const NUM_WORKERS: Flag = Flag {
+    name: "num-workers",
+    takes_value: true,
+    path: "loader.workers",
+    help: "loader threads, or 'auto'",
+};
+const PREFETCH: Flag = Flag {
+    name: "prefetch",
+    takes_value: true,
+    path: "loader.prefetch",
+    help: "batches built ahead per worker",
+};
+const ARCH_TASK: Flag =
+    Flag { name: "arch", takes_value: true, path: "task.arch", help: "rgcn|gcn|sage|gat|rgat|hgt" };
+const EPOCHS: Flag =
+    Flag { name: "epochs", takes_value: true, path: "task.epochs", help: "training epochs" };
+const LR: Flag = Flag { name: "lr", takes_value: true, path: "task.lr", help: "learning rate" };
+
+/// The `gs` command table.  `smoke` is handled directly in `main`;
+/// everything else builds a [`RunConfig`] and hands it to the
+/// pipeline executor.
+pub const COMMANDS: &[Cmd] = &[
+    Cmd {
+        name: "run",
+        about: "execute the pipeline a run-config file declares",
+        base: "{}",
+        flags: &[
+            Flag { name: "conf", takes_value: true, path: "#conf", help: "run-config JSON file" },
+            SET,
+        ],
+    },
+    Cmd {
+        name: "validate-conf",
+        about: "dry-run: parse, validate and print the fully-resolved config",
+        base: "{}",
+        flags: &[
+            Flag { name: "conf", takes_value: true, path: "#conf", help: "run-config JSON file" },
+            SET,
+        ],
+    },
+    Cmd {
+        name: "gen-data",
+        about: "data + partition stages only (prints graph stats)",
+        base: "{}",
+        flags: &[DATASET, SIZE, NUM_PARTS, METIS, SEED, SET],
+    },
+    Cmd {
+        name: "gconstruct",
+        about: "construct from tabular files + schema config",
+        base: r#"{"data": {"source": "gconstruct"}}"#,
+        flags: &[
+            Flag { name: "conf", takes_value: true, path: "data.conf", help: "gconstruct schema JSON" },
+            Flag { name: "dir", takes_value: true, path: "data.dir", help: "tabular data directory" },
+            NUM_PARTS,
+            METIS,
+            SET,
+        ],
+    },
+    Cmd {
+        name: "train-nc",
+        about: "node classification training",
+        base: r#"{"task": {"kind": "nc"}}"#,
+        flags: &[
+            DATASET,
+            SIZE,
+            NUM_PARTS,
+            METIS,
+            SEED,
+            ARCH_TASK,
+            EPOCHS,
+            LR,
+            Flag {
+                name: "lm",
+                takes_value: true,
+                path: "#lm",
+                help: "none|pretrained|finetuned LM stage",
+            },
+            Flag {
+                name: "save-model-path",
+                takes_value: true,
+                path: "task.save_model",
+                help: "save trained model (GSTF)",
+            },
+            NUM_WORKERS,
+            PREFETCH,
+            SET,
+        ],
+    },
+    Cmd {
+        name: "train-lp",
+        about: "link prediction training",
+        base: r#"{"task": {"kind": "lp"}}"#,
+        flags: &[
+            DATASET,
+            SIZE,
+            NUM_PARTS,
+            METIS,
+            SEED,
+            EPOCHS,
+            LR,
+            Flag { name: "loss", takes_value: true, path: "task.loss", help: "contrastive|ce" },
+            Flag {
+                name: "neg",
+                takes_value: true,
+                path: "task.neg",
+                help: "in-batch|joint-K|local-joint-K|uniform-K",
+            },
+            Flag {
+                name: "max-edges-per-epoch",
+                takes_value: true,
+                path: "task.max_edges_per_epoch",
+                help: "training-edge cap per epoch",
+            },
+            NUM_WORKERS,
+            PREFETCH,
+            SET,
+        ],
+    },
+    Cmd {
+        name: "distill",
+        about: "GNN teacher -> graph-free student LM distillation",
+        base: r#"{"task": {"kind": "distill"}}"#,
+        flags: &[
+            DATASET,
+            SIZE,
+            NUM_PARTS,
+            METIS,
+            SEED,
+            ARCH_TASK,
+            EPOCHS,
+            LR,
+            Flag {
+                name: "teacher-epochs",
+                takes_value: true,
+                path: "task.teacher_epochs",
+                help: "GNN teacher training epochs",
+            },
+            NUM_WORKERS,
+            PREFETCH,
+            SET,
+        ],
+    },
+    Cmd {
+        name: "infer",
+        about: "offline full-graph inference shards",
+        base: r#"{"infer": {}}"#,
+        flags: &[
+            DATASET,
+            SIZE,
+            NUM_PARTS,
+            METIS,
+            SEED,
+            Flag { name: "arch", takes_value: true, path: "infer.arch", help: "engine architecture" },
+            Flag { name: "out-dim", takes_value: true, path: "infer.out_dim", help: "prediction width" },
+            Flag { name: "out", takes_value: true, path: "infer.out", help: "shard output directory" },
+            Flag { name: "shard-size", takes_value: true, path: "infer.shard_size", help: "rows per shard" },
+            Flag { name: "ntype", takes_value: true, path: "infer.ntype", help: "node type (default: target)" },
+            NUM_WORKERS,
+            PREFETCH,
+            SET,
+        ],
+    },
+    Cmd {
+        name: "serve-bench",
+        about: "closed-loop Zipf traffic through the micro-batcher + cache",
+        base: r#"{"serve": {}}"#,
+        flags: &[
+            DATASET,
+            SIZE,
+            NUM_PARTS,
+            METIS,
+            SEED,
+            Flag { name: "arch", takes_value: true, path: "serve.arch", help: "engine architecture" },
+            Flag { name: "out-dim", takes_value: true, path: "serve.out_dim", help: "prediction width" },
+            Flag { name: "requests", takes_value: true, path: "serve.requests", help: "trace length" },
+            Flag { name: "alpha", takes_value: true, path: "serve.alpha", help: "Zipf exponent" },
+            Flag { name: "clients", takes_value: true, path: "serve.clients", help: "closed-loop clients" },
+            Flag { name: "cache", takes_value: true, path: "serve.cache", help: "embedding-cache capacity" },
+            Flag { name: "max-batch", takes_value: true, path: "serve.max_batch", help: "micro-batch size cap" },
+            Flag { name: "deadline-us", takes_value: true, path: "serve.deadline_us", help: "micro-batch deadline" },
+            SET,
+        ],
+    },
+];
+
+/// Look up a subcommand, suggesting the nearest name on a miss.
+pub fn find_command(name: &str) -> Result<&'static Cmd> {
+    if let Some(c) = COMMANDS.iter().find(|c| c.name == name) {
+        return Ok(c);
+    }
+    let mut names: Vec<&str> = COMMANDS.iter().map(|c| c.name).collect();
+    names.push("smoke");
+    names.push("help");
+    Err(anyhow!(
+        "unknown command '{name}'{}; run 'gs help' for usage",
+        did_you_mean(name, &names)
+    ))
+}
+
+/// Parse `args` against the command's flag table.  Unknown flags and
+/// flags that would swallow a following `--flag` token are hard
+/// errors.
+pub fn parse_flags<'c>(cmd: &'c Cmd, args: &[String]) -> Result<Vec<(&'c Flag, String)>> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        let Some(name) = a.strip_prefix("--") else {
+            bail!("unexpected argument '{a}' for 'gs {}' (flags look like --key value)", cmd.name);
+        };
+        let flag = cmd.flags.iter().find(|f| f.name == name).ok_or_else(|| {
+            let valid: Vec<&str> = cmd.flags.iter().map(|f| f.name).collect();
+            anyhow!(
+                "unknown flag '--{name}' for 'gs {}'{}; valid flags: {}",
+                cmd.name,
+                did_you_mean(name, &valid),
+                valid.iter().map(|v| format!("--{v}")).collect::<Vec<_>>().join(", ")
+            )
+        })?;
+        i += 1;
+        if flag.takes_value {
+            match args.get(i) {
+                Some(v) if !v.starts_with("--") => {
+                    out.push((flag, v.clone()));
+                    i += 1;
+                }
+                Some(v) => bail!(
+                    "flag '--{name}' expects a value but the next token is the flag '{v}'"
+                ),
+                None => bail!("flag '--{name}' expects a value"),
+            }
+        } else {
+            out.push((flag, "true".to_string()));
+        }
+    }
+    Ok(out)
+}
+
+/// Build the config *document* for a command invocation: base (or
+/// `--conf` file) + every flag override in CLI order.
+pub fn build_doc(cmd: &Cmd, args: &[String]) -> Result<Json> {
+    let flags = parse_flags(cmd, args)?;
+    let needs_conf = cmd.flags.iter().any(|f| f.path == "#conf");
+    if flags.iter().filter(|(f, _)| f.path == "#conf").count() > 1 {
+        bail!("'gs {}': --conf given more than once", cmd.name);
+    }
+    let mut doc = match flags.iter().find(|(f, _)| f.path == "#conf") {
+        Some((_, path)) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("read run config {path}"))?;
+            Json::parse(&text).with_context(|| format!("parse run config {path}"))?
+        }
+        None if needs_conf => bail!("'gs {}' requires --conf FILE", cmd.name),
+        None => Json::parse(cmd.base).expect("builtin base config parses"),
+    };
+    for (f, v) in &flags {
+        match f.path {
+            "#conf" => {}
+            "#set" => apply_set(&mut doc, v)?,
+            "#metis" => set_path(&mut doc, "partition.method", "metis")?,
+            "#lm" => {
+                if v != "none" {
+                    set_path(&mut doc, "lm.mode", v)?;
+                }
+            }
+            path => set_path(&mut doc, path, v)?,
+        }
+    }
+    Ok(doc)
+}
+
+/// Build and validate the typed config for a command invocation.
+pub fn build_config(cmd: &Cmd, args: &[String]) -> Result<RunConfig> {
+    RunConfig::from_json(&build_doc(cmd, args)?)
+}
+
+/// The `gs help` text, generated from the command table so it can
+/// never drift from the real flag set.
+pub fn help_text() -> String {
+    let mut s = String::new();
+    s.push_str("gs — GraphStorm-rs: declarative graph ML pipelines (docs/CONFIG.md)\n\n");
+    s.push_str("  gs run --conf examples/pipeline_nc.json   one command: data -> partition -> train -> infer\n");
+    s.push_str("  gs <command> --set stage.key=value        any config key is overridable from the CLI\n\n");
+    for cmd in COMMANDS {
+        s.push_str(&format!("  gs {:<14} {}\n", cmd.name, cmd.about));
+        for f in cmd.flags {
+            if f.name == "set" && cmd.name != "run" {
+                continue; // shown once under `run`
+            }
+            let val = if f.takes_value { " V" } else { "" };
+            s.push_str(&format!("      --{:<22} {}\n", format!("{}{val}", f.name), f.help));
+        }
+    }
+    s.push_str("  gs smoke          runtime sanity check (artifacts + PJRT)\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DataSource, Dataset, TaskKind, Workers};
+
+    fn argv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn typo_flag_is_error_with_suggestion() {
+        let cmd = find_command("train-nc").unwrap();
+        let e = build_config(cmd, &argv(&["--epcohs", "10"])).unwrap_err().to_string();
+        assert!(e.contains("--epcohs") && e.contains("did you mean 'epochs'"), "{e}");
+    }
+
+    #[test]
+    fn flag_cannot_swallow_next_flag() {
+        let cmd = find_command("train-nc").unwrap();
+        let e = build_config(cmd, &argv(&["--epochs", "--seed", "3"])).unwrap_err().to_string();
+        assert!(e.contains("expects a value"), "{e}");
+        let e = build_config(cmd, &argv(&["--epochs"])).unwrap_err().to_string();
+        assert!(e.contains("expects a value"), "{e}");
+    }
+
+    #[test]
+    fn adapter_builds_single_stage_config() {
+        let cmd = find_command("train-nc").unwrap();
+        let cfg = build_config(
+            cmd,
+            &argv(&["--dataset", "amazon", "--epochs", "10", "--num-parts", "2", "--metis",
+                    "--num-workers", "auto", "--lm", "none"]),
+        )
+        .unwrap();
+        let t = cfg.task.as_ref().unwrap();
+        assert_eq!(t.kind, TaskKind::Nc);
+        assert_eq!(t.epochs, 10);
+        assert!(cfg.lm.is_none());
+        assert_eq!(cfg.partition.parts, 2);
+        assert_eq!(cfg.partition.method, crate::config::PartMethod::Metis);
+        assert_eq!(cfg.loader.workers, Workers::Auto);
+        match &cfg.data.source {
+            DataSource::Gen { dataset, size } => {
+                assert_eq!(*dataset, Dataset::Amazon);
+                assert_eq!(*size, Dataset::Amazon.default_size());
+            }
+            other => panic!("wrong source {other:?}"),
+        }
+        // --lm pretrained creates the stage.
+        let cfg = build_config(cmd, &argv(&["--lm", "finetuned"])).unwrap();
+        assert_eq!(cfg.lm.as_ref().unwrap().mode, crate::config::LmMode::Finetuned);
+    }
+
+    #[test]
+    fn set_flag_wins_over_earlier_flags() {
+        let cmd = find_command("train-nc").unwrap();
+        let cfg =
+            build_config(cmd, &argv(&["--epochs", "4", "--set", "task.epochs=9"])).unwrap();
+        assert_eq!(cfg.task.as_ref().unwrap().epochs, 9);
+    }
+
+    #[test]
+    fn unknown_command_suggests() {
+        let e = find_command("trian-nc").unwrap_err().to_string();
+        assert!(e.contains("did you mean 'train-nc'"), "{e}");
+    }
+
+    #[test]
+    fn run_requires_conf() {
+        let cmd = find_command("run").unwrap();
+        let e = build_config(cmd, &argv(&[])).unwrap_err().to_string();
+        assert!(e.contains("requires --conf"), "{e}");
+    }
+
+    #[test]
+    fn every_flag_path_resolves() {
+        // Drive each command with a benign value for every flag so a
+        // typo'd `path:` in the table can never ship.
+        for cmd in COMMANDS {
+            if cmd.flags.iter().any(|f| f.path == "#conf") {
+                continue; // needs a real file; covered elsewhere
+            }
+            let mut args: Vec<String> = Vec::new();
+            for f in cmd.flags {
+                let val = match f.name {
+                    "dataset" => "mag",
+                    "set" => "seed=9",
+                    "lm" => "pretrained",
+                    "loss" => "ce",
+                    "neg" => "joint-16",
+                    "arch" => "rgcn",
+                    "alpha" => "1.2",
+                    "lr" => "0.004",
+                    "num-workers" => "2",
+                    "out" => "tmp_out",
+                    "save-model-path" => "tmp_model.gstf",
+                    "conf" => "schema.json",
+                    "dir" => ".",
+                    _ if f.takes_value => "2",
+                    _ => "",
+                };
+                args.push(format!("--{}", f.name));
+                if f.takes_value {
+                    args.push(val.to_string());
+                }
+            }
+            let cfg = build_config(cmd, &args)
+                .unwrap_or_else(|e| panic!("gs {}: {e}", cmd.name));
+            cfg.validate().unwrap();
+        }
+    }
+}

@@ -1,0 +1,1240 @@
+//! Declarative run configuration (paper §2 / Appendix B).
+//!
+//! GraphStorm's headline property is "graph construction and model
+//! training and inference with just a single command" driven by one
+//! config file.  This module is that surface for graphstorm-rs: a
+//! [`RunConfig`] parsed from JSON (via `util::json` — serde is
+//! unavailable offline) declares the whole run as composable stages
+//!
+//! ```text
+//! data → partition → [lm] → [task (nc|lp|distill)] → [infer] → [serve]
+//! ```
+//!
+//! each a validated typed struct whose defaults live **here and only
+//! here** — `main.rs` holds no literal stage defaults.  Parsing is
+//! strict: unknown keys, type mismatches and inconsistent stage
+//! combinations (e.g. an `lm` stage with an `lp` task) are hard
+//! errors, and unknown keys come with a nearest-key suggestion so a
+//! typo'd `"epcohs"` can never silently train with the default.
+//!
+//! [`cli`] adapts the `gs` subcommands onto this API (every flag is an
+//! override over a config document, `--set stage.key=value` is the
+//! generic escape hatch) and [`pipeline::Pipeline`] executes the
+//! declared stages in order, threading one dataset through them.
+
+pub mod cli;
+pub mod pipeline;
+
+pub use pipeline::{Pipeline, PipelineOutcome};
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+
+use crate::dataloader::autoscale_workers;
+use crate::sampling::NegSampler;
+use crate::serve::MicroBatcherCfg;
+use crate::trainer::lp::LpLoss;
+use crate::trainer::TrainOptions;
+use crate::util::json::{Json, obj};
+
+// ------------------------------------------------------------------ keys
+
+/// Levenshtein edit distance (small inputs: config keys / CLI flags).
+fn levenshtein(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for i in 1..=a.len() {
+        cur[0] = i;
+        for j in 1..=b.len() {
+            let sub = prev[j - 1] + usize::from(a[i - 1] != b[j - 1]);
+            cur[j] = sub.min(prev[j] + 1).min(cur[j - 1] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// The nearest valid key, for "did you mean" suggestions.
+pub fn nearest_key<'a>(key: &str, valid: impl IntoIterator<Item = &'a str>) -> Option<&'a str> {
+    valid.into_iter().min_by_key(|v| levenshtein(key, v))
+}
+
+/// `" (did you mean 'x'?)"` when a plausible neighbor exists, else "".
+pub fn did_you_mean(key: &str, valid: &[&str]) -> String {
+    match nearest_key(key, valid.iter().copied()) {
+        Some(s) if levenshtein(key, s) <= (s.len() / 2).max(2) => {
+            format!(" (did you mean '{s}'?)")
+        }
+        _ => String::new(),
+    }
+}
+
+fn unknown_key(ctx: &str, key: &str, valid: &[&str]) -> anyhow::Error {
+    anyhow!(
+        "unknown key '{key}' in {ctx}{}; valid keys: {}",
+        did_you_mean(key, valid),
+        valid.join(", ")
+    )
+}
+
+// ----------------------------------------------------------- typed reads
+
+fn as_int(ctx: &str, key: &str, v: &Json) -> Result<i64> {
+    match v.as_f64() {
+        Some(f) if f.fract() == 0.0 && f.abs() < 9e15 => Ok(f as i64),
+        Some(f) => bail!("{ctx}.{key} must be an integer, got {f}"),
+        None => bail!("{ctx}.{key} must be a number, got {}", type_name(v)),
+    }
+}
+
+fn take_usize(ctx: &str, key: &str, v: &Json) -> Result<usize> {
+    let n = as_int(ctx, key, v)?;
+    if n < 0 {
+        bail!("{ctx}.{key} must be >= 0, got {n}");
+    }
+    Ok(n as usize)
+}
+
+fn take_u64(ctx: &str, key: &str, v: &Json) -> Result<u64> {
+    let n = as_int(ctx, key, v)?;
+    if n < 0 {
+        bail!("{ctx}.{key} must be >= 0, got {n}");
+    }
+    Ok(n as u64)
+}
+
+fn take_f64(ctx: &str, key: &str, v: &Json) -> Result<f64> {
+    v.as_f64().ok_or_else(|| anyhow!("{ctx}.{key} must be a number, got {}", type_name(v)))
+}
+
+fn take_str<'j>(ctx: &str, key: &str, v: &'j Json) -> Result<&'j str> {
+    v.as_str().ok_or_else(|| anyhow!("{ctx}.{key} must be a string, got {}", type_name(v)))
+}
+
+fn type_name(v: &Json) -> &'static str {
+    match v {
+        Json::Null => "null",
+        Json::Bool(_) => "a bool",
+        Json::Num(_) => "a number",
+        Json::Str(_) => "a string",
+        Json::Arr(_) => "an array",
+        Json::Obj(_) => "an object",
+    }
+}
+
+fn stage_obj<'j>(ctx: &str, v: &'j Json) -> Result<&'j BTreeMap<String, Json>> {
+    v.as_obj().ok_or_else(|| anyhow!("{ctx} must be a JSON object, got {}", type_name(v)))
+}
+
+// --------------------------------------------------------------- loader
+
+/// Loader worker count: a fixed thread count or `"auto"` (resolved
+/// from `std::thread::available_parallelism`, clamped and logged).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Workers {
+    Auto,
+    Fixed(usize),
+}
+
+/// Batch-building pipeline knobs (`loader` stage; CLI `--num-workers`
+/// / `--prefetch`).  Output is bit-identical for any worker count.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoaderCfg {
+    pub workers: Workers,
+    pub prefetch: usize,
+}
+
+impl Default for LoaderCfg {
+    fn default() -> Self {
+        LoaderCfg { workers: Workers::Fixed(1), prefetch: 2 }
+    }
+}
+
+impl LoaderCfg {
+    const KEYS: &'static [&'static str] = &["workers", "prefetch"];
+
+    fn from_json(v: &Json) -> Result<LoaderCfg> {
+        let m = stage_obj("loader", v)?;
+        let mut c = LoaderCfg::default();
+        for (k, v) in m {
+            match k.as_str() {
+                "workers" => {
+                    c.workers = match v {
+                        Json::Str(s) if s == "auto" => Workers::Auto,
+                        Json::Str(s) => bail!(
+                            "loader.workers must be a thread count or \"auto\", got \"{s}\""
+                        ),
+                        v => Workers::Fixed(take_usize("loader", "workers", v)?),
+                    }
+                }
+                "prefetch" => c.prefetch = take_usize("loader", "prefetch", v)?,
+                _ => return Err(unknown_key("loader", k, Self::KEYS)),
+            }
+        }
+        Ok(c)
+    }
+
+    fn to_json(&self) -> Json {
+        let workers = match self.workers {
+            Workers::Auto => Json::from("auto"),
+            Workers::Fixed(n) => Json::from(n),
+        };
+        obj(vec![("workers", workers), ("prefetch", Json::from(self.prefetch))])
+    }
+
+    /// The concrete worker count (resolves `"auto"`, with a log line).
+    pub fn resolve_workers(&self) -> usize {
+        match self.workers {
+            Workers::Fixed(n) => n,
+            Workers::Auto => autoscale_workers(),
+        }
+    }
+
+    /// These knobs as a prefetching-loader config.
+    pub fn prefetch_cfg(&self) -> crate::dataloader::PrefetchConfig {
+        crate::dataloader::PrefetchConfig {
+            n_workers: self.resolve_workers(),
+            depth: self.prefetch,
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        if let Workers::Fixed(0) = self.workers {
+            bail!("loader.workers must be >= 1 (use 1 for serial batch building)");
+        }
+        if self.prefetch == 0 {
+            bail!("loader.prefetch must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+// ----------------------------------------------------------------- data
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dataset {
+    Mag,
+    Amazon,
+    ScaleFree,
+}
+
+impl Dataset {
+    pub fn parse(s: &str) -> Result<Dataset> {
+        Ok(match s {
+            "mag" => Dataset::Mag,
+            "amazon" => Dataset::Amazon,
+            "scale-free" => Dataset::ScaleFree,
+            other => {
+                return Err(anyhow!(
+                    "unknown dataset '{other}'{}; valid: mag, amazon, scale-free",
+                    did_you_mean(other, &["mag", "amazon", "scale-free"])
+                ))
+            }
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dataset::Mag => "mag",
+            Dataset::Amazon => "amazon",
+            Dataset::ScaleFree => "scale-free",
+        }
+    }
+
+    /// Default generator size (papers / items / edges).
+    pub fn default_size(self) -> usize {
+        match self {
+            Dataset::Mag => 4000,
+            Dataset::Amazon => 3000,
+            Dataset::ScaleFree => 100_000,
+        }
+    }
+}
+
+/// Where the graph comes from: a synthetic generator or gconstruct
+/// over tabular files + a schema config.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DataSource {
+    Gen { dataset: Dataset, size: usize },
+    GConstruct { conf: String, dir: String },
+}
+
+/// `data` stage: produce the raw graph (features, labels, tokens).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DataCfg {
+    pub source: DataSource,
+    /// Learnable-embedding width for featureless node types.
+    pub lemb_dim: usize,
+    /// Hashed bag-of-tokens feature width for text nodes (pre-LM).
+    pub text_dim: usize,
+}
+
+impl Default for DataCfg {
+    fn default() -> Self {
+        DataCfg {
+            source: DataSource::Gen { dataset: Dataset::Mag, size: Dataset::Mag.default_size() },
+            lemb_dim: 64,
+            text_dim: 64,
+        }
+    }
+}
+
+impl DataCfg {
+    const KEYS: &'static [&'static str] =
+        &["source", "dataset", "size", "conf", "dir", "lemb_dim", "text_dim"];
+
+    fn from_json(v: &Json) -> Result<DataCfg> {
+        let m = stage_obj("data", v)?;
+        let source = match m.get("source") {
+            None => "gen",
+            Some(v) => take_str("data", "source", v)?,
+        };
+        let mut c = DataCfg::default();
+        match source {
+            "gen" => {
+                let dataset = match m.get("dataset") {
+                    None => Dataset::Mag,
+                    Some(v) => Dataset::parse(take_str("data", "dataset", v)?)?,
+                };
+                let mut size = dataset.default_size();
+                for (k, v) in m {
+                    match k.as_str() {
+                        "source" | "dataset" => {}
+                        "size" => size = take_usize("data", "size", v)?,
+                        "lemb_dim" => c.lemb_dim = take_usize("data", "lemb_dim", v)?,
+                        "text_dim" => c.text_dim = take_usize("data", "text_dim", v)?,
+                        "conf" | "dir" => bail!(
+                            "data.{k} is only valid for source \"gconstruct\" (current source \"gen\")"
+                        ),
+                        _ => return Err(unknown_key("data", k, Self::KEYS)),
+                    }
+                }
+                c.source = DataSource::Gen { dataset, size };
+            }
+            "gconstruct" => {
+                let mut conf = "schema.json".to_string();
+                let mut dir = ".".to_string();
+                for (k, v) in m {
+                    match k.as_str() {
+                        "source" => {}
+                        "conf" => conf = take_str("data", "conf", v)?.to_string(),
+                        "dir" => dir = take_str("data", "dir", v)?.to_string(),
+                        "lemb_dim" => c.lemb_dim = take_usize("data", "lemb_dim", v)?,
+                        "text_dim" => c.text_dim = take_usize("data", "text_dim", v)?,
+                        "dataset" | "size" => bail!(
+                            "data.{k} is only valid for source \"gen\" (current source \"gconstruct\")"
+                        ),
+                        _ => return Err(unknown_key("data", k, Self::KEYS)),
+                    }
+                }
+                c.source = DataSource::GConstruct { conf, dir };
+            }
+            other => bail!(
+                "data.source must be \"gen\" or \"gconstruct\", got \"{other}\"{}",
+                did_you_mean(other, &["gen", "gconstruct"])
+            ),
+        }
+        Ok(c)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs = match &self.source {
+            DataSource::Gen { dataset, size } => vec![
+                ("source", Json::from("gen")),
+                ("dataset", Json::from(dataset.name())),
+                ("size", Json::from(*size)),
+            ],
+            DataSource::GConstruct { conf, dir } => vec![
+                ("source", Json::from("gconstruct")),
+                ("conf", Json::from(conf.as_str())),
+                ("dir", Json::from(dir.as_str())),
+            ],
+        };
+        pairs.push(("lemb_dim", Json::from(self.lemb_dim)));
+        pairs.push(("text_dim", Json::from(self.text_dim)));
+        obj(pairs)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if let DataSource::Gen { size, .. } = self.source {
+            if size == 0 {
+                bail!("data.size must be >= 1");
+            }
+        }
+        if self.lemb_dim == 0 || self.text_dim == 0 {
+            bail!("data.lemb_dim and data.text_dim must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------------ partition
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartMethod {
+    Random,
+    Metis,
+}
+
+impl PartMethod {
+    pub fn name(self) -> &'static str {
+        match self {
+            PartMethod::Random => "random",
+            PartMethod::Metis => "metis",
+        }
+    }
+}
+
+/// `partition` stage: split the graph into `parts` for the simulated
+/// distributed engine.  `parts: 1` keeps a single partition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartitionCfg {
+    pub parts: usize,
+    pub method: PartMethod,
+}
+
+impl Default for PartitionCfg {
+    fn default() -> Self {
+        PartitionCfg { parts: 1, method: PartMethod::Random }
+    }
+}
+
+impl PartitionCfg {
+    const KEYS: &'static [&'static str] = &["parts", "method"];
+
+    fn from_json(v: &Json) -> Result<PartitionCfg> {
+        let m = stage_obj("partition", v)?;
+        let mut c = PartitionCfg::default();
+        for (k, v) in m {
+            match k.as_str() {
+                "parts" => c.parts = take_usize("partition", "parts", v)?,
+                "method" => {
+                    c.method = match take_str("partition", "method", v)? {
+                        "random" => PartMethod::Random,
+                        "metis" => PartMethod::Metis,
+                        other => bail!(
+                            "partition.method must be \"random\" or \"metis\", got \"{other}\"{}",
+                            did_you_mean(other, &["random", "metis"])
+                        ),
+                    }
+                }
+                _ => return Err(unknown_key("partition", k, Self::KEYS)),
+            }
+        }
+        Ok(c)
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("parts", Json::from(self.parts)),
+            ("method", Json::from(self.method.name())),
+        ])
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.parts == 0 {
+            bail!("partition.parts must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------------------- lm
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LmMode {
+    /// MLM-pretrained text embeddings only.
+    Pretrained,
+    /// Pretrain, then fine-tune on the node-classification labels.
+    Finetuned,
+}
+
+impl LmMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            LmMode::Pretrained => "pretrained",
+            LmMode::Finetuned => "finetuned",
+        }
+    }
+}
+
+/// Optional `lm` stage: language-model text embeddings replacing the
+/// hashed bag-of-tokens features before GNN training (paper §3.2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LmCfg {
+    pub mode: LmMode,
+    pub pretrain_epochs: usize,
+    pub finetune_epochs: usize,
+}
+
+impl Default for LmCfg {
+    fn default() -> Self {
+        LmCfg { mode: LmMode::Pretrained, pretrain_epochs: 1, finetune_epochs: 2 }
+    }
+}
+
+impl LmCfg {
+    const KEYS: &'static [&'static str] = &["mode", "pretrain_epochs", "finetune_epochs"];
+
+    fn from_json(v: &Json) -> Result<LmCfg> {
+        let m = stage_obj("lm", v)?;
+        let mut c = LmCfg::default();
+        for (k, v) in m {
+            match k.as_str() {
+                "mode" => {
+                    c.mode = match take_str("lm", "mode", v)? {
+                        "pretrained" => LmMode::Pretrained,
+                        "finetuned" => LmMode::Finetuned,
+                        other => bail!(
+                            "lm.mode must be \"pretrained\" or \"finetuned\", got \"{other}\"{} \
+                             (drop the lm stage entirely for hashed-token features)",
+                            did_you_mean(other, &["pretrained", "finetuned"])
+                        ),
+                    }
+                }
+                "pretrain_epochs" => c.pretrain_epochs = take_usize("lm", "pretrain_epochs", v)?,
+                "finetune_epochs" => c.finetune_epochs = take_usize("lm", "finetune_epochs", v)?,
+                _ => return Err(unknown_key("lm", k, Self::KEYS)),
+            }
+        }
+        Ok(c)
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("mode", Json::from(self.mode.name())),
+            ("pretrain_epochs", Json::from(self.pretrain_epochs)),
+            ("finetune_epochs", Json::from(self.finetune_epochs)),
+        ])
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.pretrain_epochs == 0 {
+            bail!("lm.pretrain_epochs must be >= 1");
+        }
+        if self.mode == LmMode::Finetuned && self.finetune_epochs == 0 {
+            bail!("lm.finetune_epochs must be >= 1 for mode \"finetuned\"");
+        }
+        Ok(())
+    }
+}
+
+// ----------------------------------------------------------------- task
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    Nc,
+    Lp,
+    Distill,
+}
+
+impl TaskKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            TaskKind::Nc => "nc",
+            TaskKind::Lp => "lp",
+            TaskKind::Distill => "distill",
+        }
+    }
+}
+
+/// Parse a negative-sampler spec (`joint-32`, `local-joint-16`,
+/// `uniform-8`, `in-batch`).
+pub fn parse_neg(s: &str) -> Result<NegSampler> {
+    if s == "in-batch" {
+        return Ok(NegSampler::InBatch { k: 32 });
+    }
+    let (kind, k) = s
+        .rsplit_once('-')
+        .with_context(|| format!("task.neg must look like joint-32 / uniform-8 / in-batch, got '{s}'"))?;
+    let k: usize = k.parse().with_context(|| format!("task.neg '{s}': bad count '{k}'"))?;
+    Ok(match kind {
+        "joint" => NegSampler::Joint { k },
+        "local-joint" => NegSampler::LocalJoint { k },
+        "uniform" => NegSampler::Uniform { k },
+        other => {
+            return Err(anyhow!(
+                "unknown negative sampler '{other}'{}; valid: joint, local-joint, uniform, in-batch",
+                did_you_mean(other, &["joint", "local-joint", "uniform", "in-batch"])
+            ))
+        }
+    })
+}
+
+/// Canonical spelling of a negative sampler (inverse of [`parse_neg`]).
+pub fn neg_name(s: NegSampler) -> String {
+    match s {
+        NegSampler::Joint { k } => format!("joint-{k}"),
+        NegSampler::LocalJoint { k } => format!("local-joint-{k}"),
+        NegSampler::Uniform { k } => format!("uniform-{k}"),
+        NegSampler::InBatch { .. } => "in-batch".to_string(),
+    }
+}
+
+/// `task` stage: the training loop.  `loss` / `neg` /
+/// `max_edges_per_epoch` are link-prediction-only; `teacher_epochs` is
+/// distillation-only — setting them for another kind is a hard error.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskCfg {
+    pub kind: TaskKind,
+    pub arch: String,
+    pub epochs: usize,
+    pub lr: f32,
+    /// Save the trained model to this GSTF path (nc only).
+    pub save_model: Option<String>,
+    /// LP loss (lp only).
+    pub loss: LpLoss,
+    /// LP negative sampler (lp only).
+    pub neg: NegSampler,
+    /// LP per-epoch training-edge cap (lp only).
+    pub max_edges_per_epoch: usize,
+    /// GNN teacher epochs before distilling (distill only).
+    pub teacher_epochs: usize,
+}
+
+impl Default for TaskCfg {
+    fn default() -> Self {
+        TaskCfg {
+            kind: TaskKind::Nc,
+            arch: "rgcn".to_string(),
+            epochs: 3,
+            lr: 3e-3,
+            save_model: None,
+            loss: LpLoss::Contrastive,
+            neg: NegSampler::Joint { k: 32 },
+            max_edges_per_epoch: 3200,
+            teacher_epochs: 5,
+        }
+    }
+}
+
+impl TaskCfg {
+    const KEYS: &'static [&'static str] = &[
+        "kind",
+        "arch",
+        "epochs",
+        "lr",
+        "save_model",
+        "loss",
+        "neg",
+        "max_edges_per_epoch",
+        "teacher_epochs",
+    ];
+
+    fn from_json(v: &Json) -> Result<TaskCfg> {
+        let m = stage_obj("task", v)?;
+        let kind = match m.get("kind") {
+            None => TaskKind::Nc,
+            Some(v) => match take_str("task", "kind", v)? {
+                "nc" => TaskKind::Nc,
+                "lp" => TaskKind::Lp,
+                "distill" => TaskKind::Distill,
+                other => bail!(
+                    "task.kind must be \"nc\", \"lp\" or \"distill\", got \"{other}\"{}",
+                    did_you_mean(other, &["nc", "lp", "distill"])
+                ),
+            },
+        };
+        let only = |key: &str, wanted: TaskKind| -> Result<()> {
+            if kind != wanted {
+                bail!(
+                    "task.{key} is only valid for kind \"{}\" (current kind \"{}\")",
+                    wanted.name(),
+                    kind.name()
+                );
+            }
+            Ok(())
+        };
+        let mut c = TaskCfg { kind, ..TaskCfg::default() };
+        for (k, v) in m {
+            match k.as_str() {
+                "kind" => {}
+                "arch" => c.arch = take_str("task", "arch", v)?.to_string(),
+                "epochs" => c.epochs = take_usize("task", "epochs", v)?,
+                "lr" => c.lr = take_f64("task", "lr", v)? as f32,
+                "save_model" => {
+                    only("save_model", TaskKind::Nc)?;
+                    c.save_model = Some(take_str("task", "save_model", v)?.to_string());
+                }
+                "loss" => {
+                    only("loss", TaskKind::Lp)?;
+                    c.loss = match take_str("task", "loss", v)? {
+                        "contrastive" => LpLoss::Contrastive,
+                        "ce" | "cross-entropy" => LpLoss::CrossEntropy,
+                        other => bail!(
+                            "task.loss must be \"contrastive\" or \"ce\", got \"{other}\"{}",
+                            did_you_mean(other, &["contrastive", "ce"])
+                        ),
+                    };
+                }
+                "neg" => {
+                    only("neg", TaskKind::Lp)?;
+                    c.neg = parse_neg(take_str("task", "neg", v)?)?;
+                }
+                "max_edges_per_epoch" => {
+                    only("max_edges_per_epoch", TaskKind::Lp)?;
+                    c.max_edges_per_epoch = take_usize("task", "max_edges_per_epoch", v)?;
+                }
+                "teacher_epochs" => {
+                    only("teacher_epochs", TaskKind::Distill)?;
+                    c.teacher_epochs = take_usize("task", "teacher_epochs", v)?;
+                }
+                _ => return Err(unknown_key("task", k, Self::KEYS)),
+            }
+        }
+        Ok(c)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("kind", Json::from(self.kind.name())),
+            ("arch", Json::from(self.arch.as_str())),
+            ("epochs", Json::from(self.epochs)),
+            ("lr", Json::from(self.lr as f64)),
+        ];
+        match self.kind {
+            TaskKind::Nc => {
+                if let Some(p) = &self.save_model {
+                    pairs.push(("save_model", Json::from(p.as_str())));
+                }
+            }
+            TaskKind::Lp => {
+                pairs.push((
+                    "loss",
+                    Json::from(match self.loss {
+                        LpLoss::Contrastive => "contrastive",
+                        LpLoss::CrossEntropy => "ce",
+                    }),
+                ));
+                pairs.push(("neg", Json::Str(neg_name(self.neg))));
+                pairs.push(("max_edges_per_epoch", Json::from(self.max_edges_per_epoch)));
+            }
+            TaskKind::Distill => {
+                pairs.push(("teacher_epochs", Json::from(self.teacher_epochs)));
+            }
+        }
+        obj(pairs)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.epochs == 0 {
+            bail!("task.epochs must be >= 1");
+        }
+        if !(self.lr > 0.0 && self.lr.is_finite()) {
+            bail!("task.lr must be a positive finite number");
+        }
+        if self.kind == TaskKind::Distill && self.teacher_epochs == 0 {
+            bail!("task.teacher_epochs must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------- infer
+
+/// `infer` stage: offline full-graph inference, sharded GSTF output
+/// (the precompute the serving cache warms from).
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferCfg {
+    pub out: String,
+    pub shard_size: usize,
+    /// Node type to infer over; `None` = the dataset's target type.
+    pub ntype: Option<usize>,
+    /// Engine architecture; `None` = the task's arch (or "rgcn").
+    pub arch: Option<String>,
+    pub out_dim: usize,
+}
+
+impl Default for InferCfg {
+    fn default() -> Self {
+        InferCfg {
+            out: "offline_emb".to_string(),
+            shard_size: 4096,
+            ntype: None,
+            arch: None,
+            out_dim: 8,
+        }
+    }
+}
+
+impl InferCfg {
+    const KEYS: &'static [&'static str] = &["out", "shard_size", "ntype", "arch", "out_dim"];
+
+    fn from_json(v: &Json) -> Result<InferCfg> {
+        let m = stage_obj("infer", v)?;
+        let mut c = InferCfg::default();
+        for (k, v) in m {
+            match k.as_str() {
+                "out" => c.out = take_str("infer", "out", v)?.to_string(),
+                "shard_size" => c.shard_size = take_usize("infer", "shard_size", v)?,
+                "ntype" => c.ntype = Some(take_usize("infer", "ntype", v)?),
+                "arch" => c.arch = Some(take_str("infer", "arch", v)?.to_string()),
+                "out_dim" => c.out_dim = take_usize("infer", "out_dim", v)?,
+                _ => return Err(unknown_key("infer", k, Self::KEYS)),
+            }
+        }
+        Ok(c)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("out", Json::from(self.out.as_str())),
+            ("shard_size", Json::from(self.shard_size)),
+        ];
+        if let Some(nt) = self.ntype {
+            pairs.push(("ntype", Json::from(nt)));
+        }
+        if let Some(a) = &self.arch {
+            pairs.push(("arch", Json::from(a.as_str())));
+        }
+        pairs.push(("out_dim", Json::from(self.out_dim)));
+        obj(pairs)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.shard_size == 0 {
+            bail!("infer.shard_size must be >= 1");
+        }
+        if self.out_dim == 0 {
+            bail!("infer.out_dim must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------- serve
+
+/// `serve` stage: closed-loop Zipf traffic through the micro-batcher,
+/// uncached arm then warmed-cache arm over the same trace; predictions
+/// must be bit-identical across arms.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeCfg {
+    pub requests: usize,
+    pub alpha: f64,
+    pub clients: usize,
+    pub cache: usize,
+    pub max_batch: usize,
+    pub deadline_us: u64,
+    /// Engine architecture; `None` = the task's arch (or "rgcn").
+    pub arch: Option<String>,
+    pub out_dim: usize,
+}
+
+impl Default for ServeCfg {
+    fn default() -> Self {
+        ServeCfg {
+            requests: 4000,
+            alpha: 1.1,
+            clients: 4,
+            cache: 4096,
+            max_batch: 32,
+            deadline_us: 200,
+            arch: None,
+            out_dim: 8,
+        }
+    }
+}
+
+impl ServeCfg {
+    const KEYS: &'static [&'static str] = &[
+        "requests",
+        "alpha",
+        "clients",
+        "cache",
+        "max_batch",
+        "deadline_us",
+        "arch",
+        "out_dim",
+    ];
+
+    fn from_json(v: &Json) -> Result<ServeCfg> {
+        let m = stage_obj("serve", v)?;
+        let mut c = ServeCfg::default();
+        for (k, v) in m {
+            match k.as_str() {
+                "requests" => c.requests = take_usize("serve", "requests", v)?,
+                "alpha" => c.alpha = take_f64("serve", "alpha", v)?,
+                "clients" => c.clients = take_usize("serve", "clients", v)?,
+                "cache" => c.cache = take_usize("serve", "cache", v)?,
+                "max_batch" => c.max_batch = take_usize("serve", "max_batch", v)?,
+                "deadline_us" => c.deadline_us = take_u64("serve", "deadline_us", v)?,
+                "arch" => c.arch = Some(take_str("serve", "arch", v)?.to_string()),
+                "out_dim" => c.out_dim = take_usize("serve", "out_dim", v)?,
+                _ => return Err(unknown_key("serve", k, Self::KEYS)),
+            }
+        }
+        Ok(c)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("requests", Json::from(self.requests)),
+            ("alpha", Json::Num(self.alpha)),
+            ("clients", Json::from(self.clients)),
+            ("cache", Json::from(self.cache)),
+            ("max_batch", Json::from(self.max_batch)),
+            ("deadline_us", Json::from(self.deadline_us as usize)),
+        ];
+        if let Some(a) = &self.arch {
+            pairs.push(("arch", Json::from(a.as_str())));
+        }
+        pairs.push(("out_dim", Json::from(self.out_dim)));
+        obj(pairs)
+    }
+
+    /// The micro-batcher knobs this stage declares.
+    pub fn batcher(&self) -> MicroBatcherCfg {
+        MicroBatcherCfg {
+            max_batch: self.max_batch,
+            deadline: std::time::Duration::from_micros(self.deadline_us),
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.requests == 0 || self.clients == 0 || self.max_batch == 0 {
+            bail!("serve.requests, serve.clients and serve.max_batch must be >= 1");
+        }
+        if !(self.alpha > 0.0 && self.alpha.is_finite()) {
+            bail!("serve.alpha must be a positive finite number");
+        }
+        if self.out_dim == 0 {
+            bail!("serve.out_dim must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------------ RunConfig
+
+/// A whole declared run: which stages execute and with what knobs.
+/// This is the single source of truth for every stage default.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunConfig {
+    pub seed: u64,
+    pub loader: LoaderCfg,
+    pub data: DataCfg,
+    pub partition: PartitionCfg,
+    pub lm: Option<LmCfg>,
+    pub task: Option<TaskCfg>,
+    pub infer: Option<InferCfg>,
+    pub serve: Option<ServeCfg>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            seed: 7,
+            loader: LoaderCfg::default(),
+            data: DataCfg::default(),
+            partition: PartitionCfg::default(),
+            lm: None,
+            task: None,
+            infer: None,
+            serve: None,
+        }
+    }
+}
+
+const TOP_KEYS: &[&str] =
+    &["seed", "loader", "data", "partition", "lm", "task", "infer", "serve"];
+
+impl RunConfig {
+    pub fn from_json(doc: &Json) -> Result<RunConfig> {
+        let m = stage_obj("run config", doc)?;
+        let mut c = RunConfig::default();
+        for (k, v) in m {
+            match k.as_str() {
+                "seed" => c.seed = take_u64("run config", "seed", v)?,
+                "loader" => c.loader = LoaderCfg::from_json(v)?,
+                "data" => c.data = DataCfg::from_json(v)?,
+                "partition" => c.partition = PartitionCfg::from_json(v)?,
+                "lm" => c.lm = Some(LmCfg::from_json(v)?),
+                "task" => c.task = Some(TaskCfg::from_json(v)?),
+                "infer" => c.infer = Some(InferCfg::from_json(v)?),
+                "serve" => c.serve = Some(ServeCfg::from_json(v)?),
+                _ => return Err(unknown_key("run config", k, TOP_KEYS)),
+            }
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn parse_str(text: &str) -> Result<RunConfig> {
+        Self::from_json(&Json::parse(text)?)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read run config {}", path.display()))?;
+        Self::parse_str(&text).with_context(|| format!("in run config {}", path.display()))
+    }
+
+    /// Cross-stage consistency checks (per-stage checks run too).
+    pub fn validate(&self) -> Result<()> {
+        self.loader.validate()?;
+        self.data.validate()?;
+        self.partition.validate()?;
+        if let Some(lm) = &self.lm {
+            lm.validate()?;
+            match &self.task {
+                Some(t) if t.kind == TaskKind::Nc => {}
+                Some(t) => bail!(
+                    "lm stage is incompatible with a \"{}\" task: LM fine-tuning and the \
+                     embed pass are wired to node classification (use kind \"nc\" or drop \"lm\")",
+                    t.kind.name()
+                ),
+                None => bail!("lm stage requires a task stage with kind \"nc\""),
+            }
+        }
+        if let Some(t) = &self.task {
+            t.validate()?;
+        }
+        if let Some(i) = &self.infer {
+            i.validate()?;
+        }
+        if let Some(s) = &self.serve {
+            s.validate()?;
+        }
+        Ok(())
+    }
+
+    /// The fully-resolved config: every default materialized, `"auto"`
+    /// worker counts resolved, engine archs inherited from the task.
+    pub fn resolved(&self) -> RunConfig {
+        let mut c = self.clone();
+        c.loader.workers = Workers::Fixed(c.loader.resolve_workers());
+        let task_arch =
+            c.task.as_ref().map(|t| t.arch.clone()).unwrap_or_else(|| "rgcn".to_string());
+        if let Some(i) = &mut c.infer {
+            i.arch.get_or_insert_with(|| task_arch.clone());
+        }
+        if let Some(s) = &mut c.serve {
+            s.arch.get_or_insert_with(|| task_arch.clone());
+        }
+        c
+    }
+
+    /// Serialize with every present stage fully spelled out, so
+    /// `gs validate-conf` shows exactly what a run would use.
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("seed", Json::from(self.seed as usize)),
+            ("loader", self.loader.to_json()),
+            ("data", self.data.to_json()),
+            ("partition", self.partition.to_json()),
+        ];
+        if let Some(lm) = &self.lm {
+            pairs.push(("lm", lm.to_json()));
+        }
+        if let Some(t) = &self.task {
+            pairs.push(("task", t.to_json()));
+        }
+        if let Some(i) = &self.infer {
+            pairs.push(("infer", i.to_json()));
+        }
+        if let Some(s) = &self.serve {
+            pairs.push(("serve", s.to_json()));
+        }
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// The stage sequence this config declares, for display.
+    pub fn stage_names(&self) -> Vec<String> {
+        let mut s = vec!["data".to_string(), "partition".to_string()];
+        if self.lm.is_some() {
+            s.push("lm".to_string());
+        }
+        if let Some(t) = &self.task {
+            s.push(format!("task({})", t.kind.name()));
+        }
+        if self.infer.is_some() {
+            s.push("infer".to_string());
+        }
+        if self.serve.is_some() {
+            s.push("serve".to_string());
+        }
+        s
+    }
+
+    /// The `TrainOptions` this run's stages share — the ONE place CLI
+    /// runs construct them.
+    pub fn train_options(&self) -> TrainOptions {
+        let t = self.task.clone().unwrap_or_default();
+        TrainOptions {
+            lr: t.lr,
+            epochs: t.epochs,
+            seed: self.seed,
+            n_workers: self.partition.parts.max(1),
+            loader_workers: self.loader.resolve_workers(),
+            prefetch: self.loader.prefetch,
+            log_every: 0,
+            verbose: true,
+        }
+    }
+}
+
+// ------------------------------------------------------------ overrides
+
+/// Assign `value` (parsed as JSON if it parses, else a bare string) at
+/// dot-separated `path` inside `doc`, creating intermediate objects.
+/// This backs `--set stage.key=value` and the per-flag CLI overrides.
+pub fn set_path(doc: &mut Json, path: &str, raw: &str) -> Result<()> {
+    let raw = raw.trim();
+    let val = Json::parse(raw).unwrap_or_else(|_| Json::Str(raw.to_string()));
+    let parts: Vec<&str> = path.trim().split('.').collect();
+    if parts.iter().any(|p| p.is_empty()) {
+        bail!("bad --set path '{path}': empty segment");
+    }
+    let mut cur = doc;
+    for (i, p) in parts.iter().enumerate() {
+        let Json::Obj(m) = cur else {
+            bail!(
+                "--set {path}: '{}' is not an object in the config document",
+                parts[..i].join(".")
+            );
+        };
+        if i + 1 == parts.len() {
+            m.insert(p.to_string(), val);
+            return Ok(());
+        }
+        cur = m.entry(p.to_string()).or_insert_with(|| Json::Obj(BTreeMap::new()));
+    }
+    unreachable!("split('.') yields at least one segment")
+}
+
+/// Apply one `--set stage.key=value` assignment to a config document.
+pub fn apply_set(doc: &mut Json, assignment: &str) -> Result<()> {
+    let (path, raw) = assignment
+        .split_once('=')
+        .with_context(|| format!("--set expects stage.key=value, got '{assignment}'"))?;
+    set_path(doc, path, raw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_from_empty_doc() {
+        let c = RunConfig::parse_str("{}").unwrap();
+        assert_eq!(c, RunConfig::default());
+        assert_eq!(c.seed, 7);
+        assert!(c.task.is_none() && c.lm.is_none() && c.infer.is_none() && c.serve.is_none());
+        assert_eq!(c.stage_names(), vec!["data", "partition"]);
+    }
+
+    #[test]
+    fn unknown_key_suggests_nearest() {
+        let e = RunConfig::parse_str(r#"{"task": {"epcohs": 10}}"#).unwrap_err().to_string();
+        assert!(e.contains("epcohs") && e.contains("did you mean 'epochs'"), "{e}");
+        let e = RunConfig::parse_str(r#"{"sede": 3}"#).unwrap_err().to_string();
+        assert!(e.contains("did you mean 'seed'"), "{e}");
+    }
+
+    #[test]
+    fn type_errors_are_hard() {
+        assert!(RunConfig::parse_str(r#"{"seed": "7"}"#).is_err());
+        assert!(RunConfig::parse_str(r#"{"task": {"epochs": 2.5}}"#).is_err());
+        assert!(RunConfig::parse_str(r#"{"task": {"epochs": -1}}"#).is_err());
+        assert!(RunConfig::parse_str(r#"{"loader": 3}"#).is_err());
+    }
+
+    #[test]
+    fn kind_scoped_keys_rejected() {
+        let e = RunConfig::parse_str(r#"{"task": {"kind": "nc", "loss": "ce"}}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("only valid for kind \"lp\""), "{e}");
+        assert!(RunConfig::parse_str(r#"{"task": {"kind": "lp", "teacher_epochs": 2}}"#).is_err());
+        assert!(RunConfig::parse_str(r#"{"data": {"source": "gen", "conf": "x.json"}}"#).is_err());
+    }
+
+    #[test]
+    fn lm_requires_nc_task() {
+        let e = RunConfig::parse_str(
+            r#"{"lm": {"mode": "finetuned"}, "task": {"kind": "lp"}}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("lm stage is incompatible"), "{e}");
+        assert!(RunConfig::parse_str(r#"{"lm": {"mode": "pretrained"}}"#).is_err());
+        assert!(RunConfig::parse_str(
+            r#"{"lm": {"mode": "finetuned"}, "task": {"kind": "nc"}}"#
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn roundtrip_resolved() {
+        let c = RunConfig::parse_str(
+            r#"{"seed": 11,
+                "loader": {"workers": 3, "prefetch": 4},
+                "data": {"dataset": "amazon", "size": 500},
+                "partition": {"parts": 2, "method": "metis"},
+                "task": {"kind": "lp", "loss": "ce", "neg": "uniform-8", "epochs": 2},
+                "serve": {"requests": 100, "deadline_us": 300}}"#,
+        )
+        .unwrap()
+        .resolved();
+        let back = RunConfig::parse_str(&c.to_json().to_string_pretty()).unwrap();
+        assert_eq!(c, back);
+        // And a second round through the resolver is a fixed point.
+        assert_eq!(back.resolved(), back);
+    }
+
+    #[test]
+    fn set_overrides_apply_in_order() {
+        let mut doc = Json::parse(r#"{"task": {"kind": "nc", "epochs": 3}}"#).unwrap();
+        apply_set(&mut doc, "task.epochs=4").unwrap();
+        apply_set(&mut doc, "task.epochs=6").unwrap();
+        apply_set(&mut doc, "seed=11").unwrap();
+        apply_set(&mut doc, "lm.mode=finetuned").unwrap(); // creates the stage
+        let c = RunConfig::from_json(&doc).unwrap();
+        assert_eq!(c.task.as_ref().unwrap().epochs, 6);
+        assert_eq!(c.seed, 11);
+        assert_eq!(c.lm.as_ref().unwrap().mode, LmMode::Finetuned);
+        assert!(apply_set(&mut doc, "no-equals-sign").is_err());
+        // A typo'd --set path still dies in typed validation.
+        apply_set(&mut doc, "task.epcohs=9").unwrap();
+        assert!(RunConfig::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn workers_auto_resolves_in_range() {
+        let c = RunConfig::parse_str(r#"{"loader": {"workers": "auto"}}"#).unwrap();
+        assert_eq!(c.loader.workers, Workers::Auto);
+        let n = c.loader.resolve_workers();
+        assert!((1..=crate::dataloader::MAX_AUTO_WORKERS).contains(&n), "auto -> {n}");
+        let r = c.resolved();
+        assert_eq!(r.loader.workers, Workers::Fixed(n));
+        assert!(RunConfig::parse_str(r#"{"loader": {"workers": "many"}}"#).is_err());
+        assert!(RunConfig::parse_str(r#"{"loader": {"workers": 0}}"#).is_err());
+    }
+
+    #[test]
+    fn neg_roundtrip() {
+        for s in ["joint-32", "local-joint-16", "uniform-8", "in-batch"] {
+            assert_eq!(neg_name(parse_neg(s).unwrap()), s);
+        }
+        assert!(parse_neg("jiont-32").is_err());
+    }
+
+    #[test]
+    fn train_options_come_from_config() {
+        let c = RunConfig::parse_str(
+            r#"{"seed": 5, "partition": {"parts": 3},
+                "loader": {"workers": 2, "prefetch": 4},
+                "task": {"kind": "nc", "epochs": 9, "lr": 0.01}}"#,
+        )
+        .unwrap();
+        let o = c.train_options();
+        assert_eq!(o.epochs, 9);
+        assert_eq!(o.seed, 5);
+        assert_eq!(o.n_workers, 3);
+        assert_eq!(o.loader_workers, 2);
+        assert_eq!(o.prefetch, 4);
+        assert!((o.lr - 0.01).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,305 @@
+//! The pipeline executor: run a [`RunConfig`]'s declared stages in
+//! order, threading one dataset/runtime through them — the paper's
+//! "single command" property (`gs run --conf pipeline.json`).
+//!
+//! Stage semantics are identical to invoking each stage's subcommand
+//! separately with the same seeds: dataset construction, partitioning
+//! and every training/inference loop are deterministic functions of
+//! the config, so a `gs run` pipeline reports bit-identical metrics to
+//! the equivalent multi-command sequence (covered by
+//! `tests/config.rs`).
+
+use anyhow::{bail, Result};
+
+use super::{
+    DataSource, Dataset, LmMode, PartMethod, PartitionCfg, RunConfig, TaskKind,
+};
+use crate::datagen::{self, amazon, mag, scale_free};
+use crate::dataloader::GsDataset;
+use crate::graph::{GraphStats, HeteroGraph};
+use crate::partition::{metis_like_partition, random_partition, PartitionBook};
+use crate::runtime::Runtime;
+use crate::sampling::NegSampler;
+use crate::serve::{
+    run_serve_bench, ClosedLoopStats, InferenceEngine, OfflineInference, OfflineReport,
+    ServeBenchParams,
+};
+use crate::trainer::lp::LpReport;
+use crate::trainer::nc::NcReport;
+use crate::trainer::{DistillTrainer, LmTrainer, LpTrainer, NodeTrainer, TrainOptions};
+
+/// What a pipeline run produced, stage by stage.
+#[derive(Debug, Clone, Default)]
+pub struct PipelineOutcome {
+    pub stats: Option<GraphStats>,
+    pub nc: Option<NcReport>,
+    pub lp: Option<LpReport>,
+    pub distill_mse: Option<f32>,
+    pub infer: Option<OfflineReport>,
+    pub serve_uncached: Option<ClosedLoopStats>,
+    pub serve_warmed: Option<ClosedLoopStats>,
+}
+
+/// Executes the stages a [`RunConfig`] declares.
+pub struct Pipeline {
+    /// The fully-resolved config (defaults materialized, `"auto"`
+    /// workers resolved — once, with a log line).
+    pub cfg: RunConfig,
+}
+
+impl Pipeline {
+    pub fn new(cfg: RunConfig) -> Result<Pipeline> {
+        cfg.validate()?;
+        Ok(Pipeline { cfg: cfg.resolved() })
+    }
+
+    /// The partition book for a graph under this config's `partition`
+    /// stage (seed differs between gen and gconstruct sources to stay
+    /// bit-compatible with both legacy subcommand paths).
+    fn book(g: &HeteroGraph, pc: &PartitionCfg, seed: u64) -> PartitionBook {
+        if pc.parts <= 1 {
+            PartitionBook::single(&g.num_nodes)
+        } else if pc.method == PartMethod::Metis {
+            metis_like_partition(g, pc.parts, seed)
+        } else {
+            random_partition(g, pc.parts, seed)
+        }
+    }
+
+    /// `data` + `partition` stages: construct the bound dataset.
+    pub fn build_dataset(&self) -> Result<GsDataset> {
+        let cfg = &self.cfg;
+        let mut ds = match &cfg.data.source {
+            DataSource::Gen { dataset, size } => {
+                let raw = match dataset {
+                    Dataset::Mag => mag::generate(&mag::MagConfig {
+                        n_papers: *size,
+                        ..Default::default()
+                    }),
+                    Dataset::Amazon => {
+                        let world = amazon::generate_world(&amazon::ArConfig {
+                            n_items: *size,
+                            ..Default::default()
+                        });
+                        amazon::build_variant(&world, amazon::ArVariant::HeteroV2)
+                    }
+                    Dataset::ScaleFree => scale_free::generate(&scale_free::ScaleFreeConfig {
+                        n_edges: *size,
+                        ..Default::default()
+                    }),
+                };
+                let book = Self::book(&raw.graph, &cfg.partition, cfg.seed);
+                datagen::build_dataset(raw, book, cfg.data.lemb_dim, cfg.seed)
+            }
+            DataSource::GConstruct { conf, dir } => {
+                let gcfg =
+                    crate::gconstruct::GConstructConfig::load(std::path::Path::new(conf))?;
+                let raw = crate::gconstruct::construct(&gcfg, std::path::Path::new(dir))?;
+                let book = Self::book(&raw.graph, &cfg.partition, gcfg.seed);
+                crate::gconstruct::bind_dataset(&gcfg, raw, book, cfg.data.lemb_dim)?
+            }
+        };
+        // Text nodes get hashed bag-of-tokens features; an `lm` stage
+        // later overwrites them with learned embeddings.
+        ds.ensure_text_features(cfg.data.text_dim);
+        Ok(ds)
+    }
+
+    /// Run every declared stage in order.
+    pub fn run(&self) -> Result<PipelineOutcome> {
+        let cfg = &self.cfg;
+        let mut out = PipelineOutcome::default();
+
+        // ---- data + partition ------------------------------------------
+        let mut ds = self.build_dataset()?;
+        let s = ds.graph.stats();
+        match &cfg.data.source {
+            DataSource::Gen { dataset, .. } => println!(
+                "dataset={} nodes={} edges={} ntypes={} etypes={}",
+                dataset.name(),
+                s.num_nodes,
+                s.num_edges,
+                s.num_ntypes,
+                s.num_etypes
+            ),
+            DataSource::GConstruct { .. } => println!(
+                "constructed: nodes={} edges={} ntypes={} etypes={} parts={}",
+                s.num_nodes, s.num_edges, s.num_ntypes, s.num_etypes, ds.engine.book.n_parts
+            ),
+        }
+        out.stats = Some(s);
+
+        let opts = cfg.train_options();
+        let rt = if cfg.lm.is_some() || cfg.task.is_some() {
+            Some(Runtime::from_default_dir()?)
+        } else {
+            None
+        };
+
+        // ---- lm ---------------------------------------------------------
+        if let Some(lmc) = &cfg.lm {
+            let rt = rt.as_ref().expect("lm stage validated to need the runtime");
+            let lm = LmTrainer::default();
+            let (_, st) = lm.pretrain_mlm(
+                rt,
+                &ds,
+                ds.target_ntype,
+                &TrainOptions { epochs: lmc.pretrain_epochs, ..opts.clone() },
+            )?;
+            let params = if lmc.mode == LmMode::Finetuned {
+                let (_, st2) = lm.finetune_nc(
+                    rt,
+                    &ds,
+                    &st.params_host()?,
+                    &TrainOptions { epochs: lmc.finetune_epochs, ..opts.clone() },
+                )?;
+                st2.params_host()?
+            } else {
+                st.params_host()?
+            };
+            let secs = lm.embed_all(rt, &mut ds, &params, &opts)?;
+            println!("lm embed stage: {secs:.1}s");
+        }
+
+        // ---- task -------------------------------------------------------
+        if let Some(task) = &cfg.task {
+            let rt = rt.as_ref().expect("task stage needs the runtime");
+            match task.kind {
+                TaskKind::Nc => {
+                    let arch = &task.arch;
+                    let trainer = NodeTrainer::new(
+                        &format!("{arch}_nc_train"),
+                        &format!("{arch}_nc_logits"),
+                    );
+                    let (report, st) = trainer.fit(rt, &mut ds, &opts)?;
+                    println!(
+                        "val_acc={:.4} test_acc={:.4} losses={:?}",
+                        report.val_acc, report.test_acc, report.epoch_losses
+                    );
+                    if let Some(path) = &task.save_model {
+                        st.save(std::path::Path::new(path))?;
+                        println!("saved model to {path}");
+                    }
+                    out.nc = Some(report);
+                }
+                TaskKind::Lp => {
+                    let artifact = match task.neg {
+                        NegSampler::Uniform { k } => format!("rgcn_lp_uniform_k{k}_train"),
+                        s => format!("rgcn_lp_joint_k{}_train", s.k()),
+                    };
+                    let mut trainer =
+                        LpTrainer::new(&artifact, "rgcn_lp_emb", task.loss, task.neg);
+                    trainer.max_train_edges = Some(task.max_edges_per_epoch);
+                    let (report, _) = trainer.fit(rt, &mut ds, &opts)?;
+                    println!(
+                        "val_mrr={:.4} test_mrr={:.4} best_epoch={} epoch_time={:.1}s",
+                        report.val_mrr,
+                        report.test_mrr,
+                        report.best_epoch,
+                        report.epoch_times.iter().sum::<f64>()
+                            / report.epoch_times.len().max(1) as f64
+                    );
+                    out.lp = Some(report);
+                }
+                TaskKind::Distill => {
+                    let arch = &task.arch;
+                    let teacher = NodeTrainer::new(
+                        &format!("{arch}_nc_train"),
+                        &format!("{arch}_nc_logits"),
+                    );
+                    let topts = TrainOptions { epochs: task.teacher_epochs, ..opts.clone() };
+                    let (trep, tst) = teacher.fit(rt, &mut ds, &topts)?;
+                    println!(
+                        "teacher val_acc={:.4} test_acc={:.4}",
+                        trep.val_acc, trep.test_acc
+                    );
+                    let dt = DistillTrainer::default();
+                    let (mse, _st) = dt.distill(rt, &ds, &tst.params_host()?, &opts)?;
+                    println!("distill mse={mse:.5}");
+                    out.distill_mse = Some(mse);
+                }
+            }
+        }
+
+        // ---- infer ------------------------------------------------------
+        if let Some(ic) = &cfg.infer {
+            // `resolved()` (Pipeline::new) materialized the arch; don't
+            // restate the default here.
+            let arch = ic.arch.as_deref().expect("resolved() fills infer.arch");
+            let (engine, backend) = InferenceEngine::auto(&ds, arch, ic.out_dim, cfg.seed)?;
+            let off = OfflineInference {
+                shard_size: ic.shard_size,
+                prefetch: cfg.loader.prefetch_cfg(),
+            };
+            let ntype = ic.ntype.unwrap_or(ds.target_ntype) as u32;
+            let rep = off.run(&engine, ntype, std::path::Path::new(&ic.out))?;
+            println!(
+                "offline inference [{backend}]: {} rows x {} dims in {:.2}s ({:.0} rows/s) -> {} shards under {}",
+                rep.rows,
+                rep.dim,
+                rep.secs,
+                rep.rows as f64 / rep.secs.max(1e-9),
+                rep.shards.len(),
+                ic.out,
+            );
+            out.infer = Some(rep);
+        }
+
+        // ---- serve ------------------------------------------------------
+        if let Some(sc) = &cfg.serve {
+            let arch = sc.arch.as_deref().expect("resolved() fills serve.arch");
+            let (engine, backend) = InferenceEngine::auto(&ds, arch, sc.out_dim, cfg.seed)?;
+            let nt = ds.target_ntype as u32;
+            let n_nodes = ds.graph.num_nodes[nt as usize];
+            let batcher = sc.batcher();
+            println!(
+                "serve-bench [{backend}]: {} requests, zipf(a={}) over {n_nodes} nodes, {} clients, max_batch={}, deadline={}us",
+                sc.requests,
+                sc.alpha,
+                sc.clients,
+                batcher.max_batch,
+                batcher.deadline.as_micros()
+            );
+            let rep = run_serve_bench(
+                &engine,
+                &ServeBenchParams {
+                    seed: cfg.seed,
+                    requests: sc.requests,
+                    alpha: sc.alpha,
+                    clients: sc.clients,
+                    cache: sc.cache,
+                    batcher,
+                },
+            )?;
+            println!(
+                "  uncached: p50 {:>7.0}us  p99 {:>7.0}us  {:>8.0} req/s  hit {:>5.1}%",
+                rep.uncached.p50_us,
+                rep.uncached.p99_us,
+                rep.uncached.rps,
+                100.0 * rep.uncached.hit_rate
+            );
+            println!(
+                "  warmed:   p50 {:>7.0}us  p99 {:>7.0}us  {:>8.0} req/s  hit {:>5.1}%  (cache cap {}, {} distinct)",
+                rep.warmed.p50_us,
+                rep.warmed.p99_us,
+                rep.warmed.rps,
+                100.0 * rep.warmed.hit_rate,
+                sc.cache,
+                rep.distinct
+            );
+            println!(
+                "  bit-identical across arms + repeats: {}; warmed speedup {:.2}x",
+                rep.identical,
+                rep.warmed.rps / rep.uncached.rps.max(1e-9)
+            );
+            let identical = rep.identical;
+            out.serve_uncached = Some(rep.uncached);
+            out.serve_warmed = Some(rep.warmed);
+            if !identical {
+                bail!("cached serving diverged from uncached recompute");
+            }
+        }
+
+        Ok(out)
+    }
+}

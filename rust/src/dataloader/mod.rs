@@ -13,7 +13,9 @@
 
 pub mod prefetch;
 
-pub use prefetch::{batch_seed, run_pipeline, PrefetchConfig};
+pub use prefetch::{
+    autoscale_workers, batch_seed, run_pipeline, PrefetchConfig, MAX_AUTO_WORKERS,
+};
 
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;

@@ -35,6 +35,22 @@ impl Default for PrefetchConfig {
     }
 }
 
+/// Upper clamp for `--num-workers auto`: beyond this, batch building
+/// saturates the device step and extra threads only add contention.
+pub const MAX_AUTO_WORKERS: usize = 16;
+
+/// Resolve `loader_workers: "auto"` (`--num-workers auto`) from the
+/// machine: `available_parallelism`, clamped to
+/// `[1, MAX_AUTO_WORKERS]`, with a log line so runs record what the
+/// knob resolved to.  Output stays bit-identical for any value — only
+/// throughput changes.
+pub fn autoscale_workers() -> usize {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let n = cores.clamp(1, MAX_AUTO_WORKERS);
+    eprintln!("[loader] workers=auto -> {n} ({cores} cores, clamp [1, {MAX_AUTO_WORKERS}])");
+    n
+}
+
 /// Deterministic per-batch RNG seed: depends only on
 /// (seed, epoch, batch index), never on which thread builds the batch.
 #[inline]

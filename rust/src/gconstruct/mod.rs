@@ -197,6 +197,24 @@ pub fn construct(cfg: &GConstructConfig, base_dir: &Path) -> Result<RawData> {
     })
 }
 
+/// Bind constructed raw data to a partition book (the pipeline's
+/// `partition` stage for gconstruct sources): `build_dataset` with the
+/// schema's seed, then honor the schema's explicit LP split if given
+/// (the default split came from `build_dataset`).
+pub fn bind_dataset(
+    cfg: &GConstructConfig,
+    raw: RawData,
+    book: PartitionBook,
+    lemb_dim: usize,
+) -> Result<GsDataset> {
+    let mut ds = build_dataset(raw, book, lemb_dim, cfg.seed);
+    if let (Some(lp), Some(pct)) = (&mut ds.lp, cfg.lp_split.as_ref()) {
+        let mut rng = Rng::seed_from(cfg.seed ^ 0x1b);
+        lp.split = crate::datagen::make_splits(lp.split.len(), &mut rng, pct[0], pct[1]);
+    }
+    Ok(ds)
+}
+
 /// construct + partition + bind: the single-command path
 /// (`gs gconstruct --conf schema.json --num-parts 2`).
 pub fn construct_dataset(
@@ -213,14 +231,7 @@ pub fn construct_dataset(
     } else {
         crate::partition::random_partition(&raw.graph, n_parts, cfg.seed)
     };
-    let mut ds = build_dataset(raw, book, 64, cfg.seed);
-    // LP split defaults came from build_dataset; honor config's explicit
-    // LP split if given.
-    if let (Some(lp), Some(pct)) = (&mut ds.lp, cfg.lp_split.as_ref()) {
-        let mut rng = Rng::seed_from(cfg.seed ^ 0x1b);
-        lp.split = crate::datagen::make_splits(lp.split.len(), &mut rng, pct[0], pct[1]);
-    }
-    Ok(ds)
+    bind_dataset(cfg, raw, book, 64)
 }
 
 /// Convenience for tests: write a dataset's tabular form to a dir.

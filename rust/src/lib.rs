@@ -11,6 +11,7 @@
 //!
 //! See DESIGN.md for the full system inventory and experiment index.
 
+pub mod config;
 pub mod datagen;
 pub mod dataloader;
 pub mod dist;

@@ -1,134 +1,30 @@
-//! `gs` — the GraphStorm-rs command line (paper Appendix B).
+//! `gs` — the GraphStorm-rs command line (paper §2 / Appendix B).
 //!
-//!   gs gconstruct --conf schema.json --dir DATA [--num-parts N] [--metis]
-//!   gs gen-data   --dataset mag|amazon|scale-free [--size N]
-//!   gs train-nc   --dataset mag|amazon [--arch rgcn] [--epochs E] [--num-parts N]
-//!   gs train-lp   --dataset amazon [--loss contrastive|ce] [--neg joint-32|...]
-//!   gs smoke      # runtime sanity check
+//! The CLI is a thin shell over the declarative run-config API
+//! (`graphstorm::config`): a JSON file declares the whole pipeline
 //!
-//! Argument parsing is hand-rolled (offline build — DESIGN.md §1).
+//!   gs run --conf examples/pipeline_nc.json [--set stage.key=value]
+//!
+//! and every classic subcommand (`gen-data`, `train-nc`, `train-lp`,
+//! `distill`, `infer`, `serve-bench`, `gconstruct`) is an adapter that
+//! builds the same config from flags — each flag is just an override
+//! path into the document, so defaults live in exactly one place (the
+//! config structs) and a typo'd flag or config key is a hard error
+//! with a suggestion.  `gs validate-conf` dry-runs a file and prints
+//! the fully-resolved config.  See docs/CONFIG.md for the schema.
 
-use anyhow::{bail, Context, Result};
-use graphstorm::datagen::{amazon, mag, scale_free};
-use graphstorm::dataloader::{GsDataset, PrefetchConfig};
-use graphstorm::partition::{metis_like_partition, random_partition, PartitionBook};
+use anyhow::Result;
+use graphstorm::config::{cli, Pipeline};
 use graphstorm::runtime::Runtime;
-use graphstorm::sampling::NegSampler;
-use graphstorm::serve::{
-    cache_key, closed_loop, EmbeddingCache, InferenceEngine, MicroBatcherCfg, OfflineInference,
-    Zipf,
-};
-use graphstorm::trainer::lp::LpLoss;
-use graphstorm::trainer::{LmTrainer, LpTrainer, NodeTrainer, TrainOptions};
-use graphstorm::util::Rng;
-
-struct Args {
-    cmd: String,
-    flags: std::collections::HashMap<String, String>,
-}
-
-impl Args {
-    fn parse() -> Result<Args> {
-        let mut it = std::env::args().skip(1);
-        let cmd = it.next().unwrap_or_else(|| "help".to_string());
-        let mut flags = std::collections::HashMap::new();
-        while let Some(a) = it.next() {
-            if let Some(name) = a.strip_prefix("--") {
-                let val = it.next().unwrap_or_else(|| "true".to_string());
-                flags.insert(name.to_string(), val);
-            } else {
-                bail!("unexpected argument '{a}'");
-            }
-        }
-        Ok(Args { cmd, flags })
-    }
-
-    fn get(&self, name: &str, default: &str) -> String {
-        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
-    }
-
-    fn get_usize(&self, name: &str, default: usize) -> usize {
-        self.flags.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
-    }
-}
-
-fn parse_neg(s: &str) -> Result<NegSampler> {
-    if s == "in-batch" {
-        return Ok(NegSampler::InBatch { k: 32 });
-    }
-    let (kind, k) = s.rsplit_once('-').context("neg sampler like joint-32")?;
-    let k: usize = k.parse()?;
-    Ok(match kind {
-        "joint" => NegSampler::Joint { k },
-        "local-joint" => NegSampler::LocalJoint { k },
-        "uniform" => NegSampler::Uniform { k },
-        _ => bail!("unknown sampler '{kind}'"),
-    })
-}
-
-fn make_dataset(args: &Args) -> Result<GsDataset> {
-    let n_parts = args.get_usize("num-parts", 1);
-    let seed = args.get_usize("seed", 7) as u64;
-    let raw = match args.get("dataset", "mag").as_str() {
-        "mag" => mag::generate(&mag::MagConfig {
-            n_papers: args.get_usize("size", 4000),
-            ..Default::default()
-        }),
-        "amazon" => {
-            let world = amazon::generate_world(&amazon::ArConfig {
-                n_items: args.get_usize("size", 3000),
-                ..Default::default()
-            });
-            amazon::build_variant(&world, amazon::ArVariant::HeteroV2)
-        }
-        "scale-free" => scale_free::generate(&scale_free::ScaleFreeConfig {
-            n_edges: args.get_usize("size", 100_000),
-            ..Default::default()
-        }),
-        other => bail!("unknown dataset '{other}'"),
-    };
-    let book = if n_parts <= 1 {
-        PartitionBook::single(&raw.graph.num_nodes)
-    } else if args.flags.contains_key("metis") {
-        metis_like_partition(&raw.graph, n_parts, seed)
-    } else {
-        random_partition(&raw.graph, n_parts, seed)
-    };
-    let mut ds = graphstorm::datagen::build_dataset(raw, book, 64, seed);
-    // Without an LM stage, text nodes get hashed bag-of-tokens features.
-    ds.ensure_text_features(64);
-    Ok(ds)
-}
-
-/// The serving engine for a dataset: the real `{arch}_nc_logits`
-/// artifact when PJRT can execute it, else the deterministic surrogate
-/// over a synthetic spec — so `infer` / `serve-bench` run end-to-end
-/// on machines without artifacts (execution gated as everywhere else).
-fn serve_engine<'a>(args: &Args, ds: &'a GsDataset) -> Result<(InferenceEngine<'a>, &'static str)> {
-    InferenceEngine::auto(
-        ds,
-        &args.get("arch", "rgcn"),
-        args.get_usize("out-dim", 8),
-        args.get_usize("seed", 7) as u64,
-    )
-}
-
-fn opts(args: &Args) -> TrainOptions {
-    TrainOptions {
-        lr: args.get("lr", "3e-3").parse().unwrap_or(3e-3),
-        epochs: args.get_usize("epochs", 3),
-        seed: args.get_usize("seed", 7) as u64,
-        n_workers: args.get_usize("num-parts", 1).max(1),
-        loader_workers: args.get_usize("num-workers", 1).max(1),
-        prefetch: args.get_usize("prefetch", 2).max(1),
-        log_every: 0,
-        verbose: true,
-    }
-}
 
 fn main() -> Result<()> {
-    let args = Args::parse()?;
-    match args.cmd.as_str() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest = if args.is_empty() { &args[..] } else { &args[1..] };
+    match cmd {
+        "help" | "--help" | "-h" => {
+            println!("{}", cli::help_text());
+        }
         "smoke" => {
             let rt = Runtime::from_default_dir()?;
             let exe = rt.load("smoke")?;
@@ -138,213 +34,16 @@ fn main() -> Result<()> {
                 exe.spec.outputs.len()
             );
         }
-        "gen-data" => {
-            let ds = make_dataset(&args)?;
-            let s = ds.graph.stats();
-            println!(
-                "dataset={} nodes={} edges={} ntypes={} etypes={}",
-                args.get("dataset", "mag"),
-                s.num_nodes,
-                s.num_edges,
-                s.num_ntypes,
-                s.num_etypes
-            );
+        "validate-conf" => {
+            let spec = cli::find_command("validate-conf")?;
+            let cfg = cli::build_config(spec, rest)?.resolved();
+            println!("stages: {}", cfg.stage_names().join(" -> "));
+            println!("{}", cfg.to_json().to_string_pretty());
         }
-        "gconstruct" => {
-            let conf = args.get("conf", "schema.json");
-            let dir = args.get("dir", ".");
-            let cfg = graphstorm::gconstruct::GConstructConfig::load(std::path::Path::new(&conf))?;
-            let ds = graphstorm::gconstruct::construct_dataset(
-                &cfg,
-                std::path::Path::new(&dir),
-                args.get_usize("num-parts", 1),
-                args.flags.contains_key("metis"),
-            )?;
-            let s = ds.graph.stats();
-            println!(
-                "constructed: nodes={} edges={} ntypes={} etypes={} parts={}",
-                s.num_nodes, s.num_edges, s.num_ntypes, s.num_etypes, ds.engine.book.n_parts
-            );
-        }
-        "train-nc" => {
-            let rt = Runtime::from_default_dir()?;
-            let mut ds = make_dataset(&args)?;
-            let arch = args.get("arch", "rgcn");
-            // Optional LM stage: --lm pretrained|finetuned|none
-            let lm_mode = args.get("lm", "none");
-            if lm_mode != "none" {
-                let lm = LmTrainer::default();
-                let o = opts(&args);
-                let (_, st) = lm.pretrain_mlm(
-                    &rt,
-                    &ds,
-                    ds.target_ntype,
-                    &TrainOptions { epochs: 1, ..o.clone() },
-                )?;
-                let params = if lm_mode == "finetuned" {
-                    let (_, st2) = lm.finetune_nc(
-                        &rt,
-                        &ds,
-                        &st.params_host()?,
-                        &TrainOptions { epochs: 2, ..o.clone() },
-                    )?;
-                    st2.params_host()?
-                } else {
-                    st.params_host()?
-                };
-                let secs = lm.embed_all(&rt, &mut ds, &params, &o)?;
-                println!("lm embed stage: {secs:.1}s");
-            }
-            let trainer =
-                NodeTrainer::new(&format!("{arch}_nc_train"), &format!("{arch}_nc_logits"));
-            let (report, st) = trainer.fit(&rt, &mut ds, &opts(&args))?;
-            println!(
-                "val_acc={:.4} test_acc={:.4} losses={:?}",
-                report.val_acc, report.test_acc, report.epoch_losses
-            );
-            if let Some(path) = args.flags.get("save-model-path") {
-                st.save(std::path::Path::new(path))?;
-                println!("saved model to {path}");
-            }
-        }
-        "train-lp" => {
-            let rt = Runtime::from_default_dir()?;
-            let mut ds = make_dataset(&args)?;
-            let loss = match args.get("loss", "contrastive").as_str() {
-                "contrastive" => LpLoss::Contrastive,
-                "ce" | "cross-entropy" => LpLoss::CrossEntropy,
-                other => bail!("unknown loss '{other}'"),
-            };
-            let neg = parse_neg(&args.get("neg", "joint-32"))?;
-            let artifact = match neg {
-                NegSampler::Uniform { k } => format!("rgcn_lp_uniform_k{k}_train"),
-                s => format!("rgcn_lp_joint_k{}_train", s.k()),
-            };
-            let mut trainer = LpTrainer::new(&artifact, "rgcn_lp_emb", loss, neg);
-            trainer.max_train_edges = Some(args.get_usize("max-edges-per-epoch", 3200));
-            let (report, _) = trainer.fit(&rt, &mut ds, &opts(&args))?;
-            println!(
-                "val_mrr={:.4} test_mrr={:.4} best_epoch={} epoch_time={:.1}s",
-                report.val_mrr,
-                report.test_mrr,
-                report.best_epoch,
-                report.epoch_times.iter().sum::<f64>() / report.epoch_times.len().max(1) as f64
-            );
-        }
-        "infer" => {
-            // Offline full-graph inference: stream every node of the
-            // target type through the engine and write GSTF shards
-            // (the precompute the serving cache warms from).
-            let ds = make_dataset(&args)?;
-            let (engine, backend) = serve_engine(&args, &ds)?;
-            let out = args.get("out", "offline_emb");
-            let off = OfflineInference {
-                shard_size: args.get_usize("shard-size", 4096),
-                prefetch: PrefetchConfig {
-                    n_workers: args.get_usize("num-workers", 1).max(1),
-                    depth: args.get_usize("prefetch", 2).max(1),
-                },
-            };
-            let ntype = args.get_usize("ntype", ds.target_ntype) as u32;
-            let rep = off.run(&engine, ntype, std::path::Path::new(&out))?;
-            println!(
-                "offline inference [{backend}]: {} rows x {} dims in {:.2}s ({:.0} rows/s) -> {} shards under {out}",
-                rep.rows,
-                rep.dim,
-                rep.secs,
-                rep.rows as f64 / rep.secs.max(1e-9),
-                rep.shards.len(),
-            );
-        }
-        "serve-bench" => {
-            // Closed-loop synthetic serving traffic (Zipf-distributed
-            // seeds) through the micro-batcher: an uncached arm, then
-            // a warmed-cache arm over the same trace; predictions must
-            // be bit-identical across arms.
-            let ds = make_dataset(&args)?;
-            let (engine, backend) = serve_engine(&args, &ds)?;
-            let seed = args.get_usize("seed", 7) as u64;
-            let n_req = args.get_usize("requests", 4000);
-            let alpha: f64 = args.get("alpha", "1.1").parse().unwrap_or(1.1);
-            let clients = args.get_usize("clients", 4);
-            let cap = args.get_usize("cache", 4096);
-            let cfg = MicroBatcherCfg {
-                max_batch: args.get_usize("max-batch", 32),
-                deadline: std::time::Duration::from_micros(
-                    args.get_usize("deadline-us", 200) as u64
-                ),
-            };
-            let nt = ds.target_ntype as u32;
-            let n_nodes = ds.graph.num_nodes[nt as usize];
-            let zipf = Zipf::new(n_nodes, alpha);
-            let mut rng = Rng::seed_from(seed ^ 0x5e12);
-            let trace: Vec<(u32, u32)> =
-                (0..n_req).map(|_| (nt, zipf.sample(&mut rng) as u32)).collect();
-            println!(
-                "serve-bench [{backend}]: {n_req} requests, zipf(a={alpha}) over {n_nodes} nodes, {clients} clients, max_batch={}, deadline={}us",
-                cfg.max_batch,
-                cfg.deadline.as_micros()
-            );
-
-            let mut nocache = EmbeddingCache::new(0);
-            let (s0, replies0) = closed_loop(&engine, cfg.clone(), &mut nocache, &trace, clients)?;
-            println!(
-                "  uncached: p50 {:>7.0}us  p99 {:>7.0}us  {:>8.0} req/s  hit {:>5.1}%",
-                s0.p50_us, s0.p99_us, s0.rps, 100.0 * s0.hit_rate
-            );
-
-            // Warm the cache with the canonical prediction of every
-            // distinct node in the trace (what `gs infer` shards
-            // hold), batching distinct seeds to engine capacity —
-            // canonical sampling makes the batched rows bit-identical
-            // to per-node recompute.
-            let mut cache = EmbeddingCache::new(cap);
-            cache.set_generation(engine.generation());
-            let mut sc = engine.make_scratch();
-            let mut seen = std::collections::HashSet::new();
-            let distinct: Vec<(u32, u32)> =
-                trace.iter().filter(|&&p| seen.insert(p)).copied().collect();
-            let c = engine.out_dim();
-            for chunk in distinct.chunks(engine.capacity()) {
-                let rows = engine.forward(&mut sc, chunk)?;
-                for (i, &(nt, id)) in chunk.iter().enumerate() {
-                    cache.put(cache_key(nt, id), &rows[i * c..(i + 1) * c]);
-                }
-            }
-            let (s1, replies1) = closed_loop(&engine, cfg, &mut cache, &trace, clients)?;
-            println!(
-                "  warmed:   p50 {:>7.0}us  p99 {:>7.0}us  {:>8.0} req/s  hit {:>5.1}%  (cache cap {cap}, {} distinct)",
-                s1.p50_us, s1.p99_us, s1.rps, 100.0 * s1.hit_rate, seen.len()
-            );
-
-            let mut expected: std::collections::HashMap<(u32, u32), Vec<f32>> =
-                std::collections::HashMap::new();
-            let mut identical = true;
-            for (k, v) in replies0.into_iter().chain(replies1) {
-                identical &= expected.entry(k).or_insert_with(|| v.clone()) == &v;
-            }
-            println!(
-                "  bit-identical across arms + repeats: {identical}; warmed speedup {:.2}x",
-                s1.rps / s0.rps.max(1e-9)
-            );
-            if !identical {
-                bail!("cached serving diverged from uncached recompute");
-            }
-        }
-        _ => {
-            println!("gs — GraphStorm-rs (see README.md)\n");
-            println!("  gs smoke");
-            println!("  gs gen-data --dataset mag|amazon|scale-free [--size N]");
-            println!("  gs gconstruct --conf schema.json --dir DATA [--num-parts N] [--metis]");
-            println!("  gs train-nc --dataset mag [--arch rgcn|gcn|sage|gat|rgat|hgt] [--lm none|pretrained|finetuned]");
-            println!("  gs train-lp --dataset amazon [--loss contrastive|ce] [--neg in-batch|joint-K|uniform-K]");
-            println!("  gs infer --dataset mag [--out DIR] [--shard-size N]   offline full-graph inference shards");
-            println!("  gs serve-bench --dataset mag [--requests N] [--alpha A] [--clients C]");
-            println!("              [--cache CAP] [--max-batch B] [--deadline-us US]");
-            println!("              closed-loop Zipf traffic through the micro-batcher + embedding cache");
-            println!("  common:     [--num-workers N] [--prefetch D]   pipelined batch building");
-            println!("              (N loader threads sample+assemble ahead of the device step;");
-            println!("               output is bit-identical for any N — default 1 = serial)");
+        name => {
+            let spec = cli::find_command(name)?;
+            let cfg = cli::build_config(spec, rest)?;
+            Pipeline::new(cfg)?.run()?;
         }
     }
     Ok(())

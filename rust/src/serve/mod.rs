@@ -31,11 +31,82 @@ pub mod offline;
 pub use batcher::{closed_loop, ClosedLoopStats, MicroBatcher, MicroBatcherCfg, ServeRequest};
 pub use cache::{cache_key, EmbTableSource, EmbeddingCache, RowSource};
 pub use engine::{InferenceEngine, ServeScratch};
-pub use offline::{OfflineInference, OfflineReport};
+pub use offline::{read_shards, OfflineInference, OfflineReport};
 
+use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::util::Rng;
+
+/// Parameters for the canonical two-arm closed-loop serving benchmark
+/// (`gs serve-bench` / the `serve` pipeline stage): a Zipf trace is
+/// replayed uncached, then again over a warmed cache, and predictions
+/// must be bit-identical across arms.
+#[derive(Debug, Clone)]
+pub struct ServeBenchParams {
+    pub seed: u64,
+    pub requests: usize,
+    pub alpha: f64,
+    pub clients: usize,
+    /// Warmed-arm cache capacity (rows).
+    pub cache: usize,
+    pub batcher: MicroBatcherCfg,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct ServeBenchReport {
+    pub uncached: ClosedLoopStats,
+    pub warmed: ClosedLoopStats,
+    /// Distinct seeds in the trace (the warm-up working set).
+    pub distinct: usize,
+    /// Every prediction identical across arms and repeats.
+    pub identical: bool,
+}
+
+/// Run the two-arm closed-loop bench over `engine`'s dataset: Zipf
+/// traffic over the target node type through the micro-batcher, one
+/// uncached arm, then a warmed-cache arm over the same trace (the
+/// warm-up stores the canonical prediction of every distinct node,
+/// batched to engine capacity — canonical sampling makes those rows
+/// bit-identical to per-node recompute).
+pub fn run_serve_bench(
+    engine: &InferenceEngine,
+    p: &ServeBenchParams,
+) -> Result<ServeBenchReport> {
+    let ds = engine.ds;
+    let nt = ds.target_ntype as u32;
+    let n_nodes = ds.graph.num_nodes[nt as usize];
+    let zipf = Zipf::new(n_nodes, p.alpha);
+    let mut rng = Rng::seed_from(p.seed ^ 0x5e12);
+    let trace: Vec<(u32, u32)> =
+        (0..p.requests).map(|_| (nt, zipf.sample(&mut rng) as u32)).collect();
+
+    let mut nocache = EmbeddingCache::new(0);
+    let (uncached, replies0) =
+        closed_loop(engine, p.batcher.clone(), &mut nocache, &trace, p.clients)?;
+
+    let mut cache = EmbeddingCache::new(p.cache);
+    cache.set_generation(engine.generation());
+    let mut sc = engine.make_scratch();
+    let mut seen = std::collections::HashSet::new();
+    let distinct: Vec<(u32, u32)> = trace.iter().filter(|&&q| seen.insert(q)).copied().collect();
+    let c = engine.out_dim();
+    for chunk in distinct.chunks(engine.capacity()) {
+        let rows = engine.forward(&mut sc, chunk)?;
+        for (i, &(nt, id)) in chunk.iter().enumerate() {
+            cache.put(cache_key(nt, id), &rows[i * c..(i + 1) * c]);
+        }
+    }
+    let (warmed, replies1) =
+        closed_loop(engine, p.batcher.clone(), &mut cache, &trace, p.clients)?;
+
+    let mut expected: std::collections::HashMap<(u32, u32), Vec<f32>> = Default::default();
+    let mut identical = true;
+    for (k, v) in replies0.into_iter().chain(replies1) {
+        identical &= expected.entry(k).or_insert_with(|| v.clone()) == &v;
+    }
+    Ok(ServeBenchReport { uncached, warmed, distinct: distinct.len(), identical })
+}
 
 /// Lock-free log₂-bucketed latency histogram (microsecond buckets:
 /// bucket *i* holds durations in `[2^(i-1), 2^i) µs`).  Percentiles

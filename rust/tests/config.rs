@@ -1,0 +1,234 @@
+//! Config-layer integration tests: the declarative run-config API,
+//! the CLI adapters over it, and the `gs run` single-command pipeline.
+//!
+//! The headline acceptance test: a `gs run` pipeline must report
+//! metrics bit-identical to the same stages invoked as separate
+//! subcommands with matching seeds.  The always-on variant covers
+//! data -> partition -> infer (surrogate backend, no artifacts
+//! needed); the train-including variant gates on the PJRT runtime
+//! like every other executing test.
+
+use graphstorm::config::{cli, Pipeline, RunConfig};
+use graphstorm::serve::read_shards;
+
+fn argv(args: &[&str]) -> Vec<String> {
+    args.iter().map(|s| s.to_string()).collect()
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("gs_cfg_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// `gs run --conf F` == `gs gen-data ...` + `gs infer ...`: same
+/// stats, same report, bit-identical shard bytes.
+#[test]
+fn run_conf_matches_multi_command_invocation() {
+    let dir = tmp_dir("e2e");
+    let out_run = dir.join("emb_run");
+    let out_cli = dir.join("emb_cli");
+    let conf = dir.join("pipeline.json");
+    std::fs::write(
+        &conf,
+        format!(
+            r#"{{"seed": 7,
+                "data": {{"dataset": "mag", "size": 600}},
+                "partition": {{"parts": 2, "method": "metis"}},
+                "infer": {{"out": "{}", "shard_size": 256}}}}"#,
+            out_run.display()
+        ),
+    )
+    .unwrap();
+
+    // Single command: gs run --conf pipeline.json
+    let run = cli::find_command("run").unwrap();
+    let cfg = cli::build_config(run, &argv(&["--conf", conf.to_str().unwrap()])).unwrap();
+    let one = Pipeline::new(cfg).unwrap().run().unwrap();
+
+    // Multi command: gs gen-data ... then gs infer ... (same seeds).
+    let gen = cli::find_command("gen-data").unwrap();
+    let gen_cfg = cli::build_config(
+        gen,
+        &argv(&["--dataset", "mag", "--size", "600", "--num-parts", "2", "--metis"]),
+    )
+    .unwrap();
+    let a = Pipeline::new(gen_cfg).unwrap().run().unwrap();
+
+    let infer = cli::find_command("infer").unwrap();
+    let infer_cfg = cli::build_config(
+        infer,
+        &argv(&[
+            "--dataset", "mag", "--size", "600", "--num-parts", "2", "--metis",
+            "--out", out_cli.to_str().unwrap(), "--shard-size", "256",
+        ]),
+    )
+    .unwrap();
+    let b = Pipeline::new(infer_cfg).unwrap().run().unwrap();
+
+    // Reported metrics are identical...
+    assert_eq!(one.stats, a.stats);
+    assert_eq!(one.stats, b.stats);
+    let (r1, r2) = (one.infer.unwrap(), b.infer.unwrap());
+    assert_eq!(r1.rows, r2.rows);
+    assert_eq!(r1.dim, r2.dim);
+    assert_eq!(r1.shards.len(), r2.shards.len());
+    // ...and the written predictions are bit-identical.
+    let s1 = read_shards(&out_run, r1.ntype).unwrap();
+    let s2 = read_shards(&out_cli, r2.ntype).unwrap();
+    assert!(!s1.is_empty());
+    assert_eq!(s1, s2, "gs run shards diverge from multi-command shards");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Same acceptance test including the train stage — gated on PJRT
+/// like every executing test (`runtime_if_available`).
+#[test]
+fn run_conf_with_train_matches_separate_train() {
+    if graphstorm::runtime::runtime_if_available().is_none() {
+        eprintln!("skipping: AOT artifacts / PJRT backend unavailable");
+        return;
+    }
+    let dir = tmp_dir("e2e_train");
+    let conf = dir.join("pipeline.json");
+    std::fs::write(
+        &conf,
+        format!(
+            r#"{{"seed": 7,
+                "data": {{"dataset": "mag", "size": 600}},
+                "partition": {{"parts": 2}},
+                "task": {{"kind": "nc", "epochs": 2}},
+                "infer": {{"out": "{}", "shard_size": 256}}}}"#,
+            dir.join("emb").display()
+        ),
+    )
+    .unwrap();
+    let run = cli::find_command("run").unwrap();
+    let cfg = cli::build_config(run, &argv(&["--conf", conf.to_str().unwrap()])).unwrap();
+    let one = Pipeline::new(cfg).unwrap().run().unwrap();
+
+    let tr = cli::find_command("train-nc").unwrap();
+    let tr_cfg = cli::build_config(
+        tr,
+        &argv(&["--dataset", "mag", "--size", "600", "--num-parts", "2", "--epochs", "2"]),
+    )
+    .unwrap();
+    let b = Pipeline::new(tr_cfg).unwrap().run().unwrap();
+
+    let (n1, n2) = (one.nc.unwrap(), b.nc.unwrap());
+    assert_eq!(n1.epoch_losses, n2.epoch_losses, "train losses diverge");
+    assert_eq!(n1.val_acc, n2.val_acc);
+    assert_eq!(n1.test_acc, n2.test_acc);
+    let r1 = one.infer.unwrap();
+    assert!(r1.rows > 0 && r1.dim > 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The serve stage runs end-to-end through the pipeline (surrogate
+/// backend) and its internal bit-identity gate holds.
+#[test]
+fn pipeline_serve_stage_runs() {
+    let cfg = RunConfig::parse_str(
+        r#"{"seed": 7,
+            "data": {"dataset": "mag", "size": 400},
+            "serve": {"requests": 200, "clients": 2, "cache": 256,
+                      "max_batch": 8, "deadline_us": 200}}"#,
+    )
+    .unwrap();
+    let out = Pipeline::new(cfg).unwrap().run().unwrap();
+    let (u, w) = (out.serve_uncached.unwrap(), out.serve_warmed.unwrap());
+    assert_eq!(u.requests, 200);
+    assert_eq!(w.requests, 200);
+    assert!(w.hit_rate > 0.0, "warmed arm must hit the cache");
+}
+
+/// The shipped example run configs must parse, validate and resolve.
+#[test]
+fn shipped_examples_are_valid() {
+    for name in ["pipeline_nc.json", "pipeline_lp_serve.json"] {
+        let path = std::path::Path::new("../examples").join(name);
+        let cfg = RunConfig::load(&path).unwrap_or_else(|e| panic!("{name}: {e}"));
+        cfg.validate().unwrap();
+        let resolved = cfg.resolved();
+        // Resolution is a fixed point and round-trips through JSON.
+        let back = RunConfig::parse_str(&resolved.to_json().to_string_pretty()).unwrap();
+        assert_eq!(resolved, back, "{name} does not round-trip");
+    }
+    // pipeline_nc.json must declare the paper's single-command
+    // sequence: data -> partition -> train -> offline infer.
+    let nc = RunConfig::load(std::path::Path::new("../examples/pipeline_nc.json")).unwrap();
+    assert_eq!(nc.stage_names(), vec!["data", "partition", "task(nc)", "infer"]);
+}
+
+/// Override precedence end-to-end: file < --set, applied in order.
+#[test]
+fn set_overrides_file_values() {
+    let dir = tmp_dir("set");
+    let conf = dir.join("c.json");
+    std::fs::write(&conf, r#"{"seed": 3, "task": {"kind": "nc", "epochs": 2}}"#).unwrap();
+    let run = cli::find_command("run").unwrap();
+    let cfg = cli::build_config(
+        run,
+        &argv(&[
+            "--conf", conf.to_str().unwrap(),
+            "--set", "task.epochs=5",
+            "--set", "seed=11",
+            "--set", "task.epochs=8",
+        ]),
+    )
+    .unwrap();
+    assert_eq!(cfg.seed, 11);
+    assert_eq!(cfg.task.as_ref().unwrap().epochs, 8);
+    // Unknown keys through --set still die with a suggestion.
+    let e = cli::build_config(
+        run,
+        &argv(&["--conf", conf.to_str().unwrap(), "--set", "task.epcohs=9"]),
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(e.contains("did you mean 'epochs'"), "{e}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A dataset built by the pipeline is the same dataset the legacy
+/// gconstruct single-call path builds (shared bind step).
+#[test]
+fn gconstruct_through_pipeline_matches_direct() {
+    let dir = tmp_dir("gc");
+    let mut rng = graphstorm::util::Rng::seed_from(5);
+    let venues: Vec<usize> = (0..60).map(|_| rng.gen_range(2)).collect();
+    let mut papers = String::from("node_id,text,venue\n");
+    for (i, &v) in venues.iter().enumerate() {
+        papers += &format!("p{i},w{v}a w{v}b,venue{v}\n");
+    }
+    let mut cites = String::from("src,dst\n");
+    for i in 0..60usize {
+        cites += &format!("p{i},p{}\n", (i + 1) % 60);
+    }
+    std::fs::write(dir.join("papers.csv"), papers).unwrap();
+    std::fs::write(dir.join("cites.csv"), cites).unwrap();
+    std::fs::write(dir.join("authors.csv"), "node_id\na0\n").unwrap();
+    std::fs::write(dir.join("writes.csv"), "src,dst\na0,p0\n").unwrap();
+    std::fs::write(dir.join("schema.json"), graphstorm::gconstruct::config::EXAMPLE_SCHEMA)
+        .unwrap();
+
+    let gc = cli::find_command("gconstruct").unwrap();
+    let cfg = cli::build_config(
+        gc,
+        &argv(&[
+            "--conf", dir.join("schema.json").to_str().unwrap(),
+            "--dir", dir.to_str().unwrap(),
+            "--num-parts", "2",
+        ]),
+    )
+    .unwrap();
+    let ds = Pipeline::new(cfg).unwrap().build_dataset().unwrap();
+
+    let gcfg =
+        graphstorm::gconstruct::GConstructConfig::load(&dir.join("schema.json")).unwrap();
+    let direct =
+        graphstorm::gconstruct::construct_dataset(&gcfg, &dir, 2, false).unwrap();
+    assert_eq!(ds.graph.stats(), direct.graph.stats());
+    assert_eq!(ds.engine.book.assignments, direct.engine.book.assignments);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,7 +1,12 @@
 #!/usr/bin/env bash
-# Run the micro benchmarks and record the machine-readable results at
-# the repo root (BENCH_micro.json) so future PRs can track the perf
-# trajectory.  Usage: scripts/bench.sh [extra cargo args...]
+# Run the micro + serving benchmarks and record the machine-readable
+# results at the repo root (BENCH_micro.json / BENCH_serve.json) so
+# future PRs can track the perf trajectory.
+#
+# Bench *parameters* live in versioned run-config files —
+# scripts/bench_micro.json and scripts/bench_serve.json — not in shell
+# flags; edit those (or point GS_BENCH_CONF_MICRO / GS_BENCH_CONF_SERVE
+# elsewhere) to change workloads.  Usage: scripts/bench.sh [extra cargo args...]
 #
 #   GS_BENCH_FAST=1 scripts/bench.sh    # shrunken workloads (smoke)
 #
@@ -15,13 +20,15 @@ export GS_BENCH_OUT="${GS_BENCH_OUT:-$ROOT/BENCH_micro.json}"
 export GS_SERVE_BENCH_OUT="${GS_SERVE_BENCH_OUT:-$ROOT/BENCH_serve.json}"
 
 cd "$ROOT/rust"
-cargo bench --bench micro "$@"
+GS_BENCH_CONF="${GS_BENCH_CONF_MICRO:-$ROOT/scripts/bench_micro.json}" \
+    cargo bench --bench micro "$@"
 
 echo
 # Serving benches: run end-to-end without AOT artifacts/PJRT (the
 # engine falls back to the deterministic surrogate backend), so this
 # never needs to skip — it just reports which backend executed.
-cargo bench --bench serve "$@"
+GS_BENCH_CONF="${GS_BENCH_CONF_SERVE:-$ROOT/scripts/bench_serve.json}" \
+    cargo bench --bench serve "$@"
 
 echo
 echo "results: $GS_BENCH_OUT"
