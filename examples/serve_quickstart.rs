@@ -7,15 +7,19 @@
 //! 3. Precompute every node's prediction offline (`OfflineInference`)
 //!    into GSTF shards, GiGL-style.
 //! 4. Warm an `EmbeddingCache` from the shards and serve Zipf request
-//!    traffic through the `MicroBatcher` with four concurrent clients.
+//!    traffic through a two-worker engine *pool* (one shared
+//!    micro-batcher queue) with four concurrent clients.
 //! 5. Print latency percentiles, hit rate and throughput.
 //!
 //! Run: `cargo run --release --example serve_quickstart`
 
+use std::sync::Mutex;
+
 use graphstorm::datagen::{self, mag};
 use graphstorm::partition::PartitionBook;
 use graphstorm::serve::{
-    closed_loop, EmbeddingCache, InferenceEngine, MicroBatcherCfg, OfflineInference, Zipf,
+    closed_loop, EmbeddingCache, EnginePoolCfg, InferenceEngine, MicroBatcherCfg,
+    OfflineInference, Zipf,
 };
 use graphstorm::util::Rng;
 
@@ -49,18 +53,21 @@ fn main() -> anyhow::Result<()> {
     // whole node set here; a smaller LRU would need hottest-last warm
     // order to keep the Zipf head resident (see `EmbeddingCache::
     // warm_from_dir`).
-    let mut cache = EmbeddingCache::new(n_nodes);
-    let warmed = cache.warm_from_dir(&dir, nt, engine.generation())?;
+    let cache = Mutex::new(EmbeddingCache::new(n_nodes));
+    let warmed = cache.lock().unwrap().warm_from_dir(&dir, nt, engine.generation())?;
     println!("cache warmed with {warmed} rows (capacity {n_nodes})");
 
     let zipf = Zipf::new(n_nodes, 1.1);
     let mut rng = Rng::seed_from(11);
     let trace: Vec<(u32, u32)> = (0..2000).map(|_| (nt, zipf.sample(&mut rng) as u32)).collect();
-    let cfg = MicroBatcherCfg {
-        max_batch: 32,
-        deadline: std::time::Duration::from_micros(200),
+    let cfg = EnginePoolCfg {
+        workers: 2,
+        batcher: MicroBatcherCfg {
+            max_batch: 32,
+            deadline: std::time::Duration::from_micros(200),
+        },
     };
-    let (stats, replies) = closed_loop(&engine, cfg, &mut cache, &trace, 4)?;
+    let (stats, replies) = closed_loop(&engine, cfg, &cache, &trace, 4)?;
 
     // 5. Report.
     println!(

@@ -83,6 +83,12 @@ pub const COMMANDS: &[Cmd] = &[
         base: "{}",
         flags: &[
             Flag { name: "conf", takes_value: true, path: "#conf", help: "run-config JSON file" },
+            Flag {
+                name: "dump-conf",
+                takes_value: true,
+                path: "#dump",
+                help: "write the fully-resolved config JSON to this path",
+            },
             SET,
         ],
     },
@@ -233,6 +239,24 @@ pub const COMMANDS: &[Cmd] = &[
             Flag { name: "alpha", takes_value: true, path: "serve.alpha", help: "Zipf exponent" },
             Flag { name: "clients", takes_value: true, path: "serve.clients", help: "closed-loop clients" },
             Flag { name: "cache", takes_value: true, path: "serve.cache", help: "embedding-cache capacity" },
+            Flag {
+                name: "pool-workers",
+                takes_value: true,
+                path: "serve.pool_workers",
+                help: "engine-pool threads, or 'auto'",
+            },
+            Flag {
+                name: "admission",
+                takes_value: true,
+                path: "serve.admission",
+                help: "cache admission: always|tinylfu",
+            },
+            Flag {
+                name: "refresh",
+                takes_value: true,
+                path: "serve.refresh",
+                help: "hot rows re-read after the mid-bench generation bump (0 = off)",
+            },
             Flag { name: "max-batch", takes_value: true, path: "serve.max_batch", help: "micro-batch size cap" },
             Flag { name: "deadline-us", takes_value: true, path: "serve.deadline_us", help: "micro-batch deadline" },
             SET,
@@ -312,7 +336,7 @@ pub fn build_doc(cmd: &Cmd, args: &[String]) -> Result<Json> {
     };
     for (f, v) in &flags {
         match f.path {
-            "#conf" => {}
+            "#conf" | "#dump" => {}
             "#set" => apply_set(&mut doc, v)?,
             "#metis" => set_path(&mut doc, "partition.method", "metis")?,
             "#lm" => {
@@ -329,6 +353,17 @@ pub fn build_doc(cmd: &Cmd, args: &[String]) -> Result<Json> {
 /// Build and validate the typed config for a command invocation.
 pub fn build_config(cmd: &Cmd, args: &[String]) -> Result<RunConfig> {
     RunConfig::from_json(&build_doc(cmd, args)?)
+}
+
+/// The (last) value of `--name` in `args`, if the flag was given —
+/// how `main` reads side-channel flags like `run --dump-conf` that
+/// are actions rather than config overrides.
+pub fn flag_value(cmd: &Cmd, args: &[String], name: &str) -> Result<Option<String>> {
+    Ok(parse_flags(cmd, args)?
+        .into_iter()
+        .rev()
+        .find(|(f, _)| f.name == name)
+        .map(|(_, v)| v))
 }
 
 /// The `gs help` text, generated from the command table so it can
@@ -420,6 +455,16 @@ mod tests {
     }
 
     #[test]
+    fn dump_conf_flag_value_extracted() {
+        let cmd = find_command("run").unwrap();
+        let args = argv(&["--conf", "x.json", "--dump-conf", "out.json"]);
+        assert_eq!(flag_value(cmd, &args, "dump-conf").unwrap().as_deref(), Some("out.json"));
+        assert_eq!(flag_value(cmd, &argv(&[]), "dump-conf").unwrap(), None);
+        // Unknown flags still die even through the side channel.
+        assert!(flag_value(cmd, &argv(&["--dmp-conf", "x"]), "dump-conf").is_err());
+    }
+
+    #[test]
     fn run_requires_conf() {
         let cmd = find_command("run").unwrap();
         let e = build_config(cmd, &argv(&[])).unwrap_err().to_string();
@@ -443,6 +488,8 @@ mod tests {
                     "loss" => "ce",
                     "neg" => "joint-16",
                     "arch" => "rgcn",
+                    "admission" => "tinylfu",
+                    "pool-workers" => "auto",
                     "alpha" => "1.2",
                     "lr" => "0.004",
                     "num-workers" => "2",

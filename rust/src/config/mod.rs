@@ -32,7 +32,7 @@ use std::collections::BTreeMap;
 
 use crate::dataloader::autoscale_workers;
 use crate::sampling::NegSampler;
-use crate::serve::MicroBatcherCfg;
+use crate::serve::{Admission, EnginePoolCfg, MicroBatcherCfg};
 use crate::trainer::lp::LpLoss;
 use crate::trainer::TrainOptions;
 use crate::util::json::{Json, obj};
@@ -806,15 +806,25 @@ impl InferCfg {
 
 // ---------------------------------------------------------------- serve
 
-/// `serve` stage: closed-loop Zipf traffic through the micro-batcher,
-/// uncached arm then warmed-cache arm over the same trace; predictions
-/// must be bit-identical across arms.
+/// `serve` stage: closed-loop Zipf traffic through the serving engine
+/// *pool*, uncached arm then warmed-cache arm over the same trace
+/// (plus a post-generation-bump refreshed arm when `refresh > 0`);
+/// predictions must be bit-identical across arms.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServeCfg {
     pub requests: usize,
     pub alpha: f64,
     pub clients: usize,
     pub cache: usize,
+    /// Engine scratches draining the shared queue; `"auto"` resolves
+    /// like `loader.workers`.  Replies are bit-identical for any value.
+    pub pool_workers: Workers,
+    /// Cache admission policy: plain LRU or a TinyLFU frequency gate
+    /// that keeps Zipf-tail scan traffic from evicting the hot set.
+    pub admission: Admission,
+    /// Hot rows to re-read after the bench's mid-run generation bump;
+    /// 0 skips the refreshed arm.
+    pub refresh: usize,
     pub max_batch: usize,
     pub deadline_us: u64,
     /// Engine architecture; `None` = the task's arch (or "rgcn").
@@ -829,6 +839,9 @@ impl Default for ServeCfg {
             alpha: 1.1,
             clients: 4,
             cache: 4096,
+            pool_workers: Workers::Auto,
+            admission: Admission::Always,
+            refresh: 0,
             max_batch: 32,
             deadline_us: 200,
             arch: None,
@@ -843,6 +856,9 @@ impl ServeCfg {
         "alpha",
         "clients",
         "cache",
+        "pool_workers",
+        "admission",
+        "refresh",
         "max_batch",
         "deadline_us",
         "arch",
@@ -858,6 +874,26 @@ impl ServeCfg {
                 "alpha" => c.alpha = take_f64("serve", "alpha", v)?,
                 "clients" => c.clients = take_usize("serve", "clients", v)?,
                 "cache" => c.cache = take_usize("serve", "cache", v)?,
+                "pool_workers" => {
+                    c.pool_workers = match v {
+                        Json::Str(s) if s == "auto" => Workers::Auto,
+                        Json::Str(s) => bail!(
+                            "serve.pool_workers must be a thread count or \"auto\", got \"{s}\""
+                        ),
+                        v => Workers::Fixed(take_usize("serve", "pool_workers", v)?),
+                    }
+                }
+                "admission" => {
+                    c.admission = match take_str("serve", "admission", v)? {
+                        "always" => Admission::Always,
+                        "tinylfu" => Admission::TinyLfu,
+                        other => bail!(
+                            "serve.admission must be \"always\" or \"tinylfu\", got \"{other}\"{}",
+                            did_you_mean(other, &["always", "tinylfu"])
+                        ),
+                    }
+                }
+                "refresh" => c.refresh = take_usize("serve", "refresh", v)?,
                 "max_batch" => c.max_batch = take_usize("serve", "max_batch", v)?,
                 "deadline_us" => c.deadline_us = take_u64("serve", "deadline_us", v)?,
                 "arch" => c.arch = Some(take_str("serve", "arch", v)?.to_string()),
@@ -869,11 +905,18 @@ impl ServeCfg {
     }
 
     fn to_json(&self) -> Json {
+        let pool_workers = match self.pool_workers {
+            Workers::Auto => Json::from("auto"),
+            Workers::Fixed(n) => Json::from(n),
+        };
         let mut pairs = vec![
             ("requests", Json::from(self.requests)),
             ("alpha", Json::Num(self.alpha)),
             ("clients", Json::from(self.clients)),
             ("cache", Json::from(self.cache)),
+            ("pool_workers", pool_workers),
+            ("admission", Json::from(self.admission.name())),
+            ("refresh", Json::from(self.refresh)),
             ("max_batch", Json::from(self.max_batch)),
             ("deadline_us", Json::from(self.deadline_us as usize)),
         ];
@@ -892,9 +935,25 @@ impl ServeCfg {
         }
     }
 
+    /// The concrete pool size (resolves `"auto"`, with a log line).
+    pub fn resolve_pool_workers(&self) -> usize {
+        match self.pool_workers {
+            Workers::Fixed(n) => n,
+            Workers::Auto => autoscale_workers(),
+        }
+    }
+
+    /// These knobs as an engine-pool config.
+    pub fn pool(&self) -> EnginePoolCfg {
+        EnginePoolCfg { workers: self.resolve_pool_workers(), batcher: self.batcher() }
+    }
+
     fn validate(&self) -> Result<()> {
         if self.requests == 0 || self.clients == 0 || self.max_batch == 0 {
             bail!("serve.requests, serve.clients and serve.max_batch must be >= 1");
+        }
+        if let Workers::Fixed(0) = self.pool_workers {
+            bail!("serve.pool_workers must be >= 1 (use 1 for a single engine scratch)");
         }
         if !(self.alpha > 0.0 && self.alpha.is_finite()) {
             bail!("serve.alpha must be a positive finite number");
@@ -1012,6 +1071,7 @@ impl RunConfig {
         }
         if let Some(s) = &mut c.serve {
             s.arch.get_or_insert_with(|| task_arch.clone());
+            s.pool_workers = Workers::Fixed(s.resolve_pool_workers());
         }
         c
     }
@@ -1211,6 +1271,37 @@ mod tests {
         assert_eq!(r.loader.workers, Workers::Fixed(n));
         assert!(RunConfig::parse_str(r#"{"loader": {"workers": "many"}}"#).is_err());
         assert!(RunConfig::parse_str(r#"{"loader": {"workers": 0}}"#).is_err());
+    }
+
+    #[test]
+    fn serve_pool_keys_parse_validate_and_resolve() {
+        let c = RunConfig::parse_str(
+            r#"{"serve": {"pool_workers": "auto", "admission": "tinylfu", "refresh": 256}}"#,
+        )
+        .unwrap();
+        let s = c.serve.as_ref().unwrap();
+        assert_eq!(s.pool_workers, Workers::Auto);
+        assert_eq!(s.admission, Admission::TinyLfu);
+        assert_eq!(s.refresh, 256);
+        let r = c.resolved();
+        let rs = r.serve.as_ref().unwrap();
+        assert!(matches!(rs.pool_workers, Workers::Fixed(n) if n >= 1));
+        assert!(rs.pool().workers >= 1);
+        // Resolution round-trips through JSON and is a fixed point.
+        let back = RunConfig::parse_str(&r.to_json().to_string_pretty()).unwrap();
+        assert_eq!(r, back);
+        assert_eq!(back.resolved(), back);
+
+        assert!(RunConfig::parse_str(r#"{"serve": {"pool_workers": 0}}"#).is_err());
+        assert!(RunConfig::parse_str(r#"{"serve": {"pool_workers": "many"}}"#).is_err());
+        let e = RunConfig::parse_str(r#"{"serve": {"admission": "tinlyfu"}}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("did you mean 'tinylfu'"), "{e}");
+        let e = RunConfig::parse_str(r#"{"serve": {"pool_wokers": 2}}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("did you mean 'pool_workers'"), "{e}");
     }
 
     #[test]

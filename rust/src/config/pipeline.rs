@@ -27,6 +27,7 @@ use crate::serve::{
 use crate::trainer::lp::LpReport;
 use crate::trainer::nc::NcReport;
 use crate::trainer::{DistillTrainer, LmTrainer, LpTrainer, NodeTrainer, TrainOptions};
+use crate::util::StageTimer;
 
 /// What a pipeline run produced, stage by stage.
 #[derive(Debug, Clone, Default)]
@@ -38,6 +39,11 @@ pub struct PipelineOutcome {
     pub infer: Option<OfflineReport>,
     pub serve_uncached: Option<ClosedLoopStats>,
     pub serve_warmed: Option<ClosedLoopStats>,
+    /// Post-generation-bump replay (present iff `serve.refresh > 0`).
+    pub serve_refreshed: Option<ClosedLoopStats>,
+    /// Wall-clock seconds per executed stage, in execution order
+    /// (`data+partition` is one entry: construction binds them).
+    pub stage_secs: Vec<(String, f64)>,
 }
 
 /// Executes the stages a [`RunConfig`] declares.
@@ -109,9 +115,10 @@ impl Pipeline {
     pub fn run(&self) -> Result<PipelineOutcome> {
         let cfg = &self.cfg;
         let mut out = PipelineOutcome::default();
+        let mut timer = StageTimer::default();
 
         // ---- data + partition ------------------------------------------
-        let mut ds = self.build_dataset()?;
+        let mut ds = timer.time("data+partition", || self.build_dataset())?;
         let s = ds.graph.stats();
         match &cfg.data.source {
             DataSource::Gen { dataset, .. } => println!(
@@ -139,31 +146,35 @@ impl Pipeline {
         // ---- lm ---------------------------------------------------------
         if let Some(lmc) = &cfg.lm {
             let rt = rt.as_ref().expect("lm stage validated to need the runtime");
-            let lm = LmTrainer::default();
-            let (_, st) = lm.pretrain_mlm(
-                rt,
-                &ds,
-                ds.target_ntype,
-                &TrainOptions { epochs: lmc.pretrain_epochs, ..opts.clone() },
-            )?;
-            let params = if lmc.mode == LmMode::Finetuned {
-                let (_, st2) = lm.finetune_nc(
+            timer.time("lm", || -> Result<()> {
+                let lm = LmTrainer::default();
+                let (_, st) = lm.pretrain_mlm(
                     rt,
                     &ds,
-                    &st.params_host()?,
-                    &TrainOptions { epochs: lmc.finetune_epochs, ..opts.clone() },
+                    ds.target_ntype,
+                    &TrainOptions { epochs: lmc.pretrain_epochs, ..opts.clone() },
                 )?;
-                st2.params_host()?
-            } else {
-                st.params_host()?
-            };
-            let secs = lm.embed_all(rt, &mut ds, &params, &opts)?;
-            println!("lm embed stage: {secs:.1}s");
+                let params = if lmc.mode == LmMode::Finetuned {
+                    let (_, st2) = lm.finetune_nc(
+                        rt,
+                        &ds,
+                        &st.params_host()?,
+                        &TrainOptions { epochs: lmc.finetune_epochs, ..opts.clone() },
+                    )?;
+                    st2.params_host()?
+                } else {
+                    st.params_host()?
+                };
+                let secs = lm.embed_all(rt, &mut ds, &params, &opts)?;
+                println!("lm embed stage: {secs:.1}s");
+                Ok(())
+            })?;
         }
 
         // ---- task -------------------------------------------------------
         if let Some(task) = &cfg.task {
             let rt = rt.as_ref().expect("task stage needs the runtime");
+            timer.time(&format!("task({})", task.kind.name()), || -> Result<()> {
             match task.kind {
                 TaskKind::Nc => {
                     let arch = &task.arch;
@@ -219,6 +230,8 @@ impl Pipeline {
                     out.distill_mse = Some(mse);
                 }
             }
+            Ok(())
+            })?;
         }
 
         // ---- infer ------------------------------------------------------
@@ -226,6 +239,7 @@ impl Pipeline {
             // `resolved()` (Pipeline::new) materialized the arch; don't
             // restate the default here.
             let arch = ic.arch.as_deref().expect("resolved() fills infer.arch");
+            timer.time("infer", || -> Result<()> {
             let (engine, backend) = InferenceEngine::auto(&ds, arch, ic.out_dim, cfg.seed)?;
             let off = OfflineInference {
                 shard_size: ic.shard_size,
@@ -243,22 +257,27 @@ impl Pipeline {
                 ic.out,
             );
             out.infer = Some(rep);
+            Ok(())
+            })?;
         }
 
         // ---- serve ------------------------------------------------------
         if let Some(sc) = &cfg.serve {
             let arch = sc.arch.as_deref().expect("resolved() fills serve.arch");
+            timer.time("serve", || -> Result<()> {
             let (engine, backend) = InferenceEngine::auto(&ds, arch, sc.out_dim, cfg.seed)?;
             let nt = ds.target_ntype as u32;
             let n_nodes = ds.graph.num_nodes[nt as usize];
-            let batcher = sc.batcher();
+            let pool = sc.pool();
             println!(
-                "serve-bench [{backend}]: {} requests, zipf(a={}) over {n_nodes} nodes, {} clients, max_batch={}, deadline={}us",
+                "serve-bench [{backend}]: {} requests, zipf(a={}) over {n_nodes} nodes, {} clients, pool={} workers, max_batch={}, deadline={}us, admission={}",
                 sc.requests,
                 sc.alpha,
                 sc.clients,
-                batcher.max_batch,
-                batcher.deadline.as_micros()
+                pool.workers,
+                pool.batcher.max_batch,
+                pool.batcher.deadline.as_micros(),
+                sc.admission.name(),
             );
             let rep = run_serve_bench(
                 &engine,
@@ -268,18 +287,20 @@ impl Pipeline {
                     alpha: sc.alpha,
                     clients: sc.clients,
                     cache: sc.cache,
-                    batcher,
+                    admission: sc.admission,
+                    pool,
+                    refresh: sc.refresh,
                 },
             )?;
             println!(
-                "  uncached: p50 {:>7.0}us  p99 {:>7.0}us  {:>8.0} req/s  hit {:>5.1}%",
+                "  uncached:  p50 {:>7.0}us  p99 {:>7.0}us  {:>8.0} req/s  hit {:>5.1}%",
                 rep.uncached.p50_us,
                 rep.uncached.p99_us,
                 rep.uncached.rps,
                 100.0 * rep.uncached.hit_rate
             );
             println!(
-                "  warmed:   p50 {:>7.0}us  p99 {:>7.0}us  {:>8.0} req/s  hit {:>5.1}%  (cache cap {}, {} distinct)",
+                "  warmed:    p50 {:>7.0}us  p99 {:>7.0}us  {:>8.0} req/s  hit {:>5.1}%  (cache cap {}, {} distinct)",
                 rep.warmed.p50_us,
                 rep.warmed.p99_us,
                 rep.warmed.rps,
@@ -287,6 +308,16 @@ impl Pipeline {
                 sc.cache,
                 rep.distinct
             );
+            if let Some(r) = &rep.refreshed {
+                println!(
+                    "  refreshed: p50 {:>7.0}us  p99 {:>7.0}us  {:>8.0} req/s  hit {:>5.1}%  ({} hot rows re-read after bump)",
+                    r.p50_us,
+                    r.p99_us,
+                    r.rps,
+                    100.0 * r.hit_rate,
+                    rep.refreshed_rows
+                );
+            }
             println!(
                 "  bit-identical across arms + repeats: {}; warmed speedup {:.2}x",
                 rep.identical,
@@ -295,11 +326,20 @@ impl Pipeline {
             let identical = rep.identical;
             out.serve_uncached = Some(rep.uncached);
             out.serve_warmed = Some(rep.warmed);
+            out.serve_refreshed = rep.refreshed;
             if !identical {
                 bail!("cached serving diverged from uncached recompute");
             }
+            Ok(())
+            })?;
         }
 
+        out.stage_secs = timer.stages.clone();
+        if !out.stage_secs.is_empty() {
+            let parts: Vec<String> =
+                out.stage_secs.iter().map(|(n, s)| format!("{n} {s:.2}s")).collect();
+            println!("stage times: {}  (total {:.2}s)", parts.join(" | "), timer.total());
+        }
         Ok(out)
     }
 }

@@ -195,6 +195,15 @@ impl EmbTable {
         self.generation.load(Ordering::Acquire)
     }
 
+    /// Externally mark the table as updated (checkpoint restore, bulk
+    /// weight swap — writes that bypass [`sparse_adam`](Self::sparse_adam)).
+    /// Generation-stamped caches (`serve::EmbeddingCache`) invalidate
+    /// on the next lookup and `serve::refresh` re-reads hot rows in
+    /// the background instead of letting them turn into a miss storm.
+    pub fn bump_generation(&self) {
+        self.generation.fetch_add(1, Ordering::AcqRel);
+    }
+
     /// Read one row on behalf of partition `worker`
     /// (`out.len() == dim`), counting traffic — the serving-side
     /// lookup the read-through cache wraps.

@@ -43,7 +43,16 @@ fn main() -> Result<()> {
         name => {
             let spec = cli::find_command(name)?;
             let cfg = cli::build_config(spec, rest)?;
-            Pipeline::new(cfg)?.run()?;
+            let pipeline = Pipeline::new(cfg)?;
+            // `gs run --dump-conf PATH` records the fully-resolved
+            // config next to the run outputs, for reproducibility.
+            if let Some(path) = cli::flag_value(spec, rest, "dump-conf")? {
+                let mut body = pipeline.cfg.to_json().to_string_pretty();
+                body.push('\n');
+                std::fs::write(&path, body)?;
+                println!("resolved config -> {path}");
+            }
+            pipeline.run()?;
         }
     }
     Ok(())

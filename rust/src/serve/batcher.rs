@@ -12,8 +12,8 @@
 //! samples canonically per node, coalescing never changes a
 //! prediction — only its latency.
 
-use anyhow::{anyhow, Result};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use anyhow::Result;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::time::{Duration, Instant};
 
 use super::cache::{cache_key, EmbeddingCache};
@@ -172,7 +172,10 @@ impl MicroBatcher {
     }
 }
 
-/// Closed-loop serving stats (one bench/CLI arm).
+/// Closed-loop serving stats (one bench/CLI arm).  `hits`/`misses`
+/// are pool-size invariant under a non-evicting cache; `coalesced`
+/// (a subset of `hits`: requests that joined an in-flight batch)
+/// depends on completion timing.
 #[derive(Debug, Clone, Default)]
 pub struct ClosedLoopStats {
     pub requests: usize,
@@ -181,75 +184,7 @@ pub struct ClosedLoopStats {
     pub p50_us: f64,
     pub p99_us: f64,
     pub hit_rate: f64,
-}
-
-/// Drive `trace` through a micro-batcher from `clients` closed-loop
-/// client threads (each waits for its reply before sending the next
-/// request).  Returns the stats plus every `(seed, prediction)` reply
-/// in completion order, for determinism / bit-identity checks.
-pub fn closed_loop(
-    engine: &InferenceEngine,
-    cfg: MicroBatcherCfg,
-    cache: &mut EmbeddingCache,
-    trace: &[(u32, u32)],
-    clients: usize,
-) -> Result<(ClosedLoopStats, Vec<((u32, u32), Vec<f32>)>)> {
-    let metrics = ServeMetrics::new();
-    let batcher = MicroBatcher::new(cfg);
-    let (tx, rx) = std::sync::mpsc::sync_channel::<ServeRequest>(4096);
-    let clients = clients.max(1);
-    let t0 = Instant::now();
-    let mut replies: Vec<((u32, u32), Vec<f32>)> = Vec::new();
-    let mut first_err: Option<anyhow::Error> = None;
-    std::thread::scope(|scope| {
-        let batcher_handle = {
-            let metrics = &metrics;
-            let cache: &mut EmbeddingCache = cache;
-            scope.spawn(move || batcher.run(engine, cache, rx, metrics))
-        };
-        let mut client_handles = Vec::with_capacity(clients);
-        for w in 0..clients {
-            let tx: SyncSender<ServeRequest> = tx.clone();
-            let share: Vec<(u32, u32)> = trace.iter().skip(w).step_by(clients).copied().collect();
-            client_handles.push(scope.spawn(move || -> Result<Vec<((u32, u32), Vec<f32>)>> {
-                let mut out = Vec::with_capacity(share.len());
-                for (nt, id) in share {
-                    let (rtx, rrx) = channel();
-                    tx.send(ServeRequest::new(nt, id, rtx))
-                        .map_err(|_| anyhow!("batcher exited early"))?;
-                    let val = rrx
-                        .recv()
-                        .map_err(|_| anyhow!("reply channel dropped"))?
-                        .map_err(|e| anyhow!("serve error: {e}"))?;
-                    out.push(((nt, id), val));
-                }
-                Ok(out)
-            }));
-        }
-        drop(tx); // the batcher exits once the clients are done
-        for h in client_handles {
-            match h.join().expect("client thread panicked") {
-                Ok(r) => replies.extend(r),
-                Err(e) => {
-                    first_err.get_or_insert(e);
-                }
-            }
-        }
-        if let Err(e) = batcher_handle.join().expect("batcher thread panicked") {
-            first_err.get_or_insert(e);
-        }
-    });
-    if let Some(e) = first_err {
-        return Err(e);
-    }
-    let wall_s = t0.elapsed().as_secs_f64();
-    let stats = ClosedLoopStats {
-        requests: trace.len(),
-        wall_s,
-        rps: trace.len() as f64 / wall_s.max(1e-9),
-        p50_us: metrics.latency.p50_us(),
-        p99_us: metrics.latency.p99_us(),
-        hit_rate: metrics.hit_rate(),
-    };
-    Ok((stats, replies))
+    pub hits: u64,
+    pub misses: u64,
+    pub coalesced: u64,
 }

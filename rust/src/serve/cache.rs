@@ -1,4 +1,5 @@
-//! Generation-stamped LRU embedding/prediction cache.
+//! Generation-stamped LRU embedding/prediction cache with an optional
+//! TinyLFU-style admission gate.
 //!
 //! Serving traffic is power-law: a small set of hot nodes dominates
 //! requests, so caching their decoded predictions (or embedding rows)
@@ -8,16 +9,104 @@
 //! entry.  Eviction reuses the evicted entry's row allocation, so a
 //! full cache performs no steady-state allocation on `put` of
 //! same-width rows.
+//!
+//! The admission gate ([`Admission::TinyLfu`]) protects the hot set
+//! from Zipf-tail scan traffic: every lookup feeds a tiny
+//! aged-count-min frequency sketch, and a *new* key may evict the LRU
+//! victim only if its estimated frequency is at least the victim's —
+//! a one-shot scan key loses that comparison against any genuinely
+//! hot row, so a full cache of hot rows survives arbitrarily long
+//! cold scans (see `tinylfu_admission_resists_scans`).
 
 use anyhow::Result;
 
 use crate::dist::EmbTable;
-use crate::util::FxHashMap;
+use crate::util::{fxhash64, FxHashMap};
 
 /// Cache key for a `(ntype, node id)` pair.
 #[inline]
 pub fn cache_key(nt: u32, id: u32) -> u64 {
     ((nt as u64) << 32) | id as u64
+}
+
+/// Inverse of [`cache_key`].
+#[inline]
+pub fn split_key(key: u64) -> (u32, u32) {
+    ((key >> 32) as u32, key as u32)
+}
+
+/// Admission policy for a full cache: plain LRU, or an LRU whose
+/// evictions are gated by a frequency sketch (TinyLFU-style).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Admission {
+    /// Every `put` of a new key evicts the LRU victim (classic LRU).
+    #[default]
+    Always,
+    /// A new key is admitted only if its sketch frequency is at least
+    /// the LRU victim's — scan traffic can't flush the hot set.
+    TinyLfu,
+}
+
+impl Admission {
+    pub fn name(self) -> &'static str {
+        match self {
+            Admission::Always => "always",
+            Admission::TinyLfu => "tinylfu",
+        }
+    }
+}
+
+/// Aged count-min frequency sketch (4-bit counters, two probes per
+/// key).  After `16 * capacity` touches every counter is halved, so
+/// estimates decay and yesterday's hot set can't pin the cache
+/// forever — the standard TinyLFU aging rule.
+struct FreqSketch {
+    counters: Vec<u8>,
+    mask: usize,
+    ops: u64,
+    age_every: u64,
+}
+
+impl FreqSketch {
+    fn new(cap: usize) -> FreqSketch {
+        // 16 one-byte counters per cached row (~64 KiB at the default
+        // serve.cache=4096).  Wider than classic nibble-packed TinyLFU
+        // (4-8 counters/row) to keep probe collisions with the
+        // resident set rare without bit-packing complexity; still a
+        // fraction of the row payload it protects.
+        let width = (cap.max(16) * 16).next_power_of_two();
+        FreqSketch {
+            counters: vec![0; width],
+            mask: width - 1,
+            ops: 0,
+            age_every: (cap.max(16) as u64) * 16,
+        }
+    }
+
+    #[inline]
+    fn slot(&self, key: u64, probe: u64) -> usize {
+        fxhash64(key ^ probe.wrapping_mul(0x9E37_79B9_7F4A_7C15)) as usize & self.mask
+    }
+
+    fn touch(&mut self, key: u64) {
+        for p in 0..2u64 {
+            let i = self.slot(key, p);
+            if self.counters[i] < 15 {
+                self.counters[i] += 1;
+            }
+        }
+        self.ops += 1;
+        if self.ops >= self.age_every {
+            self.ops = 0;
+            for c in &mut self.counters {
+                *c >>= 1;
+            }
+        }
+    }
+
+    fn estimate(&self, key: u64) -> u8 {
+        (0..2u64).map(|p| self.counters[self.slot(key, p)]).min().unwrap_or(0)
+    }
 }
 
 const NIL: u32 = u32::MAX;
@@ -41,10 +130,16 @@ pub struct EmbeddingCache {
     free: Vec<u32>,
     head: u32,
     tail: u32,
+    sketch: Option<FreqSketch>,
 }
 
 impl EmbeddingCache {
     pub fn new(cap: usize) -> EmbeddingCache {
+        EmbeddingCache::with_admission(cap, Admission::Always)
+    }
+
+    /// Cache with an explicit admission policy (`serve.admission`).
+    pub fn with_admission(cap: usize, admission: Admission) -> EmbeddingCache {
         EmbeddingCache {
             cap,
             gen: 0,
@@ -53,11 +148,23 @@ impl EmbeddingCache {
             free: Vec::new(),
             head: NIL,
             tail: NIL,
+            sketch: match admission {
+                Admission::TinyLfu if cap > 0 => Some(FreqSketch::new(cap)),
+                _ => None,
+            },
         }
     }
 
     pub fn capacity(&self) -> usize {
         self.cap
+    }
+
+    pub fn admission(&self) -> Admission {
+        if self.sketch.is_some() {
+            Admission::TinyLfu
+        } else {
+            Admission::Always
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -119,7 +226,11 @@ impl EmbeddingCache {
 
     /// Current-generation row for `key`, refreshing its recency.
     /// Stale-generation entries are removed lazily and report a miss.
+    /// Every lookup — hit or miss — feeds the admission sketch.
     pub fn get(&mut self, key: u64) -> Option<&[f32]> {
+        if let Some(s) = &mut self.sketch {
+            s.touch(key);
+        }
         let &i = self.map.get(&key)?;
         if self.entries[i as usize].gen != self.gen {
             self.map.remove(&key);
@@ -133,7 +244,9 @@ impl EmbeddingCache {
     }
 
     /// Insert/overwrite `key` at the current generation, evicting the
-    /// least-recently-used entry when full.
+    /// least-recently-used entry when full.  Under
+    /// [`Admission::TinyLfu`] a *new* key is dropped instead of
+    /// evicting a victim whose sketch frequency beats it.
     pub fn put(&mut self, key: u64, val: &[f32]) {
         if self.cap == 0 {
             return;
@@ -152,8 +265,15 @@ impl EmbeddingCache {
         } else if self.map.len() >= self.cap {
             let i = self.tail;
             debug_assert_ne!(i, NIL, "full cache must have a tail");
-            self.detach(i);
             let old_key = self.entries[i as usize].key;
+            if let Some(s) = &self.sketch {
+                // Frequency gate: the incoming key must be at least as
+                // hot as the victim, or it isn't worth a slot.
+                if s.estimate(key) < s.estimate(old_key) {
+                    return;
+                }
+            }
+            self.detach(i);
             self.map.remove(&old_key);
             i
         } else {
@@ -170,6 +290,36 @@ impl EmbeddingCache {
         self.map.insert(key, i);
         self.push_front(i);
     }
+
+    /// `put`, but only if `gen` is still the cache's current
+    /// generation — the insert path for rows computed asynchronously
+    /// (engine-pool batches, background refresh): a row computed
+    /// before a generation bump must never be stamped current.
+    /// Returns whether the row is resident afterwards (false when the
+    /// generation was stale, the admission gate dropped it, or the
+    /// cache is disabled).
+    pub fn put_if_current(&mut self, key: u64, val: &[f32], gen: u64) -> bool {
+        if gen != self.gen {
+            return false;
+        }
+        self.put(key, val);
+        self.map.contains_key(&key)
+    }
+
+    /// Resident keys in recency order (most-recently-used first), up
+    /// to `limit` — the hot set a background refresher re-reads after
+    /// a generation bump.  Stale-generation entries are included on
+    /// purpose: they *are* the rows worth re-reading.
+    pub fn hot_keys(&self, limit: usize) -> Vec<u64> {
+        let mut out = Vec::with_capacity(limit.min(self.map.len()));
+        let mut i = self.head;
+        while i != NIL && out.len() < limit {
+            let e = &self.entries[i as usize];
+            out.push(e.key);
+            i = e.next;
+        }
+        out
+    }
 }
 
 /// A row provider behind the cache: `dist::EmbTable`, the inference
@@ -181,6 +331,21 @@ pub trait RowSource {
     /// stale rows invalidate automatically.
     fn source_generation(&self) -> u64;
     fn fetch_row(&mut self, nt: u32, id: u32, out: &mut Vec<f32>) -> Result<()>;
+
+    /// Batched fetch of **distinct** seeds into a row-major
+    /// `[seeds.len(), row_dim]` buffer.  The default loops
+    /// [`fetch_row`](Self::fetch_row); sources with a cheaper bulk
+    /// path (one engine forward, one table lock) override it — the
+    /// background refresher (`serve::refresh`) fetches through this.
+    fn fetch_rows(&mut self, seeds: &[(u32, u32)], out: &mut Vec<f32>) -> Result<()> {
+        out.clear();
+        let mut row = Vec::new();
+        for &(nt, id) in seeds {
+            self.fetch_row(nt, id, &mut row)?;
+            out.extend_from_slice(&row);
+        }
+        Ok(())
+    }
 }
 
 /// `dist::EmbTable` lookups routed through the cache trait, so
@@ -205,6 +370,15 @@ impl RowSource for EmbTableSource<'_> {
         out.clear();
         out.resize(self.table.dim, 0.0);
         self.table.row_into(self.worker, id, out);
+        Ok(())
+    }
+
+    /// One gather (a single table read-lock) instead of a lock per row.
+    fn fetch_rows(&mut self, seeds: &[(u32, u32)], out: &mut Vec<f32>) -> Result<()> {
+        let ids: Vec<u32> = seeds.iter().map(|&(_, id)| id).collect();
+        out.clear();
+        out.resize(ids.len() * self.table.dim, 0.0);
+        self.table.gather_into(self.worker, &ids, out);
         Ok(())
     }
 }
@@ -278,6 +452,86 @@ mod tests {
         let mut c = EmbeddingCache::new(0);
         c.put(1, &[1.0]);
         assert_eq!(c.get(1), None);
+    }
+
+    #[test]
+    fn hot_keys_follow_recency() {
+        let mut c = EmbeddingCache::new(4);
+        for k in 1..=4u64 {
+            c.put(k, &[k as f32]);
+        }
+        c.get(2); // 2 becomes MRU
+        assert_eq!(c.hot_keys(3), vec![2, 4, 3]);
+        assert_eq!(c.hot_keys(10), vec![2, 4, 3, 1]);
+        assert_eq!(EmbeddingCache::new(4).hot_keys(5), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn put_if_current_rejects_stale_generation() {
+        let mut c = EmbeddingCache::new(4);
+        c.set_generation(3);
+        assert!(!c.put_if_current(1, &[1.0], 2), "stale generation must be dropped");
+        assert_eq!(c.get(1), None);
+        assert!(c.put_if_current(1, &[1.0], 3));
+        assert_eq!(c.get(1), Some(&[1.0f32][..]));
+    }
+
+    #[test]
+    fn tinylfu_admission_resists_scans() {
+        // Hot working set, touched often enough to build frequency.
+        let mut c = EmbeddingCache::with_admission(8, Admission::TinyLfu);
+        for _ in 0..10 {
+            for k in 0..8u64 {
+                if c.get(k).is_none() {
+                    c.put(k, &[k as f32]);
+                }
+            }
+        }
+        // One-shot scan traffic: 100 distinct cold keys.
+        for k in 1000..1100u64 {
+            if c.get(k).is_none() {
+                c.put(k, &[0.0]);
+            }
+        }
+        let survivors = (0..8u64).filter(|&k| c.get(k).is_some()).count();
+        assert!(survivors >= 6, "scan evicted the hot set ({survivors}/8 left)");
+
+        // Baseline: plain LRU is flushed by the same scan.
+        let mut lru = EmbeddingCache::new(8);
+        for _ in 0..10 {
+            for k in 0..8u64 {
+                if lru.get(k).is_none() {
+                    lru.put(k, &[k as f32]);
+                }
+            }
+        }
+        for k in 1000..1100u64 {
+            if lru.get(k).is_none() {
+                lru.put(k, &[0.0]);
+            }
+        }
+        let lru_survivors = (0..8u64).filter(|&k| lru.get(k).is_some()).count();
+        assert_eq!(lru_survivors, 0, "plain LRU should have been flushed");
+    }
+
+    #[test]
+    fn tinylfu_still_admits_into_free_slots() {
+        // Admission only gates evictions: generation-freed slots and
+        // unfilled capacity always accept new rows.
+        let mut c = EmbeddingCache::with_admission(2, Admission::TinyLfu);
+        c.put(1, &[1.0]);
+        c.put(2, &[2.0]);
+        c.bump_generation();
+        assert_eq!(c.get(1), None); // frees the slot
+        c.put(3, &[3.0]);
+        assert_eq!(c.get(3), Some(&[3.0f32][..]));
+    }
+
+    #[test]
+    fn split_key_inverts_cache_key() {
+        for (nt, id) in [(0u32, 0u32), (3, 17), (u32::MAX, u32::MAX)] {
+            assert_eq!(split_key(cache_key(nt, id)), (nt, id));
+        }
     }
 
     #[test]

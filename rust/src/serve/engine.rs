@@ -208,6 +208,30 @@ impl<'a> InferenceEngine<'a> {
         sc: &'s mut ServeScratch<'a>,
         seeds: &[(u32, u32)],
     ) -> Result<&'s [f32]> {
+        self.forward_inner(sc, seeds, None)
+    }
+
+    /// [`forward`](Self::forward) for engine-*pool* workers: sampling
+    /// and assembly run unlocked in the caller's thread, but PJRT
+    /// execution is serialized through `exec_lock` — a single PJRT
+    /// session must never execute concurrently (the same contract the
+    /// trainers keep by executing on one thread).  The surrogate
+    /// backend executes lock-free.
+    pub fn forward_locked<'s>(
+        &self,
+        sc: &'s mut ServeScratch<'a>,
+        seeds: &[(u32, u32)],
+        exec_lock: &std::sync::Mutex<()>,
+    ) -> Result<&'s [f32]> {
+        self.forward_inner(sc, seeds, Some(exec_lock))
+    }
+
+    fn forward_inner<'s>(
+        &self,
+        sc: &'s mut ServeScratch<'a>,
+        seeds: &[(u32, u32)],
+        exec_lock: Option<&std::sync::Mutex<()>>,
+    ) -> Result<&'s [f32]> {
         if seeds.len() > self.capacity() {
             bail!("{} seeds exceed engine capacity {}", seeds.len(), self.capacity());
         }
@@ -227,6 +251,7 @@ impl<'a> InferenceEngine<'a> {
         let c = self.out_dim;
         match &self.backend {
             Backend::Pjrt(sess) => {
+                let _serial = exec_lock.map(|l| l.lock().unwrap());
                 let outs = sess.infer_batch(batch)?;
                 let rows = outs[0].as_f32()?;
                 sur.out.clear();

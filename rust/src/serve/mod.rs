@@ -19,6 +19,11 @@
 //!   lookups so learnable-embedding models serve too.
 //! * [`batcher::MicroBatcher`] — coalesces concurrent single-node
 //!   requests into size/deadline-bounded micro-batches.
+//! * [`pool::EnginePool`] — N engine scratches draining one shared
+//!   micro-batcher queue (coordinator/worker scoped threads), with
+//!   replies bit-identical for any pool size.
+//! * [`refresh`] — background hot-row re-read after a generation bump,
+//!   so a model/embedding update doesn't turn into a miss storm.
 //! * [`offline::OfflineInference`] — streams the full node set through
 //!   the prefetch pipeline and writes sharded GSTF embedding files,
 //!   the GiGL-style precompute the cache warms from.
@@ -27,21 +32,28 @@ pub mod batcher;
 pub mod cache;
 pub mod engine;
 pub mod offline;
+pub mod pool;
+pub mod refresh;
 
-pub use batcher::{closed_loop, ClosedLoopStats, MicroBatcher, MicroBatcherCfg, ServeRequest};
-pub use cache::{cache_key, EmbTableSource, EmbeddingCache, RowSource};
+pub use batcher::{ClosedLoopStats, MicroBatcher, MicroBatcherCfg, ServeRequest};
+pub use cache::{cache_key, split_key, Admission, EmbTableSource, EmbeddingCache, RowSource};
 pub use engine::{InferenceEngine, ServeScratch};
 pub use offline::{read_shards, OfflineInference, OfflineReport};
+pub use pool::{closed_loop, EnginePool, EnginePoolCfg};
+pub use refresh::{refresh_hot_rows, refresh_loop, EngineSource, RefreshCfg, RefreshStats};
 
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use crate::util::Rng;
 
-/// Parameters for the canonical two-arm closed-loop serving benchmark
+/// Parameters for the canonical closed-loop serving benchmark
 /// (`gs serve-bench` / the `serve` pipeline stage): a Zipf trace is
-/// replayed uncached, then again over a warmed cache, and predictions
-/// must be bit-identical across arms.
+/// replayed uncached, then again over a warmed cache — and, with
+/// `refresh > 0`, a third time after a mid-bench generation bump plus
+/// a background-style hot-row refresh.  Predictions must be
+/// bit-identical across every arm.
 #[derive(Debug, Clone)]
 pub struct ServeBenchParams {
     pub seed: u64,
@@ -50,25 +62,39 @@ pub struct ServeBenchParams {
     pub clients: usize,
     /// Warmed-arm cache capacity (rows).
     pub cache: usize,
-    pub batcher: MicroBatcherCfg,
+    /// Admission policy of the warmed-arm cache.
+    pub admission: Admission,
+    /// Engine-pool size + micro-batching policy (all arms share it).
+    pub pool: EnginePoolCfg,
+    /// Hot rows to re-read after the mid-bench generation bump; 0
+    /// skips the refreshed arm.
+    pub refresh: usize,
 }
 
 #[derive(Debug, Clone, Default)]
 pub struct ServeBenchReport {
     pub uncached: ClosedLoopStats,
     pub warmed: ClosedLoopStats,
+    /// Third arm: replay after `bump_generation` + hot-row refresh
+    /// (present iff `refresh > 0`).
+    pub refreshed: Option<ClosedLoopStats>,
+    /// Rows the refresh pass re-read before the third arm.
+    pub refreshed_rows: usize,
     /// Distinct seeds in the trace (the warm-up working set).
     pub distinct: usize,
     /// Every prediction identical across arms and repeats.
     pub identical: bool,
 }
 
-/// Run the two-arm closed-loop bench over `engine`'s dataset: Zipf
-/// traffic over the target node type through the micro-batcher, one
-/// uncached arm, then a warmed-cache arm over the same trace (the
-/// warm-up stores the canonical prediction of every distinct node,
-/// batched to engine capacity — canonical sampling makes those rows
-/// bit-identical to per-node recompute).
+/// Run the closed-loop bench over `engine`'s dataset: Zipf traffic
+/// over the target node type through the engine pool, one uncached
+/// arm, then a warmed-cache arm over the same trace (the warm-up
+/// stores the canonical prediction of every distinct node, batched to
+/// engine capacity — canonical sampling makes those rows bit-identical
+/// to per-node recompute).  With `refresh > 0` the engine generation
+/// is bumped (simulating a model update), the hot rows are re-read
+/// through [`EngineSource`], and the trace replays a third time — the
+/// miss storm the background refresher exists to prevent.
 pub fn run_serve_bench(
     engine: &InferenceEngine,
     p: &ServeBenchParams,
@@ -81,31 +107,55 @@ pub fn run_serve_bench(
     let trace: Vec<(u32, u32)> =
         (0..p.requests).map(|_| (nt, zipf.sample(&mut rng) as u32)).collect();
 
-    let mut nocache = EmbeddingCache::new(0);
+    let nocache = Mutex::new(EmbeddingCache::new(0));
     let (uncached, replies0) =
-        closed_loop(engine, p.batcher.clone(), &mut nocache, &trace, p.clients)?;
+        closed_loop(engine, p.pool.clone(), &nocache, &trace, p.clients)?;
 
-    let mut cache = EmbeddingCache::new(p.cache);
-    cache.set_generation(engine.generation());
-    let mut sc = engine.make_scratch();
+    let cache = Mutex::new(EmbeddingCache::with_admission(p.cache, p.admission));
     let mut seen = std::collections::HashSet::new();
     let distinct: Vec<(u32, u32)> = trace.iter().filter(|&&q| seen.insert(q)).copied().collect();
-    let c = engine.out_dim();
-    for chunk in distinct.chunks(engine.capacity()) {
-        let rows = engine.forward(&mut sc, chunk)?;
-        for (i, &(nt, id)) in chunk.iter().enumerate() {
-            cache.put(cache_key(nt, id), &rows[i * c..(i + 1) * c]);
+    {
+        let mut cache = cache.lock().unwrap();
+        cache.set_generation(engine.generation());
+        let mut sc = engine.make_scratch();
+        let c = engine.out_dim();
+        for chunk in distinct.chunks(engine.capacity()) {
+            let rows = engine.forward(&mut sc, chunk)?;
+            for (i, &(nt, id)) in chunk.iter().enumerate() {
+                cache.put(cache_key(nt, id), &rows[i * c..(i + 1) * c]);
+            }
         }
     }
     let (warmed, replies1) =
-        closed_loop(engine, p.batcher.clone(), &mut cache, &trace, p.clients)?;
+        closed_loop(engine, p.pool.clone(), &cache, &trace, p.clients)?;
+
+    let mut refreshed = None;
+    let mut refreshed_rows = 0usize;
+    let mut replies2 = Vec::new();
+    if p.refresh > 0 {
+        // A model update lands mid-serve: every cached row goes stale
+        // at once.  Re-read the hot set before replaying.
+        engine.bump_generation();
+        let mut src = EngineSource::new(engine);
+        refreshed_rows = refresh_hot_rows(&cache, &mut src, p.refresh)?;
+        let (r, rr) = closed_loop(engine, p.pool.clone(), &cache, &trace, p.clients)?;
+        refreshed = Some(r);
+        replies2 = rr;
+    }
 
     let mut expected: std::collections::HashMap<(u32, u32), Vec<f32>> = Default::default();
     let mut identical = true;
-    for (k, v) in replies0.into_iter().chain(replies1) {
+    for (k, v) in replies0.into_iter().chain(replies1).chain(replies2) {
         identical &= expected.entry(k).or_insert_with(|| v.clone()) == &v;
     }
-    Ok(ServeBenchReport { uncached, warmed, distinct: distinct.len(), identical })
+    Ok(ServeBenchReport {
+        uncached,
+        warmed,
+        refreshed,
+        refreshed_rows,
+        distinct: distinct.len(),
+        identical,
+    })
 }
 
 /// Lock-free log₂-bucketed latency histogram (microsecond buckets:
@@ -165,11 +215,14 @@ impl LatencyHistogram {
 }
 
 /// Per-request serving counters: latency histogram + cache hit/miss.
+/// `coalesced` is a *subset* of `hits`: requests that joined an
+/// in-flight pool batch instead of triggering their own compute.
 #[derive(Debug, Default)]
 pub struct ServeMetrics {
     pub latency: LatencyHistogram,
     hits: AtomicU64,
     misses: AtomicU64,
+    coalesced: AtomicU64,
 }
 
 impl ServeMetrics {
@@ -185,12 +238,25 @@ impl ServeMetrics {
         self.misses.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A request whose key was already in flight: counted as a hit
+    /// (no extra backend work) and tracked separately.  The hit/miss
+    /// totals are pool-size invariant under a non-evicting cache; the
+    /// hit/coalesced split depends on completion timing.
+    pub fn record_coalesced(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        self.coalesced.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn hits(&self) -> u64 {
         self.hits.load(Ordering::Relaxed)
     }
 
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn coalesced(&self) -> u64 {
+        self.coalesced.load(Ordering::Relaxed)
     }
 
     pub fn served(&self) -> u64 {

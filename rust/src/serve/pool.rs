@@ -1,0 +1,394 @@
+//! The serving engine *pool*: N [`InferenceEngine`] scratches drain
+//! one shared micro-batcher queue.
+//!
+//! PR 2's `MicroBatcher::run` answers the queue with a single engine
+//! scratch — one core against millions-of-users traffic.  The pool
+//! keeps the same batching policy ([`MicroBatcherCfg`]) but splits the
+//! work across scoped threads, the same worker/consumer shape as
+//! `dataloader::run_pipeline`:
+//!
+//! ```text
+//! clients ─▶ request queue ─▶ coordinator ─▶ job queue ─▶ worker 0..N
+//!                                 ▲   (owns cache + batching policy)     │
+//!                                 └────────── completions ◀──────────────┘
+//! ```
+//!
+//! * The **coordinator** is the only thread that touches the cache and
+//!   the batching state: it answers hits on arrival, coalesces
+//!   duplicate in-flight keys, cuts size/deadline-bounded batches of
+//!   distinct misses and hands them to the job queue.
+//! * **Workers** each own a private [`ServeScratch`] and run the full
+//!   sample → assemble → execute path per batch.  With a PJRT backend
+//!   the execute step is serialized through one `Mutex`
+//!   ([`InferenceEngine::forward_locked`]) so a single session never
+//!   runs concurrently; the deterministic surrogate executes
+//!   lock-free.
+//! * Completions are applied to the cache **in dispatch order** (a
+//!   reorder buffer holds early finishers), so the cache's content
+//!   evolves identically for any pool size.
+//!
+//! Determinism contract (the pooled extension of PR 1's per-batch RNG
+//! invariant): because the engine samples canonically per node, every
+//! reply is bit-identical for any pool size, any batch composition and
+//! any worker interleaving.  Hit/miss *accounting* is also pool-size
+//! invariant whenever the cache doesn't evict (capacity ≥ working set)
+//! and the request order is fixed: a request misses iff its key was
+//! never requested before, because keys move atomically from forming
+//! batch → in-flight → cache under the coordinator.  Requests that
+//! find their key in flight are counted as hits (and additionally as
+//! `coalesced`); the hit/coalesced *split* depends on completion
+//! timing, the hit+miss totals do not.  `tests/serve.rs`
+//! (`pool_sizes_are_bit_identical`) drains one stream through pools of
+//! 1, 2 and 8 and asserts identical replies and identical counters.
+
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::batcher::{ClosedLoopStats, MicroBatcherCfg, ServeRequest};
+use super::cache::{cache_key, EmbeddingCache};
+use super::engine::InferenceEngine;
+use super::ServeMetrics;
+use crate::util::FxHashMap;
+
+/// Engine-pool knobs: worker count plus the shared batching policy.
+/// `serve.pool_workers` resolves `"auto"` before this struct exists.
+#[derive(Debug, Clone)]
+pub struct EnginePoolCfg {
+    /// Engine scratches draining the queue (≥ 1).
+    pub workers: usize,
+    pub batcher: MicroBatcherCfg,
+}
+
+impl Default for EnginePoolCfg {
+    fn default() -> Self {
+        EnginePoolCfg { workers: 1, batcher: MicroBatcherCfg::default() }
+    }
+}
+
+/// One dispatched micro-batch: distinct miss seeds, identified by a
+/// dense sequence number.
+struct Job {
+    seq: u64,
+    seeds: Vec<(u32, u32)>,
+}
+
+/// What flows into the coordinator: forwarded client requests, worker
+/// completions, and the end-of-stream marker from the forwarder.
+enum Msg {
+    Req(ServeRequest),
+    Done {
+        seq: u64,
+        /// Engine generation observed *before* the forward ran; rows
+        /// are cached only if this is still current at apply time.
+        gen: u64,
+        rows: Result<Vec<f32>, String>,
+    },
+    Eof,
+}
+
+/// A dispatched batch the coordinator is still tracking: its seed list
+/// (for cache insertion) and every request waiting on it.
+struct PendingBatch {
+    seeds: Vec<(u32, u32)>,
+    waiters: Vec<(usize, ServeRequest)>,
+}
+
+pub struct EnginePool {
+    pub cfg: EnginePoolCfg,
+}
+
+impl EnginePool {
+    pub fn new(cfg: EnginePoolCfg) -> EnginePool {
+        EnginePool { cfg }
+    }
+
+    /// Blocking serve loop: drains `rx` until every request sender has
+    /// been dropped and every dispatched batch has been applied.
+    /// `cache` is shared behind a `Mutex` so a background refresher
+    /// (`serve::refresh`) can re-warm it concurrently.
+    pub fn run(
+        &self,
+        engine: &InferenceEngine,
+        cache: &Mutex<EmbeddingCache>,
+        rx: Receiver<ServeRequest>,
+        metrics: &ServeMetrics,
+    ) -> Result<()> {
+        let workers = self.cfg.workers.max(1);
+        let cap = self.cfg.batcher.max_batch.min(engine.capacity()).max(1);
+        let c = engine.out_dim();
+        let exec_lock = Mutex::new(());
+        let (msg_tx, msg_rx) = channel::<Msg>();
+        let (job_tx, job_rx) = std::sync::mpsc::sync_channel::<Job>(workers * 2);
+        let job_rx = Mutex::new(job_rx);
+
+        std::thread::scope(|scope| -> Result<()> {
+            // Forwarder: client requests → merged coordinator queue.
+            let fwd_tx = msg_tx.clone();
+            scope.spawn(move || {
+                for req in rx.iter() {
+                    if fwd_tx.send(Msg::Req(req)).is_err() {
+                        return;
+                    }
+                }
+                let _ = fwd_tx.send(Msg::Eof);
+            });
+            // Workers: private scratch each, shared job queue.
+            for _ in 0..workers {
+                let done_tx = msg_tx.clone();
+                let job_rx = &job_rx;
+                let exec_lock = &exec_lock;
+                scope.spawn(move || {
+                    let mut sc = engine.make_scratch();
+                    loop {
+                        let job = match job_rx.lock().unwrap().recv() {
+                            Ok(j) => j,
+                            Err(_) => return, // coordinator done
+                        };
+                        let gen = engine.generation();
+                        let rows = engine
+                            .forward_locked(&mut sc, &job.seeds, exec_lock)
+                            .map(|r| r.to_vec())
+                            .map_err(|e| e.to_string());
+                        if done_tx.send(Msg::Done { seq: job.seq, gen, rows }).is_err() {
+                            return;
+                        }
+                    }
+                });
+            }
+            drop(msg_tx); // the coordinator only receives
+
+            // ---- coordinator --------------------------------------
+            let mut in_flight: FxHashMap<u64, (u64, usize)> = FxHashMap::default();
+            let mut batches: FxHashMap<u64, PendingBatch> = FxHashMap::default();
+            let mut reorder: BTreeMap<u64, (u64, Result<Vec<f32>, String>)> = BTreeMap::new();
+            let mut forming_seeds: Vec<(u32, u32)> = Vec::new();
+            let mut forming_waiters: Vec<(usize, ServeRequest)> = Vec::new();
+            let mut deadline: Option<Instant> = None;
+            let mut next_seq: u64 = 0; // next batch to dispatch
+            let mut next_apply: u64 = 0; // next completion to apply
+            let mut eof = false;
+            let mut first_err: Option<anyhow::Error> = None;
+
+            // Cut the forming batch over to the workers.
+            macro_rules! dispatch {
+                () => {{
+                    let seq = next_seq;
+                    next_seq += 1;
+                    let seeds = std::mem::take(&mut forming_seeds);
+                    let waiters = std::mem::take(&mut forming_waiters);
+                    deadline = None;
+                    for (slot, &(nt, id)) in seeds.iter().enumerate() {
+                        in_flight.insert(cache_key(nt, id), (seq, slot));
+                    }
+                    let job_seeds = seeds.clone();
+                    batches.insert(seq, PendingBatch { seeds, waiters });
+                    if job_tx.send(Job { seq, seeds: job_seeds }).is_err() {
+                        first_err
+                            .get_or_insert_with(|| anyhow!("engine-pool workers exited early"));
+                    }
+                }};
+            }
+
+            'serve: loop {
+                if first_err.is_some() || (eof && forming_seeds.is_empty() && next_apply == next_seq)
+                {
+                    break;
+                }
+                let msg = if let Some(dl) = deadline {
+                    let now = Instant::now();
+                    if now >= dl {
+                        None
+                    } else {
+                        match msg_rx.recv_timeout(dl - now) {
+                            Ok(m) => Some(m),
+                            Err(RecvTimeoutError::Timeout) => None,
+                            Err(RecvTimeoutError::Disconnected) => break 'serve,
+                        }
+                    }
+                } else {
+                    match msg_rx.recv() {
+                        Ok(m) => Some(m),
+                        Err(_) => break 'serve,
+                    }
+                };
+                match msg {
+                    // Deadline fired: flush the partial batch.
+                    None => dispatch!(),
+                    Some(Msg::Req(req)) => {
+                        let key = cache_key(req.nt, req.id);
+                        let hit = {
+                            let mut cache = cache.lock().unwrap();
+                            cache.set_generation(engine.generation());
+                            cache.get(key).map(|row| row.to_vec())
+                        };
+                        if let Some(val) = hit {
+                            metrics.record_hit();
+                            metrics.latency.record(req.t_enq.elapsed());
+                            let _ = req.reply.send(Ok(val));
+                        } else if let Some(&(seq, slot)) = in_flight.get(&key) {
+                            // Already being computed: join that batch.
+                            metrics.record_coalesced();
+                            batches
+                                .get_mut(&seq)
+                                .expect("in-flight key points at a live batch")
+                                .waiters
+                                .push((slot, req));
+                        } else if let Some(slot) =
+                            forming_seeds.iter().position(|&s| s == (req.nt, req.id))
+                        {
+                            metrics.record_coalesced();
+                            forming_waiters.push((slot, req));
+                        } else {
+                            metrics.record_miss();
+                            let slot = forming_seeds.len();
+                            forming_seeds.push((req.nt, req.id));
+                            forming_waiters.push((slot, req));
+                            if forming_seeds.len() == 1 {
+                                deadline = Some(Instant::now() + self.cfg.batcher.deadline);
+                            }
+                            if forming_seeds.len() >= cap {
+                                dispatch!();
+                            }
+                        }
+                    }
+                    Some(Msg::Done { seq, gen, rows }) => {
+                        reorder.insert(seq, (gen, rows));
+                        // Apply strictly in dispatch order so cache
+                        // content is pool-size invariant.
+                        while let Some((gen, rows)) = reorder.remove(&next_apply) {
+                            let seq = next_apply;
+                            next_apply += 1;
+                            let PendingBatch { seeds, waiters } =
+                                batches.remove(&seq).expect("completion for a live batch");
+                            for &(nt, id) in &seeds {
+                                in_flight.remove(&cache_key(nt, id));
+                            }
+                            match rows {
+                                Ok(rows) => {
+                                    {
+                                        let mut cache = cache.lock().unwrap();
+                                        cache.set_generation(engine.generation());
+                                        for (i, &(nt, id)) in seeds.iter().enumerate() {
+                                            cache.put_if_current(
+                                                cache_key(nt, id),
+                                                &rows[i * c..(i + 1) * c],
+                                                gen,
+                                            );
+                                        }
+                                    }
+                                    for (slot, req) in waiters {
+                                        metrics.latency.record(req.t_enq.elapsed());
+                                        let _ = req
+                                            .reply
+                                            .send(Ok(rows[slot * c..(slot + 1) * c].to_vec()));
+                                    }
+                                }
+                                Err(msg) => {
+                                    for (_, req) in waiters {
+                                        let _ = req.reply.send(Err(msg.clone()));
+                                    }
+                                    first_err.get_or_insert_with(|| anyhow!("{msg}"));
+                                }
+                            }
+                        }
+                    }
+                    Some(Msg::Eof) => {
+                        eof = true;
+                        if !forming_seeds.is_empty() {
+                            dispatch!();
+                        }
+                    }
+                }
+            }
+            // Dropping the job queue releases the workers.  Dropping
+            // msg_rx discards any queued requests (their reply senders
+            // drop, erroring the waiting clients) and fails the
+            // forwarder's next send — without this, an early error
+            // exit would strand clients whose requests sit unread in
+            // the merged queue.  Outstanding batch waiters drop with
+            // `batches`.
+            drop(job_tx);
+            drop(msg_rx);
+            match first_err {
+                Some(e) => Err(e),
+                None => Ok(()),
+            }
+        })
+    }
+}
+
+/// Drive `trace` through an engine pool from `clients` closed-loop
+/// client threads (each waits for its reply before sending the next
+/// request).  Returns the stats plus every `(seed, prediction)` reply
+/// in completion order, for determinism / bit-identity checks.
+pub fn closed_loop(
+    engine: &InferenceEngine,
+    cfg: EnginePoolCfg,
+    cache: &Mutex<EmbeddingCache>,
+    trace: &[(u32, u32)],
+    clients: usize,
+) -> Result<(ClosedLoopStats, Vec<((u32, u32), Vec<f32>)>)> {
+    let metrics = ServeMetrics::new();
+    let pool = EnginePool::new(cfg);
+    let (tx, rx) = std::sync::mpsc::sync_channel::<ServeRequest>(4096);
+    let clients = clients.max(1);
+    let t0 = Instant::now();
+    let mut replies: Vec<((u32, u32), Vec<f32>)> = Vec::new();
+    let mut first_err: Option<anyhow::Error> = None;
+    std::thread::scope(|scope| {
+        let pool_handle = {
+            let metrics = &metrics;
+            scope.spawn(move || pool.run(engine, cache, rx, metrics))
+        };
+        let mut client_handles = Vec::with_capacity(clients);
+        for w in 0..clients {
+            let tx: SyncSender<ServeRequest> = tx.clone();
+            let share: Vec<(u32, u32)> = trace.iter().skip(w).step_by(clients).copied().collect();
+            client_handles.push(scope.spawn(move || -> Result<Vec<((u32, u32), Vec<f32>)>> {
+                let mut out = Vec::with_capacity(share.len());
+                for (nt, id) in share {
+                    let (rtx, rrx): (Sender<_>, Receiver<_>) = channel();
+                    tx.send(ServeRequest::new(nt, id, rtx))
+                        .map_err(|_| anyhow!("engine pool exited early"))?;
+                    let val = rrx
+                        .recv()
+                        .map_err(|_| anyhow!("reply channel dropped"))?
+                        .map_err(|e| anyhow!("serve error: {e}"))?;
+                    out.push(((nt, id), val));
+                }
+                Ok(out)
+            }));
+        }
+        drop(tx); // the pool drains and exits once the clients are done
+        for h in client_handles {
+            match h.join().expect("client thread panicked") {
+                Ok(r) => replies.extend(r),
+                Err(e) => {
+                    first_err.get_or_insert(e);
+                }
+            }
+        }
+        if let Err(e) = pool_handle.join().expect("pool thread panicked") {
+            first_err.get_or_insert(e);
+        }
+    });
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let stats = ClosedLoopStats {
+        requests: trace.len(),
+        wall_s,
+        rps: trace.len() as f64 / wall_s.max(1e-9),
+        p50_us: metrics.latency.p50_us(),
+        p99_us: metrics.latency.p99_us(),
+        hit_rate: metrics.hit_rate(),
+        hits: metrics.hits(),
+        misses: metrics.misses(),
+        coalesced: metrics.coalesced(),
+    };
+    Ok((stats, replies))
+}

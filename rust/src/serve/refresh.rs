@@ -1,0 +1,217 @@
+//! Background cache refresh: after a generation bump (sparse
+//! embedding update via `dist::EmbTable::sparse_adam`, or a model
+//! refresh via `InferenceEngine::bump_generation`), re-read the hot
+//! rows through their [`RowSource`] instead of letting the whole
+//! working set collapse into a miss storm.
+//!
+//! Generation stamping already guarantees **no stale row is ever
+//! served**: a cached row whose stamp predates the source's current
+//! generation reports a miss.  What stamping alone cannot prevent is
+//! the latency cliff right after a bump — every hot key misses at
+//! once and the serving path recomputes them inline.  The refresher
+//! closes that gap: it walks the cache's LRU list (most recent first,
+//! [`EmbeddingCache::hot_keys`]), re-fetches up to `limit` rows from
+//! the source, and re-stamps them at the generation the fetch
+//! observed.  A fetch that races with *another* bump is retried, so a
+//! re-stamped row is always consistent with its stamp.
+//!
+//! The cache lock is held only to snapshot keys and to insert single
+//! rows — never across a fetch — so serving continues concurrently.
+
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::cache::{split_key, EmbeddingCache, RowSource};
+use super::engine::{InferenceEngine, ServeScratch};
+
+/// Knobs for [`refresh_loop`] (`serve.refresh` enables it in the
+/// bench stage with `limit` hot rows).
+#[derive(Debug, Clone)]
+pub struct RefreshCfg {
+    /// How often to compare the source generation with the cache's.
+    pub poll: Duration,
+    /// Most-recently-used rows re-read per refresh pass.
+    pub limit: usize,
+}
+
+impl Default for RefreshCfg {
+    fn default() -> Self {
+        RefreshCfg { poll: Duration::from_millis(10), limit: 1024 }
+    }
+}
+
+/// Counters a refresh thread publishes (Relaxed; dashboard-grade).
+#[derive(Debug, Default)]
+pub struct RefreshStats {
+    passes: AtomicU64,
+    rows: AtomicU64,
+}
+
+impl RefreshStats {
+    pub fn new() -> RefreshStats {
+        RefreshStats::default()
+    }
+
+    /// Refresh passes that re-read at least one row.
+    pub fn passes(&self) -> u64 {
+        self.passes.load(Ordering::Relaxed)
+    }
+
+    /// Total rows re-read across all passes.
+    pub fn rows(&self) -> u64 {
+        self.rows.load(Ordering::Relaxed)
+    }
+}
+
+/// Rows re-read per retry unit: small enough that a concurrent bump
+/// only wastes one chunk of fetches, big enough to amortize batched
+/// sources (`RowSource::fetch_rows`).
+const REFRESH_CHUNK: usize = 64;
+
+/// One refresh pass: if the source generation has moved past the
+/// cache's, re-read up to `limit` of the most-recently-used rows and
+/// re-stamp them at the generation each fetch observed.  Returns the
+/// number of rows refreshed (0 when the cache is already current).
+///
+/// Rows are re-inserted coldest-first so the pass preserves the
+/// cache's recency order (MRU-first insertion would invert it and
+/// make the hottest row the next eviction victim).  The generation is
+/// re-validated against the source *under the cache lock* before
+/// stamping: generations are monotonic and every serving path adopts
+/// them under the same lock, so the cache generation can never move
+/// backwards — a refresh that lost a race with a newer bump retries
+/// instead of un-staling older rows.
+pub fn refresh_hot_rows(
+    cache: &Mutex<EmbeddingCache>,
+    src: &mut impl RowSource,
+    limit: usize,
+) -> Result<usize> {
+    let (mut keys, cache_gen) = {
+        let c = cache.lock().unwrap();
+        (c.hot_keys(limit), c.generation())
+    };
+    if src.source_generation() == cache_gen || keys.is_empty() {
+        return Ok(0);
+    }
+    keys.reverse(); // coldest of the hot set first, MRU last
+    let mut rows = Vec::new();
+    let mut refreshed = 0usize;
+    let dim = src.row_dim();
+    for chunk in keys.chunks(REFRESH_CHUNK) {
+        let seeds: Vec<(u32, u32)> = chunk.iter().map(|&k| split_key(k)).collect();
+        // Re-read until the generation is stable around the fetch, so
+        // the stamp is consistent with the rows (bounded: a source
+        // bumping faster than we can read isn't worth refreshing).
+        for _attempt in 0..4 {
+            let gen = src.source_generation();
+            src.fetch_rows(&seeds, &mut rows)?;
+            let mut c = cache.lock().unwrap();
+            // Validate under the lock: if the source moved on (and a
+            // serving thread may already have stamped newer rows),
+            // retry rather than roll the generation backwards.
+            if src.source_generation() == gen {
+                c.set_generation(gen);
+                for (i, &key) in chunk.iter().enumerate() {
+                    c.put(key, &rows[i * dim..(i + 1) * dim]);
+                }
+                refreshed += chunk.len();
+                break;
+            }
+        }
+    }
+    Ok(refreshed)
+}
+
+/// Blocking refresh loop for a background thread: poll the source
+/// generation every `cfg.poll`, refreshing the hot set whenever it
+/// moves, until `stop` is raised.  Spawn it in a `std::thread::scope`
+/// next to the engine pool, sharing the pool's `Mutex`-wrapped cache.
+///
+/// **One generation domain per cache.**  A cache is stamped from
+/// exactly one counter: the engine pool stamps its cache with
+/// `InferenceEngine::generation()`, so a refresher sharing that cache
+/// must use a source in the same domain ([`EngineSource`]).
+/// [`EmbTableSource`](super::cache::EmbTableSource) pairs with
+/// read-through embedding caches (`EmbeddingCache::get_through`),
+/// which are stamped with the *table's* counter.  Mixing domains
+/// makes the two writers fight over the stamp — every refresh is
+/// immediately re-staled by the serving path and the loop re-fetches
+/// the hot set on each poll tick.
+pub fn refresh_loop(
+    cache: &Mutex<EmbeddingCache>,
+    src: &mut impl RowSource,
+    cfg: &RefreshCfg,
+    stop: &AtomicBool,
+    stats: &RefreshStats,
+) -> Result<()> {
+    while !stop.load(Ordering::Acquire) {
+        let n = refresh_hot_rows(cache, src, cfg.limit)?;
+        if n > 0 {
+            stats.passes.fetch_add(1, Ordering::Relaxed);
+            stats.rows.fetch_add(n as u64, Ordering::Relaxed);
+        }
+        std::thread::sleep(cfg.poll);
+    }
+    Ok(())
+}
+
+/// The inference engine as a [`RowSource`]: the canonical per-node
+/// prediction is the row, the model generation is the source
+/// generation.  This is what lets the refresher re-warm a *prediction*
+/// cache after `bump_generation`, not just embedding-table caches.
+pub struct EngineSource<'e, 'a> {
+    engine: &'e InferenceEngine<'a>,
+    sc: ServeScratch<'a>,
+    /// When sharing a PJRT engine with a running pool, pass the pool's
+    /// execution lock so the session never executes concurrently.
+    exec_lock: Option<&'e Mutex<()>>,
+}
+
+impl<'e, 'a> EngineSource<'e, 'a> {
+    pub fn new(engine: &'e InferenceEngine<'a>) -> EngineSource<'e, 'a> {
+        EngineSource { engine, sc: engine.make_scratch(), exec_lock: None }
+    }
+
+    pub fn with_exec_lock(
+        engine: &'e InferenceEngine<'a>,
+        exec_lock: &'e Mutex<()>,
+    ) -> EngineSource<'e, 'a> {
+        EngineSource { engine, sc: engine.make_scratch(), exec_lock: Some(exec_lock) }
+    }
+}
+
+impl RowSource for EngineSource<'_, '_> {
+    fn row_dim(&self) -> usize {
+        self.engine.out_dim()
+    }
+
+    fn source_generation(&self) -> u64 {
+        self.engine.generation()
+    }
+
+    fn fetch_row(&mut self, nt: u32, id: u32, out: &mut Vec<f32>) -> Result<()> {
+        let rows = match self.exec_lock {
+            Some(lock) => self.engine.forward_locked(&mut self.sc, &[(nt, id)], lock)?,
+            None => self.engine.forward(&mut self.sc, &[(nt, id)])?,
+        };
+        out.clear();
+        out.extend_from_slice(rows);
+        Ok(())
+    }
+
+    /// Batched forwards at engine capacity — one sample/assemble/
+    /// execute per chunk instead of per row.
+    fn fetch_rows(&mut self, seeds: &[(u32, u32)], out: &mut Vec<f32>) -> Result<()> {
+        out.clear();
+        for chunk in seeds.chunks(self.engine.capacity().max(1)) {
+            let rows = match self.exec_lock {
+                Some(lock) => self.engine.forward_locked(&mut self.sc, chunk, lock)?,
+                None => self.engine.forward(&mut self.sc, chunk)?,
+            };
+            out.extend_from_slice(rows);
+        }
+        Ok(())
+    }
+}

@@ -125,13 +125,16 @@ fn run_conf_with_train_matches_separate_train() {
 }
 
 /// The serve stage runs end-to-end through the pipeline (surrogate
-/// backend) and its internal bit-identity gate holds.
+/// backend) with an engine pool, TinyLFU admission and the post-bump
+/// refresh arm, and its internal bit-identity gate holds.  The
+/// outcome also carries per-stage wall-clock.
 #[test]
 fn pipeline_serve_stage_runs() {
     let cfg = RunConfig::parse_str(
         r#"{"seed": 7,
             "data": {"dataset": "mag", "size": 400},
             "serve": {"requests": 200, "clients": 2, "cache": 256,
+                      "pool_workers": 2, "admission": "tinylfu", "refresh": 64,
                       "max_batch": 8, "deadline_us": 200}}"#,
     )
     .unwrap();
@@ -140,6 +143,13 @@ fn pipeline_serve_stage_runs() {
     assert_eq!(u.requests, 200);
     assert_eq!(w.requests, 200);
     assert!(w.hit_rate > 0.0, "warmed arm must hit the cache");
+    let r = out.serve_refreshed.expect("serve.refresh > 0 adds the refreshed arm");
+    assert_eq!(r.requests, 200);
+    assert!(r.hit_rate > 0.0, "refresh must prevent the post-bump miss storm");
+    // Per-stage wall-clock, in execution order.
+    let names: Vec<&str> = out.stage_secs.iter().map(|(n, _)| n.as_str()).collect();
+    assert_eq!(names, vec!["data+partition", "serve"]);
+    assert!(out.stage_secs.iter().all(|&(_, s)| s >= 0.0));
 }
 
 /// The shipped example run configs must parse, validate and resolve.

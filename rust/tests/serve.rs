@@ -1,19 +1,26 @@
 //! Serving-path tests: cache hit/miss correctness against uncached
 //! recompute (bit-identical), micro-batcher deadline flush, offline
-//! shard round-trip + cache warming, and determinism under concurrent
-//! requests.  The engine runs the deterministic surrogate backend, so
-//! everything here works without AOT artifacts or PJRT.
+//! shard round-trip + cache warming, determinism under concurrent
+//! requests, engine-pool size invariance, and background cache
+//! refresh after generation bumps.  The engine runs the deterministic
+//! surrogate backend, so everything here works without AOT artifacts
+//! or PJRT.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, sync_channel};
-use std::time::Duration;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use graphstorm::datagen::{self, mag};
 use graphstorm::dataloader::GsDataset;
+use graphstorm::dist::{EmbTable, TrafficCounters};
 use graphstorm::partition::PartitionBook;
 use graphstorm::runtime::ArtifactSpec;
 use graphstorm::serve::{
-    cache_key, closed_loop, offline::read_shards, EmbeddingCache, InferenceEngine, MicroBatcher,
-    MicroBatcherCfg, OfflineInference, ServeMetrics, ServeRequest,
+    cache_key, closed_loop, offline::read_shards, refresh_hot_rows, refresh_loop, run_serve_bench,
+    Admission, EmbTableSource, EmbeddingCache, EnginePool, EnginePoolCfg, InferenceEngine,
+    MicroBatcher, MicroBatcherCfg, OfflineInference, RefreshCfg, RefreshStats, ServeBenchParams,
+    ServeMetrics, ServeRequest,
 };
 use graphstorm::util::Rng;
 
@@ -159,13 +166,16 @@ fn concurrent_requests_are_deterministic() {
     let mut rng = Rng::seed_from(77);
     let trace: Vec<(u32, u32)> =
         (0..600).map(|_| (nt, rng.gen_range(n_nodes) as u32)).collect();
-    let cfg = MicroBatcherCfg { max_batch: 16, deadline: Duration::from_micros(300) };
+    let cfg = EnginePoolCfg {
+        workers: 2,
+        batcher: MicroBatcherCfg { max_batch: 16, deadline: Duration::from_micros(300) },
+    };
 
     // Two runs with different cache settings + 4 concurrent clients.
-    let mut uncached = EmbeddingCache::new(0);
-    let (s0, replies0) = closed_loop(&engine, cfg.clone(), &mut uncached, &trace, 4).unwrap();
-    let mut cached = EmbeddingCache::new(512);
-    let (s1, replies1) = closed_loop(&engine, cfg, &mut cached, &trace, 4).unwrap();
+    let uncached = Mutex::new(EmbeddingCache::new(0));
+    let (s0, replies0) = closed_loop(&engine, cfg.clone(), &uncached, &trace, 4).unwrap();
+    let cached = Mutex::new(EmbeddingCache::new(512));
+    let (s1, replies1) = closed_loop(&engine, cfg, &cached, &trace, 4).unwrap();
     assert_eq!(s0.requests, 600);
     assert_eq!(replies0.len(), 600);
     assert_eq!(replies1.len(), 600);
@@ -191,12 +201,196 @@ fn generation_bump_invalidates_serving_cache() {
     let ds = mag_ds(300);
     let engine = InferenceEngine::surrogate(&ds, &spec(), 3).unwrap();
     let trace: Vec<(u32, u32)> = vec![(0, 1), (0, 1), (0, 1)];
-    let cfg = MicroBatcherCfg { max_batch: 4, deadline: Duration::from_micros(100) };
-    let mut cache = EmbeddingCache::new(8);
-    let (s0, _) = closed_loop(&engine, cfg.clone(), &mut cache, &trace, 1).unwrap();
+    let cfg = EnginePoolCfg {
+        workers: 1,
+        batcher: MicroBatcherCfg { max_batch: 4, deadline: Duration::from_micros(100) },
+    };
+    let cache = Mutex::new(EmbeddingCache::new(8));
+    let (s0, _) = closed_loop(&engine, cfg.clone(), &cache, &trace, 1).unwrap();
     assert!(s0.hit_rate > 0.0);
     engine.bump_generation();
     // The cached rows are stale now; the first request recomputes.
-    let (s1, _) = closed_loop(&engine, cfg, &mut cache, &trace, 1).unwrap();
+    let (s1, _) = closed_loop(&engine, cfg, &cache, &trace, 1).unwrap();
     assert!(s1.hit_rate < 1.0);
+}
+
+/// The tentpole contract: one fixed request stream drained through
+/// engine pools of size 1, 2 and 8 produces bit-identical replies AND
+/// identical hit/miss accounting (the cache never evicts here, so
+/// accounting is a pure function of request order).
+#[test]
+fn pool_sizes_are_bit_identical() {
+    let ds = mag_ds(400);
+    let engine = InferenceEngine::surrogate(&ds, &spec(), 21).unwrap();
+    let nt = ds.target_ntype as u32;
+    let mut rng = Rng::seed_from(99);
+    // 60 distinct keys over 300 requests: hits, misses and in-flight
+    // coalescing all occur.
+    let trace: Vec<(u32, u32)> = (0..300).map(|_| (nt, rng.gen_range(60) as u32)).collect();
+    let distinct: std::collections::HashSet<(u32, u32)> = trace.iter().copied().collect();
+
+    let mut baseline: Option<(Vec<Vec<f32>>, u64, u64)> = None;
+    for workers in [1usize, 2, 8] {
+        let pool = EnginePool::new(EnginePoolCfg {
+            workers,
+            batcher: MicroBatcherCfg { max_batch: 8, deadline: Duration::from_micros(200) },
+        });
+        let cache = Mutex::new(EmbeddingCache::new(1024)); // never evicts
+        let metrics = ServeMetrics::new();
+        // Open loop: queue the whole stream up-front in a fixed order,
+        // then drain — queue order is identical for every pool size.
+        let (tx, rx) = channel::<ServeRequest>();
+        let mut reply_rxs = Vec::with_capacity(trace.len());
+        for &(nt, id) in &trace {
+            let (rtx, rrx) = channel();
+            tx.send(ServeRequest::new(nt, id, rtx)).unwrap();
+            reply_rxs.push(rrx);
+        }
+        drop(tx);
+        let replies: Vec<Vec<f32>> = std::thread::scope(|scope| {
+            let metrics = &metrics;
+            let cache = &cache;
+            let engine = &engine;
+            let handle = scope.spawn(move || pool.run(engine, cache, rx, metrics));
+            let replies: Vec<Vec<f32>> =
+                reply_rxs.iter().map(|r| r.recv().unwrap().unwrap()).collect();
+            handle.join().expect("pool thread panicked").unwrap();
+            replies
+        });
+        assert_eq!(metrics.served(), trace.len() as u64, "workers={workers}");
+        assert_eq!(
+            metrics.misses() as usize,
+            distinct.len(),
+            "workers={workers}: every distinct key misses exactly once"
+        );
+        assert!(metrics.coalesced() <= metrics.hits());
+        match &baseline {
+            None => baseline = Some((replies, metrics.hits(), metrics.misses())),
+            Some((expect, hits, misses)) => {
+                assert_eq!(&replies, expect, "replies diverged at pool size {workers}");
+                assert_eq!(metrics.hits(), *hits, "hit accounting diverged at {workers}");
+                assert_eq!(metrics.misses(), *misses, "miss accounting diverged at {workers}");
+            }
+        }
+    }
+}
+
+/// After an embedding-table update bumps the generation, one refresh
+/// pass re-reads the hot rows: every subsequent lookup hits at the new
+/// generation with the post-update bytes — no stale row is ever
+/// served.
+#[test]
+fn refresh_rewarms_hot_rows_after_generation_bump() {
+    let book = Arc::new(PartitionBook::single(&[50]));
+    let counters = Arc::new(TrafficCounters::new());
+    let table = EmbTable::new(0, 50, 4, 7, book, counters);
+    let cache = Mutex::new(EmbeddingCache::new(32));
+
+    // Warm 8 hot rows through the read-through path.
+    {
+        let mut src = EmbTableSource { table: &table, worker: 0 };
+        let mut c = cache.lock().unwrap();
+        let mut row = Vec::new();
+        for id in 0..8u32 {
+            assert!(!c.get_through(0, id, &mut src, &mut row).unwrap());
+        }
+    }
+    // A sparse update moves rows 0..8 and bumps the generation.
+    let ids: Vec<u32> = (0..8).collect();
+    table.sparse_adam(&ids, &[0.5; 32], 1e-2);
+    let snap = table.weights_snapshot();
+
+    let mut src = EmbTableSource { table: &table, worker: 0 };
+    let refreshed = refresh_hot_rows(&cache, &mut src, 8).unwrap();
+    assert_eq!(refreshed, 8);
+    // A second pass is a no-op: the cache is current again.
+    assert_eq!(refresh_hot_rows(&cache, &mut src, 8).unwrap(), 0);
+
+    let mut c = cache.lock().unwrap();
+    c.set_generation(table.generation());
+    for id in 0..8u32 {
+        let row = c.get(cache_key(0, id)).expect("refreshed row resident").to_vec();
+        let base = id as usize * 4;
+        assert_eq!(row, &snap[base..base + 4], "stale row served for node {id}");
+    }
+}
+
+/// The background refresh loop notices a generation bump on its own
+/// and re-warms the hot set while the cache stays shared.
+#[test]
+fn background_refresh_loop_tracks_updates() {
+    let book = Arc::new(PartitionBook::single(&[20]));
+    let counters = Arc::new(TrafficCounters::new());
+    let table = EmbTable::new(0, 20, 3, 11, book, counters);
+    let cache = Mutex::new(EmbeddingCache::new(16));
+    {
+        let mut src = EmbTableSource { table: &table, worker: 0 };
+        let mut c = cache.lock().unwrap();
+        let mut row = Vec::new();
+        for id in 0..5u32 {
+            c.get_through(0, id, &mut src, &mut row).unwrap();
+        }
+    }
+    let stop = AtomicBool::new(false);
+    let stats = RefreshStats::new();
+    std::thread::scope(|scope| {
+        let handle = {
+            let (cache, table, stop, stats) = (&cache, &table, &stop, &stats);
+            scope.spawn(move || {
+                let mut src = EmbTableSource { table, worker: 0 };
+                let cfg = RefreshCfg { poll: Duration::from_millis(1), limit: 8 };
+                refresh_loop(cache, &mut src, &cfg, stop, stats)
+            })
+        };
+        table.sparse_adam(&[1, 2], &[1.0; 6], 1e-2);
+        // Wait (bounded) for a refresh pass to land.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while stats.rows() == 0 {
+            assert!(Instant::now() < deadline, "refresher never noticed the bump");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        stop.store(true, Ordering::Release);
+        handle.join().expect("refresh thread panicked").unwrap();
+    });
+    assert!(stats.passes() >= 1);
+    // The re-warmed rows are the post-update bytes at the current
+    // generation.
+    let snap = table.weights_snapshot();
+    let mut c = cache.lock().unwrap();
+    c.set_generation(table.generation());
+    for id in [1u32, 2] {
+        let row = c.get(cache_key(0, id)).expect("hot row re-warmed").to_vec();
+        let base = id as usize * 3;
+        assert_eq!(row, &snap[base..base + 3], "stale row served for node {id}");
+    }
+}
+
+/// Full three-arm serve bench: engine pool + TinyLFU admission +
+/// post-bump refresh, bit-identical across every arm.
+#[test]
+fn serve_bench_three_arms_bit_identical() {
+    let ds = mag_ds(400);
+    let engine = InferenceEngine::surrogate(&ds, &spec(), 17).unwrap();
+    let rep = run_serve_bench(
+        &engine,
+        &ServeBenchParams {
+            seed: 7,
+            requests: 300,
+            alpha: 1.1,
+            clients: 3,
+            cache: 512,
+            admission: Admission::TinyLfu,
+            pool: EnginePoolCfg {
+                workers: 2,
+                batcher: MicroBatcherCfg { max_batch: 8, deadline: Duration::from_micros(200) },
+            },
+            refresh: 64,
+        },
+    )
+    .unwrap();
+    assert!(rep.identical, "predictions diverged across arms");
+    assert!(rep.distinct > 0 && rep.warmed.hit_rate > 0.0);
+    assert!(rep.refreshed_rows > 0, "refresh pass re-read nothing");
+    let r = rep.refreshed.expect("refresh arm ran");
+    assert!(r.hit_rate > 0.0, "post-bump replay should still hit refreshed rows");
 }

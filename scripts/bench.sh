@@ -19,6 +19,11 @@ ROOT="$(cd "$(dirname "$0")/.." && pwd)"
 export GS_BENCH_OUT="${GS_BENCH_OUT:-$ROOT/BENCH_micro.json}"
 export GS_SERVE_BENCH_OUT="${GS_SERVE_BENCH_OUT:-$ROOT/BENCH_serve.json}"
 
+# Lint step: docs must reference real paths/flags/keys before we spend
+# bench time (scripts/check_docs.sh).
+"$ROOT/scripts/check_docs.sh"
+echo
+
 cd "$ROOT/rust"
 GS_BENCH_CONF="${GS_BENCH_CONF_MICRO:-$ROOT/scripts/bench_micro.json}" \
     cargo bench --bench micro "$@"

@@ -1,0 +1,85 @@
+#!/usr/bin/env bash
+# Docs lint: every repo path, `gs` subcommand, `--flag` and serve/run
+# config key that README.md or docs/*.md mentions must actually exist
+# in the tree.  Wired into scripts/bench.sh as its lint step so the
+# docs can't rot silently when code moves.
+#
+# Sources of truth:
+#   * repo paths      -> the filesystem
+#   * gs subcommands  -> `gs help` when a toolchain is available, else
+#                        the command table in rust/src/config/cli.rs
+#   * --flags         -> same (plus a small allowlist of cargo/shell
+#                        flags that appear in build instructions)
+#   * config keys     -> the KEYS tables in rust/src/config/mod.rs
+#
+# Usage: scripts/check_docs.sh   (exits non-zero on any dangling ref)
+set -euo pipefail
+
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+cd "$ROOT"
+
+CLI_SRC="rust/src/config/cli.rs"
+CFG_SRC="rust/src/config/mod.rs"
+fail=0
+err() { echo "check_docs: $1: $2" >&2; fail=1; }
+
+# Flags that legitimately appear in docs but belong to other tools.
+FLAG_ALLOW=" help release bench example features offline quiet "
+
+GS_HELP=""
+if command -v cargo >/dev/null 2>&1; then
+    GS_HELP="$(cd rust && cargo run -q 2>/dev/null -- help || true)"
+fi
+
+shopt -s nullglob
+docs=(README.md docs/*.md)
+[ ${#docs[@]} -gt 0 ] || { echo "check_docs: no docs found" >&2; exit 1; }
+
+for doc in "${docs[@]}"; do
+    [ -f "$doc" ] || { err "$doc" "listed doc missing"; continue; }
+    # 1. Backticked repo paths (with optional :line suffix) must exist.
+    while IFS= read -r p; do
+        base="${p%%:*}"
+        [ -e "$base" ] || err "$doc" "missing path '$base'"
+    done < <(grep -o '`[A-Za-z0-9_./-]*/[A-Za-z0-9_.-]*\.\(rs\|sh\|json\|md\|py\|csv\|toml\)\(:[0-9]*\)\?`' "$doc" \
+             | tr -d '`' | sort -u)
+
+    # 2. Backticked --flags must exist in the gs flag table (or the
+    #    allowlist for non-gs tools).
+    while IFS= read -r f; do
+        name="${f#--}"
+        case "$FLAG_ALLOW" in *" $name "*) continue ;; esac
+        if [ -n "$GS_HELP" ] && printf '%s\n' "$GS_HELP" | grep -q -- "--$name"; then
+            continue
+        fi
+        grep -q "name: \"$name\"" "$CLI_SRC" && continue
+        err "$doc" "unknown CLI flag '--$name'"
+    done < <(grep -o '`--[a-z][a-z-]*' "$doc" | tr -d '`' | sort -u)
+
+    # 3. `gs <subcommand>` mentions must be real subcommands.
+    while IFS= read -r c; do
+        case "$c" in smoke|help|"") continue ;; esac
+        if [ -n "$GS_HELP" ] && printf '%s\n' "$GS_HELP" | grep -q "gs $c"; then
+            continue
+        fi
+        grep -q "name: \"$c\"" "$CLI_SRC" && continue
+        err "$doc" "unknown gs subcommand '$c'"
+    done < <(grep -o '`gs [a-z][a-z-]*' "$doc" | sed 's/^`gs //' | sort -u)
+
+    # 4. Backticked stage.key config paths (e.g. `serve.pool_workers`)
+    #    must appear as keys in the typed config structs.
+    while IFS= read -r sk; do
+        key="${sk#*.}"
+        # `lm.rs` and friends are file names, not config paths.
+        case "$key" in rs|sh|json|md|py|csv|toml) continue ;; esac
+        grep -q "\"$key\"" "$CFG_SRC" && continue
+        err "$doc" "unknown config key '$sk'"
+    done < <(grep -o '`\(loader\|data\|partition\|lm\|task\|infer\|serve\)\.[a-z_]*`' "$doc" \
+             | tr -d '`' | sort -u)
+done
+
+if [ "$fail" -ne 0 ]; then
+    echo "check_docs: FAILED — fix the dangling references above" >&2
+    exit 1
+fi
+echo "check_docs: OK (${#docs[@]} files)"
