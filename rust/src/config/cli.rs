@@ -204,6 +204,39 @@ pub const COMMANDS: &[Cmd] = &[
         ],
     },
     Cmd {
+        name: "train-multi",
+        about: "multi-task training: shared encoder + weighted nc/lp/distill heads",
+        base: r#"{"tasks": [{"kind": "nc"}, {"kind": "distill"}]}"#,
+        flags: &[
+            DATASET,
+            SIZE,
+            NUM_PARTS,
+            METIS,
+            SEED,
+            Flag {
+                name: "arch",
+                takes_value: true,
+                path: "encoder.arch",
+                help: "shared encoder architecture",
+            },
+            Flag {
+                name: "epochs",
+                takes_value: true,
+                path: "encoder.epochs",
+                help: "shared training epochs",
+            },
+            Flag {
+                name: "lr",
+                takes_value: true,
+                path: "encoder.lr",
+                help: "shared learning rate (per-task: --set tasks.N.lr=V)",
+            },
+            NUM_WORKERS,
+            PREFETCH,
+            SET,
+        ],
+    },
+    Cmd {
         name: "infer",
         about: "offline full-graph inference shards",
         base: r#"{"infer": {}}"#,
@@ -438,6 +471,27 @@ mod tests {
         // --lm pretrained creates the stage.
         let cfg = build_config(cmd, &argv(&["--lm", "finetuned"])).unwrap();
         assert_eq!(cfg.lm.as_ref().unwrap().mode, crate::config::LmMode::Finetuned);
+    }
+
+    #[test]
+    fn train_multi_adapter_builds_tasks_array() {
+        let cmd = find_command("train-multi").unwrap();
+        let cfg = build_config(
+            cmd,
+            &argv(&[
+                "--epochs", "2", "--arch", "rgcn",
+                "--set", "tasks.0.weight=3",
+                "--set", "tasks.1.lr=0.001",
+            ]),
+        )
+        .unwrap();
+        let m = cfg.multi.as_ref().unwrap();
+        assert_eq!(m.encoder.epochs, 2);
+        assert_eq!(m.tasks.len(), 2);
+        assert!((m.tasks[0].weight - 3.0).abs() < 1e-12);
+        assert!(m.tasks[1].lr.is_some());
+        assert!(cfg.task.is_none());
+        assert_eq!(cfg.train_options().epochs, 2);
     }
 
     #[test]

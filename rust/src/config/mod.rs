@@ -34,6 +34,7 @@ use crate::dataloader::autoscale_workers;
 use crate::sampling::NegSampler;
 use crate::serve::{Admission, EnginePoolCfg, MicroBatcherCfg};
 use crate::trainer::lp::LpLoss;
+use crate::trainer::multi::{HeadKind, MultiTaskTrainer, TaskSpec};
 use crate::trainer::TrainOptions;
 use crate::util::json::{Json, obj};
 
@@ -540,6 +541,32 @@ impl TaskKind {
     }
 }
 
+/// Parse a task `kind` value (shared by the single `task` object and
+/// `tasks[i]` array entries — `ctx` names the reporting site).
+fn parse_task_kind(ctx: &str, v: &Json) -> Result<TaskKind> {
+    Ok(match take_str(ctx, "kind", v)? {
+        "nc" => TaskKind::Nc,
+        "lp" => TaskKind::Lp,
+        "distill" => TaskKind::Distill,
+        other => bail!(
+            "{ctx}.kind must be \"nc\", \"lp\" or \"distill\", got \"{other}\"{}",
+            did_you_mean(other, &["nc", "lp", "distill"])
+        ),
+    })
+}
+
+/// Parse an LP `loss` value (same sharing as [`parse_task_kind`]).
+fn parse_lp_loss(ctx: &str, v: &Json) -> Result<LpLoss> {
+    Ok(match take_str(ctx, "loss", v)? {
+        "contrastive" => LpLoss::Contrastive,
+        "ce" | "cross-entropy" => LpLoss::CrossEntropy,
+        other => bail!(
+            "{ctx}.loss must be \"contrastive\" or \"ce\", got \"{other}\"{}",
+            did_you_mean(other, &["contrastive", "ce"])
+        ),
+    })
+}
+
 /// Parse a negative-sampler spec (`joint-32`, `local-joint-16`,
 /// `uniform-8`, `in-batch`).
 pub fn parse_neg(s: &str) -> Result<NegSampler> {
@@ -627,15 +654,7 @@ impl TaskCfg {
         let m = stage_obj("task", v)?;
         let kind = match m.get("kind") {
             None => TaskKind::Nc,
-            Some(v) => match take_str("task", "kind", v)? {
-                "nc" => TaskKind::Nc,
-                "lp" => TaskKind::Lp,
-                "distill" => TaskKind::Distill,
-                other => bail!(
-                    "task.kind must be \"nc\", \"lp\" or \"distill\", got \"{other}\"{}",
-                    did_you_mean(other, &["nc", "lp", "distill"])
-                ),
-            },
+            Some(v) => parse_task_kind("task", v)?,
         };
         let only = |key: &str, wanted: TaskKind| -> Result<()> {
             if kind != wanted {
@@ -660,14 +679,7 @@ impl TaskCfg {
                 }
                 "loss" => {
                     only("loss", TaskKind::Lp)?;
-                    c.loss = match take_str("task", "loss", v)? {
-                        "contrastive" => LpLoss::Contrastive,
-                        "ce" | "cross-entropy" => LpLoss::CrossEntropy,
-                        other => bail!(
-                            "task.loss must be \"contrastive\" or \"ce\", got \"{other}\"{}",
-                            did_you_mean(other, &["contrastive", "ce"])
-                        ),
-                    };
+                    c.loss = parse_lp_loss("task", v)?;
                 }
                 "neg" => {
                     only("neg", TaskKind::Lp)?;
@@ -728,7 +740,211 @@ impl TaskCfg {
         if self.kind == TaskKind::Distill && self.teacher_epochs == 0 {
             bail!("task.teacher_epochs must be >= 1");
         }
+        if self.kind == TaskKind::Lp && self.max_edges_per_epoch == 0 {
+            bail!("task.max_edges_per_epoch must be >= 1 (a zero cap trains nothing)");
+        }
         Ok(())
+    }
+}
+
+// ----------------------------------------------------------- multi-task
+
+/// Shared-encoder settings for a multi-task run (top-level `encoder`
+/// object; only valid together with a `tasks` array).  These are the
+/// knobs every head shares: the trunk architecture and the joint
+/// training loop's epochs / default learning rate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EncoderCfg {
+    pub arch: String,
+    pub epochs: usize,
+    /// Default learning rate for heads that set none of their own.
+    pub lr: f32,
+}
+
+impl Default for EncoderCfg {
+    fn default() -> Self {
+        EncoderCfg { arch: "rgcn".to_string(), epochs: 3, lr: 3e-3 }
+    }
+}
+
+impl EncoderCfg {
+    const KEYS: &'static [&'static str] = &["arch", "epochs", "lr"];
+
+    fn from_json(v: &Json) -> Result<EncoderCfg> {
+        let m = stage_obj("encoder", v)?;
+        let mut c = EncoderCfg::default();
+        for (k, v) in m {
+            match k.as_str() {
+                "arch" => c.arch = take_str("encoder", "arch", v)?.to_string(),
+                "epochs" => c.epochs = take_usize("encoder", "epochs", v)?,
+                "lr" => c.lr = take_f64("encoder", "lr", v)? as f32,
+                _ => return Err(unknown_key("encoder", k, Self::KEYS)),
+            }
+        }
+        Ok(c)
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("arch", Json::from(self.arch.as_str())),
+            ("epochs", Json::from(self.epochs)),
+            ("lr", Json::from(self.lr as f64)),
+        ])
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.epochs == 0 {
+            bail!("encoder.epochs must be >= 1");
+        }
+        if !(self.lr > 0.0 && self.lr.is_finite()) {
+            bail!("encoder.lr must be a positive finite number");
+        }
+        Ok(())
+    }
+}
+
+/// One entry of the top-level `tasks` array: a task kind plus its
+/// schedule weight and optional per-head learning rate.  LP-only
+/// knobs (`loss` / `neg` / `max_edges_per_epoch`) are scoped exactly
+/// like in the single `task` object; `epochs`/`arch` are *shared*
+/// across the run and live under `encoder`, so setting them per entry
+/// is a hard error (the unknown-key path reports the valid set).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MultiTaskEntry {
+    pub kind: TaskKind,
+    /// Weighted-round-robin schedule weight (> 0).
+    pub weight: f64,
+    /// Per-head learning rate; `None` = `encoder.lr`.
+    pub lr: Option<f32>,
+    pub loss: LpLoss,
+    pub neg: NegSampler,
+    pub max_edges_per_epoch: usize,
+}
+
+impl MultiTaskEntry {
+    const KEYS: &'static [&'static str] =
+        &["kind", "weight", "lr", "loss", "neg", "max_edges_per_epoch"];
+
+    fn from_json(i: usize, v: &Json) -> Result<MultiTaskEntry> {
+        let ctx = format!("tasks[{i}]");
+        let m = stage_obj(&ctx, v)?;
+        let kind = match m.get("kind") {
+            None => bail!("{ctx} must set 'kind' (\"nc\", \"lp\" or \"distill\")"),
+            Some(v) => parse_task_kind(&ctx, v)?,
+        };
+        let only = |key: &str, wanted: TaskKind| -> Result<()> {
+            if kind != wanted {
+                bail!(
+                    "{ctx}.{key} is only valid for kind \"{}\" (current kind \"{}\")",
+                    wanted.name(),
+                    kind.name()
+                );
+            }
+            Ok(())
+        };
+        let mut c = MultiTaskEntry {
+            kind,
+            weight: 1.0,
+            lr: None,
+            loss: LpLoss::Contrastive,
+            neg: NegSampler::Joint { k: 32 },
+            max_edges_per_epoch: 3200,
+        };
+        for (k, v) in m {
+            match k.as_str() {
+                "kind" => {}
+                "weight" => c.weight = take_f64(&ctx, "weight", v)?,
+                "lr" => c.lr = Some(take_f64(&ctx, "lr", v)? as f32),
+                "loss" => {
+                    only("loss", TaskKind::Lp)?;
+                    c.loss = parse_lp_loss(&ctx, v)?;
+                }
+                "neg" => {
+                    only("neg", TaskKind::Lp)?;
+                    c.neg = parse_neg(take_str(&ctx, "neg", v)?)?;
+                }
+                "max_edges_per_epoch" => {
+                    only("max_edges_per_epoch", TaskKind::Lp)?;
+                    c.max_edges_per_epoch = take_usize(&ctx, "max_edges_per_epoch", v)?;
+                }
+                _ => return Err(unknown_key(&ctx, k, Self::KEYS)),
+            }
+        }
+        Ok(c)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("kind", Json::from(self.kind.name())),
+            ("weight", Json::Num(self.weight)),
+        ];
+        if let Some(lr) = self.lr {
+            pairs.push(("lr", Json::from(lr as f64)));
+        }
+        if self.kind == TaskKind::Lp {
+            pairs.push((
+                "loss",
+                Json::from(match self.loss {
+                    LpLoss::Contrastive => "contrastive",
+                    LpLoss::CrossEntropy => "ce",
+                }),
+            ));
+            pairs.push(("neg", Json::Str(neg_name(self.neg))));
+            pairs.push(("max_edges_per_epoch", Json::from(self.max_edges_per_epoch)));
+        }
+        obj(pairs)
+    }
+
+}
+
+/// The multi-task form of the training stage: shared-encoder settings
+/// plus an array of weighted tasks, interleaved per mini-batch by the
+/// deterministic weighted round-robin schedule
+/// (`rust/src/trainer/multi.rs`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MultiTaskCfg {
+    pub encoder: EncoderCfg,
+    pub tasks: Vec<MultiTaskEntry>,
+}
+
+impl MultiTaskCfg {
+    fn validate(&self) -> Result<()> {
+        self.encoder.validate()?;
+        for (i, t) in self.tasks.iter().enumerate() {
+            if let Some(lr) = t.lr {
+                if !(lr > 0.0 && lr.is_finite()) {
+                    bail!("tasks[{i}].lr must be a positive finite number");
+                }
+            }
+            if t.kind == TaskKind::Lp && t.max_edges_per_epoch == 0 {
+                bail!("tasks[{i}].max_edges_per_epoch must be >= 1 (a zero cap trains nothing)");
+            }
+        }
+        // The structural rules (non-empty, positive weights, one task
+        // per kind, distill needs its nc teacher) live in exactly one
+        // place — the trainer's validate — so the config and trainer
+        // layers can't drift apart.
+        MultiTaskTrainer::new(&self.encoder.arch, self.task_specs()).validate()
+    }
+
+    /// The trainer-level task specs this stage declares.
+    pub fn task_specs(&self) -> Vec<TaskSpec> {
+        self.tasks
+            .iter()
+            .map(|e| TaskSpec {
+                head: match e.kind {
+                    TaskKind::Nc => HeadKind::Nc,
+                    TaskKind::Lp => HeadKind::Lp {
+                        loss: e.loss,
+                        sampler: e.neg,
+                        max_edges: Some(e.max_edges_per_epoch),
+                    },
+                    TaskKind::Distill => HeadKind::Distill,
+                },
+                weight: e.weight,
+                lr: e.lr,
+            })
+            .collect()
     }
 }
 
@@ -977,6 +1193,9 @@ pub struct RunConfig {
     pub partition: PartitionCfg,
     pub lm: Option<LmCfg>,
     pub task: Option<TaskCfg>,
+    /// The multi-task form of the training stage (top-level `tasks`
+    /// array + `encoder` object); mutually exclusive with `task`.
+    pub multi: Option<MultiTaskCfg>,
     pub infer: Option<InferCfg>,
     pub serve: Option<ServeCfg>,
 }
@@ -990,6 +1209,7 @@ impl Default for RunConfig {
             partition: PartitionCfg::default(),
             lm: None,
             task: None,
+            multi: None,
             infer: None,
             serve: None,
         }
@@ -997,12 +1217,16 @@ impl Default for RunConfig {
 }
 
 const TOP_KEYS: &[&str] =
-    &["seed", "loader", "data", "partition", "lm", "task", "infer", "serve"];
+    &["seed", "loader", "data", "partition", "lm", "task", "tasks", "encoder", "infer", "serve"];
 
 impl RunConfig {
     pub fn from_json(doc: &Json) -> Result<RunConfig> {
         let m = stage_obj("run config", doc)?;
         let mut c = RunConfig::default();
+        // `tasks` + `encoder` combine into one stage; collect both
+        // before building it so key order can't matter.
+        let mut enc_doc: Option<&Json> = None;
+        let mut tasks_doc: Option<&Json> = None;
         for (k, v) in m {
             match k.as_str() {
                 "seed" => c.seed = take_u64("run config", "seed", v)?,
@@ -1011,10 +1235,33 @@ impl RunConfig {
                 "partition" => c.partition = PartitionCfg::from_json(v)?,
                 "lm" => c.lm = Some(LmCfg::from_json(v)?),
                 "task" => c.task = Some(TaskCfg::from_json(v)?),
+                "tasks" => tasks_doc = Some(v),
+                "encoder" => enc_doc = Some(v),
                 "infer" => c.infer = Some(InferCfg::from_json(v)?),
                 "serve" => c.serve = Some(ServeCfg::from_json(v)?),
                 _ => return Err(unknown_key("run config", k, TOP_KEYS)),
             }
+        }
+        match (tasks_doc, enc_doc) {
+            (Some(tv), enc) => {
+                let arr = tv.as_arr().ok_or_else(|| {
+                    anyhow!("tasks must be a JSON array of task objects, got {}", type_name(tv))
+                })?;
+                let tasks = arr
+                    .iter()
+                    .enumerate()
+                    .map(|(i, v)| MultiTaskEntry::from_json(i, v))
+                    .collect::<Result<Vec<_>>>()?;
+                let encoder = match enc {
+                    Some(e) => EncoderCfg::from_json(e)?,
+                    None => EncoderCfg::default(),
+                };
+                c.multi = Some(MultiTaskCfg { encoder, tasks });
+            }
+            (None, Some(_)) => {
+                bail!("encoder is only valid together with a tasks array (single-task runs set task.arch etc.)")
+            }
+            (None, None) => {}
         }
         c.validate()?;
         Ok(c)
@@ -1035,6 +1282,21 @@ impl RunConfig {
         self.loader.validate()?;
         self.data.validate()?;
         self.partition.validate()?;
+        if self.task.is_some() && self.multi.is_some() {
+            bail!(
+                "task and tasks are mutually exclusive: use the single task object or the \
+                 multi-task tasks array, not both"
+            );
+        }
+        if self.lm.is_some() && self.multi.is_some() {
+            bail!(
+                "lm stage is not supported with a tasks array yet (run lm with the single \
+                 nc task form)"
+            );
+        }
+        if let Some(m) = &self.multi {
+            m.validate()?;
+        }
         if let Some(lm) = &self.lm {
             lm.validate()?;
             match &self.task {
@@ -1064,8 +1326,12 @@ impl RunConfig {
     pub fn resolved(&self) -> RunConfig {
         let mut c = self.clone();
         c.loader.workers = Workers::Fixed(c.loader.resolve_workers());
-        let task_arch =
-            c.task.as_ref().map(|t| t.arch.clone()).unwrap_or_else(|| "rgcn".to_string());
+        let task_arch = c
+            .task
+            .as_ref()
+            .map(|t| t.arch.clone())
+            .or_else(|| c.multi.as_ref().map(|m| m.encoder.arch.clone()))
+            .unwrap_or_else(|| "rgcn".to_string());
         if let Some(i) = &mut c.infer {
             i.arch.get_or_insert_with(|| task_arch.clone());
         }
@@ -1091,6 +1357,10 @@ impl RunConfig {
         if let Some(t) = &self.task {
             pairs.push(("task", t.to_json()));
         }
+        if let Some(m) = &self.multi {
+            pairs.push(("encoder", m.encoder.to_json()));
+            pairs.push(("tasks", Json::Arr(m.tasks.iter().map(|t| t.to_json()).collect())));
+        }
         if let Some(i) = &self.infer {
             pairs.push(("infer", i.to_json()));
         }
@@ -1109,6 +1379,10 @@ impl RunConfig {
         if let Some(t) = &self.task {
             s.push(format!("task({})", t.kind.name()));
         }
+        if let Some(m) = &self.multi {
+            let kinds: Vec<&str> = m.tasks.iter().map(|t| t.kind.name()).collect();
+            s.push(format!("tasks({})", kinds.join("+")));
+        }
         if self.infer.is_some() {
             s.push("infer".to_string());
         }
@@ -1122,9 +1396,15 @@ impl RunConfig {
     /// runs construct them.
     pub fn train_options(&self) -> TrainOptions {
         let t = self.task.clone().unwrap_or_default();
+        // The multi-task stage shares epochs/lr across heads via the
+        // encoder settings.
+        let (epochs, lr) = match &self.multi {
+            Some(m) => (m.encoder.epochs, m.encoder.lr),
+            None => (t.epochs, t.lr),
+        };
         TrainOptions {
-            lr: t.lr,
-            epochs: t.epochs,
+            lr,
+            epochs,
             seed: self.seed,
             n_workers: self.partition.parts.max(1),
             loader_workers: self.loader.resolve_workers(),
@@ -1139,6 +1419,9 @@ impl RunConfig {
 
 /// Assign `value` (parsed as JSON if it parses, else a bare string) at
 /// dot-separated `path` inside `doc`, creating intermediate objects.
+/// Numeric segments index into existing arrays — `tasks.0.weight=2`
+/// targets the first entry of the `tasks` array (out-of-range indices
+/// are hard errors; arrays are never implicitly created or grown).
 /// This backs `--set stage.key=value` and the per-flag CLI overrides.
 pub fn set_path(doc: &mut Json, path: &str, raw: &str) -> Result<()> {
     let raw = raw.trim();
@@ -1149,13 +1432,35 @@ pub fn set_path(doc: &mut Json, path: &str, raw: &str) -> Result<()> {
     }
     let mut cur = doc;
     for (i, p) in parts.iter().enumerate() {
+        let last = i + 1 == parts.len();
+        if let Json::Arr(a) = cur {
+            let idx: usize = p.parse().map_err(|_| {
+                anyhow!(
+                    "--set {path}: '{}' is an array; '{p}' must be a numeric index",
+                    parts[..i].join(".")
+                )
+            })?;
+            if idx >= a.len() {
+                bail!(
+                    "--set {path}: index {idx} out of range ('{}' has {} entries)",
+                    parts[..i].join("."),
+                    a.len()
+                );
+            }
+            if last {
+                a[idx] = val;
+                return Ok(());
+            }
+            cur = &mut a[idx];
+            continue;
+        }
         let Json::Obj(m) = cur else {
             bail!(
                 "--set {path}: '{}' is not an object in the config document",
                 parts[..i].join(".")
             );
         };
-        if i + 1 == parts.len() {
+        if last {
             m.insert(p.to_string(), val);
             return Ok(());
         }
@@ -1302,6 +1607,124 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(e.contains("did you mean 'pool_workers'"), "{e}");
+    }
+
+    #[test]
+    fn tasks_array_parses_and_validates() {
+        let c = RunConfig::parse_str(
+            r#"{"tasks": [{"kind": "nc", "weight": 2}, {"kind": "distill"}],
+                "encoder": {"epochs": 2}}"#,
+        )
+        .unwrap();
+        let m = c.multi.as_ref().unwrap();
+        assert_eq!(m.tasks.len(), 2);
+        assert_eq!(m.tasks[0].kind, TaskKind::Nc);
+        assert!((m.tasks[0].weight - 2.0).abs() < 1e-12);
+        assert_eq!(m.tasks[1].kind, TaskKind::Distill);
+        assert_eq!(m.encoder.epochs, 2);
+        assert_eq!(m.encoder.arch, "rgcn");
+        assert_eq!(c.stage_names(), vec!["data", "partition", "tasks(nc+distill)"]);
+        let o = c.train_options();
+        assert_eq!(o.epochs, 2);
+        assert_eq!(m.task_specs().len(), 2);
+
+        // task and tasks are mutually exclusive.
+        let e = RunConfig::parse_str(r#"{"task": {"kind": "nc"}, "tasks": [{"kind": "nc"}]}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("mutually exclusive"), "{e}");
+        // encoder alone is rejected.
+        assert!(RunConfig::parse_str(r#"{"encoder": {"arch": "rgcn"}}"#).is_err());
+        // distill needs its nc teacher in the same run.
+        let e = RunConfig::parse_str(r#"{"tasks": [{"kind": "distill"}]}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("teacher"), "{e}");
+        // Duplicate kinds, missing kind, empty array: hard errors.
+        assert!(RunConfig::parse_str(r#"{"tasks": [{"kind": "nc"}, {"kind": "nc"}]}"#).is_err());
+        assert!(RunConfig::parse_str(r#"{"tasks": [{}]}"#).is_err());
+        assert!(RunConfig::parse_str(r#"{"tasks": []}"#).is_err());
+        // LP-only keys stay kind-scoped inside entries.
+        let e = RunConfig::parse_str(r#"{"tasks": [{"kind": "nc", "loss": "ce"}]}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("only valid for kind \"lp\""), "{e}");
+        // Unknown entry keys suggest, naming the entry.
+        let e = RunConfig::parse_str(r#"{"tasks": [{"kind": "nc", "wieght": 2}]}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("tasks[0]") && e.contains("did you mean 'weight'"), "{e}");
+        // Shared knobs live under encoder, not per entry.
+        assert!(RunConfig::parse_str(r#"{"tasks": [{"kind": "nc", "epochs": 5}]}"#).is_err());
+        // lm is incompatible with the multi-task form.
+        assert!(RunConfig::parse_str(
+            r#"{"lm": {"mode": "pretrained"}, "tasks": [{"kind": "nc"}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn multi_roundtrips_and_inherits_arch() {
+        // LP heads are wired to the rgcn artifacts: a non-rgcn shared
+        // encoder with an lp task is rejected up front.
+        let e = RunConfig::parse_str(
+            r#"{"tasks": [{"kind": "nc"}, {"kind": "lp"}], "encoder": {"arch": "sage"}}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("rgcn"), "{e}");
+
+        let c = RunConfig::parse_str(
+            r#"{"tasks": [{"kind": "nc", "weight": 2},
+                          {"kind": "lp", "loss": "ce", "neg": "uniform-8"},
+                          {"kind": "distill", "lr": 0.001}],
+                "encoder": {"epochs": 4, "lr": 0.004},
+                "infer": {}}"#,
+        )
+        .unwrap();
+        let back = RunConfig::parse_str(&c.to_json().to_string_pretty()).unwrap();
+        assert_eq!(c, back);
+        let r = c.resolved();
+        // infer inherits the shared encoder arch.
+        assert_eq!(r.infer.as_ref().unwrap().arch.as_deref(), Some("rgcn"));
+        let back = RunConfig::parse_str(&r.to_json().to_string_pretty()).unwrap();
+        assert_eq!(r, back);
+        assert_eq!(back.resolved(), back);
+        let o = c.train_options();
+        assert_eq!(o.epochs, 4);
+        assert!((o.lr - 0.004).abs() < 1e-6);
+
+        // A non-rgcn encoder arch is fine without lp, and inherits.
+        let c = RunConfig::parse_str(
+            r#"{"tasks": [{"kind": "nc"}], "encoder": {"arch": "sage"}, "infer": {}}"#,
+        )
+        .unwrap()
+        .resolved();
+        assert_eq!(c.infer.as_ref().unwrap().arch.as_deref(), Some("sage"));
+    }
+
+    #[test]
+    fn set_path_indexes_arrays() {
+        let mut doc =
+            Json::parse(r#"{"tasks": [{"kind": "nc"}, {"kind": "distill"}]}"#).unwrap();
+        apply_set(&mut doc, "tasks.0.weight=2.5").unwrap();
+        apply_set(&mut doc, "tasks.1.weight=0.5").unwrap();
+        let c = RunConfig::from_json(&doc).unwrap();
+        let m = c.multi.as_ref().unwrap();
+        assert!((m.tasks[0].weight - 2.5).abs() < 1e-12);
+        assert!((m.tasks[1].weight - 0.5).abs() < 1e-12);
+        // Out-of-range and non-numeric indices are hard errors.
+        let e = apply_set(&mut doc, "tasks.5.weight=1").unwrap_err().to_string();
+        assert!(e.contains("out of range"), "{e}");
+        let e = apply_set(&mut doc, "tasks.first.weight=1").unwrap_err().to_string();
+        assert!(e.contains("numeric index"), "{e}");
+        // Whole-entry replacement through an index.
+        apply_set(&mut doc, r#"tasks.1={"kind": "lp", "neg": "uniform-8"}"#).unwrap();
+        let c = RunConfig::from_json(&doc).unwrap();
+        assert_eq!(c.multi.as_ref().unwrap().tasks[1].kind, TaskKind::Lp);
+        // A typo'd entry key through --set still dies in validation.
+        apply_set(&mut doc, "tasks.0.wieght=9").unwrap();
+        assert!(RunConfig::from_json(&doc).is_err());
     }
 
     #[test]

@@ -19,14 +19,16 @@ use crate::dataloader::GsDataset;
 use crate::graph::{GraphStats, HeteroGraph};
 use crate::partition::{metis_like_partition, random_partition, PartitionBook};
 use crate::runtime::Runtime;
-use crate::sampling::NegSampler;
 use crate::serve::{
     run_serve_bench, ClosedLoopStats, InferenceEngine, OfflineInference, OfflineReport,
     ServeBenchParams,
 };
-use crate::trainer::lp::LpReport;
+use crate::trainer::lp::{lp_train_artifact, LpReport, LP_EMB_ARTIFACT};
+use crate::trainer::multi::MultiReport;
 use crate::trainer::nc::NcReport;
-use crate::trainer::{DistillTrainer, LmTrainer, LpTrainer, NodeTrainer, TrainOptions};
+use crate::trainer::{
+    DistillTrainer, LmTrainer, LpTrainer, MultiTaskTrainer, NodeTrainer, TrainOptions,
+};
 use crate::util::StageTimer;
 
 /// What a pipeline run produced, stage by stage.
@@ -36,6 +38,8 @@ pub struct PipelineOutcome {
     pub nc: Option<NcReport>,
     pub lp: Option<LpReport>,
     pub distill_mse: Option<f32>,
+    /// Per-task reports of a multi-task (`tasks: [...]`) run.
+    pub multi: Option<MultiReport>,
     pub infer: Option<OfflineReport>,
     pub serve_uncached: Option<ClosedLoopStats>,
     pub serve_warmed: Option<ClosedLoopStats>,
@@ -137,7 +141,7 @@ impl Pipeline {
         out.stats = Some(s);
 
         let opts = cfg.train_options();
-        let rt = if cfg.lm.is_some() || cfg.task.is_some() {
+        let rt = if cfg.lm.is_some() || cfg.task.is_some() || cfg.multi.is_some() {
             Some(Runtime::from_default_dir()?)
         } else {
             None
@@ -194,12 +198,9 @@ impl Pipeline {
                     out.nc = Some(report);
                 }
                 TaskKind::Lp => {
-                    let artifact = match task.neg {
-                        NegSampler::Uniform { k } => format!("rgcn_lp_uniform_k{k}_train"),
-                        s => format!("rgcn_lp_joint_k{}_train", s.k()),
-                    };
+                    let artifact = lp_train_artifact(task.neg);
                     let mut trainer =
-                        LpTrainer::new(&artifact, "rgcn_lp_emb", task.loss, task.neg);
+                        LpTrainer::new(&artifact, LP_EMB_ARTIFACT, task.loss, task.neg);
                     trainer.max_train_edges = Some(task.max_edges_per_epoch);
                     let (report, _) = trainer.fit(rt, &mut ds, &opts)?;
                     println!(
@@ -231,6 +232,33 @@ impl Pipeline {
                 }
             }
             Ok(())
+            })?;
+        }
+
+        // ---- tasks (multi-task) ----------------------------------------
+        if let Some(mc) = &cfg.multi {
+            let rt = rt.as_ref().expect("tasks stage needs the runtime");
+            let kinds: Vec<&str> = mc.tasks.iter().map(|t| t.kind.name()).collect();
+            timer.time(&format!("tasks({})", kinds.join("+")), || -> Result<()> {
+                let trainer = MultiTaskTrainer::new(&mc.encoder.arch, mc.task_specs());
+                let report = trainer.fit(rt, &mut ds, &opts)?;
+                for (t, name) in report.names.iter().enumerate() {
+                    println!(
+                        "[multi {name}] losses={:?} steps={}",
+                        report.epoch_losses[t], report.steps[t]
+                    );
+                }
+                if let Some(nc) = &report.nc {
+                    println!("[multi nc] val_acc={:.4} test_acc={:.4}", nc.val_acc, nc.test_acc);
+                }
+                if let Some(lp) = &report.lp {
+                    println!("[multi lp] val_mrr={:.4} test_mrr={:.4}", lp.val_mrr, lp.test_mrr);
+                }
+                if let Some(mse) = report.distill_mse {
+                    println!("[multi distill] mse={mse:.5}");
+                }
+                out.multi = Some(report);
+                Ok(())
             })?;
         }
 

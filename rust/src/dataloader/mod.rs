@@ -222,6 +222,51 @@ impl GsDataset {
 /// Which learnable-embedding rows a batch gathered: (slot, ntype, id).
 pub type LembTouch = Vec<(usize, usize, u32)>;
 
+/// One epoch's work list: ids shuffled, optionally capped, split into
+/// fixed-size chunks.  Every trainer builds exactly this each epoch;
+/// owning the backing ids lets heterogeneous (multi-task) schedules
+/// hold several tasks' chunk lists at once and route batches by
+/// schedule index.  The shuffle draws from the caller's RNG in the
+/// same order the trainers always did (shuffle, then truncate), so
+/// adopting `IdChunks` changes no batch stream.
+pub struct IdChunks {
+    ids: Vec<u32>,
+    chunk: usize,
+}
+
+impl IdChunks {
+    /// Shuffle `ids` with `rng`, keep at most `cap` (None = all), and
+    /// expose them as `chunk`-sized batches.
+    pub fn new(mut ids: Vec<u32>, chunk: usize, cap: Option<usize>, rng: &mut Rng) -> IdChunks {
+        rng.shuffle(&mut ids);
+        if let Some(c) = cap {
+            ids.truncate(c);
+        }
+        IdChunks { ids, chunk: chunk.max(1) }
+    }
+
+    /// Number of batches.
+    pub fn len(&self) -> usize {
+        self.ids.len().div_ceil(self.chunk)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Batch `i` (the last one may be short).
+    pub fn get(&self, i: usize) -> &[u32] {
+        let lo = i * self.chunk;
+        &self.ids[lo..(lo + self.chunk).min(self.ids.len())]
+    }
+
+    /// All batches, in order — the `&[&[u32]]` shape `run_pipeline`
+    /// and the prefetching loaders consume.
+    pub fn chunks(&self) -> Vec<&[u32]> {
+        self.ids.chunks(self.chunk).collect()
+    }
+}
+
 /// Helper: BlockShape::from_spec with a useful error.
 struct BlockSpecErr;
 

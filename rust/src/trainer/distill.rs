@@ -5,13 +5,134 @@
 //! them.  Evaluation follows the paper: freeze each student, train an
 //! MLP probe on its embeddings, compare probe accuracy.
 
-use anyhow::Result;
+use anyhow::{anyhow, bail, Result};
 
-use crate::dataloader::{batch_seed, run_pipeline, BatchFactory, GsDataset, Split};
-use crate::runtime::{InferSession, Runtime, Tensor, TrainState};
+use crate::dataloader::{
+    batch_seed, fill_lemb, run_pipeline, BatchFactory, GsDataset, IdChunks, LembTouch, Split,
+    TokenStore,
+};
+use crate::runtime::{ArtifactSpec, InferSession, Runtime, Tensor, TrainState};
 use crate::sampling::{BlockShape, EdgeExclusion};
 use crate::trainer::TrainOptions;
 use crate::util::Rng;
+
+/// Per-epoch node subsample for distillation (shared by the
+/// standalone trainer and the multi-task distill head).
+pub const DISTILL_EPOCH_SUBSAMPLE: usize = 2048;
+
+/// Shapes a distillation run derives from its artifacts: student rows
+/// `b` × seq len `s`, embedding width `h`, teacher batch cap `bt`.
+#[derive(Debug, Clone, Copy)]
+pub struct DistillDims {
+    pub b: usize,
+    pub s: usize,
+    pub h: usize,
+    pub bt: usize,
+}
+
+impl DistillDims {
+    /// Derive from the student train spec + teacher emb spec (also
+    /// yields the teacher's block shape).  The teacher's embedding
+    /// width must match the student's MSE target.
+    pub fn derive(spec: &ArtifactSpec, tspec: &ArtifactSpec) -> Result<(DistillDims, BlockShape)> {
+        let tok = spec
+            .batch_spec("tokens")
+            .ok_or_else(|| anyhow!("distill artifact '{}' has no tokens input", spec.file))?;
+        let (b, s) = (tok.shape[0], tok.shape[1]);
+        let h = spec
+            .batch_spec("teacher")
+            .ok_or_else(|| anyhow!("distill artifact '{}' has no teacher input", spec.file))?
+            .shape[1];
+        let tshape = BlockShape::from_spec(tspec)
+            .ok_or_else(|| anyhow!("teacher artifact '{}' has no block config", tspec.file))?;
+        let bt = tspec.cfg_usize("batch").unwrap_or(tshape.num_targets());
+        let th = tspec.outputs[0].shape[1];
+        if th != h {
+            bail!("teacher embedding dim {th} must match the student target {h}");
+        }
+        Ok((DistillDims { b, s, h, bt }, tshape))
+    }
+}
+
+/// One distillation work item: the teacher's GNN input blocks for a
+/// chunk of node ids plus the student's padded token batch.  Built on
+/// prefetch workers with learnable-embedding rows *deferred* (like
+/// every other trainer batch — a multi-task run's NC/LP heads mutate
+/// the shared tables on the consuming thread, so workers must never
+/// read them); the fill + teacher forward + student step run on the
+/// consuming thread ([`distill_student_step`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DistillBatch {
+    /// Assembled teacher blocks with their deferred-lemb touch lists
+    /// and real (unpadded) row counts.
+    pub tbatches: Vec<(Vec<Tensor>, LembTouch, usize)>,
+    pub tokens: Vec<i32>,
+    pub lmask: Vec<f32>,
+}
+
+/// Build one distillation batch: teacher GNN blocks for the chunk
+/// (sub-chunked to the teacher's batch cap) + student tokens.
+#[allow(clippy::too_many_arguments)]
+pub fn build_distill_batch(
+    f: &mut BatchFactory,
+    store: &TokenStore,
+    nt: usize,
+    chunk: &[u32],
+    rng: &mut Rng,
+    tshape: &BlockShape,
+    tspec: &ArtifactSpec,
+    dims: &DistillDims,
+) -> Result<DistillBatch> {
+    let (b, s, bt) = (dims.b, dims.s, dims.bt);
+    let mut tbatches = vec![];
+    for sub in chunk.chunks(bt) {
+        let seeds: Vec<(u32, u32)> = sub.iter().map(|&i| (nt as u32, i)).collect();
+        let (batch, touch) =
+            f.sample_assemble(&seeds, tshape, tspec, rng, 0, &EdgeExclusion::new(), true)?;
+        tbatches.push((batch, touch, sub.len()));
+    }
+    let mut tokens = vec![0i32; b * s];
+    let mut lmask = vec![0.0f32; b];
+    for (i, &id) in chunk.iter().enumerate() {
+        tokens[i * s..(i + 1) * s].copy_from_slice(store.row(id));
+        lmask[i] = 1.0;
+    }
+    Ok(DistillBatch { tbatches, tokens, lmask })
+}
+
+/// Consume one [`DistillBatch`]: fill the deferred embedding rows
+/// from the *current* tables, run the teacher over its blocks, pad
+/// the target matrix, and take one student MSE step.  Returns the
+/// step loss.  Runs on the consuming thread only (single PJRT
+/// session contract + the deferred-lemb determinism contract).
+pub fn distill_student_step(
+    rt: &Runtime,
+    ds: &GsDataset,
+    tsess: &InferSession,
+    st: &mut TrainState,
+    db: DistillBatch,
+    dims: &DistillDims,
+    lr: f32,
+) -> Result<f32> {
+    let (b, s, h) = (dims.b, dims.s, dims.h);
+    let DistillBatch { tbatches, tokens, lmask } = db;
+    let mut teacher_pad = vec![0.0f32; b * h];
+    let mut off = 0usize;
+    for (mut tb, touch, real) in tbatches {
+        fill_lemb(ds, &mut tb, &touch, 0)?;
+        let res = tsess.infer(rt, &tb)?;
+        let emb = res[0].as_f32()?;
+        teacher_pad[off * h..(off + real) * h].copy_from_slice(&emb[..real * h]);
+        off += real;
+    }
+    let batch = vec![
+        Tensor::I32 { shape: vec![b, s], data: tokens },
+        Tensor::F32 { shape: vec![b, h], data: teacher_pad },
+        Tensor::F32 { shape: vec![b], data: lmask },
+    ];
+    let out = st.step(rt, &[lr], &batch)?;
+    Ok(out.loss)
+}
 
 pub struct DistillTrainer {
     pub teacher_emb_artifact: String, // e.g. rgcn_nc_emb
@@ -45,9 +166,6 @@ impl DistillTrainer {
         opts: &TrainOptions,
     ) -> Result<(f32, TrainState)> {
         let spec = rt.manifest.get(&self.distill_artifact)?.clone();
-        let b = spec.batch_spec("tokens").unwrap().shape[0];
-        let s = spec.batch_spec("tokens").unwrap().shape[1];
-        let h = spec.batch_spec("teacher").unwrap().shape[1];
         let nt = ds.target_ntype;
         let store = ds.tokens[nt].as_ref().expect("target ntype needs text");
         let n = store.num_rows();
@@ -55,69 +173,32 @@ impl DistillTrainer {
 
         let tsess = InferSession::new(rt, &self.teacher_emb_artifact, teacher_params)?;
         let tspec = tsess.exe.spec.clone();
-        let tshape = BlockShape::from_spec(&tspec).unwrap();
-        let bt = tspec.cfg_usize("batch").unwrap_or(tshape.num_targets());
-        let th = tspec.outputs[0].shape[1];
-        assert_eq!(th, h, "teacher embedding dim must match the student target");
+        let (dims, tshape) = DistillDims::derive(&spec, &tspec)?;
 
         let seed = opts.seed ^ 0xd157;
         let mut rng = Rng::seed_from(seed);
         let mut last = 0.0f32;
         for epoch in 0..opts.epochs {
-            let mut ids: Vec<u32> = (0..n as u32).collect();
-            rng.shuffle(&mut ids);
-            ids.truncate(2048); // distillation subsample per epoch
-            let chunks: Vec<&[u32]> = ids.chunks(b).collect();
+            // Distillation subsample per epoch.
+            let chunks = IdChunks::new(
+                (0..n as u32).collect(),
+                dims.b,
+                Some(DISTILL_EPOCH_SUBSAMPLE),
+                &mut rng,
+            );
             let mut loss_sum = 0.0;
             let mut steps = 0;
             run_pipeline(
-                &chunks,
+                &chunks.chunks(),
                 &opts.prefetch_cfg(),
                 || BatchFactory::new(ds, &tshape),
                 |f, bi, chunk| {
                     let mut rng = Rng::seed_from(batch_seed(seed, epoch as u64, bi as u64));
-                    // Teacher GNN input blocks for this chunk.
-                    let mut tbatches = vec![];
-                    for sub in chunk.chunks(bt) {
-                        let seeds: Vec<(u32, u32)> =
-                            sub.iter().map(|&i| (nt as u32, i)).collect();
-                        let (batch, _) = f.sample_assemble(
-                            &seeds,
-                            &tshape,
-                            &tspec,
-                            &mut rng,
-                            0,
-                            &EdgeExclusion::new(),
-                            false,
-                        )?;
-                        tbatches.push((batch, sub.len()));
-                    }
-                    // Student token batch.
-                    let mut tokens = vec![0i32; b * s];
-                    let mut lmask = vec![0.0f32; b];
-                    for (i, &id) in chunk.iter().enumerate() {
-                        tokens[i * s..(i + 1) * s].copy_from_slice(store.row(id));
-                        lmask[i] = 1.0;
-                    }
-                    Ok((tbatches, tokens, lmask))
+                    build_distill_batch(f, store, nt, chunk, &mut rng, &tshape, &tspec, &dims)
                 },
-                |_, (tbatches, tokens, lmask)| {
-                    let mut teacher_pad = vec![0.0f32; b * h];
-                    let mut off = 0usize;
-                    for (tb, real) in &tbatches {
-                        let res = tsess.infer(rt, tb)?;
-                        let emb = res[0].as_f32()?;
-                        teacher_pad[off * h..(off + real) * h]
-                            .copy_from_slice(&emb[..real * h]);
-                        off += real;
-                    }
-                    let batch = vec![
-                        Tensor::I32 { shape: vec![b, s], data: tokens },
-                        Tensor::F32 { shape: vec![b, h], data: teacher_pad },
-                        Tensor::F32 { shape: vec![b], data: lmask },
-                    ];
-                    let out = st.step(rt, &[opts.lr], &batch)?;
-                    loss_sum += out.loss;
+                |_, db| {
+                    loss_sum +=
+                        distill_student_step(rt, ds, &tsess, &mut st, db, &dims, opts.lr)?;
                     steps += 1;
                     Ok(())
                 },

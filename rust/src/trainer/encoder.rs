@@ -1,0 +1,66 @@
+//! The shared GNN-encoder forward/backward path.
+//!
+//! Every GNN training loop in the crate drives the same per-batch
+//! sequence against an assembled block batch: fill the deferred
+//! learnable-embedding rows (the sparse half of the encoder, shared
+//! across tasks through `dist::EmbTable`), execute the AOT train step,
+//! then scatter the step's `grad_lemb` back onto the tables.  That
+//! sequence used to live copy-pasted inside the NC and LP trainers;
+//! [`EncoderStep`] is the one implementation both (and the multi-task
+//! trainer's per-task heads) now call, so a combined run pays for the
+//! encoder machinery once and single-task runs are thin wrappers over
+//! the same code — with the exact same operation order, so metrics
+//! stay bit-identical to the pre-refactor trainers.
+//!
+//! What is shared vs. per-head in this architecture: the *sparse*
+//! encoder state (learnable embedding tables + text embeddings) lives
+//! in the dataset's `DistEngine` and is updated in place by every
+//! head that touches it; the *dense* artifact state (GNN weights +
+//! Adam moments) is per-head device state owned by each `TrainState`.
+
+use anyhow::Result;
+
+use crate::dataloader::{apply_lemb_grads, fill_lemb, GsDataset, LembTouch};
+use crate::runtime::{ArtifactSpec, Runtime, StepOut, Tensor, TrainState};
+
+/// The shared encoder forward/backward step over an assembled batch.
+#[derive(Debug, Clone, Copy)]
+pub struct EncoderStep {
+    /// Learnable-embedding width of the artifact (0 = no lemb input,
+    /// the sparse update is skipped entirely).
+    pub ldim: usize,
+}
+
+impl EncoderStep {
+    /// Read the lemb width off the artifact's batch spec.
+    pub fn from_spec(spec: &ArtifactSpec) -> EncoderStep {
+        EncoderStep { ldim: spec.batch_spec("lemb").map(|t| t.shape[1]).unwrap_or(0) }
+    }
+
+    /// One train step: fill the deferred learnable-embedding rows of
+    /// `batch` from the current tables (attributed to partition
+    /// `worker`), run the artifact step with `scalars`, and apply
+    /// `grad_lemb` back via sparse Adam at `scalars[0]` — the learning
+    /// rate by manifest convention, so the dense and sparse halves of
+    /// the encoder can never drift to different rates.  Must run on
+    /// the consuming thread only — it reads embedding rows that
+    /// concurrent prefetch workers deliberately leave deferred.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step(
+        &self,
+        rt: &Runtime,
+        ds: &GsDataset,
+        st: &mut TrainState,
+        scalars: &[f32],
+        batch: &mut Vec<Tensor>,
+        touch: &LembTouch,
+        worker: u32,
+    ) -> Result<StepOut> {
+        fill_lemb(ds, batch, touch, worker)?;
+        let out = st.step(rt, scalars, batch)?;
+        if let (Some(g), true) = (&out.grad_lemb, self.ldim > 0) {
+            apply_lemb_grads(&ds.engine, touch, g, self.ldim, scalars[0]);
+        }
+        Ok(out)
+    }
+}

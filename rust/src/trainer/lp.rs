@@ -9,13 +9,14 @@
 use anyhow::Result;
 
 use crate::dataloader::{
-    apply_lemb_grads, batch_seed, build_lp_batch, fill_lemb, run_pipeline, BatchFactory,
-    GsDataset, LinkPredictionDataLoader, Split,
+    batch_seed, build_lp_batch, run_pipeline, BatchFactory, GsDataset, IdChunks,
+    LinkPredictionDataLoader, Split,
 };
 use crate::eval::{distmult, reciprocal_rank, Mean};
 use crate::runtime::{Runtime, TrainState};
 use crate::sampling::{EdgeExclusion, NegSampler};
 use crate::serve::InferenceEngine;
+use crate::trainer::encoder::EncoderStep;
 use crate::trainer::TrainOptions;
 use crate::util::Rng;
 
@@ -38,6 +39,20 @@ impl LpLoss {
             LpLoss::Contrastive => "contrastive",
             LpLoss::CrossEntropy => "cross-entropy",
         }
+    }
+}
+
+/// Manifest name of the LP embedding (eval) artifact.  The LP
+/// artifacts are compiled for the rgcn trunk only.
+pub const LP_EMB_ARTIFACT: &str = "rgcn_lp_emb";
+
+/// Manifest name of the LP train artifact for a negative sampler —
+/// the single place the naming scheme lives (the pipeline's single
+/// `task` stage and the multi-task trainer both resolve through it).
+pub fn lp_train_artifact(sampler: NegSampler) -> String {
+    match sampler {
+        NegSampler::Uniform { k } => format!("rgcn_lp_uniform_k{k}_train"),
+        s => format!("rgcn_lp_joint_k{}_train", s.k()),
     }
 }
 
@@ -89,7 +104,7 @@ impl LpTrainer {
         let ds: &GsDataset = ds; // embedding updates go through interior mutability
         let spec = rt.manifest.get(&self.train_artifact)?.clone();
         let mut st = TrainState::new(rt, &self.train_artifact)?;
-        let ldim = spec.batch_spec("lemb").map(|t| t.shape[1]).unwrap_or(0);
+        let enc = EncoderStep::from_spec(&spec);
         let seed = opts.seed ^ 0x1b9;
         let mut rng = Rng::seed_from(seed);
         let mut report = LpReport::default();
@@ -103,16 +118,11 @@ impl LpTrainer {
         let all_train = ds.lp.as_ref().expect("no LP task").edge_ids_in(Split::Train);
         for epoch in 0..opts.epochs {
             let t0 = std::time::Instant::now();
-            let mut ids = all_train.clone();
-            rng.shuffle(&mut ids);
-            if let Some(cap) = self.max_train_edges {
-                ids.truncate(cap);
-            }
-            let chunks: Vec<&[u32]> = ids.chunks(b).collect();
+            let chunks = IdChunks::new(all_train.clone(), b, self.max_train_edges, &mut rng);
             let mut epoch_loss = 0.0f32;
             let mut steps = 0usize;
             run_pipeline(
-                &chunks,
+                &chunks.chunks(),
                 &pf,
                 || BatchFactory::new(ds, &loader.shape),
                 |f, bi, chunk| {
@@ -122,11 +132,15 @@ impl LpTrainer {
                 },
                 |bi, (mut batch, touch)| {
                     let worker = (bi % opts.n_workers.max(1)) as u32;
-                    fill_lemb(ds, &mut batch, &touch, worker)?;
-                    let out = st.step(rt, &[opts.lr, self.loss.sel()], &batch)?;
-                    if let (Some(g), true) = (&out.grad_lemb, ldim > 0) {
-                        apply_lemb_grads(&ds.engine, &touch, g, ldim, opts.lr);
-                    }
+                    let out = enc.step(
+                        rt,
+                        ds,
+                        &mut st,
+                        &[opts.lr, self.loss.sel()],
+                        &mut batch,
+                        &touch,
+                        worker,
+                    )?;
                     epoch_loss += out.loss;
                     steps += 1;
                     Ok(())

@@ -10,15 +10,24 @@
 //! decode) lives in [`crate::serve::InferenceEngine`]; the evaluators
 //! here run their batches through it, and the online serving layer
 //! reuses the exact same path for request traffic.
+//!
+//! The encoder forward/backward path every training loop drives is
+//! one implementation ([`encoder::EncoderStep`]); single-task
+//! trainers are thin wrappers over it, and [`multi::MultiTaskTrainer`]
+//! interleaves several task heads over the same shared trunk.
 
 pub mod distill;
+pub mod encoder;
 pub mod lm;
 pub mod lp;
+pub mod multi;
 pub mod nc;
 
 pub use distill::DistillTrainer;
+pub use encoder::EncoderStep;
 pub use lm::LmTrainer;
 pub use lp::{LpReport, LpTrainer};
+pub use multi::{HeadKind, MultiReport, MultiTaskTrainer, TaskSpec};
 pub use nc::{NcReport, NodeTrainer};
 
 /// Shared training knobs.

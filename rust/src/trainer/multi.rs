@@ -1,0 +1,598 @@
+//! Multi-task training: one shared encoder trunk, per-task heads,
+//! deterministic weighted round-robin batch interleaving.
+//!
+//! The GraphStorm paper's core pitch is one framework covering many
+//! GML workloads on one graph; this module is the combined form — a
+//! single run trains node classification, link prediction and
+//! GNN→LM distillation heads over **one** shared encoder trunk
+//! instead of three isolated trainers each paying for the encoder
+//! machinery:
+//!
+//! * **Shared trunk** — the sparse encoder state (learnable embedding
+//!   tables + text embeddings in the dataset's `DistEngine`) is
+//!   updated in place by every head through the one
+//!   [`EncoderStep`](crate::trainer::encoder::EncoderStep)
+//!   forward/backward path, and all heads share the sampling/assembly
+//!   machinery (`BatchFactory`).  Dense head weights (GNN layers +
+//!   decoders + Adam moments) remain per-head device state.
+//! * **Per-task heads** — nc / lp / distill, each a thin consumer of
+//!   its routed batches.  The distill head's teacher is the run's NC
+//!   head, refreshed from its parameters at each epoch start (the
+//!   "chained nc + distill" scenario), so distillation tracks the
+//!   representation as it trains.
+//! * **Deterministic schedule** — [`build_schedule`] interleaves tasks
+//!   per mini-batch by a weighted draw whose RNG comes from
+//!   `batch_seed(seed ^ SCHED_SALT, epoch, item)`, the repo's
+//!   per-batch RNG convention.  The schedule is precomputed before
+//!   the pipeline runs and every task batch derives its RNG from its
+//!   *per-task* batch index, so the whole interleaved stream is
+//!   bit-identical for any `--num-workers` (`rust/tests/determinism.rs`
+//!   sweeps {1, 2, 4, 8}) — and each task's sub-stream is
+//!   bit-identical to what the standalone trainer would build from
+//!   the same seed.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::dataloader::{
+    batch_seed, build_lp_batch, build_nc_batch, run_pipeline, BatchFactory, GsDataset, IdChunks,
+    LembTouch, LinkPredictionDataLoader, NodeDataLoader, Split,
+};
+use crate::runtime::{ArtifactSpec, InferSession, Runtime, Tensor, TrainState};
+use crate::sampling::{BlockShape, NegSampler};
+use crate::trainer::distill::{
+    build_distill_batch, distill_student_step, DistillBatch, DistillDims, DistillTrainer,
+    DISTILL_EPOCH_SUBSAMPLE,
+};
+use crate::trainer::encoder::EncoderStep;
+use crate::trainer::lp::{lp_train_artifact, LpLoss, LpReport, LpTrainer, LP_EMB_ARTIFACT};
+use crate::trainer::nc::{NcReport, NodeTrainer};
+use crate::trainer::TrainOptions;
+use crate::util::Rng;
+
+/// Per-task seed salts — identical to the standalone trainers', so a
+/// task's batch sub-stream inside a multi-task run is bit-identical
+/// to the stream the standalone trainer builds from the same seed.
+const NC_SALT: u64 = 0x6e63;
+const LP_SALT: u64 = 0x1b9;
+const DISTILL_SALT: u64 = 0xd157;
+/// Schedule salt: the round-robin draws must not share a stream with
+/// any task's batch RNG.
+const SCHED_SALT: u64 = 0x5c4ed;
+
+/// What one head trains.
+#[derive(Debug, Clone)]
+pub enum HeadKind {
+    Nc,
+    Lp { loss: LpLoss, sampler: NegSampler, max_edges: Option<usize> },
+    /// Distills the run's (required) NC head into the graph-free
+    /// student LM; the teacher refreshes from the NC head's current
+    /// parameters at each epoch start.
+    Distill,
+}
+
+impl HeadKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            HeadKind::Nc => "nc",
+            HeadKind::Lp { .. } => "lp",
+            HeadKind::Distill => "distill",
+        }
+    }
+
+    fn salt(&self) -> u64 {
+        match self {
+            HeadKind::Nc => NC_SALT,
+            HeadKind::Lp { .. } => LP_SALT,
+            HeadKind::Distill => DISTILL_SALT,
+        }
+    }
+}
+
+/// One task in a multi-task run: a head, its schedule weight, and an
+/// optional per-head learning rate (default: the shared `opts.lr`).
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    pub head: HeadKind,
+    pub weight: f64,
+    pub lr: Option<f32>,
+}
+
+impl TaskSpec {
+    pub fn new(head: HeadKind) -> TaskSpec {
+        TaskSpec { head, weight: 1.0, lr: None }
+    }
+}
+
+/// Deterministic weighted round-robin: item `i` of an epoch picks the
+/// next task by a categorical draw over `weights`, masked to tasks
+/// with batches remaining, from an RNG seeded by
+/// `batch_seed(seed ^ SCHED_SALT, epoch, i)`.  A pure function of
+/// (seed, epoch, counts, weights) — no shared stream, so the schedule
+/// is bit-identical regardless of who computes it or how many loader
+/// workers later consume it.
+pub fn build_schedule(seed: u64, epoch: u64, counts: &[usize], weights: &[f64]) -> Vec<usize> {
+    assert_eq!(counts.len(), weights.len(), "one weight per task");
+    let mut rem = counts.to_vec();
+    let total: usize = rem.iter().sum();
+    let mut order = Vec::with_capacity(total);
+    let mut w = vec![0.0f64; rem.len()];
+    for i in 0..total {
+        let mut rng = Rng::seed_from(batch_seed(seed ^ SCHED_SALT, epoch, i as u64));
+        for (slot, (&r, &wt)) in w.iter_mut().zip(rem.iter().zip(weights)) {
+            *slot = if r > 0 { wt } else { 0.0 };
+        }
+        let mut t = rng.gen_categorical(&w);
+        if rem[t] == 0 {
+            // Float-edge fallback (a rounding tie can land on a
+            // drained zero-weight tail): first task with work left.
+            t = rem.iter().position(|&r| r > 0).expect("i < total, so batches remain");
+        }
+        order.push(t);
+        rem[t] -= 1;
+    }
+    order
+}
+
+/// The distill head's specs: the teacher emb artifact (sampling needs
+/// its spec + block shape) and the dims derived from it together with
+/// the student train artifact's spec.
+pub struct DistillSpecs {
+    pub tspec: ArtifactSpec,
+    pub tshape: BlockShape,
+    pub dims: DistillDims,
+}
+
+impl DistillSpecs {
+    pub fn derive(spec: &ArtifactSpec, tspec: ArtifactSpec) -> Result<DistillSpecs> {
+        let (dims, tshape) = DistillDims::derive(spec, &tspec)?;
+        Ok(DistillSpecs { tspec, tshape, dims })
+    }
+}
+
+/// Per-head loaders/specs — from the runtime manifest in real runs
+/// ([`MultiTaskTrainer::fit`] builds them), or synthesized in tests so
+/// the interleaved batch stream runs without AOT artifacts.
+pub struct MultiSpecs {
+    pub nc: Option<NodeDataLoader>,
+    pub lp: Option<LinkPredictionDataLoader>,
+    pub distill: Option<DistillSpecs>,
+}
+
+/// One routed work item of the interleaved stream.
+#[derive(Debug, PartialEq)]
+pub enum MultiBatch {
+    Nc(Vec<Tensor>, LembTouch),
+    Lp(Vec<Tensor>, LembTouch),
+    Distill(DistillBatch),
+}
+
+/// Per-worker batch-building state: one factory per declared head
+/// (each head samples a different block shape).
+struct MultiFactory<'a> {
+    nc: Option<BatchFactory<'a>>,
+    lp: Option<BatchFactory<'a>>,
+    distill: Option<BatchFactory<'a>>,
+}
+
+impl<'a> MultiFactory<'a> {
+    fn new(ds: &'a GsDataset, specs: &MultiSpecs) -> MultiFactory<'a> {
+        MultiFactory {
+            nc: specs.nc.as_ref().map(|l| BatchFactory::new(ds, &l.shape)),
+            lp: specs.lp.as_ref().map(|l| BatchFactory::new(ds, &l.shape)),
+            distill: specs.distill.as_ref().map(|d| BatchFactory::new(ds, &d.tshape)),
+        }
+    }
+}
+
+/// Per-task results of a multi-task run (the pipeline reports these
+/// per task in `PipelineOutcome`).
+#[derive(Debug, Clone, Default)]
+pub struct MultiReport {
+    /// Task names, in declaration order.
+    pub names: Vec<String>,
+    /// Mean train loss per epoch, per task (declaration order).
+    pub epoch_losses: Vec<Vec<f32>>,
+    /// Train steps run, per task.
+    pub steps: Vec<usize>,
+    pub nc: Option<NcReport>,
+    pub lp: Option<LpReport>,
+    pub distill_mse: Option<f32>,
+}
+
+/// One per-task head: its device train state plus the shared encoder
+/// step (nc/lp) or the student state (distill).
+enum Head {
+    Nc { st: TrainState, enc: EncoderStep },
+    Lp { st: TrainState, enc: EncoderStep, sel: f32 },
+    Distill { st: TrainState },
+}
+
+pub struct MultiTaskTrainer {
+    pub arch: String,
+    pub tasks: Vec<TaskSpec>,
+}
+
+impl MultiTaskTrainer {
+    pub fn new(arch: &str, tasks: Vec<TaskSpec>) -> MultiTaskTrainer {
+        MultiTaskTrainer { arch: arch.to_string(), tasks }
+    }
+
+    /// Structural checks shared with the config layer: at least one
+    /// task, one head per kind, positive finite weights, and distill
+    /// only alongside an NC head (its teacher).
+    pub fn validate(&self) -> Result<()> {
+        if self.tasks.is_empty() {
+            bail!("multi-task run declares no tasks");
+        }
+        for t in &self.tasks {
+            if !(t.weight > 0.0 && t.weight.is_finite()) {
+                bail!("task '{}' weight must be a positive finite number", t.head.name());
+            }
+        }
+        for (i, t) in self.tasks.iter().enumerate() {
+            if self.tasks[..i].iter().any(|o| o.head.name() == t.head.name()) {
+                bail!("duplicate task kind '{}' in the tasks array", t.head.name());
+            }
+        }
+        let has = |n: &str| self.tasks.iter().any(|t| t.head.name() == n);
+        if has("distill") && !has("nc") {
+            bail!("a distill task needs an nc task in the same run (its teacher)");
+        }
+        if self.arch != "rgcn" && has("lp") {
+            // The LP train/emb artifacts are compiled for the rgcn
+            // trunk only; training them beside a different-arch NC
+            // head would silently break the shared-encoder claim.
+            bail!(
+                "multi-task lp heads are wired to the rgcn artifacts; \
+                 the shared encoder arch must be \"rgcn\" when an lp task is declared \
+                 (got \"{}\")",
+                self.arch
+            );
+        }
+        Ok(())
+    }
+
+    /// Position of a head kind in the tasks array.
+    fn index_of(&self, name: &str) -> Option<usize> {
+        self.tasks.iter().position(|t| t.head.name() == name)
+    }
+
+    /// Fresh per-task shuffle streams: seeded exactly like the
+    /// standalone trainers' (`seed ^ salt`) and persistent across
+    /// epochs, so epoch shuffles match single-task runs.
+    pub fn shuffle_rngs(&self, seed: u64) -> Vec<Rng> {
+        self.tasks.iter().map(|t| Rng::seed_from(seed ^ t.head.salt())).collect()
+    }
+
+    /// Build one epoch's interleaved batch stream and hand each item —
+    /// in schedule order — to `consume(task_idx, task_batch_idx,
+    /// batch)` on the calling thread.  `shuffles` comes from
+    /// [`Self::shuffle_rngs`] and advances exactly like the standalone
+    /// trainers' streams.  Returns the per-task batch counts of the
+    /// epoch.
+    ///
+    /// Determinism: the schedule is precomputed, every task batch's
+    /// RNG derives from `batch_seed(seed ^ task_salt, epoch,
+    /// task_batch_idx)`, and learnable-embedding rows stay deferred —
+    /// so the stream is bit-identical for any `opts.loader_workers`.
+    pub fn epoch_batches(
+        &self,
+        ds: &GsDataset,
+        specs: &MultiSpecs,
+        opts: &TrainOptions,
+        epoch: usize,
+        shuffles: &mut [Rng],
+        mut consume: impl FnMut(usize, usize, MultiBatch) -> Result<()>,
+    ) -> Result<Vec<usize>> {
+        if shuffles.len() != self.tasks.len() {
+            bail!("need one shuffle stream per task (got {})", shuffles.len());
+        }
+        let seed = opts.seed;
+        // Per-task work lists, shuffled by the persistent streams.
+        let mut chunks: Vec<IdChunks> = Vec::with_capacity(self.tasks.len());
+        for (t, rng) in self.tasks.iter().zip(shuffles.iter_mut()) {
+            let c = match &t.head {
+                HeadKind::Nc => {
+                    let loader = specs
+                        .nc
+                        .as_ref()
+                        .ok_or_else(|| anyhow!("nc task declared but no nc specs"))?;
+                    let ids = ds.node_labels().ids_in(Split::Train);
+                    IdChunks::new(ids, loader.batch_size(), None, rng)
+                }
+                HeadKind::Lp { max_edges, .. } => {
+                    let loader = specs
+                        .lp
+                        .as_ref()
+                        .ok_or_else(|| anyhow!("lp task declared but no lp specs"))?;
+                    let ids = ds
+                        .lp
+                        .as_ref()
+                        .ok_or_else(|| anyhow!("dataset has no LP task"))?
+                        .edge_ids_in(Split::Train);
+                    IdChunks::new(ids, loader.batch_size(), *max_edges, rng)
+                }
+                HeadKind::Distill => {
+                    let dsp = specs
+                        .distill
+                        .as_ref()
+                        .ok_or_else(|| anyhow!("distill task declared but no distill specs"))?;
+                    let store = ds.tokens[ds.target_ntype]
+                        .as_ref()
+                        .ok_or_else(|| anyhow!("target ntype needs text for distillation"))?;
+                    let ids: Vec<u32> = (0..store.num_rows() as u32).collect();
+                    IdChunks::new(ids, dsp.dims.b, Some(DISTILL_EPOCH_SUBSAMPLE), rng)
+                }
+            };
+            chunks.push(c);
+        }
+        let counts: Vec<usize> = chunks.iter().map(|c| c.len()).collect();
+        let weights: Vec<f64> = self.tasks.iter().map(|t| t.weight).collect();
+        let schedule = build_schedule(seed, epoch as u64, &counts, &weights);
+        // Route each schedule slot to (task, per-task batch index).
+        let mut next = vec![0usize; self.tasks.len()];
+        let items: Vec<(usize, usize)> = schedule
+            .iter()
+            .map(|&t| {
+                let bi = next[t];
+                next[t] += 1;
+                (t, bi)
+            })
+            .collect();
+
+        let nw = opts.n_workers.max(1);
+        run_pipeline(
+            &items,
+            &opts.prefetch_cfg(),
+            || MultiFactory::new(ds, specs),
+            |f, _idx, &(t, bi)| -> Result<MultiBatch> {
+                let chunk = chunks[t].get(bi);
+                let e = epoch as u64;
+                match &self.tasks[t].head {
+                    HeadKind::Nc => {
+                        let loader = specs.nc.as_ref().unwrap();
+                        let mut rng = Rng::seed_from(batch_seed(seed ^ NC_SALT, e, bi as u64));
+                        let fac = f.nc.as_mut().unwrap();
+                        let (batch, touch) =
+                            build_nc_batch(fac, loader, chunk, &mut rng, (bi % nw) as u32, true)?;
+                        Ok(MultiBatch::Nc(batch, touch))
+                    }
+                    HeadKind::Lp { .. } => {
+                        let loader = specs.lp.as_ref().unwrap();
+                        let mut rng = Rng::seed_from(batch_seed(seed ^ LP_SALT, e, bi as u64));
+                        let fac = f.lp.as_mut().unwrap();
+                        let (batch, touch) =
+                            build_lp_batch(fac, loader, chunk, &mut rng, (bi % nw) as u32, true)?;
+                        Ok(MultiBatch::Lp(batch, touch))
+                    }
+                    HeadKind::Distill => {
+                        let dsp = specs.distill.as_ref().unwrap();
+                        let store = ds.tokens[ds.target_ntype].as_ref().unwrap();
+                        let mut rng =
+                            Rng::seed_from(batch_seed(seed ^ DISTILL_SALT, e, bi as u64));
+                        let fac = f.distill.as_mut().unwrap();
+                        let db = build_distill_batch(
+                            fac,
+                            store,
+                            ds.target_ntype,
+                            chunk,
+                            &mut rng,
+                            &dsp.tshape,
+                            &dsp.tspec,
+                            &dsp.dims,
+                        )?;
+                        Ok(MultiBatch::Distill(db))
+                    }
+                }
+            },
+            |idx, batch| {
+                let (t, bi) = items[idx];
+                consume(t, bi, batch)
+            },
+        )?;
+        Ok(counts)
+    }
+
+    /// Train all declared heads over the shared trunk; evaluate each
+    /// head with its standalone evaluator at the end.
+    pub fn fit(&self, rt: &Runtime, ds: &mut GsDataset, opts: &TrainOptions) -> Result<MultiReport> {
+        self.validate()?;
+        let ds: &GsDataset = ds; // embedding updates go through interior mutability
+        let arch = &self.arch;
+        let nc_train = format!("{arch}_nc_train");
+        let nc_logits = format!("{arch}_nc_logits");
+        // The distill teacher is the run's NC head, so its emb
+        // artifact must match the NC arch (the student's MSE target
+        // width is checked against it in DistillDims::derive).
+        let teacher_emb = format!("{arch}_nc_emb");
+        let dt = DistillTrainer::default();
+        let mut lp_artifact = String::new();
+
+        // Resolve per-head specs + device states.
+        let mut specs = MultiSpecs { nc: None, lp: None, distill: None };
+        let mut heads: Vec<Head> = Vec::with_capacity(self.tasks.len());
+        for t in &self.tasks {
+            match &t.head {
+                HeadKind::Nc => {
+                    let spec = rt.manifest.get(&nc_train)?.clone();
+                    let enc = EncoderStep::from_spec(&spec);
+                    specs.nc = Some(NodeDataLoader::new(&spec)?);
+                    heads.push(Head::Nc { st: TrainState::new(rt, &nc_train)?, enc });
+                }
+                HeadKind::Lp { loss, sampler, .. } => {
+                    lp_artifact = lp_train_artifact(*sampler);
+                    let spec = rt.manifest.get(&lp_artifact)?.clone();
+                    let enc = EncoderStep::from_spec(&spec);
+                    specs.lp = Some(LinkPredictionDataLoader::new(&spec, *sampler)?);
+                    heads.push(Head::Lp {
+                        st: TrainState::new(rt, &lp_artifact)?,
+                        enc,
+                        sel: loss.sel(),
+                    });
+                }
+                HeadKind::Distill => {
+                    let spec = rt.manifest.get(&dt.distill_artifact)?.clone();
+                    let tspec = rt.manifest.get(&teacher_emb)?.clone();
+                    specs.distill = Some(DistillSpecs::derive(&spec, tspec)?);
+                    heads.push(Head::Distill { st: TrainState::new(rt, &dt.distill_artifact)? });
+                }
+            }
+        }
+
+        let nc_idx = self.index_of("nc");
+        let mut shuffles = self.shuffle_rngs(opts.seed);
+        let mut report = MultiReport {
+            names: self.tasks.iter().map(|t| t.head.name().to_string()).collect(),
+            epoch_losses: vec![vec![]; self.tasks.len()],
+            steps: vec![0; self.tasks.len()],
+            ..Default::default()
+        };
+
+        for epoch in 0..opts.epochs {
+            // The distill teacher tracks the NC head: a session over
+            // its parameters, frozen for the epoch (deterministic and
+            // cheap — one params_host per epoch).
+            let tsess = if specs.distill.is_some() {
+                let Some(Head::Nc { st, .. }) = nc_idx.map(|i| &heads[i]) else {
+                    bail!("distill head validated to require an nc head");
+                };
+                Some(InferSession::new(rt, &teacher_emb, &st.params_host()?)?)
+            } else {
+                None
+            };
+            let mut loss = vec![0.0f32; self.tasks.len()];
+            let mut steps = vec![0usize; self.tasks.len()];
+            self.epoch_batches(ds, &specs, opts, epoch, &mut shuffles, |t, bi, mb| {
+                let lr = self.tasks[t].lr.unwrap_or(opts.lr);
+                let worker = (bi % opts.n_workers.max(1)) as u32;
+                let l = match (mb, &mut heads[t]) {
+                    (MultiBatch::Nc(mut batch, touch), Head::Nc { st, enc }) => {
+                        enc.step(rt, ds, st, &[lr], &mut batch, &touch, worker)?.loss
+                    }
+                    (MultiBatch::Lp(mut batch, touch), Head::Lp { st, enc, sel }) => {
+                        enc.step(rt, ds, st, &[lr, *sel], &mut batch, &touch, worker)?.loss
+                    }
+                    (MultiBatch::Distill(db), Head::Distill { st }) => {
+                        let dsp = specs.distill.as_ref().unwrap();
+                        let tsess = tsess.as_ref().expect("distill head implies a teacher");
+                        distill_student_step(rt, ds, tsess, st, db, &dsp.dims, lr)?
+                    }
+                    _ => bail!("batch routed to the wrong head"),
+                };
+                loss[t] += l;
+                steps[t] += 1;
+                Ok(())
+            })?;
+            for t in 0..self.tasks.len() {
+                report.epoch_losses[t].push(loss[t] / steps[t].max(1) as f32);
+                report.steps[t] += steps[t];
+            }
+            if opts.verbose {
+                let parts: Vec<String> = self
+                    .tasks
+                    .iter()
+                    .enumerate()
+                    .map(|(t, ts)| {
+                        format!(
+                            "{} {:.4} ({} steps)",
+                            ts.head.name(),
+                            report.epoch_losses[t].last().unwrap(),
+                            steps[t]
+                        )
+                    })
+                    .collect();
+                eprintln!("[multi] epoch {epoch}: {}", parts.join(" | "));
+            }
+        }
+
+        // Per-head evaluation through the standalone evaluators (the
+        // shared forward path), so multi-task metrics are directly
+        // comparable to single-task reports.
+        for (t, task) in self.tasks.iter().enumerate() {
+            match (&task.head, &heads[t]) {
+                (HeadKind::Nc, Head::Nc { st, .. }) => {
+                    let trainer = NodeTrainer::new(&nc_train, &nc_logits);
+                    let mut r = NcReport {
+                        epoch_losses: report.epoch_losses[t].clone(),
+                        steps: report.steps[t],
+                        ..Default::default()
+                    };
+                    r.val_acc = trainer.evaluate(rt, ds, st, Split::Val, opts)?;
+                    r.test_acc = trainer.evaluate(rt, ds, st, Split::Test, opts)?;
+                    report.nc = Some(r);
+                }
+                (HeadKind::Lp { loss, sampler, .. }, Head::Lp { st, .. }) => {
+                    let trainer =
+                        LpTrainer::new(&lp_artifact, LP_EMB_ARTIFACT, *loss, *sampler);
+                    // Validation runs once, after training — best-epoch
+                    // tracking doesn't happen here, so report the same
+                    // placeholder the standalone trainer reports with
+                    // `eval_every_epoch = false` (not a fake peak).
+                    let mut r = LpReport {
+                        epoch_losses: report.epoch_losses[t].clone(),
+                        steps: report.steps[t],
+                        best_epoch: 1,
+                        ..Default::default()
+                    };
+                    r.val_mrr = trainer.evaluate(rt, ds, st, Split::Val, opts)?;
+                    r.test_mrr = trainer.evaluate(rt, ds, st, Split::Test, opts)?;
+                    report.lp = Some(r);
+                }
+                (HeadKind::Distill, Head::Distill { .. }) => {
+                    report.distill_mse = report.epoch_losses[t].last().copied();
+                }
+                _ => unreachable!("heads built in task order"),
+            }
+        }
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_deterministic_and_exhaustive() {
+        let counts = [7usize, 3, 5];
+        let weights = [2.0, 1.0, 1.0];
+        let a = build_schedule(11, 0, &counts, &weights);
+        let b = build_schedule(11, 0, &counts, &weights);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 15);
+        for (t, &c) in counts.iter().enumerate() {
+            assert_eq!(a.iter().filter(|&&x| x == t).count(), c, "task {t}");
+        }
+        // Epoch and seed both move the schedule.
+        assert_ne!(a, build_schedule(11, 1, &counts, &weights));
+        assert_ne!(a, build_schedule(12, 0, &counts, &weights));
+    }
+
+    #[test]
+    fn schedule_weights_bias_early_slots() {
+        // With a 10x weight, the heavy task should dominate the first
+        // half of the schedule (its budget allows it).
+        let counts = [20usize, 20];
+        let weights = [10.0, 1.0];
+        let s = build_schedule(3, 0, &counts, &weights);
+        let early = s[..10].iter().filter(|&&t| t == 0).count();
+        assert!(early >= 7, "heavy task got only {early}/10 early slots");
+    }
+
+    #[test]
+    fn validate_rejects_bad_task_sets() {
+        let t = MultiTaskTrainer::new("rgcn", vec![]);
+        assert!(t.validate().is_err());
+        let t = MultiTaskTrainer::new(
+            "rgcn",
+            vec![TaskSpec::new(HeadKind::Nc), TaskSpec::new(HeadKind::Nc)],
+        );
+        assert!(t.validate().unwrap_err().to_string().contains("duplicate"));
+        let t = MultiTaskTrainer::new("rgcn", vec![TaskSpec::new(HeadKind::Distill)]);
+        assert!(t.validate().unwrap_err().to_string().contains("teacher"));
+        let mut bad = TaskSpec::new(HeadKind::Nc);
+        bad.weight = 0.0;
+        let t = MultiTaskTrainer::new("rgcn", vec![bad]);
+        assert!(t.validate().is_err());
+    }
+}

@@ -6,12 +6,13 @@
 use anyhow::Result;
 
 use crate::dataloader::{
-    apply_lemb_grads, batch_seed, fill_lemb, run_pipeline, BatchFactory, GsDataset,
-    NodeDataLoader, PrefetchingLoader, Split,
+    batch_seed, run_pipeline, BatchFactory, GsDataset, IdChunks, NodeDataLoader,
+    PrefetchingLoader, Split,
 };
 use crate::runtime::{Runtime, TrainState};
 use crate::sampling::EdgeExclusion;
 use crate::serve::InferenceEngine;
+use crate::trainer::encoder::EncoderStep;
 use crate::trainer::TrainOptions;
 use crate::util::Rng;
 
@@ -49,7 +50,7 @@ impl NodeTrainer {
         let mut st = TrainState::new(rt, &self.train_artifact)?;
         let loader = NodeDataLoader::new(&spec)?;
         let b = loader.batch_size();
-        let ldim = spec.batch_spec("lemb").map(|t| t.shape[1]).unwrap_or(0);
+        let enc = EncoderStep::from_spec(&spec);
         let seed = opts.seed ^ 0x6e63; // "nc"
         let mut rng = Rng::seed_from(seed);
         let train_ids = ds.node_labels().ids_in(Split::Train);
@@ -58,24 +59,19 @@ impl NodeTrainer {
 
         for epoch in 0..opts.epochs {
             let t0 = std::time::Instant::now();
-            let mut ids = train_ids.clone();
-            rng.shuffle(&mut ids);
-            let chunks: Vec<&[u32]> = ids.chunks(b).collect();
+            let chunks = IdChunks::new(train_ids.clone(), b, None, &mut rng);
             let mut epoch_loss = 0.0f32;
             let mut steps = 0usize;
             pfl.for_each(
                 ds,
-                &chunks,
+                &chunks.chunks(),
                 seed,
                 epoch as u64,
                 opts.n_workers,
                 |bi, (mut batch, touch)| {
                     let worker = (bi % opts.n_workers.max(1)) as u32;
-                    fill_lemb(ds, &mut batch, &touch, worker)?;
-                    let out = st.step(rt, &[opts.lr], &batch)?;
-                    if let (Some(g), true) = (&out.grad_lemb, ldim > 0) {
-                        apply_lemb_grads(&ds.engine, &touch, g, ldim, opts.lr);
-                    }
+                    let out =
+                        enc.step(rt, ds, &mut st, &[opts.lr], &mut batch, &touch, worker)?;
                     epoch_loss += out.loss;
                     steps += 1;
                     if opts.log_every > 0 && bi % opts.log_every == 0 && opts.verbose {

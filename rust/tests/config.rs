@@ -124,6 +124,37 @@ fn run_conf_with_train_matches_separate_train() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// The acceptance run: `gs run --conf examples/pipeline_multitask.json`
+/// trains nc+distill in one run and reports per-task metrics in the
+/// `PipelineOutcome` — gated on PJRT like every training test (shrunk
+/// via --set so the gated suite stays fast).
+#[test]
+fn run_conf_multitask_reports_per_task_metrics() {
+    if graphstorm::runtime::runtime_if_available().is_none() {
+        eprintln!("skipping: AOT artifacts / PJRT backend unavailable");
+        return;
+    }
+    let run = cli::find_command("run").unwrap();
+    let cfg = cli::build_config(
+        run,
+        &argv(&[
+            "--conf", "../examples/pipeline_multitask.json",
+            "--set", "data.size=400",
+            "--set", "encoder.epochs=1",
+            "--set", "loader.workers=2",
+        ]),
+    )
+    .unwrap();
+    let out = Pipeline::new(cfg).unwrap().run().unwrap();
+    let m = out.multi.expect("multi-task stage must report per-task metrics");
+    assert_eq!(m.names, vec!["nc", "distill"]);
+    assert_eq!(m.epoch_losses.len(), 2);
+    assert!(m.steps.iter().all(|&s| s > 0), "every task must take steps: {:?}", m.steps);
+    assert!(m.nc.is_some(), "nc head must report val/test accuracy");
+    assert!(m.distill_mse.is_some(), "distill head must report its mse");
+    assert!(out.stage_secs.iter().any(|(n, _)| n == "tasks(nc+distill)"));
+}
+
 /// The serve stage runs end-to-end through the pipeline (surrogate
 /// backend) with an engine pool, TinyLFU admission and the post-bump
 /// refresh arm, and its internal bit-identity gate holds.  The
@@ -155,7 +186,7 @@ fn pipeline_serve_stage_runs() {
 /// The shipped example run configs must parse, validate and resolve.
 #[test]
 fn shipped_examples_are_valid() {
-    for name in ["pipeline_nc.json", "pipeline_lp_serve.json"] {
+    for name in ["pipeline_nc.json", "pipeline_lp_serve.json", "pipeline_multitask.json"] {
         let path = std::path::Path::new("../examples").join(name);
         let cfg = RunConfig::load(&path).unwrap_or_else(|e| panic!("{name}: {e}"));
         cfg.validate().unwrap();
@@ -168,6 +199,49 @@ fn shipped_examples_are_valid() {
     // sequence: data -> partition -> train -> offline infer.
     let nc = RunConfig::load(std::path::Path::new("../examples/pipeline_nc.json")).unwrap();
     assert_eq!(nc.stage_names(), vec!["data", "partition", "task(nc)", "infer"]);
+    // pipeline_multitask.json must declare the chained nc+distill run.
+    let mt =
+        RunConfig::load(std::path::Path::new("../examples/pipeline_multitask.json")).unwrap();
+    assert_eq!(mt.stage_names(), vec!["data", "partition", "tasks(nc+distill)"]);
+    let m = mt.multi.as_ref().unwrap();
+    assert!((m.tasks[0].weight - 2.0).abs() < 1e-12);
+}
+
+/// Golden snapshots: the parsed-and-serialized form of every shipped
+/// example (defaults materialized by `to_json`, `"auto"` preserved so
+/// the snapshot is machine-independent).  A changed stage default or
+/// serialization shows up as a reviewable fixture diff instead of
+/// drifting silently.  Regenerate after auditing with
+/// `GS_WRITE_FIXTURES=1 cargo test -q run_config_golden`.
+#[test]
+fn run_config_golden_snapshots() {
+    for name in ["pipeline_nc", "pipeline_lp_serve", "pipeline_multitask"] {
+        let path = std::path::PathBuf::from(format!("../examples/{name}.json"));
+        let cfg = RunConfig::load(&path).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let mut pretty = cfg.to_json().to_string_pretty();
+        pretty.push('\n');
+        let gpath = format!("tests/fixtures/{name}.golden.json");
+        if std::env::var("GS_WRITE_FIXTURES").is_ok() {
+            std::fs::write(&gpath, &pretty).unwrap();
+            continue;
+        }
+        let want = std::fs::read_to_string(&gpath)
+            .unwrap_or_else(|e| panic!("{gpath}: {e} (GS_WRITE_FIXTURES=1 to bootstrap)"));
+        assert_eq!(
+            pretty, want,
+            "{name}: config defaults/serialization drifted from the golden fixture; if \
+             intended, audit the diff and regenerate with GS_WRITE_FIXTURES=1"
+        );
+        // The golden text also parses back to the identical config
+        // (structural check, independent of float formatting).
+        assert_eq!(RunConfig::parse_str(&want).unwrap(), cfg, "{name} golden must re-parse");
+        // And resolution stays a fixed point that round-trips ("auto"
+        // resolves machine-locally, so it is not snapshotted).
+        let r = cfg.resolved();
+        let back = RunConfig::parse_str(&r.to_json().to_string_pretty()).unwrap();
+        assert_eq!(r, back);
+        assert_eq!(back.resolved(), back);
+    }
 }
 
 /// Override precedence end-to-end: file < --set, applied in order.

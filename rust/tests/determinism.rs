@@ -1,0 +1,453 @@
+//! The determinism test harness: one parameterized sweep asserting
+//! bit-identical output across loader worker counts {1, 2, 4, 8} for
+//! every trainer — NC, LP, distill and the multi-task trainer — plus
+//! a regression pin for the still-serial METIS-like matching +
+//! refinement sweeps.
+//!
+//! Two layers, matching the repo's artifact-gating convention:
+//!
+//! * **Batch-stream identity (always on).**  The full interleaved
+//!   multi-task stream (which routes NC, LP *and* distill batches
+//!   through one pipeline) is collected for each worker count and
+//!   compared byte-for-byte, and each task's sub-stream is compared
+//!   against what the standalone serial loader builds from the same
+//!   seed — the "single-task runs are thin wrappers" contract.
+//! * **Metric identity (artifact-gated).**  Full training runs per
+//!   trainer, skipped without AOT artifacts / PJRT like every other
+//!   executing test.
+
+use graphstorm::datagen::{self, mag};
+use graphstorm::dataloader::{
+    batch_seed, fill_lemb, BatchFactory, GsDataset, IdChunks, LinkPredictionDataLoader,
+    NodeDataLoader, Split,
+};
+use graphstorm::partition::{metis_like_partition, random_partition, PartitionBook};
+use graphstorm::runtime::{ArtifactSpec, TensorSpec};
+use graphstorm::sampling::NegSampler;
+use graphstorm::trainer::lp::LpLoss;
+use graphstorm::trainer::multi::{
+    build_schedule, DistillSpecs, HeadKind, MultiBatch, MultiSpecs, MultiTaskTrainer, TaskSpec,
+};
+use graphstorm::trainer::{DistillTrainer, LpTrainer, NodeTrainer, TrainOptions};
+use graphstorm::util::json::Json;
+use graphstorm::util::Rng;
+
+const WORKER_SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+fn mag_ds(n: usize, parts: usize) -> GsDataset {
+    let raw = mag::generate(&mag::MagConfig { n_papers: n, ..Default::default() });
+    let book = if parts <= 1 {
+        PartitionBook::single(&raw.graph.num_nodes)
+    } else {
+        random_partition(&raw.graph, parts, 3)
+    };
+    let mut ds = datagen::build_dataset(raw, book, 64, 3);
+    ds.ensure_text_features(64);
+    ds
+}
+
+fn nc_spec() -> ArtifactSpec {
+    ArtifactSpec::synthetic_block(&[2304, 384, 64], &[1920, 320], 5, r#","batch":64"#)
+}
+
+fn lp_spec() -> ArtifactSpec {
+    ArtifactSpec::synthetic_block(&[1800, 300, 48], &[1500, 240], 5, r#","lp_batch":16,"k":8"#)
+}
+
+/// Synthetic distill specs: a 32-target GNN teacher emitting 8-dim
+/// embeddings + a 32-row student token batch over `seq_len` tokens.
+fn distill_specs(seq_len: usize) -> DistillSpecs {
+    let tspec = ArtifactSpec::synthetic_block(&[1152, 192, 32], &[960, 160], 5, r#","batch":32"#)
+        .with_output("emb", &[32, 8]);
+    let t = |name: &str, shape: Vec<usize>, dtype: &str| TensorSpec {
+        name: name.to_string(),
+        shape,
+        dtype: dtype.to_string(),
+    };
+    let spec = ArtifactSpec {
+        file: "synthetic_distill".to_string(),
+        init_file: None,
+        kind: "train".to_string(),
+        n_params: 0,
+        state: vec![],
+        scalars: vec![],
+        batch: vec![
+            t("tokens", vec![32, seq_len], "i32"),
+            t("teacher", vec![32, 8], "f32"),
+            t("lmask", vec![32], "f32"),
+        ],
+        outputs: vec![],
+        config: Json::parse("{}").unwrap(),
+    };
+    DistillSpecs::derive(&spec, tspec).unwrap()
+}
+
+fn multi_trainer() -> MultiTaskTrainer {
+    let mut nc = TaskSpec::new(HeadKind::Nc);
+    nc.weight = 2.0;
+    let lp = TaskSpec::new(HeadKind::Lp {
+        loss: LpLoss::Contrastive,
+        sampler: NegSampler::Joint { k: 8 },
+        max_edges: Some(64),
+    });
+    let distill = TaskSpec::new(HeadKind::Distill);
+    MultiTaskTrainer::new("rgcn", vec![nc, lp, distill])
+}
+
+fn multi_specs(ds: &GsDataset) -> MultiSpecs {
+    let seq_len = ds.tokens[ds.target_ntype].as_ref().unwrap().seq_len;
+    MultiSpecs {
+        nc: Some(NodeDataLoader::new(&nc_spec()).unwrap()),
+        lp: Some(LinkPredictionDataLoader::new(&lp_spec(), NegSampler::Joint { k: 8 }).unwrap()),
+        distill: Some(distill_specs(seq_len)),
+    }
+}
+
+fn opts_with_workers(workers: usize) -> TrainOptions {
+    TrainOptions {
+        seed: 0xa11,
+        n_workers: 2,
+        loader_workers: workers,
+        prefetch: 2,
+        verbose: false,
+        ..Default::default()
+    }
+}
+
+/// Collect the full interleaved stream for `epochs` epochs, with the
+/// deferred learnable-embedding rows filled like the trainers fill
+/// them (tables are not updated here, so fill order cannot matter).
+fn collect_stream(
+    trainer: &MultiTaskTrainer,
+    ds: &GsDataset,
+    specs: &MultiSpecs,
+    opts: &TrainOptions,
+    epochs: usize,
+) -> Vec<(usize, usize, MultiBatch)> {
+    let mut shuffles = trainer.shuffle_rngs(opts.seed);
+    let mut out = vec![];
+    for epoch in 0..epochs {
+        trainer
+            .epoch_batches(ds, specs, opts, epoch, &mut shuffles, |t, bi, mut mb| {
+                let worker = (bi % opts.n_workers.max(1)) as u32;
+                match &mut mb {
+                    MultiBatch::Nc(batch, touch) | MultiBatch::Lp(batch, touch) => {
+                        fill_lemb(ds, batch, touch, worker)?;
+                    }
+                    MultiBatch::Distill(_) => {}
+                }
+                out.push((t, bi, mb));
+                Ok(())
+            })
+            .unwrap();
+    }
+    out
+}
+
+/// The tentpole sweep: the interleaved nc+lp+distill batch stream must
+/// be bit-identical for loader worker counts {1, 2, 4, 8}.
+#[test]
+fn multi_task_stream_identical_across_worker_counts() {
+    let ds = mag_ds(500, 2);
+    let trainer = multi_trainer();
+    let specs = multi_specs(&ds);
+    let base = collect_stream(&trainer, &ds, &specs, &opts_with_workers(1), 2);
+    assert!(
+        base.iter().any(|(t, _, _)| *t == 0)
+            && base.iter().any(|(t, _, _)| *t == 1)
+            && base.iter().any(|(t, _, _)| *t == 2),
+        "stream must interleave all three tasks"
+    );
+    for workers in WORKER_SWEEP {
+        let got = collect_stream(&trainer, &ds, &specs, &opts_with_workers(workers), 2);
+        assert_eq!(got.len(), base.len(), "workers={workers}");
+        for (i, (a, b)) in base.iter().zip(&got).enumerate() {
+            assert_eq!(a.0, b.0, "schedule diverged at item {i} (workers={workers})");
+            assert_eq!(a.1, b.1, "task batch index diverged at item {i} (workers={workers})");
+            assert_eq!(a.2, b.2, "batch bytes diverged at item {i} (workers={workers})");
+        }
+    }
+}
+
+/// The thin-wrapper contract: each task's sub-stream inside the
+/// multi-task run equals what the standalone serial loaders build
+/// from the same seed.
+#[test]
+fn multi_substreams_match_single_task_loaders() {
+    let ds = mag_ds(500, 2);
+    let trainer = multi_trainer();
+    let specs = multi_specs(&ds);
+    let opts = opts_with_workers(1);
+    let epochs = 2usize;
+    let stream = collect_stream(&trainer, &ds, &specs, &opts, epochs);
+    let seed = opts.seed;
+    let rotate = opts.n_workers;
+
+    // NC: the standalone trainer's exact recipe (persistent shuffle
+    // stream seeded seed ^ 0x6e63; per-batch RNG from batch_seed).
+    let nc_loader = specs.nc.as_ref().unwrap();
+    let mut expected_nc = vec![];
+    let mut rng = Rng::seed_from(seed ^ 0x6e63);
+    for epoch in 0..epochs {
+        let chunks = IdChunks::new(
+            ds.node_labels().ids_in(Split::Train),
+            nc_loader.batch_size(),
+            None,
+            &mut rng,
+        );
+        for bi in 0..chunks.len() {
+            let mut brng = Rng::seed_from(batch_seed(seed ^ 0x6e63, epoch as u64, bi as u64));
+            let (batch, touch, _) = nc_loader
+                .batch(&ds, chunks.get(bi), &mut brng, (bi % rotate) as u32)
+                .unwrap();
+            expected_nc.push((batch, touch));
+        }
+    }
+    let got_nc: Vec<_> = stream
+        .iter()
+        .filter_map(|(t, _, mb)| match (t, mb) {
+            (0, MultiBatch::Nc(b, to)) => Some((b.clone(), to.clone())),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(got_nc.len(), expected_nc.len());
+    for (i, (a, b)) in expected_nc.iter().zip(&got_nc).enumerate() {
+        assert_eq!(a.0, b.0, "nc sub-stream tensors diverge at batch {i}");
+        assert_eq!(a.1, b.1, "nc sub-stream touch diverges at batch {i}");
+    }
+
+    // LP: standalone recipe (seed ^ 0x1b9, shuffle → cap → chunk).
+    let lp_loader = specs.lp.as_ref().unwrap();
+    let mut expected_lp = vec![];
+    let mut rng = Rng::seed_from(seed ^ 0x1b9);
+    for epoch in 0..epochs {
+        let ids = ds.lp.as_ref().unwrap().edge_ids_in(Split::Train);
+        let chunks = IdChunks::new(ids, lp_loader.batch_size(), Some(64), &mut rng);
+        for bi in 0..chunks.len() {
+            let mut brng = Rng::seed_from(batch_seed(seed ^ 0x1b9, epoch as u64, bi as u64));
+            let (batch, touch) = lp_loader
+                .batch(&ds, chunks.get(bi), &mut brng, (bi % rotate) as u32)
+                .unwrap();
+            expected_lp.push((batch, touch));
+        }
+    }
+    let got_lp: Vec<_> = stream
+        .iter()
+        .filter_map(|(t, _, mb)| match (t, mb) {
+            (1, MultiBatch::Lp(b, to)) => Some((b.clone(), to.clone())),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(got_lp.len(), expected_lp.len());
+    for (i, (a, b)) in expected_lp.iter().zip(&got_lp).enumerate() {
+        assert_eq!(a.0, b.0, "lp sub-stream tensors diverge at batch {i}");
+        assert_eq!(a.1, b.1, "lp sub-stream touch diverges at batch {i}");
+    }
+
+    // Distill: standalone recipe (seed ^ 0xd157, 2048-node subsample).
+    let dsp = specs.distill.as_ref().unwrap();
+    let store = ds.tokens[ds.target_ntype].as_ref().unwrap();
+    let mut expected_d = vec![];
+    let mut rng = Rng::seed_from(seed ^ 0xd157);
+    for epoch in 0..epochs {
+        let ids: Vec<u32> = (0..store.num_rows() as u32).collect();
+        let chunks = IdChunks::new(ids, dsp.dims.b, Some(2048), &mut rng);
+        let mut f = BatchFactory::new(&ds, &dsp.tshape);
+        for bi in 0..chunks.len() {
+            let mut brng = Rng::seed_from(batch_seed(seed ^ 0xd157, epoch as u64, bi as u64));
+            let db = graphstorm::trainer::distill::build_distill_batch(
+                &mut f,
+                store,
+                ds.target_ntype,
+                chunks.get(bi),
+                &mut brng,
+                &dsp.tshape,
+                &dsp.tspec,
+                &dsp.dims,
+            )
+            .unwrap();
+            expected_d.push(db);
+        }
+    }
+    let got_d: Vec<_> = stream
+        .iter()
+        .filter_map(|(t, _, mb)| match (t, mb) {
+            (2, MultiBatch::Distill(db)) => Some(db.clone()),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(got_d.len(), expected_d.len());
+    for (i, (a, b)) in expected_d.iter().zip(&got_d).enumerate() {
+        assert_eq!(a, b, "distill sub-stream diverges at batch {i}");
+    }
+}
+
+/// The schedule itself is a pure function of (seed, epoch, counts,
+/// weights): same inputs → same interleaving, exhaustive budgets.
+#[test]
+fn schedule_pure_and_budget_exact() {
+    let counts = [9usize, 4, 6];
+    let weights = [2.0, 1.0, 0.5];
+    let a = build_schedule(0xa11, 3, &counts, &weights);
+    assert_eq!(a, build_schedule(0xa11, 3, &counts, &weights));
+    assert_eq!(a.len(), 19);
+    for (t, &c) in counts.iter().enumerate() {
+        assert_eq!(a.iter().filter(|&&x| x == t).count(), c);
+    }
+    assert_ne!(a, build_schedule(0xa11, 4, &counts, &weights));
+}
+
+/// Metric-level sweep over all four trainers — full training runs must
+/// report bit-identical metrics for any loader worker count.  Gated on
+/// AOT artifacts / PJRT like every executing test.
+#[test]
+fn trainer_metrics_identical_across_worker_counts() {
+    let Some(rt) = graphstorm::runtime::runtime_if_available() else {
+        eprintln!("skipping: AOT artifacts / PJRT backend unavailable");
+        return;
+    };
+
+    // --- NC ---------------------------------------------------------
+    let mut base = None;
+    for workers in WORKER_SWEEP {
+        let mut ds = mag_ds(400, 2);
+        let trainer = NodeTrainer::new("rgcn_nc_train", "rgcn_nc_logits");
+        let opts = TrainOptions { epochs: 2, ..opts_with_workers(workers) };
+        let (rep, _) = trainer.fit(&rt, &mut ds, &opts).unwrap();
+        let key = (rep.epoch_losses.clone(), rep.val_acc, rep.test_acc);
+        match &base {
+            None => base = Some(key),
+            Some(b) => assert_eq!(b, &key, "nc metrics diverge at workers={workers}"),
+        }
+    }
+
+    // --- LP ---------------------------------------------------------
+    let mut base = None;
+    for workers in WORKER_SWEEP {
+        let mut ds = mag_ds(400, 2);
+        let mut trainer = LpTrainer::new(
+            "rgcn_lp_joint_k32_train",
+            "rgcn_lp_emb",
+            LpLoss::Contrastive,
+            NegSampler::Joint { k: 32 },
+        );
+        trainer.max_train_edges = Some(128);
+        trainer.eval_every_epoch = false;
+        let opts = TrainOptions { epochs: 1, ..opts_with_workers(workers) };
+        let (rep, _) = trainer.fit(&rt, &mut ds, &opts).unwrap();
+        let key = (rep.epoch_losses.clone(), rep.val_mrr, rep.test_mrr);
+        match &base {
+            None => base = Some(key),
+            Some(b) => assert_eq!(b, &key, "lp metrics diverge at workers={workers}"),
+        }
+    }
+
+    // --- Distill (teacher + student chain) --------------------------
+    let mut base = None;
+    for workers in WORKER_SWEEP {
+        let mut ds = mag_ds(400, 2);
+        let opts = TrainOptions { epochs: 1, ..opts_with_workers(workers) };
+        let teacher = NodeTrainer::new("rgcn_nc_train", "rgcn_nc_logits");
+        let (_, tst) = teacher.fit(&rt, &mut ds, &opts).unwrap();
+        let dt = DistillTrainer::default();
+        let (mse, _) = dt.distill(&rt, &ds, &tst.params_host().unwrap(), &opts).unwrap();
+        match &base {
+            None => base = Some(mse.to_bits()),
+            Some(b) => {
+                assert_eq!(*b, mse.to_bits(), "distill mse diverges at workers={workers}")
+            }
+        }
+    }
+
+    // --- Multi-task (nc + distill over the shared trunk) ------------
+    let mut base = None;
+    for workers in WORKER_SWEEP {
+        let mut ds = mag_ds(400, 2);
+        let mut nc = TaskSpec::new(HeadKind::Nc);
+        nc.weight = 2.0;
+        let trainer = MultiTaskTrainer::new("rgcn", vec![nc, TaskSpec::new(HeadKind::Distill)]);
+        let opts = TrainOptions { epochs: 1, ..opts_with_workers(workers) };
+        let rep = trainer.fit(&rt, &mut ds, &opts).unwrap();
+        let ncr = rep.nc.as_ref().unwrap();
+        let key = (
+            rep.epoch_losses.clone(),
+            ncr.val_acc,
+            ncr.test_acc,
+            rep.distill_mse.map(f32::to_bits),
+        );
+        match &base {
+            None => base = Some(key),
+            Some(b) => assert_eq!(b, &key, "multi-task metrics diverge at workers={workers}"),
+        }
+    }
+}
+
+// ------------------------------------------------------------ metis pin
+
+/// A fixed deterministic graph (ring + chords, no RNG) for the
+/// partition pin: big enough that one heavy-edge-matching coarsening
+/// level runs, small enough that the fixture stays reviewable.
+fn pin_graph() -> graphstorm::graph::HeteroGraph {
+    use graphstorm::graph::{EdgeTypeDef, HeteroGraph, Schema};
+    let n = 600u32;
+    let schema = Schema::new(
+        vec!["v".into()],
+        vec![EdgeTypeDef { name: "e".into(), src_ntype: 0, dst_ntype: 0 }],
+    );
+    let mut g = HeteroGraph::new(schema, vec![n as usize]);
+    let (mut src, mut dst) = (vec![], vec![]);
+    for i in 0..n {
+        src.push(i);
+        dst.push((i + 1) % n);
+    }
+    for i in (0..n).step_by(2) {
+        src.push(i);
+        dst.push((i + 37) % n);
+    }
+    g.set_edges(0, src, dst);
+    g
+}
+
+/// Regression pin: `metis_like_partition` on a fixed graph must keep
+/// producing exactly the assignments recorded in
+/// `tests/fixtures/metis_pin.json`.  The matching + refinement sweeps
+/// are still serial (ROADMAP); this locks their current output so a
+/// future parallelization shows up as a reviewed diff, not silent
+/// drift.  Regenerate (after auditing!) with
+/// `GS_WRITE_FIXTURES=1 cargo test -q metis_partition`.
+#[test]
+fn metis_partition_matches_pinned_fixture() {
+    let g = pin_graph();
+    let book = metis_like_partition(&g, 3, 11);
+    let got: Vec<usize> = book.assignments[0].iter().map(|&p| p as usize).collect();
+    assert_eq!(got.len(), 600);
+    assert!(got.iter().all(|&p| p < 3));
+    for part in 0..3 {
+        assert!(got.iter().any(|&p| p == part), "part {part} is empty");
+    }
+
+    let path = std::path::Path::new("tests/fixtures/metis_pin.json");
+    let payload = format!(
+        "{{\"n\": 600, \"parts\": 3, \"seed\": 11, \"assignments\": {got:?}}}\n"
+    );
+    if std::env::var("GS_WRITE_FIXTURES").is_ok() {
+        std::fs::write(path, payload).unwrap();
+        return;
+    }
+    let text = std::fs::read_to_string(path)
+        .expect("tests/fixtures/metis_pin.json missing — GS_WRITE_FIXTURES=1 to bootstrap");
+    let j = Json::parse(&text).unwrap();
+    let want: Vec<usize> = j
+        .get("assignments")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_usize().unwrap())
+        .collect();
+    assert_eq!(
+        got, want,
+        "metis_like_partition output drifted from the pinned fixture; if the change is \
+         intended, audit it and regenerate with GS_WRITE_FIXTURES=1"
+    );
+}

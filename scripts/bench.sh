@@ -19,9 +19,14 @@ ROOT="$(cd "$(dirname "$0")/.." && pwd)"
 export GS_BENCH_OUT="${GS_BENCH_OUT:-$ROOT/BENCH_micro.json}"
 export GS_SERVE_BENCH_OUT="${GS_SERVE_BENCH_OUT:-$ROOT/BENCH_serve.json}"
 
-# Lint step: docs must reference real paths/flags/keys before we spend
-# bench time (scripts/check_docs.sh).
-"$ROOT/scripts/check_docs.sh"
+# Gate step: docs lint + tier-1 build/tests must pass before we spend
+# bench time (scripts/test.sh; set GS_BENCH_SKIP_TESTS=1 to bench a
+# tree whose tests are already known green).
+if [ "${GS_BENCH_SKIP_TESTS:-0}" != "1" ]; then
+    "$ROOT/scripts/test.sh"
+else
+    "$ROOT/scripts/check_docs.sh"
+fi
 echo
 
 cd "$ROOT/rust"

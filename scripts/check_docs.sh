@@ -66,15 +66,18 @@ for doc in "${docs[@]}"; do
         err "$doc" "unknown gs subcommand '$c'"
     done < <(grep -o '`gs [a-z][a-z-]*' "$doc" | sed 's/^`gs //' | sort -u)
 
-    # 4. Backticked stage.key config paths (e.g. `serve.pool_workers`)
-    #    must appear as keys in the typed config structs.
+    # 4. Backticked stage.key config paths (e.g. `serve.pool_workers`,
+    #    `tasks.0.weight`) must appear as keys in the typed config
+    #    structs.  Numeric segments are array indices; the final
+    #    alphabetic segment is the key to check.
     while IFS= read -r sk; do
-        key="${sk#*.}"
-        # `lm.rs` and friends are file names, not config paths.
-        case "$key" in rs|sh|json|md|py|csv|toml) continue ;; esac
+        key="${sk##*.}"
+        # `lm.rs` and friends are file names, not config paths;
+        # empty / numeric tails are array indices, not keys.
+        case "$key" in rs|sh|json|md|py|csv|toml|''|*[!a-z_]*) continue ;; esac
         grep -q "\"$key\"" "$CFG_SRC" && continue
         err "$doc" "unknown config key '$sk'"
-    done < <(grep -o '`\(loader\|data\|partition\|lm\|task\|infer\|serve\)\.[a-z_]*`' "$doc" \
+    done < <(grep -o '`\(loader\|data\|partition\|lm\|task\|tasks\|encoder\|infer\|serve\)\.[a-z0-9_.]*`' "$doc" \
              | tr -d '`' | sort -u)
 done
 
