@@ -66,6 +66,7 @@ fn main() -> anyhow::Result<()> {
             max_batch: 32,
             deadline: std::time::Duration::from_micros(200),
         },
+        ..Default::default()
     };
     let (stats, replies) = closed_loop(&engine, cfg, &cache, &trace, 4)?;
 

@@ -239,6 +239,7 @@ fn main() {
                 max_batch: conf.usize("max_batch", 32),
                 deadline: std::time::Duration::from_micros(conf.usize("deadline_us", 200) as u64),
             },
+            ..Default::default()
         };
         let clients = conf.usize("clients", 4);
 
@@ -295,6 +296,7 @@ fn main() {
                 max_batch: 8,
                 deadline: std::time::Duration::from_micros(100),
             },
+            ..Default::default()
         };
 
         let c1 = Mutex::new(EmbeddingCache::new(0));

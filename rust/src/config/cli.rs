@@ -292,6 +292,36 @@ pub const COMMANDS: &[Cmd] = &[
             },
             Flag { name: "max-batch", takes_value: true, path: "serve.max_batch", help: "micro-batch size cap" },
             Flag { name: "deadline-us", takes_value: true, path: "serve.deadline_us", help: "micro-batch deadline" },
+            Flag {
+                name: "faults",
+                takes_value: true,
+                path: "serve.faults",
+                help: "fault plan for the uncached arm, e.g. 'panics=2,transient=3,slow=1'",
+            },
+            Flag {
+                name: "deadline-ms",
+                takes_value: true,
+                path: "serve.deadline_ms",
+                help: "per-request deadline in ms (0 = none)",
+            },
+            Flag {
+                name: "max-retries",
+                takes_value: true,
+                path: "serve.max_retries",
+                help: "bounded retries for retryable batch failures",
+            },
+            Flag {
+                name: "queue-depth",
+                takes_value: true,
+                path: "serve.queue_depth",
+                help: "shed new misses past this many pending requests (0 = never)",
+            },
+            Flag {
+                name: "max-worker-restarts",
+                takes_value: true,
+                path: "serve.max_worker_restarts",
+                help: "worker restarts before degraded mode",
+            },
             SET,
         ],
     },
@@ -543,6 +573,7 @@ mod tests {
                     "neg" => "joint-16",
                     "arch" => "rgcn",
                     "admission" => "tinylfu",
+                    "faults" => "panics=1,transient=2,slow=1",
                     "pool-workers" => "auto",
                     "alpha" => "1.2",
                     "lr" => "0.004",

@@ -32,7 +32,7 @@ use std::collections::BTreeMap;
 
 use crate::dataloader::autoscale_workers;
 use crate::sampling::NegSampler;
-use crate::serve::{Admission, EnginePoolCfg, MicroBatcherCfg};
+use crate::serve::{Admission, EnginePoolCfg, FaultSpec, MicroBatcherCfg};
 use crate::trainer::lp::LpLoss;
 use crate::trainer::multi::{HeadKind, MultiTaskTrainer, TaskSpec};
 use crate::trainer::TrainOptions;
@@ -1046,6 +1046,21 @@ pub struct ServeCfg {
     /// Engine architecture; `None` = the task's arch (or "rgcn").
     pub arch: Option<String>,
     pub out_dim: usize,
+    /// Deterministic fault plan for the bench's uncached arm, as a
+    /// `FaultSpec` string (`"panics=2,transient=3,slow=1,slow_ms=5"`);
+    /// empty = no injection.
+    pub faults: String,
+    /// Per-request deadline in milliseconds; 0 = no deadline.
+    pub deadline_ms: u64,
+    /// Bounded retries (with exponential backoff) for retryable batch
+    /// failures.
+    pub max_retries: usize,
+    /// Queue-boundary shedding: reject new misses once this many
+    /// requests are pending; 0 = never shed.
+    pub queue_depth: usize,
+    /// Worker restarts (panic or fatal error) before the pool enters
+    /// degraded single-scratch mode.
+    pub max_worker_restarts: usize,
 }
 
 impl Default for ServeCfg {
@@ -1062,6 +1077,11 @@ impl Default for ServeCfg {
             deadline_us: 200,
             arch: None,
             out_dim: 8,
+            faults: String::new(),
+            deadline_ms: 0,
+            max_retries: 2,
+            queue_depth: 0,
+            max_worker_restarts: 8,
         }
     }
 }
@@ -1079,6 +1099,11 @@ impl ServeCfg {
         "deadline_us",
         "arch",
         "out_dim",
+        "faults",
+        "deadline_ms",
+        "max_retries",
+        "queue_depth",
+        "max_worker_restarts",
     ];
 
     fn from_json(v: &Json) -> Result<ServeCfg> {
@@ -1114,6 +1139,13 @@ impl ServeCfg {
                 "deadline_us" => c.deadline_us = take_u64("serve", "deadline_us", v)?,
                 "arch" => c.arch = Some(take_str("serve", "arch", v)?.to_string()),
                 "out_dim" => c.out_dim = take_usize("serve", "out_dim", v)?,
+                "faults" => c.faults = take_str("serve", "faults", v)?.to_string(),
+                "deadline_ms" => c.deadline_ms = take_u64("serve", "deadline_ms", v)?,
+                "max_retries" => c.max_retries = take_usize("serve", "max_retries", v)?,
+                "queue_depth" => c.queue_depth = take_usize("serve", "queue_depth", v)?,
+                "max_worker_restarts" => {
+                    c.max_worker_restarts = take_usize("serve", "max_worker_restarts", v)?
+                }
                 _ => return Err(unknown_key("serve", k, Self::KEYS)),
             }
         }
@@ -1140,6 +1172,15 @@ impl ServeCfg {
             pairs.push(("arch", Json::from(a.as_str())));
         }
         pairs.push(("out_dim", Json::from(self.out_dim)));
+        // Like `arch`: only emitted when set, so round-trips of
+        // fault-free configs stay byte-stable.
+        if !self.faults.is_empty() {
+            pairs.push(("faults", Json::from(self.faults.as_str())));
+        }
+        pairs.push(("deadline_ms", Json::from(self.deadline_ms as usize)));
+        pairs.push(("max_retries", Json::from(self.max_retries)));
+        pairs.push(("queue_depth", Json::from(self.queue_depth)));
+        pairs.push(("max_worker_restarts", Json::from(self.max_worker_restarts)));
         obj(pairs)
     }
 
@@ -1161,7 +1202,23 @@ impl ServeCfg {
 
     /// These knobs as an engine-pool config.
     pub fn pool(&self) -> EnginePoolCfg {
-        EnginePoolCfg { workers: self.resolve_pool_workers(), batcher: self.batcher() }
+        EnginePoolCfg {
+            workers: self.resolve_pool_workers(),
+            batcher: self.batcher(),
+            request_deadline: std::time::Duration::from_millis(self.deadline_ms),
+            max_retries: self.max_retries,
+            queue_depth: self.queue_depth,
+            max_worker_restarts: self.max_worker_restarts,
+            ..EnginePoolCfg::default()
+        }
+    }
+
+    /// The parsed fault plan spec, or `None` when `faults` is empty.
+    pub fn fault_spec(&self) -> Result<Option<FaultSpec>> {
+        if self.faults.is_empty() {
+            return Ok(None);
+        }
+        Ok(Some(FaultSpec::parse(&self.faults)?))
     }
 
     fn validate(&self) -> Result<()> {
@@ -1177,6 +1234,9 @@ impl ServeCfg {
         if self.out_dim == 0 {
             bail!("serve.out_dim must be >= 1");
         }
+        // Fail fast on a malformed fault spec — at validation, not
+        // mid-bench.
+        self.fault_spec().map_err(|e| anyhow!("serve.faults: {e}"))?;
         Ok(())
     }
 }

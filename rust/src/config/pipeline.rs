@@ -318,8 +318,19 @@ impl Pipeline {
                     admission: sc.admission,
                     pool,
                     refresh: sc.refresh,
+                    faults: sc.fault_spec()?,
                 },
             )?;
+            if rep.planned_faults > 0 {
+                println!(
+                    "  faults injected (uncached arm): {} planned; {} restarts, {} retries, {} shed, {} deadline misses",
+                    rep.planned_faults,
+                    rep.uncached.restarts,
+                    rep.uncached.retries,
+                    rep.uncached.shed,
+                    rep.uncached.deadline_misses,
+                );
+            }
             println!(
                 "  uncached:  p50 {:>7.0}us  p99 {:>7.0}us  {:>8.0} req/s  hit {:>5.1}%",
                 rep.uncached.p50_us,

@@ -14,7 +14,8 @@
 pub mod prefetch;
 
 pub use prefetch::{
-    autoscale_workers, batch_seed, run_pipeline, PrefetchConfig, MAX_AUTO_WORKERS,
+    autoscale_workers, batch_seed, run_pipeline, run_pipeline_pooled, PrefetchConfig,
+    MAX_AUTO_WORKERS,
 };
 
 use anyhow::{anyhow, bail, Result};
@@ -746,14 +747,28 @@ pub fn build_nc_batch(
 /// The pipelined NC loader: shards seed chunks across worker threads
 /// which sample + assemble ahead, while the calling thread consumes
 /// batches in order (typically running the PJRT step).
+///
+/// Worker factories are **pinned across calls**: each worker slot's
+/// `BatchFactory` (sampler scratch, block buffers, seed index) is
+/// created on first use and reused on every later `for_each`, so the
+/// per-epoch calls trainers make stop re-allocating scratch each
+/// epoch.  Reuse cannot change batches — construction is seeded per
+/// `(seed, epoch, batch_idx)` and the factory resets its scratch per
+/// batch (`tests/prefetch.rs` pins bit-identity across worker counts).
 pub struct PrefetchingLoader<'a> {
     pub loader: &'a NodeDataLoader,
     pub cfg: PrefetchConfig,
+    ds: &'a GsDataset,
+    pool: Vec<Option<BatchFactory<'a>>>,
 }
 
 impl<'a> PrefetchingLoader<'a> {
-    pub fn new(loader: &'a NodeDataLoader, cfg: PrefetchConfig) -> PrefetchingLoader<'a> {
-        PrefetchingLoader { loader, cfg }
+    pub fn new(
+        loader: &'a NodeDataLoader,
+        ds: &'a GsDataset,
+        cfg: PrefetchConfig,
+    ) -> PrefetchingLoader<'a> {
+        PrefetchingLoader { loader, cfg, ds, pool: Vec::new() }
     }
 
     /// Build one batch per chunk; `consume(batch_idx, (tensors, touch))`
@@ -763,22 +778,24 @@ impl<'a> PrefetchingLoader<'a> {
     /// `rotate_workers` picks the acting partition (`bi % rotate`) for
     /// feature-gather traffic accounting, as the serial loop did.
     pub fn for_each(
-        &self,
-        ds: &GsDataset,
+        &mut self,
         chunks: &[&[u32]],
         seed: u64,
         epoch: u64,
         rotate_workers: usize,
         consume: impl FnMut(usize, (Vec<Tensor>, LembTouch)) -> Result<()>,
     ) -> Result<()> {
-        run_pipeline(
+        let ds = self.ds;
+        let loader = self.loader;
+        run_pipeline_pooled(
             chunks,
             &self.cfg,
-            || BatchFactory::new(ds, &self.loader.shape),
+            &mut self.pool,
+            || BatchFactory::new(ds, &loader.shape),
             |f, bi, chunk| {
                 let mut rng = Rng::seed_from(batch_seed(seed, epoch, bi as u64));
                 let worker = (bi % rotate_workers.max(1)) as u32;
-                build_nc_batch(f, self.loader, chunk, &mut rng, worker, true)
+                build_nc_batch(f, loader, chunk, &mut rng, worker, true)
             },
             consume,
         )
@@ -786,15 +803,14 @@ impl<'a> PrefetchingLoader<'a> {
 
     /// Collect every batch (tests: compare against the serial loader).
     pub fn collect(
-        &self,
-        ds: &GsDataset,
+        &mut self,
         chunks: &[&[u32]],
         seed: u64,
         epoch: u64,
         rotate_workers: usize,
     ) -> Result<Vec<(Vec<Tensor>, LembTouch)>> {
         let mut out = Vec::with_capacity(chunks.len());
-        self.for_each(ds, chunks, seed, epoch, rotate_workers, |_, b| {
+        self.for_each(chunks, seed, epoch, rotate_workers, |_, b| {
             out.push(b);
             Ok(())
         })?;

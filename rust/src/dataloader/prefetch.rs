@@ -72,9 +72,46 @@ pub fn batch_seed(seed: u64, epoch: u64, batch_idx: u64) -> u64 {
 ///   freely touch `&mut` training state.
 ///
 /// Errors from either side cancel the pipeline and propagate.
+///
+/// States are built fresh on every call; multi-epoch callers should
+/// hold a pool across calls via [`run_pipeline_pooled`] so worker
+/// scratch (factory buffers, reusable blocks) is paid for once, not
+/// once per epoch.
 pub fn run_pipeline<I, S, T, MK, B, C>(
     items: &[I],
     cfg: &PrefetchConfig,
+    mk_state: MK,
+    build: B,
+    consume: C,
+) -> Result<()>
+where
+    I: Sync,
+    T: Send,
+    S: Send,
+    MK: Fn() -> S + Sync,
+    B: Fn(&mut S, usize, &I) -> Result<T> + Sync,
+    C: FnMut(usize, T) -> Result<()>,
+{
+    let mut pool: Vec<Option<S>> = Vec::new();
+    run_pipeline_pooled(items, cfg, &mut pool, mk_state, build, consume)
+}
+
+/// [`run_pipeline`] with worker states **pinned across calls**: slot
+/// `w` of `pool` holds worker `w`'s private state, lazily created by
+/// `mk_state` on first use and reused verbatim on every later call —
+/// so per-epoch invocations stop rebuilding `BatchFactory` scratch
+/// (hash maps, CSR cursors, block buffers) from scratch each epoch.
+///
+/// Pass the same `pool` (starting empty) to every call; it grows to
+/// the largest worker count seen.  Reuse cannot change results: the
+/// `build` contract already requires determinism given `idx` alone,
+/// independent of any state carried in the scratch (the determinism
+/// suite pins this — outputs are bit-identical for any worker count,
+/// pooled or not).
+pub fn run_pipeline_pooled<I, S, T, MK, B, C>(
+    items: &[I],
+    cfg: &PrefetchConfig,
+    pool: &mut Vec<Option<S>>,
     mk_state: MK,
     build: B,
     mut consume: C,
@@ -82,16 +119,20 @@ pub fn run_pipeline<I, S, T, MK, B, C>(
 where
     I: Sync,
     T: Send,
+    S: Send,
     MK: Fn() -> S + Sync,
     B: Fn(&mut S, usize, &I) -> Result<T> + Sync,
     C: FnMut(usize, T) -> Result<()>,
 {
     let w = cfg.n_workers.max(1).min(items.len().max(1));
+    while pool.len() < w {
+        pool.push(None);
+    }
     if w <= 1 {
         // Serial path: same build/consume interleaving, no threads.
-        let mut state = mk_state();
+        let state = pool[0].get_or_insert_with(&mk_state);
         for (i, item) in items.iter().enumerate() {
-            let value = build(&mut state, i, item)?;
+            let value = build(state, i, item)?;
             consume(i, value)?;
         }
         return Ok(());
@@ -99,15 +140,18 @@ where
     let depth = cfg.depth.max(1);
     std::thread::scope(|scope| -> Result<()> {
         let mut rxs: Vec<Receiver<(usize, Result<T>)>> = Vec::with_capacity(w);
-        for wi in 0..w {
+        // iter_mut hands each worker a disjoint &mut slot — worker wi
+        // always reoccupies slot wi, keeping state ↔ residue-class
+        // pairing stable across calls.
+        for (wi, slot) in pool[..w].iter_mut().enumerate() {
             let (tx, rx): (SyncSender<(usize, Result<T>)>, _) = sync_channel(depth);
             rxs.push(rx);
             let mk = &mk_state;
             let bld = &build;
             scope.spawn(move || {
-                let mut state = mk();
+                let state = slot.get_or_insert_with(|| mk());
                 for (i, item) in items.iter().enumerate().skip(wi).step_by(w) {
-                    let out = bld(&mut state, i, item);
+                    let out = bld(state, i, item);
                     let failed = out.is_err();
                     // A closed channel means the consumer is done (or
                     // bailed): stop building.
@@ -220,6 +264,37 @@ mod tests {
             },
         );
         assert!(r.is_err()); // and no deadlock on the bounded queues
+    }
+
+    #[test]
+    fn pooled_states_survive_across_calls() {
+        let items: Vec<usize> = (0..40).collect();
+        let made = AtomicUsize::new(0);
+        let mut pool: Vec<Option<Vec<usize>>> = Vec::new();
+        for _epoch in 0..3 {
+            run_pipeline_pooled(
+                &items,
+                &PrefetchConfig { n_workers: 4, depth: 1 },
+                &mut pool,
+                || {
+                    made.fetch_add(1, Ordering::SeqCst);
+                    Vec::new()
+                },
+                |s, i, _| {
+                    s.push(i);
+                    Ok(i)
+                },
+                |_, _| Ok(()),
+            )
+            .unwrap();
+        }
+        assert_eq!(made.load(Ordering::SeqCst), 4, "one state per worker, not per epoch");
+        let built: usize = pool.iter().flatten().map(Vec::len).sum();
+        assert_eq!(built, 3 * 40);
+        // Slot wi only ever builds its own residue class.
+        for (wi, slot) in pool.iter().enumerate() {
+            assert!(slot.as_ref().is_some_and(|v| v.iter().all(|&i| i % 4 == wi)));
+        }
     }
 
     #[test]

@@ -11,8 +11,8 @@
 //! batches from `&GsDataset` while the main thread applies sparse
 //! embedding updates between steps.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock, RwLockReadGuard, RwLockWriteGuard};
 
 use crate::partition::PartitionBook;
 use crate::util::Rng;
@@ -161,6 +161,9 @@ pub struct EmbTable {
     /// (`serve::EmbeddingCache`) compare against this to invalidate
     /// all cached rows in O(1) when the table moves.
     generation: AtomicU64,
+    /// Set on the first poisoned-lock recovery, alongside a one-time
+    /// generation bump (see [`Self::note_poison`]).
+    poison_bumped: AtomicBool,
 }
 
 impl EmbTable {
@@ -183,11 +186,47 @@ impl EmbTable {
             book,
             counters,
             generation: AtomicU64::new(0),
+            poison_bumped: AtomicBool::new(false),
+        }
+    }
+
+    /// Recover the inner lock from poisoning.  A panicked writer can
+    /// leave `w`/`m`/`v` half-updated; the data is still well-formed
+    /// (every f32 is valid), so we adopt the mixed state as the new
+    /// canonical weights and bump the generation **once** — rows
+    /// cached before the panic can never be stamped current again,
+    /// while rows re-gathered afterwards are stamped at the new
+    /// generation and served consistently.  (The RwLock itself stays
+    /// poisoned forever; the one-shot flag keeps the hot gather path
+    /// from thrashing the cache with a bump per recovery.)
+    fn note_poison(&self) {
+        if !self.poison_bumped.swap(true, Ordering::AcqRel) {
+            self.generation.fetch_add(1, Ordering::AcqRel);
+        }
+    }
+
+    fn read_inner(&self) -> RwLockReadGuard<'_, EmbInner> {
+        match self.inner.read() {
+            Ok(g) => g,
+            Err(poisoned) => {
+                self.note_poison();
+                poisoned.into_inner()
+            }
+        }
+    }
+
+    fn write_inner(&self) -> RwLockWriteGuard<'_, EmbInner> {
+        match self.inner.write() {
+            Ok(g) => g,
+            Err(poisoned) => {
+                self.note_poison();
+                poisoned.into_inner()
+            }
         }
     }
 
     pub fn num_rows(&self) -> usize {
-        self.inner.read().unwrap().t.len()
+        self.read_inner().t.len()
     }
 
     /// Update generation: changes whenever any row is written.
@@ -213,7 +252,7 @@ impl EmbTable {
 
     /// Copy of the current weights (tests / checkpointing).
     pub fn weights_snapshot(&self) -> Vec<f32> {
-        self.inner.read().unwrap().w.clone()
+        self.read_inner().w.clone()
     }
 
     /// Gather rows into `out` (`out.len() == ids.len() * dim`) on
@@ -221,7 +260,7 @@ impl EmbTable {
     pub fn gather_into(&self, worker: u32, ids: &[u32], out: &mut [f32]) {
         let d = self.dim;
         assert_eq!(out.len(), ids.len() * d);
-        let inner = self.inner.read().unwrap();
+        let inner = self.read_inner();
         let (mut local, mut remote) = (0u64, 0u64);
         for (j, &id) in ids.iter().enumerate() {
             let base = id as usize * d;
@@ -248,7 +287,7 @@ impl EmbTable {
         const EPS: f32 = 1e-8;
         let d = self.dim;
         assert_eq!(grads.len(), ids.len() * d);
-        let mut inner = self.inner.write().unwrap();
+        let mut inner = self.write_inner();
         for (j, &id) in ids.iter().enumerate() {
             let r = id as usize;
             inner.t[r] += 1;
@@ -386,6 +425,30 @@ mod tests {
         let s = counters.snapshot();
         assert_eq!(s.remote_elems, 0);
         assert_eq!(s.local_elems, 12);
+    }
+
+    #[test]
+    fn emb_table_poison_recovery_bumps_generation_once() {
+        let (book, counters) = setup(4, 1);
+        let e = EmbTable::new(0, 4, 2, 7, book, counters);
+        e.sparse_adam(&[0], &[1.0; 2], 1e-2);
+        assert_eq!(e.generation(), 1);
+        // Poison the inner lock the way a crashed updater would.
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = e.inner.write().unwrap();
+            panic!("die mid-update");
+        }));
+        assert!(e.inner.is_poisoned());
+        // Every access recovers; only the first bumps the generation.
+        let mut row = vec![0.0f32; 2];
+        e.row_into(0, 1, &mut row);
+        assert_eq!(e.generation(), 2, "first recovery invalidates cached rows");
+        e.row_into(0, 2, &mut row);
+        assert_eq!(e.num_rows(), 4);
+        assert_eq!(e.generation(), 2, "later recoveries must not thrash the cache");
+        // Updates still apply and still bump per update.
+        e.sparse_adam(&[1], &[1.0; 2], 1e-2);
+        assert_eq!(e.generation(), 3);
     }
 
     #[test]

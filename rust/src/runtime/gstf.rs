@@ -48,6 +48,48 @@ impl Tensor {
 
 pub fn write_gstf(path: &Path, tensors: &[(String, Tensor)]) -> Result<()> {
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    write_gstf_to(&mut f, tensors)?;
+    f.flush()?;
+    Ok(())
+}
+
+/// Crash-safe variant of [`write_gstf`]: the payload is written to
+/// `<path>.tmp`, flushed and fsynced, then atomically renamed into
+/// place — a reader never observes a half-written file at `path`, and
+/// a crash mid-write leaves only a `.tmp` orphan (which writers like
+/// `serve::offline` sweep before re-running).  Rename-over-existing is
+/// atomic on POSIX, so re-runs are idempotent.
+pub fn write_gstf_atomic(path: &Path, tensors: &[(String, Tensor)]) -> Result<()> {
+    let tmp = tmp_path(path);
+    let res = (|| -> Result<()> {
+        let file = std::fs::File::create(&tmp)
+            .with_context(|| format!("create {}", tmp.display()))?;
+        let mut w = std::io::BufWriter::new(file);
+        write_gstf_to(&mut w, tensors)?;
+        w.flush()?;
+        // BufWriter::into_inner would re-flush; we already did, so
+        // fsync through the inner handle it exposes.
+        w.get_ref().sync_all().with_context(|| format!("fsync {}", tmp.display()))?;
+        Ok(())
+    })();
+    if let Err(e) = res {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("rename {} -> {}", tmp.display(), path.display()))
+}
+
+/// The temporary sibling `write_gstf_atomic` stages into:
+/// `<filename>.tmp` in the same directory (same filesystem, so the
+/// final rename is atomic).
+pub fn tmp_path(path: &Path) -> std::path::PathBuf {
+    let mut name = path.file_name().unwrap_or_default().to_os_string();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+fn write_gstf_to(f: &mut impl Write, tensors: &[(String, Tensor)]) -> Result<()> {
     f.write_all(b"GSTF")?;
     f.write_all(&1u32.to_le_bytes())?;
     f.write_all(&(tensors.len() as u32).to_le_bytes())?;
@@ -163,6 +205,22 @@ mod tests {
         write_gstf(&path, &tensors).unwrap();
         let back = read_gstf(&path).unwrap();
         assert_eq!(tensors, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn atomic_roundtrip_leaves_no_tmp() {
+        let dir = std::env::temp_dir().join(format!("gstf_atomic_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.gstf");
+        let tensors =
+            vec![("a".to_string(), Tensor::F32 { shape: vec![2], data: vec![1.0, 2.0] })];
+        write_gstf_atomic(&path, &tensors).unwrap();
+        assert_eq!(read_gstf(&path).unwrap(), tensors);
+        assert!(!tmp_path(&path).exists(), "tmp must be renamed away");
+        // Overwrite-in-place is atomic and idempotent.
+        write_gstf_atomic(&path, &tensors).unwrap();
+        assert_eq!(read_gstf(&path).unwrap(), tensors);
         std::fs::remove_dir_all(&dir).ok();
     }
 

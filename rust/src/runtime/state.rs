@@ -124,9 +124,11 @@ impl TrainState {
         Ok(out)
     }
 
-    /// Save a checkpoint (GSTF, readable from Python too).
+    /// Save a checkpoint (GSTF, readable from Python too).  Written
+    /// atomically — a crash mid-save never clobbers the previous
+    /// checkpoint at `path`.
     pub fn save(&self, path: &std::path::Path) -> Result<()> {
-        super::gstf::write_gstf(path, &self.params_host()?)
+        super::gstf::write_gstf_atomic(path, &self.params_host()?)
     }
 }
 

@@ -18,19 +18,21 @@ use std::time::{Duration, Instant};
 
 use super::cache::{cache_key, EmbeddingCache};
 use super::engine::{InferenceEngine, ServeScratch};
+use super::error::ServeError;
 use super::ServeMetrics;
 
 /// One in-flight prediction request.  `reply` receives the decoded
-/// row (or a rendered error); latency is measured from construction.
+/// row or a typed [`ServeError`] (failure, shed, deadline miss);
+/// latency is measured from construction.
 pub struct ServeRequest {
     pub nt: u32,
     pub id: u32,
     pub t_enq: Instant,
-    pub reply: Sender<Result<Vec<f32>, String>>,
+    pub reply: Sender<Result<Vec<f32>, ServeError>>,
 }
 
 impl ServeRequest {
-    pub fn new(nt: u32, id: u32, reply: Sender<Result<Vec<f32>, String>>) -> ServeRequest {
+    pub fn new(nt: u32, id: u32, reply: Sender<Result<Vec<f32>, ServeError>>) -> ServeRequest {
         ServeRequest { nt, id, t_enq: Instant::now(), reply }
     }
 }
@@ -153,9 +155,9 @@ impl MicroBatcher {
         let rows = match engine.forward(sc, &seeds) {
             Ok(rows) => rows,
             Err(e) => {
-                let msg = e.to_string();
+                let se = ServeError::classify(&e);
                 for (_, req) in waiting.drain(..) {
-                    let _ = req.reply.send(Err(msg.clone()));
+                    let _ = req.reply.send(Err(se.clone()));
                 }
                 return Err(e);
             }
@@ -175,7 +177,10 @@ impl MicroBatcher {
 /// Closed-loop serving stats (one bench/CLI arm).  `hits`/`misses`
 /// are pool-size invariant under a non-evicting cache; `coalesced`
 /// (a subset of `hits`: requests that joined an in-flight batch)
-/// depends on completion timing.
+/// depends on completion timing.  The robustness counters mirror
+/// [`ServeMetrics`]: supervision events (`restarts`), retried batch
+/// attempts (`retries`), and the two typed rejections (`shed`,
+/// `deadline_misses`) — all zero on a healthy, uncontended run.
 #[derive(Debug, Clone, Default)]
 pub struct ClosedLoopStats {
     pub requests: usize,
@@ -187,4 +192,8 @@ pub struct ClosedLoopStats {
     pub hits: u64,
     pub misses: u64,
     pub coalesced: u64,
+    pub restarts: u64,
+    pub retries: u64,
+    pub shed: u64,
+    pub deadline_misses: u64,
 }

@@ -27,6 +27,7 @@
 use anyhow::{anyhow, bail, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use super::error::lock_clean;
 use crate::dataloader::{BatchFactory, GsDataset, LembTouch};
 use crate::runtime::{ArtifactSpec, InferSession, Runtime, Tensor};
 use crate::sampling::{Block, BlockShape};
@@ -251,7 +252,10 @@ impl<'a> InferenceEngine<'a> {
         let c = self.out_dim;
         match &self.backend {
             Backend::Pjrt(sess) => {
-                let _serial = exec_lock.map(|l| l.lock().unwrap());
+                // Poison-tolerant: the lock serializes execution, it
+                // guards no data — a panicked previous holder doesn't
+                // invalidate anything (error.rs policy).
+                let _serial = exec_lock.map(lock_clean);
                 let outs = sess.infer_batch(batch)?;
                 let rows = outs[0].as_f32()?;
                 sur.out.clear();

@@ -1,0 +1,212 @@
+//! Typed serving errors and panic-safe lock helpers.
+//!
+//! The serving stack never answers a request with a bare panic or a
+//! stringly-typed failure: every error that crosses the request/reply
+//! boundary is a [`ServeError`], split along the axis the pool's
+//! supervision logic actually branches on — **retryable** (transient
+//! row-source / backend hiccups, worth a bounded backoff-retry) versus
+//! **fatal** (bad artifact, corrupted scratch, injected hard faults;
+//! retrying cannot help, the batch fails and the worker's scratch is
+//! rebuilt).  Queue-boundary rejections ([`ServeError::Overloaded`])
+//! and per-request deadline misses ([`ServeError::DeadlineExceeded`])
+//! are their own variants so clients can tell "the system chose not
+//! to serve you" apart from "the computation broke".
+//!
+//! The lock helpers implement the poisoning policy from
+//! `docs/ROBUSTNESS.md`: a poisoned mutex means *some* thread panicked
+//! while holding it, not that the protected data is unusable.
+//! [`lock_clean`] recovers state that is consistent at every point
+//! (channels, counters, scratch registries); [`lock_cache`] recovers
+//! the serving cache and **bumps its generation**, so every row that
+//! was resident when the panic happened reads as stale until a serving
+//! path re-stamps the cache from its generation source — no row is
+//! ever served out of a critical section that died halfway.
+
+use std::fmt;
+use std::sync::{Mutex, MutexGuard};
+
+use super::cache::EmbeddingCache;
+
+/// The serving stack's error taxonomy.  `retryable()` is the split
+/// the pool's retry loop keys on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Transient backend / row-source failure: retrying with backoff
+    /// is expected to succeed (network blip, racing generation bump,
+    /// injected transient fault).
+    Transient(String),
+    /// Non-retryable failure: bad artifact, shape mismatch, a worker
+    /// panic payload.  The batch fails; the worker scratch that
+    /// produced it is discarded and rebuilt.
+    Fatal(String),
+    /// Shed at the queue boundary: the pool already had `depth`
+    /// requests pending and admission would only add latency.  The
+    /// request was never enqueued.
+    Overloaded { depth: usize },
+    /// The per-request deadline elapsed before a reply was produced.
+    /// The computed row (if any) still lands in the cache; only the
+    /// reply is a rejection.
+    DeadlineExceeded { waited_ms: u64 },
+    /// The pool shut down while the request was queued or in flight.
+    Canceled(String),
+}
+
+impl ServeError {
+    pub fn transient(msg: impl Into<String>) -> ServeError {
+        ServeError::Transient(msg.into())
+    }
+
+    pub fn fatal(msg: impl Into<String>) -> ServeError {
+        ServeError::Fatal(msg.into())
+    }
+
+    /// Whether the pool's bounded retry loop should try again.
+    pub fn retryable(&self) -> bool {
+        matches!(self, ServeError::Transient(_))
+    }
+
+    /// Typed rejections the pool issues on purpose (shedding,
+    /// deadlines) as opposed to computation failures; closed-loop
+    /// drivers count these in the metrics instead of aborting.
+    pub fn is_rejection(&self) -> bool {
+        matches!(
+            self,
+            ServeError::Overloaded { .. } | ServeError::DeadlineExceeded { .. }
+        )
+    }
+
+    /// Classify an error coming back from the engine / row-source
+    /// boundary: a typed [`ServeError`] anywhere in the chain passes
+    /// through, anything untyped is conservatively fatal (retrying an
+    /// unknown failure mode against a deterministic backend only
+    /// repeats it).
+    pub fn classify(e: &anyhow::Error) -> ServeError {
+        match e.downcast_ref::<ServeError>() {
+            Some(se) => se.clone(),
+            None => ServeError::Fatal(e.to_string()),
+        }
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Transient(m) => write!(f, "transient serve error: {m}"),
+            ServeError::Fatal(m) => write!(f, "fatal serve error: {m}"),
+            ServeError::Overloaded { depth } => {
+                write!(f, "overloaded: shed at queue depth {depth}")
+            }
+            ServeError::DeadlineExceeded { waited_ms } => {
+                write!(f, "deadline exceeded after {waited_ms}ms")
+            }
+            ServeError::Canceled(m) => write!(f, "canceled: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Lock a mutex, recovering from poisoning via
+/// `PoisonError::into_inner`.  Use for state that is consistent at
+/// every instruction boundary (channel receivers, one-shot fault
+/// sets, the PJRT execution lock — which guards *serialization*, not
+/// data).  The serving cache goes through [`lock_cache`] instead.
+pub fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Lock the serving cache, recovering from poisoning with a
+/// generation bump.  A panic inside a cache critical section can
+/// leave a *batch* half-applied (some rows of the batch inserted,
+/// some not); each individual row write is atomic under the lock, but
+/// bumping the generation marks everything resident as stale so the
+/// recovered cache starts from a clean "miss everything" state and
+/// only rows re-stamped by a live serving path are served again.
+pub fn lock_cache(m: &Mutex<EmbeddingCache>) -> MutexGuard<'_, EmbeddingCache> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => {
+            let mut g = poisoned.into_inner();
+            g.bump_generation();
+            g
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retryable_split() {
+        assert!(ServeError::transient("x").retryable());
+        assert!(!ServeError::fatal("x").retryable());
+        assert!(!ServeError::Overloaded { depth: 4 }.retryable());
+        assert!(!ServeError::DeadlineExceeded { waited_ms: 10 }.retryable());
+        assert!(!ServeError::Canceled("bye".into()).retryable());
+    }
+
+    #[test]
+    fn rejections_are_not_failures() {
+        assert!(ServeError::Overloaded { depth: 1 }.is_rejection());
+        assert!(ServeError::DeadlineExceeded { waited_ms: 1 }.is_rejection());
+        assert!(!ServeError::transient("x").is_rejection());
+        assert!(!ServeError::fatal("x").is_rejection());
+    }
+
+    #[test]
+    fn classify_round_trips_typed_errors() {
+        let e = anyhow::Error::new(ServeError::transient("blip"));
+        assert_eq!(ServeError::classify(&e), ServeError::transient("blip"));
+        let chained = e.context("while serving batch 3");
+        assert_eq!(ServeError::classify(&chained), ServeError::transient("blip"));
+        let untyped = anyhow::anyhow!("disk on fire");
+        assert_eq!(
+            ServeError::classify(&untyped),
+            ServeError::fatal("disk on fire")
+        );
+    }
+
+    #[test]
+    fn lock_clean_recovers_poison() {
+        let m = Mutex::new(7u32);
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = m.lock().unwrap();
+            panic!("poison it");
+        }));
+        assert!(m.is_poisoned());
+        assert_eq!(*lock_clean(&m), 7);
+    }
+
+    #[test]
+    fn lock_cache_bumps_generation_on_poison() {
+        let m = Mutex::new(EmbeddingCache::new(4));
+        {
+            let mut g = m.lock().unwrap();
+            g.set_generation(5);
+            g.put(1, &[1.0]);
+        }
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = m.lock().unwrap();
+            panic!("poison it");
+        }));
+        assert!(m.is_poisoned());
+        {
+            let mut g = lock_cache(&m);
+            assert_eq!(g.generation(), 6, "poison recovery must bump");
+            assert_eq!(g.get(1), None, "resident rows read stale after recovery");
+        }
+        // The mutex stays poisoned (std never un-poisons), so every
+        // recovery bumps again.  Harmless: bumps only move the
+        // generation forward, and every serving path re-stamps it from
+        // its generation source under this same lock.
+        assert_eq!(lock_cache(&m).generation(), 7);
+        // A never-poisoned mutex never bumps.
+        let clean = Mutex::new(EmbeddingCache::new(4));
+        lock_cache(&clean).set_generation(3);
+        assert_eq!(lock_cache(&clean).generation(), 3);
+    }
+}

@@ -1,0 +1,249 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] maps micro-batch sequence numbers to faults, built
+//! once before a run from a seed + a [`FaultSpec`] — the same
+//! "derive everything from `(seed, index)`" convention as
+//! `dataloader::batch_seed`, so two runs with the same seed inject the
+//! *identical* fault schedule.  Workers consult the plan exactly once
+//! per batch attempt ([`FaultPlan::take`] is one-shot per sequence
+//! number): a planned worker panic fires on the first attempt and the
+//! re-dispatched batch then runs clean, a transient error fails the
+//! first attempt and the retry succeeds, a slow read sleeps once, a
+//! fatal error fails its batch once.  That one-shot contract is what
+//! makes the supervision counters (`restarts`, `retries`) match the
+//! plan exactly, and — because recomputation is canonical per node —
+//! replies stay bit-identical to a fault-free run.
+//!
+//! Wired into `gs serve-bench --faults` / the `serve.faults` config
+//! key as a spec string, e.g. `"panics=2,transient=3,slow=1,slow_ms=5"`;
+//! `tests/faults.rs` drives the plan directly.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use super::error::lock_clean;
+use crate::dataloader::batch_seed;
+use crate::util::{FxHashMap, FxHashSet, Rng};
+
+/// What a planned fault does to the batch it lands on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The worker panics mid-batch; supervision restarts it and the
+    /// coordinator re-dispatches the batch.
+    WorkerPanic,
+    /// The attempt fails with a retryable [`ServeError::Transient`]
+    /// (`super::ServeError`); the bounded retry loop recovers.
+    Transient,
+    /// The attempt sleeps `slow_ms` before executing — deadline-miss
+    /// fuel, never an error.
+    SlowRead,
+    /// The attempt fails with a non-retryable error: the batch's
+    /// waiters get a typed failure and the worker scratch is rebuilt.
+    Fatal,
+}
+
+/// Parsed `serve.faults` spec: how many of each fault to plan.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub panics: usize,
+    pub transient: usize,
+    pub slow: usize,
+    pub fatal: usize,
+    /// Sleep injected by each [`FaultKind::SlowRead`], milliseconds.
+    pub slow_ms: u64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec { panics: 0, transient: 0, slow: 0, fatal: 0, slow_ms: 5 }
+    }
+}
+
+impl FaultSpec {
+    /// Parse `"panics=2,transient=3,slow=1,fatal=0,slow_ms=5"`.  Every
+    /// field is optional; the empty string is the all-zero spec.
+    pub fn parse(s: &str) -> Result<FaultSpec> {
+        let mut spec = FaultSpec::default();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let Some((k, v)) = part.split_once('=') else {
+                bail!("serve.faults: expected key=value, got '{part}'");
+            };
+            let v: u64 = v
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("serve.faults: '{k}' wants an integer, got '{v}'"))?;
+            match k.trim() {
+                "panics" => spec.panics = v as usize,
+                "transient" => spec.transient = v as usize,
+                "slow" => spec.slow = v as usize,
+                "fatal" => spec.fatal = v as usize,
+                "slow_ms" => spec.slow_ms = v,
+                other => bail!(
+                    "serve.faults: unknown field '{other}' \
+                     (expected panics/transient/slow/fatal/slow_ms)"
+                ),
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Total faults planned (one batch each).
+    pub fn total(&self) -> usize {
+        self.panics + self.transient + self.slow + self.fatal
+    }
+}
+
+/// A seeded schedule of faults keyed by batch sequence number.  Shared
+/// by reference with every pool worker; `take` is one-shot per seq so
+/// a re-dispatched or retried batch runs clean.
+#[derive(Debug)]
+pub struct FaultPlan {
+    by_seq: FxHashMap<u64, FaultKind>,
+    fired: Mutex<FxHashSet<u64>>,
+    /// Sleep for [`FaultKind::SlowRead`] injections.
+    pub slow: Duration,
+    /// The spec this plan was generated from (counter expectations).
+    pub spec: FaultSpec,
+}
+
+impl FaultPlan {
+    /// Plan `spec.total()` faults over batch sequence numbers
+    /// `[0, horizon)`, each on a distinct batch, deterministically
+    /// from `seed` (via the `batch_seed` convention).  `horizon` must
+    /// be a *lower bound* on the number of batches the run will cut —
+    /// the deadline clock can only split batches, never merge them —
+    /// so every planned fault is guaranteed to fire.
+    pub fn generate(seed: u64, horizon: u64, spec: &FaultSpec) -> Result<FaultPlan> {
+        if (spec.total() as u64) > horizon {
+            bail!(
+                "fault plan wants {} faults but only {horizon} batches are guaranteed \
+                 (lower the fault counts or raise the request count)",
+                spec.total()
+            );
+        }
+        // Partial Fisher-Yates over [0, horizon): the first `total()`
+        // slots after shuffling are the fault indices, all distinct.
+        let mut rng = Rng::seed_from(batch_seed(seed, 0xFA17, 0));
+        let mut idx: Vec<u64> = (0..horizon).collect();
+        let total = spec.total();
+        for i in 0..total.min(idx.len().saturating_sub(1)) {
+            let j = i + rng.gen_range(idx.len() - i);
+            idx.swap(i, j);
+        }
+        let mut by_seq = FxHashMap::default();
+        let mut it = idx.into_iter();
+        let mut assign = |n: usize, kind: FaultKind| {
+            for _ in 0..n {
+                if let Some(s) = it.next() {
+                    by_seq.insert(s, kind);
+                }
+            }
+        };
+        assign(spec.panics, FaultKind::WorkerPanic);
+        assign(spec.transient, FaultKind::Transient);
+        assign(spec.slow, FaultKind::SlowRead);
+        assign(spec.fatal, FaultKind::Fatal);
+        Ok(FaultPlan {
+            by_seq,
+            fired: Mutex::new(FxHashSet::default()),
+            slow: Duration::from_millis(spec.slow_ms),
+            spec: spec.clone(),
+        })
+    }
+
+    /// Exact placement for tests: fault `kind` on each listed batch.
+    pub fn precise(entries: &[(u64, FaultKind)], slow: Duration) -> FaultPlan {
+        let mut spec = FaultSpec { slow_ms: slow.as_millis() as u64, ..FaultSpec::default() };
+        let mut by_seq = FxHashMap::default();
+        for &(seq, kind) in entries {
+            if by_seq.insert(seq, kind).is_none() {
+                match kind {
+                    FaultKind::WorkerPanic => spec.panics += 1,
+                    FaultKind::Transient => spec.transient += 1,
+                    FaultKind::SlowRead => spec.slow += 1,
+                    FaultKind::Fatal => spec.fatal += 1,
+                }
+            }
+        }
+        FaultPlan { by_seq, fired: Mutex::new(FxHashSet::default()), slow, spec }
+    }
+
+    /// The fault planned for batch `seq`, armed at most once: the
+    /// first caller gets it, every later call (retry, re-dispatch)
+    /// sees a clean batch.
+    pub fn take(&self, seq: u64) -> Option<FaultKind> {
+        let kind = *self.by_seq.get(&seq)?;
+        if lock_clean(&self.fired).insert(seq) {
+            Some(kind)
+        } else {
+            None
+        }
+    }
+
+    /// How many planned faults have fired so far.
+    pub fn fired(&self) -> usize {
+        lock_clean(&self.fired).len()
+    }
+
+    /// Batches with a planned fault (for logs/tests).
+    pub fn planned(&self) -> usize {
+        self.by_seq.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_and_rejects() {
+        assert_eq!(FaultSpec::parse("").unwrap(), FaultSpec::default());
+        let s = FaultSpec::parse("panics=2, transient=3,slow=1,fatal=1,slow_ms=20").unwrap();
+        assert_eq!(
+            s,
+            FaultSpec { panics: 2, transient: 3, slow: 1, fatal: 1, slow_ms: 20 }
+        );
+        assert_eq!(s.total(), 7);
+        assert!(FaultSpec::parse("panics=two").is_err());
+        assert!(FaultSpec::parse("explosions=1").is_err());
+        assert!(FaultSpec::parse("panics").is_err());
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_distinct() {
+        let spec = FaultSpec::parse("panics=3,transient=4,slow=2,fatal=1").unwrap();
+        let a = FaultPlan::generate(7, 64, &spec).unwrap();
+        let b = FaultPlan::generate(7, 64, &spec).unwrap();
+        assert_eq!(a.planned(), spec.total(), "distinct batches per fault");
+        let mut av: Vec<_> = a.by_seq.iter().map(|(&s, &k)| (s, k)).collect();
+        let mut bv: Vec<_> = b.by_seq.iter().map(|(&s, &k)| (s, k)).collect();
+        av.sort_by_key(|&(s, _)| s);
+        bv.sort_by_key(|&(s, _)| s);
+        assert_eq!(av, bv, "same seed, same plan");
+        assert!(av.iter().all(|&(s, _)| s < 64));
+        let c = FaultPlan::generate(8, 64, &spec).unwrap();
+        let mut cv: Vec<_> = c.by_seq.iter().map(|(&s, &k)| (s, k)).collect();
+        cv.sort_by_key(|&(s, _)| s);
+        assert_ne!(av, cv, "different seed, different plan");
+    }
+
+    #[test]
+    fn generate_rejects_overfull_horizon() {
+        let spec = FaultSpec::parse("panics=5").unwrap();
+        assert!(FaultPlan::generate(1, 4, &spec).is_err());
+        assert!(FaultPlan::generate(1, 5, &spec).is_ok());
+    }
+
+    #[test]
+    fn take_is_one_shot() {
+        let plan =
+            FaultPlan::precise(&[(3, FaultKind::WorkerPanic)], Duration::from_millis(1));
+        assert_eq!(plan.take(0), None);
+        assert_eq!(plan.take(3), Some(FaultKind::WorkerPanic));
+        assert_eq!(plan.take(3), None, "retry / re-dispatch runs clean");
+        assert_eq!(plan.fired(), 1);
+        assert_eq!(plan.spec.panics, 1);
+    }
+}

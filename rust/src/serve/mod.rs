@@ -31,6 +31,8 @@
 pub mod batcher;
 pub mod cache;
 pub mod engine;
+pub mod error;
+pub mod faults;
 pub mod offline;
 pub mod pool;
 pub mod refresh;
@@ -38,8 +40,10 @@ pub mod refresh;
 pub use batcher::{ClosedLoopStats, MicroBatcher, MicroBatcherCfg, ServeRequest};
 pub use cache::{cache_key, split_key, Admission, EmbTableSource, EmbeddingCache, RowSource};
 pub use engine::{InferenceEngine, ServeScratch};
+pub use error::{lock_cache, lock_clean, ServeError};
+pub use faults::{FaultKind, FaultPlan, FaultSpec};
 pub use offline::{read_shards, OfflineInference, OfflineReport};
-pub use pool::{closed_loop, EnginePool, EnginePoolCfg};
+pub use pool::{closed_loop, closed_loop_with_faults, EnginePool, EnginePoolCfg};
 pub use refresh::{refresh_hot_rows, refresh_loop, EngineSource, RefreshCfg, RefreshStats};
 
 use anyhow::Result;
@@ -69,6 +73,11 @@ pub struct ServeBenchParams {
     /// Hot rows to re-read after the mid-bench generation bump; 0
     /// skips the refreshed arm.
     pub refresh: usize,
+    /// Deterministic fault schedule injected into the *uncached* arm
+    /// (the one doing compute), from `serve.faults` /
+    /// `gs serve-bench --faults`.  `None` or an all-zero spec runs
+    /// clean.
+    pub faults: Option<FaultSpec>,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -82,6 +91,8 @@ pub struct ServeBenchReport {
     pub refreshed_rows: usize,
     /// Distinct seeds in the trace (the warm-up working set).
     pub distinct: usize,
+    /// Faults planned for the uncached arm (0 when running clean).
+    pub planned_faults: usize,
     /// Every prediction identical across arms and repeats.
     pub identical: bool,
 }
@@ -106,16 +117,35 @@ pub fn run_serve_bench(
     let mut rng = Rng::seed_from(p.seed ^ 0x5e12);
     let trace: Vec<(u32, u32)> =
         (0..p.requests).map(|_| (nt, zipf.sample(&mut rng) as u32)).collect();
+    let mut seen = std::collections::HashSet::new();
+    let distinct: Vec<(u32, u32)> = trace.iter().filter(|&&q| seen.insert(q)).copied().collect();
+
+    // Faults go into the uncached arm: the one actually cutting
+    // batches.  The plan horizon is the guaranteed lower bound on
+    // batch count — every distinct key contributes at least one seed
+    // to some batch, and batches hold at most `cap` seeds.
+    let plan = match &p.faults {
+        Some(spec) if spec.total() > 0 => {
+            if spec.fatal > 0 {
+                anyhow::bail!(
+                    "serve.faults: fatal faults abort closed-loop replies by design; \
+                     use panics/transient/slow here (tests/faults.rs exercises fatal)"
+                );
+            }
+            let cap = p.pool.batcher.max_batch.min(engine.capacity()).max(1);
+            let horizon = (distinct.len() as u64).div_ceil(cap as u64);
+            Some(FaultPlan::generate(p.seed, horizon, spec)?)
+        }
+        _ => None,
+    };
 
     let nocache = Mutex::new(EmbeddingCache::new(0));
     let (uncached, replies0) =
-        closed_loop(engine, p.pool.clone(), &nocache, &trace, p.clients)?;
+        closed_loop_with_faults(engine, p.pool.clone(), &nocache, &trace, p.clients, plan.as_ref())?;
 
     let cache = Mutex::new(EmbeddingCache::with_admission(p.cache, p.admission));
-    let mut seen = std::collections::HashSet::new();
-    let distinct: Vec<(u32, u32)> = trace.iter().filter(|&&q| seen.insert(q)).copied().collect();
     {
-        let mut cache = cache.lock().unwrap();
+        let mut cache = lock_cache(&cache);
         cache.set_generation(engine.generation());
         let mut sc = engine.make_scratch();
         let c = engine.out_dim();
@@ -154,6 +184,7 @@ pub fn run_serve_bench(
         refreshed,
         refreshed_rows,
         distinct: distinct.len(),
+        planned_faults: plan.as_ref().map(|pl| pl.planned()).unwrap_or(0),
         identical,
     })
 }
@@ -214,15 +245,24 @@ impl LatencyHistogram {
     }
 }
 
-/// Per-request serving counters: latency histogram + cache hit/miss.
+/// Per-request serving counters: latency histogram + cache hit/miss +
+/// the robustness counters the supervised pool maintains.
 /// `coalesced` is a *subset* of `hits`: requests that joined an
 /// in-flight pool batch instead of triggering their own compute.
+/// `restarts` counts supervision events that discarded a worker
+/// scratch (panic or fatal batch error), `retries` counts re-executed
+/// batch attempts after retryable errors, and `shed` /
+/// `deadline_misses` count the two typed rejections.
 #[derive(Debug, Default)]
 pub struct ServeMetrics {
     pub latency: LatencyHistogram,
     hits: AtomicU64,
     misses: AtomicU64,
     coalesced: AtomicU64,
+    restarts: AtomicU64,
+    retries: AtomicU64,
+    shed: AtomicU64,
+    deadline_misses: AtomicU64,
 }
 
 impl ServeMetrics {
@@ -259,6 +299,47 @@ impl ServeMetrics {
         self.coalesced.load(Ordering::Relaxed)
     }
 
+    /// A worker scratch was discarded and rebuilt (panic or fatal
+    /// batch error) — includes the final event that retires a worker
+    /// whose restart budget is spent.
+    pub fn record_restart(&self) {
+        self.restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A batch attempt failed with a retryable error and was re-run.
+    pub fn record_retry(&self) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request was rejected at the queue boundary
+    /// ([`ServeError::Overloaded`]).  Shed requests count in neither
+    /// `hits` nor `misses`: they never entered the serving path.
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request's deadline elapsed before its reply
+    /// ([`ServeError::DeadlineExceeded`]).
+    pub fn record_deadline_miss(&self) {
+        self.deadline_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn restarts(&self) -> u64 {
+        self.restarts.load(Ordering::Relaxed)
+    }
+
+    pub fn retries(&self) -> u64 {
+        self.retries.load(Ordering::Relaxed)
+    }
+
+    pub fn shed(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    pub fn deadline_misses(&self) -> u64 {
+        self.deadline_misses.load(Ordering::Relaxed)
+    }
+
     pub fn served(&self) -> u64 {
         self.hits() + self.misses()
     }
@@ -278,6 +359,7 @@ impl ServeMetrics {
 /// embedding cache is designed for.
 pub struct Zipf {
     cum: Vec<f64>,
+    total: f64,
 }
 
 impl Zipf {
@@ -289,12 +371,12 @@ impl Zipf {
             acc += 1.0 / (r as f64).powf(alpha);
             cum.push(acc);
         }
-        Zipf { cum }
+        Zipf { cum, total: acc }
     }
 
     /// Sample a rank in `[0, n)` (rank 0 is the hottest).
     pub fn sample(&self, rng: &mut Rng) -> usize {
-        let x = rng.gen_f64() * self.cum.last().unwrap();
+        let x = rng.gen_f64() * self.total;
         self.cum.partition_point(|&c| c < x).min(self.cum.len() - 1)
     }
 }

@@ -9,11 +9,13 @@
 //! generation matches).
 
 use anyhow::{bail, Context, Result};
+use std::io::Write;
 use std::path::{Path, PathBuf};
 
 use crate::dataloader::PrefetchConfig;
-use crate::runtime::gstf::{read_gstf, write_gstf};
+use crate::runtime::gstf::{read_gstf, tmp_path, write_gstf_atomic};
 use crate::runtime::Tensor;
+use crate::util::json::Json;
 
 use super::cache::{cache_key, EmbeddingCache};
 use super::engine::InferenceEngine;
@@ -54,6 +56,7 @@ impl OfflineInference {
         let t0 = std::time::Instant::now();
         std::fs::create_dir_all(out_dir)
             .with_context(|| format!("create {}", out_dir.display()))?;
+        sweep_stale_tmp(out_dir)?;
         let n = engine.ds.graph.num_nodes[ntype as usize];
         let c = engine.out_dim();
         let b = engine.capacity();
@@ -108,9 +111,68 @@ impl OfflineInference {
         if !shard_ids.is_empty() {
             flush_shard(out_dir, &mut report, &mut shard_ids, &mut shard_emb, c)?;
         }
+        // Manifest last: its presence certifies that every shard it
+        // names was fully written and renamed into place.  A crash
+        // anywhere above leaves either no manifest or the previous
+        // run's (whose shards are intact — shards are themselves
+        // atomic), never a manifest naming a torn file.
+        write_manifest(out_dir, &report)?;
         report.secs = t0.elapsed().as_secs_f64();
         Ok(report)
     }
+}
+
+/// Remove `*.tmp` staging orphans left by a crashed writer so a re-run
+/// starts from renamed-only state.  Never touches completed shards.
+fn sweep_stale_tmp(dir: &Path) -> Result<()> {
+    for entry in
+        std::fs::read_dir(dir).with_context(|| format!("read {}", dir.display()))?
+    {
+        let p = entry?.path();
+        let is_tmp = p
+            .file_name()
+            .and_then(|n| n.to_str())
+            .map(|n| n.ends_with(".tmp"))
+            .unwrap_or(false);
+        if is_tmp {
+            std::fs::remove_file(&p)
+                .with_context(|| format!("sweep stale {}", p.display()))?;
+        }
+    }
+    Ok(())
+}
+
+/// Write `manifest.json` (atomically: tmp + fsync + rename) naming the
+/// completed shards in order.
+fn write_manifest(dir: &Path, report: &OfflineReport) -> Result<()> {
+    let names: Vec<String> = report
+        .shards
+        .iter()
+        .filter_map(|p| p.file_name().and_then(|n| n.to_str()).map(String::from))
+        .collect();
+    let shards_json: Vec<String> = names.iter().map(|n| format!("\"{n}\"")).collect();
+    let text = format!(
+        "{{\n  \"ntype\": {},\n  \"rows\": {},\n  \"dim\": {},\n  \"shards\": [{}]\n}}\n",
+        report.ntype,
+        report.rows,
+        report.dim,
+        shards_json.join(", ")
+    );
+    let path = dir.join("manifest.json");
+    let tmp = tmp_path(&path);
+    let res = (|| -> Result<()> {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("create {}", tmp.display()))?;
+        f.write_all(text.as_bytes())?;
+        f.sync_all().with_context(|| format!("fsync {}", tmp.display()))?;
+        Ok(())
+    })();
+    if let Err(e) = res {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("rename {} -> {}", tmp.display(), path.display()))
 }
 
 fn flush_shard(
@@ -122,7 +184,7 @@ fn flush_shard(
 ) -> Result<()> {
     let path = out_dir.join(format!("shard_{:05}.gstf", report.shards.len()));
     let n = ids.len();
-    write_gstf(
+    write_gstf_atomic(
         &path,
         &[
             ("ids".to_string(), Tensor::I32 { shape: vec![n], data: std::mem::take(ids) }),
@@ -133,20 +195,50 @@ fn flush_shard(
     Ok(())
 }
 
-/// Read back every shard in `dir` (sorted by filename), returning
-/// `(id, row)` pairs — the round-trip reader tests and cache warming
-/// share.
+/// Read back every shard in `dir`, returning `(id, row)` pairs — the
+/// round-trip reader tests and cache warming share.
+///
+/// When `manifest.json` is present (written last by
+/// [`OfflineInference::run`]), its shard list is authoritative: a
+/// crash between shard writes and the manifest write is detected as a
+/// missing-manifest dir, and files from a newer partial re-run are
+/// never mixed with an older complete set.  Directories without a
+/// manifest (pre-manifest writers, hand-assembled fixtures) fall back
+/// to a `shard_*.gstf` glob.
 pub fn read_shards(dir: &Path, ntype: u32) -> Result<Vec<((u32, u32), Vec<f32>)>> {
-    let mut files: Vec<PathBuf> = std::fs::read_dir(dir)
-        .with_context(|| format!("read {}", dir.display()))?
-        .filter_map(|e| e.ok().map(|e| e.path()))
-        .filter(|p| {
-            p.file_name()
-                .and_then(|n| n.to_str())
-                .map(|n| n.starts_with("shard_") && n.ends_with(".gstf"))
-                .unwrap_or(false)
-        })
-        .collect();
+    let manifest = dir.join("manifest.json");
+    let mut files: Vec<PathBuf> = if manifest.exists() {
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("read {}", manifest.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parse {}", manifest.display()))?;
+        let arr = j
+            .get("shards")
+            .and_then(|s| s.as_arr())
+            .with_context(|| format!("{}: no shards array", manifest.display()))?;
+        let mut v = Vec::with_capacity(arr.len());
+        for s in arr {
+            let name = s
+                .as_str()
+                .with_context(|| format!("{}: non-string shard entry", manifest.display()))?;
+            let p = dir.join(name);
+            if !p.exists() {
+                bail!("{}: manifest names missing shard {}", dir.display(), name);
+            }
+            v.push(p);
+        }
+        v
+    } else {
+        std::fs::read_dir(dir)
+            .with_context(|| format!("read {}", dir.display()))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .map(|n| n.starts_with("shard_") && n.ends_with(".gstf"))
+                    .unwrap_or(false)
+            })
+            .collect()
+    };
     files.sort();
     let mut out = vec![];
     for f in files {

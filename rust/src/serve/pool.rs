@@ -1,5 +1,5 @@
 //! The serving engine *pool*: N [`InferenceEngine`] scratches drain
-//! one shared micro-batcher queue.
+//! one shared micro-batcher queue — now under supervision.
 //!
 //! PR 2's `MicroBatcher::run` answers the queue with a single engine
 //! scratch — one core against millions-of-users traffic.  The pool
@@ -10,61 +10,109 @@
 //! ```text
 //! clients ─▶ request queue ─▶ coordinator ─▶ job queue ─▶ worker 0..N
 //!                                 ▲   (owns cache + batching policy)     │
-//!                                 └────────── completions ◀──────────────┘
+//!                                 └── completions / worker obituaries ◀──┘
 //! ```
 //!
 //! * The **coordinator** is the only thread that touches the cache and
-//!   the batching state: it answers hits on arrival, coalesces
+//!   the batching state: it answers hits on arrival, sheds requests at
+//!   the queue boundary ([`EnginePoolCfg::queue_depth`]), coalesces
 //!   duplicate in-flight keys, cuts size/deadline-bounded batches of
 //!   distinct misses and hands them to the job queue.
 //! * **Workers** each own a private [`ServeScratch`] and run the full
-//!   sample → assemble → execute path per batch.  With a PJRT backend
-//!   the execute step is serialized through one `Mutex`
-//!   ([`InferenceEngine::forward_locked`]) so a single session never
-//!   runs concurrently; the deterministic surrogate executes
-//!   lock-free.
+//!   sample → assemble → execute path per batch inside
+//!   `catch_unwind`, with bounded backoff-retries for retryable
+//!   errors ([`ServeError::retryable`]).  A panic or fatal error
+//!   discards the scratch: the worker restarts with a fresh one while
+//!   the pool-wide restart budget
+//!   ([`EnginePoolCfg::max_worker_restarts`]) lasts, then exits.
+//! * A dead worker's in-flight batch is **re-dispatched** by the
+//!   coordinator (the `PendingBatch` table still holds its seeds), so
+//!   no request is lost and — recomputation being canonical per node
+//!   — its replies are bit-identical to the fault-free run.
+//! * When every worker has exited (budget exhausted) the pool enters
+//!   **degraded mode**: the coordinator executes remaining and future
+//!   batches inline on its own lazily-built scratch.  Slower, never
+//!   down.
 //! * Completions are applied to the cache **in dispatch order** (a
 //!   reorder buffer holds early finishers), so the cache's content
-//!   evolves identically for any pool size.
+//!   evolves identically for any pool size and any fault schedule.
+//!
+//! Dispatch is non-blocking: the coordinator `try_send`s jobs and
+//! parks overflow in a local backlog flushed as completions free
+//! queue slots.  This is what makes re-dispatch deadlock-free — a
+//! blocking send could wedge against a full job queue whose only
+//! consumer just died, with that worker's `WorkerExit` obituary
+//! sitting unread behind the send.
 //!
 //! Determinism contract (the pooled extension of PR 1's per-batch RNG
 //! invariant): because the engine samples canonically per node, every
-//! reply is bit-identical for any pool size, any batch composition and
-//! any worker interleaving.  Hit/miss *accounting* is also pool-size
-//! invariant whenever the cache doesn't evict (capacity ≥ working set)
-//! and the request order is fixed: a request misses iff its key was
-//! never requested before, because keys move atomically from forming
-//! batch → in-flight → cache under the coordinator.  Requests that
-//! find their key in flight are counted as hits (and additionally as
+//! reply is bit-identical for any pool size, any batch composition,
+//! any worker interleaving and any injected fault schedule
+//! ([`FaultPlan`]).  Hit/miss *accounting* is also pool-size invariant
+//! whenever the cache doesn't evict (capacity ≥ working set) and the
+//! request order is fixed: a request misses iff its key was never
+//! requested before, because keys move atomically from forming batch
+//! → in-flight → cache under the coordinator.  Requests that find
+//! their key in flight are counted as hits (and additionally as
 //! `coalesced`); the hit/coalesced *split* depends on completion
-//! timing, the hit+miss totals do not.  `tests/serve.rs`
-//! (`pool_sizes_are_bit_identical`) drains one stream through pools of
-//! 1, 2 and 8 and asserts identical replies and identical counters.
+//! timing, the hit+miss totals do not.  Shedding and deadline misses
+//! are deliberately timing-dependent and excluded from that contract
+//! (`tests/faults.rs` runs its bit-identity sweep with both off).
 
 use anyhow::{anyhow, Result};
-use std::collections::BTreeMap;
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::collections::{BTreeMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
 use std::sync::Mutex;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::batcher::{ClosedLoopStats, MicroBatcherCfg, ServeRequest};
 use super::cache::{cache_key, EmbeddingCache};
-use super::engine::InferenceEngine;
+use super::engine::{InferenceEngine, ServeScratch};
+use super::error::{lock_cache, lock_clean, ServeError};
+use super::faults::{FaultKind, FaultPlan};
 use super::ServeMetrics;
 use crate::util::FxHashMap;
 
-/// Engine-pool knobs: worker count plus the shared batching policy.
-/// `serve.pool_workers` resolves `"auto"` before this struct exists.
+/// Engine-pool knobs: worker count, the shared batching policy, and
+/// the fault-tolerance envelope.  `serve.pool_workers` resolves
+/// `"auto"` before this struct exists.
 #[derive(Debug, Clone)]
 pub struct EnginePoolCfg {
     /// Engine scratches draining the queue (≥ 1).
     pub workers: usize,
     pub batcher: MicroBatcherCfg,
+    /// Per-request deadline (`serve.deadline_ms`); a request older
+    /// than this gets [`ServeError::DeadlineExceeded`] instead of a
+    /// row.  Zero disables.
+    pub request_deadline: Duration,
+    /// Retries per batch for retryable errors (`serve.max_retries`).
+    pub max_retries: usize,
+    /// Base backoff before the first retry, doubled per attempt.
+    pub retry_backoff: Duration,
+    /// Queue-boundary bound on pending (admitted, unanswered)
+    /// requests (`serve.queue_depth`); arrivals beyond it are shed
+    /// with [`ServeError::Overloaded`].  Zero disables.  Cache hits
+    /// are always served — they consume no queue slot.
+    pub queue_depth: usize,
+    /// Pool-wide budget of worker restarts
+    /// (`serve.max_worker_restarts`) before dying workers stay dead
+    /// and the pool degrades to coordinator-inline execution.
+    pub max_worker_restarts: usize,
 }
 
 impl Default for EnginePoolCfg {
     fn default() -> Self {
-        EnginePoolCfg { workers: 1, batcher: MicroBatcherCfg::default() }
+        EnginePoolCfg {
+            workers: 1,
+            batcher: MicroBatcherCfg::default(),
+            request_deadline: Duration::ZERO,
+            max_retries: 2,
+            retry_backoff: Duration::from_millis(1),
+            queue_depth: 0,
+            max_worker_restarts: 8,
+        }
     }
 }
 
@@ -76,7 +124,8 @@ struct Job {
 }
 
 /// What flows into the coordinator: forwarded client requests, worker
-/// completions, and the end-of-stream marker from the forwarder.
+/// completions and obituaries, and the end-of-stream marker from the
+/// forwarder.
 enum Msg {
     Req(ServeRequest),
     Done {
@@ -84,16 +133,105 @@ enum Msg {
         /// Engine generation observed *before* the forward ran; rows
         /// are cached only if this is still current at apply time.
         gen: u64,
-        rows: Result<Vec<f32>, String>,
+        rows: Result<Vec<f32>, ServeError>,
     },
+    /// A worker panicked while holding `seq`: the batch never
+    /// completed and the coordinator must re-dispatch it.
+    WorkerDied { seq: u64 },
+    /// A worker exited for good (restart budget exhausted).
+    WorkerExit,
     Eof,
 }
 
 /// A dispatched batch the coordinator is still tracking: its seed list
-/// (for cache insertion) and every request waiting on it.
+/// (for cache insertion *and* re-dispatch) and every request waiting
+/// on it.
 struct PendingBatch {
     seeds: Vec<(u32, u32)>,
     waiters: Vec<(usize, ServeRequest)>,
+}
+
+/// How one batch execution ended, after fault injection, retries and
+/// panic capture.
+enum BatchExec {
+    Completed { gen: u64, rows: Result<Vec<f32>, ServeError> },
+    /// The attempt panicked: the scratch can't be trusted and the
+    /// batch must run again elsewhere.
+    Panicked,
+}
+
+/// Execute one batch on `sc`: consult the fault plan (one-shot per
+/// seq), run the forward under `catch_unwind`, and retry retryable
+/// errors up to `max_retries` times with exponential backoff
+/// (recording each retry).  Panics — injected or real — surface as
+/// [`BatchExec::Panicked`] for the caller's supervision policy.
+#[allow(clippy::too_many_arguments)]
+fn execute_batch<'a>(
+    engine: &InferenceEngine<'a>,
+    sc: &mut ServeScratch<'a>,
+    seq: u64,
+    seeds: &[(u32, u32)],
+    exec_lock: &Mutex<()>,
+    metrics: &ServeMetrics,
+    faults: Option<&FaultPlan>,
+    max_retries: usize,
+    retry_backoff: Duration,
+) -> BatchExec {
+    let mut attempt = 0usize;
+    loop {
+        let injected = faults.and_then(|f| f.take(seq));
+        let run = catch_unwind(AssertUnwindSafe(|| {
+            match injected {
+                Some(FaultKind::WorkerPanic) => {
+                    // resume_unwind bypasses the panic hook, so an
+                    // injected panic doesn't spam stderr the way
+                    // `panic!` would — supervision catches it either
+                    // way.
+                    std::panic::resume_unwind(Box::new(format!(
+                        "injected worker panic at batch {seq}"
+                    )));
+                }
+                Some(FaultKind::Transient) => {
+                    return (
+                        engine.generation(),
+                        Err(anyhow::Error::new(ServeError::transient(format!(
+                            "injected transient row-source error at batch {seq}"
+                        )))),
+                    );
+                }
+                Some(FaultKind::Fatal) => {
+                    return (
+                        engine.generation(),
+                        Err(anyhow::Error::new(ServeError::fatal(format!(
+                            "injected fatal row-source error at batch {seq}"
+                        )))),
+                    );
+                }
+                Some(FaultKind::SlowRead) => {
+                    std::thread::sleep(faults.map(|f| f.slow).unwrap_or_default());
+                }
+                None => {}
+            }
+            let gen = engine.generation();
+            let rows = engine.forward_locked(sc, seeds, exec_lock).map(|r| r.to_vec());
+            (gen, rows)
+        }));
+        match run {
+            Err(_panic_payload) => return BatchExec::Panicked,
+            Ok((gen, Ok(rows))) => return BatchExec::Completed { gen, rows: Ok(rows) },
+            Ok((gen, Err(e))) => {
+                let se = ServeError::classify(&e);
+                if se.retryable() && attempt < max_retries {
+                    attempt += 1;
+                    metrics.record_retry();
+                    let mul = 1u32 << (attempt - 1).min(16);
+                    std::thread::sleep(retry_backoff.saturating_mul(mul));
+                    continue;
+                }
+                return BatchExec::Completed { gen, rows: Err(se) };
+            }
+        }
+    }
 }
 
 pub struct EnginePool {
@@ -116,10 +254,31 @@ impl EnginePool {
         rx: Receiver<ServeRequest>,
         metrics: &ServeMetrics,
     ) -> Result<()> {
+        self.run_with_faults(engine, cache, rx, metrics, None)
+    }
+
+    /// [`run`](Self::run) with an optional deterministic fault plan
+    /// consulted once per dispatched batch — the supervision test
+    /// harness (`tests/faults.rs`, `gs serve-bench --faults`).
+    pub fn run_with_faults(
+        &self,
+        engine: &InferenceEngine,
+        cache: &Mutex<EmbeddingCache>,
+        rx: Receiver<ServeRequest>,
+        metrics: &ServeMetrics,
+        faults: Option<&FaultPlan>,
+    ) -> Result<()> {
         let workers = self.cfg.workers.max(1);
         let cap = self.cfg.batcher.max_batch.min(engine.capacity()).max(1);
         let c = engine.out_dim();
+        let max_retries = self.cfg.max_retries;
+        let retry_backoff = self.cfg.retry_backoff;
+        let request_deadline = self.cfg.request_deadline;
         let exec_lock = Mutex::new(());
+        // Signed pool-wide budget: each restart event decrements; a
+        // worker whose decrement observes an already-spent budget
+        // exits instead of restarting.
+        let restart_budget = AtomicI64::new(self.cfg.max_worker_restarts as i64);
         let (msg_tx, msg_rx) = channel::<Msg>();
         let (job_tx, job_rx) = std::sync::mpsc::sync_channel::<Job>(workers * 2);
         let job_rx = Mutex::new(job_rx);
@@ -135,25 +294,60 @@ impl EnginePool {
                 }
                 let _ = fwd_tx.send(Msg::Eof);
             });
-            // Workers: private scratch each, shared job queue.
+            // Workers: private scratch each, shared job queue, panics
+            // contained per batch.
             for _ in 0..workers {
                 let done_tx = msg_tx.clone();
                 let job_rx = &job_rx;
                 let exec_lock = &exec_lock;
+                let restart_budget = &restart_budget;
                 scope.spawn(move || {
-                    let mut sc = engine.make_scratch();
+                    let mut sc: Option<ServeScratch> = None;
                     loop {
-                        let job = match job_rx.lock().unwrap().recv() {
+                        let job = match lock_clean(job_rx).recv() {
                             Ok(j) => j,
                             Err(_) => return, // coordinator done
                         };
-                        let gen = engine.generation();
-                        let rows = engine
-                            .forward_locked(&mut sc, &job.seeds, exec_lock)
-                            .map(|r| r.to_vec())
-                            .map_err(|e| e.to_string());
-                        if done_tx.send(Msg::Done { seq: job.seq, gen, rows }).is_err() {
-                            return;
+                        let scratch = sc.get_or_insert_with(|| engine.make_scratch());
+                        match execute_batch(
+                            engine,
+                            scratch,
+                            job.seq,
+                            &job.seeds,
+                            exec_lock,
+                            metrics,
+                            faults,
+                            max_retries,
+                            retry_backoff,
+                        ) {
+                            BatchExec::Completed { gen, rows } => {
+                                // A fatal failure taints the scratch
+                                // that produced it; transient-budget
+                                // exhaustion does not.
+                                let fatal = matches!(&rows, Err(ServeError::Fatal(_)));
+                                if done_tx.send(Msg::Done { seq: job.seq, gen, rows }).is_err() {
+                                    return;
+                                }
+                                if fatal {
+                                    sc = None;
+                                    metrics.record_restart();
+                                    if restart_budget.fetch_sub(1, Ordering::AcqRel) <= 0 {
+                                        let _ = done_tx.send(Msg::WorkerExit);
+                                        return;
+                                    }
+                                }
+                            }
+                            BatchExec::Panicked => {
+                                sc = None;
+                                metrics.record_restart();
+                                if done_tx.send(Msg::WorkerDied { seq: job.seq }).is_err() {
+                                    return;
+                                }
+                                if restart_budget.fetch_sub(1, Ordering::AcqRel) <= 0 {
+                                    let _ = done_tx.send(Msg::WorkerExit);
+                                    return;
+                                }
+                            }
                         }
                     }
                 });
@@ -163,14 +357,160 @@ impl EnginePool {
             // ---- coordinator --------------------------------------
             let mut in_flight: FxHashMap<u64, (u64, usize)> = FxHashMap::default();
             let mut batches: FxHashMap<u64, PendingBatch> = FxHashMap::default();
-            let mut reorder: BTreeMap<u64, (u64, Result<Vec<f32>, String>)> = BTreeMap::new();
+            let mut reorder: BTreeMap<u64, (u64, Result<Vec<f32>, ServeError>)> = BTreeMap::new();
             let mut forming_seeds: Vec<(u32, u32)> = Vec::new();
             let mut forming_waiters: Vec<(usize, ServeRequest)> = Vec::new();
+            let mut backlog: VecDeque<Job> = VecDeque::new();
             let mut deadline: Option<Instant> = None;
             let mut next_seq: u64 = 0; // next batch to dispatch
             let mut next_apply: u64 = 0; // next completion to apply
             let mut eof = false;
-            let mut first_err: Option<anyhow::Error> = None;
+            let mut live = workers; // workers still serving the queue
+            let mut pending: usize = 0; // admitted, unanswered requests
+            let mut co_sc: Option<ServeScratch> = None; // degraded-mode scratch
+
+            // Non-blocking backlog flush: move parked jobs into the
+            // queue while there are workers to drain it and slots to
+            // take them.
+            macro_rules! flush_backlog {
+                () => {{
+                    while live > 0 {
+                        let Some(job) = backlog.pop_front() else { break };
+                        match job_tx.try_send(job) {
+                            Ok(()) => {}
+                            Err(TrySendError::Full(j)) | Err(TrySendError::Disconnected(j)) => {
+                                backlog.push_front(j);
+                                break;
+                            }
+                        }
+                    }
+                }};
+            }
+
+            // Apply one completion (and everything it unblocks) in
+            // dispatch order, answering waiters with rows, typed
+            // errors, or deadline rejections.
+            macro_rules! apply_done {
+                ($seq:expr, $gen:expr, $rows:expr) => {{
+                    if batches.contains_key(&$seq) {
+                        reorder.insert($seq, ($gen, $rows));
+                    }
+                    while let Some((gen, rows)) = reorder.remove(&next_apply) {
+                        let seq = next_apply;
+                        next_apply += 1;
+                        let Some(PendingBatch { seeds, waiters }) = batches.remove(&seq) else {
+                            continue;
+                        };
+                        for &(nt, id) in &seeds {
+                            in_flight.remove(&cache_key(nt, id));
+                        }
+                        match rows {
+                            Ok(rows) => {
+                                {
+                                    let mut cache = lock_cache(cache);
+                                    cache.set_generation(engine.generation());
+                                    for (i, &(nt, id)) in seeds.iter().enumerate() {
+                                        cache.put_if_current(
+                                            cache_key(nt, id),
+                                            &rows[i * c..(i + 1) * c],
+                                            gen,
+                                        );
+                                    }
+                                }
+                                for (slot, req) in waiters {
+                                    pending = pending.saturating_sub(1);
+                                    let waited = req.t_enq.elapsed();
+                                    if !request_deadline.is_zero() && waited > request_deadline {
+                                        metrics.record_deadline_miss();
+                                        let _ = req.reply.send(Err(
+                                            ServeError::DeadlineExceeded {
+                                                waited_ms: waited.as_millis() as u64,
+                                            },
+                                        ));
+                                        continue;
+                                    }
+                                    metrics.latency.record(waited);
+                                    let _ = req
+                                        .reply
+                                        .send(Ok(rows[slot * c..(slot + 1) * c].to_vec()));
+                                }
+                            }
+                            Err(se) => {
+                                // The batch failed for good: its
+                                // waiters get the typed error, the
+                                // pool keeps serving everyone else.
+                                for (_, req) in waiters {
+                                    pending = pending.saturating_sub(1);
+                                    let _ = req.reply.send(Err(se.clone()));
+                                }
+                            }
+                        }
+                        flush_backlog!();
+                    }
+                }};
+            }
+
+            // Degraded mode: no live workers — drain parked and
+            // already-queued jobs and execute them inline on the
+            // coordinator's own scratch.  Inline panics get the same
+            // supervision treatment (bounded, then the batch fails).
+            macro_rules! pump_degraded {
+                () => {{
+                    loop {
+                        let job = match lock_clean(&job_rx).try_recv() {
+                            Ok(j) => Some(j),
+                            Err(_) => None,
+                        }
+                        .or_else(|| backlog.pop_front());
+                        let Some(job) = job else { break };
+                        let mut inline_panics = 0usize;
+                        let (gen, rows) = loop {
+                            let sc = co_sc.get_or_insert_with(|| engine.make_scratch());
+                            match execute_batch(
+                                engine,
+                                sc,
+                                job.seq,
+                                &job.seeds,
+                                &exec_lock,
+                                metrics,
+                                faults,
+                                max_retries,
+                                retry_backoff,
+                            ) {
+                                BatchExec::Completed { gen, rows } => break (gen, rows),
+                                BatchExec::Panicked => {
+                                    metrics.record_restart();
+                                    co_sc = None;
+                                    inline_panics += 1;
+                                    if inline_panics > 2 {
+                                        break (
+                                            engine.generation(),
+                                            Err(ServeError::fatal(
+                                                "degraded-mode inline execution \
+                                                 panicked repeatedly",
+                                            )),
+                                        );
+                                    }
+                                }
+                            }
+                        };
+                        apply_done!(job.seq, gen, rows);
+                    }
+                }};
+            }
+
+            // Hand a job to the workers — or straight to the inline
+            // path once none remain.  Never blocks: a full queue
+            // parks the job in the backlog.
+            macro_rules! enqueue {
+                ($job:expr) => {{
+                    backlog.push_back($job);
+                    flush_backlog!();
+                    if live == 0 {
+                        pump_degraded!();
+                    }
+                }};
+            }
 
             // Cut the forming batch over to the workers.
             macro_rules! dispatch {
@@ -185,16 +525,12 @@ impl EnginePool {
                     }
                     let job_seeds = seeds.clone();
                     batches.insert(seq, PendingBatch { seeds, waiters });
-                    if job_tx.send(Job { seq, seeds: job_seeds }).is_err() {
-                        first_err
-                            .get_or_insert_with(|| anyhow!("engine-pool workers exited early"));
-                    }
+                    enqueue!(Job { seq, seeds: job_seeds });
                 }};
             }
 
             'serve: loop {
-                if first_err.is_some() || (eof && forming_seeds.is_empty() && next_apply == next_seq)
-                {
+                if eof && forming_seeds.is_empty() && next_apply == next_seq {
                     break;
                 }
                 let msg = if let Some(dl) = deadline {
@@ -218,9 +554,19 @@ impl EnginePool {
                     // Deadline fired: flush the partial batch.
                     None => dispatch!(),
                     Some(Msg::Req(req)) => {
+                        let waited = req.t_enq.elapsed();
+                        if !request_deadline.is_zero() && waited > request_deadline {
+                            // Expired in the queue: reject before
+                            // spending any compute on it.
+                            metrics.record_deadline_miss();
+                            let _ = req.reply.send(Err(ServeError::DeadlineExceeded {
+                                waited_ms: waited.as_millis() as u64,
+                            }));
+                            continue;
+                        }
                         let key = cache_key(req.nt, req.id);
                         let hit = {
-                            let mut cache = cache.lock().unwrap();
+                            let mut cache = lock_cache(cache);
                             cache.set_generation(engine.generation());
                             cache.get(key).map(|row| row.to_vec())
                         };
@@ -228,21 +574,39 @@ impl EnginePool {
                             metrics.record_hit();
                             metrics.latency.record(req.t_enq.elapsed());
                             let _ = req.reply.send(Ok(val));
+                        } else if self.cfg.queue_depth > 0 && pending >= self.cfg.queue_depth {
+                            // Queue boundary: admitting more than
+                            // `queue_depth` unanswered requests only
+                            // builds latency — shed instead.
+                            metrics.record_shed();
+                            let _ = req.reply.send(Err(ServeError::Overloaded { depth: pending }));
                         } else if let Some(&(seq, slot)) = in_flight.get(&key) {
                             // Already being computed: join that batch.
                             metrics.record_coalesced();
-                            batches
-                                .get_mut(&seq)
-                                .expect("in-flight key points at a live batch")
-                                .waiters
-                                .push((slot, req));
+                            match batches.get_mut(&seq) {
+                                Some(b) => {
+                                    pending += 1;
+                                    b.waiters.push((slot, req));
+                                }
+                                None => {
+                                    // Unreachable by construction
+                                    // (in-flight keys point at live
+                                    // batches); answer rather than
+                                    // hang if it ever isn't.
+                                    let _ = req.reply.send(Err(ServeError::Canceled(
+                                        "in-flight batch vanished".into(),
+                                    )));
+                                }
+                            }
                         } else if let Some(slot) =
                             forming_seeds.iter().position(|&s| s == (req.nt, req.id))
                         {
                             metrics.record_coalesced();
+                            pending += 1;
                             forming_waiters.push((slot, req));
                         } else {
                             metrics.record_miss();
+                            pending += 1;
                             let slot = forming_seeds.len();
                             forming_seeds.push((req.nt, req.id));
                             forming_waiters.push((slot, req));
@@ -255,44 +619,24 @@ impl EnginePool {
                         }
                     }
                     Some(Msg::Done { seq, gen, rows }) => {
-                        reorder.insert(seq, (gen, rows));
-                        // Apply strictly in dispatch order so cache
-                        // content is pool-size invariant.
-                        while let Some((gen, rows)) = reorder.remove(&next_apply) {
-                            let seq = next_apply;
-                            next_apply += 1;
-                            let PendingBatch { seeds, waiters } =
-                                batches.remove(&seq).expect("completion for a live batch");
-                            for &(nt, id) in &seeds {
-                                in_flight.remove(&cache_key(nt, id));
-                            }
-                            match rows {
-                                Ok(rows) => {
-                                    {
-                                        let mut cache = cache.lock().unwrap();
-                                        cache.set_generation(engine.generation());
-                                        for (i, &(nt, id)) in seeds.iter().enumerate() {
-                                            cache.put_if_current(
-                                                cache_key(nt, id),
-                                                &rows[i * c..(i + 1) * c],
-                                                gen,
-                                            );
-                                        }
-                                    }
-                                    for (slot, req) in waiters {
-                                        metrics.latency.record(req.t_enq.elapsed());
-                                        let _ = req
-                                            .reply
-                                            .send(Ok(rows[slot * c..(slot + 1) * c].to_vec()));
-                                    }
-                                }
-                                Err(msg) => {
-                                    for (_, req) in waiters {
-                                        let _ = req.reply.send(Err(msg.clone()));
-                                    }
-                                    first_err.get_or_insert_with(|| anyhow!("{msg}"));
-                                }
-                            }
+                        apply_done!(seq, gen, rows);
+                    }
+                    Some(Msg::WorkerDied { seq }) => {
+                        // The batch never completed; hand it to
+                        // another worker (or the inline path).  Seeds
+                        // live in the pending table, so nothing was
+                        // lost with the worker.
+                        if let Some(b) = batches.get(&seq) {
+                            enqueue!(Job { seq, seeds: b.seeds.clone() });
+                        }
+                    }
+                    Some(Msg::WorkerExit) => {
+                        live = live.saturating_sub(1);
+                        if live == 0 {
+                            // Jobs parked in the backlog or sitting
+                            // unclaimed in the queue now have no
+                            // consumer: run them inline.
+                            pump_degraded!();
                         }
                     }
                     Some(Msg::Eof) => {
@@ -306,16 +650,19 @@ impl EnginePool {
             // Dropping the job queue releases the workers.  Dropping
             // msg_rx discards any queued requests (their reply senders
             // drop, erroring the waiting clients) and fails the
-            // forwarder's next send — without this, an early error
-            // exit would strand clients whose requests sit unread in
-            // the merged queue.  Outstanding batch waiters drop with
-            // `batches`.
+            // forwarder's next send.  Waiters still tracked get a
+            // typed cancellation instead of a silent hangup.
             drop(job_tx);
             drop(msg_rx);
-            match first_err {
-                Some(e) => Err(e),
-                None => Ok(()),
+            for (_, b) in batches.drain() {
+                for (_, req) in b.waiters {
+                    let _ = req.reply.send(Err(ServeError::Canceled("pool shut down".into())));
+                }
             }
+            for (_, req) in forming_waiters.drain(..) {
+                let _ = req.reply.send(Err(ServeError::Canceled("pool shut down".into())));
+            }
+            Ok(())
         })
     }
 }
@@ -324,12 +671,27 @@ impl EnginePool {
 /// client threads (each waits for its reply before sending the next
 /// request).  Returns the stats plus every `(seed, prediction)` reply
 /// in completion order, for determinism / bit-identity checks.
+///
+/// Typed rejections (shed, deadline-missed) are counted in the stats
+/// and skipped in the reply list; computation failures abort.
 pub fn closed_loop(
     engine: &InferenceEngine,
     cfg: EnginePoolCfg,
     cache: &Mutex<EmbeddingCache>,
     trace: &[(u32, u32)],
     clients: usize,
+) -> Result<(ClosedLoopStats, Vec<((u32, u32), Vec<f32>)>)> {
+    closed_loop_with_faults(engine, cfg, cache, trace, clients, None)
+}
+
+/// [`closed_loop`] under an optional deterministic [`FaultPlan`].
+pub fn closed_loop_with_faults(
+    engine: &InferenceEngine,
+    cfg: EnginePoolCfg,
+    cache: &Mutex<EmbeddingCache>,
+    trace: &[(u32, u32)],
+    clients: usize,
+    faults: Option<&FaultPlan>,
 ) -> Result<(ClosedLoopStats, Vec<((u32, u32), Vec<f32>)>)> {
     let metrics = ServeMetrics::new();
     let pool = EnginePool::new(cfg);
@@ -341,7 +703,7 @@ pub fn closed_loop(
     std::thread::scope(|scope| {
         let pool_handle = {
             let metrics = &metrics;
-            scope.spawn(move || pool.run(engine, cache, rx, metrics))
+            scope.spawn(move || pool.run_with_faults(engine, cache, rx, metrics, faults))
         };
         let mut client_handles = Vec::with_capacity(clients);
         for w in 0..clients {
@@ -353,26 +715,39 @@ pub fn closed_loop(
                     let (rtx, rrx): (Sender<_>, Receiver<_>) = channel();
                     tx.send(ServeRequest::new(nt, id, rtx))
                         .map_err(|_| anyhow!("engine pool exited early"))?;
-                    let val = rrx
-                        .recv()
-                        .map_err(|_| anyhow!("reply channel dropped"))?
-                        .map_err(|e| anyhow!("serve error: {e}"))?;
-                    out.push(((nt, id), val));
+                    match rrx.recv() {
+                        Err(_) => return Err(anyhow!("reply channel dropped")),
+                        Ok(Ok(val)) => out.push(((nt, id), val)),
+                        // Typed rejections are expected under
+                        // overload/deadline pressure: the metrics
+                        // count them, the client moves on.
+                        Ok(Err(e)) if e.is_rejection() => {}
+                        Ok(Err(e)) => return Err(anyhow!("serve error: {e}")),
+                    }
                 }
                 Ok(out)
             }));
         }
         drop(tx); // the pool drains and exits once the clients are done
         for h in client_handles {
-            match h.join().expect("client thread panicked") {
-                Ok(r) => replies.extend(r),
-                Err(e) => {
+            match h.join() {
+                Ok(Ok(r)) => replies.extend(r),
+                Ok(Err(e)) => {
                     first_err.get_or_insert(e);
+                }
+                Err(_) => {
+                    first_err.get_or_insert_with(|| anyhow!("client thread panicked"));
                 }
             }
         }
-        if let Err(e) = pool_handle.join().expect("pool thread panicked") {
-            first_err.get_or_insert(e);
+        match pool_handle.join() {
+            Ok(Err(e)) => {
+                first_err.get_or_insert(e);
+            }
+            Ok(Ok(())) => {}
+            Err(_) => {
+                first_err.get_or_insert_with(|| anyhow!("pool thread panicked"));
+            }
         }
     });
     if let Some(e) = first_err {
@@ -389,6 +764,10 @@ pub fn closed_loop(
         hits: metrics.hits(),
         misses: metrics.misses(),
         coalesced: metrics.coalesced(),
+        restarts: metrics.restarts(),
+        retries: metrics.retries(),
+        shed: metrics.shed(),
+        deadline_misses: metrics.deadline_misses(),
     };
     Ok((stats, replies))
 }

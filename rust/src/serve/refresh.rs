@@ -25,6 +25,7 @@ use std::time::Duration;
 
 use super::cache::{split_key, EmbeddingCache, RowSource};
 use super::engine::{InferenceEngine, ServeScratch};
+use super::error::lock_cache;
 
 /// Knobs for [`refresh_loop`] (`serve.refresh` enables it in the
 /// bench stage with `limit` hot rows).
@@ -34,11 +35,23 @@ pub struct RefreshCfg {
     pub poll: Duration,
     /// Most-recently-used rows re-read per refresh pass.
     pub limit: usize,
+    /// Retries per refresh pass when the source errors; after the
+    /// budget the pass is skipped (the serving path's miss handling
+    /// re-reads rows on demand, so a failed refresh costs latency,
+    /// never correctness).
+    pub max_retries: usize,
+    /// Base backoff before the first retry, doubled per attempt.
+    pub backoff: Duration,
 }
 
 impl Default for RefreshCfg {
     fn default() -> Self {
-        RefreshCfg { poll: Duration::from_millis(10), limit: 1024 }
+        RefreshCfg {
+            poll: Duration::from_millis(10),
+            limit: 1024,
+            max_retries: 3,
+            backoff: Duration::from_millis(1),
+        }
     }
 }
 
@@ -47,6 +60,7 @@ impl Default for RefreshCfg {
 pub struct RefreshStats {
     passes: AtomicU64,
     rows: AtomicU64,
+    errors: AtomicU64,
 }
 
 impl RefreshStats {
@@ -62,6 +76,13 @@ impl RefreshStats {
     /// Total rows re-read across all passes.
     pub fn rows(&self) -> u64 {
         self.rows.load(Ordering::Relaxed)
+    }
+
+    /// Source errors observed (each failed attempt counts one; a pass
+    /// that eventually succeeds still leaves its failed attempts
+    /// here).
+    pub fn errors(&self) -> u64 {
+        self.errors.load(Ordering::Relaxed)
     }
 }
 
@@ -89,7 +110,7 @@ pub fn refresh_hot_rows(
     limit: usize,
 ) -> Result<usize> {
     let (mut keys, cache_gen) = {
-        let c = cache.lock().unwrap();
+        let c = lock_cache(cache);
         (c.hot_keys(limit), c.generation())
     };
     if src.source_generation() == cache_gen || keys.is_empty() {
@@ -107,7 +128,7 @@ pub fn refresh_hot_rows(
         for _attempt in 0..4 {
             let gen = src.source_generation();
             src.fetch_rows(&seeds, &mut rows)?;
-            let mut c = cache.lock().unwrap();
+            let mut c = lock_cache(cache);
             // Validate under the lock: if the source moved on (and a
             // serving thread may already have stamped newer rows),
             // retry rather than roll the generation backwards.
@@ -147,10 +168,32 @@ pub fn refresh_loop(
     stats: &RefreshStats,
 ) -> Result<()> {
     while !stop.load(Ordering::Acquire) {
-        let n = refresh_hot_rows(cache, src, cfg.limit)?;
-        if n > 0 {
-            stats.passes.fetch_add(1, Ordering::Relaxed);
-            stats.rows.fetch_add(n as u64, Ordering::Relaxed);
+        // Transient source errors must never kill the refresher: retry
+        // with exponential backoff, and once the budget is spent skip
+        // the pass entirely — stale rows stay stale-stamped, so the
+        // serving path falls back to miss reads (latency, not
+        // correctness).  Every failed attempt is counted in
+        // `RefreshStats::errors`.
+        let mut attempt = 0usize;
+        loop {
+            match refresh_hot_rows(cache, src, cfg.limit) {
+                Ok(n) => {
+                    if n > 0 {
+                        stats.passes.fetch_add(1, Ordering::Relaxed);
+                        stats.rows.fetch_add(n as u64, Ordering::Relaxed);
+                    }
+                    break;
+                }
+                Err(_) => {
+                    stats.errors.fetch_add(1, Ordering::Relaxed);
+                    if attempt >= cfg.max_retries || stop.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let mul = 1u32 << attempt.min(16);
+                    std::thread::sleep(cfg.backoff.saturating_mul(mul));
+                    attempt += 1;
+                }
+            }
         }
         std::thread::sleep(cfg.poll);
     }

@@ -8,7 +8,8 @@
 use anyhow::{anyhow, bail, Result};
 
 use crate::dataloader::{
-    batch_seed, fill_lemb, run_pipeline, BatchFactory, GsDataset, IdChunks, LembTouch, Split,
+    batch_seed, fill_lemb, run_pipeline_pooled, BatchFactory, GsDataset, IdChunks, LembTouch,
+    Split,
     TokenStore,
 };
 use crate::runtime::{ArtifactSpec, InferSession, Runtime, Tensor, TrainState};
@@ -178,6 +179,8 @@ impl DistillTrainer {
         let seed = opts.seed ^ 0xd157;
         let mut rng = Rng::seed_from(seed);
         let mut last = 0.0f32;
+        // Per-worker factories pinned across epochs.
+        let mut fpool = Vec::new();
         for epoch in 0..opts.epochs {
             // Distillation subsample per epoch.
             let chunks = IdChunks::new(
@@ -188,9 +191,10 @@ impl DistillTrainer {
             );
             let mut loss_sum = 0.0;
             let mut steps = 0;
-            run_pipeline(
+            run_pipeline_pooled(
                 &chunks.chunks(),
                 &opts.prefetch_cfg(),
+                &mut fpool,
                 || BatchFactory::new(ds, &tshape),
                 |f, bi, chunk| {
                     let mut rng = Rng::seed_from(batch_seed(seed, epoch as u64, bi as u64));

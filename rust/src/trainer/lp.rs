@@ -9,8 +9,8 @@
 use anyhow::Result;
 
 use crate::dataloader::{
-    batch_seed, build_lp_batch, run_pipeline, BatchFactory, GsDataset, IdChunks,
-    LinkPredictionDataLoader, Split,
+    batch_seed, build_lp_batch, run_pipeline, run_pipeline_pooled, BatchFactory, GsDataset,
+    IdChunks, LinkPredictionDataLoader, Split,
 };
 use crate::eval::{distmult, reciprocal_rank, Mean};
 use crate::runtime::{Runtime, TrainState};
@@ -116,14 +116,17 @@ impl LpTrainer {
         let b = loader.batch_size();
         let pf = opts.prefetch_cfg();
         let all_train = ds.lp.as_ref().expect("no LP task").edge_ids_in(Split::Train);
+        // Per-worker factories pinned across epochs.
+        let mut fpool = Vec::new();
         for epoch in 0..opts.epochs {
             let t0 = std::time::Instant::now();
             let chunks = IdChunks::new(all_train.clone(), b, self.max_train_edges, &mut rng);
             let mut epoch_loss = 0.0f32;
             let mut steps = 0usize;
-            run_pipeline(
+            run_pipeline_pooled(
                 &chunks.chunks(),
                 &pf,
+                &mut fpool,
                 || BatchFactory::new(ds, &loader.shape),
                 |f, bi, chunk| {
                     let mut rng = Rng::seed_from(batch_seed(seed, epoch as u64, bi as u64));

@@ -34,8 +34,8 @@
 use anyhow::{anyhow, bail, Result};
 
 use crate::dataloader::{
-    batch_seed, build_lp_batch, build_nc_batch, run_pipeline, BatchFactory, GsDataset, IdChunks,
-    LembTouch, LinkPredictionDataLoader, NodeDataLoader, Split,
+    batch_seed, build_lp_batch, build_nc_batch, run_pipeline_pooled, BatchFactory, GsDataset,
+    IdChunks, LembTouch, LinkPredictionDataLoader, NodeDataLoader, Split,
 };
 use crate::runtime::{ArtifactSpec, InferSession, Runtime, Tensor, TrainState};
 use crate::sampling::{BlockShape, NegSampler};
@@ -184,6 +184,13 @@ impl<'a> MultiFactory<'a> {
     }
 }
 
+/// Opaque per-worker factory pool for the interleaved batch stream,
+/// pinned across epochs (see `dataloader::run_pipeline_pooled`).
+/// Start from `default()` and pass the same pool to every
+/// [`MultiTaskTrainer::epoch_batches_pooled`] call.
+#[derive(Default)]
+pub struct MultiFactoryPool<'a>(Vec<Option<MultiFactory<'a>>>);
+
 /// Per-task results of a multi-task run (the pipeline reports these
 /// per task in `PipelineOutcome`).
 #[derive(Debug, Clone, Default)]
@@ -282,6 +289,23 @@ impl MultiTaskTrainer {
         opts: &TrainOptions,
         epoch: usize,
         shuffles: &mut [Rng],
+        consume: impl FnMut(usize, usize, MultiBatch) -> Result<()>,
+    ) -> Result<Vec<usize>> {
+        let mut pool = MultiFactoryPool::default();
+        self.epoch_batches_pooled(ds, specs, opts, epoch, shuffles, &mut pool, consume)
+    }
+
+    /// [`Self::epoch_batches`] with worker factories pinned across
+    /// calls: multi-epoch drivers hold one [`MultiFactoryPool`] so the
+    /// per-head `BatchFactory` scratch is built once, not per epoch.
+    pub fn epoch_batches_pooled<'a>(
+        &self,
+        ds: &'a GsDataset,
+        specs: &MultiSpecs,
+        opts: &TrainOptions,
+        epoch: usize,
+        shuffles: &mut [Rng],
+        pool: &mut MultiFactoryPool<'a>,
         mut consume: impl FnMut(usize, usize, MultiBatch) -> Result<()>,
     ) -> Result<Vec<usize>> {
         if shuffles.len() != self.tasks.len() {
@@ -341,9 +365,10 @@ impl MultiTaskTrainer {
             .collect();
 
         let nw = opts.n_workers.max(1);
-        run_pipeline(
+        run_pipeline_pooled(
             &items,
             &opts.prefetch_cfg(),
+            &mut pool.0,
             || MultiFactory::new(ds, specs),
             |f, _idx, &(t, bi)| -> Result<MultiBatch> {
                 let chunk = chunks[t].get(bi);
@@ -448,6 +473,8 @@ impl MultiTaskTrainer {
             ..Default::default()
         };
 
+        // Per-worker factories pinned across epochs.
+        let mut fpool = MultiFactoryPool::default();
         for epoch in 0..opts.epochs {
             // The distill teacher tracks the NC head: a session over
             // its parameters, frozen for the epoch (deterministic and
@@ -462,7 +489,7 @@ impl MultiTaskTrainer {
             };
             let mut loss = vec![0.0f32; self.tasks.len()];
             let mut steps = vec![0usize; self.tasks.len()];
-            self.epoch_batches(ds, &specs, opts, epoch, &mut shuffles, |t, bi, mb| {
+            self.epoch_batches_pooled(ds, &specs, opts, epoch, &mut shuffles, &mut fpool, |t, bi, mb| {
                 let lr = self.tasks[t].lr.unwrap_or(opts.lr);
                 let worker = (bi % opts.n_workers.max(1)) as u32;
                 let l = match (mb, &mut heads[t]) {

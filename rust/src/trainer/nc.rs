@@ -55,7 +55,8 @@ impl NodeTrainer {
         let mut rng = Rng::seed_from(seed);
         let train_ids = ds.node_labels().ids_in(Split::Train);
         let mut report = NcReport::default();
-        let pfl = PrefetchingLoader::new(&loader, opts.prefetch_cfg());
+        // Holds the pinned per-worker factories across epochs.
+        let mut pfl = PrefetchingLoader::new(&loader, ds, opts.prefetch_cfg());
 
         for epoch in 0..opts.epochs {
             let t0 = std::time::Instant::now();
@@ -63,7 +64,6 @@ impl NodeTrainer {
             let mut epoch_loss = 0.0f32;
             let mut steps = 0usize;
             pfl.for_each(
-                ds,
                 &chunks.chunks(),
                 seed,
                 epoch as u64,

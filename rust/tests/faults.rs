@@ -1,0 +1,239 @@
+//! Fault-injection headline suite (the PR's acceptance contract):
+//! one fixed request stream drained through supervised engine pools of
+//! size 1, 2 and 8, with and without a deterministic fault schedule —
+//! worker panics, transient errors and slow reads.  Replies AND
+//! hit/miss accounting must be **bit-identical** across every pool
+//! size and both schedules, and the supervision counters must equal
+//! the plan exactly (restarts == panics, retries == transients).
+//! Shedding and deadlines stay off here — those rejections are
+//! deliberately timing-dependent and tested in `tests/serve.rs`.
+
+use std::sync::mpsc::channel;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use graphstorm::datagen::{self, mag};
+use graphstorm::dataloader::GsDataset;
+use graphstorm::partition::PartitionBook;
+use graphstorm::runtime::ArtifactSpec;
+use graphstorm::serve::{
+    run_serve_bench, Admission, EmbeddingCache, EnginePool, EnginePoolCfg, FaultKind, FaultPlan,
+    FaultSpec, InferenceEngine, MicroBatcherCfg, ServeBenchParams, ServeError, ServeMetrics,
+    ServeRequest,
+};
+
+fn mag_ds(n: usize) -> GsDataset {
+    let raw = mag::generate(&mag::MagConfig { n_papers: n, ..Default::default() });
+    let book = PartitionBook::single(&raw.graph.num_nodes);
+    let mut ds = datagen::build_dataset(raw, book, 64, 3);
+    ds.ensure_text_features(64);
+    ds
+}
+
+fn spec() -> ArtifactSpec {
+    ArtifactSpec::synthetic_block(&[2304, 384, 64], &[1920, 320], 5, r#","batch":64"#)
+        .with_output("logits", &[64, 8])
+}
+
+fn pool_cfg(workers: usize) -> EnginePoolCfg {
+    EnginePoolCfg {
+        workers,
+        batcher: MicroBatcherCfg { max_batch: 8, deadline: Duration::from_micros(200) },
+        ..Default::default()
+    }
+}
+
+struct RunOut {
+    replies: Vec<Result<Vec<f32>, ServeError>>,
+    hits: u64,
+    misses: u64,
+    restarts: u64,
+    retries: u64,
+    shed: u64,
+    deadline_misses: u64,
+}
+
+/// Open-loop drain: queue the whole trace up-front in a fixed order
+/// (so arrival order — and therefore accounting — is identical for
+/// every pool size), run the supervised pool over it, collect every
+/// typed reply plus the counters.
+fn drain(
+    engine: &InferenceEngine,
+    cfg: EnginePoolCfg,
+    trace: &[(u32, u32)],
+    plan: Option<&FaultPlan>,
+) -> RunOut {
+    let pool = EnginePool::new(cfg);
+    let metrics = ServeMetrics::new();
+    let cache = Mutex::new(EmbeddingCache::new(1024)); // never evicts
+    let (tx, rx) = channel::<ServeRequest>();
+    let mut reply_rxs = Vec::with_capacity(trace.len());
+    for &(nt, id) in trace {
+        let (rtx, rrx) = channel();
+        tx.send(ServeRequest::new(nt, id, rtx)).unwrap();
+        reply_rxs.push(rrx);
+    }
+    drop(tx);
+    let replies = std::thread::scope(|scope| {
+        let (metrics, cache) = (&metrics, &cache);
+        let h = scope.spawn(move || pool.run_with_faults(engine, cache, rx, metrics, plan));
+        let replies: Vec<Result<Vec<f32>, ServeError>> = reply_rxs
+            .iter()
+            .enumerate()
+            .map(|(i, r)| r.recv().unwrap_or_else(|_| panic!("request {i}: reply hung up")))
+            .collect();
+        h.join().expect("pool thread panicked").expect("pool run failed");
+        replies
+    });
+    RunOut {
+        replies,
+        hits: metrics.hits(),
+        misses: metrics.misses(),
+        restarts: metrics.restarts(),
+        retries: metrics.retries(),
+        shed: metrics.shed(),
+        deadline_misses: metrics.deadline_misses(),
+    }
+}
+
+/// The headline: {1, 2, 8} workers × {clean, faulted} — replies and
+/// hit/miss accounting bit-identical everywhere, counters exactly the
+/// plan's.
+#[test]
+fn faulted_runs_are_bit_identical_across_pool_sizes() {
+    let ds = mag_ds(400);
+    let engine = InferenceEngine::surrogate(&ds, &spec(), 23).unwrap();
+    let nt = ds.target_ntype as u32;
+    // 60 distinct keys, every one requested 5 times: misses, hits and
+    // in-flight coalescing all occur, and the distinct count is exact.
+    let trace: Vec<(u32, u32)> = (0..300).map(|i| (nt, (i % 60) as u32)).collect();
+    let spec = FaultSpec::parse("panics=2,transient=3,slow=1,slow_ms=2").unwrap();
+    // Guaranteed lower bound on batches cut: 60 distinct misses, at
+    // most 8 seeds per batch.
+    let horizon = 60u64.div_ceil(8);
+
+    let mut baseline: Option<(Vec<Vec<f32>>, u64, u64)> = None;
+    for workers in [1usize, 2, 8] {
+        for faulted in [false, true] {
+            let plan = if faulted {
+                Some(FaultPlan::generate(23, horizon, &spec).unwrap())
+            } else {
+                None
+            };
+            let tag = format!("workers={workers} faulted={faulted}");
+            let out = drain(&engine, pool_cfg(workers), &trace, plan.as_ref());
+            let rows: Vec<Vec<f32>> = out
+                .replies
+                .into_iter()
+                .enumerate()
+                .map(|(i, r)| r.unwrap_or_else(|e| panic!("{tag}: request {i} failed: {e}")))
+                .collect();
+            if let Some(plan) = &plan {
+                assert_eq!(plan.fired(), plan.planned(), "{tag}: every planned fault fires");
+            }
+            assert_eq!(out.restarts, if faulted { 2 } else { 0 }, "{tag}: restarts == panics");
+            assert_eq!(out.retries, if faulted { 3 } else { 0 }, "{tag}: retries == transients");
+            assert_eq!(out.shed, 0, "{tag}: shedding disabled");
+            assert_eq!(out.deadline_misses, 0, "{tag}: deadlines disabled");
+            assert_eq!(out.misses, 60, "{tag}: every distinct key misses exactly once");
+            assert_eq!(out.hits, 240, "{tag}: every repeat is a hit (or coalesces)");
+            match &baseline {
+                None => baseline = Some((rows, out.hits, out.misses)),
+                Some((expect, hits, misses)) => {
+                    assert_eq!(&rows, expect, "{tag}: replies diverged");
+                    assert_eq!(out.hits, *hits, "{tag}: hit accounting diverged");
+                    assert_eq!(out.misses, *misses, "{tag}: miss accounting diverged");
+                }
+            }
+        }
+    }
+}
+
+/// A fatal (non-retryable) batch error fails exactly its own waiters
+/// with the typed error — every other request is served and the pool
+/// finishes cleanly.
+#[test]
+fn fatal_batch_error_is_contained() {
+    let ds = mag_ds(300);
+    let engine = InferenceEngine::surrogate(&ds, &spec(), 29).unwrap();
+    let nt = ds.target_ntype as u32;
+    // 24 distinct pre-queued keys cut into batches of 8: batch 1 is
+    // deterministically keys 8..16.
+    let trace: Vec<(u32, u32)> = (0..24).map(|i| (nt, i as u32)).collect();
+    let plan = FaultPlan::precise(&[(1, FaultKind::Fatal)], Duration::from_millis(1));
+    let out = drain(&engine, pool_cfg(2), &trace, Some(&plan));
+    for (i, r) in out.replies.iter().enumerate() {
+        if (8..16).contains(&i) {
+            assert!(
+                matches!(r, Err(ServeError::Fatal(_))),
+                "request {i} should carry the fatal batch error, got {r:?}"
+            );
+        } else {
+            assert!(r.is_ok(), "request {i} outside the fatal batch must be served: {r:?}");
+        }
+    }
+    // The fatal error discarded one worker scratch.
+    assert_eq!(out.restarts, 1);
+    assert_eq!(out.retries, 0, "fatal errors are not retried");
+}
+
+/// Restart-budget exhaustion retires the workers but never the pool:
+/// the coordinator finishes the stream inline (degraded mode) and the
+/// re-dispatched batch is answered — slower, never down, still
+/// bit-identical.
+#[test]
+fn restart_budget_exhaustion_degrades_but_serves() {
+    let ds = mag_ds(300);
+    let engine = InferenceEngine::surrogate(&ds, &spec(), 41).unwrap();
+    let nt = ds.target_ntype as u32;
+    let trace: Vec<(u32, u32)> = (0..24).map(|i| (nt, i as u32)).collect();
+    // Budget 0: the single worker's first panic retires it for good.
+    let cfg = EnginePoolCfg { max_worker_restarts: 0, ..pool_cfg(1) };
+    let plan = FaultPlan::precise(&[(0, FaultKind::WorkerPanic)], Duration::from_millis(1));
+    let out = drain(&engine, cfg, &trace, Some(&plan));
+
+    let mut sc = engine.make_scratch();
+    for (i, r) in out.replies.iter().enumerate() {
+        let row = r.as_ref().unwrap_or_else(|e| panic!("degraded pool dropped request {i}: {e}"));
+        let (nt, id) = trace[i];
+        assert_eq!(
+            row,
+            &engine.predict_one(&mut sc, nt, id).unwrap(),
+            "degraded-mode reply for node {id} not canonical"
+        );
+    }
+    assert_eq!(out.restarts, 1, "one panic, one supervision event");
+    assert_eq!(out.misses, 24);
+}
+
+/// End-to-end through the bench driver (`gs serve-bench --faults`
+/// exercises this same path): the faulted uncached arm still matches
+/// the clean warmed arm bit-for-bit, and the counters match the spec.
+#[test]
+fn serve_bench_with_faults_stays_bit_identical() {
+    let ds = mag_ds(400);
+    let engine = InferenceEngine::surrogate(&ds, &spec(), 17).unwrap();
+    let spec = FaultSpec::parse("panics=1,transient=2,slow=1,slow_ms=2").unwrap();
+    let rep = run_serve_bench(
+        &engine,
+        &ServeBenchParams {
+            seed: 7,
+            requests: 300,
+            alpha: 1.1,
+            clients: 3,
+            cache: 512,
+            admission: Admission::TinyLfu,
+            pool: pool_cfg(2),
+            refresh: 0,
+            faults: Some(spec.clone()),
+        },
+    )
+    .unwrap();
+    assert!(rep.identical, "faulted uncached arm diverged from the warmed arm");
+    assert_eq!(rep.planned_faults, spec.total());
+    assert_eq!(rep.uncached.restarts, 1, "restarts == planned panics");
+    assert_eq!(rep.uncached.retries, 2, "retries == planned transients");
+    // The clean warmed arm saw no supervision events.
+    assert_eq!(rep.warmed.restarts, 0);
+    assert_eq!(rep.warmed.retries, 0);
+}

@@ -50,11 +50,19 @@ fn prefetch_matches_serial_nc_loader() {
 
     let mut per_workers = vec![];
     for workers in [1usize, 4] {
-        let pfl = PrefetchingLoader::new(
+        let mut pfl = PrefetchingLoader::new(
             &loader,
+            &ds,
             PrefetchConfig { n_workers: workers, depth: 2 },
         );
-        let mut batches = pfl.collect(&ds, &chunks, seed, 0, 2).unwrap();
+        // Two epochs through the same loader: pinned factories must
+        // yield the same batches on reuse as on first build.
+        let first = pfl.collect(&chunks, seed, 0, 2).unwrap();
+        let mut batches = pfl.collect(&chunks, seed, 0, 2).unwrap();
+        for (i, (x, y)) in first.iter().zip(batches.iter()).enumerate() {
+            assert_eq!(x.0, y.0, "pooled factory reuse changed batch {i}");
+            assert_eq!(x.1, y.1);
+        }
         // Fill the deferred embedding rows, as the trainer does.
         for (bi, (batch, touch)) in batches.iter_mut().enumerate() {
             fill_lemb(&ds, batch, touch, (bi % 2) as u32).unwrap();

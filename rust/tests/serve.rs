@@ -18,9 +18,9 @@ use graphstorm::partition::PartitionBook;
 use graphstorm::runtime::ArtifactSpec;
 use graphstorm::serve::{
     cache_key, closed_loop, offline::read_shards, refresh_hot_rows, refresh_loop, run_serve_bench,
-    Admission, EmbTableSource, EmbeddingCache, EnginePool, EnginePoolCfg, InferenceEngine,
-    MicroBatcher, MicroBatcherCfg, OfflineInference, RefreshCfg, RefreshStats, ServeBenchParams,
-    ServeMetrics, ServeRequest,
+    Admission, EmbTableSource, EmbeddingCache, EnginePool, EnginePoolCfg, FaultKind, FaultPlan,
+    InferenceEngine, MicroBatcher, MicroBatcherCfg, OfflineInference, RefreshCfg, RefreshStats,
+    RowSource, ServeBenchParams, ServeError, ServeMetrics, ServeRequest,
 };
 use graphstorm::util::Rng;
 
@@ -169,6 +169,7 @@ fn concurrent_requests_are_deterministic() {
     let cfg = EnginePoolCfg {
         workers: 2,
         batcher: MicroBatcherCfg { max_batch: 16, deadline: Duration::from_micros(300) },
+        ..Default::default()
     };
 
     // Two runs with different cache settings + 4 concurrent clients.
@@ -204,6 +205,7 @@ fn generation_bump_invalidates_serving_cache() {
     let cfg = EnginePoolCfg {
         workers: 1,
         batcher: MicroBatcherCfg { max_batch: 4, deadline: Duration::from_micros(100) },
+        ..Default::default()
     };
     let cache = Mutex::new(EmbeddingCache::new(8));
     let (s0, _) = closed_loop(&engine, cfg.clone(), &cache, &trace, 1).unwrap();
@@ -234,6 +236,7 @@ fn pool_sizes_are_bit_identical() {
         let pool = EnginePool::new(EnginePoolCfg {
             workers,
             batcher: MicroBatcherCfg { max_batch: 8, deadline: Duration::from_micros(200) },
+            ..Default::default()
         });
         let cache = Mutex::new(EmbeddingCache::new(1024)); // never evicts
         let metrics = ServeMetrics::new();
@@ -338,7 +341,7 @@ fn background_refresh_loop_tracks_updates() {
             let (cache, table, stop, stats) = (&cache, &table, &stop, &stats);
             scope.spawn(move || {
                 let mut src = EmbTableSource { table, worker: 0 };
-                let cfg = RefreshCfg { poll: Duration::from_millis(1), limit: 8 };
+                let cfg = RefreshCfg { poll: Duration::from_millis(1), limit: 8, ..Default::default() };
                 refresh_loop(cache, &mut src, &cfg, stop, stats)
             })
         };
@@ -383,8 +386,10 @@ fn serve_bench_three_arms_bit_identical() {
             pool: EnginePoolCfg {
                 workers: 2,
                 batcher: MicroBatcherCfg { max_batch: 8, deadline: Duration::from_micros(200) },
+                ..Default::default()
             },
             refresh: 64,
+            faults: None,
         },
     )
     .unwrap();
@@ -393,4 +398,221 @@ fn serve_bench_three_arms_bit_identical() {
     assert!(rep.refreshed_rows > 0, "refresh pass re-read nothing");
     let r = rep.refreshed.expect("refresh arm ran");
     assert!(r.hit_rate > 0.0, "post-bump replay should still hit refreshed rows");
+}
+
+/// Overload shedding at the queue boundary: with a bounded queue and a
+/// slow worker, excess arrivals get a typed `Overloaded` rejection —
+/// never a hang — and served + shed accounts for every request.
+#[test]
+fn queue_full_requests_are_shed() {
+    let ds = mag_ds(300);
+    let engine = InferenceEngine::surrogate(&ds, &spec(), 31).unwrap();
+    let nt = ds.target_ntype as u32;
+    let pool = EnginePool::new(EnginePoolCfg {
+        workers: 1,
+        batcher: MicroBatcherCfg { max_batch: 4, deadline: Duration::from_micros(100) },
+        queue_depth: 4,
+        ..Default::default()
+    });
+    // The first two batches each sleep 100ms, so the 36 requests
+    // behind them arrive against a full queue.
+    let plan = FaultPlan::precise(
+        &[(0, FaultKind::SlowRead), (1, FaultKind::SlowRead)],
+        Duration::from_millis(100),
+    );
+    let metrics = ServeMetrics::new();
+    let cache = Mutex::new(EmbeddingCache::new(0));
+    let total = 40u32;
+    let (tx, rx) = channel::<ServeRequest>();
+    let mut reply_rxs = Vec::new();
+    for id in 0..total {
+        let (rtx, rrx) = channel();
+        tx.send(ServeRequest::new(nt, id, rtx)).unwrap();
+        reply_rxs.push(rrx);
+    }
+    drop(tx);
+    std::thread::scope(|scope| {
+        let (metrics, cache, engine, plan) = (&metrics, &cache, &engine, &plan);
+        let h = scope.spawn(move || pool.run_with_faults(engine, cache, rx, metrics, Some(plan)));
+        let mut served = 0u64;
+        let mut shed = 0u64;
+        for (i, rrx) in reply_rxs.iter().enumerate() {
+            match rrx.recv().unwrap_or_else(|_| panic!("request {i}: reply channel hung up")) {
+                Ok(row) => {
+                    assert_eq!(row.len(), engine.out_dim());
+                    served += 1;
+                }
+                Err(ServeError::Overloaded { depth }) => {
+                    assert!(depth >= 4, "shed below the queue bound (depth {depth})");
+                    shed += 1;
+                }
+                Err(e) => panic!("request {i}: unexpected serve error: {e}"),
+            }
+        }
+        h.join().expect("pool thread panicked").unwrap();
+        assert_eq!(served + shed, total as u64, "every request answered exactly once");
+        assert!(shed >= 1, "tiny queue behind a slow worker must shed");
+        assert_eq!(metrics.shed(), shed);
+        assert_eq!(metrics.served(), served);
+    });
+}
+
+/// A batch stuck behind an injected slow read answers its waiters with
+/// a typed `DeadlineExceeded` once their per-request deadline has
+/// passed — counted, never hung, never half-served.
+#[test]
+fn slow_batch_misses_request_deadline() {
+    let ds = mag_ds(300);
+    let engine = InferenceEngine::surrogate(&ds, &spec(), 37).unwrap();
+    let nt = ds.target_ntype as u32;
+    let pool = EnginePool::new(EnginePoolCfg {
+        workers: 1,
+        batcher: MicroBatcherCfg { max_batch: 4, deadline: Duration::from_micros(100) },
+        request_deadline: Duration::from_millis(10),
+        ..Default::default()
+    });
+    let plan = FaultPlan::precise(&[(0, FaultKind::SlowRead)], Duration::from_millis(200));
+    let metrics = ServeMetrics::new();
+    let cache = Mutex::new(EmbeddingCache::new(64));
+    let (tx, rx) = channel::<ServeRequest>();
+    let mut reply_rxs = Vec::new();
+    for id in 0..4u32 {
+        let (rtx, rrx) = channel();
+        tx.send(ServeRequest::new(nt, id, rtx)).unwrap();
+        reply_rxs.push(rrx);
+    }
+    drop(tx);
+    std::thread::scope(|scope| {
+        let (metrics, cache, engine, plan) = (&metrics, &cache, &engine, &plan);
+        let h = scope.spawn(move || pool.run_with_faults(engine, cache, rx, metrics, Some(plan)));
+        let mut missed = 0u64;
+        for (i, rrx) in reply_rxs.iter().enumerate() {
+            match rrx.recv().unwrap_or_else(|_| panic!("request {i}: reply channel hung up")) {
+                Ok(_) => {}
+                Err(ServeError::DeadlineExceeded { waited_ms }) => {
+                    assert!(waited_ms >= 10, "rejected before the deadline ({waited_ms}ms)");
+                    missed += 1;
+                }
+                Err(e) => panic!("request {i}: unexpected serve error: {e}"),
+            }
+        }
+        h.join().expect("pool thread panicked").unwrap();
+        assert!(missed >= 1, "a 200ms batch behind a 10ms deadline must miss");
+        assert_eq!(metrics.deadline_misses(), missed);
+    });
+}
+
+/// A transiently failing row source must not kill the background
+/// refresher: failed attempts are counted and retried with backoff,
+/// and the pass still lands once the source recovers.
+#[test]
+fn refresh_loop_survives_flaky_source() {
+    struct Flaky<'a> {
+        inner: EmbTableSource<'a>,
+        failures_left: usize,
+    }
+    impl RowSource for Flaky<'_> {
+        fn row_dim(&self) -> usize {
+            self.inner.row_dim()
+        }
+        fn source_generation(&self) -> u64 {
+            self.inner.source_generation()
+        }
+        fn fetch_row(&mut self, nt: u32, id: u32, out: &mut Vec<f32>) -> anyhow::Result<()> {
+            if self.failures_left > 0 {
+                self.failures_left -= 1;
+                anyhow::bail!("injected transient row-source failure");
+            }
+            self.inner.fetch_row(nt, id, out)
+        }
+    }
+
+    let book = Arc::new(PartitionBook::single(&[20]));
+    let counters = Arc::new(TrafficCounters::new());
+    let table = EmbTable::new(0, 20, 3, 19, book, counters);
+    let cache = Mutex::new(EmbeddingCache::new(16));
+    {
+        let mut src = EmbTableSource { table: &table, worker: 0 };
+        let mut c = cache.lock().unwrap();
+        let mut row = Vec::new();
+        for id in 0..5u32 {
+            c.get_through(0, id, &mut src, &mut row).unwrap();
+        }
+    }
+    let stop = AtomicBool::new(false);
+    let stats = RefreshStats::new();
+    std::thread::scope(|scope| {
+        let handle = {
+            let (cache, table, stop, stats) = (&cache, &table, &stop, &stats);
+            scope.spawn(move || {
+                let mut src =
+                    Flaky { inner: EmbTableSource { table, worker: 0 }, failures_left: 2 };
+                let cfg = RefreshCfg {
+                    poll: Duration::from_millis(1),
+                    limit: 8,
+                    max_retries: 5,
+                    backoff: Duration::from_micros(200),
+                };
+                refresh_loop(cache, &mut src, &cfg, stop, stats)
+            })
+        };
+        table.sparse_adam(&[1, 2], &[1.0; 6], 1e-2);
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while stats.rows() == 0 {
+            assert!(Instant::now() < deadline, "refresher never recovered from the faults");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        stop.store(true, Ordering::Release);
+        handle.join().expect("refresh thread panicked").expect("refresh loop must not abort");
+    });
+    assert_eq!(stats.errors(), 2, "both injected failures counted");
+    assert!(stats.passes() >= 1);
+    // The pass that finally landed re-read the post-update bytes.
+    let snap = table.weights_snapshot();
+    let mut c = cache.lock().unwrap();
+    c.set_generation(table.generation());
+    for id in [1u32, 2] {
+        let row = c.get(cache_key(0, id)).expect("hot row re-warmed").to_vec();
+        let base = id as usize * 3;
+        assert_eq!(row, &snap[base..base + 3], "stale row served for node {id}");
+    }
+}
+
+/// Crash-safe offline writes: a directory polluted by a simulated
+/// mid-write crash (stale `.tmp` shard + truncated committed shard,
+/// no manifest) recovers with a plain re-run — atomic tmp+rename
+/// replaces the truncated shard, the sweep removes stale tmps, and
+/// the manifest written last certifies the complete set.
+#[test]
+fn offline_rerun_recovers_from_partial_write() {
+    let ds = mag_ds(300);
+    let engine = InferenceEngine::surrogate(&ds, &spec(), 11).unwrap();
+    let nt = ds.target_ntype as u32;
+    let n = ds.graph.num_nodes[nt as usize];
+    let dir = tmp_dir("crash");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("shard_00000.gstf.tmp"), b"GSTF\x01 interrupted write").unwrap();
+    std::fs::write(dir.join("shard_00001.gstf"), b"GSTF").unwrap();
+
+    let off = OfflineInference { shard_size: 70, ..Default::default() };
+    let rep = off.run(&engine, nt, &dir).unwrap();
+    assert_eq!(rep.rows, n);
+    for e in std::fs::read_dir(&dir).unwrap() {
+        let name = e.unwrap().file_name().into_string().unwrap();
+        assert!(!name.ends_with(".tmp"), "stale tmp survived the re-run: {name}");
+    }
+    assert!(dir.join("manifest.json").is_file(), "manifest written last is missing");
+
+    let rows = read_shards(&dir, nt).unwrap();
+    assert_eq!(rows.len(), n);
+    let mut sc = engine.make_scratch();
+    for &((rnt, id), ref row) in rows.iter().step_by(41) {
+        assert_eq!(
+            row,
+            &engine.predict_one(&mut sc, rnt, id).unwrap(),
+            "recovered shard row for node {id} diverged"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
 }

@@ -1,26 +1,48 @@
 //! Minimal in-tree shim of the `anyhow` API surface this workspace
 //! uses (offline build — DESIGN.md §1): `Error`, `Result`, `anyhow!`,
-//! `bail!`, `ensure!`, and the `Context` extension trait for both
-//! `Result` and `Option`.  Context is stored as a prefix chain in the
-//! rendered message, matching anyhow's `{:#}` style closely enough for
-//! logs and test assertions.
+//! `bail!`, `ensure!`, `Error::new` + `downcast_ref` (the serving
+//! stack classifies typed `ServeError`s this way), and the `Context`
+//! extension trait for both `Result` and `Option`.  Context is stored
+//! as a prefix chain in the rendered message, matching anyhow's `{:#}`
+//! style closely enough for logs and test assertions.
 
+use std::any::Any;
 use std::fmt;
 
-/// A type-erased error: the rendered message plus an optional source
-/// chain already folded into the message (we never downcast).
+/// A type-erased error: the rendered message (source chain already
+/// folded in) plus the original typed error when one existed, kept
+/// for `downcast_ref` — ad-hoc `anyhow!` errors carry no payload.
 pub struct Error {
     msg: String,
+    payload: Option<Box<dyn Any + Send + Sync>>,
 }
 
 impl Error {
     pub fn msg<M: fmt::Display>(m: M) -> Error {
-        Error { msg: m.to_string() }
+        Error { msg: m.to_string(), payload: None }
+    }
+
+    /// Construct from a typed error, rendering its source chain into
+    /// the message and retaining the value for [`downcast_ref`].
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(e: E) -> Error {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg = format!("{msg}: {s}");
+            src = s.source();
+        }
+        Error { msg, payload: Some(Box::new(e)) }
+    }
+
+    /// The typed error this was built from, if it was (or wraps) a
+    /// `T`.  Context prefixes don't disturb the payload.
+    pub fn downcast_ref<T: 'static>(&self) -> Option<&T> {
+        self.payload.as_ref()?.downcast_ref::<T>()
     }
 
     /// Prepend a context line, anyhow-style (`context: cause`).
     pub fn context<C: fmt::Display>(self, c: C) -> Error {
-        Error { msg: format!("{c}: {}", self.msg) }
+        Error { msg: format!("{c}: {}", self.msg), payload: self.payload }
     }
 }
 
@@ -41,14 +63,7 @@ impl fmt::Debug for Error {
 // conversion below coherent.
 impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
     fn from(e: E) -> Error {
-        // Fold the source chain into one line.
-        let mut msg = e.to_string();
-        let mut src = e.source();
-        while let Some(s) = src {
-            msg = format!("{msg}: {s}");
-            src = s.source();
-        }
-        Error { msg }
+        Error::new(e)
     }
 }
 
@@ -143,6 +158,24 @@ mod tests {
         let none: Option<u32> = None;
         assert_eq!(none.context("missing").unwrap_err().to_string(), "missing");
         assert_eq!(Some(3u32).context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn downcast_ref_preserves_typed_errors() {
+        #[derive(Debug, PartialEq)]
+        struct MyErr(u32);
+        impl fmt::Display for MyErr {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "my error {}", self.0)
+            }
+        }
+        impl std::error::Error for MyErr {}
+
+        let e = Error::new(MyErr(7)).context("outer");
+        assert_eq!(e.to_string(), "outer: my error 7");
+        assert_eq!(e.downcast_ref::<MyErr>(), Some(&MyErr(7)));
+        assert_eq!(e.downcast_ref::<std::io::Error>().map(|_| ()), None);
+        assert!(anyhow!("ad hoc").downcast_ref::<MyErr>().is_none());
     }
 
     #[test]

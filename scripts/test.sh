@@ -18,14 +18,51 @@ ROOT="$(cd "$(dirname "$0")/.." && pwd)"
 "$ROOT/scripts/check_docs.sh"
 echo
 
+# Serving code must stay panic-clean: failures travel as typed
+# `ServeError`s (docs/ROBUSTNESS.md), so `.unwrap(`/`.expect(` are
+# banned in rust/src/serve/ production code (test modules after
+# `#[cfg(test)]` are exempt; `.unwrap_or*` is fine).
+serve_panics=$(
+    for f in "$ROOT"/rust/src/serve/*.rs; do
+        awk -v f="${f#"$ROOT"/}" '
+            /#\[cfg\(test\)\]/ { exit }
+            /\.unwrap\(|\.expect\(/ { printf "%s:%d: %s\n", f, NR, $0 }
+        ' "$f"
+    done
+)
+if [ -n "$serve_panics" ]; then
+    echo "test.sh: panic-clean lint FAILED — use the serve error taxonomy instead:" >&2
+    echo "$serve_panics" >&2
+    exit 1
+fi
+echo "test.sh: serve panic-clean lint OK"
+echo
+
 if ! command -v cargo >/dev/null 2>&1; then
-    echo "test.sh: cargo not found — docs lint only (tier-1 build/tests need a Rust toolchain)" >&2
+    echo "test.sh: cargo not found — lints only (tier-1 build/tests need a Rust toolchain)" >&2
     exit 0
 fi
 
 cd "$ROOT/rust"
 cargo build --release
 cargo test -q "$@"
+
+# Fault-injection sweep gate (always on, surrogate backend): the bench
+# must report bit-identical replies with a fault schedule injected
+# into its uncached arm, or the supervision layer regressed.
+echo
+echo "test.sh: fault-injection sweep (gs serve-bench --faults)"
+# Small batches + a short fault list keep the plan horizon (distinct
+# keys / max_batch) comfortably above the fault count for any Zipf
+# draw.
+sweep_out=$(cargo run --release -q -- serve-bench \
+    --dataset mag --size 400 --requests 600 --max-batch 8 \
+    --faults "panics=1,transient=1,slow=1,slow_ms=2")
+printf '%s\n' "$sweep_out" | tail -n 6
+if ! printf '%s\n' "$sweep_out" | grep -q "bit-identical across arms + repeats: true"; then
+    echo "test.sh: fault sweep FAILED — faulted replies diverged" >&2
+    exit 1
+fi
 
 if [ -e "$ROOT/artifacts" ]; then
     echo "test.sh: OK (artifacts/ present — gated tests executed)"
