@@ -336,6 +336,37 @@ fn main() {
         }
     }
 
+    // ---- disabled-tracing overhead --------------------------------------
+    // The obs contract (docs/OBSERVABILITY.md): an un-traced run pays
+    // one relaxed atomic load per span!/event! site and never
+    // evaluates field expressions.  Pin the per-site cost, then bound
+    // the worst-case per-batch overhead (~4 sites fire per served
+    // batch: dispatch, forward, reply, queue timing) against the
+    // measured 32-seed forward — it must stay under 1%.
+    {
+        graphstorm::obs::trace::set_enabled(false);
+        let iters = 1_000_000u64;
+        let t0 = Instant::now();
+        for i in 0..iters {
+            let _s = graphstorm::span!("bench.disabled", i = i);
+            graphstorm::event!("bench.disabled.event", i = i);
+            std::hint::black_box(&_s);
+        }
+        let ns_per_site = t0.elapsed().as_secs_f64() * 1e9 / (2.0 * iters as f64);
+        let overhead = 4.0 * ns_per_site / (fwd_ms * 1e6);
+        println!(
+            "disabled span/event               {ns_per_site:>9.2} ns/site   ({:.5}% of a batch forward)",
+            overhead * 100.0
+        );
+        results.push(("disabled_span_ns".into(), ns_per_site));
+        results.push(("disabled_span_overhead_frac".into(), overhead));
+        assert!(
+            overhead < 0.01,
+            "disabled tracing must cost < 1% of a batch forward (got {:.3}%)",
+            overhead * 100.0
+        );
+    }
+
     std::fs::remove_dir_all(&tmp).ok();
     write_json(&results);
 }

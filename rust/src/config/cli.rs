@@ -67,6 +67,18 @@ const PREFETCH: Flag = Flag {
     path: "loader.prefetch",
     help: "batches built ahead per worker",
 };
+const TRACE: Flag = Flag {
+    name: "trace",
+    takes_value: true,
+    path: "obs.trace",
+    help: "write a JSONL span/event trace here (docs/OBSERVABILITY.md)",
+};
+const STATS: Flag = Flag {
+    name: "stats",
+    takes_value: false,
+    path: "obs.stats",
+    help: "print the metrics-registry table at end of run",
+};
 const ARCH_TASK: Flag =
     Flag { name: "arch", takes_value: true, path: "task.arch", help: "rgcn|gcn|sage|gat|rgat|hgt" };
 const EPOCHS: Flag =
@@ -89,6 +101,14 @@ pub const COMMANDS: &[Cmd] = &[
                 path: "#dump",
                 help: "write the fully-resolved config JSON to this path",
             },
+            Flag {
+                name: "report",
+                takes_value: true,
+                path: "obs.report",
+                help: "write the pipeline outcome (stage timings, metrics) as JSON here",
+            },
+            TRACE,
+            STATS,
             SET,
         ],
     },
@@ -146,6 +166,8 @@ pub const COMMANDS: &[Cmd] = &[
             },
             NUM_WORKERS,
             PREFETCH,
+            TRACE,
+            STATS,
             SET,
         ],
     },
@@ -176,6 +198,8 @@ pub const COMMANDS: &[Cmd] = &[
             },
             NUM_WORKERS,
             PREFETCH,
+            TRACE,
+            STATS,
             SET,
         ],
     },
@@ -200,6 +224,8 @@ pub const COMMANDS: &[Cmd] = &[
             },
             NUM_WORKERS,
             PREFETCH,
+            TRACE,
+            STATS,
             SET,
         ],
     },
@@ -233,6 +259,8 @@ pub const COMMANDS: &[Cmd] = &[
             },
             NUM_WORKERS,
             PREFETCH,
+            TRACE,
+            STATS,
             SET,
         ],
     },
@@ -253,6 +281,8 @@ pub const COMMANDS: &[Cmd] = &[
             Flag { name: "ntype", takes_value: true, path: "infer.ntype", help: "node type (default: target)" },
             NUM_WORKERS,
             PREFETCH,
+            TRACE,
+            STATS,
             SET,
         ],
     },
@@ -322,6 +352,8 @@ pub const COMMANDS: &[Cmd] = &[
                 path: "serve.max_worker_restarts",
                 help: "worker restarts before degraded mode",
             },
+            TRACE,
+            STATS,
             SET,
         ],
     },
@@ -334,6 +366,8 @@ pub fn find_command(name: &str) -> Result<&'static Cmd> {
     }
     let mut names: Vec<&str> = COMMANDS.iter().map(|c| c.name).collect();
     names.push("smoke");
+    names.push("stats");
+    names.push("trace-check");
     names.push("help");
     Err(anyhow!(
         "unknown command '{name}'{}; run 'gs help' for usage",
@@ -447,6 +481,8 @@ pub fn help_text() -> String {
         }
     }
     s.push_str("  gs smoke          runtime sanity check (artifacts + PJRT)\n");
+    s.push_str("  gs stats PATH     render a metrics snapshot JSON (--report output) as a table\n");
+    s.push_str("  gs trace-check P  validate a --trace JSONL file against the trace schema\n");
     s
 }
 
@@ -536,6 +572,22 @@ mod tests {
     fn unknown_command_suggests() {
         let e = find_command("trian-nc").unwrap_err().to_string();
         assert!(e.contains("did you mean 'train-nc'"), "{e}");
+        let e = find_command("stat").unwrap_err().to_string();
+        assert!(e.contains("did you mean 'stats'"), "{e}");
+    }
+
+    #[test]
+    fn obs_flags_set_obs_config() {
+        let cmd = find_command("serve-bench").unwrap();
+        let cfg =
+            build_config(cmd, &argv(&["--trace", "t.jsonl", "--stats", "--requests", "50"]))
+                .unwrap();
+        assert_eq!(cfg.obs.trace.as_deref(), Some("t.jsonl"));
+        assert!(cfg.obs.stats);
+        assert_eq!(cfg.serve.as_ref().unwrap().requests, 50);
+        // Without the flags, obs stays at its all-off default.
+        let cfg = build_config(cmd, &argv(&[])).unwrap();
+        assert_eq!(cfg.obs, crate::config::ObsCfg::default());
     }
 
     #[test]
@@ -579,6 +631,8 @@ mod tests {
                     "lr" => "0.004",
                     "num-workers" => "2",
                     "out" => "tmp_out",
+                    "trace" => "tmp_trace.jsonl",
+                    "report" => "tmp_report.json",
                     "save-model-path" => "tmp_model.gstf",
                     "conf" => "schema.json",
                     "dir" => ".",

@@ -114,6 +114,10 @@ fn take_str<'j>(ctx: &str, key: &str, v: &'j Json) -> Result<&'j str> {
     v.as_str().ok_or_else(|| anyhow!("{ctx}.{key} must be a string, got {}", type_name(v)))
 }
 
+fn take_bool(ctx: &str, key: &str, v: &Json) -> Result<bool> {
+    v.as_bool().ok_or_else(|| anyhow!("{ctx}.{key} must be a bool, got {}", type_name(v)))
+}
+
 fn type_name(v: &Json) -> &'static str {
     match v {
         Json::Null => "null",
@@ -1241,12 +1245,98 @@ impl ServeCfg {
     }
 }
 
+// ------------------------------------------------------------------ obs
+
+/// Observability knobs (`obs` top-level object; CLI `--trace`,
+/// `--stats`, `--report`).  Not a pipeline stage — these never change
+/// what a run computes, only what it records about itself
+/// (docs/OBSERVABILITY.md).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ObsCfg {
+    /// JSONL trace output path (`--trace PATH`); tracing stays
+    /// disabled when unset.
+    pub trace: Option<String>,
+    /// chrome://tracing JSON-array export path.
+    pub chrome_trace: Option<String>,
+    /// Print the metrics-registry table at end of run (`--stats`).
+    pub stats: bool,
+    /// Write the `PipelineOutcome` report JSON here (`--report PATH`).
+    pub report: Option<String>,
+}
+
+impl ObsCfg {
+    const KEYS: &'static [&'static str] = &["trace", "chrome_trace", "stats", "report"];
+
+    fn from_json(v: &Json) -> Result<ObsCfg> {
+        let m = stage_obj("obs", v)?;
+        let mut c = ObsCfg::default();
+        for (k, v) in m {
+            match k.as_str() {
+                "trace" => c.trace = Some(take_str("obs", "trace", v)?.to_string()),
+                "chrome_trace" => {
+                    c.chrome_trace = Some(take_str("obs", "chrome_trace", v)?.to_string())
+                }
+                "stats" => c.stats = take_bool("obs", "stats", v)?,
+                "report" => c.report = Some(take_str("obs", "report", v)?.to_string()),
+                _ => return Err(unknown_key("obs", k, Self::KEYS)),
+            }
+        }
+        Ok(c)
+    }
+
+    /// Only set keys are emitted, and `RunConfig::to_json` skips the
+    /// whole object at defaults — so pre-obs configs and the golden
+    /// pipeline fixtures round-trip byte-identically.
+    fn to_json(&self) -> Json {
+        let mut pairs = Vec::new();
+        if let Some(t) = &self.trace {
+            pairs.push(("trace", Json::from(t.as_str())));
+        }
+        if let Some(t) = &self.chrome_trace {
+            pairs.push(("chrome_trace", Json::from(t.as_str())));
+        }
+        if self.stats {
+            pairs.push(("stats", Json::Bool(true)));
+        }
+        if let Some(r) = &self.report {
+            pairs.push(("report", Json::from(r.as_str())));
+        }
+        obj(pairs)
+    }
+
+    fn validate(&self) -> Result<()> {
+        for (k, v) in
+            [("trace", &self.trace), ("chrome_trace", &self.chrome_trace), ("report", &self.report)]
+        {
+            if let Some(p) = v {
+                if p.is_empty() {
+                    bail!("obs.{k} must be a non-empty path");
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The config schema version this build reads and writes.  Version 1
+/// is the pre-fault-tolerance, pre-obs key set; version 2 added the
+/// `serve` supervision keys (`deadline_ms`, `max_retries`,
+/// `queue_depth`, `max_worker_restarts`, `faults`) and the `obs`
+/// object.  Configs may omit `conf_version` (any-version keys only),
+/// but a declared version is validated strictly: v1 configs using v2
+/// keys get a migration error naming the offending keys, and versions
+/// newer than this build are rejected outright.
+pub const CONF_VERSION: u64 = 2;
+
 // ------------------------------------------------------------ RunConfig
 
 /// A whole declared run: which stages execute and with what knobs.
 /// This is the single source of truth for every stage default.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunConfig {
+    /// Declared schema version (see [`CONF_VERSION`]); `None` means
+    /// "whatever this build reads" and is pinned by [`resolved`].
+    pub conf_version: Option<u64>,
     pub seed: u64,
     pub loader: LoaderCfg,
     pub data: DataCfg,
@@ -1258,11 +1348,13 @@ pub struct RunConfig {
     pub multi: Option<MultiTaskCfg>,
     pub infer: Option<InferCfg>,
     pub serve: Option<ServeCfg>,
+    pub obs: ObsCfg,
 }
 
 impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
+            conf_version: None,
             seed: 7,
             loader: LoaderCfg::default(),
             data: DataCfg::default(),
@@ -1272,12 +1364,25 @@ impl Default for RunConfig {
             multi: None,
             infer: None,
             serve: None,
+            obs: ObsCfg::default(),
         }
     }
 }
 
-const TOP_KEYS: &[&str] =
-    &["seed", "loader", "data", "partition", "lm", "task", "tasks", "encoder", "infer", "serve"];
+const TOP_KEYS: &[&str] = &[
+    "conf_version",
+    "seed",
+    "loader",
+    "data",
+    "partition",
+    "lm",
+    "task",
+    "tasks",
+    "encoder",
+    "infer",
+    "serve",
+    "obs",
+];
 
 impl RunConfig {
     pub fn from_json(doc: &Json) -> Result<RunConfig> {
@@ -1289,6 +1394,9 @@ impl RunConfig {
         let mut tasks_doc: Option<&Json> = None;
         for (k, v) in m {
             match k.as_str() {
+                "conf_version" => {
+                    c.conf_version = Some(take_u64("run config", "conf_version", v)?)
+                }
                 "seed" => c.seed = take_u64("run config", "seed", v)?,
                 "loader" => c.loader = LoaderCfg::from_json(v)?,
                 "data" => c.data = DataCfg::from_json(v)?,
@@ -1299,6 +1407,7 @@ impl RunConfig {
                 "encoder" => enc_doc = Some(v),
                 "infer" => c.infer = Some(InferCfg::from_json(v)?),
                 "serve" => c.serve = Some(ServeCfg::from_json(v)?),
+                "obs" => c.obs = ObsCfg::from_json(v)?,
                 _ => return Err(unknown_key("run config", k, TOP_KEYS)),
             }
         }
@@ -1337,8 +1446,56 @@ impl RunConfig {
         Self::parse_str(&text).with_context(|| format!("in run config {}", path.display()))
     }
 
+    /// The version-2-only knobs this config actually uses: the `serve`
+    /// supervision keys at non-default values, plus any `obs` key.
+    /// Presence in the source document is gone by the time we have a
+    /// typed config, so "uses" means "differs from the default" — the
+    /// only case where declaring v1 would change behavior.
+    fn v2_keys_in_use(&self) -> Vec<&'static str> {
+        let mut used = Vec::new();
+        if let Some(s) = &self.serve {
+            let d = ServeCfg::default();
+            for (key, differs) in [
+                ("serve.faults", s.faults != d.faults),
+                ("serve.deadline_ms", s.deadline_ms != d.deadline_ms),
+                ("serve.max_retries", s.max_retries != d.max_retries),
+                ("serve.queue_depth", s.queue_depth != d.queue_depth),
+                ("serve.max_worker_restarts", s.max_worker_restarts != d.max_worker_restarts),
+            ] {
+                if differs {
+                    used.push(key);
+                }
+            }
+        }
+        if self.obs != ObsCfg::default() {
+            used.push("obs");
+        }
+        used
+    }
+
     /// Cross-stage consistency checks (per-stage checks run too).
     pub fn validate(&self) -> Result<()> {
+        match self.conf_version {
+            None => {}
+            Some(0) => bail!("conf_version must be >= 1 (this build writes {CONF_VERSION})"),
+            Some(v) if v > CONF_VERSION => bail!(
+                "conf_version {v} is newer than this build (supports {CONF_VERSION}); \
+                 upgrade gs or lower conf_version"
+            ),
+            Some(1) => {
+                let used = self.v2_keys_in_use();
+                if !used.is_empty() {
+                    bail!(
+                        "conf_version 1 config uses version-2 keys: {}; migrate by setting \
+                         \"conf_version\": 2 (the keys' semantics are unchanged — the version \
+                         marker is the only edit)",
+                        used.join(", ")
+                    );
+                }
+            }
+            Some(_) => {}
+        }
+        self.obs.validate()?;
         self.loader.validate()?;
         self.data.validate()?;
         self.partition.validate()?;
@@ -1385,6 +1542,7 @@ impl RunConfig {
     /// worker counts resolved, engine archs inherited from the task.
     pub fn resolved(&self) -> RunConfig {
         let mut c = self.clone();
+        c.conf_version = Some(CONF_VERSION);
         c.loader.workers = Workers::Fixed(c.loader.resolve_workers());
         let task_arch = c
             .task
@@ -1411,6 +1569,9 @@ impl RunConfig {
             ("data", self.data.to_json()),
             ("partition", self.partition.to_json()),
         ];
+        if let Some(v) = self.conf_version {
+            pairs.push(("conf_version", Json::from(v as usize)));
+        }
         if let Some(lm) = &self.lm {
             pairs.push(("lm", lm.to_json()));
         }
@@ -1426,6 +1587,11 @@ impl RunConfig {
         }
         if let Some(s) = &self.serve {
             pairs.push(("serve", s.to_json()));
+        }
+        // Omitted entirely at defaults: pre-obs configs and the golden
+        // pipeline fixtures round-trip byte-identically.
+        if self.obs != ObsCfg::default() {
+            pairs.push(("obs", self.obs.to_json()));
         }
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
@@ -1785,6 +1951,64 @@ mod tests {
         // A typo'd entry key through --set still dies in validation.
         apply_set(&mut doc, "tasks.0.wieght=9").unwrap();
         assert!(RunConfig::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn conf_version_gates_v2_keys() {
+        // Unversioned and v2 configs accept the v2 keys.
+        assert!(RunConfig::parse_str(r#"{"serve": {"deadline_ms": 5}}"#).is_ok());
+        assert!(
+            RunConfig::parse_str(r#"{"conf_version": 2, "serve": {"deadline_ms": 5}}"#).is_ok()
+        );
+        // A declared v1 config using v2-only keys gets a migration
+        // error naming every offending key.
+        let e = RunConfig::parse_str(
+            r#"{"conf_version": 1, "serve": {"deadline_ms": 5, "queue_depth": 4}}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("serve.deadline_ms") && e.contains("serve.queue_depth"), "{e}");
+        assert!(e.contains("conf_version"), "{e}");
+        let e = RunConfig::parse_str(r#"{"conf_version": 1, "obs": {"stats": true}}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("version-2 keys: obs"), "{e}");
+        // A clean v1 config still parses (v2 keys at defaults count as
+        // unused — presence is gone after typing, values are what
+        // matter).
+        assert!(RunConfig::parse_str(r#"{"conf_version": 1, "serve": {"requests": 10}}"#).is_ok());
+        assert!(RunConfig::parse_str(r#"{"conf_version": 1, "serve": {"max_retries": 2}}"#).is_ok());
+        // Version 0 and future versions are rejected outright.
+        assert!(RunConfig::parse_str(r#"{"conf_version": 0}"#).is_err());
+        let e = RunConfig::parse_str(r#"{"conf_version": 9}"#).unwrap_err().to_string();
+        assert!(e.contains("newer than this build"), "{e}");
+        // resolved() pins the current version; still a fixed point.
+        let r = RunConfig::parse_str("{}").unwrap().resolved();
+        assert_eq!(r.conf_version, Some(CONF_VERSION));
+        let back = RunConfig::parse_str(&r.to_json().to_string_pretty()).unwrap();
+        assert_eq!(r, back);
+        assert_eq!(back.resolved(), back);
+        // An unversioned config serializes without the field at all.
+        assert!(RunConfig::default().to_json().get("conf_version").is_none());
+    }
+
+    #[test]
+    fn obs_keys_parse_and_roundtrip() {
+        let c = RunConfig::parse_str(r#"{"obs": {"trace": "t.jsonl", "stats": true}}"#).unwrap();
+        assert_eq!(c.obs.trace.as_deref(), Some("t.jsonl"));
+        assert!(c.obs.stats);
+        assert!(c.obs.chrome_trace.is_none() && c.obs.report.is_none());
+        let back = RunConfig::parse_str(&c.to_json().to_string_pretty()).unwrap();
+        assert_eq!(c, back);
+        // Default obs is invisible in the serialized form — golden
+        // fixtures and pre-obs configs stay byte-identical.
+        assert!(RunConfig::default().to_json().get("obs").is_none());
+        // Typos suggest; type and value errors are hard.
+        let e = RunConfig::parse_str(r#"{"obs": {"trce": "x"}}"#).unwrap_err().to_string();
+        assert!(e.contains("did you mean 'trace'"), "{e}");
+        assert!(RunConfig::parse_str(r#"{"obs": {"stats": "yes"}}"#).is_err());
+        assert!(RunConfig::parse_str(r#"{"obs": {"trace": ""}}"#).is_err());
+        assert!(RunConfig::parse_str(r#"{"obs": 3}"#).is_err());
     }
 
     #[test]

@@ -9,11 +9,13 @@
 //! the equivalent multi-command sequence (covered by
 //! `tests/config.rs`).
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use super::{
     DataSource, Dataset, LmMode, PartMethod, PartitionCfg, RunConfig, TaskKind,
 };
+use crate::obs::metrics;
+use crate::util::json::{obj, Json};
 use crate::datagen::{self, amazon, mag, scale_free};
 use crate::dataloader::GsDataset;
 use crate::graph::{GraphStats, HeteroGraph};
@@ -48,6 +50,124 @@ pub struct PipelineOutcome {
     /// Wall-clock seconds per executed stage, in execution order
     /// (`data+partition` is one entry: construction binds them).
     pub stage_secs: Vec<(String, f64)>,
+}
+
+impl PipelineOutcome {
+    /// The `--report PATH` JSON: stage timings, per-stage reports and
+    /// the end-of-run metrics-registry snapshot in one machine-readable
+    /// document (`gs stats PATH` renders the `metrics` sub-object).
+    pub fn to_json(&self) -> Json {
+        fn f32s(v: &[f32]) -> Json {
+            Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
+        }
+        fn closed_loop(s: &ClosedLoopStats) -> Json {
+            obj(vec![
+                ("requests", Json::from(s.requests)),
+                ("wall_s", Json::Num(s.wall_s)),
+                ("rps", Json::Num(s.rps)),
+                ("p50_us", Json::Num(s.p50_us)),
+                ("p99_us", Json::Num(s.p99_us)),
+                ("hit_rate", Json::Num(s.hit_rate)),
+                ("hits", Json::from(s.hits as usize)),
+                ("misses", Json::from(s.misses as usize)),
+                ("coalesced", Json::from(s.coalesced as usize)),
+                ("restarts", Json::from(s.restarts as usize)),
+                ("retries", Json::from(s.retries as usize)),
+                ("shed", Json::from(s.shed as usize)),
+                ("deadline_misses", Json::from(s.deadline_misses as usize)),
+            ])
+        }
+        let mut pairs = vec![(
+            "stage_secs",
+            Json::Arr(
+                self.stage_secs
+                    .iter()
+                    .map(|(n, s)| {
+                        obj(vec![("stage", Json::from(n.as_str())), ("secs", Json::Num(*s))])
+                    })
+                    .collect(),
+            ),
+        )];
+        if let Some(s) = &self.stats {
+            pairs.push((
+                "graph",
+                obj(vec![
+                    ("num_nodes", Json::from(s.num_nodes)),
+                    ("num_edges", Json::from(s.num_edges)),
+                    ("num_ntypes", Json::from(s.num_ntypes)),
+                    ("num_etypes", Json::from(s.num_etypes)),
+                ]),
+            ));
+        }
+        if let Some(r) = &self.nc {
+            pairs.push((
+                "nc",
+                obj(vec![
+                    ("epoch_losses", f32s(&r.epoch_losses)),
+                    ("val_acc", Json::Num(r.val_acc)),
+                    ("test_acc", Json::Num(r.test_acc)),
+                    ("steps", Json::from(r.steps)),
+                ]),
+            ));
+        }
+        if let Some(r) = &self.lp {
+            pairs.push((
+                "lp",
+                obj(vec![
+                    ("epoch_losses", f32s(&r.epoch_losses)),
+                    ("val_mrr", Json::Num(r.val_mrr)),
+                    ("test_mrr", Json::Num(r.test_mrr)),
+                    ("best_epoch", Json::from(r.best_epoch)),
+                    ("steps", Json::from(r.steps)),
+                ]),
+            ));
+        }
+        if let Some(mse) = self.distill_mse {
+            pairs.push(("distill_mse", Json::Num(mse as f64)));
+        }
+        if let Some(m) = &self.multi {
+            let mut mp = vec![
+                ("names", Json::Arr(m.names.iter().map(|n| Json::from(n.as_str())).collect())),
+                ("epoch_losses", Json::Arr(m.epoch_losses.iter().map(|l| f32s(l)).collect())),
+                ("steps", Json::Arr(m.steps.iter().map(|&s| Json::from(s)).collect())),
+            ];
+            if let Some(nc) = &m.nc {
+                mp.push(("val_acc", Json::Num(nc.val_acc)));
+                mp.push(("test_acc", Json::Num(nc.test_acc)));
+            }
+            if let Some(lp) = &m.lp {
+                mp.push(("val_mrr", Json::Num(lp.val_mrr)));
+                mp.push(("test_mrr", Json::Num(lp.test_mrr)));
+            }
+            if let Some(mse) = m.distill_mse {
+                mp.push(("distill_mse", Json::Num(mse as f64)));
+            }
+            pairs.push(("multi", obj(mp)));
+        }
+        if let Some(r) = &self.infer {
+            pairs.push((
+                "infer",
+                obj(vec![
+                    ("ntype", Json::from(r.ntype as usize)),
+                    ("rows", Json::from(r.rows)),
+                    ("dim", Json::from(r.dim)),
+                    ("shards", Json::from(r.shards.len())),
+                    ("secs", Json::Num(r.secs)),
+                ]),
+            ));
+        }
+        for (key, arm) in [
+            ("serve_uncached", &self.serve_uncached),
+            ("serve_warmed", &self.serve_warmed),
+            ("serve_refreshed", &self.serve_refreshed),
+        ] {
+            if let Some(s) = arm {
+                pairs.push((key, closed_loop(s)));
+            }
+        }
+        pairs.push(("metrics", metrics::snapshot()));
+        obj(pairs)
+    }
 }
 
 /// Executes the stages a [`RunConfig`] declares.
@@ -118,11 +238,18 @@ impl Pipeline {
     /// Run every declared stage in order.
     pub fn run(&self) -> Result<PipelineOutcome> {
         let cfg = &self.cfg;
+        // Arm tracing (iff a trace output is configured) and start this
+        // run's metrics epoch; the epilogue below drains both.
+        crate::obs::init(&cfg.obs);
+        metrics::reset();
         let mut out = PipelineOutcome::default();
         let mut timer = StageTimer::default();
 
         // ---- data + partition ------------------------------------------
-        let mut ds = timer.time("data+partition", || self.build_dataset())?;
+        let mut ds = timer.time("data+partition", || {
+            let _sp = crate::span!("pipeline.data+partition");
+            self.build_dataset()
+        })?;
         let s = ds.graph.stats();
         match &cfg.data.source {
             DataSource::Gen { dataset, .. } => println!(
@@ -151,6 +278,7 @@ impl Pipeline {
         if let Some(lmc) = &cfg.lm {
             let rt = rt.as_ref().expect("lm stage validated to need the runtime");
             timer.time("lm", || -> Result<()> {
+                let _sp = crate::span!("pipeline.lm");
                 let lm = LmTrainer::default();
                 let (_, st) = lm.pretrain_mlm(
                     rt,
@@ -179,6 +307,7 @@ impl Pipeline {
         if let Some(task) = &cfg.task {
             let rt = rt.as_ref().expect("task stage needs the runtime");
             timer.time(&format!("task({})", task.kind.name()), || -> Result<()> {
+            let _sp = crate::span!("pipeline.task", kind = task.kind.name());
             match task.kind {
                 TaskKind::Nc => {
                     let arch = &task.arch;
@@ -240,6 +369,7 @@ impl Pipeline {
             let rt = rt.as_ref().expect("tasks stage needs the runtime");
             let kinds: Vec<&str> = mc.tasks.iter().map(|t| t.kind.name()).collect();
             timer.time(&format!("tasks({})", kinds.join("+")), || -> Result<()> {
+                let _sp = crate::span!("pipeline.tasks", n = mc.tasks.len());
                 let trainer = MultiTaskTrainer::new(&mc.encoder.arch, mc.task_specs());
                 let report = trainer.fit(rt, &mut ds, &opts)?;
                 for (t, name) in report.names.iter().enumerate() {
@@ -268,6 +398,7 @@ impl Pipeline {
             // restate the default here.
             let arch = ic.arch.as_deref().expect("resolved() fills infer.arch");
             timer.time("infer", || -> Result<()> {
+            let _sp = crate::span!("pipeline.infer");
             let (engine, backend) = InferenceEngine::auto(&ds, arch, ic.out_dim, cfg.seed)?;
             let off = OfflineInference {
                 shard_size: ic.shard_size,
@@ -293,6 +424,7 @@ impl Pipeline {
         if let Some(sc) = &cfg.serve {
             let arch = sc.arch.as_deref().expect("resolved() fills serve.arch");
             timer.time("serve", || -> Result<()> {
+            let _sp = crate::span!("pipeline.serve", requests = sc.requests);
             let (engine, backend) = InferenceEngine::auto(&ds, arch, sc.out_dim, cfg.seed)?;
             let nt = ds.target_ntype as u32;
             let n_nodes = ds.graph.num_nodes[nt as usize];
@@ -378,6 +510,42 @@ impl Pipeline {
             let parts: Vec<String> =
                 out.stage_secs.iter().map(|(n, s)| format!("{n} {s:.2}s")).collect();
             println!("stage times: {}  (total {:.2}s)", parts.join(" | "), timer.total());
+        }
+
+        // ---- observability epilogue ------------------------------------
+        // Publish pipeline-level metrics, then emit whatever `obs.*`
+        // outputs the run configured (all off by default).
+        for (name, secs) in &out.stage_secs {
+            metrics::gauge_set(&format!("pipeline.stage_secs.{name}"), *secs);
+        }
+        let traffic = ds.engine.counters.snapshot();
+        metrics::counter_set("dist.local_elems", traffic.local_elems);
+        metrics::counter_set("dist.remote_elems", traffic.remote_elems);
+        metrics::counter_set("dist.remote_bytes", traffic.remote_bytes);
+        #[cfg(feature = "count-alloc")]
+        {
+            let (n, b) = crate::obs::alloc_counts();
+            metrics::counter_set("alloc.count", n);
+            metrics::counter_set("alloc.bytes", b);
+        }
+        if cfg.obs.stats {
+            print!("{}", metrics::render_table(&metrics::snapshot()));
+        }
+        if let Some(path) = &cfg.obs.report {
+            let mut body = out.to_json().to_string_pretty();
+            body.push('\n');
+            std::fs::write(path, body)
+                .with_context(|| format!("write pipeline report {path}"))?;
+            println!("pipeline report -> {path}");
+        }
+        let n = crate::obs::finish(&cfg.obs)?;
+        if n > 0 {
+            if let Some(p) = &cfg.obs.trace {
+                println!("trace: {n} events -> {p}");
+            }
+            if let Some(p) = &cfg.obs.chrome_trace {
+                println!("chrome trace: {n} events -> {p}");
+            }
         }
         Ok(out)
     }

@@ -47,7 +47,7 @@ pub const MAX_AUTO_WORKERS: usize = 16;
 pub fn autoscale_workers() -> usize {
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let n = cores.clamp(1, MAX_AUTO_WORKERS);
-    eprintln!("[loader] workers=auto -> {n} ({cores} cores, clamp [1, {MAX_AUTO_WORKERS}])");
+    crate::gs_info!("loader", "workers=auto -> {n} ({cores} cores, clamp [1, {MAX_AUTO_WORKERS}])");
     n
 }
 
@@ -130,9 +130,16 @@ where
     }
     if w <= 1 {
         // Serial path: same build/consume interleaving, no threads.
+        // Span names match the threaded path exactly, so a trace of
+        // the same workload has the same structure for any worker
+        // count — only timing and thread ids differ.
         let state = pool[0].get_or_insert_with(&mk_state);
         for (i, item) in items.iter().enumerate() {
-            let value = build(state, i, item)?;
+            let value = {
+                let _s = crate::span!("loader.build", idx = i);
+                build(state, i, item)?
+            };
+            let _s = crate::span!("loader.consume", idx = i);
             consume(i, value)?;
         }
         return Ok(());
@@ -151,7 +158,10 @@ where
             scope.spawn(move || {
                 let state = slot.get_or_insert_with(|| mk());
                 for (i, item) in items.iter().enumerate().skip(wi).step_by(w) {
-                    let out = bld(state, i, item);
+                    let out = {
+                        let _s = crate::span!("loader.build", idx = i);
+                        bld(state, i, item)
+                    };
                     let failed = out.is_err();
                     // A closed channel means the consumer is done (or
                     // bailed): stop building.
@@ -168,6 +178,7 @@ where
                     .recv()
                     .map_err(|_| anyhow!("prefetch worker {} exited early", i % w))?;
                 debug_assert_eq!(idx, i, "pipeline ordering violated");
+                let _s = crate::span!("loader.consume", idx = i);
                 consume(i, value?)?;
             }
             Ok(())

@@ -13,9 +13,16 @@
 //! with a suggestion.  `gs validate-conf` dry-runs a file and prints
 //! the fully-resolved config.  See docs/CONFIG.md for the schema.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 use graphstorm::config::{cli, Pipeline};
 use graphstorm::runtime::Runtime;
+
+// Allocation profiling (`gs ... --stats` reports alloc.count /
+// alloc.bytes) — opt-in because the hooks cost an atomic RMW per
+// allocation:  cargo build --release --features count-alloc
+#[cfg(feature = "count-alloc")]
+#[global_allocator]
+static GLOBAL: graphstorm::obs::CountingAlloc = graphstorm::obs::CountingAlloc;
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -33,6 +40,21 @@ fn main() -> Result<()> {
                 rt.client.platform_name(),
                 exe.spec.outputs.len()
             );
+        }
+        // Observability report commands (docs/OBSERVABILITY.md):
+        // render a metrics snapshot / validate a trace file.
+        "stats" => {
+            let Some(path) = rest.first() else {
+                bail!("usage: gs stats PATH (a metrics snapshot from --report or --stats)");
+            };
+            print!("{}", graphstorm::obs::metrics::render_file(path)?);
+        }
+        "trace-check" => {
+            let Some(path) = rest.first() else {
+                bail!("usage: gs trace-check PATH (a JSONL trace from --trace)");
+            };
+            let n = graphstorm::obs::validate_jsonl(path)?;
+            println!("{path}: {n} events, schema ok");
         }
         "validate-conf" => {
             let spec = cli::find_command("validate-conf")?;

@@ -1,0 +1,70 @@
+//! Counting allocator: wraps the system allocator and counts
+//! allocations + bytes requested.
+//!
+//! The type is always available (benches construct their own
+//! instances), but it only becomes the `gs` binary's global allocator
+//! under the `count-alloc` cargo feature (`src/main.rs`), because the
+//! counting hooks cost an atomic RMW per allocation:
+//!
+//! ```bash
+//! cargo run --release --features count-alloc -- run --conf F --stats
+//! ```
+//!
+//! With the feature on, the pipeline publishes `alloc.count` /
+//! `alloc.bytes` into the metrics registry at end of run — the
+//! allocation profile of a whole pipeline in one counter pair.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Total allocation calls (alloc + realloc) since process start.
+pub static ALLOCS: AtomicU64 = AtomicU64::new(0);
+/// Total bytes requested (alloc sizes + realloc new sizes).
+pub static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// `(allocations, bytes)` so far — `(0, 0)` unless a
+/// [`CountingAlloc`] is installed as the global allocator.
+pub fn alloc_counts() -> (u64, u64) {
+    (ALLOCS.load(Ordering::Relaxed), ALLOC_BYTES.load(Ordering::Relaxed))
+}
+
+/// System allocator with counting hooks.  Install with:
+///
+/// ```ignore
+/// #[global_allocator]
+/// static GLOBAL: CountingAlloc = CountingAlloc;
+/// ```
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_are_monotone() {
+        let (a0, b0) = alloc_counts();
+        // Without the feature these stay zero; with it they only grow.
+        let v: Vec<u8> = Vec::with_capacity(4096);
+        drop(v);
+        let (a1, b1) = alloc_counts();
+        assert!(a1 >= a0 && b1 >= b0);
+    }
+}

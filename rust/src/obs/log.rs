@@ -1,0 +1,118 @@
+//! Leveled structured logger: `gs_debug!` / `gs_info!` / `gs_warn!`
+//! print `[subsystem] message` lines to stderr, filtered by the
+//! `GS_LOG` environment variable (`debug` | `info` | `warn`; default
+//! `info`).
+//!
+//! This replaces the ad-hoc `eprintln!("[nc] ...")` calls that were
+//! scattered through the trainers and loader.  The line format is
+//! byte-identical to what those sites printed (same `[subsystem]`
+//! prefixes, same bodies), so anything grepping trainer output keeps
+//! working — the logger only adds the ability to silence it
+//! (`GS_LOG=warn`) or turn on debug detail (`GS_LOG=debug`).
+//!
+//! Every `gs_info!` line also lands in the trace as an instant event
+//! named `log.<level>` when tracing is enabled, so log lines line up
+//! with spans on the chrome://tracing timeline.
+
+use std::sync::OnceLock;
+
+/// Log severity, ordered `Debug < Info < Warn`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Debug => "debug",
+            Level::Info => "info",
+            Level::Warn => "warn",
+        }
+    }
+}
+
+/// The process log threshold, parsed from `GS_LOG` once (first use).
+/// Unknown values fall back to `info` — a typo must not silence
+/// warnings.
+pub fn level() -> Level {
+    static LEVEL: OnceLock<Level> = OnceLock::new();
+    *LEVEL.get_or_init(|| match std::env::var("GS_LOG").as_deref() {
+        Ok("debug") => Level::Debug,
+        Ok("warn") => Level::Warn,
+        _ => Level::Info,
+    })
+}
+
+/// Whether a message at `l` passes the threshold.
+#[inline]
+pub fn log_enabled(l: Level) -> bool {
+    l >= level()
+}
+
+/// Print one `[subsystem] message` line (the macro backend).
+pub fn log(l: Level, subsystem: &str, msg: std::fmt::Arguments<'_>) {
+    if !log_enabled(l) {
+        return;
+    }
+    eprintln!("[{subsystem}] {msg}");
+    if crate::obs::trace::enabled() {
+        crate::obs::trace::instant(
+            match l {
+                Level::Debug => "log.debug",
+                Level::Info => "log.info",
+                Level::Warn => "log.warn",
+            },
+            Vec::new(),
+        );
+    }
+}
+
+/// `[subsystem]`-prefixed debug line (shown only under `GS_LOG=debug`).
+#[macro_export]
+macro_rules! gs_debug {
+    ($sub:expr, $($arg:tt)*) => {
+        $crate::obs::log::log($crate::obs::log::Level::Debug, $sub, format_args!($($arg)*))
+    };
+}
+
+/// `[subsystem]`-prefixed info line (the default trainer/loader
+/// progress output; silence with `GS_LOG=warn`).
+#[macro_export]
+macro_rules! gs_info {
+    ($sub:expr, $($arg:tt)*) => {
+        $crate::obs::log::log($crate::obs::log::Level::Info, $sub, format_args!($($arg)*))
+    };
+}
+
+/// `[subsystem]`-prefixed warning line (always shown).
+#[macro_export]
+macro_rules! gs_warn {
+    ($sub:expr, $($arg:tt)*) => {
+        $crate::obs::log::log($crate::obs::log::Level::Warn, $sub, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order_and_default() {
+        assert!(Level::Debug < Level::Info && Level::Info < Level::Warn);
+        // Default threshold (no GS_LOG in the test env) is Info.
+        if std::env::var("GS_LOG").is_err() {
+            assert_eq!(level(), Level::Info);
+            assert!(log_enabled(Level::Warn));
+            assert!(log_enabled(Level::Info));
+            assert!(!log_enabled(Level::Debug));
+        }
+        assert_eq!(Level::Info.name(), "info");
+        // Smoke the macros (output goes to stderr; must not panic).
+        gs_debug!("test", "debug {}", 1);
+        gs_info!("test", "info {}", 2);
+        gs_warn!("test", "warn {}", 3);
+    }
+}

@@ -1,0 +1,315 @@
+//! Process-wide metrics registry: named counters, gauges and log₂
+//! histograms, snapshotable as JSON and renderable as a table.
+//!
+//! Naming convention (docs/OBSERVABILITY.md): dotted lower-case paths,
+//! `<subsystem>.<arm?>.<metric>` — e.g. `serve.warmed.hits`,
+//! `trainer.nc.epoch_loss`, `dist.remote_bytes`, `pipeline.stage.task_nc_secs`.
+//! Every subsystem publishes into this one registry so `gs stats` and
+//! the end-of-run summary see one flat namespace.
+//!
+//! Producers keep their own lock-free counters (`ServeMetrics`,
+//! `dist::TrafficCounters`, trainer reports) and publish here at stage
+//! boundaries — the registry is a reporting surface, not a hot-path
+//! data structure, so publishing costs nothing while a stage runs.
+//!
+//! [`closed_loop_snapshot`] is deliberately a **pure function** of a
+//! `ClosedLoopStats`: tests assert on its output without touching the
+//! global registry (which is shared across parallel test threads), and
+//! `run_serve_bench` publishes exactly that snapshot — so the registry
+//! counters match `ClosedLoopStats` by construction.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, MutexGuard};
+
+use anyhow::{bail, Context, Result};
+
+use crate::serve::ClosedLoopStats;
+use crate::util::json::Json;
+
+/// Log₂-bucketed histogram (non-atomic; the registry lock serializes
+/// updates — use `serve::LatencyHistogram` for hot-path recording and
+/// publish the summary here).
+#[derive(Debug, Clone)]
+pub struct HistData {
+    buckets: Vec<u64>,
+    count: u64,
+}
+
+impl HistData {
+    fn new() -> HistData {
+        HistData { buckets: vec![0; 64], count: 0 }
+    }
+
+    fn record(&mut self, v: u64) {
+        let b = (64 - v.leading_zeros()) as usize; // 0 -> bucket 0
+        self.buckets[b.min(63)] += 1;
+        self.count += 1;
+    }
+
+    fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (p * self.count as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (b, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= target {
+                return if b == 0 { 0.0 } else { (1u64 << (b - 1)) as f64 * 1.5 };
+            }
+        }
+        f64::MAX
+    }
+}
+
+/// One registered metric.
+#[derive(Debug, Clone)]
+pub enum Metric {
+    Counter(u64),
+    Gauge(f64),
+    Hist(HistData),
+}
+
+static REG: Mutex<BTreeMap<String, Metric>> = Mutex::new(BTreeMap::new());
+
+fn lock_reg() -> MutexGuard<'static, BTreeMap<String, Metric>> {
+    REG.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Add `delta` to counter `name` (registered on first use).
+pub fn counter_add(name: &str, delta: u64) {
+    let mut reg = lock_reg();
+    match reg.get_mut(name) {
+        Some(Metric::Counter(c)) => *c += delta,
+        _ => {
+            reg.insert(name.to_string(), Metric::Counter(delta));
+        }
+    }
+}
+
+/// Set counter `name` to an absolute value (publishing an externally
+/// maintained atomic).
+pub fn counter_set(name: &str, v: u64) {
+    lock_reg().insert(name.to_string(), Metric::Counter(v));
+}
+
+/// Set gauge `name`.
+pub fn gauge_set(name: &str, v: f64) {
+    lock_reg().insert(name.to_string(), Metric::Gauge(v));
+}
+
+/// Record one observation into histogram `name`.
+pub fn hist_record(name: &str, v: u64) {
+    let mut reg = lock_reg();
+    match reg.get_mut(name) {
+        Some(Metric::Hist(h)) => h.record(v),
+        _ => {
+            let mut h = HistData::new();
+            h.record(v);
+            reg.insert(name.to_string(), Metric::Hist(h));
+        }
+    }
+}
+
+/// Clear every registered metric (tests; fresh pipeline runs).
+pub fn reset() {
+    lock_reg().clear();
+}
+
+/// Sorted names of every registered metric.
+pub fn names() -> Vec<String> {
+    lock_reg().keys().cloned().collect()
+}
+
+fn metric_json(m: &Metric) -> Json {
+    match m {
+        Metric::Counter(c) => Json::Num(*c as f64),
+        Metric::Gauge(g) => Json::Num(if g.is_finite() { *g } else { 0.0 }),
+        Metric::Hist(h) => Json::Obj(BTreeMap::from([
+            ("count".to_string(), Json::Num(h.count as f64)),
+            ("p50".to_string(), Json::Num(h.percentile(0.50))),
+            ("p99".to_string(), Json::Num(h.percentile(0.99))),
+        ])),
+    }
+}
+
+/// JSON snapshot of the whole registry: `{name: value, ...}` with
+/// histograms as `{count, p50, p99}` objects.  Keys are sorted
+/// (BTreeMap), so snapshots of the same run are byte-stable.
+pub fn snapshot() -> Json {
+    let reg = lock_reg();
+    Json::Obj(reg.iter().map(|(k, m)| (k.clone(), metric_json(m))).collect())
+}
+
+/// Write [`snapshot`] to `path` (the `gs stats` input format).
+pub fn snapshot_to_file(path: &str) -> Result<()> {
+    let text = snapshot().to_string_pretty();
+    std::fs::write(path, text + "\n").with_context(|| format!("write metrics snapshot {path}"))
+}
+
+fn render_value(v: &Json) -> String {
+    match v {
+        Json::Num(n) if n.fract() == 0.0 && n.abs() < 9e15 => format!("{}", *n as i64),
+        Json::Num(n) => format!("{n:.3}"),
+        Json::Obj(m) => {
+            let f = |k: &str| m.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+            format!("count {} p50 {:.0} p99 {:.0}", f("count") as u64, f("p50"), f("p99"))
+        }
+        other => other.to_string_pretty(),
+    }
+}
+
+/// Render a snapshot (the [`snapshot`] JSON shape) as an aligned
+/// two-column table — the `gs stats` / `--stats` report.
+pub fn render_table(snap: &Json) -> String {
+    let Some(m) = snap.as_obj() else {
+        return String::from("(not a metrics snapshot: expected a JSON object)\n");
+    };
+    if m.is_empty() {
+        return String::from("(no metrics registered)\n");
+    }
+    let width = m.keys().map(|k| k.len()).max().unwrap_or(0);
+    let mut out = String::new();
+    for (k, v) in m {
+        out.push_str(&format!("{k:<width$}  {}\n", render_value(v)));
+    }
+    out
+}
+
+/// Load a snapshot file and render it (`gs stats PATH`).  Accepts
+/// either a bare [`snapshot`] object or a `--report` pipeline outcome
+/// (rendering its `metrics` sub-object).
+pub fn render_file(path: &str) -> Result<String> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("read metrics snapshot {path}"))?;
+    let snap = Json::parse(&text).with_context(|| format!("parse metrics snapshot {path}"))?;
+    if snap.as_obj().is_none() {
+        bail!("{path}: metrics snapshot must be a JSON object");
+    }
+    match snap.get("metrics") {
+        Some(m) if m.as_obj().is_some() => Ok(render_table(m)),
+        _ => Ok(render_table(&snap)),
+    }
+}
+
+/// Pure per-arm metrics snapshot of one closed-loop serve run: the
+/// exact name/value pairs `run_serve_bench` publishes for that arm
+/// under `serve.<arm>.` — counters first (pool-size-invariant except
+/// where timing-dependent, see docs/OBSERVABILITY.md), then derived
+/// gauges.  Pure so tests can assert equality with `ClosedLoopStats`
+/// without racing other tests for the global registry.
+pub fn closed_loop_snapshot(prefix: &str, s: &ClosedLoopStats) -> Vec<(String, Metric)> {
+    let c = |k: &str, v: u64| (format!("{prefix}.{k}"), Metric::Counter(v));
+    let g = |k: &str, v: f64| (format!("{prefix}.{k}"), Metric::Gauge(v));
+    vec![
+        c("coalesced", s.coalesced),
+        c("deadline_misses", s.deadline_misses),
+        c("hits", s.hits),
+        c("misses", s.misses),
+        c("requests", s.requests as u64),
+        c("restarts", s.restarts),
+        c("retries", s.retries),
+        c("shed", s.shed),
+        g("hit_rate", s.hit_rate),
+        g("p50_us", s.p50_us),
+        g("p99_us", s.p99_us),
+        g("rps", s.rps),
+        g("wall_s", s.wall_s),
+    ]
+}
+
+/// Publish a pre-built snapshot (e.g. [`closed_loop_snapshot`]) into
+/// the global registry.
+pub fn publish(entries: Vec<(String, Metric)>) {
+    let mut reg = lock_reg();
+    for (k, m) in entries {
+        reg.insert(k, m);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_hists_snapshot() {
+        // Unique prefix: the registry is global and tests run in
+        // parallel within this binary.
+        let p = "test.metrics_unit";
+        counter_add(&format!("{p}.c"), 2);
+        counter_add(&format!("{p}.c"), 3);
+        counter_set(&format!("{p}.abs"), 41);
+        gauge_set(&format!("{p}.g"), 1.5);
+        for v in [1u64, 2, 100, 100, 100] {
+            hist_record(&format!("{p}.h"), v);
+        }
+        let snap = snapshot();
+        assert_eq!(snap.get(&format!("{p}.c")).and_then(Json::as_f64), Some(5.0));
+        assert_eq!(snap.get(&format!("{p}.abs")).and_then(Json::as_f64), Some(41.0));
+        assert_eq!(snap.get(&format!("{p}.g")).and_then(Json::as_f64), Some(1.5));
+        let h = snap.get(&format!("{p}.h")).unwrap();
+        assert_eq!(h.get("count").and_then(Json::as_f64), Some(5.0));
+        assert!(h.get("p99").and_then(Json::as_f64).unwrap() >= 64.0);
+        let table = render_table(&snap);
+        assert!(table.contains(&format!("{p}.c")));
+        assert!(table.lines().any(|l| l.ends_with(" 5")));
+    }
+
+    #[test]
+    fn closed_loop_snapshot_is_exact_and_pure() {
+        let s = ClosedLoopStats {
+            requests: 100,
+            wall_s: 0.5,
+            rps: 200.0,
+            p50_us: 10.0,
+            p99_us: 90.0,
+            hit_rate: 0.25,
+            hits: 25,
+            misses: 75,
+            coalesced: 3,
+            restarts: 1,
+            retries: 2,
+            shed: 0,
+            deadline_misses: 0,
+        };
+        let snap = closed_loop_snapshot("serve.test", &s);
+        let get = |k: &str| {
+            snap.iter()
+                .find(|(n, _)| n == &format!("serve.test.{k}"))
+                .map(|(_, m)| m.clone())
+                .unwrap()
+        };
+        for (k, want) in
+            [("hits", 25u64), ("misses", 75), ("coalesced", 3), ("restarts", 1), ("retries", 2)]
+        {
+            match get(k) {
+                Metric::Counter(v) => assert_eq!(v, want, "{k}"),
+                other => panic!("{k} is not a counter: {other:?}"),
+            }
+        }
+        match get("hit_rate") {
+            Metric::Gauge(v) => assert_eq!(v, 0.25),
+            other => panic!("hit_rate is not a gauge: {other:?}"),
+        }
+        // Names are sorted-within-kind and stable.
+        let names: Vec<&str> = snap.iter().map(|(n, _)| n.as_str()).collect();
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted, "snapshot names must come out sorted");
+    }
+
+    #[test]
+    fn render_file_round_trip() {
+        let p = "test.metrics_file";
+        counter_set(&format!("{p}.total"), 7);
+        let dir = std::env::temp_dir().join(format!("gs_metrics_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("snap.json");
+        let ps = path.to_str().unwrap();
+        snapshot_to_file(ps).unwrap();
+        let rendered = render_file(ps).unwrap();
+        assert!(rendered.contains(&format!("{p}.total")));
+        assert!(render_file(dir.join("missing.json").to_str().unwrap()).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

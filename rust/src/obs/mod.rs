@@ -1,0 +1,69 @@
+//! Unified observability layer: structured tracing, a process-wide
+//! metrics registry, a leveled logger and allocation counters — the
+//! telemetry substrate for both training and serving
+//! (docs/OBSERVABILITY.md).
+//!
+//! * [`trace`] — scoped spans (`span!("serve.batch.forward", seq)`)
+//!   and instant events (`event!`) recorded into per-thread buffers
+//!   and drained to a JSONL trace (`obs.trace` / `--trace PATH`) plus
+//!   a chrome://tracing export (`obs.chrome_trace`).  One relaxed
+//!   atomic load when disabled; determinism-neutral when enabled.
+//! * [`metrics`] — one registry of named counters/gauges/histograms
+//!   that serving (`ServeMetrics`, cache, supervision, refresh),
+//!   training (per-epoch loss/throughput), the distributed engine
+//!   (`TrafficCounters`) and the pipeline (`stage_secs`) all publish
+//!   into; snapshotable as JSON (`--stats`, `gs stats PATH`).
+//! * [`log`] — `gs_debug!`/`gs_info!`/`gs_warn!` leveled `[subsystem]`
+//!   lines filtered by `GS_LOG` (default `info`, byte-compatible with
+//!   the old ad-hoc `eprintln!` trainer output).
+//! * [`alloc`] — a counting allocator, installed for the `gs` binary
+//!   under the `count-alloc` cargo feature.
+//!
+//! Lifecycle: `config::Pipeline::run` calls [`init`] before its first
+//! stage (enabling the tracer iff a trace output is configured — it
+//! never *disables* a tracer something else turned on) and [`finish`]
+//! after its last, which drains the trace to the configured files.
+//! Everything is off by default: a run without `obs.*` keys records
+//! nothing and pays one atomic load per instrumentation site
+//! (`benches/serve.rs` pins the disabled cost).
+
+pub mod alloc;
+pub mod log;
+pub mod metrics;
+pub mod trace;
+
+pub use alloc::{alloc_counts, CountingAlloc};
+pub use log::{log_enabled, Level};
+pub use metrics::{closed_loop_snapshot, Metric};
+pub use trace::{validate_jsonl, FieldValue, SpanGuard, TraceEvent};
+
+use anyhow::Result;
+
+use crate::config::ObsCfg;
+
+/// Arm the observability layer for a pipeline run: enables the tracer
+/// iff `cfg` names a trace output.  Enable-only by design — parallel
+/// tests and nested runs must never turn off a tracer they didn't
+/// start.
+pub fn init(cfg: &ObsCfg) {
+    if cfg.trace.is_some() || cfg.chrome_trace.is_some() {
+        trace::set_enabled(true);
+    }
+}
+
+/// Drain recorded trace events to the configured outputs (no-op when
+/// no trace output is configured).  Returns the number of events
+/// written.
+pub fn finish(cfg: &ObsCfg) -> Result<usize> {
+    if cfg.trace.is_none() && cfg.chrome_trace.is_none() {
+        return Ok(0);
+    }
+    let events = trace::drain();
+    if let Some(path) = &cfg.trace {
+        trace::write_jsonl(path, &events)?;
+    }
+    if let Some(path) = &cfg.chrome_trace {
+        trace::write_chrome(path, &events)?;
+    }
+    Ok(events.len())
+}

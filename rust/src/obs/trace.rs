@@ -1,0 +1,543 @@
+//! Scoped span/event tracer: `span!`/`event!` record into per-thread
+//! buffers and drain to a JSONL trace file at end of run.
+//!
+//! Design goals, in order:
+//!
+//! 1. **Free when off.**  The fast path is one relaxed atomic load
+//!    (`enabled()`); the `span!`/`event!` macros do not evaluate their
+//!    field expressions, allocate, or touch thread-locals when tracing
+//!    is disabled (`benches/serve.rs` pins the disabled cost).
+//! 2. **Determinism-neutral.**  Recording never takes a lock on a hot
+//!    path (events buffer thread-locally and flush in amortized
+//!    batches), never consumes RNG state, and never changes control
+//!    flow — `rust/tests/obs.rs` asserts replies are bit-identical
+//!    with tracing on and off.
+//! 3. **Structurally deterministic output.**  The drained event stream
+//!    is sorted by `(ts, tid, name)`, so two runs of the same workload
+//!    produce the same span names/fields modulo timestamps.
+//!
+//! One JSONL line per event, chrome://tracing "Trace Event Format"
+//! compatible (`ph: "X"` complete spans, `ph: "i"` instants, µs
+//! timestamps relative to process start):
+//!
+//! ```json
+//! {"name":"serve.batch.forward","ph":"X","pid":1,"tid":3,"ts":1042,"dur":187,"args":{"seq":7,"rows":32}}
+//! ```
+//!
+//! `obs.chrome_trace` writes the same events wrapped in a JSON array,
+//! loadable directly by chrome://tracing / Perfetto.  The schema is
+//! documented in docs/OBSERVABILITY.md and machine-checked by
+//! [`validate_jsonl`] (exposed as `gs trace-check`, gated in
+//! scripts/test.sh).
+
+use std::cell::RefCell;
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Typed span/event field value (`key=value` pairs in `args`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FieldValue {
+    U64(u64),
+    F64(f64),
+    Str(&'static str),
+}
+
+impl From<u64> for FieldValue {
+    fn from(v: u64) -> FieldValue {
+        FieldValue::U64(v)
+    }
+}
+impl From<u32> for FieldValue {
+    fn from(v: u32) -> FieldValue {
+        FieldValue::U64(v as u64)
+    }
+}
+impl From<usize> for FieldValue {
+    fn from(v: usize) -> FieldValue {
+        FieldValue::U64(v as u64)
+    }
+}
+impl From<f64> for FieldValue {
+    fn from(v: f64) -> FieldValue {
+        FieldValue::F64(v)
+    }
+}
+impl From<f32> for FieldValue {
+    fn from(v: f32) -> FieldValue {
+        FieldValue::F64(v as f64)
+    }
+}
+impl From<&'static str> for FieldValue {
+    fn from(v: &'static str) -> FieldValue {
+        FieldValue::Str(v)
+    }
+}
+impl From<bool> for FieldValue {
+    fn from(v: bool) -> FieldValue {
+        FieldValue::U64(v as u64)
+    }
+}
+
+/// One recorded complete span (`ph: "X"`) or instant event (`ph: "i"`).
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub name: &'static str,
+    pub tid: u64,
+    /// Microseconds since the tracer epoch (process-relative).
+    pub ts_us: u64,
+    pub dur_us: u64,
+    pub instant: bool,
+    pub fields: Vec<(&'static str, FieldValue)>,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SINK: Mutex<Vec<TraceEvent>> = Mutex::new(Vec::new());
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+/// Buffered thread-local events flush to the global sink every
+/// `FLUSH_AT` records (and on thread exit via `Drop`), so steady-state
+/// recording takes the sink lock ~once per thousand events.
+const FLUSH_AT: usize = 1024;
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Whether tracing is recording.  One relaxed load — the only cost a
+/// disabled `span!`/`event!` site pays.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn the tracer on or off.  Pins the epoch first so `ts` values are
+/// monotonic from the first enable.  Enabling is idempotent; the
+/// pipeline only ever *enables* (never disables a tracer some other
+/// component turned on).
+pub fn set_enabled(on: bool) {
+    let _ = epoch();
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+fn lock_sink() -> MutexGuard<'static, Vec<TraceEvent>> {
+    SINK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+struct LocalBuf {
+    events: Vec<TraceEvent>,
+}
+
+impl LocalBuf {
+    fn push(&mut self, ev: TraceEvent) {
+        self.events.push(ev);
+        if self.events.len() >= FLUSH_AT {
+            self.flush();
+        }
+    }
+
+    fn flush(&mut self) {
+        if !self.events.is_empty() {
+            lock_sink().append(&mut self.events);
+        }
+    }
+}
+
+impl Drop for LocalBuf {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+thread_local! {
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+    static LOCAL: RefCell<LocalBuf> = const { RefCell::new(LocalBuf { events: Vec::new() }) };
+}
+
+/// Stable small integer id for the current thread (assigned on first
+/// trace from that thread; `0` only during thread teardown).
+#[inline]
+pub fn current_tid() -> u64 {
+    TID.try_with(|t| *t).unwrap_or(0)
+}
+
+fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+fn record(ev: TraceEvent) {
+    let mut ev = Some(ev);
+    let pushed = LOCAL
+        .try_with(|l| {
+            if let (Ok(mut buf), Some(e)) = (l.try_borrow_mut(), ev.take()) {
+                buf.push(e);
+                true
+            } else {
+                false
+            }
+        })
+        .unwrap_or(false);
+    if !pushed {
+        // Thread-local destroyed (thread teardown) — record directly.
+        if let Some(e) = ev.take() {
+            lock_sink().push(e);
+        }
+    }
+}
+
+/// Record an instant event (`ph: "i"`).  Prefer the [`event!`] macro,
+/// which skips field evaluation when tracing is off.
+pub fn instant(name: &'static str, fields: Vec<(&'static str, FieldValue)>) {
+    if !enabled() {
+        return;
+    }
+    record(TraceEvent { name, tid: current_tid(), ts_us: now_us(), dur_us: 0, instant: true, fields });
+}
+
+/// RAII guard for a complete span: records `(start, duration)` when
+/// dropped.  Constructed by the [`span!`] macro — [`SpanGuard::off`]
+/// is the zero-cost disabled arm.
+pub struct SpanGuard {
+    active: Option<(&'static str, u64, Vec<(&'static str, FieldValue)>)>,
+}
+
+impl SpanGuard {
+    /// Disabled guard: no allocation, nothing recorded on drop.
+    #[inline]
+    pub fn off() -> SpanGuard {
+        SpanGuard { active: None }
+    }
+
+    /// Start a span now (caller has already checked [`enabled`]).
+    pub fn begin_on(name: &'static str, fields: Vec<(&'static str, FieldValue)>) -> SpanGuard {
+        SpanGuard { active: Some((name, now_us(), fields)) }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some((name, start, fields)) = self.active.take() {
+            if !enabled() {
+                return; // tracing turned off mid-span: drop silently
+            }
+            let end = now_us();
+            record(TraceEvent {
+                name,
+                tid: current_tid(),
+                ts_us: start,
+                dur_us: end.saturating_sub(start),
+                instant: false,
+                fields,
+            });
+        }
+    }
+}
+
+/// Open a scoped span; the returned guard records it on drop.
+///
+/// ```ignore
+/// let _s = span!("serve.batch.forward", seq, rows = seeds.len());
+/// ```
+///
+/// Fields are `key = expr` pairs (bare `ident` is shorthand for
+/// `ident = ident`); values coerce through `FieldValue::from`
+/// (unsigned ints, floats, `&'static str`, bool).  When tracing is
+/// disabled the field expressions are **not evaluated**.
+#[macro_export]
+macro_rules! span {
+    ($name:expr $(,)?) => {
+        if $crate::obs::trace::enabled() {
+            $crate::obs::trace::SpanGuard::begin_on($name, Vec::new())
+        } else {
+            $crate::obs::trace::SpanGuard::off()
+        }
+    };
+    ($name:expr, $($k:ident = $v:expr),+ $(,)?) => {
+        if $crate::obs::trace::enabled() {
+            $crate::obs::trace::SpanGuard::begin_on(
+                $name,
+                vec![$((stringify!($k), $crate::obs::trace::FieldValue::from($v))),+],
+            )
+        } else {
+            $crate::obs::trace::SpanGuard::off()
+        }
+    };
+    ($name:expr, $($k:ident),+ $(,)?) => {
+        $crate::span!($name, $($k = $k),+)
+    };
+}
+
+/// Record an instant event (a point in time, no duration).  Same field
+/// syntax and disabled-cost contract as [`span!`].
+#[macro_export]
+macro_rules! event {
+    ($name:expr $(,)?) => {
+        if $crate::obs::trace::enabled() {
+            $crate::obs::trace::instant($name, Vec::new());
+        }
+    };
+    ($name:expr, $($k:ident = $v:expr),+ $(,)?) => {
+        if $crate::obs::trace::enabled() {
+            $crate::obs::trace::instant(
+                $name,
+                vec![$((stringify!($k), $crate::obs::trace::FieldValue::from($v))),+],
+            );
+        }
+    };
+    ($name:expr, $($k:ident),+ $(,)?) => {
+        $crate::event!($name, $($k = $k),+)
+    };
+}
+
+/// Drain every recorded event, sorted by `(ts, tid, name)` for
+/// structural determinism.  Flushes the calling thread's local buffer;
+/// other threads' buffers flush when those threads exit (scoped worker
+/// threads have all joined by the time the pipeline drains).
+pub fn drain() -> Vec<TraceEvent> {
+    let _ = LOCAL.try_with(|l| {
+        if let Ok(mut buf) = l.try_borrow_mut() {
+            buf.flush();
+        }
+    });
+    let mut evs = std::mem::take(&mut *lock_sink());
+    evs.sort_by(|a, b| (a.ts_us, a.tid, a.name).cmp(&(b.ts_us, b.tid, b.name)));
+    evs
+}
+
+fn escape_into(out: &mut String, s: &str) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+fn push_f64(out: &mut String, v: f64) {
+    if v.is_finite() {
+        let _ = write!(out, "{v}");
+    } else {
+        out.push('0'); // JSON has no NaN/Inf; a zero keeps the line parseable
+    }
+}
+
+/// One compact JSON line for `ev` (the JSONL / chrome trace record).
+pub fn event_json(ev: &TraceEvent) -> String {
+    let mut s = String::with_capacity(96);
+    s.push_str("{\"name\":\"");
+    escape_into(&mut s, ev.name);
+    s.push_str("\",\"ph\":\"");
+    s.push_str(if ev.instant { "i" } else { "X" });
+    let _ = write!(s, "\",\"pid\":1,\"tid\":{},\"ts\":{},\"dur\":{},\"args\":{{", ev.tid, ev.ts_us, ev.dur_us);
+    for (i, (k, v)) in ev.fields.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push('"');
+        escape_into(&mut s, k);
+        s.push_str("\":");
+        match v {
+            FieldValue::U64(u) => {
+                let _ = write!(s, "{u}");
+            }
+            FieldValue::F64(f) => push_f64(&mut s, *f),
+            FieldValue::Str(t) => {
+                s.push('"');
+                escape_into(&mut s, t);
+                s.push('"');
+            }
+        }
+    }
+    s.push_str("}}");
+    s
+}
+
+/// Write `events` as a JSONL trace (one event per line).
+pub fn write_jsonl(path: &str, events: &[TraceEvent]) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create trace file {path}"))?;
+    let mut w = std::io::BufWriter::new(f);
+    for ev in events {
+        writeln!(w, "{}", event_json(ev)).context("write trace line")?;
+    }
+    w.flush().context("flush trace file")?;
+    Ok(())
+}
+
+/// Write `events` as one chrome://tracing-loadable JSON array.
+pub fn write_chrome(path: &str, events: &[TraceEvent]) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create chrome trace {path}"))?;
+    let mut w = std::io::BufWriter::new(f);
+    w.write_all(b"[").context("write chrome trace")?;
+    for (i, ev) in events.iter().enumerate() {
+        if i > 0 {
+            w.write_all(b",\n ").context("write chrome trace")?;
+        }
+        w.write_all(event_json(ev).as_bytes()).context("write chrome trace")?;
+    }
+    w.write_all(b"]\n").context("write chrome trace")?;
+    w.flush().context("flush chrome trace")?;
+    Ok(())
+}
+
+const SCHEMA_KEYS: [&str; 7] = ["args", "dur", "name", "ph", "pid", "tid", "ts"];
+
+fn check_line(line: &str) -> Result<()> {
+    let v = Json::parse(line)?;
+    let Json::Obj(m) = &v else { bail!("not a JSON object") };
+    let keys: Vec<&str> = m.keys().map(|k| k.as_str()).collect();
+    if keys != SCHEMA_KEYS {
+        bail!("keys {keys:?} != documented schema {SCHEMA_KEYS:?}");
+    }
+    match m.get("name") {
+        Some(Json::Str(s)) if !s.is_empty() => {}
+        _ => bail!("\"name\" must be a non-empty string"),
+    }
+    match m.get("ph") {
+        Some(Json::Str(s)) if s == "X" || s == "i" => {}
+        _ => bail!("\"ph\" must be \"X\" or \"i\""),
+    }
+    for k in ["pid", "tid", "ts", "dur"] {
+        match m.get(k) {
+            Some(Json::Num(n)) if *n >= 0.0 && n.fract() == 0.0 => {}
+            _ => bail!("\"{k}\" must be a non-negative integer"),
+        }
+    }
+    match m.get("args") {
+        Some(Json::Obj(_)) => {}
+        _ => bail!("\"args\" must be an object"),
+    }
+    Ok(())
+}
+
+/// Validate a JSONL trace against the documented schema
+/// (docs/OBSERVABILITY.md): every non-empty line must parse as a JSON
+/// object with exactly the keys `name/ph/pid/tid/ts/dur/args`, `ph` in
+/// `{"X","i"}`, integer timestamps and an `args` object.  Returns the
+/// number of validated events — the `gs trace-check` subcommand, gated
+/// in scripts/test.sh.
+pub fn validate_jsonl(path: &str) -> Result<usize> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("read trace file {path}"))?;
+    let mut n = 0usize;
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        check_line(line).with_context(|| format!("{path}:{}: invalid trace line", i + 1))?;
+        n += 1;
+    }
+    if n == 0 {
+        bail!("{path}: no trace events");
+    }
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The tracer is process-global; tests that toggle it serialize on
+    // this (same pattern as rust/tests/obs.rs).
+    static GATE: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disabled_span_records_nothing_and_skips_fields() {
+        let _g = GATE.lock().unwrap_or_else(|p| p.into_inner());
+        set_enabled(false);
+        drain();
+        let mut evaluated = false;
+        {
+            let _s = span!("test.disabled", x = {
+                evaluated = true;
+                1u64
+            });
+        }
+        event!("test.disabled.event");
+        assert!(!evaluated, "disabled span! must not evaluate field exprs");
+        assert!(drain().is_empty());
+    }
+
+    #[test]
+    fn spans_round_trip_through_jsonl() {
+        let _g = GATE.lock().unwrap_or_else(|p| p.into_inner());
+        set_enabled(false);
+        drain();
+        set_enabled(true);
+        {
+            let _s = span!("test.outer", seq = 7u64, kind = "unit");
+            event!("test.mark", ok = true);
+        }
+        set_enabled(false);
+        let evs = drain();
+        assert_eq!(evs.len(), 2);
+        let dir = std::env::temp_dir().join(format!("gs_trace_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.jsonl");
+        let ps = p.to_str().unwrap();
+        write_jsonl(ps, &evs).unwrap();
+        assert_eq!(validate_jsonl(ps).unwrap(), 2);
+        let text = std::fs::read_to_string(ps).unwrap();
+        assert!(text.contains("\"name\":\"test.outer\""));
+        assert!(text.contains("\"seq\":7"));
+        assert!(text.contains("\"kind\":\"unit\""));
+        assert!(text.contains("\"ph\":\"i\""));
+        let cp = dir.join("t.chrome.json");
+        write_chrome(cp.to_str().unwrap(), &evs).unwrap();
+        let arr = Json::parse(&std::fs::read_to_string(&cp).unwrap()).unwrap();
+        match arr {
+            Json::Arr(v) => assert_eq!(v.len(), 2),
+            other => panic!("chrome trace is not an array: {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn validator_rejects_malformed_lines() {
+        let _g = GATE.lock().unwrap_or_else(|p| p.into_inner());
+        let dir = std::env::temp_dir().join(format!("gs_trace_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cases = [
+            "not json",
+            "{\"name\":\"x\",\"ph\":\"X\",\"pid\":1,\"tid\":1,\"ts\":0,\"dur\":0}", // no args
+            "{\"args\":{},\"dur\":0,\"name\":\"x\",\"ph\":\"Q\",\"pid\":1,\"tid\":1,\"ts\":0}", // bad ph
+            "{\"args\":{},\"dur\":-1,\"name\":\"x\",\"ph\":\"X\",\"pid\":1,\"tid\":1,\"ts\":0}", // neg dur
+            "{\"args\":{},\"dur\":0,\"name\":\"\",\"ph\":\"X\",\"pid\":1,\"tid\":1,\"ts\":0}", // empty name
+        ];
+        for (i, c) in cases.iter().enumerate() {
+            let p = dir.join(format!("bad{i}.jsonl"));
+            std::fs::write(&p, format!("{c}\n")).unwrap();
+            assert!(validate_jsonl(p.to_str().unwrap()).is_err(), "case {i} must fail: {c}");
+        }
+        let empty = dir.join("empty.jsonl");
+        std::fs::write(&empty, "\n").unwrap();
+        assert!(validate_jsonl(empty.to_str().unwrap()).is_err(), "empty trace must fail");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn non_finite_fields_stay_parseable() {
+        let ev = TraceEvent {
+            name: "test.nan",
+            tid: 1,
+            ts_us: 0,
+            dur_us: 0,
+            instant: true,
+            fields: vec![("bad", FieldValue::F64(f64::NAN)), ("inf", FieldValue::F64(f64::INFINITY))],
+        };
+        let line = event_json(&ev);
+        check_line(&line).unwrap();
+    }
+}

@@ -151,6 +151,7 @@ impl MicroBatcher {
         if seeds.is_empty() {
             return Ok(());
         }
+        let _span = crate::span!("serve.batch.flush", rows = seeds.len(), waiters = waiting.len());
         let c = engine.out_dim();
         let rows = match engine.forward(sc, &seeds) {
             Ok(rows) => rows,

@@ -189,6 +189,9 @@ impl EmbeddingCache {
     /// Invalidate every entry in O(1).
     pub fn bump_generation(&mut self) {
         self.gen = self.gen.wrapping_add(1);
+        // Rare + load-bearing: a whole-cache invalidation is exactly
+        // the event a latency cliff in a trace correlates with.
+        crate::event!("serve.cache.invalidate", gen = self.gen);
     }
 
     fn detach(&mut self, i: u32) {

@@ -50,6 +50,7 @@ use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::obs::metrics;
 use crate::util::Rng;
 
 /// Parameters for the canonical closed-loop serving benchmark
@@ -142,6 +143,10 @@ pub fn run_serve_bench(
     let nocache = Mutex::new(EmbeddingCache::new(0));
     let (uncached, replies0) =
         closed_loop_with_faults(engine, p.pool.clone(), &nocache, &trace, p.clients, plan.as_ref())?;
+    // Each arm publishes its ClosedLoopStats verbatim into the metrics
+    // registry — `--stats` / `gs stats` counters match the bench report
+    // by construction (asserted in tests/obs.rs).
+    metrics::publish(metrics::closed_loop_snapshot("serve.uncached", &uncached));
 
     let cache = Mutex::new(EmbeddingCache::with_admission(p.cache, p.admission));
     {
@@ -158,6 +163,7 @@ pub fn run_serve_bench(
     }
     let (warmed, replies1) =
         closed_loop(engine, p.pool.clone(), &cache, &trace, p.clients)?;
+    metrics::publish(metrics::closed_loop_snapshot("serve.warmed", &warmed));
 
     let mut refreshed = None;
     let mut refreshed_rows = 0usize;
@@ -169,6 +175,8 @@ pub fn run_serve_bench(
         let mut src = EngineSource::new(engine);
         refreshed_rows = refresh_hot_rows(&cache, &mut src, p.refresh)?;
         let (r, rr) = closed_loop(engine, p.pool.clone(), &cache, &trace, p.clients)?;
+        metrics::publish(metrics::closed_loop_snapshot("serve.refreshed", &r));
+        metrics::counter_set("serve.refreshed.rows_refreshed", refreshed_rows as u64);
         refreshed = Some(r);
         replies2 = rr;
     }
@@ -256,6 +264,12 @@ impl LatencyHistogram {
 #[derive(Debug, Default)]
 pub struct ServeMetrics {
     pub latency: LatencyHistogram,
+    /// Per-stage breakdown of the pool path: time a batch spent queued
+    /// (dispatch → worker dequeue) and executing (forward + decode).
+    /// Always-on like `latency` — lock-free atomics, no tracing needed.
+    pub queue_us: LatencyHistogram,
+    pub exec_us: LatencyHistogram,
+    batches: AtomicU64,
     hits: AtomicU64,
     misses: AtomicU64,
     coalesced: AtomicU64,
@@ -268,6 +282,15 @@ pub struct ServeMetrics {
 impl ServeMetrics {
     pub fn new() -> ServeMetrics {
         ServeMetrics::default()
+    }
+
+    /// One pool batch executed (any attempt outcome).
+    pub fn record_batch(&self) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
     }
 
     pub fn record_hit(&self) {

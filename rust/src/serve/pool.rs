@@ -121,6 +121,9 @@ impl Default for EnginePoolCfg {
 struct Job {
     seq: u64,
     seeds: Vec<(u32, u32)>,
+    /// When the coordinator cut the batch — workers record the
+    /// dispatch → dequeue gap into [`ServeMetrics::queue_us`].
+    t_disp: Instant,
 }
 
 /// What flows into the coordinator: forwarded client requests, worker
@@ -177,8 +180,10 @@ fn execute_batch<'a>(
     max_retries: usize,
     retry_backoff: Duration,
 ) -> BatchExec {
+    let _span = crate::span!("serve.batch.forward", seq = seq, rows = seeds.len());
+    let t_exec = Instant::now();
     let mut attempt = 0usize;
-    loop {
+    let out = loop {
         let injected = faults.and_then(|f| f.take(seq));
         let run = catch_unwind(AssertUnwindSafe(|| {
             match injected {
@@ -217,21 +222,28 @@ fn execute_batch<'a>(
             (gen, rows)
         }));
         match run {
-            Err(_panic_payload) => return BatchExec::Panicked,
-            Ok((gen, Ok(rows))) => return BatchExec::Completed { gen, rows: Ok(rows) },
+            Err(_panic_payload) => break BatchExec::Panicked,
+            Ok((gen, Ok(rows))) => break BatchExec::Completed { gen, rows: Ok(rows) },
             Ok((gen, Err(e))) => {
                 let se = ServeError::classify(&e);
                 if se.retryable() && attempt < max_retries {
                     attempt += 1;
                     metrics.record_retry();
+                    crate::event!("serve.batch.retry", seq = seq, attempt = attempt);
                     let mul = 1u32 << (attempt - 1).min(16);
                     std::thread::sleep(retry_backoff.saturating_mul(mul));
                     continue;
                 }
-                return BatchExec::Completed { gen, rows: Err(se) };
+                break BatchExec::Completed { gen, rows: Err(se) };
             }
         }
-    }
+    };
+    // Execution time per batch, retries and backoff included: the
+    // profile answers "what did serving this batch cost", not "what
+    // did one clean forward cost".
+    metrics.exec_us.record(t_exec.elapsed());
+    metrics.record_batch();
+    out
 }
 
 pub struct EnginePool {
@@ -308,6 +320,7 @@ impl EnginePool {
                             Ok(j) => j,
                             Err(_) => return, // coordinator done
                         };
+                        metrics.queue_us.record(job.t_disp.elapsed());
                         let scratch = sc.get_or_insert_with(|| engine.make_scratch());
                         match execute_batch(
                             engine,
@@ -401,6 +414,7 @@ impl EnginePool {
                         let Some(PendingBatch { seeds, waiters }) = batches.remove(&seq) else {
                             continue;
                         };
+                        crate::event!("serve.batch.reply", seq = seq, waiters = waiters.len());
                         for &(nt, id) in &seeds {
                             in_flight.remove(&cache_key(nt, id));
                         }
@@ -463,6 +477,7 @@ impl EnginePool {
                         }
                         .or_else(|| backlog.pop_front());
                         let Some(job) = job else { break };
+                        metrics.queue_us.record(job.t_disp.elapsed());
                         let mut inline_panics = 0usize;
                         let (gen, rows) = loop {
                             let sc = co_sc.get_or_insert_with(|| engine.make_scratch());
@@ -524,8 +539,9 @@ impl EnginePool {
                         in_flight.insert(cache_key(nt, id), (seq, slot));
                     }
                     let job_seeds = seeds.clone();
+                    crate::event!("serve.batch.dispatch", seq = seq, rows = job_seeds.len());
                     batches.insert(seq, PendingBatch { seeds, waiters });
-                    enqueue!(Job { seq, seeds: job_seeds });
+                    enqueue!(Job { seq, seeds: job_seeds, t_disp: Instant::now() });
                 }};
             }
 
@@ -627,7 +643,7 @@ impl EnginePool {
                         // live in the pending table, so nothing was
                         // lost with the worker.
                         if let Some(b) = batches.get(&seq) {
-                            enqueue!(Job { seq, seeds: b.seeds.clone() });
+                            enqueue!(Job { seq, seeds: b.seeds.clone(), t_disp: Instant::now() });
                         }
                     }
                     Some(Msg::WorkerExit) => {
@@ -769,5 +785,14 @@ pub fn closed_loop_with_faults(
         shed: metrics.shed(),
         deadline_misses: metrics.deadline_misses(),
     };
+    // Pool-internal profile → global registry (`gs stats`): batch
+    // count plus the dispatch→dequeue and execute stage percentiles.
+    // Each closed-loop run overwrites these, so after `serve-bench`
+    // they describe the last arm.
+    crate::obs::metrics::counter_set("serve.pool.batches", metrics.batches());
+    crate::obs::metrics::gauge_set("serve.pool.queue_p50_us", metrics.queue_us.p50_us());
+    crate::obs::metrics::gauge_set("serve.pool.queue_p99_us", metrics.queue_us.p99_us());
+    crate::obs::metrics::gauge_set("serve.pool.exec_p50_us", metrics.exec_us.p50_us());
+    crate::obs::metrics::gauge_set("serve.pool.exec_p99_us", metrics.exec_us.p99_us());
     Ok((stats, replies))
 }

@@ -116,6 +116,7 @@ pub fn refresh_hot_rows(
     if src.source_generation() == cache_gen || keys.is_empty() {
         return Ok(0);
     }
+    let _span = crate::span!("serve.refresh.pass", keys = keys.len());
     keys.reverse(); // coldest of the hot set first, MRU last
     let mut rows = Vec::new();
     let mut refreshed = 0usize;
@@ -197,6 +198,11 @@ pub fn refresh_loop(
         }
         std::thread::sleep(cfg.poll);
     }
+    // Lifetime totals → global registry, once at shutdown (the stats
+    // themselves stay lock-free while the loop runs).
+    crate::obs::metrics::counter_set("serve.refresh.passes", stats.passes());
+    crate::obs::metrics::counter_set("serve.refresh.rows", stats.rows());
+    crate::obs::metrics::counter_set("serve.refresh.errors", stats.errors());
     Ok(())
 }
 

@@ -209,9 +209,10 @@ impl DistillTrainer {
             )?;
             last = loss_sum / steps.max(1) as f32;
             if opts.verbose {
-                eprintln!("[distill] epoch {epoch}: mse {last:.5}");
+                crate::gs_info!("distill", "epoch {epoch}: mse {last:.5}");
             }
         }
+        crate::obs::metrics::gauge_set("trainer.distill.mse", last as f64);
         Ok((last, st))
     }
 

@@ -108,9 +108,10 @@ impl LmTrainer {
             )?;
             last = loss_sum / steps.max(1) as f32;
             if opts.verbose {
-                eprintln!("[lm mlm] epoch {epoch}: loss {last:.4}");
+                crate::gs_info!("lm mlm", "epoch {epoch}: loss {last:.4}");
             }
         }
+        crate::obs::metrics::gauge_set("trainer.lm.mlm_loss", last as f64);
         Ok((last, st))
     }
 
@@ -168,9 +169,10 @@ impl LmTrainer {
             )?;
             last = loss_sum / steps.max(1) as f32;
             if opts.verbose {
-                eprintln!("[lm ftnc] epoch {epoch}: loss {last:.4}");
+                crate::gs_info!("lm ftnc", "epoch {epoch}: loss {last:.4}");
             }
         }
+        crate::obs::metrics::gauge_set("trainer.lm.ftnc_loss", last as f64);
         Ok((last, st))
     }
 
@@ -244,9 +246,10 @@ impl LmTrainer {
             )?;
             last = loss_sum / steps.max(1) as f32;
             if opts.verbose {
-                eprintln!("[lm ftlp] epoch {epoch}: loss {last:.4}");
+                crate::gs_info!("lm ftlp", "epoch {epoch}: loss {last:.4}");
             }
         }
+        crate::obs::metrics::gauge_set("trainer.lm.ftlp_loss", last as f64);
         Ok((last, st))
     }
 

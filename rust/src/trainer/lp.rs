@@ -120,6 +120,7 @@ impl LpTrainer {
         let mut fpool = Vec::new();
         for epoch in 0..opts.epochs {
             let t0 = std::time::Instant::now();
+            let _sp = crate::span!("trainer.lp.epoch", epoch = epoch);
             let chunks = IdChunks::new(all_train.clone(), b, self.max_train_edges, &mut rng);
             let mut epoch_loss = 0.0f32;
             let mut steps = 0usize;
@@ -152,6 +153,10 @@ impl LpTrainer {
             report.epoch_losses.push(epoch_loss / steps.max(1) as f32);
             report.epoch_times.push(t0.elapsed().as_secs_f64());
             report.steps += steps;
+            crate::obs::metrics::gauge_set(
+                "trainer.lp.epoch_loss",
+                *report.epoch_losses.last().unwrap() as f64,
+            );
             if self.eval_every_epoch {
                 let mrr = self.evaluate(rt, ds, &st, Split::Val, opts)?;
                 report.epoch_val_mrr.push(mrr);
@@ -159,10 +164,9 @@ impl LpTrainer {
                     best = (epoch + 1, mrr);
                 }
                 if opts.verbose {
-                    eprintln!(
-                        "[lp {} {}] epoch {epoch}: loss {:.4} val mrr {:.4} ({:.2}s)",
-                        self.loss.label(),
-                        self.sampler.label(),
+                    crate::gs_info!(
+                        &format!("lp {} {}", self.loss.label(), self.sampler.label()),
+                        "epoch {epoch}: loss {:.4} val mrr {:.4} ({:.2}s)",
                         report.epoch_losses.last().unwrap(),
                         mrr,
                         report.epoch_times.last().unwrap()

@@ -476,6 +476,7 @@ impl MultiTaskTrainer {
         // Per-worker factories pinned across epochs.
         let mut fpool = MultiFactoryPool::default();
         for epoch in 0..opts.epochs {
+            let _sp = crate::span!("trainer.multi.epoch", epoch = epoch);
             // The distill teacher tracks the NC head: a session over
             // its parameters, frozen for the epoch (deterministic and
             // cheap — one params_host per epoch).
@@ -528,8 +529,14 @@ impl MultiTaskTrainer {
                         )
                     })
                     .collect();
-                eprintln!("[multi] epoch {epoch}: {}", parts.join(" | "));
+                crate::gs_info!("multi", "epoch {epoch}: {}", parts.join(" | "));
             }
+        }
+        for (t, ts) in self.tasks.iter().enumerate() {
+            crate::obs::metrics::gauge_set(
+                &format!("trainer.multi.{}.loss", ts.head.name()),
+                report.epoch_losses[t].last().copied().unwrap_or(0.0) as f64,
+            );
         }
 
         // Per-head evaluation through the standalone evaluators (the

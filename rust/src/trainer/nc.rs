@@ -60,6 +60,7 @@ impl NodeTrainer {
 
         for epoch in 0..opts.epochs {
             let t0 = std::time::Instant::now();
+            let _sp = crate::span!("trainer.nc.epoch", epoch = epoch);
             let chunks = IdChunks::new(train_ids.clone(), b, None, &mut rng);
             let mut epoch_loss = 0.0f32;
             let mut steps = 0usize;
@@ -75,7 +76,7 @@ impl NodeTrainer {
                     epoch_loss += out.loss;
                     steps += 1;
                     if opts.log_every > 0 && bi % opts.log_every == 0 && opts.verbose {
-                        eprintln!("[nc] epoch {epoch} step {bi} loss {:.4}", out.loss);
+                        crate::gs_info!("nc", "epoch {epoch} step {bi} loss {:.4}", out.loss);
                     }
                     Ok(())
                 },
@@ -83,9 +84,14 @@ impl NodeTrainer {
             report.epoch_losses.push(epoch_loss / steps.max(1) as f32);
             report.epoch_times.push(t0.elapsed().as_secs_f64());
             report.steps += steps;
+            crate::obs::metrics::gauge_set(
+                "trainer.nc.epoch_loss",
+                *report.epoch_losses.last().unwrap() as f64,
+            );
             if opts.verbose {
-                eprintln!(
-                    "[nc] epoch {epoch}: mean loss {:.4} ({:.2}s)",
+                crate::gs_info!(
+                    "nc",
+                    "epoch {epoch}: mean loss {:.4} ({:.2}s)",
                     report.epoch_losses.last().unwrap(),
                     report.epoch_times.last().unwrap()
                 );

@@ -1,0 +1,206 @@
+//! Observability acceptance suite (docs/OBSERVABILITY.md):
+//!
+//! * `gs serve-bench --trace` produces a schema-valid JSONL trace with
+//!   the per-batch dispatch → forward → reply span taxonomy, and the
+//!   metrics registry's `serve.<arm>.*` counters exactly match the
+//!   bench's `ClosedLoopStats`.
+//! * Tracing is determinism-neutral: replies are bit-identical with
+//!   the tracer on and off.
+//! * The set of `serve.*` metric *names* is pool-size invariant and
+//!   pinned by a golden fixture (`GS_WRITE_FIXTURES=1` regenerates).
+//!
+//! The tracer and the metrics registry are process-global, so every
+//! test here serializes on `GATE` (cargo runs tests in one binary on
+//! parallel threads).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use graphstorm::config::ObsCfg;
+use graphstorm::datagen::{self, mag};
+use graphstorm::dataloader::GsDataset;
+use graphstorm::obs::{self, metrics, trace};
+use graphstorm::partition::PartitionBook;
+use graphstorm::runtime::ArtifactSpec;
+use graphstorm::serve::{
+    closed_loop, run_serve_bench, Admission, EmbeddingCache, EnginePoolCfg, InferenceEngine,
+    MicroBatcherCfg, ServeBenchParams,
+};
+use graphstorm::util::json::Json;
+
+static GATE: Mutex<()> = Mutex::new(());
+
+fn mag_ds(n: usize) -> GsDataset {
+    let raw = mag::generate(&mag::MagConfig { n_papers: n, ..Default::default() });
+    let book = PartitionBook::single(&raw.graph.num_nodes);
+    let mut ds = datagen::build_dataset(raw, book, 64, 3);
+    ds.ensure_text_features(64);
+    ds
+}
+
+fn spec() -> ArtifactSpec {
+    ArtifactSpec::synthetic_block(&[2304, 384, 64], &[1920, 320], 5, r#","batch":64"#)
+        .with_output("logits", &[64, 8])
+}
+
+fn pool_cfg(workers: usize) -> EnginePoolCfg {
+    EnginePoolCfg {
+        workers,
+        batcher: MicroBatcherCfg { max_batch: 8, deadline: Duration::from_micros(200) },
+        ..Default::default()
+    }
+}
+
+fn bench_params(seed: u64, workers: usize) -> ServeBenchParams {
+    ServeBenchParams {
+        seed,
+        requests: 300,
+        alpha: 1.1,
+        clients: 3,
+        cache: 512,
+        admission: Admission::TinyLfu,
+        pool: pool_cfg(workers),
+        refresh: 8,
+        faults: None,
+    }
+}
+
+/// The acceptance criterion end-to-end: serve-bench under `--trace`
+/// writes a schema-valid JSONL trace carrying the batch span taxonomy,
+/// and the registry's per-arm counters equal the `ClosedLoopStats` the
+/// bench reports — same numbers, two surfaces.
+#[test]
+fn serve_bench_trace_schema_and_registry_match() {
+    let _g = GATE.lock().unwrap_or_else(|p| p.into_inner());
+    metrics::reset();
+    trace::set_enabled(false);
+    trace::drain(); // discard anything a previous test buffered
+    let dir = std::env::temp_dir().join(format!("gs_obs_trace_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let tpath = dir.join("bench.trace.jsonl");
+    let cfg = ObsCfg { trace: Some(tpath.to_str().unwrap().to_string()), ..Default::default() };
+    obs::init(&cfg);
+
+    let ds = mag_ds(400);
+    let engine = InferenceEngine::surrogate(&ds, &spec(), 11).unwrap();
+    let rep = run_serve_bench(&engine, &bench_params(5, 2)).unwrap();
+    assert!(rep.identical, "bench arms diverged under tracing");
+
+    let written = obs::finish(&cfg).unwrap();
+    trace::set_enabled(false);
+    assert!(written > 0, "a traced bench must record events");
+    let validated = graphstorm::obs::validate_jsonl(tpath.to_str().unwrap()).unwrap();
+    assert_eq!(validated, written, "every written event must validate");
+    let text = std::fs::read_to_string(&tpath).unwrap();
+    for name in
+        ["serve.batch.dispatch", "serve.batch.forward", "serve.batch.reply", "serve.refresh.pass"]
+    {
+        assert!(text.contains(&format!("\"name\":\"{name}\"")), "trace missing span {name}");
+    }
+
+    let snap = metrics::snapshot();
+    let get = |k: &str| {
+        snap.get(k).and_then(Json::as_f64).unwrap_or_else(|| panic!("metric {k} not registered"))
+    };
+    let refreshed = rep.refreshed.as_ref().expect("refresh > 0 must produce a third arm");
+    for (arm, s) in
+        [("uncached", &rep.uncached), ("warmed", &rep.warmed), ("refreshed", refreshed)]
+    {
+        assert_eq!(get(&format!("serve.{arm}.requests")) as usize, s.requests, "{arm} requests");
+        assert_eq!(get(&format!("serve.{arm}.hits")) as u64, s.hits, "{arm} hits");
+        assert_eq!(get(&format!("serve.{arm}.misses")) as u64, s.misses, "{arm} misses");
+        assert_eq!(get(&format!("serve.{arm}.coalesced")) as u64, s.coalesced, "{arm} coalesced");
+        assert_eq!(get(&format!("serve.{arm}.restarts")) as u64, s.restarts, "{arm} restarts");
+        assert_eq!(get(&format!("serve.{arm}.retries")) as u64, s.retries, "{arm} retries");
+        assert_eq!(get(&format!("serve.{arm}.shed")) as u64, s.shed, "{arm} shed");
+        assert_eq!(
+            get(&format!("serve.{arm}.deadline_misses")) as u64,
+            s.deadline_misses,
+            "{arm} deadline_misses"
+        );
+    }
+    assert_eq!(get("serve.refreshed.rows_refreshed") as usize, rep.refreshed_rows);
+    assert!(get("serve.pool.batches") >= 1.0, "the pool must have cut at least one batch");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Collapse a reply list (completion order, timing-dependent) into a
+/// canonical per-key bit pattern, asserting every repeat of a key got
+/// the identical row within the run.
+fn canon(replies: Vec<((u32, u32), Vec<f32>)>) -> BTreeMap<(u32, u32), Vec<u32>> {
+    let mut m: BTreeMap<(u32, u32), Vec<u32>> = BTreeMap::new();
+    for (k, v) in replies {
+        let bits: Vec<u32> = v.iter().map(|f| f.to_bits()).collect();
+        match m.get(&k) {
+            Some(prev) => assert_eq!(prev, &bits, "key {k:?} answered inconsistently in-run"),
+            None => {
+                m.insert(k, bits);
+            }
+        }
+    }
+    m
+}
+
+/// Determinism neutrality: the same closed-loop workload answers with
+/// bit-identical rows whether the tracer is recording or not.
+#[test]
+fn replies_bit_identical_with_tracing_on_and_off() {
+    let _g = GATE.lock().unwrap_or_else(|p| p.into_inner());
+    let ds = mag_ds(300);
+    let engine = InferenceEngine::surrogate(&ds, &spec(), 13).unwrap();
+    let nt = ds.target_ntype as u32;
+    let reqs: Vec<(u32, u32)> = (0..200).map(|i| (nt, (i % 40) as u32)).collect();
+    let run = || {
+        let cache = Mutex::new(EmbeddingCache::new(1024));
+        let (_stats, replies) = closed_loop(&engine, pool_cfg(2), &cache, &reqs, 3).unwrap();
+        canon(replies)
+    };
+
+    trace::set_enabled(false);
+    trace::drain();
+    let off = run();
+    trace::set_enabled(true);
+    let on = run();
+    trace::set_enabled(false);
+    let events = trace::drain();
+    assert!(!events.is_empty(), "the traced run must have recorded spans");
+    assert_eq!(off.len(), 40, "every distinct key must be answered");
+    assert_eq!(off, on, "enabling tracing changed a reply bit pattern");
+}
+
+/// The registry *names* a serve-bench run registers are a stable,
+/// pool-size-invariant surface — dashboards key on them.  Golden-pinned
+/// so a renamed or dropped metric is a reviewable fixture diff.
+/// Regenerate with `GS_WRITE_FIXTURES=1 cargo test -q serve_metric_names`.
+#[test]
+fn serve_metric_names_are_pool_size_invariant_and_golden() {
+    let _g = GATE.lock().unwrap_or_else(|p| p.into_inner());
+    trace::set_enabled(false);
+    let ds = mag_ds(400);
+    let engine = InferenceEngine::surrogate(&ds, &spec(), 19).unwrap();
+    let mut per_pool: Vec<Vec<String>> = Vec::new();
+    for workers in [1usize, 4] {
+        metrics::reset();
+        let rep = run_serve_bench(&engine, &bench_params(9, workers)).unwrap();
+        assert!(rep.identical, "workers={workers}: bench arms diverged");
+        per_pool
+            .push(metrics::names().into_iter().filter(|n| n.starts_with("serve.")).collect());
+    }
+    assert_eq!(per_pool[0], per_pool[1], "metric names must not depend on pool size");
+
+    let mut got = per_pool.pop().unwrap().join("\n");
+    got.push('\n');
+    let gpath = "tests/fixtures/serve_metrics_names.golden.txt";
+    if std::env::var("GS_WRITE_FIXTURES").is_ok() {
+        std::fs::write(gpath, &got).unwrap();
+        return;
+    }
+    let want = std::fs::read_to_string(gpath)
+        .unwrap_or_else(|e| panic!("{gpath}: {e} (GS_WRITE_FIXTURES=1 to bootstrap)"));
+    assert_eq!(
+        got, want,
+        "serve metric names drifted from the golden fixture; if intended, audit the \
+         diff and regenerate with GS_WRITE_FIXTURES=1"
+    );
+}

@@ -58,7 +58,7 @@ for doc in "${docs[@]}"; do
 
     # 3. `gs <subcommand>` mentions must be real subcommands.
     while IFS= read -r c; do
-        case "$c" in smoke|help|"") continue ;; esac
+        case "$c" in smoke|help|stats|trace-check|"") continue ;; esac
         if [ -n "$GS_HELP" ] && printf '%s\n' "$GS_HELP" | grep -q "gs $c"; then
             continue
         fi
@@ -69,15 +69,21 @@ for doc in "${docs[@]}"; do
     # 4. Backticked stage.key config paths (e.g. `serve.pool_workers`,
     #    `tasks.0.weight`) must appear as keys in the typed config
     #    structs.  Numeric segments are array indices; the final
-    #    alphabetic segment is the key to check.
+    #    alphabetic segment is the key to check.  Dotted names that are
+    #    not config keys (span names like `serve.batch.forward`, metric
+    #    names like `serve.pool.batches` — docs/OBSERVABILITY.md) must
+    #    instead exist verbatim somewhere under rust/ (source literal
+    #    or golden fixture), so renamed instrumentation can't leave
+    #    stale docs behind.
     while IFS= read -r sk; do
         key="${sk##*.}"
         # `lm.rs` and friends are file names, not config paths;
         # empty / numeric tails are array indices, not keys.
         case "$key" in rs|sh|json|md|py|csv|toml|''|*[!a-z_]*) continue ;; esac
         grep -q "\"$key\"" "$CFG_SRC" && continue
-        err "$doc" "unknown config key '$sk'"
-    done < <(grep -o '`\(loader\|data\|partition\|lm\|task\|tasks\|encoder\|infer\|serve\)\.[a-z0-9_.]*`' "$doc" \
+        grep -rqF "$sk" "$ROOT/rust" && continue
+        err "$doc" "unknown config key or instrumentation name '$sk'"
+    done < <(grep -o '`\(loader\|data\|partition\|lm\|task\|tasks\|encoder\|infer\|serve\|obs\)\.[a-z0-9_.]*`' "$doc" \
              | tr -d '`' | sort -u)
 done
 

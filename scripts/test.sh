@@ -18,12 +18,13 @@ ROOT="$(cd "$(dirname "$0")/.." && pwd)"
 "$ROOT/scripts/check_docs.sh"
 echo
 
-# Serving code must stay panic-clean: failures travel as typed
-# `ServeError`s (docs/ROBUSTNESS.md), so `.unwrap(`/`.expect(` are
-# banned in rust/src/serve/ production code (test modules after
-# `#[cfg(test)]` are exempt; `.unwrap_or*` is fine).
+# Serving and observability code must stay panic-clean: serve failures
+# travel as typed `ServeError`s (docs/ROBUSTNESS.md) and the obs layer
+# must never be able to take a run down, so `.unwrap(`/`.expect(` are
+# banned in rust/src/serve/ and rust/src/obs/ production code (test
+# modules after `#[cfg(test)]` are exempt; `.unwrap_or*` is fine).
 serve_panics=$(
-    for f in "$ROOT"/rust/src/serve/*.rs; do
+    for f in "$ROOT"/rust/src/serve/*.rs "$ROOT"/rust/src/obs/*.rs; do
         awk -v f="${f#"$ROOT"/}" '
             /#\[cfg\(test\)\]/ { exit }
             /\.unwrap\(|\.expect\(/ { printf "%s:%d: %s\n", f, NR, $0 }
@@ -35,7 +36,7 @@ if [ -n "$serve_panics" ]; then
     echo "$serve_panics" >&2
     exit 1
 fi
-echo "test.sh: serve panic-clean lint OK"
+echo "test.sh: serve+obs panic-clean lint OK"
 echo
 
 if ! command -v cargo >/dev/null 2>&1; then
@@ -61,6 +62,22 @@ sweep_out=$(cargo run --release -q -- serve-bench \
 printf '%s\n' "$sweep_out" | tail -n 6
 if ! printf '%s\n' "$sweep_out" | grep -q "bit-identical across arms + repeats: true"; then
     echo "test.sh: fault sweep FAILED — faulted replies diverged" >&2
+    exit 1
+fi
+
+# Trace-schema gate: a traced bench must emit a JSONL trace that its
+# own validator accepts (docs/OBSERVABILITY.md), and the metrics table
+# must carry the per-arm serve counters.
+echo
+echo "test.sh: trace-schema gate (gs serve-bench --trace + gs trace-check)"
+trace_tmp="$(mktemp -d)"
+trap 'rm -rf "$trace_tmp"' EXIT
+obs_out=$(cargo run --release -q -- serve-bench \
+    --dataset mag --size 400 --requests 300 --max-batch 8 \
+    --trace "$trace_tmp/bench.trace.jsonl" --stats)
+cargo run --release -q -- trace-check "$trace_tmp/bench.trace.jsonl"
+if ! printf '%s\n' "$obs_out" | grep -q "serve.uncached.requests"; then
+    echo "test.sh: trace-schema gate FAILED — --stats table missing serve counters" >&2
     exit 1
 fi
 
