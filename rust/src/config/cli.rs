@@ -483,6 +483,9 @@ pub fn help_text() -> String {
     s.push_str("  gs smoke          runtime sanity check (artifacts + PJRT)\n");
     s.push_str("  gs stats PATH     render a metrics snapshot JSON (--report output) as a table\n");
     s.push_str("  gs trace-check P  validate a --trace JSONL file against the trace schema\n");
+    s.push_str("  gs lint [PATH]    static-analysis gate: determinism/panic-clean/lock-order/\n");
+    s.push_str("                    salt-unique/name-registry rules over the source tree\n");
+    s.push_str("                    (--dump-names prints the span/metric name table; docs/LINTS.md)\n");
     s
 }
 

@@ -10,12 +10,11 @@
 //! * preference clusters are *not* brand-aligned, so customers carry no
 //!   brand signal.
 
-use std::collections::HashMap;
 
 use crate::datagen::{make_splits, RawData};
 use crate::dataloader::{NodeLabels, TokenStore};
 use crate::graph::{EdgeTypeDef, FeatureSource, HeteroGraph, Schema};
-use crate::util::Rng;
+use crate::util::{FxHashMap, Rng};
 
 #[derive(Debug, Clone)]
 pub struct ArConfig {
@@ -202,7 +201,7 @@ pub fn build_variant(world: &ArWorld, variant: ArVariant) -> RawData {
     }
     let mut schema = Schema::new(ntypes, etypes).with_sources(sources);
     let rev_pairs = schema.add_reverse_etypes();
-    let rev_map: HashMap<usize, usize> = rev_pairs.into_iter().collect();
+    let rev_map: FxHashMap<usize, usize> = rev_pairs.into_iter().collect();
 
     let mut num_nodes = vec![cfg.n_items];
     if use_reviews {

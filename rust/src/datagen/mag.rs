@@ -8,12 +8,11 @@
 //! * authors are featureless → the distributed embedding table path;
 //! * `cites` is the LP target with ~90/5/5 edge splits.
 
-use std::collections::HashMap;
 
 use crate::datagen::{class_features, make_splits, RawData};
 use crate::dataloader::{NodeLabels, TokenStore};
 use crate::graph::{EdgeTypeDef, FeatureSource, HeteroGraph, Schema};
-use crate::util::Rng;
+use crate::util::{FxHashMap, Rng};
 
 #[derive(Debug, Clone)]
 pub struct MagConfig {
@@ -82,7 +81,7 @@ pub fn generate(cfg: &MagConfig) -> RawData {
         FeatureSource::Dense,     // fields
     ]);
     let rev_pairs = schema.add_reverse_etypes();
-    let rev_map: HashMap<usize, usize> = rev_pairs.into_iter().collect();
+    let rev_map: FxHashMap<usize, usize> = rev_pairs.into_iter().collect();
 
     let n = cfg.n_papers;
     // Venues, with per-venue paper pools for homophilous citations.

@@ -13,14 +13,13 @@ pub mod amazon;
 pub mod mag;
 pub mod scale_free;
 
-use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::dataloader::{GsDataset, LpTask, NodeLabels, Split, TokenStore};
 use crate::dist::{DistEngine, DistTensor};
 use crate::graph::HeteroGraph;
 use crate::partition::PartitionBook;
-use crate::util::Rng;
+use crate::util::{FxHashMap, Rng};
 
 /// Raw generator output, engine-agnostic.
 pub struct RawData {
@@ -32,7 +31,7 @@ pub struct RawData {
     pub target_ntype: usize,
     pub num_classes: usize,
     pub lp_etype: Option<usize>,
-    pub rev_map: HashMap<usize, usize>,
+    pub rev_map: FxHashMap<usize, usize>,
 }
 
 /// Split assignment: deterministic 80/10/10 by hash.

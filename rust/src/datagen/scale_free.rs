@@ -2,12 +2,11 @@
 //! (paper: synthetic graphs of 1B/10B/100B edges, degree ≈ 100,
 //! 64-dim features; here scaled by 10⁴ per DESIGN.md §1).
 
-use std::collections::HashMap;
 
 use crate::datagen::{make_splits, RawData};
 use crate::dataloader::NodeLabels;
 use crate::graph::{EdgeTypeDef, FeatureSource, HeteroGraph, Schema};
-use crate::util::Rng;
+use crate::util::{FxHashMap, Rng};
 
 #[derive(Debug, Clone)]
 pub struct ScaleFreeConfig {
@@ -53,7 +52,7 @@ pub fn generate(cfg: &ScaleFreeConfig) -> RawData {
     )
     .with_sources(vec![FeatureSource::Dense]);
     let rev_pairs = schema.add_reverse_etypes();
-    let rev_map: HashMap<usize, usize> = rev_pairs.into_iter().collect();
+    let rev_map: FxHashMap<usize, usize> = rev_pairs.into_iter().collect();
 
     let mut src = Vec::with_capacity(cfg.n_edges);
     let mut dst = Vec::with_capacity(cfg.n_edges);

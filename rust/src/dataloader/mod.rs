@@ -19,7 +19,6 @@ pub use prefetch::{
 };
 
 use anyhow::{anyhow, bail, Result};
-use std::collections::HashMap;
 use std::sync::{Arc, OnceLock};
 
 use crate::dist::{DistEngine, DistTensor};
@@ -29,7 +28,7 @@ use crate::sampling::{
     negative::sample_negatives, Block, BlockShape, EdgeExclusion, NegSampler, NeighborSampler,
     SamplerScratch, SeedIndex,
 };
-use crate::util::Rng;
+use crate::util::{FxHashMap, Rng};
 
 /// Train/val/test membership.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -105,7 +104,7 @@ pub struct GsDataset {
     pub num_classes: usize,
     pub lp: Option<LpTask>,
     /// etype -> reverse etype (for target-edge exclusion).
-    pub rev_map: HashMap<usize, usize>,
+    pub rev_map: FxHashMap<usize, usize>,
 }
 
 impl GsDataset {

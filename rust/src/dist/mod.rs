@@ -15,6 +15,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, RwLock, RwLockReadGuard, RwLockWriteGuard};
 
 use crate::partition::PartitionBook;
+use crate::util::lockorder::{self, Rank};
 use crate::util::Rng;
 
 /// Cross-partition traffic totals (elements are f32 rows * dim).
@@ -147,6 +148,42 @@ struct EmbInner {
     t: Vec<u32>,
 }
 
+/// Poison-recovered row-lock guards stamped at `Rank::EmbRows` so the
+/// debug-build lock-order tracker (`util::lockorder`) sees real hold
+/// intervals; several tables may be read together (equal-rank nesting
+/// is allowed for rows).
+struct InnerRead<'a> {
+    guard: RwLockReadGuard<'a, EmbInner>,
+    _order: lockorder::Held,
+}
+
+impl std::ops::Deref for InnerRead<'_> {
+    type Target = EmbInner;
+
+    fn deref(&self) -> &EmbInner {
+        &self.guard
+    }
+}
+
+struct InnerWrite<'a> {
+    guard: RwLockWriteGuard<'a, EmbInner>,
+    _order: lockorder::Held,
+}
+
+impl std::ops::Deref for InnerWrite<'_> {
+    type Target = EmbInner;
+
+    fn deref(&self) -> &EmbInner {
+        &self.guard
+    }
+}
+
+impl std::ops::DerefMut for InnerWrite<'_> {
+    fn deref_mut(&mut self) -> &mut EmbInner {
+        &mut self.guard
+    }
+}
+
 /// Learnable embedding table for a featureless node type
 /// (paper §3.3.2, option 2).  Interior mutability: gathers take a read
 /// lock, the sparse-Adam update a write lock, so prefetch workers and
@@ -205,24 +242,28 @@ impl EmbTable {
         }
     }
 
-    fn read_inner(&self) -> RwLockReadGuard<'_, EmbInner> {
-        match self.inner.read() {
+    fn read_inner(&self) -> InnerRead<'_> {
+        let _order = lockorder::acquire(Rank::EmbRows);
+        let guard = match self.inner.read() {
             Ok(g) => g,
             Err(poisoned) => {
                 self.note_poison();
                 poisoned.into_inner()
             }
-        }
+        };
+        InnerRead { guard, _order }
     }
 
-    fn write_inner(&self) -> RwLockWriteGuard<'_, EmbInner> {
-        match self.inner.write() {
+    fn write_inner(&self) -> InnerWrite<'_> {
+        let _order = lockorder::acquire(Rank::EmbRows);
+        let guard = match self.inner.write() {
             Ok(g) => g,
             Err(poisoned) => {
                 self.note_poison();
                 poisoned.into_inner()
             }
-        }
+        };
+        InnerWrite { guard, _order }
     }
 
     pub fn num_rows(&self) -> usize {

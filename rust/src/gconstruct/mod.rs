@@ -21,7 +21,7 @@ use crate::dataloader::{GsDataset, LpTask, NodeLabels, Split, TokenStore};
 use crate::datagen::{build_dataset, RawData};
 use crate::graph::{EdgeTypeDef, FeatureSource, HeteroGraph, Schema};
 use crate::partition::PartitionBook;
-use crate::util::Rng;
+use crate::util::{FxHashMap, Rng};
 
 /// Minimal CSV reader (header + rows, no quoting of separators needed
 /// for our fixtures; quoted fields with commas are supported).
@@ -93,7 +93,7 @@ pub fn construct(cfg: &GConstructConfig, base_dir: &Path) -> Result<RawData> {
     }
     let mut schema = Schema::new(ntypes.clone(), etypes).with_sources(sources);
     let rev_pairs = schema.add_reverse_etypes();
-    let rev_map: HashMap<usize, usize> = rev_pairs.into_iter().collect();
+    let rev_map: FxHashMap<usize, usize> = rev_pairs.into_iter().collect();
 
     // Pass 1: nodes — ID maps, features, labels.
     let mut idmaps: Vec<IdMap> = (0..cfg.nodes.len()).map(|_| IdMap::new()).collect();

@@ -18,6 +18,7 @@ pub mod dist;
 pub mod eval;
 pub mod gconstruct;
 pub mod graph;
+pub mod lint;
 pub mod obs;
 pub mod partition;
 pub mod runtime;

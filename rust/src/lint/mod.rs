@@ -1,0 +1,348 @@
+//! `gs lint` — in-repo static analysis enforcing the determinism,
+//! panic-safety, lock-order and observability contracts.
+//!
+//! The repo's headline invariant is bit-identity: replies and metrics
+//! must be identical for any `--num-workers`, pool size or fault
+//! schedule (docs/ARCHITECTURE.md).  The runtime sweeps in
+//! scripts/test.sh catch a regression only when a particular workload
+//! trips it; this pass makes the *classes* of regression unrepresentable
+//! at review time — a reintroduced `std::collections::HashMap`
+//! iteration, an ambient `Instant::now()` on a reply path, an
+//! `.unwrap()` in `serve/`, a lock taken against the declared order, a
+//! colliding RNG salt, or a renamed span/metric leaving docs and the
+//! golden fixture stale.
+//!
+//! Zero-dependency by construction: `tokens.rs` is a small
+//! comment/string/`#[cfg(test)]`-aware Rust tokenizer, `rules.rs` the
+//! rule set over it.  Per-line waivers (`// lint:allow(<rule>): reason`)
+//! are the escape hatch and are themselves linted — no rule name typos,
+//! no reasonless waivers.  See docs/LINTS.md for the catalog; the pass
+//! is wired as a blocking gate in scripts/test.sh, and
+//! scripts/check_docs.sh reuses the extracted name table
+//! (`gs lint --dump-names`) to validate doc-mentioned span/metric
+//! names.
+
+pub mod rules;
+pub mod tokens;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+pub use rules::Finding;
+
+/// Result of linting a tree.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    /// Findings that survived waivers, ordered by (file, line).
+    pub findings: Vec<Finding>,
+    /// Waivers that suppressed a finding.
+    pub waivers_used: usize,
+    /// `.rs` files scanned.
+    pub files: usize,
+}
+
+/// Collect every `.rs` file under `root`, sorted for deterministic
+/// output.
+fn rust_files(root: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let entries =
+            std::fs::read_dir(&dir).with_context(|| format!("read dir {}", dir.display()))?;
+        for e in entries {
+            let p = e?.path();
+            let name = p.file_name().and_then(|s| s.to_str()).unwrap_or("");
+            if p.is_dir() {
+                if name != "target" && !name.starts_with('.') {
+                    stack.push(p);
+                }
+            } else if name.ends_with(".rs") {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// `/`-separated path of `p` relative to `root` (falls back to the
+/// full path when `p` is outside `root`).
+fn rel_path(root: &Path, p: &Path) -> String {
+    p.strip_prefix(root)
+        .unwrap_or(p)
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+/// Repo context the cross-file `name-registry` rule checks against:
+/// found by walking up from the lint root, so the pass works both on
+/// the real tree (`rust/src` → `rust/tests/fixtures`, `docs/`) and on
+/// test fixtures laid out the same way.
+#[derive(Debug, Default)]
+struct RepoCtx {
+    golden: Option<PathBuf>,
+    obs_doc: Option<PathBuf>,
+}
+
+fn find_repo_ctx(lint_root: &Path) -> RepoCtx {
+    let mut ctx = RepoCtx::default();
+    let start = lint_root.canonicalize().unwrap_or_else(|_| lint_root.to_path_buf());
+    let mut dir = Some(start.as_path());
+    while let Some(d) = dir {
+        if ctx.golden.is_none() {
+            let g = d.join("tests/fixtures/serve_metrics_names.golden.txt");
+            if g.is_file() {
+                ctx.golden = Some(g);
+            }
+        }
+        if ctx.obs_doc.is_none() {
+            let o = d.join("docs/OBSERVABILITY.md");
+            if o.is_file() {
+                ctx.obs_doc = Some(o);
+            }
+        }
+        if ctx.golden.is_some() && ctx.obs_doc.is_some() {
+            break;
+        }
+        dir = d.parent();
+    }
+    ctx
+}
+
+/// Instrumentation-name prefixes the docs cross-check recognizes.
+/// (Config keys like `serve.pool_workers` are validated separately by
+/// scripts/check_docs.sh against the config structs.)
+const NAME_PREFIXES: &[&str] =
+    &["serve.", "trainer.", "loader.", "pipeline.", "dist.", "alloc.", "log."];
+
+/// Extract backticked instrumentation names from a markdown doc,
+/// `<placeholder>` segments already converted to `*` wildcards.
+fn doc_names(text: &str) -> Vec<(String, u32)> {
+    let mut out = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        let mut rest = line;
+        while let Some(open) = rest.find('`') {
+            let tail = &rest[open + 1..];
+            let Some(close) = tail.find('`') else { break };
+            let span = &tail[..close];
+            rest = &tail[close + 1..];
+            if !NAME_PREFIXES.iter().any(|p| span.starts_with(p)) {
+                continue;
+            }
+            // Skip file paths and source files (`obs/log.rs` styles).
+            if span.contains('/') || span.ends_with(".rs") || span.ends_with(".md") {
+                continue;
+            }
+            if !span.chars().all(|c| {
+                c.is_ascii_lowercase()
+                    || c.is_ascii_digit()
+                    || matches!(c, '.' | '_' | '*' | '<' | '>' | '+' | '-')
+            }) {
+                continue;
+            }
+            // `<arm>` placeholders become wildcards.
+            let mut pat = String::new();
+            let mut in_ph = false;
+            for c in span.chars() {
+                match c {
+                    '<' => {
+                        in_ph = true;
+                        pat.push('*');
+                    }
+                    '>' => in_ph = false,
+                    c if !in_ph => pat.push(c),
+                    _ => {}
+                }
+            }
+            out.push((pat, ln as u32 + 1));
+        }
+    }
+    out
+}
+
+/// The extracted span/metric name table for a tree: every name (or
+/// `*`-pattern, from `format!` call sites) the production code can
+/// emit.  Sorted and deduplicated — `gs lint --dump-names`, consumed
+/// by scripts/check_docs.sh.
+pub fn name_table(root: &Path) -> Result<Vec<String>> {
+    let mut names = Vec::new();
+    for p in rust_files(root)? {
+        let src =
+            std::fs::read_to_string(&p).with_context(|| format!("read {}", p.display()))?;
+        let ft = tokens::tokenize(&src);
+        names.extend(rules::scan_file(&rel_path(root, &p), &ft).names);
+    }
+    names.sort();
+    names.dedup();
+    Ok(names)
+}
+
+/// Run every rule over the tree at `root`.
+pub fn lint_path(root: &Path) -> Result<LintReport> {
+    let mut report = LintReport::default();
+    let mut salts: Vec<rules::SaltDef> = Vec::new();
+    let mut names: Vec<String> = Vec::new();
+
+    for p in rust_files(root)? {
+        let src =
+            std::fs::read_to_string(&p).with_context(|| format!("read {}", p.display()))?;
+        let rel = rel_path(root, &p);
+        let ft = tokens::tokenize(&src);
+        let scan = rules::scan_file(&rel, &ft);
+        salts.extend(scan.salts);
+        names.extend(scan.names);
+
+        // Waiver application: a valid waiver on the finding's line (or
+        // the line above, for waivers on their own line) suppresses it.
+        let mut findings = scan.findings;
+        for w in &ft.waivers {
+            let known = rules::RULES.contains(&w.rule.as_str());
+            if !known || w.reason.is_empty() {
+                let msg = if known {
+                    format!("waiver for `{}` has no reason; use // lint:allow({}): <why>", w.rule, w.rule)
+                } else {
+                    format!(
+                        "waiver names unknown rule `{}` (rules: {})",
+                        w.rule,
+                        rules::RULES.join(", ")
+                    )
+                };
+                findings.push(Finding { file: rel.clone(), line: w.line, rule: "waiver", msg });
+                continue;
+            }
+            let before = findings.len();
+            findings.retain(|f| {
+                !(f.rule == w.rule && (f.line == w.line || f.line == w.line + 1))
+            });
+            if findings.len() < before {
+                report.waivers_used += 1;
+            }
+        }
+        report.findings.extend(findings);
+        report.files += 1;
+    }
+
+    // --- salt-unique ------------------------------------------------------
+    let mut by_value: BTreeMap<u64, Vec<&rules::SaltDef>> = BTreeMap::new();
+    for s in &salts {
+        by_value.entry(s.value).or_default().push(s);
+    }
+    for (v, defs) in &by_value {
+        if defs.len() > 1 {
+            let first = defs[0];
+            for dup in &defs[1..] {
+                report.findings.push(Finding {
+                    file: dup.file.clone(),
+                    line: dup.line,
+                    rule: "salt-unique",
+                    msg: format!(
+                        "{} = {v:#x} collides with {} ({}:{}); RNG salts must be distinct so \
+                         seed sub-streams never alias",
+                        dup.name, first.name, first.file, first.line
+                    ),
+                });
+            }
+        }
+    }
+
+    // --- name-registry ----------------------------------------------------
+    names.sort();
+    names.dedup();
+    let ctx = find_repo_ctx(root);
+    let known = |name: &str| names.iter().any(|n| rules::patterns_compatible(name, n));
+    if let Some(golden) = &ctx.golden {
+        let text = std::fs::read_to_string(golden)
+            .with_context(|| format!("read golden {}", golden.display()))?;
+        for (ln, line) in text.lines().enumerate() {
+            let name = line.trim();
+            if name.is_empty() || known(name) {
+                continue;
+            }
+            report.findings.push(Finding {
+                file: golden.display().to_string(),
+                line: ln as u32 + 1,
+                rule: "name-registry",
+                msg: format!(
+                    "golden metric `{name}` matches no span!/event!/metrics call site in the tree"
+                ),
+            });
+        }
+    }
+    if let Some(doc) = &ctx.obs_doc {
+        let text = std::fs::read_to_string(doc)
+            .with_context(|| format!("read doc {}", doc.display()))?;
+        for (name, ln) in doc_names(&text) {
+            if known(&name) {
+                continue;
+            }
+            report.findings.push(Finding {
+                file: doc.display().to_string(),
+                line: ln,
+                rule: "name-registry",
+                msg: format!(
+                    "documented name `{name}` matches no span!/event!/metrics call site; \
+                     renamed instrumentation must update the docs"
+                ),
+            });
+        }
+    }
+
+    report.findings.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(report)
+}
+
+/// CLI driver for `gs lint [--dump-names] [PATH]` (main.rs adapter).
+pub fn run_cli(args: &[String]) -> Result<()> {
+    let mut path: Option<String> = None;
+    let mut dump = false;
+    for a in args {
+        match a.as_str() {
+            "--dump-names" => dump = true,
+            s if s.starts_with('-') => {
+                anyhow::bail!("gs lint: unknown flag {s} (usage: gs lint [--dump-names] [PATH])")
+            }
+            s => {
+                if path.replace(s.to_string()).is_some() {
+                    anyhow::bail!("gs lint: more than one PATH given");
+                }
+            }
+        }
+    }
+    let root = match path {
+        Some(p) => PathBuf::from(p),
+        // Default to the production tree whether invoked from the repo
+        // root or from rust/.
+        None if Path::new("rust/src").is_dir() => PathBuf::from("rust/src"),
+        None if Path::new("src").is_dir() => PathBuf::from("src"),
+        None => anyhow::bail!("gs lint: no PATH given and no rust/src or src/ here"),
+    };
+    if dump {
+        for n in name_table(&root)? {
+            println!("{n}");
+        }
+        return Ok(());
+    }
+    let report = lint_path(&root)?;
+    for f in &report.findings {
+        println!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.msg);
+    }
+    if !report.findings.is_empty() {
+        anyhow::bail!(
+            "gs lint: {} finding(s) across {} file(s) — fix or waive with \
+             // lint:allow(<rule>): reason  (docs/LINTS.md)",
+            report.findings.len(),
+            report.files
+        );
+    }
+    println!(
+        "gs lint: OK — {} files clean ({} waiver{} in effect)",
+        report.files,
+        report.waivers_used,
+        if report.waivers_used == 1 { "" } else { "s" }
+    );
+    Ok(())
+}

@@ -1,0 +1,559 @@
+//! The `gs lint` rule set over the token stream of `tokens.rs`.
+//!
+//! Five rules, each guarding a contract the runtime sweeps can only
+//! catch probabilistically (docs/LINTS.md is the user-facing catalog):
+//!
+//! * `determinism`  — no iteration-order-dependent std hash
+//!   collections and no ambient clocks/RNG in the deterministic
+//!   modules (`sampling/`, `dataloader/`, `partition/`, `trainer/`,
+//!   `serve/`).  Timing-only sites carry `lint:allow` waivers.
+//! * `panic-clean`  — no `.unwrap()` / `.expect()` in `serve/`,
+//!   `obs/`, `dist/` production code (failures travel as typed
+//!   `ServeError`s, docs/ROBUSTNESS.md).
+//! * `lock-order`   — lock acquisitions inside one function must
+//!   respect the declared DAG cache → session → rows → leaf, and
+//!   `serve/` takes locks only through the ranked helpers.
+//! * `salt-unique`  — every `*_SALT` RNG salt constant is distinct, so
+//!   no two sub-streams of the run seed can collide.
+//! * `name-registry`— every span/metric name the golden fixture and
+//!   docs/OBSERVABILITY.md mention must trace to a real
+//!   `span!`/`event!`/metrics call site.
+//!
+//! Plus the `waiver` meta-rule: a waiver with an unknown rule name or
+//! no reason is itself a finding.
+
+use super::tokens::{FileToks, Tok, TokKind};
+
+/// Every rule name a waiver may reference.
+pub const RULES: &[&str] =
+    &["determinism", "panic-clean", "lock-order", "salt-unique", "name-registry"];
+
+/// Directories (top-level module names under the lint root) whose
+/// production code must be deterministic.
+pub const DETERMINISM_DIRS: &[&str] = &["sampling", "dataloader", "partition", "trainer", "serve"];
+
+/// Directories whose production code must be panic-clean.
+pub const PANIC_DIRS: &[&str] = &["serve", "obs", "dist"];
+
+/// One lint finding (pre- or post-waiver).
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+/// A `const *_SALT` definition site.
+#[derive(Debug, Clone)]
+pub struct SaltDef {
+    pub name: String,
+    pub value: u64,
+    pub file: String,
+    pub line: u32,
+}
+
+/// Everything a single-file scan produces: per-file findings plus the
+/// raw material for the cross-file rules.
+#[derive(Debug, Default)]
+pub struct FileScan {
+    pub findings: Vec<Finding>,
+    pub salts: Vec<SaltDef>,
+    /// Span/event/metric names this file emits.  Entries from
+    /// `format!` strings have their `{..}` holes replaced by `*`.
+    pub names: Vec<String>,
+}
+
+/// Does `rel` (a path relative to the lint root, `/`-separated) live
+/// under one of `dirs`?
+fn in_scope(rel: &str, dirs: &[&str]) -> bool {
+    rel.split('/').rev().skip(1).any(|seg| dirs.contains(&seg))
+}
+
+/// Lock ranks of the declared order (docs/LINTS.md).  Lower acquires
+/// earlier; an acquisition while a *higher* rank is held is a finding.
+const RANK_NAMES: [&str; 4] =
+    ["cache mutex", "PJRT session lock", "EmbTable row lock", "leaf mutex"];
+
+/// Map an identifier call site to (rank, returns-a-guard).
+/// `forward_locked` acquires and releases the session lock internally,
+/// so it never holds past the call.
+fn lock_marker(toks: &[Tok], i: usize) -> Option<(u8, bool)> {
+    match toks[i].text.as_str() {
+        "lock_cache" => Some((0, true)),
+        "forward_locked" => Some((1, false)),
+        "read_inner" | "write_inner" => Some((2, true)),
+        "lock_clean" => Some((3, true)),
+        "lock_ranked" => {
+            // Rank comes from the second argument: scan the call
+            // parens for a `Rank::` variant name.
+            let close = match_paren(toks, i + 1);
+            let rank = toks[i + 1..close].iter().find_map(|t| match t.text.as_str() {
+                "Cache" => Some(0),
+                "Session" => Some(1),
+                "EmbRows" => Some(2),
+                "Leaf" => Some(3),
+                _ => None,
+            });
+            Some((rank.unwrap_or(3), true))
+        }
+        _ => None,
+    }
+}
+
+fn match_paren(toks: &[Tok], open_idx: usize) -> usize {
+    let mut depth = 0i32;
+    for (k, t) in toks.iter().enumerate().skip(open_idx) {
+        match t.kind {
+            TokKind::Punct('(') => depth += 1,
+            TokKind::Punct(')') => {
+                depth -= 1;
+                if depth == 0 {
+                    return k;
+                }
+            }
+            _ => {}
+        }
+    }
+    toks.len()
+}
+
+/// Scan one file for the per-file rules and collect cross-file facts.
+pub fn scan_file(rel: &str, ft: &FileToks) -> FileScan {
+    let mut out = FileScan::default();
+    let toks = &ft.toks;
+    let n = toks.len();
+    let det = in_scope(rel, DETERMINISM_DIRS);
+    let panic_clean = in_scope(rel, PANIC_DIRS);
+    let serve_scope = in_scope(rel, &["serve"]);
+
+    // --- lock-order state -------------------------------------------------
+    struct HeldLock {
+        rank: u8,
+        depth: i32,
+        line: u32,
+        var: String,
+    }
+    let mut held: Vec<HeldLock> = Vec::new();
+    let mut depth = 0i32;
+    // `Some(var)` while the current statement started with `let var`.
+    let mut stmt_let: Option<String> = None;
+
+    let mut finding = |line: u32, rule: &'static str, msg: String, sink: &mut Vec<Finding>| {
+        sink.push(Finding { file: rel.to_string(), line, rule, msg });
+    };
+
+    let mut i = 0usize;
+    while i < n {
+        let t = &toks[i];
+        if t.in_test {
+            // Test code still moves brace depth so production lock
+            // scopes stay balanced around inline `#[cfg(test)]` items.
+            match t.kind {
+                TokKind::Punct('{') => depth += 1,
+                TokKind::Punct('}') => {
+                    depth -= 1;
+                    held.retain(|h| h.depth <= depth);
+                }
+                _ => {}
+            }
+            i += 1;
+            continue;
+        }
+        match t.kind {
+            TokKind::Punct('{') => {
+                depth += 1;
+                stmt_let = None;
+            }
+            TokKind::Punct('}') => {
+                depth -= 1;
+                held.retain(|h| h.depth <= depth);
+                stmt_let = None;
+            }
+            TokKind::Punct(';') => stmt_let = None,
+            TokKind::Ident => {
+                let prev_fn = i > 0 && toks[i - 1].is_ident("fn");
+                let next_paren = i + 1 < n && toks[i + 1].is_punct('(');
+                let next_bang_paren =
+                    i + 2 < n && toks[i + 1].is_punct('!') && toks[i + 2].is_punct('(');
+
+                match t.text.as_str() {
+                    "let" => {
+                        // Bound name: first ident after `let` / `let mut`.
+                        let mut j = i + 1;
+                        if j < n && toks[j].is_ident("mut") {
+                            j += 1;
+                        }
+                        let var = toks
+                            .get(j)
+                            .filter(|t| t.kind == TokKind::Ident)
+                            .map(|t| t.text.clone())
+                            .unwrap_or_default();
+                        stmt_let = Some(var);
+                    }
+                    // -------- determinism ---------------------------------
+                    "HashMap" | "HashSet" if det => finding(
+                        t.line,
+                        "determinism",
+                        format!(
+                            "std::collections::{} has per-process-random iteration order; \
+                             use util::Fx{}  (or a BTree/sorted structure) in deterministic modules",
+                            t.text, t.text
+                        ),
+                        &mut out.findings,
+                    ),
+                    "RandomState" | "thread_rng" | "from_entropy" if det => finding(
+                        t.line,
+                        "determinism",
+                        format!("ambient RNG `{}` in a deterministic module; derive from the run seed (util::Rng)", t.text),
+                        &mut out.findings,
+                    ),
+                    "SystemTime" if det => finding(
+                        t.line,
+                        "determinism",
+                        "wall-clock `SystemTime` read in a deterministic module".to_string(),
+                        &mut out.findings,
+                    ),
+                    "Instant"
+                        if det
+                            && i + 2 < n
+                            && toks[i + 1].is_punct(':')
+                            && toks[i + 2].is_punct(':')
+                            && toks.get(i + 3).is_some_and(|t| t.is_ident("now")) =>
+                    {
+                        finding(
+                            t.line,
+                            "determinism",
+                            "ambient `Instant::now()` in a deterministic module; if the value only \
+                             feeds latency metrics, waive with a reason"
+                                .to_string(),
+                            &mut out.findings,
+                        )
+                    }
+                    // -------- panic-clean ---------------------------------
+                    "unwrap" | "expect"
+                        if panic_clean && next_paren && i > 0 && toks[i - 1].is_punct('.') =>
+                    {
+                        finding(
+                            t.line,
+                            "panic-clean",
+                            format!(
+                                ".{}() in panic-clean production code; return a typed ServeError \
+                                 (docs/ROBUSTNESS.md) or use the unwrap_or* family",
+                                t.text
+                            ),
+                            &mut out.findings,
+                        )
+                    }
+                    // -------- lock-order: raw .lock() in serve/ -----------
+                    "lock"
+                        if serve_scope && next_paren && i > 0 && toks[i - 1].is_punct('.') =>
+                    {
+                        finding(
+                            t.line,
+                            "lock-order",
+                            "raw `.lock()` in serve/; acquire through lock_cache/lock_clean/\
+                             lock_ranked so poison recovery and the lock-order tracker apply"
+                                .to_string(),
+                            &mut out.findings,
+                        )
+                    }
+                    // -------- salt collection -----------------------------
+                    "const"
+                        if toks
+                            .get(i + 1)
+                            .is_some_and(|t| t.kind == TokKind::Ident && t.text.ends_with("_SALT")) =>
+                    {
+                        let name_tok = &toks[i + 1];
+                        // const NAME_SALT: u64 = <num>;
+                        let val = toks[i + 2..(i + 12).min(n)]
+                            .iter()
+                            .skip_while(|t| !t.is_punct('='))
+                            .find(|t| t.kind == TokKind::Num)
+                            .and_then(|t| parse_int(&t.text));
+                        if let Some(value) = val {
+                            out.salts.push(SaltDef {
+                                name: name_tok.text.clone(),
+                                value,
+                                file: rel.to_string(),
+                                line: name_tok.line,
+                            });
+                        }
+                    }
+                    // -------- name collection -----------------------------
+                    // All name-shaped string args, not just the first:
+                    // `trace::instant(match level { .. => "log.debug", .. })`
+                    // emits one of several literals from a single call.
+                    "span" | "event" if next_bang_paren => {
+                        for lit in name_args(toks, i + 2) {
+                            out.names.push(lit_to_pattern(&lit));
+                        }
+                    }
+                    "counter_add" | "counter_set" | "gauge_set" | "hist_record" | "instant"
+                        if next_paren =>
+                    {
+                        for lit in name_args(toks, i + 1) {
+                            out.names.push(lit_to_pattern(&lit));
+                        }
+                    }
+                    "closed_loop_snapshot" if next_paren => {
+                        if let Some(lit) = first_str_arg(toks, i + 1) {
+                            // Publishes `<prefix>.<stat>` for every
+                            // ClosedLoopStats field.
+                            out.names.push(format!("{}.*", lit_to_pattern(&lit)));
+                        }
+                    }
+                    _ => {}
+                }
+
+                // -------- lock-order acquisitions -------------------------
+                if next_paren && !prev_fn {
+                    if let Some((rank, returns_guard)) = lock_marker(toks, i) {
+                        for h in &held {
+                            if h.rank > rank || (h.rank == rank && rank <= 1) {
+                                finding(
+                                    t.line,
+                                    "lock-order",
+                                    format!(
+                                        "acquires {} while already holding {} (line {}); declared \
+                                         order is cache -> session -> rows -> leaf",
+                                        RANK_NAMES[rank as usize],
+                                        RANK_NAMES[h.rank as usize],
+                                        h.line
+                                    ),
+                                    &mut out.findings,
+                                );
+                            }
+                        }
+                        // Held only when directly bound: `let g = marker(..);`
+                        if returns_guard {
+                            let close = match_paren(toks, i + 1);
+                            let direct_bind = stmt_let.is_some()
+                                && toks.get(close + 1).is_some_and(|t| t.is_punct(';'));
+                            if direct_bind {
+                                held.push(HeldLock {
+                                    rank,
+                                    depth,
+                                    line: t.line,
+                                    var: stmt_let.clone().unwrap_or_default(),
+                                });
+                            }
+                        }
+                    }
+                    // Explicit early release: `drop(var)`.
+                    if t.is_ident("drop") {
+                        if let Some(v) = toks.get(i + 2).filter(|t| t.kind == TokKind::Ident) {
+                            if toks.get(i + 3).is_some_and(|t| t.is_punct(')')) {
+                                held.retain(|h| h.var != v.text);
+                            }
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    out
+}
+
+/// First string literal inside the call/macro parens opened at
+/// `open_idx` (bounded to the argument list).
+fn first_str_arg(toks: &[Tok], open_idx: usize) -> Option<String> {
+    let close = match_paren(toks, open_idx);
+    toks[open_idx..close].iter().find(|t| t.kind == TokKind::Str).map(|t| t.text.clone())
+}
+
+/// Every *name-shaped* string literal inside the call/macro parens:
+/// dotted lowercase, `{hole}`s allowed.  The shape filter keeps attr
+/// values out of the name table.
+fn name_args(toks: &[Tok], open_idx: usize) -> Vec<String> {
+    let close = match_paren(toks, open_idx);
+    toks[open_idx..close]
+        .iter()
+        .filter(|t| t.kind == TokKind::Str)
+        .filter(|t| {
+            t.text.contains('.')
+                && t.text.chars().all(|c| {
+                    c.is_ascii_lowercase()
+                        || c.is_ascii_digit()
+                        || matches!(c, '.' | '_' | '{' | '}' | '+' | '-')
+                })
+        })
+        .map(|t| t.text.clone())
+        .collect()
+}
+
+/// Turn a (possibly `format!`) literal into a name-table entry:
+/// `{..}` holes become `*` wildcards.
+fn lit_to_pattern(lit: &str) -> String {
+    let mut out = String::with_capacity(lit.len());
+    let mut chars = lit.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '{' => {
+                if chars.peek() == Some(&'{') {
+                    chars.next();
+                    out.push('{');
+                    continue;
+                }
+                for c2 in chars.by_ref() {
+                    if c2 == '}' {
+                        break;
+                    }
+                }
+                out.push('*');
+            }
+            '}' => {
+                if chars.peek() == Some(&'}') {
+                    chars.next();
+                }
+                out.push('}');
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Parse a Rust integer literal (decimal / 0x / 0o / 0b, `_` and type
+/// suffixes tolerated).
+pub fn parse_int(text: &str) -> Option<u64> {
+    let t: String = text.chars().filter(|&c| c != '_').collect();
+    let (radix, body) = if let Some(b) = t.strip_prefix("0x").or_else(|| t.strip_prefix("0X")) {
+        (16, b)
+    } else if let Some(b) = t.strip_prefix("0o") {
+        (8, b)
+    } else if let Some(b) = t.strip_prefix("0b") {
+        (2, b)
+    } else {
+        (10, t.as_str())
+    };
+    let digits: String = body.chars().take_while(|c| c.is_digit(radix)).collect();
+    if digits.is_empty() {
+        return None;
+    }
+    u64::from_str_radix(&digits, radix).ok()
+}
+
+/// Do two `*`-wildcard patterns admit a common concrete name?
+/// (Concrete strings are patterns without `*`.)  Names are short, so
+/// the exponential corner of the classic recursion is irrelevant.
+pub fn patterns_compatible(a: &str, b: &str) -> bool {
+    fn go(a: &[u8], b: &[u8]) -> bool {
+        match (a.first(), b.first()) {
+            (None, None) => true,
+            (Some(b'*'), _) => go(&a[1..], b) || (!b.is_empty() && go(a, &b[1..])),
+            (_, Some(b'*')) => go(a, &b[1..]) || (!a.is_empty() && go(&a[1..], b)),
+            (Some(x), Some(y)) => x == y && go(&a[1..], &b[1..]),
+            _ => false,
+        }
+    }
+    go(a.as_bytes(), b.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tokens::tokenize;
+    use super::*;
+
+    fn rules_of(rel: &str, src: &str) -> Vec<&'static str> {
+        scan_file(rel, &tokenize(src)).findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn determinism_scoped_to_listed_dirs() {
+        let src = "fn f() { let m: HashMap<u32, u32> = HashMap::new(); }";
+        assert_eq!(rules_of("sampling/x.rs", src), ["determinism", "determinism"]);
+        assert!(rules_of("eval/x.rs", src).is_empty(), "eval/ is out of scope");
+        assert!(rules_of("sampling/x.rs", "fn f() { let m = FxHashMap::default(); }").is_empty());
+    }
+
+    #[test]
+    fn instant_now_flagged_but_stored_elapsed_is_not() {
+        assert_eq!(
+            rules_of("trainer/x.rs", "fn f() { let t0 = Instant::now(); }"),
+            ["determinism"]
+        );
+        assert!(rules_of("trainer/x.rs", "fn f(t0: Instant) { t0.elapsed(); }").is_empty());
+    }
+
+    #[test]
+    fn panic_clean_token_accurate() {
+        assert_eq!(rules_of("serve/x.rs", "fn f() { x.unwrap(); }"), ["panic-clean"]);
+        assert!(rules_of("serve/x.rs", "fn f() { x.unwrap_or(0); }").is_empty());
+        assert!(rules_of("serve/x.rs", "fn f() { let s = \".unwrap()\"; }").is_empty());
+        assert!(rules_of("trainer/x.rs", "fn f() { x.unwrap(); }").is_empty(), "trainer not scoped");
+    }
+
+    #[test]
+    fn lock_order_descending_flagged() {
+        let bad = "fn f(t: &T, m: &M) { let g = t.read_inner(); let c = lock_cache(m); }";
+        assert_eq!(rules_of("dist/x.rs", bad), ["lock-order"]);
+        let good = "fn f(t: &T, m: &M) { let c = lock_cache(m); let g = t.read_inner(); }";
+        assert!(rules_of("dist/x.rs", good).is_empty());
+    }
+
+    #[test]
+    fn lock_order_scope_release() {
+        // Guard released by its block before the lower-rank acquisition.
+        let ok = "fn f(t: &T, m: &M) { { let g = t.read_inner(); } let c = lock_cache(m); }";
+        assert!(rules_of("dist/x.rs", ok).is_empty());
+        // Temporary guard (not let-bound to the guard itself) releases
+        // within the statement.
+        let tmp = "fn f(rx: &M, m: &M) { let j = lock_clean(rx).recv(); let c = lock_cache(m); }";
+        assert!(rules_of("serve/x.rs", tmp).is_empty());
+    }
+
+    #[test]
+    fn salts_collected_and_parsed() {
+        let s = scan_file(
+            "trainer/x.rs",
+            &tokenize("const A_SALT: u64 = 0x6e63;\nconst B_SALT: u64 = 441;"),
+        );
+        assert_eq!(s.salts.len(), 2);
+        assert_eq!(s.salts[0].value, 0x6e63);
+        assert_eq!(s.salts[1].value, 441);
+    }
+
+    #[test]
+    fn names_collected_with_patterns() {
+        let src = r#"
+            fn f() {
+                let _s = crate::span!("serve.batch.forward", seq = seq);
+                crate::obs::metrics::counter_set("dist.local_elems", 1);
+                gauge_set(&format!("pipeline.stage_secs.{name}"), 0.0);
+                metrics::publish(metrics::closed_loop_snapshot("serve.uncached", &s));
+            }
+        "#;
+        let s = scan_file("config/x.rs", &tokenize(src));
+        assert!(s.names.contains(&"serve.batch.forward".to_string()));
+        assert!(s.names.contains(&"dist.local_elems".to_string()));
+        assert!(s.names.contains(&"pipeline.stage_secs.*".to_string()));
+        assert!(s.names.contains(&"serve.uncached.*".to_string()));
+    }
+
+    #[test]
+    fn instant_match_collects_every_branch_name() {
+        let src = r#"
+            fn f(l: Level) {
+                crate::obs::trace::instant(
+                    match l { Level::Debug => "log.debug", Level::Warn => "log.warn" },
+                    Vec::new(),
+                );
+            }
+        "#;
+        let s = scan_file("obs/x.rs", &tokenize(src));
+        assert!(s.names.contains(&"log.debug".to_string()));
+        assert!(s.names.contains(&"log.warn".to_string()));
+    }
+
+    #[test]
+    fn pattern_compatibility() {
+        assert!(patterns_compatible("serve.uncached.requests", "serve.uncached.*"));
+        assert!(patterns_compatible("serve.*.*", "serve.uncached.*"));
+        assert!(patterns_compatible("trainer.multi.*.loss", "trainer.multi.*.loss"));
+        assert!(!patterns_compatible("serve.pool.batches", "serve.uncached.*"));
+        assert!(!patterns_compatible("loader.build", "loader.consume"));
+    }
+}

@@ -1,0 +1,463 @@
+//! Rust tokenizer for the in-repo lint pass (`gs lint`).
+//!
+//! Deliberately small: the rules in `rules.rs` need identifier/punct
+//! sequences with line numbers, string-literal *contents* (for the
+//! span/metric name table), comment text (for `lint:allow` waivers)
+//! and a per-token `in_test` flag — not a full parse tree.  The value
+//! over the retired `awk` greps in scripts/test.sh is exactly the four
+//! things a line-regex can't do:
+//!
+//! * comment and string contents never look like code (`// .unwrap()`
+//!   in prose is not a finding),
+//! * `#[cfg(test)]` / `#[test]` items are skipped *per item* by brace
+//!   matching, not by truncating the file at the first attribute — a
+//!   production `fn` after a test `mod` is still linted,
+//! * raw strings, char literals and lifetimes don't confuse quoting,
+//! * waivers are parsed with their rule name and reason, so an
+//!   unreasoned or typo'd waiver is itself a finding.
+
+/// Token kind.  `Punct` carries the single character; multi-char
+/// operators arrive as consecutive puncts (`::` is `Punct(':')` twice),
+/// which is all the rules need.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TokKind {
+    Ident,
+    Num,
+    /// String literal — `text` holds the raw *contents* (escapes not
+    /// decoded; the name table only carries names that need none).
+    Str,
+    Char,
+    Lifetime,
+    Punct(char),
+}
+
+/// One token with its source line (1-based) and whether it sits inside
+/// a `#[cfg(test)]` / `#[test]` item.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+    pub in_test: bool,
+}
+
+impl Tok {
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct(c)
+    }
+
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+}
+
+/// A `// lint:allow(<rule>): reason` waiver comment.
+#[derive(Debug, Clone)]
+pub struct Waiver {
+    pub rule: String,
+    /// Reason text after the colon; empty when the author omitted it
+    /// (which the `waiver` meta-rule reports as a finding).
+    pub reason: String,
+    pub line: u32,
+}
+
+/// Tokenized file: token stream plus the waivers its comments declare.
+#[derive(Debug, Default)]
+pub struct FileToks {
+    pub toks: Vec<Tok>,
+    pub waivers: Vec<Waiver>,
+}
+
+/// Tokenize `src`, marking test-only regions and collecting waivers.
+pub fn tokenize(src: &str) -> FileToks {
+    let mut out = FileToks::default();
+    let b: Vec<char> = src.chars().collect();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let n = b.len();
+    while i < n {
+        let c = b[i];
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            c if c.is_whitespace() => i += 1,
+            '/' if i + 1 < n && b[i + 1] == '/' => {
+                let start = i;
+                while i < n && b[i] != '\n' {
+                    i += 1;
+                }
+                let text: String = b[start..i].iter().collect();
+                // Waivers are plain `//` comments only: doc comments
+                // (`///`, `//!`) *describing* the waiver syntax must
+                // not parse as waivers themselves.
+                let is_doc = text.starts_with("///") || text.starts_with("//!");
+                if !is_doc {
+                    if let Some(w) = parse_waiver(&text, line) {
+                        out.waivers.push(w);
+                    }
+                }
+            }
+            '/' if i + 1 < n && b[i + 1] == '*' => {
+                // Nested block comments, per the Rust grammar.
+                let mut depth = 1;
+                i += 2;
+                while i < n && depth > 0 {
+                    if b[i] == '\n' {
+                        line += 1;
+                        i += 1;
+                    } else if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            '"' => {
+                let (content, ni, nl) = scan_string(&b, i + 1, line);
+                out.toks.push(tok(TokKind::Str, content, line));
+                line = nl;
+                i = ni;
+            }
+            'r' | 'b' if starts_raw_or_byte_string(&b, i) => {
+                let (kind, content, ni, nl) = scan_prefixed_string(&b, i, line);
+                out.toks.push(tok(kind, content, line));
+                line = nl;
+                i = ni;
+            }
+            '\'' => {
+                // Lifetime (`'a`) vs char literal (`'a'`, `'\n'`).
+                let mut j = i + 1;
+                if j < n && (b[j].is_alphabetic() || b[j] == '_') {
+                    let mut k = j;
+                    while k < n && (b[k].is_alphanumeric() || b[k] == '_') {
+                        k += 1;
+                    }
+                    if k < n && b[k] == '\'' {
+                        // 'a' — a char literal after all.
+                        out.toks.push(tok(TokKind::Char, b[j..k].iter().collect(), line));
+                        i = k + 1;
+                    } else {
+                        out.toks.push(tok(TokKind::Lifetime, b[j..k].iter().collect(), line));
+                        i = k;
+                    }
+                } else {
+                    // Escaped or punctuation char literal: '\n', '\'', '('.
+                    let mut content = String::new();
+                    while j < n && b[j] != '\'' {
+                        if b[j] == '\\' {
+                            content.push(b[j]);
+                            j += 1;
+                        }
+                        if j < n {
+                            content.push(b[j]);
+                            j += 1;
+                        }
+                    }
+                    out.toks.push(tok(TokKind::Char, content, line));
+                    i = j + 1;
+                }
+            }
+            c if c.is_alphabetic() || c == '_' => {
+                let start = i;
+                while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+                out.toks.push(tok(TokKind::Ident, b[start..i].iter().collect(), line));
+            }
+            c if c.is_ascii_digit() => {
+                // Integer/float body without the dot (so `0..10` stays
+                // three tokens); hex/binary digits and suffixes are
+                // alphanumeric and come along.
+                let start = i;
+                while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+                out.toks.push(tok(TokKind::Num, b[start..i].iter().collect(), line));
+            }
+            c => {
+                out.toks.push(tok(TokKind::Punct(c), c.to_string(), line));
+                i += 1;
+            }
+        }
+    }
+    mark_test_items(&mut out.toks);
+    out
+}
+
+fn tok(kind: TokKind, text: String, line: u32) -> Tok {
+    Tok { kind, text, line, in_test: false }
+}
+
+fn starts_raw_or_byte_string(b: &[char], i: usize) -> bool {
+    // r"...", r#"..."#, b"...", br"...", b'x' is handled as char-ish.
+    let n = b.len();
+    match b[i] {
+        'r' => {
+            let mut j = i + 1;
+            while j < n && b[j] == '#' {
+                j += 1;
+            }
+            j < n && b[j] == '"'
+        }
+        'b' => {
+            if i + 1 < n && b[i + 1] == '"' {
+                return true;
+            }
+            if i + 1 < n && b[i + 1] == 'r' {
+                let mut j = i + 2;
+                while j < n && b[j] == '#' {
+                    j += 1;
+                }
+                return j < n && b[j] == '"';
+            }
+            false
+        }
+        _ => false,
+    }
+}
+
+/// Scan a normal (escapable) string body starting after the opening
+/// quote; returns (contents, next index, next line).
+fn scan_string(b: &[char], mut i: usize, mut line: u32) -> (String, usize, u32) {
+    let n = b.len();
+    let mut content = String::new();
+    while i < n && b[i] != '"' {
+        if b[i] == '\\' && i + 1 < n {
+            content.push(b[i]);
+            content.push(b[i + 1]);
+            if b[i + 1] == '\n' {
+                line += 1;
+            }
+            i += 2;
+            continue;
+        }
+        if b[i] == '\n' {
+            line += 1;
+        }
+        content.push(b[i]);
+        i += 1;
+    }
+    (content, i + 1, line)
+}
+
+/// Scan `r"…"`, `r#"…"#`, `b"…"`, `br#"…"#` starting at the prefix.
+fn scan_prefixed_string(b: &[char], mut i: usize, mut line: u32) -> (TokKind, String, usize, u32) {
+    let n = b.len();
+    let mut raw = false;
+    if b[i] == 'b' {
+        i += 1;
+    }
+    if i < n && b[i] == 'r' {
+        raw = true;
+        i += 1;
+    }
+    let mut hashes = 0usize;
+    while i < n && b[i] == '#' {
+        hashes += 1;
+        i += 1;
+    }
+    i += 1; // opening quote
+    if !raw {
+        let (content, ni, nl) = scan_string(b, i, line);
+        return (TokKind::Str, content, ni, nl);
+    }
+    let mut content = String::new();
+    'scan: while i < n {
+        if b[i] == '"' {
+            // Need `"` followed by `hashes` hashes to close.
+            let mut k = i + 1;
+            let mut seen = 0usize;
+            while k < n && b[k] == '#' && seen < hashes {
+                k += 1;
+                seen += 1;
+            }
+            if seen == hashes {
+                i = k;
+                break 'scan;
+            }
+        }
+        if b[i] == '\n' {
+            line += 1;
+        }
+        content.push(b[i]);
+        i += 1;
+    }
+    (TokKind::Str, content, i, line)
+}
+
+/// Parse `lint:allow(rule)` / `lint:allow(rule): reason` out of a line
+/// comment.
+fn parse_waiver(comment: &str, line: u32) -> Option<Waiver> {
+    let at = comment.find("lint:allow(")?;
+    let rest = &comment[at + "lint:allow(".len()..];
+    let close = rest.find(')')?;
+    let rule = rest[..close].trim().to_string();
+    let after = rest[close + 1..].trim_start();
+    let reason = after.strip_prefix(':').map(|r| r.trim().to_string()).unwrap_or_default();
+    Some(Waiver { rule, reason, line })
+}
+
+/// Mark every token belonging to a `#[cfg(test)]` or `#[test]` item
+/// (attributes included, through the item's closing brace or `;`).
+fn mark_test_items(toks: &mut [Tok]) {
+    let n = toks.len();
+    let mut i = 0usize;
+    while i < n {
+        if toks[i].is_punct('#') && i + 1 < n && toks[i + 1].is_punct('[') {
+            let close = match_group(toks, i + 1, '[', ']');
+            let group = &toks[i + 2..close.min(n)];
+            let is_test_attr = match group.first() {
+                Some(t) if t.is_ident("test") => true,
+                Some(t) if t.is_ident("cfg") => group.iter().any(|t| t.is_ident("test")),
+                _ => false,
+            };
+            if !is_test_attr {
+                i = close + 1;
+                continue;
+            }
+            // Skip any further attributes, then span the item itself.
+            let mut j = close + 1;
+            while j + 1 < n && toks[j].is_punct('#') && toks[j + 1].is_punct('[') {
+                j = match_group(toks, j + 1, '[', ']') + 1;
+            }
+            let end = item_end(toks, j);
+            for t in toks[i..end.min(n)].iter_mut() {
+                t.in_test = true;
+            }
+            i = end;
+            continue;
+        }
+        i += 1;
+    }
+}
+
+/// Index of the token closing the group opened at `open_idx`.
+fn match_group(toks: &[Tok], open_idx: usize, open: char, close: char) -> usize {
+    let mut depth = 0i32;
+    for (k, t) in toks.iter().enumerate().skip(open_idx) {
+        if t.is_punct(open) {
+            depth += 1;
+        } else if t.is_punct(close) {
+            depth -= 1;
+            if depth == 0 {
+                return k;
+            }
+        }
+    }
+    toks.len()
+}
+
+/// One past the end of the item starting at `start`: the first
+/// top-level `;`, or the matching `}` of the first top-level `{`.
+fn item_end(toks: &[Tok], start: usize) -> usize {
+    let n = toks.len();
+    let (mut par, mut brk) = (0i32, 0i32);
+    let mut k = start;
+    while k < n {
+        match toks[k].kind {
+            TokKind::Punct('(') => par += 1,
+            TokKind::Punct(')') => par -= 1,
+            TokKind::Punct('[') => brk += 1,
+            TokKind::Punct(']') => brk -= 1,
+            TokKind::Punct(';') if par == 0 && brk == 0 => return k + 1,
+            TokKind::Punct('{') if par == 0 && brk == 0 => {
+                return match_group(toks, k, '{', '}') + 1;
+            }
+            _ => {}
+        }
+        k += 1;
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_comments_and_chars_do_not_leak_tokens() {
+        let src = r##"
+            fn f() {
+                let s = "a.unwrap() // not code";
+                let r = r#"HashMap "quoted""#;
+                let c = '\'';
+                let lt: &'static str = s; // .expect( in prose
+            }
+        "##;
+        let ft = tokenize(src);
+        assert!(!ft.toks.iter().any(|t| t.kind == TokKind::Ident && t.text == "unwrap"));
+        assert!(!ft.toks.iter().any(|t| t.kind == TokKind::Ident && t.text == "HashMap"));
+        assert!(ft.toks.iter().any(|t| t.kind == TokKind::Lifetime && t.text == "static"));
+        let strs: Vec<&str> = ft
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Str)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(strs, ["a.unwrap() // not code", "HashMap \"quoted\""]);
+    }
+
+    #[test]
+    fn cfg_test_marks_only_its_item() {
+        let src = r#"
+            fn prod_before() { x.unwrap(); }
+            #[cfg(test)]
+            mod tests {
+                fn t() { y.unwrap(); }
+            }
+            fn prod_after() { z.unwrap(); }
+        "#;
+        let ft = tokenize(src);
+        let unwraps: Vec<bool> = ft
+            .toks
+            .iter()
+            .filter(|t| t.is_ident("unwrap"))
+            .map(|t| t.in_test)
+            .collect();
+        assert_eq!(unwraps, [false, true, false], "only the test-mod unwrap is test code");
+    }
+
+    #[test]
+    fn test_attr_marks_fn() {
+        let src = "#[test]\nfn check() { a.unwrap(); }\nfn prod() { b.unwrap(); }";
+        let ft = tokenize(src);
+        let unwraps: Vec<bool> =
+            ft.toks.iter().filter(|t| t.is_ident("unwrap")).map(|t| t.in_test).collect();
+        assert_eq!(unwraps, [true, false]);
+    }
+
+    #[test]
+    fn waivers_parse_rule_and_reason() {
+        let src = "fn f() {\n  x(); // lint:allow(determinism): timing only\n  // lint:allow(panic-clean)\n}\n";
+        let ft = tokenize(src);
+        assert_eq!(ft.waivers.len(), 2);
+        assert_eq!(ft.waivers[0].rule, "determinism");
+        assert_eq!(ft.waivers[0].reason, "timing only");
+        assert_eq!(ft.waivers[0].line, 2);
+        assert_eq!(ft.waivers[1].rule, "panic-clean");
+        assert_eq!(ft.waivers[1].reason, "");
+    }
+
+    #[test]
+    fn doc_comments_describing_waivers_are_not_waivers() {
+        let src = "/// Use `// lint:allow(determinism): why` here.\n\
+                   //! The `// lint:allow(<rule>)` syntax.\n\
+                   fn f() {}\n";
+        let ft = tokenize(src);
+        assert!(ft.waivers.is_empty());
+    }
+
+    #[test]
+    fn line_numbers_survive_multiline_strings() {
+        let src = "let a = \"x\ny\";\nfn f() {}\n";
+        let ft = tokenize(src);
+        let f = ft.toks.iter().find(|t| t.is_ident("f")).unwrap();
+        assert_eq!(f.line, 3);
+    }
+}

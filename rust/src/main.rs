@@ -49,6 +49,11 @@ fn main() -> Result<()> {
             };
             print!("{}", graphstorm::obs::metrics::render_file(path)?);
         }
+        // Static-analysis gate over the repo's own source tree
+        // (docs/LINTS.md) — the blocking lint in scripts/test.sh.
+        "lint" => {
+            graphstorm::lint::run_cli(rest)?;
+        }
         "trace-check" => {
             let Some(path) = rest.first() else {
                 bail!("usage: gs trace-check PATH (a JSONL trace from --trace)");

@@ -33,7 +33,7 @@ pub struct ServeRequest {
 
 impl ServeRequest {
     pub fn new(nt: u32, id: u32, reply: Sender<Result<Vec<f32>, ServeError>>) -> ServeRequest {
-        ServeRequest { nt, id, t_enq: Instant::now(), reply }
+        ServeRequest { nt, id, t_enq: Instant::now(), reply } // lint:allow(determinism): queue-latency stamp only
     }
 }
 
@@ -82,9 +82,9 @@ impl MicroBatcher {
                 }
             };
             pend.push(first);
-            let deadline = Instant::now() + self.cfg.deadline;
+            let deadline = Instant::now() + self.cfg.deadline; // lint:allow(determinism): deadline pacing; batch content is seq-deterministic
             while pend.len() < cap {
-                let now = Instant::now();
+                let now = Instant::now(); // lint:allow(determinism): deadline pacing; batch content is seq-deterministic
                 if now >= deadline {
                     break;
                 }

@@ -27,7 +27,8 @@
 use anyhow::{anyhow, bail, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use super::error::lock_clean;
+use super::error::lock_ranked;
+use crate::util::lockorder::Rank;
 use crate::dataloader::{BatchFactory, GsDataset, LembTouch};
 use crate::runtime::{ArtifactSpec, InferSession, Runtime, Tensor};
 use crate::sampling::{Block, BlockShape};
@@ -255,7 +256,7 @@ impl<'a> InferenceEngine<'a> {
                 // Poison-tolerant: the lock serializes execution, it
                 // guards no data — a panicked previous holder doesn't
                 // invalidate anything (error.rs policy).
-                let _serial = exec_lock.map(lock_clean);
+                let _serial = exec_lock.map(|m| lock_ranked(m, Rank::Session));
                 let outs = sess.infer_batch(batch)?;
                 let rows = outs[0].as_f32()?;
                 sur.out.clear();

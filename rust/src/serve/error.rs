@@ -23,9 +23,11 @@
 //! ever served out of a critical section that died halfway.
 
 use std::fmt;
+use std::ops::{Deref, DerefMut};
 use std::sync::{Mutex, MutexGuard};
 
 use super::cache::EmbeddingCache;
+use crate::util::lockorder::{self, Rank};
 
 /// The serving stack's error taxonomy.  `retryable()` is the split
 /// the pool's retry loop keys on.
@@ -106,16 +108,53 @@ impl fmt::Display for ServeError {
 
 impl std::error::Error for ServeError {}
 
-/// Lock a mutex, recovering from poisoning via
-/// `PoisonError::into_inner`.  Use for state that is consistent at
-/// every instruction boundary (channel receivers, one-shot fault
-/// sets, the PJRT execution lock — which guards *serialization*, not
-/// data).  The serving cache goes through [`lock_cache`] instead.
-pub fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    match m.lock() {
+/// A poison-recovered mutex guard stamped with its lock-order rank:
+/// the [`lockorder`] token lives exactly as long as the guard, so the
+/// debug-build tracker sees real hold intervals (docs/LINTS.md,
+/// lock-order rule).
+pub struct RankedGuard<'a, T> {
+    guard: MutexGuard<'a, T>,
+    _order: lockorder::Held,
+}
+
+impl<T> Deref for RankedGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        &self.guard
+    }
+}
+
+impl<T> DerefMut for RankedGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.guard
+    }
+}
+
+/// Lock a mutex at an explicit [`Rank`], recovering from poisoning via
+/// `PoisonError::into_inner`.  The rank is asserted against the
+/// declared order (cache → session → rows → leaf) in debug builds.
+pub fn lock_ranked<T>(m: &Mutex<T>, rank: Rank) -> RankedGuard<'_, T> {
+    // Acquire the order token *before* blocking: a deadlock-shaped
+    // ordering should assert even when the timing works out.
+    let _order = lockorder::acquire(rank);
+    // lint:allow(lock-order): this is the ranked helper the rule tells everyone else to call
+    let guard = match m.lock() {
         Ok(g) => g,
         Err(poisoned) => poisoned.into_inner(),
-    }
+    };
+    RankedGuard { guard, _order }
+}
+
+/// Lock a leaf mutex, recovering from poisoning via
+/// `PoisonError::into_inner`.  Use for state that is consistent at
+/// every instruction boundary (channel receivers, one-shot fault
+/// sets, counters); such mutexes are innermost in the declared lock
+/// order.  The serving cache goes through [`lock_cache`] instead, and
+/// the PJRT execution lock through [`lock_ranked`] at
+/// [`Rank::Session`].
+pub fn lock_clean<T>(m: &Mutex<T>) -> RankedGuard<'_, T> {
+    lock_ranked(m, Rank::Leaf)
 }
 
 /// Lock the serving cache, recovering from poisoning with a
@@ -125,15 +164,18 @@ pub fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 /// bumping the generation marks everything resident as stale so the
 /// recovered cache starts from a clean "miss everything" state and
 /// only rows re-stamped by a live serving path are served again.
-pub fn lock_cache(m: &Mutex<EmbeddingCache>) -> MutexGuard<'_, EmbeddingCache> {
-    match m.lock() {
+pub fn lock_cache(m: &Mutex<EmbeddingCache>) -> RankedGuard<'_, EmbeddingCache> {
+    let _order = lockorder::acquire(Rank::Cache);
+    // lint:allow(lock-order): the cache-ranked helper itself; poison recovery bumps the generation
+    let guard = match m.lock() {
         Ok(g) => g,
         Err(poisoned) => {
             let mut g = poisoned.into_inner();
             g.bump_generation();
             g
         }
-    }
+    };
+    RankedGuard { guard, _order }
 }
 
 #[cfg(test)]

@@ -51,7 +51,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::obs::metrics;
-use crate::util::Rng;
+use crate::util::{FxHashMap, FxHashSet, Rng};
 
 /// Parameters for the canonical closed-loop serving benchmark
 /// (`gs serve-bench` / the `serve` pipeline stage): a Zipf trace is
@@ -118,7 +118,7 @@ pub fn run_serve_bench(
     let mut rng = Rng::seed_from(p.seed ^ 0x5e12);
     let trace: Vec<(u32, u32)> =
         (0..p.requests).map(|_| (nt, zipf.sample(&mut rng) as u32)).collect();
-    let mut seen = std::collections::HashSet::new();
+    let mut seen = FxHashSet::default();
     let distinct: Vec<(u32, u32)> = trace.iter().filter(|&&q| seen.insert(q)).copied().collect();
 
     // Faults go into the uncached arm: the one actually cutting
@@ -181,7 +181,7 @@ pub fn run_serve_bench(
         replies2 = rr;
     }
 
-    let mut expected: std::collections::HashMap<(u32, u32), Vec<f32>> = Default::default();
+    let mut expected: FxHashMap<(u32, u32), Vec<f32>> = Default::default();
     let mut identical = true;
     for (k, v) in replies0.into_iter().chain(replies1).chain(replies2) {
         identical &= expected.entry(k).or_insert_with(|| v.clone()) == &v;

@@ -53,7 +53,7 @@ impl OfflineInference {
         ntype: u32,
         out_dir: &Path,
     ) -> Result<OfflineReport> {
-        let t0 = std::time::Instant::now();
+        let t0 = std::time::Instant::now(); // lint:allow(determinism): stage wall-time for the report only
         std::fs::create_dir_all(out_dir)
             .with_context(|| format!("create {}", out_dir.display()))?;
         sweep_stale_tmp(out_dir)?;

@@ -181,7 +181,7 @@ fn execute_batch<'a>(
     retry_backoff: Duration,
 ) -> BatchExec {
     let _span = crate::span!("serve.batch.forward", seq = seq, rows = seeds.len());
-    let t_exec = Instant::now();
+    let t_exec = Instant::now(); // lint:allow(determinism): exec-latency histogram stamp only
     let mut attempt = 0usize;
     let out = loop {
         let injected = faults.and_then(|f| f.take(seq));
@@ -541,7 +541,7 @@ impl EnginePool {
                     let job_seeds = seeds.clone();
                     crate::event!("serve.batch.dispatch", seq = seq, rows = job_seeds.len());
                     batches.insert(seq, PendingBatch { seeds, waiters });
-                    enqueue!(Job { seq, seeds: job_seeds, t_disp: Instant::now() });
+                    enqueue!(Job { seq, seeds: job_seeds, t_disp: Instant::now() }); // lint:allow(determinism): queue-latency stamp only
                 }};
             }
 
@@ -550,7 +550,7 @@ impl EnginePool {
                     break;
                 }
                 let msg = if let Some(dl) = deadline {
-                    let now = Instant::now();
+                    let now = Instant::now(); // lint:allow(determinism): deadline pacing; batch content is seq-deterministic
                     if now >= dl {
                         None
                     } else {
@@ -627,7 +627,7 @@ impl EnginePool {
                             forming_seeds.push((req.nt, req.id));
                             forming_waiters.push((slot, req));
                             if forming_seeds.len() == 1 {
-                                deadline = Some(Instant::now() + self.cfg.batcher.deadline);
+                                deadline = Some(Instant::now() + self.cfg.batcher.deadline); // lint:allow(determinism): deadline pacing; batch content is seq-deterministic
                             }
                             if forming_seeds.len() >= cap {
                                 dispatch!();
@@ -643,7 +643,7 @@ impl EnginePool {
                         // live in the pending table, so nothing was
                         // lost with the worker.
                         if let Some(b) = batches.get(&seq) {
-                            enqueue!(Job { seq, seeds: b.seeds.clone(), t_disp: Instant::now() });
+                            enqueue!(Job { seq, seeds: b.seeds.clone(), t_disp: Instant::now() }); // lint:allow(determinism): queue-latency stamp only
                         }
                     }
                     Some(Msg::WorkerExit) => {
@@ -713,7 +713,7 @@ pub fn closed_loop_with_faults(
     let pool = EnginePool::new(cfg);
     let (tx, rx) = std::sync::mpsc::sync_channel::<ServeRequest>(4096);
     let clients = clients.max(1);
-    let t0 = Instant::now();
+    let t0 = Instant::now(); // lint:allow(determinism): bench wall-clock only
     let mut replies: Vec<((u32, u32), Vec<f32>)> = Vec::new();
     let mut first_err: Option<anyhow::Error> = None;
     std::thread::scope(|scope| {

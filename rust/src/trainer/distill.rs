@@ -15,7 +15,7 @@ use crate::dataloader::{
 use crate::runtime::{ArtifactSpec, InferSession, Runtime, Tensor, TrainState};
 use crate::sampling::{BlockShape, EdgeExclusion};
 use crate::trainer::TrainOptions;
-use crate::util::Rng;
+use crate::util::{FxHashMap, Rng};
 
 /// Per-epoch node subsample for distillation (shared by the
 /// standalone trainer and the multi-task distill head).
@@ -264,7 +264,7 @@ impl DistillTrainer {
         let hd = spec.batch_spec("emb").unwrap().shape[1];
         assert!(h <= hd);
         let mut st = TrainState::new(rt, "mlp_train")?;
-        let id_index: std::collections::HashMap<u32, usize> =
+        let id_index: FxHashMap<u32, usize> =
             ids.iter().enumerate().map(|(i, &x)| (x, i)).collect();
         let mut rng = Rng::seed_from(opts.seed ^ 0x9206e);
         let train: Vec<u32> = ids

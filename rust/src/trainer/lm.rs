@@ -263,7 +263,7 @@ impl LmTrainer {
         lm_params: &[(String, Tensor)],
         opts: &TrainOptions,
     ) -> Result<f64> {
-        let t0 = std::time::Instant::now();
+        let t0 = std::time::Instant::now(); // lint:allow(determinism): epoch wall-time for the report only
         let sess = InferSession::new(rt, &self.embed_artifact, lm_params)?;
         let spec = sess.exe.spec.clone();
         let b = spec.batch_spec("tokens").unwrap().shape[0];

@@ -119,7 +119,7 @@ impl LpTrainer {
         // Per-worker factories pinned across epochs.
         let mut fpool = Vec::new();
         for epoch in 0..opts.epochs {
-            let t0 = std::time::Instant::now();
+            let t0 = std::time::Instant::now(); // lint:allow(determinism): epoch wall-time for the report only
             let _sp = crate::span!("trainer.lp.epoch", epoch = epoch);
             let chunks = IdChunks::new(all_train.clone(), b, self.max_train_edges, &mut rng);
             let mut epoch_loss = 0.0f32;

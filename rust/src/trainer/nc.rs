@@ -59,7 +59,7 @@ impl NodeTrainer {
         let mut pfl = PrefetchingLoader::new(&loader, ds, opts.prefetch_cfg());
 
         for epoch in 0..opts.epochs {
-            let t0 = std::time::Instant::now();
+            let t0 = std::time::Instant::now(); // lint:allow(determinism): epoch wall-time for the report only
             let _sp = crate::span!("trainer.nc.epoch", epoch = epoch);
             let chunks = IdChunks::new(train_ids.clone(), b, None, &mut rng);
             let mut epoch_loss = 0.0f32;

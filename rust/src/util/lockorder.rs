@@ -1,0 +1,154 @@
+//! Runtime lock-order tracker: asserts, in debug builds, the same
+//! acquisition DAG the static `lock-order` lint rule checks —
+//!
+//!     cache mutex  ->  PJRT session lock  ->  EmbTable row locks  ->  leaf mutexes
+//!
+//! The static rule (`rust/src/lint/rules.rs`) sees only intra-function
+//! acquisition sequences; this tracker sees the *dynamic* stack, so an
+//! acquisition path threaded through trait objects or closures that
+//! the lint can't follow still trips an assert in `cargo test`.
+//! Release builds compile the whole thing away: `acquire` returns a
+//! zero-sized token and never touches thread-local state.
+//!
+//! Wire-up: `serve::error::{lock_cache, lock_clean, lock_ranked}`
+//! stamp their guards with a token, `dist::EmbTable` row guards carry
+//! one, and the PJRT serialization lock in `serve::engine` acquires at
+//! `Rank::Session`.  See docs/LINTS.md (lock-order rule).
+
+/// Lock ranks in declared acquisition order.  `Cache` and `Session`
+/// are singletons (re-entry on one thread self-deadlocks, so same-rank
+/// re-acquisition asserts too); `EmbRows` covers every `EmbTable`'s
+/// row lock (several tables may be read together) and `Leaf` the
+/// clean-state mutexes (channels, counters, fault registries) that
+/// must always be innermost.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+#[repr(u8)]
+pub enum Rank {
+    Cache = 0,
+    Session = 1,
+    EmbRows = 2,
+    Leaf = 3,
+}
+
+impl Rank {
+    pub fn name(self) -> &'static str {
+        match self {
+            Rank::Cache => "cache mutex",
+            Rank::Session => "PJRT session lock",
+            Rank::EmbRows => "EmbTable row lock",
+            Rank::Leaf => "leaf mutex",
+        }
+    }
+}
+
+#[cfg(debug_assertions)]
+thread_local! {
+    static HELD: std::cell::RefCell<Vec<Rank>> = const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// RAII token recording one held lock; drop it when the guard drops
+/// (embed it in the guard struct so the lifetimes can't diverge).
+#[must_use]
+pub struct Held {
+    #[cfg(debug_assertions)]
+    rank: Rank,
+}
+
+/// Record an acquisition *before* blocking on the lock itself — the
+/// point of the tracker is to flag a deadlock-shaped ordering even on
+/// runs where the timing happens to work out.
+pub fn acquire(rank: Rank) -> Held {
+    #[cfg(debug_assertions)]
+    {
+        HELD.with(|h| {
+            for &r in h.borrow().iter() {
+                let violates = r > rank || (r == rank && rank <= Rank::Session);
+                assert!(
+                    !violates,
+                    "lock-order violation: acquiring {} while holding {} — declared order is \
+                     cache -> session -> rows -> leaf (docs/LINTS.md)",
+                    rank.name(),
+                    r.name(),
+                );
+            }
+            h.borrow_mut().push(rank);
+        });
+        Held { rank }
+    }
+    #[cfg(not(debug_assertions))]
+    {
+        Held {}
+    }
+}
+
+#[cfg(debug_assertions)]
+impl Drop for Held {
+    fn drop(&mut self) {
+        // try_with: tolerate thread-teardown order (a guard dropped
+        // after the thread-local was destroyed just skips the pop).
+        let _ = HELD.try_with(|h| {
+            let mut v = h.borrow_mut();
+            if let Some(pos) = v.iter().rposition(|&r| r == self.rank) {
+                v.remove(pos);
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Rank stacks are thread-local; run each case on a fresh thread so
+    // a panicking case can't leave state behind for the next.
+    fn on_thread(f: impl FnOnce() + Send + 'static) -> std::thread::Result<()> {
+        std::thread::spawn(f).join()
+    }
+
+    #[test]
+    fn declared_order_is_clean() {
+        on_thread(|| {
+            let _c = acquire(Rank::Cache);
+            let _s = acquire(Rank::Session);
+            let _r = acquire(Rank::EmbRows);
+            let _l = acquire(Rank::Leaf);
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn release_resets_the_stack() {
+        on_thread(|| {
+            {
+                let _r = acquire(Rank::EmbRows);
+            }
+            let _c = acquire(Rank::Cache); // fine: rows token dropped
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn descending_acquisition_asserts() {
+        let r = on_thread(|| {
+            let _s = acquire(Rank::Session);
+            let _c = acquire(Rank::Cache);
+        });
+        assert!(r.is_err(), "session -> cache must assert in debug builds");
+    }
+
+    #[test]
+    fn singleton_reentry_asserts_but_rows_nest() {
+        let r = on_thread(|| {
+            let _a = acquire(Rank::Session);
+            let _b = acquire(Rank::Session);
+        });
+        assert!(r.is_err(), "session re-entry self-deadlocks");
+        on_thread(|| {
+            let _a = acquire(Rank::EmbRows); // lemb table …
+            let _b = acquire(Rank::EmbRows); // … and text table together
+            let _l1 = acquire(Rank::Leaf);
+            let _l2 = acquire(Rank::Leaf);
+        })
+        .unwrap();
+    }
+}

@@ -2,6 +2,7 @@
 //! JSON, timers, padding helpers.
 
 pub mod json;
+pub mod lockorder;
 
 /// FxHash-style multiply-rotate hasher (the rustc / firefox hash),
 /// hand-rolled for the offline build.  Much cheaper than SipHash for

@@ -1,0 +1,223 @@
+//! Tier-1 tests for `gs lint` (docs/LINTS.md): one triggering and one
+//! non-triggering fixture per rule, the waiver syntax, and the
+//! self-clean gate — the lint run over this repo's own `rust/src` must
+//! come back clean, so a regression in the tree fails here even before
+//! scripts/test.sh runs the CLI gate.
+
+use std::path::{Path, PathBuf};
+
+use graphstorm::lint::{lint_path, name_table};
+
+/// Fresh fixture tree under the system temp dir.  `files` are
+/// (relative path, contents); parents are created as needed.
+fn fixture(tag: &str, files: &[(&str, &str)]) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("gs_lint_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    for (rel, body) in files {
+        let p = dir.join(rel);
+        std::fs::create_dir_all(p.parent().unwrap()).unwrap();
+        std::fs::write(&p, body).unwrap();
+    }
+    dir
+}
+
+/// Rules of the findings from linting `root/src` in a fixture.
+fn lint_rules(root: &Path) -> Vec<String> {
+    lint_path(&root.join("src"))
+        .unwrap()
+        .findings
+        .iter()
+        .map(|f| f.rule.to_string())
+        .collect()
+}
+
+#[test]
+fn determinism_rule_pos_and_neg() {
+    let bad = fixture(
+        "det_pos",
+        &[("src/sampling/walk.rs", "fn f() { let m = std::collections::HashMap::new(); }")],
+    );
+    assert_eq!(lint_rules(&bad), ["determinism"]);
+
+    let good = fixture(
+        "det_neg",
+        &[
+            // Fx collections are fine, and out-of-scope dirs are not linted.
+            ("src/sampling/walk.rs", "fn f() { let m = crate::util::FxHashMap::default(); }"),
+            ("src/eval/x.rs", "fn f() { let m = std::collections::HashMap::new(); }"),
+        ],
+    );
+    assert!(lint_rules(&good).is_empty());
+}
+
+#[test]
+fn panic_clean_rule_pos_and_neg() {
+    let bad = fixture("panic_pos", &[("src/serve/x.rs", "fn f(x: Option<u32>) { x.unwrap(); }")]);
+    assert_eq!(lint_rules(&bad), ["panic-clean"]);
+
+    let good = fixture(
+        "panic_neg",
+        &[(
+            "src/serve/x.rs",
+            // unwrap_or is fine; test modules and string/comment
+            // mentions of .unwrap( are exempt.
+            "fn f(x: Option<u32>) { x.unwrap_or(0); let s = \".unwrap()\"; }\n\
+             // .unwrap( in prose\n\
+             #[cfg(test)]\nmod tests { fn t(x: Option<u32>) { x.unwrap(); } }\n",
+        )],
+    );
+    assert!(lint_rules(&good).is_empty());
+}
+
+#[test]
+fn lock_order_rule_pos_and_neg() {
+    let bad = fixture(
+        "lock_pos",
+        &[(
+            "src/dist/x.rs",
+            "fn f(t: &T, m: &M) { let rows = t.read_inner(); let c = lock_cache(m); }",
+        )],
+    );
+    assert_eq!(lint_rules(&bad), ["lock-order"]);
+
+    let good = fixture(
+        "lock_neg",
+        &[(
+            "src/dist/x.rs",
+            // Declared order, scoped release, and a transient guard.
+            "fn a(t: &T, m: &M) { let c = lock_cache(m); let rows = t.read_inner(); }\n\
+             fn b(t: &T, m: &M) { { let rows = t.read_inner(); } let c = lock_cache(m); }\n\
+             fn c(rx: &M, m: &M) { let j = lock_clean(rx).recv(); let g = lock_cache(m); }\n",
+        )],
+    );
+    assert!(lint_rules(&good).is_empty());
+}
+
+#[test]
+fn raw_lock_banned_in_serve_only() {
+    let bad = fixture("rawlock_pos", &[("src/serve/x.rs", "fn f(m: &M) { let g = m.lock(); }")]);
+    assert_eq!(lint_rules(&bad), ["lock-order"]);
+
+    let good = fixture("rawlock_neg", &[("src/obs/x.rs", "fn f(m: &M) { let g = m.lock(); }")]);
+    assert!(lint_rules(&good).is_empty());
+}
+
+#[test]
+fn salt_unique_rule_pos_and_neg() {
+    let bad = fixture(
+        "salt_pos",
+        &[
+            ("src/trainer/a.rs", "const NC_SALT: u64 = 0x6e63;"),
+            ("src/trainer/b.rs", "const LP_SALT: u64 = 0x6e63;"),
+        ],
+    );
+    assert_eq!(lint_rules(&bad), ["salt-unique"]);
+
+    let good = fixture(
+        "salt_neg",
+        &[("src/trainer/a.rs", "const NC_SALT: u64 = 0x6e63;\nconst LP_SALT: u64 = 0x1b9;")],
+    );
+    assert!(lint_rules(&good).is_empty());
+}
+
+#[test]
+fn name_registry_rule_pos_and_neg() {
+    let emits = "fn f() { crate::span!(\"serve.batch.forward\", seq = 1); \
+                 metrics::gauge_set(&format!(\"pipeline.stage_secs.{name}\"), 0.0); }";
+    let bad = fixture(
+        "names_pos",
+        &[
+            ("src/obs/x.rs", emits),
+            ("tests/fixtures/serve_metrics_names.golden.txt", "serve.batch.forward\nserve.gone\n"),
+            ("docs/OBSERVABILITY.md", "The `serve.renamed.span` span.\n"),
+        ],
+    );
+    let rules = lint_rules(&bad);
+    assert_eq!(rules, ["name-registry", "name-registry"], "golden + doc stale names: {rules:?}");
+
+    let good = fixture(
+        "names_neg",
+        &[
+            ("src/obs/x.rs", emits),
+            ("tests/fixtures/serve_metrics_names.golden.txt", "serve.batch.forward\n"),
+            // `<stage>` placeholders match format! holes as wildcards.
+            ("docs/OBSERVABILITY.md", "`serve.batch.forward` and `pipeline.stage_secs.<stage>`.\n"),
+        ],
+    );
+    assert!(lint_rules(&good).is_empty());
+}
+
+#[test]
+fn waiver_suppresses_and_is_itself_linted() {
+    let waived = fixture(
+        "waiver_ok",
+        &[(
+            "src/trainer/x.rs",
+            "fn f() { let t0 = Instant::now(); // lint:allow(determinism): wall-time only\n}",
+        )],
+    );
+    let report = lint_path(&waived.join("src")).unwrap();
+    assert!(report.findings.is_empty());
+    assert_eq!(report.waivers_used, 1);
+
+    // A waiver on its own line covers the next line.
+    let above = fixture(
+        "waiver_above",
+        &[(
+            "src/trainer/x.rs",
+            "fn f() {\n // lint:allow(determinism): wall-time only\n let t0 = Instant::now();\n}",
+        )],
+    );
+    assert!(lint_rules(&above).is_empty());
+
+    // No reason, unknown rule, and wrong rule are all findings.
+    let bad = fixture(
+        "waiver_bad",
+        &[(
+            "src/trainer/x.rs",
+            "fn f() { let t0 = Instant::now(); // lint:allow(determinism)\n\
+             // lint:allow(speling): typo\n}",
+        )],
+    );
+    let mut rules = lint_rules(&bad);
+    rules.sort();
+    assert_eq!(rules, ["determinism", "waiver", "waiver"]);
+}
+
+#[test]
+fn self_clean_gate() {
+    // The repo's own production tree lints clean — same gate
+    // scripts/test.sh enforces via `gs lint`.
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let report = lint_path(&src).unwrap();
+    let msgs: Vec<String> = report
+        .findings
+        .iter()
+        .map(|f| format!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.msg))
+        .collect();
+    assert!(msgs.is_empty(), "gs lint rust/src must be clean:\n{}", msgs.join("\n"));
+    assert!(report.files > 30, "scanned only {} files", report.files);
+    assert!(report.waivers_used > 0, "the timing waivers should be exercised");
+}
+
+#[test]
+fn name_table_covers_golden_fixture() {
+    // Every golden metric name must be compatible with the extracted
+    // name table — the same property check_docs.sh consumes through
+    // `gs lint --dump-names`.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let table = name_table(&root.join("src")).unwrap();
+    assert!(table.iter().any(|n| n == "serve.pool.batches"));
+    assert!(table.iter().any(|n| n == "serve.uncached.*"));
+    assert!(table.iter().any(|n| n == "pipeline.stage_secs.*"));
+    let golden = std::fs::read_to_string(
+        root.join("tests/fixtures/serve_metrics_names.golden.txt"),
+    )
+    .unwrap();
+    for name in golden.lines().map(str::trim).filter(|l| !l.is_empty()) {
+        assert!(
+            table.iter().any(|n| graphstorm::lint::rules::patterns_compatible(name, n)),
+            "golden `{name}` missing from the name table"
+        );
+    }
+}

@@ -23,12 +23,18 @@ CFG_SRC="rust/src/config/mod.rs"
 fail=0
 err() { echo "check_docs: $1: $2" >&2; fail=1; }
 
-# Flags that legitimately appear in docs but belong to other tools.
-FLAG_ALLOW=" help release bench example features offline quiet "
+# Flags that legitimately appear in docs but belong to other tools (or
+# to `gs lint`, whose flags live outside the cli.rs command table).
+FLAG_ALLOW=" help release bench example features offline quiet dump-names "
 
 GS_HELP=""
+NAME_TABLE=""
 if command -v cargo >/dev/null 2>&1; then
     GS_HELP="$(cd rust && cargo run -q 2>/dev/null -- help || true)"
+    # Span/metric names the production tree can emit (`*` wildcards for
+    # format! holes) — the source of truth for instrumentation names in
+    # docs, extracted by the lint pass (docs/LINTS.md).
+    NAME_TABLE="$(cd rust && cargo run -q 2>/dev/null -- lint --dump-names src || true)"
 fi
 
 shopt -s nullglob
@@ -58,7 +64,7 @@ for doc in "${docs[@]}"; do
 
     # 3. `gs <subcommand>` mentions must be real subcommands.
     while IFS= read -r c; do
-        case "$c" in smoke|help|stats|trace-check|"") continue ;; esac
+        case "$c" in smoke|help|stats|trace-check|lint|"") continue ;; esac
         if [ -n "$GS_HELP" ] && printf '%s\n' "$GS_HELP" | grep -q "gs $c"; then
             continue
         fi
@@ -81,7 +87,19 @@ for doc in "${docs[@]}"; do
         # empty / numeric tails are array indices, not keys.
         case "$key" in rs|sh|json|md|py|csv|toml|''|*[!a-z_]*) continue ;; esac
         grep -q "\"$key\"" "$CFG_SRC" && continue
-        grep -rqF "$sk" "$ROOT/rust" && continue
+        if [ -n "$NAME_TABLE" ]; then
+            # Instrumentation names match the lint-extracted name table
+            # (wildcard patterns from format! call sites glob-match).
+            hit=0
+            while IFS= read -r pat; do
+                # shellcheck disable=SC2254  # $pat is a glob on purpose
+                case "$sk" in $pat) hit=1; break ;; esac
+            done <<< "$NAME_TABLE"
+            [ "$hit" -eq 1 ] && continue
+        else
+            # No toolchain: fall back to a verbatim source/fixture grep.
+            grep -rqF "$sk" "$ROOT/rust" && continue
+        fi
         err "$doc" "unknown config key or instrumentation name '$sk'"
     done < <(grep -o '`\(loader\|data\|partition\|lm\|task\|tasks\|encoder\|infer\|serve\|obs\)\.[a-z0-9_.]*`' "$doc" \
              | tr -d '`' | sort -u)

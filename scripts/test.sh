@@ -18,34 +18,22 @@ ROOT="$(cd "$(dirname "$0")/.." && pwd)"
 "$ROOT/scripts/check_docs.sh"
 echo
 
-# Serving and observability code must stay panic-clean: serve failures
-# travel as typed `ServeError`s (docs/ROBUSTNESS.md) and the obs layer
-# must never be able to take a run down, so `.unwrap(`/`.expect(` are
-# banned in rust/src/serve/ and rust/src/obs/ production code (test
-# modules after `#[cfg(test)]` are exempt; `.unwrap_or*` is fine).
-serve_panics=$(
-    for f in "$ROOT"/rust/src/serve/*.rs "$ROOT"/rust/src/obs/*.rs; do
-        awk -v f="${f#"$ROOT"/}" '
-            /#\[cfg\(test\)\]/ { exit }
-            /\.unwrap\(|\.expect\(/ { printf "%s:%d: %s\n", f, NR, $0 }
-        ' "$f"
-    done
-)
-if [ -n "$serve_panics" ]; then
-    echo "test.sh: panic-clean lint FAILED — use the serve error taxonomy instead:" >&2
-    echo "$serve_panics" >&2
-    exit 1
-fi
-echo "test.sh: serve+obs panic-clean lint OK"
-echo
-
 if ! command -v cargo >/dev/null 2>&1; then
-    echo "test.sh: cargo not found — lints only (tier-1 build/tests need a Rust toolchain)" >&2
+    echo "test.sh: cargo not found — docs lint only (gs lint + tier-1 build/tests need a Rust toolchain)" >&2
     exit 0
 fi
 
 cd "$ROOT/rust"
 cargo build --release
+
+# Static-analysis gate (docs/LINTS.md): determinism, panic-clean,
+# lock-order, salt-unique and name-registry rules over rust/src.  This
+# replaced the old awk panic-clean grep — the tokenizer is comment/
+# string/#[cfg(test)]-aware, so a production `fn` after a test module
+# is still linted and prose mentions of `.unwrap()` are not findings.
+cargo run --release -q -- lint src
+echo
+
 cargo test -q "$@"
 
 # Fault-injection sweep gate (always on, surrogate backend): the bench
