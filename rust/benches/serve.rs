@@ -21,13 +21,11 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
-use std::sync::Mutex;
-
 use graphstorm::dataloader::{BatchFactory, LembTouch};
 use graphstorm::runtime::Tensor;
 use graphstorm::serve::{
     cache_key, closed_loop, EmbeddingCache, EnginePoolCfg, InferenceEngine, MicroBatcherCfg,
-    OfflineInference, Zipf,
+    OfflineInference, ShardedCache, Zipf,
 };
 use graphstorm::util::Rng;
 
@@ -93,6 +91,8 @@ fn main() {
         "deadline_us",
         "pool_workers",
         "pool_requests",
+        "shards",
+        "shard_requests",
     ]);
     let mut ds = common::mag_dataset(common::scale(conf.usize("mag_papers", 2000)), 1);
     ds.ensure_text_features(64);
@@ -243,11 +243,11 @@ fn main() {
         };
         let clients = conf.usize("clients", 4);
 
-        let nocache = Mutex::new(EmbeddingCache::new(0));
+        let nocache = ShardedCache::new(0, 1);
         let (s0, replies0) =
             closed_loop(&engine, cfg.clone(), &nocache, &trace, clients).unwrap();
-        let cache = Mutex::new(EmbeddingCache::new(conf.usize("cache", 4096)));
-        cache.lock().unwrap().warm_from_dir(&tmp, nt, engine.generation()).unwrap();
+        let cache = ShardedCache::new(conf.usize("cache", 4096), conf.usize("shards", 4));
+        cache.warm_from_dir(&tmp, nt, engine.generation()).unwrap();
         let (s1, replies1) = closed_loop(&engine, cfg, &cache, &trace, clients).unwrap();
         println!(
             "zipf closed-loop uncached         p50 {:>6.0}us p99 {:>6.0}us {:>8.0} req/s hit {:>5.1}%",
@@ -299,9 +299,9 @@ fn main() {
             ..Default::default()
         };
 
-        let c1 = Mutex::new(EmbeddingCache::new(0));
+        let c1 = ShardedCache::new(0, 1);
         let (serial, replies1) = closed_loop(&engine, mk(1), &c1, &trace, clients).unwrap();
-        let cn = Mutex::new(EmbeddingCache::new(0));
+        let cn = ShardedCache::new(0, 1);
         let (pooled, repliesn) =
             closed_loop(&engine, mk(workers), &cn, &trace, clients).unwrap();
         let speedup = pooled.rps / serial.rps.max(1e-9);
@@ -333,6 +333,76 @@ fn main() {
             );
         } else {
             println!("(pool speedup assert skipped: {cores} cores, {workers} workers)");
+        }
+    }
+
+    // ---- striped cache vs single lock: warmed Zipf reads ----------------
+    // The sharding acceptance bar: N cache stripes must serve a
+    // fully-warmed Zipf read workload from T concurrent threads at
+    // >= 2x the single-stripe (one global lock) rate.  The traffic is
+    // pure cache hits — the engine is out of the loop — so the
+    // measurement isolates lock contention, and the striped rows must
+    // be bit-identical to the single-lock rows (replies are
+    // shard-count-invariant by contract).
+    {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let threads = cores.clamp(2, 8);
+        let shards = conf.usize("shards", 4);
+        let n_gets =
+            if common::fast() { 50_000 } else { conf.usize("shard_requests", 200_000) };
+        let zipf = Zipf::new(n_nodes, conf.f64("alpha", 1.1));
+        let mut rng = Rng::seed_from(17);
+        let trace: Vec<u64> =
+            (0..n_gets).map(|_| cache_key(nt, zipf.sample(&mut rng) as u32)).collect();
+
+        // 4x headroom so an uneven hash split across stripes can never
+        // evict a warmed row (per-stripe capacity is total/shards).
+        let single = ShardedCache::new(4 * n_nodes, 1);
+        let striped = ShardedCache::new(4 * n_nodes, shards);
+        assert!(single.warm_from_dir(&tmp, nt, engine.generation()).unwrap() > 0);
+        assert!(striped.warm_from_dir(&tmp, nt, engine.generation()).unwrap() > 0);
+        for id in 0..n_nodes as u32 {
+            assert_eq!(
+                single.get(cache_key(nt, id)),
+                striped.get(cache_key(nt, id)),
+                "striped row for node {id} diverged from the single-lock row"
+            );
+        }
+
+        let run = |cache: &ShardedCache| {
+            let t0 = Instant::now();
+            std::thread::scope(|scope| {
+                for chunk in trace.chunks(n_gets.div_ceil(threads)) {
+                    scope.spawn(move || {
+                        for &k in chunk {
+                            let row = cache.get(k).expect("warmed cache never misses");
+                            std::hint::black_box(row.len());
+                        }
+                    });
+                }
+            });
+            n_gets as f64 / t0.elapsed().as_secs_f64()
+        };
+        let single_rps = run(&single);
+        let striped_rps = run(&striped);
+        let speedup = striped_rps / single_rps.max(1e-9);
+        println!(
+            "zipf reads 1 stripe ({threads} threads)    {single_rps:>12.0} get/s",
+        );
+        println!(
+            "zipf reads {shards} stripes ({threads} threads)   {striped_rps:>12.0} get/s   speedup {speedup:.2}x",
+        );
+        results.push(("shard_count".into(), shards as f64));
+        results.push(("shard_single_rps".into(), single_rps));
+        results.push(("shard_striped_rps".into(), striped_rps));
+        results.push(("shard_speedup".into(), speedup));
+        if cores >= 4 && shards >= 4 {
+            assert!(
+                speedup >= 2.0,
+                "striped cache must serve >= 2x single-lock on {cores} cores (got {speedup:.2}x)"
+            );
+        } else {
+            println!("(shard speedup assert skipped: {cores} cores, {shards} shards)");
         }
     }
 

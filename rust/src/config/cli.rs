@@ -309,6 +309,18 @@ pub const COMMANDS: &[Cmd] = &[
                 help: "engine-pool threads, or 'auto'",
             },
             Flag {
+                name: "shards",
+                takes_value: true,
+                path: "serve.shards",
+                help: "cache/table stripes (replies are shard-count-invariant)",
+            },
+            Flag {
+                name: "sessions",
+                takes_value: true,
+                path: "serve.sessions",
+                help: "parallel engine sessions, or 'auto' (clamped to pool workers)",
+            },
+            Flag {
                 name: "admission",
                 takes_value: true,
                 path: "serve.admission",
@@ -591,6 +603,28 @@ mod tests {
         // Without the flags, obs stays at its all-off default.
         let cfg = build_config(cmd, &argv(&[])).unwrap();
         assert_eq!(cfg.obs, crate::config::ObsCfg::default());
+    }
+
+    #[test]
+    fn sharding_flags_set_serve_config() {
+        let cmd = find_command("serve-bench").unwrap();
+        let cfg = build_config(
+            cmd,
+            &argv(&["--pool-workers", "4", "--shards", "4", "--sessions", "2"]),
+        )
+        .unwrap();
+        let s = cfg.serve.as_ref().unwrap();
+        assert_eq!(s.shards, 4);
+        assert_eq!(s.sessions, Workers::Fixed(2));
+        let cfg = build_config(cmd, &argv(&["--sessions", "auto"])).unwrap();
+        assert_eq!(cfg.serve.as_ref().unwrap().sessions, Workers::Auto);
+        // An unknown-good combination dies at build time, not serve time.
+        let e = build_config(cmd, &argv(&["--pool-workers", "2", "--sessions", "4"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("exceeds serve.pool_workers"), "{e}");
+        let e = build_config(cmd, &argv(&["--shards", "0"])).unwrap_err().to_string();
+        assert!(e.contains("serve.shards must be >= 1"), "{e}");
     }
 
     #[test]

@@ -1039,6 +1039,18 @@ pub struct ServeCfg {
     /// Engine scratches draining the shared queue; `"auto"` resolves
     /// like `loader.workers`.  Replies are bit-identical for any value.
     pub pool_workers: Workers,
+    /// Serving-cache stripes (`serve.shards`): the cache is split into
+    /// this many independently locked shards, key-hash routed.
+    /// Replies and hit/miss accounting are bit-identical for any
+    /// value (`tests/sharding.rs`).
+    pub shards: usize,
+    /// Independent engine execution sessions (`serve.sessions`);
+    /// `"auto"` resolves like `pool_workers`, and the resolved count
+    /// clamps to the resolved pool size.  Worker `w` serializes
+    /// backend execution behind session lock `w % sessions`, so
+    /// forwards on distinct sessions run genuinely in parallel.
+    /// Replies are bit-identical for any value.
+    pub sessions: Workers,
     /// Cache admission policy: plain LRU or a TinyLFU frequency gate
     /// that keeps Zipf-tail scan traffic from evicting the hot set.
     pub admission: Admission,
@@ -1075,6 +1087,8 @@ impl Default for ServeCfg {
             clients: 4,
             cache: 4096,
             pool_workers: Workers::Auto,
+            shards: 1,
+            sessions: Workers::Fixed(1),
             admission: Admission::Always,
             refresh: 0,
             max_batch: 32,
@@ -1097,6 +1111,8 @@ impl ServeCfg {
         "clients",
         "cache",
         "pool_workers",
+        "shards",
+        "sessions",
         "admission",
         "refresh",
         "max_batch",
@@ -1126,6 +1142,16 @@ impl ServeCfg {
                             "serve.pool_workers must be a thread count or \"auto\", got \"{s}\""
                         ),
                         v => Workers::Fixed(take_usize("serve", "pool_workers", v)?),
+                    }
+                }
+                "shards" => c.shards = take_usize("serve", "shards", v)?,
+                "sessions" => {
+                    c.sessions = match v {
+                        Json::Str(s) if s == "auto" => Workers::Auto,
+                        Json::Str(s) => bail!(
+                            "serve.sessions must be a session count or \"auto\", got \"{s}\""
+                        ),
+                        v => Workers::Fixed(take_usize("serve", "sessions", v)?),
                     }
                 }
                 "admission" => {
@@ -1161,12 +1187,18 @@ impl ServeCfg {
             Workers::Auto => Json::from("auto"),
             Workers::Fixed(n) => Json::from(n),
         };
+        let sessions = match self.sessions {
+            Workers::Auto => Json::from("auto"),
+            Workers::Fixed(n) => Json::from(n),
+        };
         let mut pairs = vec![
             ("requests", Json::from(self.requests)),
             ("alpha", Json::Num(self.alpha)),
             ("clients", Json::from(self.clients)),
             ("cache", Json::from(self.cache)),
             ("pool_workers", pool_workers),
+            ("shards", Json::from(self.shards)),
+            ("sessions", sessions),
             ("admission", Json::from(self.admission.name())),
             ("refresh", Json::from(self.refresh)),
             ("max_batch", Json::from(self.max_batch)),
@@ -1204,10 +1236,23 @@ impl ServeCfg {
         }
     }
 
+    /// The concrete session count: resolves `"auto"` like
+    /// `pool_workers`, then clamps to the resolved pool size — a
+    /// session no worker maps onto would just be an idle lock.
+    pub fn resolve_sessions(&self) -> usize {
+        let w = self.resolve_pool_workers().max(1);
+        let s = match self.sessions {
+            Workers::Fixed(n) => n,
+            Workers::Auto => autoscale_workers(),
+        };
+        s.clamp(1, w)
+    }
+
     /// These knobs as an engine-pool config.
     pub fn pool(&self) -> EnginePoolCfg {
         EnginePoolCfg {
             workers: self.resolve_pool_workers(),
+            sessions: self.resolve_sessions(),
             batcher: self.batcher(),
             request_deadline: std::time::Duration::from_millis(self.deadline_ms),
             max_retries: self.max_retries,
@@ -1231,6 +1276,20 @@ impl ServeCfg {
         }
         if let Workers::Fixed(0) = self.pool_workers {
             bail!("serve.pool_workers must be >= 1 (use 1 for a single engine scratch)");
+        }
+        if self.shards == 0 {
+            bail!("serve.shards must be >= 1 (use 1 for a single cache stripe)");
+        }
+        if let Workers::Fixed(0) = self.sessions {
+            bail!("serve.sessions must be >= 1 (use 1 for a single execution session)");
+        }
+        if let (Workers::Fixed(se), Workers::Fixed(pw)) = (&self.sessions, &self.pool_workers) {
+            if se > pw {
+                bail!(
+                    "serve.sessions ({se}) exceeds serve.pool_workers ({pw}): each session \
+                     needs a worker to drive it; lower serve.sessions or set it to \"auto\""
+                );
+            }
         }
         if !(self.alpha > 0.0 && self.alpha.is_finite()) {
             bail!("serve.alpha must be a positive finite number");
@@ -1322,11 +1381,13 @@ impl ObsCfg {
 /// is the pre-fault-tolerance, pre-obs key set; version 2 added the
 /// `serve` supervision keys (`deadline_ms`, `max_retries`,
 /// `queue_depth`, `max_worker_restarts`, `faults`) and the `obs`
-/// object.  Configs may omit `conf_version` (any-version keys only),
-/// but a declared version is validated strictly: v1 configs using v2
-/// keys get a migration error naming the offending keys, and versions
-/// newer than this build are rejected outright.
-pub const CONF_VERSION: u64 = 2;
+/// object; version 3 added the serving striping keys (`serve.shards`,
+/// `serve.sessions`).  Configs may omit `conf_version` (any-version
+/// keys only), but a declared version is validated strictly: older
+/// versions using newer keys get a migration error naming the
+/// offending keys, and versions newer than this build are rejected
+/// outright.
+pub const CONF_VERSION: u64 = 3;
 
 // ------------------------------------------------------------ RunConfig
 
@@ -1473,6 +1534,35 @@ impl RunConfig {
         used
     }
 
+    /// The version-3-only knobs this config actually uses: the serving
+    /// striping keys at non-default values (same "uses" notion as
+    /// [`v2_keys_in_use`](Self::v2_keys_in_use)).
+    fn v3_keys_in_use(&self) -> Vec<&'static str> {
+        let mut used = Vec::new();
+        if let Some(s) = &self.serve {
+            if s.shards != 1 {
+                used.push("serve.shards");
+            }
+            if s.sessions != Workers::Fixed(1) {
+                used.push("serve.sessions");
+            }
+        }
+        used
+    }
+
+    fn check_v3_keys(&self, declared: u64) -> Result<()> {
+        let used = self.v3_keys_in_use();
+        if !used.is_empty() {
+            bail!(
+                "conf_version {declared} config uses version-3 keys: {}; migrate by setting \
+                 \"conf_version\": 3 (the keys' semantics are unchanged — the version \
+                 marker is the only edit)",
+                used.join(", ")
+            );
+        }
+        Ok(())
+    }
+
     /// Cross-stage consistency checks (per-stage checks run too).
     pub fn validate(&self) -> Result<()> {
         match self.conf_version {
@@ -1492,7 +1582,9 @@ impl RunConfig {
                         used.join(", ")
                     );
                 }
+                self.check_v3_keys(1)?;
             }
+            Some(2) => self.check_v3_keys(2)?,
             Some(_) => {}
         }
         self.obs.validate()?;
@@ -1555,6 +1647,9 @@ impl RunConfig {
         }
         if let Some(s) = &mut c.serve {
             s.arch.get_or_insert_with(|| task_arch.clone());
+            // Sessions first: their clamp reads the *unresolved* pool
+            // size through resolve_pool_workers, same as a direct run.
+            s.sessions = Workers::Fixed(s.resolve_sessions());
             s.pool_workers = Workers::Fixed(s.resolve_pool_workers());
         }
         c
@@ -1836,6 +1931,49 @@ mod tests {
     }
 
     #[test]
+    fn serve_sharding_keys_parse_validate_and_resolve() {
+        let c = RunConfig::parse_str(
+            r#"{"serve": {"pool_workers": 4, "shards": 4, "sessions": 2}}"#,
+        )
+        .unwrap();
+        let s = c.serve.as_ref().unwrap();
+        assert_eq!(s.shards, 4);
+        assert_eq!(s.sessions, Workers::Fixed(2));
+        assert_eq!(s.pool().sessions, 2);
+        assert_eq!(s.pool().workers, 4);
+        // "auto" sessions clamp to the resolved pool size.
+        let c =
+            RunConfig::parse_str(r#"{"serve": {"pool_workers": 1, "sessions": "auto"}}"#).unwrap();
+        assert_eq!(c.serve.as_ref().unwrap().resolve_sessions(), 1);
+        let r = c.resolved();
+        assert_eq!(r.serve.as_ref().unwrap().sessions, Workers::Fixed(1));
+        // Resolution round-trips through JSON and is a fixed point.
+        let back = RunConfig::parse_str(&r.to_json().to_string_pretty()).unwrap();
+        assert_eq!(r, back);
+        assert_eq!(back.resolved(), back);
+        // Bad values are rejected with the key named.
+        let e = RunConfig::parse_str(r#"{"serve": {"shards": 0}}"#).unwrap_err().to_string();
+        assert!(e.contains("serve.shards must be >= 1"), "{e}");
+        let e = RunConfig::parse_str(r#"{"serve": {"sessions": 0}}"#).unwrap_err().to_string();
+        assert!(e.contains("serve.sessions must be >= 1"), "{e}");
+        let e = RunConfig::parse_str(r#"{"serve": {"sessions": "many"}}"#).unwrap_err().to_string();
+        assert!(e.contains("\"auto\""), "{e}");
+        // Fixed sessions may not exceed a fixed pool size.
+        let e = RunConfig::parse_str(r#"{"serve": {"pool_workers": 2, "sessions": 4}}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("serve.sessions (4) exceeds serve.pool_workers (2)"), "{e}");
+        // Either side "auto" is fine — the clamp happens at resolve
+        // time instead of rejecting.
+        assert!(
+            RunConfig::parse_str(r#"{"serve": {"pool_workers": "auto", "sessions": 8}}"#).is_ok()
+        );
+        let c = RunConfig::parse_str(r#"{"serve": {"pool_workers": 2, "sessions": "auto"}}"#)
+            .unwrap();
+        assert!(c.serve.as_ref().unwrap().resolve_sessions() <= 2);
+    }
+
+    #[test]
     fn tasks_array_parses_and_validates() {
         let c = RunConfig::parse_str(
             r#"{"tasks": [{"kind": "nc", "weight": 2}, {"kind": "distill"}],
@@ -1982,6 +2120,21 @@ mod tests {
         assert!(RunConfig::parse_str(r#"{"conf_version": 0}"#).is_err());
         let e = RunConfig::parse_str(r#"{"conf_version": 9}"#).unwrap_err().to_string();
         assert!(e.contains("newer than this build"), "{e}");
+        // v1/v2 configs using the version-3 striping keys get the same
+        // migration treatment; a declared v3 config accepts them.
+        let e = RunConfig::parse_str(r#"{"conf_version": 2, "serve": {"shards": 4}}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("version-3 keys: serve.shards"), "{e}");
+        let e = RunConfig::parse_str(r#"{"conf_version": 1, "serve": {"sessions": 2}}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("serve.sessions"), "{e}");
+        assert!(RunConfig::parse_str(
+            r#"{"conf_version": 3, "serve": {"pool_workers": 2, "shards": 4, "sessions": 2}}"#
+        )
+        .is_ok());
+        assert!(RunConfig::parse_str(r#"{"conf_version": 2, "serve": {"shards": 1}}"#).is_ok());
         // resolved() pins the current version; still a fixed point.
         let r = RunConfig::parse_str("{}").unwrap().resolved();
         assert_eq!(r.conf_version, Some(CONF_VERSION));

@@ -430,11 +430,13 @@ impl Pipeline {
             let n_nodes = ds.graph.num_nodes[nt as usize];
             let pool = sc.pool();
             println!(
-                "serve-bench [{backend}]: {} requests, zipf(a={}) over {n_nodes} nodes, {} clients, pool={} workers, max_batch={}, deadline={}us, admission={}",
+                "serve-bench [{backend}]: {} requests, zipf(a={}) over {n_nodes} nodes, {} clients, pool={} workers x {} sessions, {} cache shards, max_batch={}, deadline={}us, admission={}",
                 sc.requests,
                 sc.alpha,
                 sc.clients,
                 pool.workers,
+                pool.sessions,
+                sc.shards,
                 pool.batcher.max_batch,
                 pool.batcher.deadline.as_micros(),
                 sc.admission.name(),
@@ -447,6 +449,7 @@ impl Pipeline {
                     alpha: sc.alpha,
                     clients: sc.clients,
                     cache: sc.cache,
+                    shards: sc.shards,
                     admission: sc.admission,
                     pool,
                     refresh: sc.refresh,

@@ -9,12 +9,17 @@
 //! traffic.  Counters are atomic and embedding tables use interior
 //! mutability, so the prefetching loader's worker threads can assemble
 //! batches from `&GsDataset` while the main thread applies sparse
-//! embedding updates between steps.
+//! embedding updates between steps.  [`EmbTable`] rows can further be
+//! striped N ways by the serving hash (`serve::shard_of`) with
+//! per-stripe locks and generations — sparse-Adam writers and serve
+//! readers on different stripes never contend, and every layout is
+//! bit-identical to the single-stripe table.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, RwLock, RwLockReadGuard, RwLockWriteGuard};
 
 use crate::partition::PartitionBook;
+use crate::serve::shard_of;
 use crate::util::lockorder::{self, Rank};
 use crate::util::Rng;
 
@@ -184,26 +189,49 @@ impl std::ops::DerefMut for InnerWrite<'_> {
     }
 }
 
+/// One stripe of a (possibly sharded) [`EmbTable`]: its rows' weights
+/// and Adam moments behind their own `RwLock`, its own generation
+/// counter, and its own one-shot poison flag — so sparse-Adam writers
+/// and serving readers touching *different* stripes never contend.
+struct EmbShard {
+    inner: RwLock<EmbInner>,
+    /// Bumped (while holding this stripe's write lock) by every
+    /// sparse-Adam update that touched a row in this stripe.
+    generation: AtomicU64,
+    /// Set on the first poisoned-lock recovery, alongside a one-time
+    /// generation bump (see [`EmbTable::note_poison`]).
+    poison_bumped: AtomicBool,
+}
+
 /// Learnable embedding table for a featureless node type
 /// (paper §3.3.2, option 2).  Interior mutability: gathers take a read
 /// lock, the sparse-Adam update a write lock, so prefetch workers and
 /// the training thread can share the engine immutably.
+///
+/// Rows are striped across `shards` independently locked stripes by
+/// `serve::shard_of(id)` — the same hash the serving cache stripes
+/// keys with, so one node's row and its cached prediction always live
+/// in the same stripe index of their respective structures.
+/// [`Self::new`] builds the classic single-stripe table; for any shard
+/// count the initial weights, updates and gathers are **bit-identical**
+/// (weights come from one RNG stream scattered to stripes; updates
+/// apply in input order within each stripe and rows are independent).
+/// The table [`Self::generation`] is the *sum* of per-stripe
+/// generations: monotone, and for one stripe exactly the classic
+/// per-update counter.
 pub struct EmbTable {
     pub ntype: usize,
     pub dim: usize,
-    inner: RwLock<EmbInner>,
+    n: usize,
+    /// id → local row index within its stripe (`shard_of(id, shards)`).
+    local: Vec<u32>,
+    shards: Vec<EmbShard>,
     book: Arc<PartitionBook>,
     counters: Arc<TrafficCounters>,
-    /// Bumped by every sparse-Adam update; generation-stamped caches
-    /// (`serve::EmbeddingCache`) compare against this to invalidate
-    /// all cached rows in O(1) when the table moves.
-    generation: AtomicU64,
-    /// Set on the first poisoned-lock recovery, alongside a one-time
-    /// generation bump (see [`Self::note_poison`]).
-    poison_bumped: AtomicBool,
 }
 
 impl EmbTable {
+    /// Single-stripe table — the classic layout every trainer uses.
     pub fn new(
         ntype: usize,
         n: usize,
@@ -212,54 +240,99 @@ impl EmbTable {
         book: Arc<PartitionBook>,
         counters: Arc<TrafficCounters>,
     ) -> EmbTable {
+        EmbTable::new_sharded(ntype, n, dim, seed, 1, book, counters)
+    }
+
+    /// Table striped `shards` ways.  Weights come from the *same*
+    /// single RNG stream regardless of shard count — generated in id
+    /// order, then scattered to stripes — so a sharded table is
+    /// bit-identical to the single-stripe one row for row.
+    pub fn new_sharded(
+        ntype: usize,
+        n: usize,
+        dim: usize,
+        seed: u64,
+        shards: usize,
+        book: Arc<PartitionBook>,
+        counters: Arc<TrafficCounters>,
+    ) -> EmbTable {
+        let nshards = shards.max(1);
         let mut rng = Rng::seed_from(seed ^ 0xe8b);
         let scale = 1.0 / (dim as f32).sqrt();
         let w: Vec<f32> = (0..n * dim).map(|_| rng.gen_normal() * scale).collect();
-        let inner = EmbInner { w, m: vec![0.0; n * dim], v: vec![0.0; n * dim], t: vec![0; n] };
-        EmbTable {
-            ntype,
-            dim,
-            inner: RwLock::new(inner),
-            book,
-            counters,
-            generation: AtomicU64::new(0),
-            poison_bumped: AtomicBool::new(false),
+        let mut local = vec![0u32; n];
+        let mut counts = vec![0usize; nshards];
+        for id in 0..n {
+            let s = shard_of(id as u64, nshards);
+            local[id] = counts[s] as u32;
+            counts[s] += 1;
         }
+        // Ascending-id scatter matches the ascending local indices
+        // assigned above, so each stripe's rows land in local order.
+        let mut sw: Vec<Vec<f32>> =
+            counts.iter().map(|&c| Vec::with_capacity(c * dim)).collect();
+        for id in 0..n {
+            sw[shard_of(id as u64, nshards)].extend_from_slice(&w[id * dim..(id + 1) * dim]);
+        }
+        let shards = sw
+            .into_iter()
+            .zip(&counts)
+            .map(|(w, &c)| EmbShard {
+                inner: RwLock::new(EmbInner {
+                    w,
+                    m: vec![0.0; c * dim],
+                    v: vec![0.0; c * dim],
+                    t: vec![0; c],
+                }),
+                generation: AtomicU64::new(0),
+                poison_bumped: AtomicBool::new(false),
+            })
+            .collect();
+        EmbTable { ntype, dim, n, local, shards, book, counters }
     }
 
-    /// Recover the inner lock from poisoning.  A panicked writer can
+    #[inline]
+    fn shard_idx(&self, id: u32) -> usize {
+        shard_of(id as u64, self.shards.len())
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Recover a stripe's lock from poisoning.  A panicked writer can
     /// leave `w`/`m`/`v` half-updated; the data is still well-formed
     /// (every f32 is valid), so we adopt the mixed state as the new
-    /// canonical weights and bump the generation **once** — rows
-    /// cached before the panic can never be stamped current again,
-    /// while rows re-gathered afterwards are stamped at the new
+    /// canonical weights and bump that stripe's generation **once** —
+    /// rows cached before the panic can never be stamped current
+    /// again, while rows re-gathered afterwards are stamped at the new
     /// generation and served consistently.  (The RwLock itself stays
     /// poisoned forever; the one-shot flag keeps the hot gather path
     /// from thrashing the cache with a bump per recovery.)
-    fn note_poison(&self) {
-        if !self.poison_bumped.swap(true, Ordering::AcqRel) {
-            self.generation.fetch_add(1, Ordering::AcqRel);
+    fn note_poison(&self, s: usize) {
+        if !self.shards[s].poison_bumped.swap(true, Ordering::AcqRel) {
+            self.shards[s].generation.fetch_add(1, Ordering::AcqRel);
         }
     }
 
-    fn read_inner(&self) -> InnerRead<'_> {
+    fn read_shard(&self, s: usize) -> InnerRead<'_> {
         let _order = lockorder::acquire(Rank::EmbRows);
-        let guard = match self.inner.read() {
+        let guard = match self.shards[s].inner.read() {
             Ok(g) => g,
             Err(poisoned) => {
-                self.note_poison();
+                self.note_poison(s);
                 poisoned.into_inner()
             }
         };
         InnerRead { guard, _order }
     }
 
-    fn write_inner(&self) -> InnerWrite<'_> {
+    fn write_shard(&self, s: usize) -> InnerWrite<'_> {
         let _order = lockorder::acquire(Rank::EmbRows);
-        let guard = match self.inner.write() {
+        let guard = match self.shards[s].inner.write() {
             Ok(g) => g,
             Err(poisoned) => {
-                self.note_poison();
+                self.note_poison(s);
                 poisoned.into_inner()
             }
         };
@@ -267,21 +340,34 @@ impl EmbTable {
     }
 
     pub fn num_rows(&self) -> usize {
-        self.read_inner().t.len()
+        self.n
     }
 
-    /// Update generation: changes whenever any row is written.
+    /// Update generation: changes whenever any row is written.  The
+    /// sum of per-stripe generations — monotone (each component only
+    /// grows), and exactly the classic per-update counter for a
+    /// single-stripe table.
     pub fn generation(&self) -> u64 {
-        self.generation.load(Ordering::Acquire)
+        self.shards.iter().map(|s| s.generation.load(Ordering::Acquire)).sum()
+    }
+
+    /// One stripe's generation (`s < num_shards()`): bumped only by
+    /// updates that touched *this* stripe's rows, so caches striped by
+    /// the same hash can invalidate per stripe instead of table-wide.
+    pub fn shard_generation(&self, s: usize) -> u64 {
+        self.shards[s].generation.load(Ordering::Acquire)
     }
 
     /// Externally mark the table as updated (checkpoint restore, bulk
     /// weight swap — writes that bypass [`sparse_adam`](Self::sparse_adam)).
+    /// Every stripe's generation is bumped: all cached rows go stale.
     /// Generation-stamped caches (`serve::EmbeddingCache`) invalidate
     /// on the next lookup and `serve::refresh` re-reads hot rows in
     /// the background instead of letting them turn into a miss storm.
     pub fn bump_generation(&self) {
-        self.generation.fetch_add(1, Ordering::AcqRel);
+        for s in &self.shards {
+            s.generation.fetch_add(1, Ordering::AcqRel);
+        }
     }
 
     /// Read one row on behalf of partition `worker`
@@ -291,20 +377,42 @@ impl EmbTable {
         self.gather_into(worker, std::slice::from_ref(&id), out);
     }
 
-    /// Copy of the current weights (tests / checkpointing).
+    /// Copy of the current weights in id order (tests / checkpointing).
     pub fn weights_snapshot(&self) -> Vec<f32> {
-        self.read_inner().w.clone()
+        let d = self.dim;
+        let mut out = vec![0.0f32; self.n * d];
+        for s in 0..self.shards.len() {
+            // One stripe lock at a time; ids not in this stripe are
+            // filled by their own stripe's pass.
+            let inner = self.read_shard(s);
+            for id in 0..self.n {
+                if self.shard_idx(id as u32) != s {
+                    continue;
+                }
+                let base = self.local[id] as usize * d;
+                out[id * d..(id + 1) * d].copy_from_slice(&inner.w[base..base + d]);
+            }
+        }
+        out
     }
 
     /// Gather rows into `out` (`out.len() == ids.len() * dim`) on
-    /// behalf of partition `worker`, counting traffic.
+    /// behalf of partition `worker`, counting traffic.  One stripe
+    /// lock at a time, reacquired only when consecutive ids hop
+    /// stripes — a single-stripe table locks exactly once, as before.
     pub fn gather_into(&self, worker: u32, ids: &[u32], out: &mut [f32]) {
         let d = self.dim;
         assert_eq!(out.len(), ids.len() * d);
-        let inner = self.read_inner();
         let (mut local, mut remote) = (0u64, 0u64);
+        let mut cur: Option<(usize, InnerRead<'_>)> = None;
         for (j, &id) in ids.iter().enumerate() {
-            let base = id as usize * d;
+            let s = self.shard_idx(id);
+            if cur.as_ref().map(|c| c.0) != Some(s) {
+                cur = None; // release the previous stripe first
+                cur = Some((s, self.read_shard(s)));
+            }
+            let inner = &cur.as_ref().unwrap().1;
+            let base = self.local[id as usize] as usize * d;
             out[j * d..(j + 1) * d].copy_from_slice(&inner.w[base..base + d]);
             if self.book.part_of(self.ntype, id) == worker {
                 local += d as u64;
@@ -312,6 +420,7 @@ impl EmbTable {
                 remote += d as u64;
             }
         }
+        drop(cur);
         if local > 0 {
             self.counters.record(true, local);
         }
@@ -321,36 +430,53 @@ impl EmbTable {
     }
 
     /// Sparse Adam over the touched rows (`grads.len() == ids.len() * dim`).
-    /// Duplicate ids apply sequentially in order — deterministic.
+    /// Duplicate ids apply sequentially in order — deterministic.  On
+    /// a sharded table updates are grouped by stripe with input order
+    /// preserved within each; rows are independent, so the resulting
+    /// weights are bit-identical to the single-stripe table for any
+    /// shard count.  Each touched stripe's generation is bumped under
+    /// that stripe's write lock; untouched stripes keep theirs, so
+    /// their cached rows stay current (`put_if_current` and
+    /// `serve::refresh` compose per stripe).
     pub fn sparse_adam(&self, ids: &[u32], grads: &[f32], lr: f32) {
         const B1: f32 = 0.9;
         const B2: f32 = 0.999;
         const EPS: f32 = 1e-8;
         let d = self.dim;
         assert_eq!(grads.len(), ids.len() * d);
-        let mut inner = self.write_inner();
-        for (j, &id) in ids.iter().enumerate() {
-            let r = id as usize;
-            inner.t[r] += 1;
-            let t = inner.t[r] as f32;
-            let bc1 = 1.0 - B1.powf(t);
-            let bc2 = 1.0 - B2.powf(t);
-            for k in 0..d {
-                let i = r * d + k;
-                let g = grads[j * d + k];
-                inner.m[i] = B1 * inner.m[i] + (1.0 - B1) * g;
-                inner.v[i] = B2 * inner.v[i] + (1.0 - B2) * g * g;
-                let mhat = inner.m[i] / bc1;
-                let vhat = inner.v[i] / bc2;
-                inner.w[i] -= lr * mhat / (vhat.sqrt() + EPS);
+        for s in 0..self.shards.len() {
+            // Lock lazily: stripes with no rows in this batch are
+            // never locked and never bumped.
+            let mut inner: Option<InnerWrite<'_>> = None;
+            for (j, &id) in ids.iter().enumerate() {
+                if self.shard_idx(id) != s {
+                    continue;
+                }
+                let inner = inner.get_or_insert_with(|| self.write_shard(s));
+                let r = self.local[id as usize] as usize;
+                inner.t[r] += 1;
+                let t = inner.t[r] as f32;
+                let bc1 = 1.0 - B1.powf(t);
+                let bc2 = 1.0 - B2.powf(t);
+                for k in 0..d {
+                    let i = r * d + k;
+                    let g = grads[j * d + k];
+                    inner.m[i] = B1 * inner.m[i] + (1.0 - B1) * g;
+                    inner.v[i] = B2 * inner.v[i] + (1.0 - B2) * g * g;
+                    let mhat = inner.m[i] / bc1;
+                    let vhat = inner.v[i] / bc2;
+                    inner.w[i] -= lr * mhat / (vhat.sqrt() + EPS);
+                }
+            }
+            if inner.is_some() {
+                // Bump while still holding the stripe's write lock: a
+                // reader that stamps rows with the new generation can
+                // only have gathered them *after* this update landed.
+                // (Bumping before the lock would let a concurrent
+                // read-through cache stamp pre-update rows as current.)
+                self.shards[s].generation.fetch_add(1, Ordering::AcqRel);
             }
         }
-        // Bump the generation while still holding the write lock: a
-        // reader that stamps rows with the new generation can only
-        // have gathered them *after* this update landed.  (Bumping
-        // before the lock would let a concurrent read-through cache
-        // stamp pre-update rows as current.)
-        self.generation.fetch_add(1, Ordering::AcqRel);
     }
 }
 
@@ -384,6 +510,21 @@ impl DistEngine {
             n,
             dim,
             seed,
+            self.book.clone(),
+            self.counters.clone(),
+        ));
+    }
+
+    /// [`add_embed`](Self::add_embed) with the table's rows striped
+    /// `shards` ways (same hash as the serving cache) — bit-identical
+    /// weights, per-stripe locks and generations.
+    pub fn add_embed_sharded(&mut self, ntype: usize, n: usize, dim: usize, seed: u64, shards: usize) {
+        self.embeds[ntype] = Some(EmbTable::new_sharded(
+            ntype,
+            n,
+            dim,
+            seed,
+            shards,
             self.book.clone(),
             self.counters.clone(),
         ));
@@ -474,12 +615,13 @@ mod tests {
         let e = EmbTable::new(0, 4, 2, 7, book, counters);
         e.sparse_adam(&[0], &[1.0; 2], 1e-2);
         assert_eq!(e.generation(), 1);
-        // Poison the inner lock the way a crashed updater would.
+        // Poison the (single) stripe's lock the way a crashed updater
+        // would.
         let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            let _g = e.inner.write().unwrap();
+            let _g = e.shards[0].inner.write().unwrap();
             panic!("die mid-update");
         }));
-        assert!(e.inner.is_poisoned());
+        assert!(e.shards[0].inner.is_poisoned());
         // Every access recovers; only the first bumps the generation.
         let mut row = vec![0.0f32; 2];
         e.row_into(0, 1, &mut row);
@@ -519,6 +661,59 @@ mod tests {
         e.gather_into(0, &[2, 0], &mut out);
         assert_eq!(&out[..3], &snap[6..9]);
         assert_eq!(&out[3..], &snap[0..3]);
+    }
+
+    #[test]
+    fn sharded_emb_table_matches_single_stripe() {
+        let (book, counters) = setup(33, 2);
+        let a = EmbTable::new(0, 33, 4, 11, book.clone(), counters.clone());
+        let b = EmbTable::new_sharded(0, 33, 4, 11, 4, book, counters);
+        assert_eq!(a.num_shards(), 1);
+        assert_eq!(b.num_shards(), 4);
+        assert_eq!(b.num_rows(), 33);
+        assert_eq!(
+            a.weights_snapshot(),
+            b.weights_snapshot(),
+            "initial weights are shard-count invariant"
+        );
+        // Duplicates and shard-hopping ids: updates must land
+        // bit-identically on both layouts.
+        let ids = [3u32, 17, 3, 8, 30, 17];
+        let grads: Vec<f32> = (0..ids.len() * 4).map(|i| (i as f32 * 0.37).sin()).collect();
+        a.sparse_adam(&ids, &grads, 1e-2);
+        b.sparse_adam(&ids, &grads, 1e-2);
+        assert_eq!(
+            a.weights_snapshot(),
+            b.weights_snapshot(),
+            "sparse-Adam is shard-count invariant"
+        );
+        let mut oa = vec![0.0f32; 3 * 4];
+        let mut ob = vec![0.0f32; 3 * 4];
+        a.gather_into(0, &[30, 3, 17], &mut oa);
+        b.gather_into(0, &[30, 3, 17], &mut ob);
+        assert_eq!(oa, ob, "gathers are shard-count invariant");
+    }
+
+    #[test]
+    fn sharded_generation_bumps_only_touched_stripes() {
+        let (book, counters) = setup(16, 1);
+        let e = EmbTable::new_sharded(0, 16, 2, 5, 4, book, counters);
+        assert_eq!(e.generation(), 0);
+        let id_a = 0u32;
+        let sa = shard_of(id_a as u64, 4);
+        let id_b = (1..16u32).find(|&i| shard_of(i as u64, 4) != sa).unwrap();
+        let sb = shard_of(id_b as u64, 4);
+        e.sparse_adam(&[id_a], &[1.0; 2], 1e-2);
+        assert_eq!(e.shard_generation(sa), 1);
+        assert_eq!(e.shard_generation(sb), 0, "untouched stripe keeps its generation");
+        assert_eq!(e.generation(), 1, "table generation is the sum of stripe generations");
+        e.sparse_adam(&[id_a, id_b], &[1.0; 4], 1e-2);
+        assert_eq!(e.shard_generation(sa), 2);
+        assert_eq!(e.shard_generation(sb), 1);
+        assert_eq!(e.generation(), 3);
+        // Bulk swap stales every stripe at once.
+        e.bump_generation();
+        assert_eq!(e.generation(), 3 + 4);
     }
 
     #[test]

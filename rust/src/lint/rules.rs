@@ -80,9 +80,14 @@ const RANK_NAMES: [&str; 4] =
 /// so it never holds past the call.
 fn lock_marker(toks: &[Tok], i: usize) -> Option<(u8, bool)> {
     match toks[i].text.as_str() {
-        "lock_cache" => Some((0, true)),
+        // Cache stripes share rank 0: the static rule flags *any* two
+        // held stripe guards, because ascending-shard nesting (the one
+        // runtime-legal case, checked by lockorder::acquire_shard)
+        // cannot be proven from tokens — serve code takes stripes
+        // strictly one at a time.
+        "lock_cache" | "lock_shard" | "lock_key" | "lock_at" => Some((0, true)),
         "forward_locked" => Some((1, false)),
-        "read_inner" | "write_inner" => Some((2, true)),
+        "read_inner" | "write_inner" | "read_shard" | "write_shard" => Some((2, true)),
         "lock_clean" => Some((3, true)),
         "lock_ranked" => {
             // Rank comes from the second argument: scan the call
@@ -492,6 +497,28 @@ mod tests {
         assert_eq!(rules_of("dist/x.rs", bad), ["lock-order"]);
         let good = "fn f(t: &T, m: &M) { let c = lock_cache(m); let g = t.read_inner(); }";
         assert!(rules_of("dist/x.rs", good).is_empty());
+    }
+
+    #[test]
+    fn cache_stripes_share_rank_zero() {
+        // Two stripe guards held at once is a finding — ascending-shard
+        // nesting cannot be proven statically, so serve code takes
+        // stripes one at a time.
+        let bad = "fn f(c: &C) { let a = c.lock_key(k1); let b = c.lock_key(k2); }";
+        assert_eq!(rules_of("serve/x.rs", bad), ["lock-order"]);
+        let bad = "fn f(m: &M, n: &M) { let a = lock_shard(m, 0); let b = lock_shard(n, 1); }";
+        assert_eq!(rules_of("serve/x.rs", bad), ["lock-order"]);
+        // Scoped or sequential stripe access is clean.
+        let ok = "fn f(c: &C) { { let a = c.lock_key(k1); } let b = c.lock_at(1); }";
+        assert!(rules_of("serve/x.rs", ok).is_empty());
+        let ok = "fn f(c: &C) { for i in 0..n { let g = c.lock_at(i); g.put(i, &row); } }";
+        assert!(rules_of("serve/x.rs", ok).is_empty());
+        // Session lock under a held stripe guard follows the declared
+        // cache -> session order and stays clean.
+        let ok = "fn f(c: &C, e: &E) { let g = c.lock_key(k); e.forward_locked(sc, s, l); }";
+        assert!(rules_of("serve/x.rs", ok).is_empty(), "session after cache is in order");
+        let bad2 = "fn f(t: &T, c: &C) { let g = t.read_shard(s); let a = c.lock_key(k); }";
+        assert_eq!(rules_of("dist/x.rs", bad2), ["lock-order"]);
     }
 
     #[test]

@@ -17,9 +17,18 @@
 //! a one-shot scan key loses that comparison against any genuinely
 //! hot row, so a full cache of hot rows survives arbitrarily long
 //! cold scans (see `tinylfu_admission_resists_scans`).
+//!
+//! [`ShardedCache`] stripes all of the above `serve.shards` ways by
+//! the [`shard_of`] hash, removing the single cache mutex from the
+//! serving hot path while keeping replies and hit/miss accounting
+//! bit-identical for any shard count (docs/SERVING.md, sharding
+//! section).
 
 use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
+use super::error::lock_shard;
 use crate::dist::EmbTable;
 use crate::util::{fxhash64, FxHashMap};
 
@@ -33,6 +42,20 @@ pub fn cache_key(nt: u32, id: u32) -> u64 {
 #[inline]
 pub fn split_key(key: u64) -> (u32, u32) {
     ((key >> 32) as u32, key as u32)
+}
+
+/// The stripe a key belongs to, out of `shards`.  One hash routes the
+/// whole hot path: [`ShardedCache`] stripes by it, and
+/// `dist::EmbTable` shards its rows by the same function, so a key's
+/// cache stripe and a row's table shard are both pure functions of the
+/// id — deterministic for any shard count.
+#[inline]
+pub fn shard_of(key: u64, shards: usize) -> usize {
+    if shards <= 1 {
+        0
+    } else {
+        (fxhash64(key) % shards as u64) as usize
+    }
 }
 
 /// Admission policy for a full cache: plain LRU, or an LRU whose
@@ -117,6 +140,11 @@ struct Entry {
     val: Vec<f32>,
     prev: u32,
     next: u32,
+    /// Monotone recency stamp from the (possibly shard-shared)
+    /// ticker, refreshed whenever the entry moves to the LRU head —
+    /// what makes per-shard recency lists mergeable into one global
+    /// hot-key order ([`ShardedCache::hot_keys`]).
+    touch: u64,
 }
 
 /// Bounded LRU over f32 rows, keyed by [`cache_key`].  Capacity 0
@@ -131,6 +159,9 @@ pub struct EmbeddingCache {
     head: u32,
     tail: u32,
     sketch: Option<FreqSketch>,
+    /// Recency-tick source; shards of one [`ShardedCache`] share it so
+    /// their stamps form a single global order.
+    ticker: Arc<AtomicU64>,
 }
 
 impl EmbeddingCache {
@@ -140,6 +171,10 @@ impl EmbeddingCache {
 
     /// Cache with an explicit admission policy (`serve.admission`).
     pub fn with_admission(cap: usize, admission: Admission) -> EmbeddingCache {
+        EmbeddingCache::with_ticker(cap, admission, Arc::new(AtomicU64::new(0)))
+    }
+
+    fn with_ticker(cap: usize, admission: Admission, ticker: Arc<AtomicU64>) -> EmbeddingCache {
         EmbeddingCache {
             cap,
             gen: 0,
@@ -152,7 +187,13 @@ impl EmbeddingCache {
                 Admission::TinyLfu if cap > 0 => Some(FreqSketch::new(cap)),
                 _ => None,
             },
+            ticker,
         }
+    }
+
+    #[inline]
+    fn tick(&self) -> u64 {
+        self.ticker.fetch_add(1, Ordering::Relaxed)
     }
 
     pub fn capacity(&self) -> usize {
@@ -243,6 +284,9 @@ impl EmbeddingCache {
         }
         self.detach(i);
         self.push_front(i);
+        let touch = self.tick();
+        let e = &mut self.entries[i as usize];
+        e.touch = touch;
         Some(&self.entries[i as usize].val)
     }
 
@@ -255,10 +299,12 @@ impl EmbeddingCache {
             return;
         }
         if let Some(&i) = self.map.get(&key) {
+            let touch = self.tick();
             let e = &mut self.entries[i as usize];
             e.gen = self.gen;
             e.val.clear();
             e.val.extend_from_slice(val);
+            e.touch = touch;
             self.detach(i);
             self.push_front(i);
             return;
@@ -280,15 +326,24 @@ impl EmbeddingCache {
             self.map.remove(&old_key);
             i
         } else {
-            self.entries.push(Entry { key: 0, gen: 0, val: Vec::new(), prev: NIL, next: NIL });
+            self.entries.push(Entry {
+                key: 0,
+                gen: 0,
+                val: Vec::new(),
+                prev: NIL,
+                next: NIL,
+                touch: 0,
+            });
             (self.entries.len() - 1) as u32
         };
+        let touch = self.tick();
         {
             let e = &mut self.entries[i as usize];
             e.key = key;
             e.gen = self.gen;
             e.val.clear();
             e.val.extend_from_slice(val);
+            e.touch = touch;
         }
         self.map.insert(key, i);
         self.push_front(i);
@@ -322,6 +377,180 @@ impl EmbeddingCache {
             i = e.next;
         }
         out
+    }
+
+    /// Every resident `(touch, key)` pair, appended to `out` — the
+    /// per-shard raw material [`ShardedCache::hot_keys`] merges into a
+    /// global recency order.  Touch stamps are refreshed exactly when
+    /// an entry moves to the LRU head, so sorting by stamp reproduces
+    /// the recency list.
+    fn touched(&self, out: &mut Vec<(u64, u64)>) {
+        let mut i = self.head;
+        while i != NIL {
+            let e = &self.entries[i as usize];
+            out.push((e.touch, e.key));
+            i = e.next;
+        }
+    }
+}
+
+/// The serving cache striped `N` ways: each shard is an independent
+/// [`EmbeddingCache`] behind its own mutex — its own LRU list, TinyLFU
+/// [`FreqSketch`] and hot-key tracker — and a key's shard is the pure
+/// hash [`shard_of`]`(key, N)`.  Readers and writers touching
+/// different stripes never contend; aggregate views (`len`,
+/// `generation`, the merged [`hot_keys`](ShardedCache::hot_keys) the
+/// background refresher consumes) lock shards one at a time, never two
+/// together, so the per-shard lock-order DAG (`lockorder::Rank::Cache`
+/// with ascending shard sub-ranks) is trivially respected.
+///
+/// Determinism contract: because routing is a pure function of the key
+/// and each shard preserves the exact single-cache semantics
+/// (generation stamping, LRU, admission), replies and hit/miss
+/// accounting through the serving pool are bit-identical for any shard
+/// count whenever they are for one (see `rust/tests/sharding.rs`).
+/// With a bounded capacity the *eviction* pattern depends on the shard
+/// count (capacity splits `cap.div_ceil(N)` per stripe), exactly like
+/// it already depends on request interleaving.
+pub struct ShardedCache {
+    shards: Vec<Mutex<EmbeddingCache>>,
+}
+
+impl ShardedCache {
+    /// `cap` total rows striped over `shards` plain-LRU stripes
+    /// (capacity 0 disables every stripe — the uncached arm).
+    pub fn new(cap: usize, shards: usize) -> ShardedCache {
+        ShardedCache::with_admission(cap, shards, Admission::Always)
+    }
+
+    /// [`new`](ShardedCache::new) with an explicit admission policy
+    /// (`serve.admission`); every stripe gets its own frequency
+    /// sketch sized to its share of the capacity.
+    pub fn with_admission(cap: usize, shards: usize, admission: Admission) -> ShardedCache {
+        let n = shards.max(1);
+        let per = if cap == 0 { 0 } else { cap.div_ceil(n) };
+        let ticker = Arc::new(AtomicU64::new(0));
+        ShardedCache {
+            shards: (0..n)
+                .map(|_| Mutex::new(EmbeddingCache::with_ticker(per, admission, ticker.clone())))
+                .collect(),
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total capacity across stripes (0 = disabled).  Striping rounds
+    /// per-shard capacity up (`cap.div_ceil(shards)` each), so this
+    /// can slightly exceed the requested total.
+    pub fn capacity(&self) -> usize {
+        (0..self.shards.len()).map(|i| self.lock_at(i).capacity()).sum()
+    }
+
+    pub fn admission(&self) -> Admission {
+        self.lock_at(0).admission()
+    }
+
+    /// The stripe index for `key`.
+    #[inline]
+    pub fn shard_index(&self, key: u64) -> usize {
+        shard_of(key, self.shards.len())
+    }
+
+    /// The raw mutex of stripe `i` — for callers that need to compose
+    /// several operations under one shard lock (lock it through
+    /// [`super::error::lock_shard`] with the same index).
+    pub fn shard(&self, i: usize) -> &Mutex<EmbeddingCache> {
+        &self.shards[i]
+    }
+
+    /// Lock the stripe owning `key` (rank-tracked, poison recovery
+    /// bumps that shard's generation).
+    pub fn lock_key(&self, key: u64) -> super::error::RankedGuard<'_, EmbeddingCache> {
+        let i = self.shard_index(key);
+        lock_shard(&self.shards[i], i as u32)
+    }
+
+    /// Lock stripe `i` directly.
+    pub fn lock_at(&self, i: usize) -> super::error::RankedGuard<'_, EmbeddingCache> {
+        lock_shard(&self.shards[i], i as u32)
+    }
+
+    /// Resident rows across all stripes.
+    pub fn len(&self) -> usize {
+        (0..self.shards.len()).map(|i| self.lock_at(i).len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The oldest stripe generation — the conservative aggregate the
+    /// refresher compares against a source generation: equality means
+    /// *every* stripe has adopted it.
+    pub fn generation(&self) -> u64 {
+        (0..self.shards.len()).map(|i| self.lock_at(i).generation()).min().unwrap_or(0)
+    }
+
+    /// Adopt `gen` on every stripe.
+    pub fn set_generation(&self, gen: u64) {
+        for i in 0..self.shards.len() {
+            self.lock_at(i).set_generation(gen);
+        }
+    }
+
+    /// Invalidate every stripe in O(shards).
+    pub fn bump_generation(&self) {
+        for i in 0..self.shards.len() {
+            self.lock_at(i).bump_generation();
+        }
+    }
+
+    /// `get` through the owning stripe (feeds its admission sketch,
+    /// refreshes recency), copying the row out of the lock.
+    pub fn get(&self, key: u64) -> Option<Vec<f32>> {
+        self.lock_key(key).get(key).map(|r| r.to_vec())
+    }
+
+    /// `put` into the owning stripe at its current generation.
+    pub fn put(&self, key: u64, val: &[f32]) {
+        self.lock_key(key).put(key, val);
+    }
+
+    /// [`EmbeddingCache::put_if_current`] on the owning stripe.
+    pub fn put_if_current(&self, key: u64, val: &[f32], gen: u64) -> bool {
+        self.lock_key(key).put_if_current(key, val, gen)
+    }
+
+    /// Read-through lookup on the owning stripe (the stripe lock is
+    /// held across the fetch, like the single-cache
+    /// [`EmbeddingCache::get_through`]).
+    pub fn get_through(
+        &self,
+        nt: u32,
+        id: u32,
+        src: &mut impl RowSource,
+        out: &mut Vec<f32>,
+    ) -> Result<bool> {
+        self.lock_key(cache_key(nt, id)).get_through(nt, id, src, out)
+    }
+
+    /// The merged global hot set: per-shard recency lists zipped by
+    /// their shared touch ticker into one most-recently-used-first
+    /// order, truncated to `limit`.  For a single shard this is
+    /// exactly [`EmbeddingCache::hot_keys`]; for N shards it is the
+    /// same order a single cache would have produced under the same
+    /// touch sequence (`rust/tests/sharding.rs` proves the
+    /// equivalence).  Shard locks are taken one at a time.
+    pub fn hot_keys(&self, limit: usize) -> Vec<u64> {
+        let mut pairs: Vec<(u64, u64)> = Vec::new();
+        for i in 0..self.shards.len() {
+            self.lock_at(i).touched(&mut pairs);
+        }
+        pairs.sort_unstable_by(|a, b| b.0.cmp(&a.0));
+        pairs.truncate(limit);
+        pairs.into_iter().map(|(_, k)| k).collect()
     }
 }
 
@@ -535,6 +764,77 @@ mod tests {
         for (nt, id) in [(0u32, 0u32), (3, 17), (u32::MAX, u32::MAX)] {
             assert_eq!(split_key(cache_key(nt, id)), (nt, id));
         }
+    }
+
+    #[test]
+    fn shard_of_is_stable_and_in_range() {
+        for key in [0u64, 1, 42, cache_key(3, 17), u64::MAX] {
+            assert_eq!(shard_of(key, 1), 0);
+            for n in [2usize, 4, 8] {
+                let s = shard_of(key, n);
+                assert!(s < n);
+                assert_eq!(s, shard_of(key, n), "routing must be a pure function");
+            }
+        }
+        // The hash actually spreads: 256 consecutive keys over 4
+        // shards must not all land on one stripe.
+        let mut seen = [false; 4];
+        for k in 0..256u64 {
+            seen[shard_of(k, 4)] = true;
+        }
+        assert!(seen.iter().all(|&b| b), "fxhash routing left a stripe empty");
+    }
+
+    #[test]
+    fn sharded_cache_routes_and_aggregates() {
+        let c = ShardedCache::new(64, 4);
+        assert_eq!(c.num_shards(), 4);
+        for k in 0..32u64 {
+            c.put(k, &[k as f32]);
+        }
+        assert_eq!(c.len(), 32);
+        for k in 0..32u64 {
+            assert_eq!(c.get(k), Some(vec![k as f32]));
+            // The row lives in exactly the stripe shard_of names.
+            let i = c.shard_index(k);
+            assert!(super::lock_shard(c.shard(i), i as u32).get(k).is_some());
+        }
+        c.bump_generation();
+        for k in 0..32u64 {
+            assert_eq!(c.get(k), None, "bump must invalidate every stripe");
+        }
+    }
+
+    #[test]
+    fn sharded_generation_is_min_over_stripes() {
+        let c = ShardedCache::new(16, 4);
+        c.set_generation(5);
+        assert_eq!(c.generation(), 5);
+        // One stripe lagging drags the aggregate down — the refresher
+        // must see "not everyone has adopted gen 6 yet".
+        c.lock_at(2).set_generation(6);
+        assert_eq!(c.generation(), 5);
+        c.set_generation(6);
+        assert_eq!(c.generation(), 6);
+    }
+
+    #[test]
+    fn merged_hot_keys_follow_global_recency() {
+        // Same op sequence against 1 and 4 stripes: the merged view
+        // must equal the single-cache recency order exactly.
+        let ops: Vec<u64> = vec![11, 7, 3, 19, 7, 3, 42, 11];
+        let single = ShardedCache::new(64, 1);
+        let striped = ShardedCache::new(64, 4);
+        for c in [&single, &striped] {
+            for &k in &ops {
+                if c.get(k).is_none() {
+                    c.put(k, &[k as f32]);
+                }
+            }
+        }
+        assert_eq!(striped.hot_keys(16), single.hot_keys(16));
+        assert_eq!(striped.hot_keys(3), single.hot_keys(3));
+        assert_eq!(striped.hot_keys(16), vec![11, 42, 3, 7, 19]);
     }
 
     #[test]

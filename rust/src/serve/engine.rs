@@ -217,8 +217,12 @@ impl<'a> InferenceEngine<'a> {
     /// and assembly run unlocked in the caller's thread, but PJRT
     /// execution is serialized through `exec_lock` — a single PJRT
     /// session must never execute concurrently (the same contract the
-    /// trainers keep by executing on one thread).  The surrogate
-    /// backend executes lock-free.
+    /// trainers keep by executing on one thread).  Callers may hold
+    /// *different* locks for different sessions (`serve.sessions`
+    /// hands worker `w` lock `w % sessions`), so forwards on distinct
+    /// sessions run genuinely in parallel; which lock serializes a
+    /// forward never changes its result.  The surrogate backend
+    /// executes lock-free.
     pub fn forward_locked<'s>(
         &self,
         sc: &'s mut ServeScratch<'a>,

@@ -165,7 +165,17 @@ pub fn lock_clean<T>(m: &Mutex<T>) -> RankedGuard<'_, T> {
 /// recovered cache starts from a clean "miss everything" state and
 /// only rows re-stamped by a live serving path are served again.
 pub fn lock_cache(m: &Mutex<EmbeddingCache>) -> RankedGuard<'_, EmbeddingCache> {
-    let _order = lockorder::acquire(Rank::Cache);
+    lock_shard(m, 0)
+}
+
+/// [`lock_cache`] for one stripe of a [`super::ShardedCache`]: same
+/// poison policy (recovery bumps that shard's generation), but the
+/// lock-order token carries the shard index, so the debug tracker
+/// enforces the per-shard DAG — shard locks may only nest in
+/// ascending index order, and in practice the serving paths never
+/// hold two at once (aggregation walks shards one at a time).
+pub fn lock_shard(m: &Mutex<EmbeddingCache>, shard: u32) -> RankedGuard<'_, EmbeddingCache> {
+    let _order = lockorder::acquire_shard(Rank::Cache, shard);
     // lint:allow(lock-order): the cache-ranked helper itself; poison recovery bumps the generation
     let guard = match m.lock() {
         Ok(g) => g,

@@ -17,6 +17,10 @@
 //!   (power-law traffic) skip sampling entirely; the same
 //!   [`cache::RowSource`] read-through trait wraps `dist::EmbTable`
 //!   lookups so learnable-embedding models serve too.
+//!   [`cache::ShardedCache`] stripes it N ways (`serve.shards`) —
+//!   per-stripe locks keyed by `shard_of(key)`, a merged `hot_keys`
+//!   recency view for the refresher, replies and hit/miss accounting
+//!   bit-identical for any shard count.
 //! * [`batcher::MicroBatcher`] — coalesces concurrent single-node
 //!   requests into size/deadline-bounded micro-batches.
 //! * [`pool::EnginePool`] — N engine scratches draining one shared
@@ -38,9 +42,12 @@ pub mod pool;
 pub mod refresh;
 
 pub use batcher::{ClosedLoopStats, MicroBatcher, MicroBatcherCfg, ServeRequest};
-pub use cache::{cache_key, split_key, Admission, EmbTableSource, EmbeddingCache, RowSource};
+pub use cache::{
+    cache_key, shard_of, split_key, Admission, EmbTableSource, EmbeddingCache, RowSource,
+    ShardedCache,
+};
 pub use engine::{InferenceEngine, ServeScratch};
-pub use error::{lock_cache, lock_clean, ServeError};
+pub use error::{lock_cache, lock_clean, lock_shard, ServeError};
 pub use faults::{FaultKind, FaultPlan, FaultSpec};
 pub use offline::{read_shards, OfflineInference, OfflineReport};
 pub use pool::{closed_loop, closed_loop_with_faults, EnginePool, EnginePoolCfg};
@@ -48,7 +55,6 @@ pub use refresh::{refresh_hot_rows, refresh_loop, EngineSource, RefreshCfg, Refr
 
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 
 use crate::obs::metrics;
 use crate::util::{FxHashMap, FxHashSet, Rng};
@@ -67,6 +73,11 @@ pub struct ServeBenchParams {
     pub clients: usize,
     /// Warmed-arm cache capacity (rows).
     pub cache: usize,
+    /// Cache stripes (`serve.shards`): every arm's cache is a
+    /// [`ShardedCache`] with this many independently locked shards.
+    /// Replies and hit/miss accounting are bit-identical for any
+    /// value — asserted by `tests/sharding.rs`.
+    pub shards: usize,
     /// Admission policy of the warmed-arm cache.
     pub admission: Admission,
     /// Engine-pool size + micro-batching policy (all arms share it).
@@ -140,7 +151,7 @@ pub fn run_serve_bench(
         _ => None,
     };
 
-    let nocache = Mutex::new(EmbeddingCache::new(0));
+    let nocache = ShardedCache::new(0, p.shards);
     let (uncached, replies0) =
         closed_loop_with_faults(engine, p.pool.clone(), &nocache, &trace, p.clients, plan.as_ref())?;
     // Each arm publishes its ClosedLoopStats verbatim into the metrics
@@ -148,13 +159,14 @@ pub fn run_serve_bench(
     // by construction (asserted in tests/obs.rs).
     metrics::publish(metrics::closed_loop_snapshot("serve.uncached", &uncached));
 
-    let cache = Mutex::new(EmbeddingCache::with_admission(p.cache, p.admission));
+    let cache = ShardedCache::with_admission(p.cache, p.shards, p.admission);
     {
-        let mut cache = lock_cache(&cache);
         cache.set_generation(engine.generation());
         let mut sc = engine.make_scratch();
         let c = engine.out_dim();
         for chunk in distinct.chunks(engine.capacity()) {
+            // Forward outside any stripe lock; each put locks only the
+            // stripe owning its key.
             let rows = engine.forward(&mut sc, chunk)?;
             for (i, &(nt, id)) in chunk.iter().enumerate() {
                 cache.put(cache_key(nt, id), &rows[i * c..(i + 1) * c]);

@@ -280,3 +280,19 @@ impl EmbeddingCache {
         Ok(n)
     }
 }
+
+impl super::cache::ShardedCache {
+    /// [`EmbeddingCache::warm_from_dir`] for a striped cache: same
+    /// file-order insertion, but each row locks only the stripe that
+    /// owns its key, so a pool can keep serving while the warm-up
+    /// streams in.
+    pub fn warm_from_dir(&self, dir: &Path, ntype: u32, generation: u64) -> Result<usize> {
+        self.set_generation(generation);
+        let rows = read_shards(dir, ntype)?;
+        let n = rows.len();
+        for ((nt, id), row) in rows {
+            self.put(cache_key(nt, id), &row);
+        }
+        Ok(n)
+    }
+}

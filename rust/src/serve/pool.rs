@@ -13,15 +13,22 @@
 //!                                 └── completions / worker obituaries ◀──┘
 //! ```
 //!
-//! * The **coordinator** is the only thread that touches the cache and
-//!   the batching state: it answers hits on arrival, sheds requests at
-//!   the queue boundary ([`EnginePoolCfg::queue_depth`]), coalesces
-//!   duplicate in-flight keys, cuts size/deadline-bounded batches of
-//!   distinct misses and hands them to the job queue.
+//! * The **coordinator** is the only *request-path* thread that
+//!   touches the cache and the batching state: it answers hits on
+//!   arrival, sheds requests at the queue boundary
+//!   ([`EnginePoolCfg::queue_depth`]), coalesces duplicate in-flight
+//!   keys, cuts size/deadline-bounded batches of distinct misses and
+//!   hands them to the job queue.  The cache is a
+//!   [`ShardedCache`] — per-key stripe locks — so the background
+//!   refresher (`serve::refresh`) re-warms stripes concurrently
+//!   without stalling the hit path behind one table-wide mutex.
 //! * **Workers** each own a private [`ServeScratch`] and run the full
 //!   sample → assemble → execute path per batch inside
 //!   `catch_unwind`, with bounded backoff-retries for retryable
-//!   errors ([`ServeError::retryable`]).  A panic or fatal error
+//!   errors ([`ServeError::retryable`]).  Worker `w` serializes
+//!   backend execution behind session lock `w % sessions`
+//!   ([`EnginePoolCfg::sessions`]), so forwards on distinct sessions
+//!   run genuinely in parallel.  A panic or fatal error
 //!   discards the scratch: the worker restarts with a fresh one while
 //!   the pool-wide restart budget
 //!   ([`EnginePoolCfg::max_worker_restarts`]) lasts, then exits.
@@ -46,18 +53,23 @@
 //!
 //! Determinism contract (the pooled extension of PR 1's per-batch RNG
 //! invariant): because the engine samples canonically per node, every
-//! reply is bit-identical for any pool size, any batch composition,
-//! any worker interleaving and any injected fault schedule
-//! ([`FaultPlan`]).  Hit/miss *accounting* is also pool-size invariant
-//! whenever the cache doesn't evict (capacity ≥ working set) and the
-//! request order is fixed: a request misses iff its key was never
-//! requested before, because keys move atomically from forming batch
-//! → in-flight → cache under the coordinator.  Requests that find
-//! their key in flight are counted as hits (and additionally as
-//! `coalesced`); the hit/coalesced *split* depends on completion
-//! timing, the hit+miss totals do not.  Shedding and deadline misses
-//! are deliberately timing-dependent and excluded from that contract
-//! (`tests/faults.rs` runs its bit-identity sweep with both off).
+//! reply is bit-identical for any pool size, any session count, any
+//! cache shard count, any batch composition, any worker interleaving
+//! and any injected fault schedule ([`FaultPlan`]).  Hit/miss
+//! *accounting* is also invariant across every `(shards, sessions,
+//! pool_workers)` combination whenever the cache doesn't evict
+//! (capacity ≥ working set) and the request order is fixed: a request
+//! misses iff its key was never requested before, because keys move
+//! atomically from forming batch → in-flight → cache under the
+//! coordinator, and sharding only changes *which* stripe lock guards a
+//! key, never whether it is resident.  Requests that find their key in
+//! flight are counted as hits (and additionally as `coalesced`); the
+//! hit/coalesced *split* depends on completion timing, the hit+miss
+//! totals do not.  Shedding and deadline misses are deliberately
+//! timing-dependent and excluded from that contract
+//! (`tests/faults.rs` and `tests/sharding.rs` run their bit-identity
+//! sweeps with both off; the faulted sweeps re-check the counters the
+//! contract does cover).
 
 use anyhow::{anyhow, Result};
 use std::collections::{BTreeMap, VecDeque};
@@ -68,9 +80,9 @@ use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use super::batcher::{ClosedLoopStats, MicroBatcherCfg, ServeRequest};
-use super::cache::{cache_key, EmbeddingCache};
+use super::cache::{cache_key, ShardedCache};
 use super::engine::{InferenceEngine, ServeScratch};
-use super::error::{lock_cache, lock_clean, ServeError};
+use super::error::{lock_clean, ServeError};
 use super::faults::{FaultKind, FaultPlan};
 use super::ServeMetrics;
 use crate::util::FxHashMap;
@@ -82,6 +94,14 @@ use crate::util::FxHashMap;
 pub struct EnginePoolCfg {
     /// Engine scratches draining the queue (≥ 1).
     pub workers: usize,
+    /// Independent engine execution sessions (`serve.sessions`):
+    /// worker `w` serializes backend execution behind session lock
+    /// `w % sessions`, so PJRT forwards across different sessions run
+    /// genuinely in parallel instead of all queueing on one lock.
+    /// Clamped to `[1, workers]` at pool start; the surrogate backend
+    /// is lock-free either way.  Replies are bit-identical for any
+    /// value — sessions only change *which* lock serializes a forward.
+    pub sessions: usize,
     pub batcher: MicroBatcherCfg,
     /// Per-request deadline (`serve.deadline_ms`); a request older
     /// than this gets [`ServeError::DeadlineExceeded`] instead of a
@@ -106,6 +126,7 @@ impl Default for EnginePoolCfg {
     fn default() -> Self {
         EnginePoolCfg {
             workers: 1,
+            sessions: 1,
             batcher: MicroBatcherCfg::default(),
             request_deadline: Duration::ZERO,
             max_retries: 2,
@@ -257,12 +278,13 @@ impl EnginePool {
 
     /// Blocking serve loop: drains `rx` until every request sender has
     /// been dropped and every dispatched batch has been applied.
-    /// `cache` is shared behind a `Mutex` so a background refresher
-    /// (`serve::refresh`) can re-warm it concurrently.
+    /// `cache` is a [`ShardedCache`] — per-key stripe locks — so a
+    /// background refresher (`serve::refresh`) can re-warm it
+    /// concurrently without contending with the whole hit path.
     pub fn run(
         &self,
         engine: &InferenceEngine,
-        cache: &Mutex<EmbeddingCache>,
+        cache: &ShardedCache,
         rx: Receiver<ServeRequest>,
         metrics: &ServeMetrics,
     ) -> Result<()> {
@@ -275,18 +297,22 @@ impl EnginePool {
     pub fn run_with_faults(
         &self,
         engine: &InferenceEngine,
-        cache: &Mutex<EmbeddingCache>,
+        cache: &ShardedCache,
         rx: Receiver<ServeRequest>,
         metrics: &ServeMetrics,
         faults: Option<&FaultPlan>,
     ) -> Result<()> {
         let workers = self.cfg.workers.max(1);
+        let sessions = self.cfg.sessions.clamp(1, workers);
         let cap = self.cfg.batcher.max_batch.min(engine.capacity()).max(1);
         let c = engine.out_dim();
         let max_retries = self.cfg.max_retries;
         let retry_backoff = self.cfg.retry_backoff;
         let request_deadline = self.cfg.request_deadline;
-        let exec_lock = Mutex::new(());
+        // One execution lock per session: worker w serializes its
+        // backend forwards behind lock w % sessions, so distinct
+        // sessions execute in parallel (`serve.sessions`).
+        let exec_locks: Vec<Mutex<()>> = (0..sessions).map(|_| Mutex::new(())).collect();
         // Signed pool-wide budget: each restart event decrements; a
         // worker whose decrement observes an already-spent budget
         // exits instead of restarting.
@@ -308,10 +334,10 @@ impl EnginePool {
             });
             // Workers: private scratch each, shared job queue, panics
             // contained per batch.
-            for _ in 0..workers {
+            for w in 0..workers {
                 let done_tx = msg_tx.clone();
                 let job_rx = &job_rx;
-                let exec_lock = &exec_lock;
+                let exec_lock = &exec_locks[w % sessions];
                 let restart_budget = &restart_budget;
                 scope.spawn(move || {
                     let mut sc: Option<ServeScratch> = None;
@@ -421,11 +447,16 @@ impl EnginePool {
                         match rows {
                             Ok(rows) => {
                                 {
-                                    let mut cache = lock_cache(cache);
-                                    cache.set_generation(engine.generation());
+                                    // Stripe-at-a-time insertion: each
+                                    // row locks only the shard that
+                                    // owns its key.
+                                    let now_gen = engine.generation();
                                     for (i, &(nt, id)) in seeds.iter().enumerate() {
-                                        cache.put_if_current(
-                                            cache_key(nt, id),
+                                        let key = cache_key(nt, id);
+                                        let mut shard = cache.lock_key(key);
+                                        shard.set_generation(now_gen);
+                                        shard.put_if_current(
+                                            key,
                                             &rows[i * c..(i + 1) * c],
                                             gen,
                                         );
@@ -486,7 +517,7 @@ impl EnginePool {
                                 sc,
                                 job.seq,
                                 &job.seeds,
-                                &exec_lock,
+                                &exec_locks[0],
                                 metrics,
                                 faults,
                                 max_retries,
@@ -582,9 +613,9 @@ impl EnginePool {
                         }
                         let key = cache_key(req.nt, req.id);
                         let hit = {
-                            let mut cache = lock_cache(cache);
-                            cache.set_generation(engine.generation());
-                            cache.get(key).map(|row| row.to_vec())
+                            let mut shard = cache.lock_key(key);
+                            shard.set_generation(engine.generation());
+                            shard.get(key).map(|row| row.to_vec())
                         };
                         if let Some(val) = hit {
                             metrics.record_hit();
@@ -693,7 +724,7 @@ impl EnginePool {
 pub fn closed_loop(
     engine: &InferenceEngine,
     cfg: EnginePoolCfg,
-    cache: &Mutex<EmbeddingCache>,
+    cache: &ShardedCache,
     trace: &[(u32, u32)],
     clients: usize,
 ) -> Result<(ClosedLoopStats, Vec<((u32, u32), Vec<f32>)>)> {
@@ -704,12 +735,13 @@ pub fn closed_loop(
 pub fn closed_loop_with_faults(
     engine: &InferenceEngine,
     cfg: EnginePoolCfg,
-    cache: &Mutex<EmbeddingCache>,
+    cache: &ShardedCache,
     trace: &[(u32, u32)],
     clients: usize,
     faults: Option<&FaultPlan>,
 ) -> Result<(ClosedLoopStats, Vec<((u32, u32), Vec<f32>)>)> {
     let metrics = ServeMetrics::new();
+    let sessions = cfg.sessions.clamp(1, cfg.workers.max(1));
     let pool = EnginePool::new(cfg);
     let (tx, rx) = std::sync::mpsc::sync_channel::<ServeRequest>(4096);
     let clients = clients.max(1);
@@ -794,5 +826,11 @@ pub fn closed_loop_with_faults(
     crate::obs::metrics::gauge_set("serve.pool.queue_p99_us", metrics.queue_us.p99_us());
     crate::obs::metrics::gauge_set("serve.pool.exec_p50_us", metrics.exec_us.p50_us());
     crate::obs::metrics::gauge_set("serve.pool.exec_p99_us", metrics.exec_us.p99_us());
+    // Sharding topology of this run — aggregated, shard-count-stable
+    // names (the per-arm serve counters above already aggregate over
+    // shards by construction: the coordinator counts them).
+    crate::obs::metrics::gauge_set("serve.pool.sessions", sessions as f64);
+    crate::obs::metrics::gauge_set("serve.cache.shard.count", cache.num_shards() as f64);
+    crate::obs::metrics::gauge_set("serve.cache.shard.entries", cache.len() as f64);
     Ok((stats, replies))
 }

@@ -9,23 +9,24 @@
 //! generation reports a miss.  What stamping alone cannot prevent is
 //! the latency cliff right after a bump — every hot key misses at
 //! once and the serving path recomputes them inline.  The refresher
-//! closes that gap: it walks the cache's LRU list (most recent first,
-//! [`EmbeddingCache::hot_keys`]), re-fetches up to `limit` rows from
-//! the source, and re-stamps them at the generation the fetch
-//! observed.  A fetch that races with *another* bump is retried, so a
-//! re-stamped row is always consistent with its stamp.
+//! closes that gap: it walks the cache's merged recency view (most
+//! recent first, [`ShardedCache::hot_keys`]), re-fetches up to `limit`
+//! rows from the source, and re-stamps them at the generation the
+//! fetch observed.  A fetch that races with *another* bump is retried,
+//! so a re-stamped row is always consistent with its stamp.
 //!
-//! The cache lock is held only to snapshot keys and to insert single
-//! rows — never across a fetch — so serving continues concurrently.
+//! The cache is a [`ShardedCache`]: each stripe's lock is held only to
+//! snapshot keys and to insert single rows — never across a fetch, and
+//! never two stripes at once — so serving continues concurrently on
+//! every stripe the refresher isn't touching at that instant.
 
 use anyhow::Result;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
-use super::cache::{split_key, EmbeddingCache, RowSource};
+use super::cache::{split_key, RowSource, ShardedCache};
 use super::engine::{InferenceEngine, ServeScratch};
-use super::error::lock_cache;
 
 /// Knobs for [`refresh_loop`] (`serve.refresh` enables it in the
 /// bench stage with `limit` hot rows).
@@ -99,27 +100,29 @@ const REFRESH_CHUNK: usize = 64;
 /// Rows are re-inserted coldest-first so the pass preserves the
 /// cache's recency order (MRU-first insertion would invert it and
 /// make the hottest row the next eviction victim).  The generation is
-/// re-validated against the source *under the cache lock* before
-/// stamping: generations are monotonic and every serving path adopts
-/// them under the same lock, so the cache generation can never move
-/// backwards — a refresh that lost a race with a newer bump retries
-/// instead of un-staling older rows.
+/// re-validated against the source *under each stripe's lock* before
+/// stamping that stripe: generations are monotonic and every serving
+/// path adopts them under the same per-stripe lock, so no stripe's
+/// generation can ever move backwards — a refresh that lost a race
+/// with a newer bump retries the chunk instead of un-staling older
+/// rows (the rows already stamped this attempt were stamped while
+/// their generation was still current, so they stay consistent).
 pub fn refresh_hot_rows(
-    cache: &Mutex<EmbeddingCache>,
+    cache: &ShardedCache,
     src: &mut impl RowSource,
     limit: usize,
 ) -> Result<usize> {
-    let (mut keys, cache_gen) = {
-        let c = lock_cache(cache);
-        (c.hot_keys(limit), c.generation())
-    };
-    if src.source_generation() == cache_gen || keys.is_empty() {
+    // `generation()` is the min over stripes: if *any* stripe lags the
+    // source, the pass runs and re-stamps every stripe it touches.
+    let mut keys = cache.hot_keys(limit);
+    if src.source_generation() == cache.generation() || keys.is_empty() {
         return Ok(0);
     }
     let _span = crate::span!("serve.refresh.pass", keys = keys.len());
     keys.reverse(); // coldest of the hot set first, MRU last
     let mut rows = Vec::new();
     let mut refreshed = 0usize;
+    let mut adopted = None;
     let dim = src.row_dim();
     for chunk in keys.chunks(REFRESH_CHUNK) {
         let seeds: Vec<(u32, u32)> = chunk.iter().map(|&k| split_key(k)).collect();
@@ -129,19 +132,36 @@ pub fn refresh_hot_rows(
         for _attempt in 0..4 {
             let gen = src.source_generation();
             src.fetch_rows(&seeds, &mut rows)?;
-            let mut c = lock_cache(cache);
-            // Validate under the lock: if the source moved on (and a
-            // serving thread may already have stamped newer rows),
-            // retry rather than roll the generation backwards.
-            if src.source_generation() == gen {
-                c.set_generation(gen);
-                for (i, &key) in chunk.iter().enumerate() {
-                    c.put(key, &rows[i * dim..(i + 1) * dim]);
+            let mut moved = false;
+            for (i, &key) in chunk.iter().enumerate() {
+                // One stripe lock at a time (never two — the lock
+                // order makes nesting ascending-only anyway).
+                let mut c = cache.lock_key(key);
+                // Validate under the stripe lock: if the source moved
+                // on (and a serving thread may already have stamped
+                // this stripe newer), retry the chunk rather than roll
+                // any stripe's generation backwards.
+                if src.source_generation() != gen {
+                    moved = true;
+                    break;
                 }
+                c.set_generation(gen);
+                c.put(key, &rows[i * dim..(i + 1) * dim]);
+            }
+            if !moved {
                 refreshed += chunk.len();
+                adopted = Some(gen);
                 break;
             }
         }
+    }
+    // Stamp the stripes the hot set never touched, so the aggregate
+    // (min-over-stripes) generation converges to the source's and the
+    // next pass is a no-op.  Safe because stamping a stripe forward
+    // only *invalidates* its un-refreshed rows — they miss and
+    // recompute instead of ever being served stale.
+    if let Some(gen) = adopted {
+        cache.set_generation(gen);
     }
     Ok(refreshed)
 }
@@ -149,7 +169,7 @@ pub fn refresh_hot_rows(
 /// Blocking refresh loop for a background thread: poll the source
 /// generation every `cfg.poll`, refreshing the hot set whenever it
 /// moves, until `stop` is raised.  Spawn it in a `std::thread::scope`
-/// next to the engine pool, sharing the pool's `Mutex`-wrapped cache.
+/// next to the engine pool, sharing the pool's [`ShardedCache`].
 ///
 /// **One generation domain per cache.**  A cache is stamped from
 /// exactly one counter: the engine pool stamps its cache with
@@ -162,7 +182,7 @@ pub fn refresh_hot_rows(
 /// immediately re-staled by the serving path and the loop re-fetches
 /// the hot set on each poll tick.
 pub fn refresh_loop(
-    cache: &Mutex<EmbeddingCache>,
+    cache: &ShardedCache,
     src: &mut impl RowSource,
     cfg: &RefreshCfg,
     stop: &AtomicBool,

@@ -1,7 +1,7 @@
 //! Runtime lock-order tracker: asserts, in debug builds, the same
 //! acquisition DAG the static `lock-order` lint rule checks —
 //!
-//!     cache mutex  ->  PJRT session lock  ->  EmbTable row locks  ->  leaf mutexes
+//!     cache mutex (shard 0 < 1 < …)  ->  PJRT session lock  ->  EmbTable row locks  ->  leaf mutexes
 //!
 //! The static rule (`rust/src/lint/rules.rs`) sees only intra-function
 //! acquisition sequences; this tracker sees the *dynamic* stack, so an
@@ -10,17 +10,21 @@
 //! Release builds compile the whole thing away: `acquire` returns a
 //! zero-sized token and never touches thread-local state.
 //!
-//! Wire-up: `serve::error::{lock_cache, lock_clean, lock_ranked}`
-//! stamp their guards with a token, `dist::EmbTable` row guards carry
-//! one, and the PJRT serialization lock in `serve::engine` acquires at
-//! `Rank::Session`.  See docs/LINTS.md (lock-order rule).
+//! Wire-up: `serve::error::{lock_cache, lock_shard, lock_clean,
+//! lock_ranked}` stamp their guards with a token, `dist::EmbTable` row
+//! guards carry one, and the PJRT serialization lock in `serve::engine`
+//! acquires at `Rank::Session`.  See docs/LINTS.md (lock-order rule).
 
 /// Lock ranks in declared acquisition order.  `Cache` and `Session`
-/// are singletons (re-entry on one thread self-deadlocks, so same-rank
-/// re-acquisition asserts too); `EmbRows` covers every `EmbTable`'s
-/// row lock (several tables may be read together) and `Leaf` the
-/// clean-state mutexes (channels, counters, fault registries) that
-/// must always be innermost.
+/// are singletons per shard (re-entry on one thread self-deadlocks, so
+/// same-rank same-shard re-acquisition asserts too); cache *shards*
+/// (`serve::ShardedCache`) sub-rank the `Cache` level by shard index
+/// and may only be acquired in ascending index order — the per-shard
+/// DAG the sharded hot path relies on.  `EmbRows` covers every
+/// `EmbTable`'s row lock (several tables, or several shards of one
+/// table, may be read together) and `Leaf` the clean-state mutexes
+/// (channels, counters, fault registries) that must always be
+/// innermost.
 #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
 #[repr(u8)]
 pub enum Rank {
@@ -43,7 +47,8 @@ impl Rank {
 
 #[cfg(debug_assertions)]
 thread_local! {
-    static HELD: std::cell::RefCell<Vec<Rank>> = const { std::cell::RefCell::new(Vec::new()) };
+    static HELD: std::cell::RefCell<Vec<(Rank, u32)>> =
+        const { std::cell::RefCell::new(Vec::new()) };
 }
 
 /// RAII token recording one held lock; drop it when the guard drops
@@ -52,31 +57,50 @@ thread_local! {
 pub struct Held {
     #[cfg(debug_assertions)]
     rank: Rank,
+    #[cfg(debug_assertions)]
+    shard: u32,
 }
 
 /// Record an acquisition *before* blocking on the lock itself — the
 /// point of the tracker is to flag a deadlock-shaped ordering even on
-/// runs where the timing happens to work out.
+/// runs where the timing happens to work out.  Non-sharded locks live
+/// at shard 0 of their rank.
 pub fn acquire(rank: Rank) -> Held {
+    acquire_shard(rank, 0)
+}
+
+/// [`acquire`] for one shard of a striped lock (currently only
+/// `Rank::Cache` is striped, by `serve::ShardedCache`): shards of the
+/// same rank may nest, but only in ascending shard-index order, so
+/// every thread walks the same per-shard DAG and two threads can never
+/// hold each other's next shard.
+pub fn acquire_shard(rank: Rank, shard: u32) -> Held {
     #[cfg(debug_assertions)]
     {
         HELD.with(|h| {
-            for &r in h.borrow().iter() {
-                let violates = r > rank || (r == rank && rank <= Rank::Session);
+            for &(r, s) in h.borrow().iter() {
+                let violates = r > rank
+                    || (r == rank
+                        && rank <= Rank::Session
+                        && !(rank == Rank::Cache && s < shard));
                 assert!(
                     !violates,
-                    "lock-order violation: acquiring {} while holding {} — declared order is \
-                     cache -> session -> rows -> leaf (docs/LINTS.md)",
+                    "lock-order violation: acquiring {} (shard {}) while holding {} (shard {}) — \
+                     declared order is cache (ascending shards) -> session -> rows -> leaf \
+                     (docs/LINTS.md)",
                     rank.name(),
+                    shard,
                     r.name(),
+                    s,
                 );
             }
-            h.borrow_mut().push(rank);
+            h.borrow_mut().push((rank, shard));
         });
-        Held { rank }
+        Held { rank, shard }
     }
     #[cfg(not(debug_assertions))]
     {
+        let _ = (rank, shard);
         Held {}
     }
 }
@@ -88,7 +112,7 @@ impl Drop for Held {
         // after the thread-local was destroyed just skips the pop).
         let _ = HELD.try_with(|h| {
             let mut v = h.borrow_mut();
-            if let Some(pos) = v.iter().rposition(|&r| r == self.rank) {
+            if let Some(pos) = v.iter().rposition(|&e| e == (self.rank, self.shard)) {
                 v.remove(pos);
             }
         });
@@ -150,5 +174,31 @@ mod tests {
             let _l2 = acquire(Rank::Leaf);
         })
         .unwrap();
+    }
+
+    #[test]
+    fn cache_shards_nest_ascending_only() {
+        on_thread(|| {
+            let _a = acquire_shard(Rank::Cache, 0);
+            let _b = acquire_shard(Rank::Cache, 1);
+            let _c = acquire_shard(Rank::Cache, 5);
+            let _s = acquire(Rank::Session); // downstream ranks still fine
+        })
+        .unwrap();
+        let r = on_thread(|| {
+            let _a = acquire_shard(Rank::Cache, 3);
+            let _b = acquire_shard(Rank::Cache, 3);
+        });
+        assert!(r.is_err(), "same-shard re-entry self-deadlocks");
+        let r = on_thread(|| {
+            let _a = acquire_shard(Rank::Cache, 2);
+            let _b = acquire_shard(Rank::Cache, 1);
+        });
+        assert!(r.is_err(), "descending shard order must assert");
+        let r = on_thread(|| {
+            let _r = acquire(Rank::EmbRows);
+            let _c = acquire_shard(Rank::Cache, 7);
+        });
+        assert!(r.is_err(), "rows -> cache shard is still rank-descending");
     }
 }

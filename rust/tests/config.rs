@@ -183,6 +183,41 @@ fn pipeline_serve_stage_runs() {
     assert!(out.stage_secs.iter().all(|&(_, s)| s >= 0.0));
 }
 
+/// `--shards`/`--sessions` plumb through the serve-bench flag table
+/// into the serve stage config, and inconsistent combinations die at
+/// build time with an actionable message.
+#[test]
+fn serve_bench_sharding_flags_and_validation() {
+    let sb = cli::find_command("serve-bench").unwrap();
+    let cfg = cli::build_config(
+        sb,
+        &argv(&["--pool-workers", "4", "--shards", "4", "--sessions", "2"]),
+    )
+    .unwrap();
+    let s = cfg.serve.as_ref().unwrap();
+    assert_eq!(s.shards, 4);
+    let pool = s.pool();
+    assert_eq!(pool.workers, 4);
+    assert_eq!(pool.sessions, 2);
+
+    // More fixed sessions than fixed workers cannot execute: each
+    // session needs a worker to drive it.
+    let e = cli::build_config(sb, &argv(&["--pool-workers", "2", "--sessions", "4"]))
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("exceeds serve.pool_workers"), "{e}");
+    // Zero stripes is meaningless (1 = unsharded).
+    let e = cli::build_config(sb, &argv(&["--shards", "0"])).unwrap_err().to_string();
+    assert!(e.contains("serve.shards must be >= 1"), "{e}");
+    // "auto" sessions always resolve within the pool width.
+    let cfg = cli::build_config(
+        sb,
+        &argv(&["--pool-workers", "2", "--sessions", "auto"]),
+    )
+    .unwrap();
+    assert!(cfg.serve.unwrap().pool().sessions <= 2);
+}
+
 /// The shipped example run configs must parse, validate and resolve.
 #[test]
 fn shipped_examples_are_valid() {

@@ -3,13 +3,14 @@
 //! size 1, 2 and 8, with and without a deterministic fault schedule —
 //! worker panics, transient errors and slow reads.  Replies AND
 //! hit/miss accounting must be **bit-identical** across every pool
-//! size and both schedules, and the supervision counters must equal
-//! the plan exactly (restarts == panics, retries == transients).
-//! Shedding and deadlines stay off here — those rejections are
-//! deliberately timing-dependent and tested in `tests/serve.rs`.
+//! size, both schedules, and every cache shard count, and the
+//! supervision counters must equal the plan exactly (restarts ==
+//! panics, retries == transients).  Shedding and deadlines stay off
+//! here — those rejections are deliberately timing-dependent and
+//! tested in `tests/serve.rs`.  The clean shard/session sweep lives in
+//! `tests/sharding.rs`.
 
 use std::sync::mpsc::channel;
-use std::sync::Mutex;
 use std::time::Duration;
 
 use graphstorm::datagen::{self, mag};
@@ -17,9 +18,9 @@ use graphstorm::dataloader::GsDataset;
 use graphstorm::partition::PartitionBook;
 use graphstorm::runtime::ArtifactSpec;
 use graphstorm::serve::{
-    run_serve_bench, Admission, EmbeddingCache, EnginePool, EnginePoolCfg, FaultKind, FaultPlan,
-    FaultSpec, InferenceEngine, MicroBatcherCfg, ServeBenchParams, ServeError, ServeMetrics,
-    ServeRequest,
+    run_serve_bench, Admission, EnginePool, EnginePoolCfg, FaultKind, FaultPlan, FaultSpec,
+    InferenceEngine, MicroBatcherCfg, ServeBenchParams, ServeError, ServeMetrics, ServeRequest,
+    ShardedCache,
 };
 
 fn mag_ds(n: usize) -> GsDataset {
@@ -56,16 +57,18 @@ struct RunOut {
 /// Open-loop drain: queue the whole trace up-front in a fixed order
 /// (so arrival order — and therefore accounting — is identical for
 /// every pool size), run the supervised pool over it, collect every
-/// typed reply plus the counters.
+/// typed reply plus the counters.  `shards` stripes the cache; the
+/// headline contract says it can never change what comes back.
 fn drain(
     engine: &InferenceEngine,
     cfg: EnginePoolCfg,
     trace: &[(u32, u32)],
     plan: Option<&FaultPlan>,
+    shards: usize,
 ) -> RunOut {
     let pool = EnginePool::new(cfg);
     let metrics = ServeMetrics::new();
-    let cache = Mutex::new(EmbeddingCache::new(1024)); // never evicts
+    let cache = ShardedCache::new(1024, shards); // never evicts
     let (tx, rx) = channel::<ServeRequest>();
     let mut reply_rxs = Vec::with_capacity(trace.len());
     for &(nt, id) in trace {
@@ -96,9 +99,12 @@ fn drain(
     }
 }
 
-/// The headline: {1, 2, 8} workers × {clean, faulted} — replies and
-/// hit/miss accounting bit-identical everywhere, counters exactly the
-/// plan's.
+/// The headline: {1, 2, 8} workers × {clean, faulted} × cache shards
+/// {1, 4} — replies and hit/miss accounting bit-identical everywhere,
+/// counters exactly the plan's.  Replaying the *same* fault schedule
+/// at different stripe counts is the sharpest probe: supervision
+/// (restarts, retries, degraded dispatch) must not observe the cache
+/// topology at all.
 #[test]
 fn faulted_runs_are_bit_identical_across_pool_sizes() {
     let ds = mag_ds(400);
@@ -115,34 +121,40 @@ fn faulted_runs_are_bit_identical_across_pool_sizes() {
     let mut baseline: Option<(Vec<Vec<f32>>, u64, u64)> = None;
     for workers in [1usize, 2, 8] {
         for faulted in [false, true] {
-            let plan = if faulted {
-                Some(FaultPlan::generate(23, horizon, &spec).unwrap())
-            } else {
-                None
-            };
-            let tag = format!("workers={workers} faulted={faulted}");
-            let out = drain(&engine, pool_cfg(workers), &trace, plan.as_ref());
-            let rows: Vec<Vec<f32>> = out
-                .replies
-                .into_iter()
-                .enumerate()
-                .map(|(i, r)| r.unwrap_or_else(|e| panic!("{tag}: request {i} failed: {e}")))
-                .collect();
-            if let Some(plan) = &plan {
-                assert_eq!(plan.fired(), plan.planned(), "{tag}: every planned fault fires");
-            }
-            assert_eq!(out.restarts, if faulted { 2 } else { 0 }, "{tag}: restarts == panics");
-            assert_eq!(out.retries, if faulted { 3 } else { 0 }, "{tag}: retries == transients");
-            assert_eq!(out.shed, 0, "{tag}: shedding disabled");
-            assert_eq!(out.deadline_misses, 0, "{tag}: deadlines disabled");
-            assert_eq!(out.misses, 60, "{tag}: every distinct key misses exactly once");
-            assert_eq!(out.hits, 240, "{tag}: every repeat is a hit (or coalesces)");
-            match &baseline {
-                None => baseline = Some((rows, out.hits, out.misses)),
-                Some((expect, hits, misses)) => {
-                    assert_eq!(&rows, expect, "{tag}: replies diverged");
-                    assert_eq!(out.hits, *hits, "{tag}: hit accounting diverged");
-                    assert_eq!(out.misses, *misses, "{tag}: miss accounting diverged");
+            for shards in [1usize, 4] {
+                let plan = if faulted {
+                    Some(FaultPlan::generate(23, horizon, &spec).unwrap())
+                } else {
+                    None
+                };
+                let tag = format!("workers={workers} faulted={faulted} shards={shards}");
+                let out = drain(&engine, pool_cfg(workers), &trace, plan.as_ref(), shards);
+                let rows: Vec<Vec<f32>> = out
+                    .replies
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, r)| r.unwrap_or_else(|e| panic!("{tag}: request {i} failed: {e}")))
+                    .collect();
+                if let Some(plan) = &plan {
+                    assert_eq!(plan.fired(), plan.planned(), "{tag}: every planned fault fires");
+                }
+                assert_eq!(out.restarts, if faulted { 2 } else { 0 }, "{tag}: restarts == panics");
+                assert_eq!(
+                    out.retries,
+                    if faulted { 3 } else { 0 },
+                    "{tag}: retries == transients"
+                );
+                assert_eq!(out.shed, 0, "{tag}: shedding disabled");
+                assert_eq!(out.deadline_misses, 0, "{tag}: deadlines disabled");
+                assert_eq!(out.misses, 60, "{tag}: every distinct key misses exactly once");
+                assert_eq!(out.hits, 240, "{tag}: every repeat is a hit (or coalesces)");
+                match &baseline {
+                    None => baseline = Some((rows, out.hits, out.misses)),
+                    Some((expect, hits, misses)) => {
+                        assert_eq!(&rows, expect, "{tag}: replies diverged");
+                        assert_eq!(out.hits, *hits, "{tag}: hit accounting diverged");
+                        assert_eq!(out.misses, *misses, "{tag}: miss accounting diverged");
+                    }
                 }
             }
         }
@@ -161,7 +173,7 @@ fn fatal_batch_error_is_contained() {
     // deterministically keys 8..16.
     let trace: Vec<(u32, u32)> = (0..24).map(|i| (nt, i as u32)).collect();
     let plan = FaultPlan::precise(&[(1, FaultKind::Fatal)], Duration::from_millis(1));
-    let out = drain(&engine, pool_cfg(2), &trace, Some(&plan));
+    let out = drain(&engine, pool_cfg(2), &trace, Some(&plan), 1);
     for (i, r) in out.replies.iter().enumerate() {
         if (8..16).contains(&i) {
             assert!(
@@ -188,22 +200,36 @@ fn restart_budget_exhaustion_degrades_but_serves() {
     let nt = ds.target_ntype as u32;
     let trace: Vec<(u32, u32)> = (0..24).map(|i| (nt, i as u32)).collect();
     // Budget 0: the single worker's first panic retires it for good.
-    let cfg = EnginePoolCfg { max_worker_restarts: 0, ..pool_cfg(1) };
-    let plan = FaultPlan::precise(&[(0, FaultKind::WorkerPanic)], Duration::from_millis(1));
-    let out = drain(&engine, cfg, &trace, Some(&plan));
+    // Degraded mode pins execution to session lock 0 whatever the
+    // cache topology, so replaying the collapse at shards {1, 4} must
+    // not move a single bit.
+    let mut degraded_baseline: Option<Vec<Result<Vec<f32>, ServeError>>> = None;
+    for shards in [1usize, 4] {
+        let cfg = EnginePoolCfg { max_worker_restarts: 0, ..pool_cfg(1) };
+        let plan = FaultPlan::precise(&[(0, FaultKind::WorkerPanic)], Duration::from_millis(1));
+        let out = drain(&engine, cfg, &trace, Some(&plan), shards);
 
-    let mut sc = engine.make_scratch();
-    for (i, r) in out.replies.iter().enumerate() {
-        let row = r.as_ref().unwrap_or_else(|e| panic!("degraded pool dropped request {i}: {e}"));
-        let (nt, id) = trace[i];
-        assert_eq!(
-            row,
-            &engine.predict_one(&mut sc, nt, id).unwrap(),
-            "degraded-mode reply for node {id} not canonical"
-        );
+        let mut sc = engine.make_scratch();
+        for (i, r) in out.replies.iter().enumerate() {
+            let row = r
+                .as_ref()
+                .unwrap_or_else(|e| panic!("degraded pool dropped request {i}: {e}"));
+            let (nt, id) = trace[i];
+            assert_eq!(
+                row,
+                &engine.predict_one(&mut sc, nt, id).unwrap(),
+                "degraded-mode reply for node {id} not canonical (shards={shards})"
+            );
+        }
+        assert_eq!(out.restarts, 1, "one panic, one supervision event (shards={shards})");
+        assert_eq!(out.misses, 24, "shards={shards}");
+        match &degraded_baseline {
+            None => degraded_baseline = Some(out.replies),
+            Some(expect) => {
+                assert_eq!(&out.replies, expect, "degraded replies diverged at shards={shards}")
+            }
+        }
     }
-    assert_eq!(out.restarts, 1, "one panic, one supervision event");
-    assert_eq!(out.misses, 24);
 }
 
 /// End-to-end through the bench driver (`gs serve-bench --faults`
@@ -222,6 +248,7 @@ fn serve_bench_with_faults_stays_bit_identical() {
             alpha: 1.1,
             clients: 3,
             cache: 512,
+            shards: 2,
             admission: Admission::TinyLfu,
             pool: pool_cfg(2),
             refresh: 0,

@@ -94,6 +94,44 @@ fn lock_order_rule_pos_and_neg() {
 }
 
 #[test]
+fn shard_lock_rank_pos_and_neg() {
+    // Two cache stripe guards held together: ascending-shard nesting
+    // cannot be proven statically, so it is a finding.
+    let bad = fixture(
+        "shard_pos",
+        &[(
+            "src/serve/x.rs",
+            "fn f(c: &C) { let a = c.lock_key(k1); let b = c.lock_key(k2); }",
+        )],
+    );
+    assert_eq!(lint_rules(&bad), ["lock-order"]);
+
+    let good = fixture(
+        "shard_neg",
+        &[(
+            "src/serve/x.rs",
+            // Scoped release, one-stripe-at-a-time iteration, and the
+            // declared cache -> session order.
+            "fn a(c: &C) { { let g = c.lock_key(k1); } let h = c.lock_at(1); }\n\
+             fn b(c: &C) { for i in 0..n { let g = c.lock_at(i); g.put(i, &row); } }\n\
+             fn c(c: &C, e: &E) { let g = c.lock_key(k); e.forward_locked(sc, s, l); }\n",
+        )],
+    );
+    assert!(lint_rules(&good).is_empty());
+
+    // An EmbTable stripe guard (rank 2) held across a cache stripe
+    // acquisition (rank 0) inverts the declared order.
+    let inverted = fixture(
+        "shard_inverted",
+        &[(
+            "src/dist/x.rs",
+            "fn f(t: &T, c: &C) { let g = t.read_shard(s); let a = c.lock_key(k); }",
+        )],
+    );
+    assert_eq!(lint_rules(&inverted), ["lock-order"]);
+}
+
+#[test]
 fn raw_lock_banned_in_serve_only() {
     let bad = fixture("rawlock_pos", &[("src/serve/x.rs", "fn f(m: &M) { let g = m.lock(); }")]);
     assert_eq!(lint_rules(&bad), ["lock-order"]);

@@ -24,8 +24,8 @@ use graphstorm::obs::{self, metrics, trace};
 use graphstorm::partition::PartitionBook;
 use graphstorm::runtime::ArtifactSpec;
 use graphstorm::serve::{
-    closed_loop, run_serve_bench, Admission, EmbeddingCache, EnginePoolCfg, InferenceEngine,
-    MicroBatcherCfg, ServeBenchParams,
+    closed_loop, run_serve_bench, Admission, EnginePoolCfg, InferenceEngine, MicroBatcherCfg,
+    ServeBenchParams, ShardedCache,
 };
 use graphstorm::util::json::Json;
 
@@ -59,6 +59,7 @@ fn bench_params(seed: u64, workers: usize) -> ServeBenchParams {
         alpha: 1.1,
         clients: 3,
         cache: 512,
+        shards: 2,
         admission: Admission::TinyLfu,
         pool: pool_cfg(workers),
         refresh: 8,
@@ -152,7 +153,7 @@ fn replies_bit_identical_with_tracing_on_and_off() {
     let nt = ds.target_ntype as u32;
     let reqs: Vec<(u32, u32)> = (0..200).map(|i| (nt, (i % 40) as u32)).collect();
     let run = || {
-        let cache = Mutex::new(EmbeddingCache::new(1024));
+        let cache = ShardedCache::new(1024, 2);
         let (_stats, replies) = closed_loop(&engine, pool_cfg(2), &cache, &reqs, 3).unwrap();
         canon(replies)
     };

@@ -8,7 +8,7 @@
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, sync_channel};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use graphstorm::datagen::{self, mag};
@@ -20,7 +20,7 @@ use graphstorm::serve::{
     cache_key, closed_loop, offline::read_shards, refresh_hot_rows, refresh_loop, run_serve_bench,
     Admission, EmbTableSource, EmbeddingCache, EnginePool, EnginePoolCfg, FaultKind, FaultPlan,
     InferenceEngine, MicroBatcher, MicroBatcherCfg, OfflineInference, RefreshCfg, RefreshStats,
-    RowSource, ServeBenchParams, ServeError, ServeMetrics, ServeRequest,
+    RowSource, ServeBenchParams, ServeError, ServeMetrics, ServeRequest, ShardedCache,
 };
 use graphstorm::util::Rng;
 
@@ -173,9 +173,9 @@ fn concurrent_requests_are_deterministic() {
     };
 
     // Two runs with different cache settings + 4 concurrent clients.
-    let uncached = Mutex::new(EmbeddingCache::new(0));
+    let uncached = ShardedCache::new(0, 1);
     let (s0, replies0) = closed_loop(&engine, cfg.clone(), &uncached, &trace, 4).unwrap();
-    let cached = Mutex::new(EmbeddingCache::new(512));
+    let cached = ShardedCache::new(512, 2);
     let (s1, replies1) = closed_loop(&engine, cfg, &cached, &trace, 4).unwrap();
     assert_eq!(s0.requests, 600);
     assert_eq!(replies0.len(), 600);
@@ -207,7 +207,7 @@ fn generation_bump_invalidates_serving_cache() {
         batcher: MicroBatcherCfg { max_batch: 4, deadline: Duration::from_micros(100) },
         ..Default::default()
     };
-    let cache = Mutex::new(EmbeddingCache::new(8));
+    let cache = ShardedCache::new(8, 1);
     let (s0, _) = closed_loop(&engine, cfg.clone(), &cache, &trace, 1).unwrap();
     assert!(s0.hit_rate > 0.0);
     engine.bump_generation();
@@ -238,7 +238,7 @@ fn pool_sizes_are_bit_identical() {
             batcher: MicroBatcherCfg { max_batch: 8, deadline: Duration::from_micros(200) },
             ..Default::default()
         });
-        let cache = Mutex::new(EmbeddingCache::new(1024)); // never evicts
+        let cache = ShardedCache::new(1024, 1); // never evicts
         let metrics = ServeMetrics::new();
         // Open loop: queue the whole stream up-front in a fixed order,
         // then drain — queue order is identical for every pool size.
@@ -287,15 +287,14 @@ fn refresh_rewarms_hot_rows_after_generation_bump() {
     let book = Arc::new(PartitionBook::single(&[50]));
     let counters = Arc::new(TrafficCounters::new());
     let table = EmbTable::new(0, 50, 4, 7, book, counters);
-    let cache = Mutex::new(EmbeddingCache::new(32));
+    let cache = ShardedCache::new(32, 2);
 
     // Warm 8 hot rows through the read-through path.
     {
         let mut src = EmbTableSource { table: &table, worker: 0 };
-        let mut c = cache.lock().unwrap();
         let mut row = Vec::new();
         for id in 0..8u32 {
-            assert!(!c.get_through(0, id, &mut src, &mut row).unwrap());
+            assert!(!cache.get_through(0, id, &mut src, &mut row).unwrap());
         }
     }
     // A sparse update moves rows 0..8 and bumps the generation.
@@ -309,10 +308,9 @@ fn refresh_rewarms_hot_rows_after_generation_bump() {
     // A second pass is a no-op: the cache is current again.
     assert_eq!(refresh_hot_rows(&cache, &mut src, 8).unwrap(), 0);
 
-    let mut c = cache.lock().unwrap();
-    c.set_generation(table.generation());
+    cache.set_generation(table.generation());
     for id in 0..8u32 {
-        let row = c.get(cache_key(0, id)).expect("refreshed row resident").to_vec();
+        let row = cache.get(cache_key(0, id)).expect("refreshed row resident");
         let base = id as usize * 4;
         assert_eq!(row, &snap[base..base + 4], "stale row served for node {id}");
     }
@@ -325,13 +323,12 @@ fn background_refresh_loop_tracks_updates() {
     let book = Arc::new(PartitionBook::single(&[20]));
     let counters = Arc::new(TrafficCounters::new());
     let table = EmbTable::new(0, 20, 3, 11, book, counters);
-    let cache = Mutex::new(EmbeddingCache::new(16));
+    let cache = ShardedCache::new(16, 2);
     {
         let mut src = EmbTableSource { table: &table, worker: 0 };
-        let mut c = cache.lock().unwrap();
         let mut row = Vec::new();
         for id in 0..5u32 {
-            c.get_through(0, id, &mut src, &mut row).unwrap();
+            cache.get_through(0, id, &mut src, &mut row).unwrap();
         }
     }
     let stop = AtomicBool::new(false);
@@ -359,10 +356,9 @@ fn background_refresh_loop_tracks_updates() {
     // The re-warmed rows are the post-update bytes at the current
     // generation.
     let snap = table.weights_snapshot();
-    let mut c = cache.lock().unwrap();
-    c.set_generation(table.generation());
+    cache.set_generation(table.generation());
     for id in [1u32, 2] {
-        let row = c.get(cache_key(0, id)).expect("hot row re-warmed").to_vec();
+        let row = cache.get(cache_key(0, id)).expect("hot row re-warmed");
         let base = id as usize * 3;
         assert_eq!(row, &snap[base..base + 3], "stale row served for node {id}");
     }
@@ -382,9 +378,11 @@ fn serve_bench_three_arms_bit_identical() {
             alpha: 1.1,
             clients: 3,
             cache: 512,
+            shards: 2,
             admission: Admission::TinyLfu,
             pool: EnginePoolCfg {
                 workers: 2,
+                sessions: 2,
                 batcher: MicroBatcherCfg { max_batch: 8, deadline: Duration::from_micros(200) },
                 ..Default::default()
             },
@@ -421,7 +419,7 @@ fn queue_full_requests_are_shed() {
         Duration::from_millis(100),
     );
     let metrics = ServeMetrics::new();
-    let cache = Mutex::new(EmbeddingCache::new(0));
+    let cache = ShardedCache::new(0, 1);
     let total = 40u32;
     let (tx, rx) = channel::<ServeRequest>();
     let mut reply_rxs = Vec::new();
@@ -473,7 +471,7 @@ fn slow_batch_misses_request_deadline() {
     });
     let plan = FaultPlan::precise(&[(0, FaultKind::SlowRead)], Duration::from_millis(200));
     let metrics = ServeMetrics::new();
-    let cache = Mutex::new(EmbeddingCache::new(64));
+    let cache = ShardedCache::new(64, 1);
     let (tx, rx) = channel::<ServeRequest>();
     let mut reply_rxs = Vec::new();
     for id in 0..4u32 {
@@ -530,13 +528,12 @@ fn refresh_loop_survives_flaky_source() {
     let book = Arc::new(PartitionBook::single(&[20]));
     let counters = Arc::new(TrafficCounters::new());
     let table = EmbTable::new(0, 20, 3, 19, book, counters);
-    let cache = Mutex::new(EmbeddingCache::new(16));
+    let cache = ShardedCache::new(16, 2);
     {
         let mut src = EmbTableSource { table: &table, worker: 0 };
-        let mut c = cache.lock().unwrap();
         let mut row = Vec::new();
         for id in 0..5u32 {
-            c.get_through(0, id, &mut src, &mut row).unwrap();
+            cache.get_through(0, id, &mut src, &mut row).unwrap();
         }
     }
     let stop = AtomicBool::new(false);
@@ -569,10 +566,9 @@ fn refresh_loop_survives_flaky_source() {
     assert!(stats.passes() >= 1);
     // The pass that finally landed re-read the post-update bytes.
     let snap = table.weights_snapshot();
-    let mut c = cache.lock().unwrap();
-    c.set_generation(table.generation());
+    cache.set_generation(table.generation());
     for id in [1u32, 2] {
-        let row = c.get(cache_key(0, id)).expect("hot row re-warmed").to_vec();
+        let row = cache.get(cache_key(0, id)).expect("hot row re-warmed");
         let base = id as usize * 3;
         assert_eq!(row, &snap[base..base + 3], "stale row served for node {id}");
     }

@@ -1,0 +1,272 @@
+//! Shard-sweep determinism harness (the tentpole contract): striping
+//! the serving hot path N ways — cache shards, parallel engine
+//! sessions, EmbTable row stripes — must never change a single bit of
+//! what comes back.  One fixed request stream is drained at every
+//! `(shards, sessions, pool_workers)` combination and compared against
+//! the single-shard single-session baseline: replies AND hit/miss/shed
+//! accounting bit-identical everywhere (coalescing is a subset of hits
+//! whose split is timing-dependent by design, so it is bounded, not
+//! pinned).  The same sweep is replayed under a deterministic fault
+//! schedule, the merged `hot_keys` view is proven equivalent to the
+//! single-cache recency order, and per-stripe EmbTable generations are
+//! proven to compose with `put_if_current` and the hot-row refresher.
+//!
+//! Everything runs the deterministic surrogate backend — no AOT
+//! artifacts or PJRT needed.
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Duration;
+
+use graphstorm::datagen::{self, mag};
+use graphstorm::dataloader::GsDataset;
+use graphstorm::dist::{EmbTable, TrafficCounters};
+use graphstorm::partition::PartitionBook;
+use graphstorm::runtime::ArtifactSpec;
+use graphstorm::serve::{
+    cache_key, refresh_hot_rows, shard_of, EmbTableSource, EnginePool, EnginePoolCfg, FaultPlan,
+    FaultSpec, InferenceEngine, MicroBatcherCfg, ServeMetrics, ServeRequest, ShardedCache,
+};
+
+fn mag_ds(n: usize) -> GsDataset {
+    let raw = mag::generate(&mag::MagConfig { n_papers: n, ..Default::default() });
+    let book = PartitionBook::single(&raw.graph.num_nodes);
+    let mut ds = datagen::build_dataset(raw, book, 64, 3);
+    ds.ensure_text_features(64);
+    ds
+}
+
+fn spec() -> ArtifactSpec {
+    ArtifactSpec::synthetic_block(&[2304, 384, 64], &[1920, 320], 5, r#","batch":64"#)
+        .with_output("logits", &[64, 8])
+}
+
+struct RunOut {
+    replies: Vec<Vec<f32>>,
+    hits: u64,
+    misses: u64,
+    coalesced: u64,
+    shed: u64,
+}
+
+/// Open-loop drain at one `(workers, sessions, shards)` point: queue
+/// the whole trace up-front in a fixed order (so arrival order — and
+/// therefore accounting — is identical for every topology), run the
+/// supervised pool over a never-evicting striped cache, collect every
+/// reply plus the counters.
+fn drain(
+    engine: &InferenceEngine,
+    workers: usize,
+    sessions: usize,
+    shards: usize,
+    trace: &[(u32, u32)],
+    plan: Option<&FaultPlan>,
+) -> RunOut {
+    let pool = EnginePool::new(EnginePoolCfg {
+        workers,
+        sessions,
+        batcher: MicroBatcherCfg { max_batch: 8, deadline: Duration::from_micros(200) },
+        ..Default::default()
+    });
+    let metrics = ServeMetrics::new();
+    let cache = ShardedCache::new(1024, shards); // never evicts
+    let (tx, rx) = channel::<ServeRequest>();
+    let mut reply_rxs = Vec::with_capacity(trace.len());
+    for &(nt, id) in trace {
+        let (rtx, rrx) = channel();
+        tx.send(ServeRequest::new(nt, id, rtx)).unwrap();
+        reply_rxs.push(rrx);
+    }
+    drop(tx);
+    let replies = std::thread::scope(|scope| {
+        let (metrics, cache) = (&metrics, &cache);
+        let h = scope.spawn(move || pool.run_with_faults(engine, cache, rx, metrics, plan));
+        let replies: Vec<Vec<f32>> = reply_rxs
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                r.recv()
+                    .unwrap_or_else(|_| panic!("request {i}: reply hung up"))
+                    .unwrap_or_else(|e| panic!("request {i} failed: {e}"))
+            })
+            .collect();
+        h.join().expect("pool thread panicked").expect("pool run failed");
+        replies
+    });
+    RunOut {
+        replies,
+        hits: metrics.hits(),
+        misses: metrics.misses(),
+        coalesced: metrics.coalesced(),
+        shed: metrics.shed(),
+    }
+}
+
+/// The headline sweep: cache shards {1, 2, 4, 8} × engine topologies
+/// {(1,1), (2,1), (2,2), (8,4), (8,8)} (workers, sessions) against the
+/// single-everything baseline.  Replies, hits, misses and shed are
+/// bit-identical at every point; coalesced stays a subset of hits.
+#[test]
+fn shard_session_sweep_is_bit_identical() {
+    let ds = mag_ds(400);
+    let engine = InferenceEngine::surrogate(&ds, &spec(), 23).unwrap();
+    let nt = ds.target_ntype as u32;
+    // 60 distinct keys, every one requested 5 times: misses, hits and
+    // in-flight coalescing all occur, and the counters are exact.
+    let trace: Vec<(u32, u32)> = (0..300).map(|i| (nt, (i % 60) as u32)).collect();
+
+    let mut baseline: Option<RunOut> = None;
+    for shards in [1usize, 2, 4, 8] {
+        for (workers, sessions) in [(1usize, 1usize), (2, 1), (2, 2), (8, 4), (8, 8)] {
+            let tag = format!("shards={shards} workers={workers} sessions={sessions}");
+            let out = drain(&engine, workers, sessions, shards, &trace, None);
+            assert_eq!(out.misses, 60, "{tag}: every distinct key misses exactly once");
+            assert_eq!(out.hits, 240, "{tag}: every repeat is a hit (or coalesces)");
+            assert_eq!(out.shed, 0, "{tag}: shedding disabled");
+            assert!(out.coalesced <= out.hits, "{tag}: coalesced replies are hits");
+            match &baseline {
+                None => baseline = Some(out),
+                Some(base) => {
+                    assert_eq!(out.replies, base.replies, "{tag}: replies diverged");
+                    assert_eq!(out.hits, base.hits, "{tag}: hit accounting diverged");
+                    assert_eq!(out.misses, base.misses, "{tag}: miss accounting diverged");
+                    assert_eq!(out.shed, base.shed, "{tag}: shed accounting diverged");
+                }
+            }
+        }
+    }
+}
+
+/// The same sweep under fault injection: one deterministic schedule
+/// (worker panics + transient errors + slow reads) replayed at shards
+/// {1, 4} × sessions {1, 2} keeps replies bit-identical and the
+/// supervision counters exactly the plan's — recovery never observes
+/// the cache or session topology.
+#[test]
+fn faulted_shard_sweep_replays_identically() {
+    let ds = mag_ds(400);
+    let engine = InferenceEngine::surrogate(&ds, &spec(), 23).unwrap();
+    let nt = ds.target_ntype as u32;
+    let trace: Vec<(u32, u32)> = (0..300).map(|i| (nt, (i % 60) as u32)).collect();
+    let fspec = FaultSpec::parse("panics=2,transient=3,slow=1,slow_ms=2").unwrap();
+    // Guaranteed lower bound on batches cut: 60 distinct misses, at
+    // most 8 seeds per batch.
+    let horizon = 60u64.div_ceil(8);
+
+    let mut baseline: Option<Vec<Vec<f32>>> = None;
+    for shards in [1usize, 4] {
+        for sessions in [1usize, 2] {
+            let plan = FaultPlan::generate(23, horizon, &fspec).unwrap();
+            let tag = format!("shards={shards} sessions={sessions}");
+            let out = drain(&engine, 2, sessions, shards, &trace, Some(&plan));
+            assert_eq!(plan.fired(), plan.planned(), "{tag}: every planned fault fires");
+            assert_eq!(out.misses, 60, "{tag}");
+            assert_eq!(out.hits, 240, "{tag}");
+            match &baseline {
+                None => baseline = Some(out.replies),
+                Some(expect) => {
+                    assert_eq!(&out.replies, expect, "{tag}: faulted replies diverged")
+                }
+            }
+        }
+    }
+}
+
+/// The merged `hot_keys` view of a striped cache equals the recency
+/// order a single-shard cache produces under the same touch sequence —
+/// the property the background refresher's hot-set selection rests on.
+#[test]
+fn merged_hot_keys_match_single_shard_order() {
+    let single = ShardedCache::new(256, 1);
+    let striped = ShardedCache::new(256, 4);
+    let row = [1.0f32, 2.0, 3.0];
+    // Same deterministic op sequence against both: inserts, repeated
+    // touches, an overwrite — every operation bumps the shared touch
+    // ticker identically.
+    for c in [&single, &striped] {
+        for id in 0..64u32 {
+            c.put(cache_key(0, id), &row);
+        }
+        for id in [7u32, 3, 7, 41, 3, 63, 0, 17, 7] {
+            assert!(c.get(cache_key(0, id)).is_some(), "warmed key {id} missing");
+        }
+        c.put(cache_key(0, 41), &row);
+    }
+    assert_eq!(single.len(), striped.len());
+    for limit in [1usize, 4, 8, 64, 1000] {
+        assert_eq!(
+            single.hot_keys(limit),
+            striped.hot_keys(limit),
+            "merged hot set diverged at limit {limit}"
+        );
+    }
+    // The global head is the most recent touch.
+    assert_eq!(single.hot_keys(1), vec![cache_key(0, 41)]);
+}
+
+/// Per-stripe EmbTable generations compose with the cache's
+/// `put_if_current` and the hot-row refresher: an update to one stripe
+/// bumps only that stripe (the aggregate generation still moves, so
+/// the refresher notices), a refresh pass re-reads the post-update
+/// bytes, stale writers are refused, and a full `bump_generation`
+/// invalidates every stripe at once.
+#[test]
+fn per_stripe_generations_compose_with_refresh() {
+    let book = Arc::new(PartitionBook::single(&[40]));
+    let counters = Arc::new(TrafficCounters::new());
+    let table = EmbTable::new_sharded(0, 40, 4, 7, 4, book, counters);
+    let stripe = |id: u32| shard_of(id as u64, 4);
+    let id_a = 0u32;
+    let id_b = (1..40u32).find(|&i| stripe(i) != stripe(id_a)).expect("two stripes in use");
+
+    // Warm 8 hot rows through the striped read-through path.
+    let cache = ShardedCache::new(64, 4);
+    {
+        let mut src = EmbTableSource { table: &table, worker: 0 };
+        let mut row = Vec::new();
+        for id in 0..8u32 {
+            assert!(!cache.get_through(0, id, &mut src, &mut row).unwrap());
+        }
+    }
+    let before = table.weights_snapshot();
+
+    // An update touching only id_a's stripe bumps only that stripe —
+    // but the aggregate generation still moves, which is what the
+    // refresher keys on.
+    table.sparse_adam(&[id_a], &[0.5; 4], 1e-2);
+    assert_eq!(table.shard_generation(stripe(id_a)), 1, "touched stripe bumped");
+    assert_eq!(table.shard_generation(stripe(id_b)), 0, "untouched stripe unmoved");
+    assert_eq!(table.generation(), 1, "aggregate generation is the stripe sum");
+
+    // One refresh pass re-reads the hot rows at the new generation.
+    let mut src = EmbTableSource { table: &table, worker: 0 };
+    let refreshed = refresh_hot_rows(&cache, &mut src, 8).unwrap();
+    assert_eq!(refreshed, 8);
+    assert_eq!(refresh_hot_rows(&cache, &mut src, 8).unwrap(), 0, "second pass is a no-op");
+
+    let snap = table.weights_snapshot();
+    cache.set_generation(table.generation());
+    for id in 0..8u32 {
+        let row = cache.get(cache_key(0, id)).expect("refreshed row resident");
+        let base = id as usize * 4;
+        assert_eq!(row, &snap[base..base + 4], "stale row served for node {id}");
+    }
+    // The updated row moved; rows on other stripes kept their bytes.
+    let a = id_a as usize * 4;
+    let b = id_b as usize * 4;
+    assert_ne!(&snap[a..a + 4], &before[a..a + 4], "update must move id_a's row");
+    assert_eq!(&snap[b..b + 4], &before[b..b + 4], "id_b's stripe was never written");
+
+    // Stale writers are refused: a put pinned to an old generation is
+    // dropped once the stripe has moved on.
+    let cur = cache.generation();
+    let key = cache_key(0, id_a);
+    assert!(cache.put_if_current(key, &snap[a..a + 4], cur));
+    assert!(!cache.put_if_current(key, &before[a..a + 4], cur + 7), "stale write accepted");
+
+    // A full invalidation bumps every stripe: the sharded generation
+    // jumps by the stripe count.
+    let g = table.generation();
+    table.bump_generation();
+    assert_eq!(table.generation(), g + 4, "bump_generation bumps all four stripes");
+}

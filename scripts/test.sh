@@ -53,6 +53,22 @@ if ! printf '%s\n' "$sweep_out" | grep -q "bit-identical across arms + repeats: 
     exit 1
 fi
 
+# Shard-sweep gate (always on, surrogate backend): the same faulted
+# bench over a striped cache and parallel engine sessions must stay
+# bit-identical — striping the hot path may never change a reply bit
+# (docs/SERVING.md, rust/tests/sharding.rs).
+echo
+echo "test.sh: shard-sweep gate (gs serve-bench --shards 4 --sessions 2)"
+shard_out=$(cargo run --release -q -- serve-bench \
+    --dataset mag --size 400 --requests 600 --max-batch 8 \
+    --pool-workers 2 --shards 4 --sessions 2 \
+    --faults "panics=1,transient=1,slow=1,slow_ms=2")
+printf '%s\n' "$shard_out" | tail -n 6
+if ! printf '%s\n' "$shard_out" | grep -q "bit-identical across arms + repeats: true"; then
+    echo "test.sh: shard sweep FAILED — sharded replies diverged" >&2
+    exit 1
+fi
+
 # Trace-schema gate: a traced bench must emit a JSONL trace that its
 # own validator accepts (docs/OBSERVABILITY.md), and the metrics table
 # must carry the per-arm serve counters.
