@@ -20,7 +20,9 @@ pub struct Flag {
     pub takes_value: bool,
     /// Dot path into the run-config document, or a `#special`:
     /// `#conf` (load file as base), `#set` (generic override),
-    /// `#lm` (`none` drops the stage), `#metis` (boolean method).
+    /// `#lm` (`none` drops the stage), `#metis` (boolean method),
+    /// `#side` (side-channel read by `main` via [`flag_value`], no
+    /// config effect).
     pub path: &'static str,
     pub help: &'static str,
 }
@@ -369,6 +371,139 @@ pub const COMMANDS: &[Cmd] = &[
             SET,
         ],
     },
+    Cmd {
+        name: "serve",
+        about: "HTTP/1.1 front end: serve /predict over a socket until drained",
+        base: r#"{"serve": {"http": {}}}"#,
+        flags: &[
+            DATASET,
+            SIZE,
+            NUM_PARTS,
+            METIS,
+            SEED,
+            Flag {
+                name: "listen",
+                takes_value: true,
+                path: "serve.http.listen",
+                help: "bind address (port 0 = ephemeral)",
+            },
+            Flag {
+                name: "http-workers",
+                takes_value: true,
+                path: "serve.http.workers",
+                help: "connection-handler threads",
+            },
+            Flag {
+                name: "max-body",
+                takes_value: true,
+                path: "serve.http.max_body",
+                help: "request-body cap in bytes (413 beyond)",
+            },
+            Flag {
+                name: "read-timeout-ms",
+                takes_value: true,
+                path: "serve.http.read_timeout_ms",
+                help: "per-connection socket read timeout",
+            },
+            Flag {
+                name: "write-timeout-ms",
+                takes_value: true,
+                path: "serve.http.write_timeout_ms",
+                help: "per-connection socket write timeout",
+            },
+            Flag { name: "arch", takes_value: true, path: "serve.arch", help: "engine architecture" },
+            Flag { name: "out-dim", takes_value: true, path: "serve.out_dim", help: "prediction width" },
+            Flag { name: "cache", takes_value: true, path: "serve.cache", help: "embedding-cache capacity" },
+            Flag {
+                name: "pool-workers",
+                takes_value: true,
+                path: "serve.pool_workers",
+                help: "engine-pool threads, or 'auto'",
+            },
+            Flag {
+                name: "shards",
+                takes_value: true,
+                path: "serve.shards",
+                help: "cache/table stripes (replies are shard-count-invariant)",
+            },
+            Flag {
+                name: "sessions",
+                takes_value: true,
+                path: "serve.sessions",
+                help: "parallel engine sessions, or 'auto' (clamped to pool workers)",
+            },
+            Flag {
+                name: "admission",
+                takes_value: true,
+                path: "serve.admission",
+                help: "cache admission: always|tinylfu",
+            },
+            Flag { name: "max-batch", takes_value: true, path: "serve.max_batch", help: "micro-batch size cap" },
+            Flag { name: "deadline-us", takes_value: true, path: "serve.deadline_us", help: "micro-batch deadline" },
+            Flag {
+                name: "deadline-ms",
+                takes_value: true,
+                path: "serve.deadline_ms",
+                help: "per-request deadline in ms (0 = none)",
+            },
+            Flag {
+                name: "max-retries",
+                takes_value: true,
+                path: "serve.max_retries",
+                help: "bounded retries for retryable batch failures",
+            },
+            Flag {
+                name: "queue-depth",
+                takes_value: true,
+                path: "serve.queue_depth",
+                help: "shed new misses past this many pending requests (0 = never)",
+            },
+            Flag {
+                name: "max-worker-restarts",
+                takes_value: true,
+                path: "serve.max_worker_restarts",
+                help: "worker restarts before degraded mode",
+            },
+            TRACE,
+            STATS,
+            SET,
+        ],
+    },
+    Cmd {
+        name: "load-bench",
+        about: "closed-loop HTTP load harness against a running 'gs serve'",
+        base: r#"{"serve": {"http": {}}}"#,
+        flags: &[
+            Flag {
+                name: "addr",
+                takes_value: true,
+                path: "#side",
+                help: "server address, e.g. 127.0.0.1:8080",
+            },
+            Flag {
+                name: "connections",
+                takes_value: true,
+                path: "serve.clients",
+                help: "persistent closed-loop connections",
+            },
+            Flag { name: "requests", takes_value: true, path: "serve.requests", help: "trace length" },
+            Flag { name: "alpha", takes_value: true, path: "serve.alpha", help: "Zipf exponent" },
+            SEED,
+            Flag {
+                name: "bench-out",
+                takes_value: true,
+                path: "#side",
+                help: "merge http_* results into this BENCH_serve.json",
+            },
+            Flag {
+                name: "shutdown",
+                takes_value: false,
+                path: "#side",
+                help: "POST /shutdown (drain the server) after the run",
+            },
+            SET,
+        ],
+    },
 ];
 
 /// Look up a subcommand, suggesting the nearest name on a miss.
@@ -445,7 +580,7 @@ pub fn build_doc(cmd: &Cmd, args: &[String]) -> Result<Json> {
     };
     for (f, v) in &flags {
         match f.path {
-            "#conf" | "#dump" => {}
+            "#conf" | "#dump" | "#side" => {}
             "#set" => apply_set(&mut doc, v)?,
             "#metis" => set_path(&mut doc, "partition.method", "metis")?,
             "#lm" => {
@@ -665,6 +800,9 @@ mod tests {
                     "faults" => "panics=1,transient=2,slow=1",
                     "pool-workers" => "auto",
                     "alpha" => "1.2",
+                    "listen" => "127.0.0.1:0",
+                    "addr" => "127.0.0.1:1",
+                    "bench-out" => "tmp_bench.json",
                     "lr" => "0.004",
                     "num-workers" => "2",
                     "out" => "tmp_out",

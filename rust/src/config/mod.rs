@@ -1077,6 +1077,10 @@ pub struct ServeCfg {
     /// Worker restarts (panic or fatal error) before the pool enters
     /// degraded single-scratch mode.
     pub max_worker_restarts: usize,
+    /// The HTTP/1.1 network front end (`gs serve`): when present, the
+    /// engine pool is fronted by `serve::http::HttpServer` instead of
+    /// the closed-loop bench.  Version-4-only key.
+    pub http: Option<HttpCfg>,
 }
 
 impl Default for ServeCfg {
@@ -1100,6 +1104,108 @@ impl Default for ServeCfg {
             max_retries: 2,
             queue_depth: 0,
             max_worker_restarts: 8,
+            http: None,
+        }
+    }
+}
+
+/// `serve.http`: the hand-rolled HTTP/1.1 front end over the engine
+/// pool (`rust/src/serve/http/`, docs/SERVING.md).  Requests enter
+/// over real sockets instead of in-process function calls; the
+/// [`crate::serve::ServeError`] taxonomy maps onto status codes at the
+/// boundary (429 shed, 503 deadline/drain).  Present-iff-used: the
+/// whole object is version-4-only.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HttpCfg {
+    /// Bind address (`--listen`), e.g. `"127.0.0.1:8080"`; port 0
+    /// binds an ephemeral port (printed at startup).
+    pub listen: String,
+    /// Connection-handling threads (the acceptor is separate).
+    pub workers: usize,
+    /// Request-body byte cap; a larger declared `Content-Length` is
+    /// answered with 413 before the body is read.
+    pub max_body: usize,
+    /// Per-connection socket read timeout (ms).  Also bounds graceful
+    /// shutdown: idle keep-alive connections notice the drain flag
+    /// within one timeout tick.
+    pub read_timeout_ms: u64,
+    /// Per-connection socket write timeout (ms).
+    pub write_timeout_ms: u64,
+}
+
+impl Default for HttpCfg {
+    fn default() -> Self {
+        HttpCfg {
+            listen: "127.0.0.1:8080".to_string(),
+            workers: 4,
+            max_body: 65536,
+            read_timeout_ms: 5000,
+            write_timeout_ms: 5000,
+        }
+    }
+}
+
+impl HttpCfg {
+    const KEYS: &'static [&'static str] =
+        &["listen", "workers", "max_body", "read_timeout_ms", "write_timeout_ms"];
+
+    fn from_json(v: &Json) -> Result<HttpCfg> {
+        let m = stage_obj("serve.http", v)?;
+        let mut c = HttpCfg::default();
+        for (k, v) in m {
+            match k.as_str() {
+                "listen" => c.listen = take_str("serve.http", "listen", v)?.to_string(),
+                "workers" => c.workers = take_usize("serve.http", "workers", v)?,
+                "max_body" => c.max_body = take_usize("serve.http", "max_body", v)?,
+                "read_timeout_ms" => {
+                    c.read_timeout_ms = take_u64("serve.http", "read_timeout_ms", v)?
+                }
+                "write_timeout_ms" => {
+                    c.write_timeout_ms = take_u64("serve.http", "write_timeout_ms", v)?
+                }
+                _ => return Err(unknown_key("serve.http", k, Self::KEYS)),
+            }
+        }
+        Ok(c)
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("listen", Json::from(self.listen.as_str())),
+            ("workers", Json::from(self.workers)),
+            ("max_body", Json::from(self.max_body)),
+            ("read_timeout_ms", Json::from(self.read_timeout_ms as usize)),
+            ("write_timeout_ms", Json::from(self.write_timeout_ms as usize)),
+        ])
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.listen.is_empty() {
+            bail!("serve.http.listen must be a non-empty bind address (host:port)");
+        }
+        if self.workers == 0 {
+            bail!("serve.http.workers must be >= 1");
+        }
+        if self.max_body == 0 {
+            bail!("serve.http.max_body must be >= 1");
+        }
+        if self.read_timeout_ms == 0 || self.write_timeout_ms == 0 {
+            bail!(
+                "serve.http.read_timeout_ms and serve.http.write_timeout_ms must be >= 1 \
+                 (a zero socket timeout would block forever)"
+            );
+        }
+        Ok(())
+    }
+
+    /// These knobs as the server's runtime config.
+    pub fn server_cfg(&self) -> crate::serve::http::HttpServerCfg {
+        crate::serve::http::HttpServerCfg {
+            listen: self.listen.clone(),
+            workers: self.workers,
+            max_body: self.max_body,
+            read_timeout: std::time::Duration::from_millis(self.read_timeout_ms),
+            write_timeout: std::time::Duration::from_millis(self.write_timeout_ms),
         }
     }
 }
@@ -1124,6 +1230,7 @@ impl ServeCfg {
         "max_retries",
         "queue_depth",
         "max_worker_restarts",
+        "http",
     ];
 
     fn from_json(v: &Json) -> Result<ServeCfg> {
@@ -1176,6 +1283,7 @@ impl ServeCfg {
                 "max_worker_restarts" => {
                     c.max_worker_restarts = take_usize("serve", "max_worker_restarts", v)?
                 }
+                "http" => c.http = Some(HttpCfg::from_json(v)?),
                 _ => return Err(unknown_key("serve", k, Self::KEYS)),
             }
         }
@@ -1217,6 +1325,11 @@ impl ServeCfg {
         pairs.push(("max_retries", Json::from(self.max_retries)));
         pairs.push(("queue_depth", Json::from(self.queue_depth)));
         pairs.push(("max_worker_restarts", Json::from(self.max_worker_restarts)));
+        // Present-iff-used, like `faults`: bench-only configs (and the
+        // golden pipeline fixtures) round-trip byte-stable.
+        if let Some(h) = &self.http {
+            pairs.push(("http", h.to_json()));
+        }
         obj(pairs)
     }
 
@@ -1300,6 +1413,9 @@ impl ServeCfg {
         // Fail fast on a malformed fault spec — at validation, not
         // mid-bench.
         self.fault_spec().map_err(|e| anyhow!("serve.faults: {e}"))?;
+        if let Some(h) = &self.http {
+            h.validate()?;
+        }
         Ok(())
     }
 }
@@ -1382,12 +1498,13 @@ impl ObsCfg {
 /// `serve` supervision keys (`deadline_ms`, `max_retries`,
 /// `queue_depth`, `max_worker_restarts`, `faults`) and the `obs`
 /// object; version 3 added the serving striping keys (`serve.shards`,
-/// `serve.sessions`).  Configs may omit `conf_version` (any-version
+/// `serve.sessions`); version 4 added the HTTP front-end object
+/// (`serve.http`).  Configs may omit `conf_version` (any-version
 /// keys only), but a declared version is validated strictly: older
 /// versions using newer keys get a migration error naming the
 /// offending keys, and versions newer than this build are rejected
 /// outright.
-pub const CONF_VERSION: u64 = 3;
+pub const CONF_VERSION: u64 = 4;
 
 // ------------------------------------------------------------ RunConfig
 
@@ -1563,6 +1680,29 @@ impl RunConfig {
         Ok(())
     }
 
+    /// The version-4-only knobs this config actually uses: the HTTP
+    /// front-end object.  `serve.http` has no pre-v4 default to
+    /// compare against — presence *is* use.
+    fn v4_keys_in_use(&self) -> Vec<&'static str> {
+        match &self.serve {
+            Some(s) if s.http.is_some() => vec!["serve.http"],
+            _ => Vec::new(),
+        }
+    }
+
+    fn check_v4_keys(&self, declared: u64) -> Result<()> {
+        let used = self.v4_keys_in_use();
+        if !used.is_empty() {
+            bail!(
+                "conf_version {declared} config uses version-4 keys: {}; migrate by setting \
+                 \"conf_version\": 4 (the keys' semantics are unchanged — the version \
+                 marker is the only edit)",
+                used.join(", ")
+            );
+        }
+        Ok(())
+    }
+
     /// Cross-stage consistency checks (per-stage checks run too).
     pub fn validate(&self) -> Result<()> {
         match self.conf_version {
@@ -1583,8 +1723,13 @@ impl RunConfig {
                     );
                 }
                 self.check_v3_keys(1)?;
+                self.check_v4_keys(1)?;
             }
-            Some(2) => self.check_v3_keys(2)?,
+            Some(2) => {
+                self.check_v3_keys(2)?;
+                self.check_v4_keys(2)?;
+            }
+            Some(3) => self.check_v4_keys(3)?,
             Some(_) => {}
         }
         self.obs.validate()?;
@@ -2143,6 +2288,58 @@ mod tests {
         assert_eq!(back.resolved(), back);
         // An unversioned config serializes without the field at all.
         assert!(RunConfig::default().to_json().get("conf_version").is_none());
+    }
+
+    #[test]
+    fn conf_version_gates_v4_http_keys() {
+        // Unversioned and v4 configs accept the serve.http object.
+        assert!(RunConfig::parse_str(r#"{"serve": {"http": {}}}"#).is_ok());
+        assert!(RunConfig::parse_str(
+            r#"{"conf_version": 4, "serve": {"http": {"listen": "127.0.0.1:0"}}}"#
+        )
+        .is_ok());
+        // Every older declared version gets the migration error.
+        for v in [1, 2, 3] {
+            let e = RunConfig::parse_str(&format!(
+                r#"{{"conf_version": {v}, "serve": {{"http": {{}}}}}}"#
+            ))
+            .unwrap_err()
+            .to_string();
+            assert!(e.contains("version-4 keys: serve.http"), "v{v}: {e}");
+        }
+        // A v3 config without http still parses.
+        assert!(RunConfig::parse_str(r#"{"conf_version": 3, "serve": {"shards": 2}}"#).is_ok());
+    }
+
+    #[test]
+    fn serve_http_keys_parse_validate_and_roundtrip() {
+        let c = RunConfig::parse_str(
+            r#"{"serve": {"http": {"listen": "0.0.0.0:9090", "workers": 2,
+                "max_body": 1024, "read_timeout_ms": 250, "write_timeout_ms": 250}}}"#,
+        )
+        .unwrap();
+        let h = c.serve.as_ref().unwrap().http.as_ref().unwrap();
+        assert_eq!(h.listen, "0.0.0.0:9090");
+        assert_eq!(h.workers, 2);
+        assert_eq!(h.max_body, 1024);
+        assert_eq!(h.read_timeout_ms, 250);
+        let back = RunConfig::parse_str(&c.to_json().to_string_pretty()).unwrap();
+        assert_eq!(c, back);
+        // Absent http is invisible in the serialized form.
+        let c = RunConfig::parse_str(r#"{"serve": {}}"#).unwrap();
+        assert!(c.to_json().get("serve").unwrap().get("http").is_none());
+        // Typos suggest; value errors are hard.
+        let e = RunConfig::parse_str(r#"{"serve": {"http": {"lisen": "x"}}}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("did you mean 'listen'"), "{e}");
+        assert!(RunConfig::parse_str(r#"{"serve": {"http": {"listen": ""}}}"#).is_err());
+        assert!(RunConfig::parse_str(r#"{"serve": {"http": {"workers": 0}}}"#).is_err());
+        assert!(RunConfig::parse_str(r#"{"serve": {"http": {"max_body": 0}}}"#).is_err());
+        assert!(RunConfig::parse_str(r#"{"serve": {"http": {"read_timeout_ms": 0}}}"#).is_err());
+        // The strict Json::as_usize path: fractional counts are type
+        // errors, not silent truncations.
+        assert!(RunConfig::parse_str(r#"{"serve": {"http": {"workers": 2.7}}}"#).is_err());
     }
 
     #[test]

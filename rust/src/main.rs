@@ -67,6 +67,24 @@ fn main() -> Result<()> {
             println!("stages: {}", cfg.stage_names().join(" -> "));
             println!("{}", cfg.to_json().to_string_pretty());
         }
+        // The HTTP front end blocks until drained, so it gets its own
+        // arm instead of a pipeline stage (docs/SERVING.md).
+        "serve" => {
+            let spec = cli::find_command("serve")?;
+            let cfg = cli::build_config(spec, rest)?;
+            let pipeline = Pipeline::new(cfg)?;
+            run_http_serve(&pipeline)?;
+        }
+        "load-bench" => {
+            let spec = cli::find_command("load-bench")?;
+            let cfg = cli::build_config(spec, rest)?;
+            cfg.validate()?;
+            let addr = cli::flag_value(spec, rest, "addr")?
+                .unwrap_or_else(|| "127.0.0.1:8080".to_string());
+            let bench_out = cli::flag_value(spec, rest, "bench-out")?;
+            let shutdown = cli::flag_value(spec, rest, "shutdown")?.is_some();
+            run_http_load(&cfg, addr, shutdown, bench_out.as_deref())?;
+        }
         name => {
             let spec = cli::find_command(name)?;
             let cfg = cli::build_config(spec, rest)?;
@@ -81,6 +99,150 @@ fn main() -> Result<()> {
             }
             pipeline.run()?;
         }
+    }
+    Ok(())
+}
+
+/// `gs serve`: build the dataset + engine the same way the `serve`
+/// pipeline stage does, then hand them to the HTTP front end until a
+/// drain is triggered (`POST /shutdown`).
+fn run_http_serve(pipeline: &Pipeline) -> Result<()> {
+    use graphstorm::serve::{HttpServer, InferenceEngine, ShardedCache};
+    let cfg = &pipeline.cfg;
+    let Some(sc) = &cfg.serve else {
+        bail!("'gs serve' needs a serve stage in the config");
+    };
+    let Some(hc) = &sc.http else {
+        bail!("'gs serve' needs a serve.http object (pass --listen ADDR)");
+    };
+    graphstorm::obs::init(&cfg.obs);
+    graphstorm::obs::metrics::reset();
+    let ds = pipeline.build_dataset()?;
+    let arch = sc.arch.as_deref().expect("resolved() fills serve.arch");
+    let (engine, backend) = InferenceEngine::auto(&ds, arch, sc.out_dim, cfg.seed)?;
+    let cache = ShardedCache::with_admission(sc.cache, sc.shards, sc.admission);
+    cache.set_generation(engine.generation());
+    let pool = sc.pool();
+    let server = HttpServer::bind(hc.server_cfg())?;
+    // The smoke gate greps for this line to learn the ephemeral port —
+    // keep the "listening on ADDR" shape.
+    println!(
+        "serve [{backend}]: listening on {} ({} http workers, pool={} workers x {} sessions, cache={} rows x {} shards)",
+        server.local_addr(),
+        hc.workers,
+        pool.workers,
+        pool.sessions,
+        sc.cache,
+        sc.shards,
+    );
+    let rep = server.serve(&engine, &cache, pool)?;
+    println!(
+        "serve: drained after {} connections, {} requests (2xx {} | 4xx {} | 429 {} | 5xx {} | 503 {})",
+        rep.connections,
+        rep.requests,
+        rep.responses_2xx,
+        rep.responses_4xx,
+        rep.responses_429,
+        rep.responses_5xx,
+        rep.responses_503,
+    );
+    if cfg.obs.stats {
+        print!(
+            "{}",
+            graphstorm::obs::metrics::render_table(&graphstorm::obs::metrics::snapshot())
+        );
+    }
+    let n = graphstorm::obs::finish(&cfg.obs)?;
+    if n > 0 {
+        if let Some(p) = &cfg.obs.trace {
+            println!("trace: {n} events -> {p}");
+        }
+    }
+    Ok(())
+}
+
+/// `gs load-bench`: replay the canonical Zipf trace over N persistent
+/// HTTP connections and (optionally) merge `http_*` results into a
+/// BENCH_serve.json.
+fn run_http_load(
+    cfg: &graphstorm::config::RunConfig,
+    addr: String,
+    shutdown: bool,
+    bench_out: Option<&str>,
+) -> Result<()> {
+    use graphstorm::serve::{run_load_bench, LoadBenchCfg};
+    use graphstorm::util::json::{obj, Json};
+    let Some(sc) = &cfg.serve else {
+        bail!("'gs load-bench' needs a serve stage in the config");
+    };
+    // Client-side reply timeout: at least 10s — a saturated closed
+    // loop legitimately queues longer than the server's socket knobs.
+    let read_timeout_ms =
+        sc.http.as_ref().map(|h| h.read_timeout_ms).unwrap_or(5000).max(10_000);
+    let lcfg = LoadBenchCfg {
+        addr,
+        connections: sc.clients,
+        requests: sc.requests,
+        alpha: sc.alpha,
+        seed: cfg.seed,
+        shutdown,
+        read_timeout: std::time::Duration::from_millis(read_timeout_ms),
+    };
+    println!(
+        "load-bench: {} requests, zipf(a={}) over {} connections against {}{}",
+        lcfg.requests,
+        lcfg.alpha,
+        lcfg.connections,
+        lcfg.addr,
+        if shutdown { ", then drain" } else { "" },
+    );
+    let rep = run_load_bench(&lcfg)?;
+    println!(
+        "  {:>8.0} req/s  p50 {:>7.0}us  p99 {:>7.0}us  ({:.2}s wall)",
+        rep.rps, rep.p50_us, rep.p99_us, rep.wall_s,
+    );
+    println!(
+        "  ok {} | 429 {} | 503 {} | 4xx {} | 5xx {} | transport {} | replies bit-identical: {}",
+        rep.ok,
+        rep.rejected_429,
+        rep.rejected_503,
+        rep.failed_4xx,
+        rep.failed_5xx,
+        rep.transport_errors,
+        rep.identical,
+    );
+    if let Some(path) = bench_out {
+        // Merge (not overwrite): `scripts/bench_serve.sh` owns the
+        // pool_*/shard_* keys of the same file.
+        let mut doc = match std::fs::read_to_string(path) {
+            Ok(text) => Json::parse(&text)
+                .ok()
+                .and_then(|j| j.as_obj().cloned())
+                .unwrap_or_default(),
+            Err(_) => Default::default(),
+        };
+        let http = obj(vec![
+            ("connections", Json::from(rep.connections)),
+            ("requests", Json::from(rep.requests)),
+            ("wall_s", Json::Num(rep.wall_s)),
+            ("rps", Json::Num(rep.rps)),
+            ("p50_us", Json::Num(rep.p50_us)),
+            ("p99_us", Json::Num(rep.p99_us)),
+            ("ok", Json::from(rep.ok as usize)),
+            ("rejected_429", Json::from(rep.rejected_429 as usize)),
+            ("rejected_503", Json::from(rep.rejected_503 as usize)),
+            ("failed_4xx", Json::from(rep.failed_4xx as usize)),
+            ("failed_5xx", Json::from(rep.failed_5xx as usize)),
+            ("transport_errors", Json::from(rep.transport_errors as usize)),
+            ("identical", Json::Bool(rep.identical)),
+            ("nodes", Json::from(rep.nodes)),
+            ("out_dim", Json::from(rep.out_dim)),
+        ]);
+        doc.insert("http".to_string(), http);
+        let mut body = Json::Obj(doc).to_string_pretty();
+        body.push('\n');
+        std::fs::write(path, body)?;
+        println!("load-bench results -> {path} (key: http)");
     }
     Ok(())
 }

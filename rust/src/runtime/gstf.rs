@@ -123,6 +123,16 @@ fn write_gstf_to(f: &mut impl Write, tensors: &[(String, Tensor)]) -> Result<()>
     Ok(())
 }
 
+/// Header-sanity caps for [`read_gstf`]: a corrupt or truncated file
+/// must fail with an error naming the bad field, never drive a
+/// multi-gigabyte allocation from an attacker- or bitrot-controlled
+/// length prefix.  Generous vs. every real artifact (largest shipped
+/// init file is ~10 MB).
+const MAX_TENSORS: usize = 1 << 16;
+const MAX_NAME_LEN: usize = 4096;
+const MAX_NDIM: usize = 32;
+const MAX_PAYLOAD_BYTES: usize = 1 << 34; // 16 GiB per tensor
+
 pub fn read_gstf(path: &Path) -> Result<Vec<(String, Tensor)>> {
     let mut f = std::io::BufReader::new(
         std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
@@ -137,22 +147,40 @@ pub fn read_gstf(path: &Path) -> Result<Vec<(String, Tensor)>> {
         bail!("unsupported GSTF version {version}");
     }
     let count = read_u32(&mut f)? as usize;
-    let mut out = Vec::with_capacity(count);
+    let mut out = Vec::with_capacity(count.min(MAX_TENSORS));
     for _ in 0..count {
         let name_len = read_u32(&mut f)? as usize;
+        // Bound header-driven allocations before trusting them: a
+        // truncated or corrupt file must fail with a typed error, not
+        // an abort inside `vec![0u8; huge]`.
+        if name_len > MAX_NAME_LEN {
+            bail!("GSTF tensor name length {name_len} exceeds cap {MAX_NAME_LEN}");
+        }
         let mut nb = vec![0u8; name_len];
         f.read_exact(&mut nb)?;
         let name = String::from_utf8(nb)?;
         let mut dt = [0u8; 1];
         f.read_exact(&mut dt)?;
         let ndim = read_u32(&mut f)? as usize;
+        if ndim > MAX_NDIM {
+            bail!("GSTF tensor '{name}' rank {ndim} exceeds cap {MAX_NDIM}");
+        }
         let mut shape = Vec::with_capacity(ndim);
         for _ in 0..ndim {
             let mut b = [0u8; 8];
             f.read_exact(&mut b)?;
             shape.push(u64::from_le_bytes(b) as usize);
         }
-        let n: usize = shape.iter().product();
+        // Checked element count: a corrupt shape like [2^40, 2^40]
+        // overflows `iter().product()` in release mode to a small
+        // number — validate each step instead.
+        let n = shape.iter().try_fold(1usize, |acc, &d| acc.checked_mul(d)).and_then(|n| {
+            n.checked_mul(4).filter(|&bytes| bytes <= MAX_PAYLOAD_BYTES).map(|_| n)
+        });
+        let n: usize = match n {
+            Some(n) => n,
+            None => bail!("GSTF tensor '{name}' shape {shape:?} overflows the payload cap"),
+        };
         let t = match dt[0] {
             0 => {
                 let mut raw = vec![0u8; n * 4];
@@ -221,6 +249,51 @@ mod tests {
         // Overwrite-in-place is atomic and idempotent.
         write_gstf_atomic(&path, &tensors).unwrap();
         assert_eq!(read_gstf(&path).unwrap(), tensors);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_headers_error_instead_of_allocating() {
+        let dir = std::env::temp_dir().join(format!("gstf_corrupt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let write = |name: &str, bytes: &[u8]| {
+            let p = dir.join(name);
+            std::fs::write(&p, bytes).unwrap();
+            p
+        };
+        // Absurd name length prefix.
+        let mut bad_name = Vec::new();
+        bad_name.extend_from_slice(b"GSTF");
+        bad_name.extend_from_slice(&1u32.to_le_bytes());
+        bad_name.extend_from_slice(&1u32.to_le_bytes());
+        bad_name.extend_from_slice(&u32::MAX.to_le_bytes());
+        let err = read_gstf(&write("name.gstf", &bad_name)).unwrap_err();
+        assert!(err.to_string().contains("name length"), "{err}");
+        // Shape whose element product overflows usize.
+        let mut bad_shape = Vec::new();
+        bad_shape.extend_from_slice(b"GSTF");
+        bad_shape.extend_from_slice(&1u32.to_le_bytes());
+        bad_shape.extend_from_slice(&1u32.to_le_bytes());
+        bad_shape.extend_from_slice(&1u32.to_le_bytes());
+        bad_shape.push(b'x');
+        bad_shape.push(0u8); // f32
+        bad_shape.extend_from_slice(&2u32.to_le_bytes());
+        bad_shape.extend_from_slice(&(1u64 << 40).to_le_bytes());
+        bad_shape.extend_from_slice(&(1u64 << 40).to_le_bytes());
+        let err = read_gstf(&write("shape.gstf", &bad_shape)).unwrap_err();
+        assert!(err.to_string().contains("payload cap"), "{err}");
+        // Truncated payload still errors cleanly (read_exact).
+        let mut short = Vec::new();
+        short.extend_from_slice(b"GSTF");
+        short.extend_from_slice(&1u32.to_le_bytes());
+        short.extend_from_slice(&1u32.to_le_bytes());
+        short.extend_from_slice(&1u32.to_le_bytes());
+        short.push(b'y');
+        short.push(0u8);
+        short.extend_from_slice(&1u32.to_le_bytes());
+        short.extend_from_slice(&8u64.to_le_bytes());
+        short.extend_from_slice(&[0u8; 5]); // 5 of 32 payload bytes
+        assert!(read_gstf(&write("short.gstf", &short)).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

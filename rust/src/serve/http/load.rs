@@ -1,0 +1,286 @@
+//! Closed-loop HTTP load generator (`gs load-bench`): N persistent
+//! connections replaying the canonical Zipf trace against a running
+//! `gs serve` instance, measuring saturation throughput and latency
+//! percentiles from the *client* side of the wire.
+//!
+//! The trace is constructed exactly as `run_serve_bench` constructs
+//! its in-process trace — same seed mix (`seed ^ 0x5e12`), same
+//! [`Zipf`] sampler over the node count learned from `GET /info` —
+//! so a load run and a bench run with the same knobs request the same
+//! node sequence, and the byte-identity probe below can hold socket
+//! replies to the in-process determinism contract.
+//!
+//! Closed-loop means each connection waits for its reply before
+//! sending the next request: concurrency is exactly the connection
+//! count, and measured throughput is the *sustainable* rate at that
+//! concurrency, not an open-loop arrival fantasy.
+
+use anyhow::{anyhow, bail, Context as _, Result};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use super::proto::{self, Parse, Response};
+use crate::serve::{LatencyHistogram, Zipf};
+use crate::util::json::Json;
+use crate::util::Rng;
+
+/// Client-side cap on response bodies — a row of a few thousand floats
+/// fits with room to spare.
+const MAX_RESPONSE_BODY: usize = 1 << 20;
+
+#[derive(Debug, Clone)]
+pub struct LoadBenchCfg {
+    /// Server address, e.g. `127.0.0.1:8080`.
+    pub addr: String,
+    /// Persistent connections (closed-loop clients).
+    pub connections: usize,
+    /// Total requests across all connections.
+    pub requests: usize,
+    /// Zipf skew of the replayed trace.
+    pub alpha: f64,
+    /// Trace seed — match the server's `seed` to replay the exact
+    /// `gs serve-bench` node sequence.
+    pub seed: u64,
+    /// Ask the server to drain and exit after the run
+    /// (`POST /shutdown`).
+    pub shutdown: bool,
+    /// Socket read timeout per reply.
+    pub read_timeout: Duration,
+}
+
+impl Default for LoadBenchCfg {
+    fn default() -> Self {
+        LoadBenchCfg {
+            addr: "127.0.0.1:8080".to_string(),
+            connections: 4,
+            requests: 1000,
+            alpha: 1.1,
+            seed: 42,
+            shutdown: false,
+            read_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// Client-side view of one load run — the `http_*` keys of
+/// `BENCH_serve.json`.
+#[derive(Debug, Clone, Default)]
+pub struct LoadBenchReport {
+    pub connections: usize,
+    pub requests: usize,
+    pub wall_s: f64,
+    /// Sustained closed-loop throughput (completed requests / wall).
+    pub rps: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub ok: u64,
+    pub rejected_429: u64,
+    pub rejected_503: u64,
+    pub failed_4xx: u64,
+    pub failed_5xx: u64,
+    /// Socket-level failures that survived one reconnect attempt.
+    pub transport_errors: u64,
+    /// Repeated identical request produced byte-identical replies.
+    pub identical: bool,
+    /// Learned from `GET /info`.
+    pub ntype: usize,
+    pub nodes: usize,
+    pub out_dim: usize,
+}
+
+/// One persistent client connection with request/reply framing.
+struct Conn {
+    stream: TcpStream,
+    read_timeout: Duration,
+}
+
+impl Conn {
+    fn open(addr: &str, read_timeout: Duration) -> Result<Conn> {
+        let stream =
+            TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        stream.set_read_timeout(Some(read_timeout)).context("setting read timeout")?;
+        Ok(Conn { stream, read_timeout })
+    }
+
+    fn request_bytes(method: &str, path: &str, body: &str) -> Vec<u8> {
+        format!(
+            "{method} {path} HTTP/1.1\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n{body}",
+            body.len()
+        )
+        .into_bytes()
+    }
+
+    /// Send one request and block for its reply (closed loop).  Also
+    /// returns the raw reply bytes for the byte-identity probe.
+    fn call(&mut self, method: &str, path: &str, body: &str) -> Result<(Response, Vec<u8>)> {
+        self.stream.write_all(&Self::request_bytes(method, path, body))?;
+        let mut buf: Vec<u8> = Vec::new();
+        let mut chunk = [0u8; 4096];
+        loop {
+            match proto::parse_response(&buf, MAX_RESPONSE_BODY) {
+                Parse::Ready(resp, used) => {
+                    let raw = buf[..used].to_vec();
+                    return Ok((resp, raw));
+                }
+                Parse::Bad(bad) => bail!("unparseable response: {}", bad.message()),
+                Parse::Incomplete => {
+                    let n = self.stream.read(&mut chunk)?;
+                    if n == 0 {
+                        bail!("connection closed mid-response");
+                    }
+                    buf.extend_from_slice(&chunk[..n]);
+                }
+            }
+        }
+    }
+}
+
+fn predict_body(nt: u32, id: u32) -> String {
+    format!("{{\"nt\": {nt}, \"id\": {id}}}")
+}
+
+/// Run the closed-loop load bench against a live server.
+pub fn run_load_bench(cfg: &LoadBenchCfg) -> Result<LoadBenchReport> {
+    let connections = cfg.connections.max(1);
+
+    // ---- learn the trace domain from the server ----------------
+    let mut probe = Conn::open(&cfg.addr, cfg.read_timeout)?;
+    let (info, _) = probe.call("GET", "/info", "")?;
+    if info.status != 200 {
+        bail!("GET /info returned {}", info.status);
+    }
+    let info = Json::parse(std::str::from_utf8(&info.body).context("info body utf8")?)
+        .context("parsing /info body")?;
+    let ntype = info.usize_of("ntype")?;
+    let nodes = info.usize_of("nodes")?;
+    let out_dim = info.usize_of("out_dim")?;
+    if nodes == 0 {
+        bail!("server reports an empty node type");
+    }
+
+    // ---- canonical trace (same construction as run_serve_bench) -
+    let nt = ntype as u32;
+    let zipf = Zipf::new(nodes, cfg.alpha);
+    let mut rng = Rng::seed_from(cfg.seed ^ 0x5e12);
+    let trace: Vec<(u32, u32)> =
+        (0..cfg.requests.max(1)).map(|_| (nt, zipf.sample(&mut rng) as u32)).collect();
+
+    // ---- byte-identity probe ------------------------------------
+    // The same request twice on the same connection must yield
+    // byte-identical replies: the engine is deterministic, JSON object
+    // keys are BTreeMap-ordered, float formatting is shortest
+    // round-trip, and Content-Length pins the framing.
+    let (nt0, id0) = trace[0];
+    let body0 = predict_body(nt0, id0);
+    let (r1, raw1) = probe.call("POST", "/predict", &body0)?;
+    let (r2, raw2) = probe.call("POST", "/predict", &body0)?;
+    if r1.status != 200 || r2.status != 200 {
+        bail!("identity probe got {} / {} from /predict", r1.status, r2.status);
+    }
+    let identical = raw1 == raw2;
+    drop(probe);
+
+    // ---- closed-loop replay -------------------------------------
+    let latency = LatencyHistogram::new();
+    let ok = AtomicU64::new(0);
+    let r429 = AtomicU64::new(0);
+    let r503 = AtomicU64::new(0);
+    let f4xx = AtomicU64::new(0);
+    let f5xx = AtomicU64::new(0);
+    let transport = AtomicU64::new(0);
+    let t0 = Instant::now(); // lint:allow(determinism): bench wall-clock only
+    let mut first_err: Option<anyhow::Error> = None;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(connections);
+        for w in 0..connections {
+            let share: Vec<(u32, u32)> =
+                trace.iter().skip(w).step_by(connections).copied().collect();
+            let (latency, ok, r429, r503, f4xx, f5xx, transport) =
+                (&latency, &ok, &r429, &r503, &f4xx, &f5xx, &transport);
+            handles.push(scope.spawn(move || -> Result<()> {
+                let mut conn = Conn::open(&cfg.addr, cfg.read_timeout)?;
+                for (nt, id) in share {
+                    let body = predict_body(nt, id);
+                    let t_req = Instant::now(); // lint:allow(determinism): client-side latency stamp only
+                    let resp = match conn.call("POST", "/predict", &body) {
+                        Ok((resp, _)) => resp,
+                        Err(_) => {
+                            // One reconnect per failure: keep-alive may
+                            // have been withdrawn under our feet.
+                            conn = Conn::open(&cfg.addr, cfg.read_timeout)?;
+                            match conn.call("POST", "/predict", &body) {
+                                Ok((resp, _)) => resp,
+                                Err(_) => {
+                                    transport.fetch_add(1, Ordering::Relaxed);
+                                    continue;
+                                }
+                            }
+                        }
+                    };
+                    latency.record(t_req.elapsed());
+                    match resp.status {
+                        200..=299 => ok.fetch_add(1, Ordering::Relaxed),
+                        429 => r429.fetch_add(1, Ordering::Relaxed),
+                        503 => r503.fetch_add(1, Ordering::Relaxed),
+                        400..=499 => f4xx.fetch_add(1, Ordering::Relaxed),
+                        _ => f5xx.fetch_add(1, Ordering::Relaxed),
+                    };
+                    if !resp.keep_alive {
+                        conn = Conn::open(&cfg.addr, cfg.read_timeout)?;
+                    }
+                }
+                Ok(())
+            }));
+        }
+        for h in handles {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(e);
+                }
+                Err(_) => {
+                    first_err.get_or_insert_with(|| anyhow!("load client thread panicked"));
+                }
+            }
+        }
+    });
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    if cfg.shutdown {
+        let mut c = Conn::open(&cfg.addr, cfg.read_timeout)?;
+        let (resp, _) = c.call("POST", "/shutdown", "")?;
+        if resp.status != 200 {
+            bail!("POST /shutdown returned {}", resp.status);
+        }
+    }
+
+    let completed = ok.load(Ordering::Relaxed)
+        + r429.load(Ordering::Relaxed)
+        + r503.load(Ordering::Relaxed)
+        + f4xx.load(Ordering::Relaxed)
+        + f5xx.load(Ordering::Relaxed);
+    Ok(LoadBenchReport {
+        connections,
+        requests: trace.len(),
+        wall_s,
+        rps: completed as f64 / wall_s.max(1e-9),
+        p50_us: latency.p50_us(),
+        p99_us: latency.p99_us(),
+        ok: ok.load(Ordering::Relaxed),
+        rejected_429: r429.load(Ordering::Relaxed),
+        rejected_503: r503.load(Ordering::Relaxed),
+        failed_4xx: f4xx.load(Ordering::Relaxed),
+        failed_5xx: f5xx.load(Ordering::Relaxed),
+        transport_errors: transport.load(Ordering::Relaxed),
+        identical,
+        ntype,
+        nodes,
+        out_dim,
+    })
+}

@@ -1,0 +1,98 @@
+//! HTTP/1.1 network front end for the serving stack (`gs serve`).
+//!
+//! Everything below PR 3 speaks channels: clients hand
+//! [`ServeRequest`](super::batcher::ServeRequest)s to an
+//! [`EnginePool`](super::pool::EnginePool) and block on a reply
+//! channel.  This module puts a socket boundary in front of that
+//! queue — a hand-rolled HTTP/1.1 server on `std::net::TcpListener`
+//! (no async runtime, no HTTP crate: the container is offline and the
+//! protocol subset we need is small) — so the serving path can be
+//! load-tested across a real network hop and exercised by anything
+//! that speaks HTTP.
+//!
+//! Layout:
+//!
+//! * [`proto`] — pure request/response parsing and formatting.
+//!   Content-Length framing only, keep-alive by HTTP/1.1 defaults,
+//!   split-read tolerant, hostile-length safe.  All unit-testable
+//!   without a socket.
+//! * [`server`] — the listener: one acceptor + N connection workers
+//!   ([`HttpServerCfg::workers`]) feeding one shared [`EnginePool`]
+//!   through the same request queue `gs serve-bench` uses.  Replies
+//!   are therefore **bit-identical** to in-process pool replies by
+//!   construction — the socket layer only frames bytes, it never
+//!   touches a float.
+//! * [`load`] — the closed-loop load generator (`gs load-bench`):
+//!   N persistent connections replaying the canonical Zipf trace,
+//!   measuring saturation throughput and latency percentiles from the
+//!   client side of the wire.
+//!
+//! Error taxonomy → status code, decided once here and used by both
+//! sides of the wire:
+//!
+//! | [`ServeError`]             | HTTP status                         |
+//! |----------------------------|-------------------------------------|
+//! | `Overloaded`               | 429 (shed at the queue boundary)    |
+//! | `DeadlineExceeded`         | 503 (expired before compute)        |
+//! | `Canceled`                 | 503 (pool shutting down)            |
+//! | `Transient` / `Fatal`      | 500 (compute failed for good)       |
+//!
+//! Protocol-level failures never reach the pool: unparseable requests
+//! get 400, unknown routes 404, oversized bodies 413 — all with JSON
+//! `{"error", "status"}` bodies.
+
+pub mod load;
+pub mod proto;
+pub mod server;
+
+pub use load::{run_load_bench, LoadBenchCfg, LoadBenchReport};
+pub use proto::{parse_request, parse_response, response_bytes, Bad, Parse, Request, Response};
+pub use server::{HttpReport, HttpServer, ShutdownHandle};
+
+use super::error::ServeError;
+
+/// Socket-facing knobs, resolved from `serve.http` config
+/// ([`crate::config::HttpCfg::server_cfg`]).
+#[derive(Debug, Clone)]
+pub struct HttpServerCfg {
+    /// Bind address (`serve.http.listen`), e.g. `127.0.0.1:8080`;
+    /// port 0 asks the OS for an ephemeral port (tests, smoke gates).
+    pub listen: String,
+    /// Connection-handler threads (`serve.http.workers`) — bounds
+    /// concurrently *served* connections; accepted connections beyond
+    /// it wait their turn in the handoff queue.
+    pub workers: usize,
+    /// Request-body cap in bytes (`serve.http.max_body`); larger
+    /// declared Content-Lengths are refused with 413 before the body
+    /// is read.
+    pub max_body: usize,
+    /// Per-connection socket read timeout (`serve.http.read_timeout_ms`).
+    pub read_timeout: std::time::Duration,
+    /// Per-connection socket write timeout (`serve.http.write_timeout_ms`).
+    pub write_timeout: std::time::Duration,
+}
+
+/// The one place a [`ServeError`] becomes an HTTP status (table in the
+/// module docs).
+pub fn status_for(e: &ServeError) -> u16 {
+    match e {
+        ServeError::Overloaded { .. } => 429,
+        ServeError::DeadlineExceeded { .. } => 503,
+        ServeError::Canceled(_) => 503,
+        ServeError::Transient(_) | ServeError::Fatal(_) => 500,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn status_mapping_matches_taxonomy() {
+        assert_eq!(status_for(&ServeError::Overloaded { depth: 4 }), 429);
+        assert_eq!(status_for(&ServeError::DeadlineExceeded { waited_ms: 9 }), 503);
+        assert_eq!(status_for(&ServeError::Canceled("shutdown".into())), 503);
+        assert_eq!(status_for(&ServeError::transient("row source hiccup")), 500);
+        assert_eq!(status_for(&ServeError::fatal("scratch poisoned")), 500);
+    }
+}

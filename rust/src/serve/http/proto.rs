@@ -1,0 +1,409 @@
+//! HTTP/1.1 wire parsing and formatting — no sockets, no state beyond
+//! the caller's accumulation buffer, so every framing rule is unit
+//! testable without a listener.
+//!
+//! The parser consumes from a byte buffer the connection loop appends
+//! socket reads into, which makes short reads a non-event: a request
+//! head split across TCP segments simply parses as [`Parse::Incomplete`]
+//! until the terminator arrives.  Bodies are `Content-Length` framed
+//! only (chunked transfer coding is rejected with 400 — nothing in
+//! this protocol needs it), and an oversized declared length is
+//! rejected *before* the body is read, so a hostile `Content-Length`
+//! can never drive an allocation.
+
+use std::fmt::Write as _;
+
+use crate::util::json::Json;
+
+/// Hard cap on the request-head block (request line + headers).  A
+/// buffer that exceeds it without containing the `\r\n\r\n` terminator
+/// is malformed, not merely incomplete.
+pub const MAX_HEAD_BYTES: usize = 8192;
+
+/// A parsed request: method + path + framing facts the server routes
+/// on.  Header storage is not kept — the three headers this protocol
+/// reacts to (`Content-Length`, `Connection`, `Transfer-Encoding`) are
+/// folded into fields during parsing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    /// Connection survives this exchange (HTTP/1.1 default, or an
+    /// explicit `Connection: keep-alive` on 1.0).
+    pub keep_alive: bool,
+    pub body: Vec<u8>,
+}
+
+/// Why a request could not be parsed, paired with the status code the
+/// server answers with before closing the connection.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Bad {
+    /// 400: unparseable request line, header, length or version.
+    Malformed(&'static str),
+    /// 413: declared `Content-Length` exceeds the configured body cap.
+    BodyTooLarge { declared: usize, limit: usize },
+}
+
+impl Bad {
+    pub fn status(&self) -> u16 {
+        match self {
+            Bad::Malformed(_) => 400,
+            Bad::BodyTooLarge { .. } => 413,
+        }
+    }
+
+    pub fn message(&self) -> String {
+        match self {
+            Bad::Malformed(m) => (*m).to_string(),
+            Bad::BodyTooLarge { declared, limit } => {
+                format!("request body of {declared} bytes exceeds the {limit}-byte limit")
+            }
+        }
+    }
+}
+
+/// One parse attempt over the accumulated bytes.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Parse<T> {
+    /// Not enough bytes yet — read more and retry.
+    Incomplete,
+    /// A complete message; the second field is how many bytes of the
+    /// buffer it consumed (drain them — pipelined bytes may follow).
+    Ready(T, usize),
+    /// The bytes can never become a valid message.
+    Bad(Bad),
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Parse one request from the front of `buf`.  `max_body` bounds the
+/// declared `Content-Length`.
+pub fn parse_request(buf: &[u8], max_body: usize) -> Parse<Request> {
+    let Some(head_end) = find_head_end(buf) else {
+        if buf.len() > MAX_HEAD_BYTES {
+            return Parse::Bad(Bad::Malformed("request head exceeds the size limit"));
+        }
+        return Parse::Incomplete;
+    };
+    let Ok(head) = std::str::from_utf8(&buf[..head_end]) else {
+        return Parse::Bad(Bad::Malformed("request head is not valid UTF-8"));
+    };
+    let mut lines = head.split("\r\n");
+    let Some(request_line) = lines.next() else {
+        return Parse::Bad(Bad::Malformed("empty request head"));
+    };
+    let mut parts = request_line.split(' ');
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v), None) if !m.is_empty() && !p.is_empty() => (m, p, v),
+        _ => return Parse::Bad(Bad::Malformed("malformed request line (want 'METHOD /path HTTP/1.1')")),
+    };
+    if !path.starts_with('/') {
+        return Parse::Bad(Bad::Malformed("request target must be an absolute path"));
+    }
+    let http11 = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        _ => return Parse::Bad(Bad::Malformed("unsupported HTTP version")),
+    };
+
+    let mut content_length: Option<usize> = None;
+    let mut keep_alive = http11;
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else {
+            return Parse::Bad(Bad::Malformed("header line missing ':'"));
+        };
+        let name = name.trim().to_ascii_lowercase();
+        let value = value.trim();
+        match name.as_str() {
+            "content-length" => {
+                let Ok(n) = value.parse::<usize>() else {
+                    return Parse::Bad(Bad::Malformed("unparseable Content-Length"));
+                };
+                if content_length.is_some_and(|prev| prev != n) {
+                    return Parse::Bad(Bad::Malformed("conflicting Content-Length headers"));
+                }
+                content_length = Some(n);
+            }
+            "connection" => {
+                let v = value.to_ascii_lowercase();
+                if v.contains("close") {
+                    keep_alive = false;
+                } else if v.contains("keep-alive") {
+                    keep_alive = true;
+                }
+            }
+            "transfer-encoding" => {
+                return Parse::Bad(Bad::Malformed(
+                    "Transfer-Encoding is unsupported (use Content-Length framing)",
+                ));
+            }
+            _ => {}
+        }
+    }
+
+    let body_len = content_length.unwrap_or(0);
+    if body_len > max_body {
+        return Parse::Bad(Bad::BodyTooLarge { declared: body_len, limit: max_body });
+    }
+    let body_start = head_end + 4;
+    if buf.len() < body_start + body_len {
+        return Parse::Incomplete;
+    }
+    Parse::Ready(
+        Request {
+            method: method.to_string(),
+            path: path.to_string(),
+            keep_alive,
+            body: buf[body_start..body_start + body_len].to_vec(),
+        },
+        body_start + body_len,
+    )
+}
+
+/// A parsed response (the load-generator side of the wire).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Response {
+    pub status: u16,
+    pub keep_alive: bool,
+    pub body: Vec<u8>,
+}
+
+/// Parse one response from the front of `buf`.  `max_body` bounds the
+/// declared `Content-Length` (the client trusts its own server only so
+/// far).
+pub fn parse_response(buf: &[u8], max_body: usize) -> Parse<Response> {
+    let Some(head_end) = find_head_end(buf) else {
+        if buf.len() > MAX_HEAD_BYTES {
+            return Parse::Bad(Bad::Malformed("response head exceeds the size limit"));
+        }
+        return Parse::Incomplete;
+    };
+    let Ok(head) = std::str::from_utf8(&buf[..head_end]) else {
+        return Parse::Bad(Bad::Malformed("response head is not valid UTF-8"));
+    };
+    let mut lines = head.split("\r\n");
+    let Some(status_line) = lines.next() else {
+        return Parse::Bad(Bad::Malformed("empty response head"));
+    };
+    let mut parts = status_line.splitn(3, ' ');
+    let (version, code) = match (parts.next(), parts.next()) {
+        (Some(v), Some(c)) => (v, c),
+        _ => return Parse::Bad(Bad::Malformed("malformed status line")),
+    };
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Parse::Bad(Bad::Malformed("unsupported HTTP version"));
+    }
+    let Ok(status) = code.parse::<u16>() else {
+        return Parse::Bad(Bad::Malformed("unparseable status code"));
+    };
+    let mut content_length = 0usize;
+    let mut keep_alive = version == "HTTP/1.1";
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else {
+            return Parse::Bad(Bad::Malformed("header line missing ':'"));
+        };
+        let name = name.trim().to_ascii_lowercase();
+        let value = value.trim();
+        match name.as_str() {
+            "content-length" => {
+                let Ok(n) = value.parse::<usize>() else {
+                    return Parse::Bad(Bad::Malformed("unparseable Content-Length"));
+                };
+                content_length = n;
+            }
+            "connection" => {
+                if value.eq_ignore_ascii_case("close") {
+                    keep_alive = false;
+                }
+            }
+            _ => {}
+        }
+    }
+    if content_length > max_body {
+        return Parse::Bad(Bad::BodyTooLarge { declared: content_length, limit: max_body });
+    }
+    let body_start = head_end + 4;
+    if buf.len() < body_start + content_length {
+        return Parse::Incomplete;
+    }
+    Parse::Ready(
+        Response {
+            status,
+            keep_alive,
+            body: buf[body_start..body_start + content_length].to_vec(),
+        },
+        body_start + content_length,
+    )
+}
+
+/// Canonical reason phrase for the status codes this server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Serialize a JSON-bodied response.  Byte-determinism matters here:
+/// identical `(status, body, keep_alive)` triples always produce
+/// identical bytes ([`Json`] objects are `BTreeMap`-ordered and float
+/// formatting is shortest-round-trip), which is what lets the loopback
+/// tests assert bit-identical replies for repeated identical requests.
+pub fn response_bytes(status: u16, body: &Json, keep_alive: bool) -> Vec<u8> {
+    let payload = body.to_string_pretty();
+    let mut head = String::with_capacity(128 + payload.len());
+    let _ = write!(
+        head,
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        reason(status),
+        payload.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    head.push_str(&payload);
+    head.into_bytes()
+}
+
+/// The uniform JSON error body: `{"error": msg, "status": code}`.
+pub fn error_body(status: u16, msg: &str) -> Json {
+    crate::util::json::obj(vec![
+        ("error", Json::from(msg)),
+        ("status", Json::from(status as usize)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(bytes: &[u8]) -> Parse<Request> {
+        parse_request(bytes, 1024)
+    }
+
+    #[test]
+    fn parses_minimal_get() {
+        let bytes = b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n";
+        let Parse::Ready(r, used) = req(bytes) else {
+            panic!("expected Ready");
+        };
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/healthz");
+        assert!(r.keep_alive);
+        assert!(r.body.is_empty());
+        assert_eq!(used, bytes.len());
+    }
+
+    #[test]
+    fn split_head_is_incomplete_until_terminator() {
+        // A request head arriving one TCP segment at a time must parse
+        // as Incomplete at every prefix, then Ready on the last byte.
+        let full = b"POST /predict HTTP/1.1\r\nContent-Length: 9\r\n\r\n{\"id\": 3}";
+        for cut in 1..full.len() {
+            match req(&full[..cut]) {
+                Parse::Incomplete => {}
+                other => panic!("prefix {cut}: expected Incomplete, got {other:?}"),
+            }
+        }
+        let Parse::Ready(r, used) = req(full) else { panic!("expected Ready") };
+        assert_eq!(r.body, b"{\"id\": 3}");
+        assert_eq!(used, full.len());
+    }
+
+    #[test]
+    fn pipelined_requests_consume_exactly_one() {
+        let two = b"GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\n\r\n";
+        let Parse::Ready(r, used) = req(two) else { panic!("expected Ready") };
+        assert_eq!(r.path, "/a");
+        let Parse::Ready(r2, used2) = req(&two[used..]) else { panic!("expected Ready") };
+        assert_eq!(r2.path, "/b");
+        assert_eq!(used + used2, two.len());
+    }
+
+    #[test]
+    fn malformed_request_lines_are_bad() {
+        for bytes in [
+            &b"NOT_A_REQUEST\r\n\r\n"[..],
+            b"GET /x HTTP/1.1 extra\r\n\r\n",
+            b"GET nopath HTTP/1.1\r\n\r\n",
+            b"GET /x HTTP/2.0\r\n\r\n",
+            b"GET /x HTTP/1.1\r\nbroken header line\r\n\r\n",
+            b"GET /x HTTP/1.1\r\nContent-Length: abc\r\n\r\n",
+            b"GET /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n",
+            b"GET /x HTTP/1.1\r\nContent-Length: 2\r\nContent-Length: 5\r\n\r\n",
+        ] {
+            match req(bytes) {
+                Parse::Bad(Bad::Malformed(_)) => {}
+                other => panic!("{:?}: expected Malformed, got {other:?}", String::from_utf8_lossy(bytes)),
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_body_is_rejected_before_the_body_arrives() {
+        // Only the head is present — the declared length alone trips
+        // the 413, no body bytes needed (or allocated).
+        let head = b"POST /predict HTTP/1.1\r\nContent-Length: 4096\r\n\r\n";
+        match req(head) {
+            Parse::Bad(Bad::BodyTooLarge { declared: 4096, limit: 1024 }) => {}
+            other => panic!("expected BodyTooLarge, got {other:?}"),
+        }
+        assert_eq!(Bad::BodyTooLarge { declared: 4096, limit: 1024 }.status(), 413);
+    }
+
+    #[test]
+    fn runaway_head_without_terminator_is_bad() {
+        let junk = vec![b'a'; MAX_HEAD_BYTES + 1];
+        match req(&junk) {
+            Parse::Bad(Bad::Malformed(_)) => {}
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn connection_header_controls_keep_alive() {
+        let Parse::Ready(r, _) = req(b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n") else {
+            panic!()
+        };
+        assert!(!r.keep_alive);
+        let Parse::Ready(r, _) = req(b"GET / HTTP/1.0\r\n\r\n") else { panic!() };
+        assert!(!r.keep_alive, "HTTP/1.0 defaults to close");
+        let Parse::Ready(r, _) = req(b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n") else {
+            panic!()
+        };
+        assert!(r.keep_alive);
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let body = error_body(429, "overloaded: shed at queue depth 4");
+        let bytes = response_bytes(429, &body, true);
+        let Parse::Ready(resp, used) = parse_response(&bytes, 1 << 20) else {
+            panic!("expected Ready");
+        };
+        assert_eq!(resp.status, 429);
+        assert!(resp.keep_alive);
+        assert_eq!(used, bytes.len());
+        let parsed = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(parsed.usize_of("status").unwrap(), 429);
+        // Byte determinism: same inputs, same bytes.
+        assert_eq!(bytes, response_bytes(429, &body, true));
+    }
+
+    #[test]
+    fn response_parser_handles_close_and_split() {
+        let bytes = response_bytes(200, &Json::Bool(true), false);
+        for cut in 1..bytes.len() {
+            assert_eq!(parse_response(&bytes[..cut], 1024), Parse::Incomplete, "cut {cut}");
+        }
+        let Parse::Ready(resp, _) = parse_response(&bytes, 1024) else { panic!() };
+        assert!(!resp.keep_alive);
+    }
+}

@@ -1,0 +1,397 @@
+//! The HTTP/1.1 listener: acceptor + connection workers in front of
+//! one shared [`EnginePool`].
+//!
+//! ```text
+//! clients ══▶ TcpListener ─▶ conn queue ─▶ http worker 0..N
+//!                (acceptor)                     │ parse / route
+//!                                               ▼
+//!                                        ServeRequest queue ─▶ EnginePool
+//! ```
+//!
+//! Each HTTP worker owns the connections it dequeues end-to-end: it
+//! parses requests off the socket, turns `POST /predict` into the same
+//! [`ServeRequest`] the in-process bench sends, blocks on the reply
+//! channel, and frames the answer back.  The pool underneath batches
+//! across connections exactly as it batches across bench clients —
+//! the socket boundary adds no second batching policy and touches no
+//! float, which is why socket replies are bit-identical to in-process
+//! replies (asserted in `tests/http.rs`).
+//!
+//! Graceful shutdown (`POST /shutdown` or [`ShutdownHandle::trigger`])
+//! is a drain, not a kill: the acceptor stops accepting, already
+//! accepted connections finish their in-flight request (keep-alive is
+//! withdrawn on the final reply via `Connection: close`), workers drop
+//! their request senders, and the pool exits once the queue is empty —
+//! the same all-senders-dropped convention every pool user relies on.
+
+use anyhow::{anyhow, Context as _, Result};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, SyncSender};
+use std::sync::{Arc, Mutex};
+
+use super::proto::{self, Parse};
+use super::{status_for, HttpServerCfg};
+use crate::obs::metrics;
+use crate::serve::batcher::ServeRequest;
+use crate::serve::cache::ShardedCache;
+use crate::serve::engine::InferenceEngine;
+use crate::serve::error::lock_clean;
+use crate::serve::pool::{EnginePool, EnginePoolCfg};
+use crate::serve::ServeMetrics;
+use crate::util::json::{obj, Json};
+
+/// Wire-side traffic counters, snapshotted into [`HttpReport`] and the
+/// metrics registry when [`HttpServer::serve`] returns.  Status
+/// classes are disjoint: 429 and 503 are broken out of their families
+/// because they are the two *policy* rejections (shed, deadline/drain)
+/// an operator alarms on separately.
+#[derive(Default)]
+struct Counters {
+    connections: AtomicU64,
+    requests: AtomicU64,
+    responses_2xx: AtomicU64,
+    /// 400/404/408/413 — protocol failures (excludes 429).
+    responses_4xx: AtomicU64,
+    responses_429: AtomicU64,
+    /// 500 — compute failures (excludes 503).
+    responses_5xx: AtomicU64,
+    responses_503: AtomicU64,
+}
+
+impl Counters {
+    fn count(&self, status: u16) {
+        let c = match status {
+            200..=299 => &self.responses_2xx,
+            429 => &self.responses_429,
+            400..=499 => &self.responses_4xx,
+            503 => &self.responses_503,
+            _ => &self.responses_5xx,
+        };
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// What one `serve()` run handled, for the exit summary.
+#[derive(Debug, Clone, Default)]
+pub struct HttpReport {
+    pub connections: u64,
+    pub requests: u64,
+    pub responses_2xx: u64,
+    pub responses_4xx: u64,
+    pub responses_429: u64,
+    pub responses_5xx: u64,
+    pub responses_503: u64,
+}
+
+/// Remote control for a running server: flip the stop flag and nudge
+/// the blocking `accept` awake with a throwaway connection.
+#[derive(Clone)]
+pub struct ShutdownHandle {
+    stop: Arc<AtomicBool>,
+    addr: SocketAddr,
+}
+
+impl ShutdownHandle {
+    /// Begin draining: no new connections are accepted, in-flight
+    /// requests complete.  Idempotent.
+    pub fn trigger(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // The acceptor blocks in accept(); a throwaway connection is
+        // the portable way to wake it so it can observe the flag.
+        let _ = TcpStream::connect(self.addr);
+    }
+
+    pub fn is_triggered(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+}
+
+/// Everything a connection handler needs, shared across workers.
+struct Ctx<'a, 'e> {
+    cfg: &'a HttpServerCfg,
+    engine: &'a InferenceEngine<'e>,
+    req_tx: SyncSender<ServeRequest>,
+    stop: &'a Arc<AtomicBool>,
+    shutdown: ShutdownHandle,
+    counters: &'a Counters,
+}
+
+pub struct HttpServer {
+    cfg: HttpServerCfg,
+    listener: TcpListener,
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+}
+
+impl HttpServer {
+    /// Bind `serve.http.listen`.  Port 0 resolves to an ephemeral port
+    /// — read it back with [`local_addr`](Self::local_addr).
+    pub fn bind(cfg: HttpServerCfg) -> Result<HttpServer> {
+        let listener = TcpListener::bind(&cfg.listen)
+            .with_context(|| format!("binding serve.http.listen = {}", cfg.listen))?;
+        let addr = listener.local_addr().context("reading bound address")?;
+        Ok(HttpServer { cfg, listener, addr, stop: Arc::new(AtomicBool::new(false)) })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn shutdown_handle(&self) -> ShutdownHandle {
+        ShutdownHandle { stop: Arc::clone(&self.stop), addr: self.addr }
+    }
+
+    /// Serve until shutdown is triggered, then drain and return the
+    /// traffic report.  Blocks the calling thread (the acceptor runs
+    /// inline); workers and the engine pool live on scoped threads.
+    pub fn serve(
+        &self,
+        engine: &InferenceEngine,
+        cache: &ShardedCache,
+        pool_cfg: EnginePoolCfg,
+    ) -> Result<HttpReport> {
+        let workers = self.cfg.workers.max(1);
+        let _sp = crate::span!("serve.http.serve", workers = workers);
+        let counters = Counters::default();
+        let serve_metrics = ServeMetrics::new();
+        let pool = EnginePool::new(pool_cfg);
+        let (req_tx, req_rx) = sync_channel::<ServeRequest>(4096);
+        let (conn_tx, conn_rx) = channel::<TcpStream>();
+        let conn_rx = Mutex::new(conn_rx);
+        let shutdown = self.shutdown_handle();
+
+        let mut pool_result: Result<()> = Ok(());
+        std::thread::scope(|scope| {
+            let pool_handle = {
+                let serve_metrics = &serve_metrics;
+                scope.spawn(move || pool.run(engine, cache, req_rx, serve_metrics))
+            };
+            for _ in 0..workers {
+                let ctx = Ctx {
+                    cfg: &self.cfg,
+                    engine,
+                    req_tx: req_tx.clone(),
+                    stop: &self.stop,
+                    shutdown: shutdown.clone(),
+                    counters: &counters,
+                };
+                let conn_rx = &conn_rx;
+                scope.spawn(move || {
+                    // Workers drain the conn queue until the acceptor
+                    // drops its sender; the trailing connections a
+                    // drain leaves behind are still served.
+                    loop {
+                        let stream = match lock_clean(conn_rx).recv() {
+                            Ok(s) => s,
+                            Err(_) => return,
+                        };
+                        handle_connection(stream, &ctx);
+                    }
+                });
+            }
+            // req_tx clones live in the workers; dropping the original
+            // here means the pool exits exactly when the last worker
+            // does.
+            drop(req_tx);
+
+            // ---- acceptor (inline) --------------------------------
+            for accepted in self.listener.incoming() {
+                if self.stop.load(Ordering::SeqCst) {
+                    break; // wake-up connection (or racing client) is dropped unserved
+                }
+                match accepted {
+                    Ok(stream) => {
+                        counters.connections.fetch_add(1, Ordering::Relaxed);
+                        if conn_tx.send(stream).is_err() {
+                            break;
+                        }
+                    }
+                    // Transient accept errors (aborted handshakes,
+                    // fd pressure) don't kill the listener.
+                    Err(_) => continue,
+                }
+            }
+            drop(conn_tx); // workers finish queued connections, then exit
+
+            match pool_handle.join() {
+                Ok(r) => pool_result = r,
+                Err(_) => pool_result = Err(anyhow!("engine pool thread panicked")),
+            }
+        });
+        pool_result?;
+
+        let report = HttpReport {
+            connections: counters.connections.load(Ordering::Relaxed),
+            requests: counters.requests.load(Ordering::Relaxed),
+            responses_2xx: counters.responses_2xx.load(Ordering::Relaxed),
+            responses_4xx: counters.responses_4xx.load(Ordering::Relaxed),
+            responses_429: counters.responses_429.load(Ordering::Relaxed),
+            responses_5xx: counters.responses_5xx.load(Ordering::Relaxed),
+            responses_503: counters.responses_503.load(Ordering::Relaxed),
+        };
+        metrics::counter_set("serve.http.connections", report.connections);
+        metrics::counter_set("serve.http.requests", report.requests);
+        metrics::counter_set("serve.http.responses_2xx", report.responses_2xx);
+        metrics::counter_set("serve.http.responses_4xx", report.responses_4xx);
+        metrics::counter_set("serve.http.responses_429", report.responses_429);
+        metrics::counter_set("serve.http.responses_5xx", report.responses_5xx);
+        metrics::counter_set("serve.http.responses_503", report.responses_503);
+        metrics::gauge_set("serve.http.workers", workers as f64);
+        Ok(report)
+    }
+}
+
+/// Serve one connection to completion: parse → route → reply, looping
+/// while keep-alive holds.  Never panics; every exit path either sent
+/// a response or hit a dead socket.
+fn handle_connection(stream: TcpStream, ctx: &Ctx) {
+    let _ = stream.set_read_timeout(Some(ctx.cfg.read_timeout));
+    let _ = stream.set_write_timeout(Some(ctx.cfg.write_timeout));
+    let _ = stream.set_nodelay(true);
+    let mut stream = stream;
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    loop {
+        match proto::parse_request(&buf, ctx.cfg.max_body) {
+            Parse::Ready(req, used) => {
+                buf.drain(..used);
+                ctx.counters.requests.fetch_add(1, Ordering::Relaxed);
+                let (status, body) = route(&req, ctx);
+                // Draining withdraws keep-alive: the client learns on
+                // this reply that the connection is closing.
+                let keep = req.keep_alive && !ctx.stop.load(Ordering::SeqCst);
+                crate::event!("serve.http.request", status = status as u64, keep = keep);
+                ctx.counters.count(status);
+                if stream.write_all(&proto::response_bytes(status, &body, keep)).is_err() {
+                    return;
+                }
+                if !keep {
+                    return;
+                }
+                // Loop before reading: pipelined bytes may already be
+                // buffered.
+            }
+            Parse::Bad(bad) => {
+                ctx.counters.requests.fetch_add(1, Ordering::Relaxed);
+                let status = bad.status();
+                ctx.counters.count(status);
+                let body = proto::error_body(status, &bad.message());
+                let _ = stream.write_all(&proto::response_bytes(status, &body, false));
+                return; // framing is unrecoverable — close
+            }
+            Parse::Incomplete => match stream.read(&mut chunk) {
+                Ok(0) => {
+                    if !buf.is_empty() {
+                        // The peer promised more (e.g. a declared
+                        // Content-Length it never sent) and hung up:
+                        // answer the mismatch deterministically.
+                        ctx.counters.requests.fetch_add(1, Ordering::Relaxed);
+                        ctx.counters.count(400);
+                        let body = proto::error_body(400, "incomplete request (connection closed mid-message)");
+                        let _ = stream.write_all(&proto::response_bytes(400, &body, false));
+                    }
+                    return;
+                }
+                Ok(n) => buf.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    if !buf.is_empty() {
+                        ctx.counters.requests.fetch_add(1, Ordering::Relaxed);
+                        ctx.counters.count(408);
+                        let body = proto::error_body(408, "timed out mid-request");
+                        let _ = stream.write_all(&proto::response_bytes(408, &body, false));
+                    }
+                    return; // idle keep-alive timeout: quiet close
+                }
+                Err(_) => return,
+            },
+        }
+    }
+}
+
+/// Dispatch one parsed request.  Returns `(status, json_body)`;
+/// serialization and connection policy stay in the caller.
+fn route(req: &proto::Request, ctx: &Ctx) -> (u16, Json) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => (200, obj(vec![("ok", Json::Bool(true))])),
+        ("GET", "/info") => {
+            let ds = ctx.engine.ds;
+            let nt = ds.target_ntype;
+            (
+                200,
+                obj(vec![
+                    ("ntype", Json::from(nt)),
+                    ("nodes", Json::from(ds.graph.num_nodes[nt])),
+                    ("out_dim", Json::from(ctx.engine.out_dim())),
+                ]),
+            )
+        }
+        ("POST", "/predict") => predict(&req.body, ctx),
+        ("POST", "/shutdown") => {
+            ctx.shutdown.trigger();
+            (200, obj(vec![("draining", Json::Bool(true))]))
+        }
+        _ => (404, proto::error_body(404, "no such route")),
+    }
+}
+
+/// `POST /predict {"id": N[, "nt": T]}` → one embedding row through
+/// the engine pool.
+fn predict(body: &[u8], ctx: &Ctx) -> (u16, Json) {
+    let parsed = std::str::from_utf8(body)
+        .map_err(anyhow::Error::from)
+        .and_then(|t| Json::parse(t));
+    let json = match parsed {
+        Ok(j) => j,
+        Err(e) => return (400, proto::error_body(400, &format!("body is not valid JSON: {e}"))),
+    };
+    // Strict integers: `{"id": 2.7}` is a 400, not a truncation —
+    // the same `as_usize` contract config validation relies on.
+    let Ok(id) = json.usize_of("id") else {
+        return (400, proto::error_body(400, "body needs an integer 'id'"));
+    };
+    let nt = match json.get("nt") {
+        None => ctx.engine.ds.target_ntype,
+        Some(_) => match json.usize_of("nt") {
+            Ok(n) => n,
+            Err(_) => return (400, proto::error_body(400, "'nt' must be an integer")),
+        },
+    };
+    let num_nodes = &ctx.engine.ds.graph.num_nodes;
+    if nt >= num_nodes.len() {
+        return (400, proto::error_body(400, &format!("unknown node type {nt}")));
+    }
+    if id >= num_nodes[nt] {
+        return (
+            400,
+            proto::error_body(
+                400,
+                &format!("node id {id} out of range (type {nt} has {} nodes)", num_nodes[nt]),
+            ),
+        );
+    }
+
+    let (reply_tx, reply_rx) = channel();
+    if ctx.req_tx.send(ServeRequest::new(nt as u32, id as u32, reply_tx)).is_err() {
+        return (503, proto::error_body(503, "serving pool is shut down"));
+    }
+    match reply_rx.recv() {
+        Err(_) => (503, proto::error_body(503, "serving pool dropped the request")),
+        Ok(Err(e)) => (status_for(&e), proto::error_body(status_for(&e), &e.to_string())),
+        Ok(Ok(row)) => (
+            200,
+            obj(vec![
+                ("nt", Json::from(nt)),
+                ("id", Json::from(id)),
+                // f32 → f64 is exact, and the JSON writer emits
+                // shortest-round-trip floats: the row survives the
+                // wire bit-identically.
+                ("row", Json::Arr(row.iter().map(|&v| Json::from(v as f64)).collect())),
+            ]),
+        ),
+    }
+}

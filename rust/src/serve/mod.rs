@@ -31,12 +31,16 @@
 //! * [`offline::OfflineInference`] — streams the full node set through
 //!   the prefetch pipeline and writes sharded GSTF embedding files,
 //!   the GiGL-style precompute the cache warms from.
+//! * [`http`] — the HTTP/1.1 network front end (`gs serve`) putting a
+//!   socket boundary in front of the engine pool, plus the closed-loop
+//!   load generator (`gs load-bench`) that drives it.
 
 pub mod batcher;
 pub mod cache;
 pub mod engine;
 pub mod error;
 pub mod faults;
+pub mod http;
 pub mod offline;
 pub mod pool;
 pub mod refresh;
@@ -49,6 +53,10 @@ pub use cache::{
 pub use engine::{InferenceEngine, ServeScratch};
 pub use error::{lock_cache, lock_clean, lock_shard, ServeError};
 pub use faults::{FaultKind, FaultPlan, FaultSpec};
+pub use http::{
+    run_load_bench, HttpReport, HttpServer, HttpServerCfg, LoadBenchCfg, LoadBenchReport,
+    ShutdownHandle,
+};
 pub use offline::{read_shards, OfflineInference, OfflineReport};
 pub use pool::{closed_loop, closed_loop_with_faults, EnginePool, EnginePoolCfg};
 pub use refresh::{refresh_hot_rows, refresh_loop, EngineSource, RefreshCfg, RefreshStats};
@@ -240,6 +248,10 @@ impl LatencyHistogram {
     }
 
     /// Upper bound (µs) of the bucket containing the p-th percentile.
+    /// Total-order over edge cases: an empty histogram reports `0.0`,
+    /// and any `p >= 1.0` (or a concurrent-count race that walks past
+    /// the last populated bucket) reports the max-bucket upper bound —
+    /// never an out-of-range index or `inf` leaking into dashboards.
     pub fn percentile(&self, p: f64) -> f64 {
         let total = self.count();
         if total == 0 {
@@ -253,7 +265,10 @@ impl LatencyHistogram {
                 return (1u64 << i) as f64;
             }
         }
-        f64::INFINITY
+        // Unreachable when counts are stable (target <= total), but a
+        // racing writer can move `count()` between the two reads —
+        // answer with the top bucket's bound instead of infinity.
+        (1u64 << 63) as f64
     }
 
     pub fn p50_us(&self) -> f64 {
@@ -435,6 +450,36 @@ mod tests {
         assert!(p99 <= 256.0, "p99 bucket must exclude the single outlier, got {p99}");
         assert!(h.percentile(1.0) >= 100_000.0);
         assert_eq!(LatencyHistogram::new().p99_us(), 0.0);
+    }
+
+    #[test]
+    fn histogram_empty_percentiles_are_zero() {
+        // The HTTP load harness reports these on idle/error-only runs:
+        // an empty histogram must be defined at every p, including the
+        // edges.
+        let h = LatencyHistogram::new();
+        assert_eq!(h.percentile(0.0), 0.0);
+        assert_eq!(h.percentile(0.5), 0.0);
+        assert_eq!(h.percentile(1.0), 0.0);
+        assert_eq!(h.percentile(2.0), 0.0);
+    }
+
+    #[test]
+    fn histogram_p_at_or_above_one_is_max_bucket_bound() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_micros(3));
+        h.record(Duration::from_micros(700));
+        // p=1.0 and any overshoot clamp to the last recorded bucket's
+        // upper bound — finite, never an out-of-range bucket index.
+        let top = h.percentile(1.0);
+        assert!((512.0..=2048.0).contains(&top), "top={top}");
+        assert_eq!(h.percentile(1.5), top);
+        assert_eq!(h.percentile(100.0), top);
+        assert!(h.percentile(1.0).is_finite());
+        // Max-bucket durations stay finite too.
+        let big = LatencyHistogram::new();
+        big.record(Duration::from_micros(u64::MAX));
+        assert_eq!(big.percentile(1.0), (1u64 << 63) as f64);
     }
 
     #[test]

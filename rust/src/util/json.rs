@@ -50,8 +50,22 @@ impl Json {
         }
     }
 
+    /// Integral, non-negative numbers only: `2.7` and `-1` are `None`,
+    /// not silently truncated/wrapped by an `as` cast — config keys
+    /// like `serve.shards = 2.7` must fail validation, not coerce.
+    /// The `9e15` bound keeps the f64 exactly representable as an
+    /// integer (same bound the writer uses to emit integer syntax).
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|f| f as usize)
+        self.as_u64().map(|n| n as usize)
+    }
+
+    /// u64 twin of [`Json::as_usize`] — same integrality and sign
+    /// checks.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self.as_f64() {
+            Some(f) if f.fract() == 0.0 && f >= 0.0 && f < 9e15 => Some(f as u64),
+            _ => None,
+        }
     }
 
     pub fn as_bool(&self) -> Option<bool> {
@@ -363,6 +377,35 @@ mod tests {
         let shape: Vec<usize> =
             out0.get("shape").unwrap().as_arr().unwrap().iter().map(|v| v.as_usize().unwrap()).collect();
         assert_eq!(shape, vec![2, 2]);
+    }
+
+    #[test]
+    fn as_usize_rejects_non_integral_and_negative() {
+        assert_eq!(Json::Num(3.0).as_usize(), Some(3));
+        assert_eq!(Json::Num(0.0).as_usize(), Some(0));
+        // Fractional values must not silently truncate.
+        assert_eq!(Json::Num(2.7).as_usize(), None);
+        assert_eq!(Json::Num(0.5).as_usize(), None);
+        // Negatives must not wrap or clamp.
+        assert_eq!(Json::Num(-1.0).as_usize(), None);
+        assert_eq!(Json::Num(-0.5).as_usize(), None);
+        // Beyond exact-integer f64 range is rejected, not rounded.
+        assert_eq!(Json::Num(1e16).as_usize(), None);
+        // Non-numbers stay None.
+        assert_eq!(Json::Str("3".into()).as_usize(), None);
+        // usize_of surfaces the rejection as a hard error.
+        let j = Json::parse(r#"{"shards": 2.7, "ok": 4}"#).unwrap();
+        assert!(j.usize_of("shards").is_err());
+        assert_eq!(j.usize_of("ok").unwrap(), 4);
+    }
+
+    #[test]
+    fn as_u64_mirrors_usize_checks() {
+        assert_eq!(Json::Num(7.0).as_u64(), Some(7));
+        assert_eq!(Json::Num(2.7).as_u64(), None);
+        assert_eq!(Json::Num(-1.0).as_u64(), None);
+        assert_eq!(Json::Num(1e16).as_u64(), None);
+        assert_eq!(Json::Null.as_u64(), None);
     }
 
     #[test]

@@ -1,0 +1,369 @@
+//! HTTP front-end acceptance suite (docs/SERVING.md): a real
+//! `HttpServer` on an ephemeral loopback port, driven by raw
+//! `TcpStream` clients.
+//!
+//! * protocol edges: malformed request line → 400, unknown route →
+//!   404, Content-Length mismatch → 400, oversized body → 413 — all
+//!   answered, never a panic or a silent hangup;
+//! * keep-alive sequencing, including two pipelined requests in one
+//!   TCP segment;
+//! * queue-boundary overload → 429 with the pool still serving;
+//! * the determinism contract across the wire: repeated identical
+//!   requests yield byte-identical replies, and the JSON row carries
+//!   the engine's f32 bits exactly.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::time::Duration;
+
+use graphstorm::datagen::{self, mag};
+use graphstorm::dataloader::GsDataset;
+use graphstorm::partition::PartitionBook;
+use graphstorm::runtime::ArtifactSpec;
+use graphstorm::serve::http::proto::{parse_response, Parse, Response};
+use graphstorm::serve::{
+    EnginePoolCfg, HttpReport, HttpServer, HttpServerCfg, InferenceEngine, MicroBatcherCfg,
+    ShardedCache,
+};
+use graphstorm::util::json::Json;
+
+fn mag_ds(n: usize) -> GsDataset {
+    let raw = mag::generate(&mag::MagConfig { n_papers: n, ..Default::default() });
+    let book = PartitionBook::single(&raw.graph.num_nodes);
+    let mut ds = datagen::build_dataset(raw, book, 64, 3);
+    ds.ensure_text_features(64);
+    ds
+}
+
+fn spec() -> ArtifactSpec {
+    ArtifactSpec::synthetic_block(&[2304, 384, 64], &[1920, 320], 5, r#","batch":64"#)
+        .with_output("logits", &[64, 8])
+}
+
+fn http_cfg() -> HttpServerCfg {
+    HttpServerCfg {
+        listen: "127.0.0.1:0".to_string(),
+        workers: 8,
+        max_body: 4096,
+        read_timeout: Duration::from_millis(300),
+        write_timeout: Duration::from_secs(2),
+    }
+}
+
+fn pool_cfg() -> EnginePoolCfg {
+    EnginePoolCfg {
+        workers: 2,
+        batcher: MicroBatcherCfg { max_batch: 8, deadline: Duration::from_micros(200) },
+        ..Default::default()
+    }
+}
+
+/// Run `f` against a live server (surrogate engine over a small MAG
+/// graph), then drain it and return the traffic report alongside `f`'s
+/// result.
+fn serve_scope<T>(
+    pool: EnginePoolCfg,
+    http: HttpServerCfg,
+    f: impl FnOnce(SocketAddr, &InferenceEngine) -> T,
+) -> (HttpReport, T) {
+    let ds = mag_ds(300);
+    let engine = InferenceEngine::surrogate(&ds, &spec(), 7).unwrap();
+    let cache = ShardedCache::new(1024, 2);
+    cache.set_generation(engine.generation());
+    let server = HttpServer::bind(http).unwrap();
+    let addr = server.local_addr();
+    let handle = server.shutdown_handle();
+    std::thread::scope(|scope| {
+        let serving = scope.spawn(|| server.serve(&engine, &cache, pool));
+        let out = f(addr, &engine);
+        handle.trigger();
+        let report = serving.join().unwrap().unwrap();
+        (report, out)
+    })
+}
+
+fn connect(addr: SocketAddr) -> TcpStream {
+    let s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    s.set_nodelay(true).unwrap();
+    s
+}
+
+/// Read exactly one response off the stream (which may already hold
+/// buffered bytes in `buf` from pipelined reads).
+fn read_response(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Response {
+    let mut chunk = [0u8; 4096];
+    loop {
+        match parse_response(buf, 1 << 20) {
+            Parse::Ready(resp, used) => {
+                buf.drain(..used);
+                return resp;
+            }
+            Parse::Bad(bad) => panic!("unparseable response: {}", bad.message()),
+            Parse::Incomplete => {
+                let n = stream.read(&mut chunk).expect("read response");
+                assert!(n > 0, "connection closed mid-response (have {} bytes)", buf.len());
+                buf.extend_from_slice(&chunk[..n]);
+            }
+        }
+    }
+}
+
+fn call(stream: &mut TcpStream, raw: &[u8]) -> Response {
+    stream.write_all(raw).unwrap();
+    read_response(stream, &mut Vec::new())
+}
+
+fn predict_raw(nt: u32, id: u32) -> Vec<u8> {
+    let body = format!("{{\"nt\": {nt}, \"id\": {id}}}");
+    format!(
+        "POST /predict HTTP/1.1\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
+}
+
+fn body_json(resp: &Response) -> Json {
+    Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap()
+}
+
+#[test]
+fn malformed_request_line_gets_400_then_close() {
+    let (report, ()) = serve_scope(pool_cfg(), http_cfg(), |addr, _| {
+        let mut s = connect(addr);
+        let resp = call(&mut s, b"NOT_A_REQUEST\r\n\r\n");
+        assert_eq!(resp.status, 400);
+        assert!(!resp.keep_alive);
+        let err = body_json(&resp);
+        assert_eq!(err.usize_of("status").unwrap(), 400);
+        assert!(err.str_of("error").unwrap().contains("request line"));
+        // Framing is unrecoverable: the server closes after answering.
+        let mut rest = Vec::new();
+        assert_eq!(s.read_to_end(&mut rest).unwrap(), 0);
+    });
+    assert_eq!(report.responses_4xx, 1);
+    assert_eq!(report.responses_2xx, 0);
+}
+
+#[test]
+fn unknown_route_gets_404_and_connection_survives() {
+    let (report, ()) = serve_scope(pool_cfg(), http_cfg(), |addr, _| {
+        let mut s = connect(addr);
+        let resp = call(&mut s, b"GET /nope HTTP/1.1\r\n\r\n");
+        assert_eq!(resp.status, 404);
+        // 404 is a routing miss, not a framing failure: keep-alive
+        // holds and the same connection serves the next request.
+        assert!(resp.keep_alive);
+        let resp = call(&mut s, b"GET /healthz HTTP/1.1\r\n\r\n");
+        assert_eq!(resp.status, 200);
+        assert_eq!(body_json(&resp).get("ok").and_then(Json::as_bool), Some(true));
+    });
+    assert_eq!(report.connections, 1);
+    assert_eq!(report.requests, 2);
+}
+
+#[test]
+fn keep_alive_sequences_and_pipelines() {
+    let (report, ()) = serve_scope(pool_cfg(), http_cfg(), |addr, _| {
+        let mut s = connect(addr);
+        // Three sequential predicts on one connection.
+        for id in [1u32, 2, 3] {
+            let resp = call(&mut s, &predict_raw(0, id));
+            assert_eq!(resp.status, 200, "id {id}");
+            assert!(resp.keep_alive);
+            assert_eq!(body_json(&resp).usize_of("id").unwrap(), id as usize);
+        }
+        // Two requests in one TCP segment: both must be answered, in
+        // order, off the same buffered bytes.
+        let mut two = Vec::new();
+        two.extend_from_slice(b"GET /healthz HTTP/1.1\r\n\r\n");
+        two.extend_from_slice(b"GET /info HTTP/1.1\r\n\r\n");
+        s.write_all(&two).unwrap();
+        let mut buf = Vec::new();
+        let first = read_response(&mut s, &mut buf);
+        let second = read_response(&mut s, &mut buf);
+        assert_eq!(first.status, 200);
+        assert_eq!(second.status, 200);
+        let info = body_json(&second);
+        assert_eq!(info.usize_of("out_dim").unwrap(), 8);
+        assert!(info.usize_of("nodes").unwrap() > 0);
+    });
+    assert_eq!(report.connections, 1);
+    assert_eq!(report.requests, 5);
+    assert_eq!(report.responses_2xx, 5);
+}
+
+#[test]
+fn content_length_mismatch_gets_400() {
+    let (report, ()) = serve_scope(pool_cfg(), http_cfg(), |addr, _| {
+        let mut s = connect(addr);
+        // Promise 50 body bytes, deliver 5, hang up the write side:
+        // the server sees EOF with a partial message and must answer
+        // deterministically instead of hanging or dropping silently.
+        s.write_all(b"POST /predict HTTP/1.1\r\nContent-Length: 50\r\n\r\nhello").unwrap();
+        s.shutdown(Shutdown::Write).unwrap();
+        let resp = read_response(&mut s, &mut Vec::new());
+        assert_eq!(resp.status, 400);
+        assert!(body_json(&resp).str_of("error").unwrap().contains("incomplete"));
+    });
+    assert_eq!(report.responses_4xx, 1);
+}
+
+#[test]
+fn oversized_body_gets_413_before_the_body_is_read() {
+    let (report, ()) = serve_scope(pool_cfg(), http_cfg(), |addr, _| {
+        let mut s = connect(addr);
+        // Head only — the declared length alone must trip the limit.
+        s.write_all(b"POST /predict HTTP/1.1\r\nContent-Length: 999999\r\n\r\n").unwrap();
+        let resp = read_response(&mut s, &mut Vec::new());
+        assert_eq!(resp.status, 413);
+        assert!(!resp.keep_alive);
+        assert!(body_json(&resp).str_of("error").unwrap().contains("exceeds"));
+    });
+    assert_eq!(report.responses_4xx, 1);
+}
+
+#[test]
+fn bad_predict_bodies_get_400_not_truncation() {
+    let (_, ()) = serve_scope(pool_cfg(), http_cfg(), |addr, _| {
+        let mut s = connect(addr);
+        for (body, needle) in [
+            ("{\"id\": 2.7}", "integer 'id'"),    // strict as_usize: no silent floor
+            ("{\"id\": -1}", "integer 'id'"),
+            ("not json", "valid JSON"),
+            ("{\"id\": 999999999}", "out of range"),
+            ("{\"id\": 1, \"nt\": 99}", "unknown node type"),
+        ] {
+            let raw = format!(
+                "POST /predict HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            );
+            let resp = call(&mut s, raw.as_bytes());
+            assert_eq!(resp.status, 400, "body {body}");
+            let err = body_json(&resp);
+            assert!(
+                err.str_of("error").unwrap().contains(needle),
+                "body {body}: {}",
+                err.str_of("error").unwrap()
+            );
+        }
+    });
+}
+
+#[test]
+fn queue_pressure_sheds_with_429_and_keeps_serving() {
+    // queue_depth 1 + a 100ms batch deadline: the first miss sits in
+    // the forming batch holding the only queue slot, so concurrent
+    // distinct requests landing inside the window are shed with 429 at
+    // the queue boundary (never a hang, never a 5xx).
+    let pool = EnginePoolCfg {
+        workers: 1,
+        queue_depth: 1,
+        batcher: MicroBatcherCfg { max_batch: 32, deadline: Duration::from_millis(100) },
+        ..Default::default()
+    };
+    let (report, (ok, shed)) = serve_scope(pool, http_cfg(), |addr, _| {
+        let results = std::sync::Mutex::new(Vec::new());
+        std::thread::scope(|scope| {
+            for id in 0..6u32 {
+                let results = &results;
+                scope.spawn(move || {
+                    let mut s = connect(addr);
+                    let resp = call(&mut s, &predict_raw(0, 40 + id));
+                    results.lock().unwrap().push(resp.status);
+                });
+            }
+        });
+        let statuses = results.into_inner().unwrap();
+        assert_eq!(statuses.len(), 6);
+        let ok = statuses.iter().filter(|&&s| s == 200).count();
+        let shed = statuses.iter().filter(|&&s| s == 429).count();
+        assert_eq!(ok + shed, 6, "only 200/429 expected, got {statuses:?}");
+        assert!(ok >= 1, "at least the slot-holder is served: {statuses:?}");
+        assert!(shed >= 1, "concurrent arrivals inside the 100ms batch window must shed: {statuses:?}");
+        (ok, shed)
+    });
+    assert_eq!(report.responses_2xx, ok as u64);
+    assert_eq!(report.responses_429, shed as u64);
+    assert_eq!(report.responses_5xx + report.responses_503, 0);
+}
+
+#[test]
+fn socket_replies_are_bit_identical_to_the_engine() {
+    let (_, ()) = serve_scope(pool_cfg(), http_cfg(), |addr, engine| {
+        // In-process ground truth, computed on a private scratch.
+        let mut sc = engine.make_scratch();
+        let expected = engine.predict_one(&mut sc, 0, 17).unwrap();
+
+        let mut s = connect(addr);
+        let raw = predict_raw(0, 17);
+        // Repeated identical request ⇒ byte-identical reply (BTreeMap
+        // key order + shortest-round-trip floats + Content-Length
+        // framing pin every byte).
+        s.write_all(&raw).unwrap();
+        let mut buf = Vec::new();
+        let mut chunk = [0u8; 4096];
+        let first_bytes = loop {
+            match parse_response(&buf, 1 << 20) {
+                Parse::Ready(_, used) => break buf.drain(..used).collect::<Vec<u8>>(),
+                Parse::Incomplete => {
+                    let n = s.read(&mut chunk).unwrap();
+                    assert!(n > 0);
+                    buf.extend_from_slice(&chunk[..n]);
+                }
+                Parse::Bad(b) => panic!("{}", b.message()),
+            }
+        };
+        s.write_all(&raw).unwrap();
+        let second_bytes = loop {
+            match parse_response(&buf, 1 << 20) {
+                Parse::Ready(_, used) => break buf.drain(..used).collect::<Vec<u8>>(),
+                Parse::Incomplete => {
+                    let n = s.read(&mut chunk).unwrap();
+                    assert!(n > 0);
+                    buf.extend_from_slice(&chunk[..n]);
+                }
+                Parse::Bad(b) => panic!("{}", b.message()),
+            }
+        };
+        assert_eq!(first_bytes, second_bytes, "replies must be byte-identical");
+
+        // And the payload carries the engine's f32 bits exactly:
+        // f32 → f64 → shortest-round-trip text → f64 → f32 is lossless.
+        let Parse::Ready(resp, _) = parse_response(&first_bytes, 1 << 20) else {
+            panic!("reparse")
+        };
+        assert_eq!(resp.status, 200);
+        let json = body_json(&resp);
+        let row: Vec<f32> = json
+            .get("row")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect();
+        assert_eq!(row.len(), expected.len());
+        for (i, (a, b)) in row.iter().zip(&expected).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "row[{i}]: {a} vs {b}");
+        }
+    });
+}
+
+#[test]
+fn shutdown_drains_in_flight_requests() {
+    let (report, ()) = serve_scope(pool_cfg(), http_cfg(), |addr, _| {
+        let mut s = connect(addr);
+        let resp = call(&mut s, &predict_raw(0, 5));
+        assert_eq!(resp.status, 200);
+        // POST /shutdown answers 200 and withdraws keep-alive: the
+        // drain is visible on the very reply that acknowledges it.
+        let resp = call(&mut s, b"POST /shutdown HTTP/1.1\r\nContent-Length: 0\r\n\r\n");
+        assert_eq!(resp.status, 200);
+        assert_eq!(body_json(&resp).get("draining").and_then(Json::as_bool), Some(true));
+        assert!(!resp.keep_alive);
+    });
+    // The wake-up connection from trigger() is never counted: the
+    // acceptor checks the stop flag before accounting.
+    assert_eq!(report.connections, 1);
+    assert_eq!(report.responses_2xx, 2);
+}

@@ -85,6 +85,58 @@ if ! printf '%s\n' "$obs_out" | grep -q "serve.uncached.requests"; then
     exit 1
 fi
 
+# HTTP smoke gate: a real `gs serve` on a loopback socket must answer
+# a closed-loop `gs load-bench` replay with zero 5xx / transport
+# errors, confirm byte-identical repeated replies, and drain cleanly
+# on POST /shutdown (docs/SERVING.md).
+echo
+echo "test.sh: HTTP smoke gate (gs serve --listen + gs load-bench --shutdown)"
+http_tmp="$(mktemp -d)"
+trap 'rm -rf "$trace_tmp" "$http_tmp"' EXIT
+./target/release/gs serve \
+    --dataset mag --size 400 --listen 127.0.0.1:0 --http-workers 4 \
+    --max-batch 8 --queue-depth 256 \
+    > "$http_tmp/serve.log" 2>&1 &
+serve_pid=$!
+addr=""
+for _ in $(seq 1 100); do
+    addr=$(sed -n 's/.*listening on \([0-9.:]*\) .*/\1/p' "$http_tmp/serve.log" | head -n 1)
+    [ -n "$addr" ] && break
+    if ! kill -0 "$serve_pid" 2>/dev/null; then
+        echo "test.sh: HTTP smoke gate FAILED — gs serve exited before binding" >&2
+        cat "$http_tmp/serve.log" >&2
+        exit 1
+    fi
+    sleep 0.1
+done
+if [ -z "$addr" ]; then
+    echo "test.sh: HTTP smoke gate FAILED — no 'listening on' line from gs serve" >&2
+    cat "$http_tmp/serve.log" >&2
+    kill "$serve_pid" 2>/dev/null || true
+    exit 1
+fi
+load_out=$(./target/release/gs load-bench \
+    --addr "$addr" --connections 4 --requests 200 \
+    --bench-out "$http_tmp/BENCH_http.json" --shutdown)
+printf '%s\n' "$load_out" | tail -n 3
+if ! wait "$serve_pid"; then
+    echo "test.sh: HTTP smoke gate FAILED — gs serve exited non-zero after drain" >&2
+    cat "$http_tmp/serve.log" >&2
+    exit 1
+fi
+if ! printf '%s\n' "$load_out" | grep -q "| 5xx 0 | transport 0 |"; then
+    echo "test.sh: HTTP smoke gate FAILED — 5xx or transport errors in load-bench output" >&2
+    exit 1
+fi
+if ! printf '%s\n' "$load_out" | grep -q "replies bit-identical: true"; then
+    echo "test.sh: HTTP smoke gate FAILED — socket replies not byte-identical" >&2
+    exit 1
+fi
+if ! grep -q '"http"' "$http_tmp/BENCH_http.json"; then
+    echo "test.sh: HTTP smoke gate FAILED — bench-out missing the http key" >&2
+    exit 1
+fi
+
 if [ -e "$ROOT/artifacts" ]; then
     echo "test.sh: OK (artifacts/ present — gated tests executed)"
 else
